@@ -1,0 +1,55 @@
+//! The headline comparison: the *same* workload served in CC and No-CC
+//! mode, real execution, identical seeds — the paper's central
+//! experiment in miniature.
+//!
+//! ```bash
+//! cargo run --release --example cc_vs_nocc [-- duration_s]
+//! ```
+
+use std::path::PathBuf;
+
+use sincere::config::RunConfig;
+use sincere::coordinator::serve;
+use sincere::metrics::report;
+use sincere::runtime::{Manifest, Registry};
+
+fn main() -> anyhow::Result<()> {
+    let duration_s: f64 = std::env::args().nth(1)
+        .map(|s| s.parse().expect("duration seconds"))
+        .unwrap_or(45.0);
+
+    let manifest = Manifest::load(&PathBuf::from("artifacts"))?;
+    eprintln!("[cc-vs-nocc] compiling executables ...");
+    let registry = Registry::load(&manifest, &[], &[])?;
+
+    let mut cells = Vec::new();
+    for mode in ["no-cc", "cc"] {
+        let mut cfg = RunConfig {
+            duration_s,
+            drain_s: 8.0,
+            mean_rps: 9.0,
+            sla_s: 12.0, // the paper's most discriminating SLA (40 s x 0.3)
+            pattern: "gamma".into(),
+            strategy: "select-batch+timer".into(),
+            results_dir: Some(PathBuf::from("results/cc_vs_nocc")),
+            ..RunConfig::default()
+        };
+        cfg.set("mode", mode)?;
+        cfg.label = cfg.cell_label();
+        eprintln!("[cc-vs-nocc] running {mode} ...");
+        let (summary, _) = serve(&cfg, &registry)?;
+        println!("{}", summary.brief());
+        cells.push(summary);
+    }
+
+    println!("\n{}", report::cells_table(&cells));
+    let h = report::headline_ratios(&cells);
+    println!("{}", report::headline_table(&h));
+
+    // the paper's direction must hold: CC slower, lower util
+    anyhow::ensure!(h.latency_delta_frac < 0.0,
+                    "expected No-CC latency below CC");
+    anyhow::ensure!(h.util_gain_frac > 0.0,
+                    "expected No-CC GPU utilization above CC");
+    Ok(())
+}

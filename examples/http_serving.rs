@@ -1,0 +1,111 @@
+//! Network serving demo: the paper's Flask-API architecture end to end.
+//!
+//! Starts the HTTP front-end on a local port, fires a gamma-distributed
+//! open-loop load from client threads (the paper's request-generation
+//! script), and prints per-request and aggregate results.
+//!
+//! ```bash
+//! cargo run --release --example http_serving [-- duration_s]
+//! ```
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
+
+use sincere::config::RunConfig;
+use sincere::coordinator::http::{http_call, run_http};
+use sincere::runtime::{Manifest, Registry};
+use sincere::traffic::rng::Pcg64;
+use sincere::traffic::pattern_by_name;
+use sincere::util::json::Json;
+use sincere::workload::promptgen::PromptGen;
+
+fn main() -> anyhow::Result<()> {
+    let duration_s: f64 = std::env::args().nth(1)
+        .map(|s| s.parse().expect("duration seconds")).unwrap_or(20.0);
+
+    let manifest = Manifest::load(&std::path::PathBuf::from("artifacts"))?;
+    eprintln!("[http] compiling executables ...");
+    let registry = Registry::load(
+        &manifest,
+        &["llama-sim".to_string(), "gemma-sim".to_string()],
+        &[1, 2, 4, 8])?;
+
+    let mut cfg = RunConfig {
+        sla_s: 18.0,
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    };
+    cfg.set("mode", "cc")?;
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+
+    // ---- client side: open-loop gamma load over real sockets ----------
+    let client_shutdown = shutdown.clone();
+    let clients = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+        eprintln!("[http] serving on {addr}");
+        let models = vec!["llama-sim".to_string(), "gemma-sim".to_string()];
+        let mut rng = Pcg64::new(7);
+        let pattern = pattern_by_name("gamma").unwrap();
+        let schedule = pattern.generate(duration_s, 4.0, &models, &mut rng);
+        let mut prompts = PromptGen::new(11, 24);
+        let t0 = std::time::Instant::now();
+        let lat = Arc::new(Mutex::new(Vec::<f64>::new()));
+        let mut workers = Vec::new();
+        let (mut ok, mut expired) = (0u64, 0u64);
+        for a in &schedule {
+            let wait = Duration::from_secs_f64(a.at_s);
+            if wait > t0.elapsed() {
+                std::thread::sleep(wait - t0.elapsed());
+            }
+            let body = Json::obj(vec![
+                ("model", Json::str(a.model.clone())),
+                ("prompt", Json::str(prompts.next_prompt(&a.model))),
+            ]).to_string();
+            let lat = lat.clone();
+            workers.push(std::thread::spawn(move || {
+                match http_call(&addr, "POST", "/infer", Some(&body)) {
+                    Ok((200, resp)) => {
+                        let j = Json::parse(&resp).unwrap();
+                        lat.lock().unwrap().push(
+                            j.req("latency_s").unwrap().as_f64().unwrap());
+                        (1u64, 0u64)
+                    }
+                    Ok((408, _)) => (0, 1),
+                    other => {
+                        eprintln!("[http] unexpected: {other:?}");
+                        (0, 0)
+                    }
+                }
+            }));
+        }
+        for w in workers {
+            let (o, e) = w.join().unwrap();
+            ok += o;
+            expired += e;
+        }
+        let lat = lat.lock().unwrap();
+        println!("\n=== http load summary ===");
+        println!("sent {} | served {} | expired {}", schedule.len(), ok,
+                 expired);
+        println!("latency mean {:.2}s p-max {:.2}s",
+                 sincere::util::mean(&lat),
+                 lat.iter().cloned().fold(0.0, f64::max));
+        let (code, stats) = http_call(&addr, "GET", "/stats", None)
+            .unwrap();
+        println!("server stats ({code}): {stats}");
+        client_shutdown.store(true, Ordering::Relaxed);
+    });
+
+    let stats = run_http(&cfg, &registry, "127.0.0.1:0", shutdown,
+                         move |addr| {
+                             addr_tx.send(addr).unwrap();
+                         })?;
+    clients.join().unwrap();
+    println!("scheduler: completed={} expired={}",
+             stats.completed.load(Ordering::Relaxed),
+             stats.expired.load(Ordering::Relaxed));
+    Ok(())
+}

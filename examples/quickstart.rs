@@ -1,0 +1,65 @@
+//! Quickstart: load one model, run one batch, print the result.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the minimal API surface: manifest -> registry ->
+//! (simulated, confidential) GPU -> swap manager -> execute.
+
+use std::path::PathBuf;
+
+use sincere::coordinator::swap::SwapManager;
+use sincere::gpu::device::{GpuConfig, SimGpu};
+use sincere::gpu::CcMode;
+use sincere::runtime::{Manifest, Registry};
+use sincere::workload::tokenizer::tokenize;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&artifacts)?;
+
+    // Compile just llama-sim at batch sizes 1 and 4 (fast startup).
+    let registry = Registry::load(&manifest, &["llama-sim".to_string()],
+                                  &[1, 4])?;
+    println!("compiled llama-sim in {:.2}s",
+             registry.total_compile_time.as_secs_f64());
+
+    // Bring up a confidential GPU: attestation + encrypted DMA.
+    let mut gpu = SimGpu::new(GpuConfig {
+        mode: CcMode::On,
+        ..GpuConfig::default()
+    })?;
+    let mut swaps = SwapManager::new();
+
+    // Load the model through the CC bounce-buffer path.
+    let rep = swaps.ensure_resident(&mut gpu, &registry, "llama-sim")?;
+    println!("model load: {:.3}s ({:.3}s of AES-CTR+HMAC)",
+             rep.load_s, rep.crypto_s);
+
+    // Tokenize three prompts and run them as one batch.
+    let spec = &registry.entry("llama-sim")?.spec;
+    let prompts = [
+        "Summarize the following invoice and flag anomalies",
+        "Draft a reply to this support ticket about latency",
+        "Explain the key risk factors in this filing excerpt",
+    ];
+    let rows: Vec<Vec<i32>> = prompts.iter()
+        .map(|p| tokenize(p, spec.prompt_len, spec.vocab as u32))
+        .collect();
+
+    let exec = registry.execute("llama-sim", &rows)?;
+    gpu.record_compute(exec.elapsed);
+    println!("executed batch of {} (artifact b{}) in {:.3}s",
+             rows.len(), exec.batch, exec.elapsed.as_secs_f64());
+    for (i, toks) in exec.tokens.iter().enumerate() {
+        println!("  request {i}: generated {} tokens, first 8: {:?}",
+                 toks.len(), &toks[..8.min(toks.len())]);
+    }
+
+    println!("GPU util so far: {:.1}%  (mem in use: {:.2} MB)",
+             gpu.utilization() * 100.0,
+             gpu.mem_in_use() as f64 / 1e6);
+    swaps.evict(&mut gpu);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (DESIGN.md deliverable): serve the full 3-model
+//! fleet against gamma traffic in CC mode with real PJRT execution,
+//! exactly the paper's setting — one VM, one confidential GPU, model
+//! swapping under relaxed-inference SLAs.
+//!
+//! ```bash
+//! cargo run --release --example serve_multimodel [-- duration_s]
+//! ```
+//!
+//! Writes request/batch/monitor CSVs + summary JSON to
+//! `results/e2e/` and prints the summary.  Recorded in EXPERIMENTS.md.
+
+use std::path::PathBuf;
+
+use sincere::config::RunConfig;
+use sincere::coordinator::serve;
+use sincere::runtime::{Manifest, Registry};
+use sincere::sim::CostModel;
+
+fn main() -> anyhow::Result<()> {
+    let duration_s: f64 = std::env::args().nth(1)
+        .map(|s| s.parse().expect("duration seconds"))
+        .unwrap_or(60.0);
+
+    let mut cfg = RunConfig {
+        duration_s,
+        drain_s: 18.0,
+        mean_rps: 9.0,
+        sla_s: 18.0,
+        pattern: "gamma".into(),
+        strategy: "select-batch+timer".into(),
+        results_dir: Some(PathBuf::from("results/e2e")),
+        label: "e2e_multimodel_cc".into(),
+        ..RunConfig::default()
+    };
+    cfg.set("mode", "cc")?;
+
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    eprintln!("[e2e] compiling all (family, batch) executables ...");
+    let mut registry = Registry::load(&manifest, &[], &[])?;
+    eprintln!("[e2e] compiled in {:.1}s",
+              registry.total_compile_time.as_secs_f64());
+
+    // Profile OBS quickly (1 rep) so strategies see real values; reuse
+    // a cached cost model when present.
+    let cm_path = PathBuf::from("results/cost_model.json");
+    let cm = if cm_path.exists() {
+        CostModel::load(&cm_path)?
+    } else {
+        eprintln!("[e2e] profiling OBS (one-time) ...");
+        let cm = CostModel::measure(&registry, &cfg.gpu, 1)?;
+        cm.save(&cm_path)?;
+        cm
+    };
+    for name in registry.names() {
+        if let Ok(mc) = cm.costs(&name) {
+            registry.set_obs(&name, mc.obs)?;
+        }
+    }
+
+    eprintln!("[e2e] serving {} for {:.0}s (CC mode, gamma 9 rps, \
+               SLA 18s) ...", registry.names().join(", "), duration_s);
+    let (summary, recorder) = serve(&cfg, &registry)?;
+
+    println!("\n=== end-to-end summary ===");
+    println!("{}", summary.brief());
+    println!("\nper-model load samples (Fig 3 shape):");
+    // batches CSV has per-batch load times; aggregate here
+    let mut agg: std::collections::BTreeMap<String, (f64, usize)> =
+        Default::default();
+    for b in &recorder.batches {
+        if b.swapped {
+            let e = agg.entry(b.model.clone()).or_default();
+            e.0 += b.load_s;
+            e.1 += 1;
+        }
+    }
+    for (model, (total, n)) in agg {
+        println!("  {model}: mean load {:.3}s over {n} swaps",
+                 total / n as f64);
+    }
+    println!("\nCSVs + summary JSON in results/e2e/");
+    anyhow::ensure!(summary.completed > 0, "nothing completed");
+    Ok(())
+}

@@ -1,0 +1,42 @@
+//! Fig 2 reproduction: the three input traffic distributions at the
+//! same mean rate, rendered as ASCII rate histograms over time.
+//!
+//! ```bash
+//! cargo run --release --example traffic_patterns
+//! ```
+
+use sincere::traffic::rng::Pcg64;
+use sincere::traffic::{pattern_by_name, PATTERN_NAMES};
+
+fn main() -> anyhow::Result<()> {
+    let duration = 120.0;
+    let mean_rps = 4.0;
+    let models = vec!["llama-sim".to_string(), "gemma-sim".to_string(),
+                      "granite-sim".to_string()];
+    let bins = 30usize;
+    let bin_w = duration / bins as f64;
+
+    println!("traffic patterns at mean {mean_rps} req/s over \
+              {duration:.0}s (Fig 2)\n");
+    for name in PATTERN_NAMES {
+        let mut rng = Pcg64::new(2024);
+        let pattern = pattern_by_name(name)?;
+        let arrivals = pattern.generate(duration, mean_rps, &models,
+                                        &mut rng);
+        let mut counts = vec![0usize; bins];
+        for a in &arrivals {
+            counts[((a.at_s / bin_w) as usize).min(bins - 1)] += 1;
+        }
+        let realized = arrivals.len() as f64 / duration;
+        println!("-- {name}: {} arrivals, realized mean {realized:.2} rps",
+                 arrivals.len());
+        let peak = *counts.iter().max().unwrap() as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            let bar = "#".repeat((c as f64 / peak * 50.0).round() as usize);
+            println!("  {:>5.0}s |{bar:<50}| {:.1} rps",
+                     i as f64 * bin_w, c as f64 / bin_w);
+        }
+        println!();
+    }
+    Ok(())
+}

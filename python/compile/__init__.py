@@ -1,0 +1,7 @@
+"""Build-time compile path for sincere-rs (Layer 1 + Layer 2).
+
+Python in this package runs ONLY at build time (``make artifacts``): it
+authors the Pallas kernels and the JAX transformer, AOT-lowers them to HLO
+text, and emits deterministic weights.  Nothing here is imported at serve
+time — the Rust coordinator is self-contained once ``artifacts/`` exists.
+"""

@@ -1,0 +1,144 @@
+"""AOT lowering: JAX/Pallas -> HLO text + weights + manifest.
+
+``python -m compile.aot --out ../artifacts`` emits, per model family:
+
+  <family>_b<B>.hlo.txt   one HLO module per batch size (prefill+decode)
+  <family>.weights.bin    flat f32 little-endian weight blob
+and a single ``manifest.json`` describing parameter order/shapes/offsets,
+batch sizes, token geometry and Table II provenance — everything the Rust
+runtime needs to compile and feed the executables.
+
+HLO *text* (not serialized HloModuleProto) is the interchange format: the
+``xla`` crate links xla_extension 0.5.1 which rejects jax>=0.5 protos
+(64-bit instruction ids); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .families import FAMILIES, Family, by_name
+from .model import make_generate_fn
+
+DEFAULT_BATCH_SIZES = (1, 2, 4, 8, 16, 32)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_family(fam: Family, batch: int) -> str:
+    """Lower generate() for one (family, batch size) to HLO text."""
+    prompt_spec = jax.ShapeDtypeStruct((batch, fam.prompt_len), jnp.int32)
+    param_specs = [jax.ShapeDtypeStruct(shape, jnp.float32)
+                   for _, shape in fam.param_shapes()]
+    lowered = jax.jit(make_generate_fn(fam)).lower(prompt_spec, *param_specs)
+    return to_hlo_text(lowered)
+
+
+def write_weights(fam: Family, out_dir: str) -> dict:
+    """Write the flat weight blob; return the manifest params entry."""
+    params = fam.init_params()
+    entries, blobs, offset = [], [], 0
+    for name, shape in fam.param_shapes():
+        arr = params[name]
+        assert arr.shape == shape and arr.dtype == np.float32
+        raw = arr.tobytes()  # C-order little-endian f32
+        entries.append({
+            "name": name,
+            "shape": list(shape),
+            "offset_bytes": offset,
+            "size_bytes": len(raw),
+        })
+        blobs.append(raw)
+        offset += len(raw)
+    blob = b"".join(blobs)
+    path = os.path.join(out_dir, f"{fam.name}.weights.bin")
+    with open(path, "wb") as f:
+        f.write(blob)
+    return {
+        "file": os.path.basename(path),
+        "total_bytes": len(blob),
+        "sha256": hashlib.sha256(blob).hexdigest(),
+        "params": entries,
+    }
+
+
+def build(out_dir: str, families: list[Family],
+          batch_sizes: tuple[int, ...]) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "format_version": 1,
+        "batch_sizes": list(batch_sizes),
+        "families": [],
+    }
+    for fam in families:
+        print(f"[aot] {fam.name}: weights "
+              f"({fam.weight_bytes() / 1e6:.2f} MB) ...", flush=True)
+        weights = write_weights(fam, out_dir)
+        artifacts = {}
+        for b in batch_sizes:
+            hlo = lower_family(fam, b)
+            fname = f"{fam.name}_b{b}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            artifacts[str(b)] = fname
+            print(f"[aot]   b={b:<3d} -> {fname} "
+                  f"({len(hlo) / 1e3:.0f} kB hlo)", flush=True)
+        manifest["families"].append({
+            "name": fam.name,
+            "hf_name": fam.hf_name,
+            "paper_gb": fam.paper_gb,
+            "d_model": fam.d_model,
+            "n_layers": fam.n_layers,
+            "n_heads": fam.n_heads,
+            "d_ff": fam.d_ff,
+            "vocab": fam.vocab,
+            "act": fam.act,
+            "prompt_len": fam.prompt_len,
+            "decode_len": fam.decode_len,
+            "cache_len": fam.cache_len,
+            "kv_bytes_per_seq": fam.kv_bytes_per_seq(),
+            "param_count": fam.param_count(),
+            "weights": weights,
+            "artifacts": artifacts,
+        })
+    return manifest
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for artifacts")
+    ap.add_argument("--families", default="all",
+                    help="comma-separated family names, or 'all'")
+    ap.add_argument("--batch-sizes",
+                    default=",".join(str(b) for b in DEFAULT_BATCH_SIZES))
+    args = ap.parse_args(argv)
+
+    fams = list(FAMILIES) if args.families == "all" else \
+        [by_name(n) for n in args.families.split(",")]
+    batch_sizes = tuple(int(b) for b in args.batch_sizes.split(","))
+
+    manifest = build(args.out, fams, batch_sizes)
+    mpath = os.path.join(args.out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {mpath}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,120 @@
+"""Model families — the Table II analogues.
+
+The paper serves Llama-3.1-8B (16.07 GB), gemma-7b (17.07 GB) and
+granite-7b-base (26.98 GB).  We build three architecturally distinct tiny
+decoder-only transformers whose *relative* weight sizes preserve the paper's
+ordering (granite >> gemma > llama, with gemma only slightly above llama) —
+the scheduler only ever observes (bytes to load, load time, per-batch
+inference time, OBS), so preserving the heterogeneity preserves the
+scheduling problem.  ``paper_gb`` is carried into the artifact manifest so
+the Rust DMA layer can optionally scale transfer *times* to paper-sized
+models.
+"""
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Family:
+    """Architecture + provenance of one servable model family."""
+
+    name: str            # our identifier, e.g. "llama-sim"
+    hf_name: str         # the paper's Hugging Face model it stands in for
+    paper_gb: float      # the paper's on-disk size (Table II)
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    vocab: int
+    act: str             # MLP gate activation: "silu" | "gelu"
+    prompt_len: int = 16
+    decode_len: int = 50
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def cache_len(self) -> int:
+        """KV-cache length: prompt plus every generated token."""
+        return self.prompt_len + self.decode_len
+
+    def param_shapes(self) -> list[tuple[str, tuple[int, ...]]]:
+        """Ordered (name, shape) list — the HLO parameter order after the
+        prompt, and the layout of the flat weights .bin file."""
+        d, l, f, v = self.d_model, self.n_layers, self.d_ff, self.vocab
+        return [
+            ("embed", (v, d)),
+            ("attn_norm", (l, d)),
+            ("wqkv", (l, d, 3 * d)),
+            ("wo", (l, d, d)),
+            ("mlp_norm", (l, d)),
+            ("w_gate", (l, d, f)),
+            ("w_up", (l, d, f)),
+            ("w_down", (l, f, d)),
+            ("final_norm", (d,)),
+            ("unembed", (d, v)),
+        ]
+
+    def param_count(self) -> int:
+        return sum(int(np.prod(s)) for _, s in self.param_shapes())
+
+    def weight_bytes(self) -> int:
+        return 4 * self.param_count()
+
+    def kv_bytes_per_seq(self) -> int:
+        """f32 KV-cache bytes for ONE sequence (both K and V, all layers).
+
+        Drives the simulated-HBM memory model on the Rust side: device
+        memory for a batch B is weight_bytes + B * kv_bytes_per_seq +
+        activation headroom.
+        """
+        return 2 * 4 * self.n_layers * self.n_heads * self.cache_len \
+            * self.head_dim
+
+    def init_params(self) -> dict[str, np.ndarray]:
+        """Deterministic weights: normals scaled 0.02, norms all-ones."""
+        rng = np.random.RandomState(self.seed ^ _stable_hash(self.name))
+        params = {}
+        for name, shape in self.param_shapes():
+            if name.endswith("norm"):
+                params[name] = np.ones(shape, np.float32)
+            else:
+                params[name] = (rng.randn(*shape) * 0.02).astype(np.float32)
+        return params
+
+
+def _stable_hash(s: str) -> int:
+    h = 2166136261
+    for c in s.encode():
+        h = ((h ^ c) * 16777619) & 0x7FFFFFFF
+    return h
+
+
+#: The serving fleet, mirroring Table II.  Weight bytes (f32):
+#:   llama-sim   ~3.6 MB   <-  Llama-3.1-8B  16.07 GB
+#:   gemma-sim   ~5.1 MB   <-  gemma-7b      17.07 GB
+#:   granite-sim ~11.9 MB  <-  granite-7b    26.98 GB
+FAMILIES: tuple[Family, ...] = (
+    Family(name="llama-sim", hf_name="Llama-3.1-8B", paper_gb=16.07,
+           d_model=128, n_layers=4, n_heads=4, d_ff=352, vocab=512,
+           act="silu"),
+    Family(name="gemma-sim", hf_name="gemma-7b", paper_gb=17.07,
+           d_model=128, n_layers=4, n_heads=4, d_ff=512, vocab=768,
+           act="gelu"),
+    Family(name="granite-sim", hf_name="granite-7b-base", paper_gb=26.98,
+           d_model=192, n_layers=6, n_heads=6, d_ff=512, vocab=768,
+           act="silu"),
+)
+
+
+def by_name(name: str) -> Family:
+    for f in FAMILIES:
+        if f.name == name:
+            return f
+    raise KeyError(f"unknown family {name!r}; have "
+                   f"{[f.name for f in FAMILIES]}")

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for sincere-rs.
+
+Every kernel is authored as a TPU-shaped Pallas kernel (BlockSpec tiling for
+VMEM, MXU-sized blocks) but lowered with ``interpret=True`` so the resulting
+HLO runs on the CPU PJRT client the Rust coordinator embeds.  Real-TPU
+performance is estimated analytically from the BlockSpecs (DESIGN.md §Perf).
+"""
+
+from .fused_linear import fused_linear, matmul_block_shapes
+from .rmsnorm import rmsnorm
+from .attention import attention_decode
+
+__all__ = [
+    "fused_linear",
+    "matmul_block_shapes",
+    "rmsnorm",
+    "attention_decode",
+]

@@ -1,0 +1,66 @@
+"""Single-step decode attention as a Pallas kernel.
+
+Computes, for the current decode position ``pos``:
+
+    out[b,h,:] = softmax(q[b,h,:] . K[b,h,t,:] / sqrt(dh), t <= pos) @ V
+
+The grid iterates over heads; each grid cell holds the full (B, T, dh)
+slice of one head's KV cache in VMEM plus the (B, dh) query block — the
+TPU analogue of a flash-decoding split-KV tile (for our cache sizes one
+tile covers the whole T axis; the BlockSpec generalizes to tiling T when
+T*dh exceeds VMEM).  Masking uses an iota over T against the ``pos``
+scalar, carried in as a (1,) array block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, *, t_total):
+    # blocks: q [B, 1, dh], k/v [B, 1, T, dh], pos (1,)
+    q = q_ref[:, 0, :].astype(jnp.float32)            # [B, dh]
+    k = k_ref[:, 0, :, :].astype(jnp.float32)         # [B, T, dh]
+    v = v_ref[:, 0, :, :].astype(jnp.float32)         # [B, T, dh]
+    pos = pos_ref[0]
+
+    scale = 1.0 / jnp.sqrt(jnp.float32(q.shape[-1]))
+    # [B, T] scores via batched dot; lax.dot_general over the dh axis.
+    scores = jax.lax.dot_general(
+        q, k, (((1,), (2,)), ((0,), (0,)))) * scale
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (1, t_total), 1)
+    scores = jnp.where(t_idx <= pos, scores, jnp.float32(-1e30))
+
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jax.lax.dot_general(p, v, (((1,), (1,)), ((0,), (0,))))
+    o_ref[:, 0, :] = out
+
+
+@jax.jit
+def attention_decode(q, k, v, pos):
+    """Masked decode attention against a KV cache.
+
+    q:   [B, H, dh]    current-step queries
+    k,v: [B, H, T, dh] KV cache
+    pos: i32 scalar    current position; positions > pos are masked out
+    """
+    b, h, dh = q.shape
+    _, _, t, _ = k.shape
+    pos_arr = jnp.reshape(pos.astype(jnp.int32), (1,))
+
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, t_total=t),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hi: (0,)),
+            pl.BlockSpec((b, 1, dh), lambda hi: (0, hi, 0)),
+            pl.BlockSpec((b, 1, t, dh), lambda hi: (0, hi, 0, 0)),
+            pl.BlockSpec((b, 1, t, dh), lambda hi: (0, hi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b, 1, dh), lambda hi: (0, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=True,
+    )(pos_arr, q, k, v)

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every kernel in this package has a
+reference implementation here, and ``python/tests`` asserts allclose between
+kernel and reference across shape/dtype sweeps (hypothesis).  The references
+are also used by the model tests as an end-to-end oracle.
+"""
+
+import jax.numpy as jnp
+
+
+def apply_activation(x, act: str):
+    """Activation menu shared by kernel and reference."""
+    if act == "none":
+        return x
+    if act == "relu":
+        return jnp.maximum(x, 0.0)
+    if act == "gelu":
+        # tanh approximation, matches jax.nn.gelu(approximate=True)
+        c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+        return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+    if act == "silu":
+        return x * (1.0 / (1.0 + jnp.exp(-x)))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+def fused_linear_ref(x, w, b=None, act: str = "none"):
+    """Reference for kernels.fused_linear: act(x @ w + b)."""
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b
+    return apply_activation(y, act).astype(x.dtype)
+
+
+def rmsnorm_ref(x, w, eps: float = 1e-6):
+    """Reference for kernels.rmsnorm: x * rsqrt(mean(x^2) + eps) * w."""
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax_rsqrt(ms + eps) * w).astype(x.dtype)
+
+
+def jax_rsqrt(x):
+    return 1.0 / jnp.sqrt(x)
+
+
+def attention_decode_ref(q, k, v, pos):
+    """Reference for kernels.attention_decode.
+
+    q:   [B, H, dh]      query for the current step
+    k,v: [B, H, T, dh]   KV cache (only positions < pos+1 are valid)
+    pos: i32 scalar      index of the current step (attends to 0..=pos)
+    """
+    B, H, T, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhd,bhtd->bht", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    t_idx = jnp.arange(T)[None, None, :]
+    mask = t_idx <= pos
+    scores = jnp.where(mask, scores, jnp.float32(-1e30))
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bht,bhtd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

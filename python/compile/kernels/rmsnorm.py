@@ -1,0 +1,43 @@
+"""Fused RMSNorm Pallas kernel: ``x * rsqrt(mean(x^2) + eps) * w``.
+
+Grid tiles rows of ``x``; the feature dimension stays whole inside the
+block (the reduction axis must be VMEM-resident), which is the standard
+TPU layout for layernorm-family kernels.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per grid cell: keeps the block well under VMEM for any D we use.
+ROW_BLOCK = 128
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * (1.0 / jnp.sqrt(ms + eps)) * w_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm(x, w, eps: float = 1e-6):
+    """RMS-normalize rows of x ([M, D]) with learned scale w ([D])."""
+    m, d = x.shape
+    bm = m if m <= ROW_BLOCK else ROW_BLOCK
+    mp = -(-m // bm) * bm
+    xp = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(mp // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda mi: (mi, 0)),
+            pl.BlockSpec((d,), lambda mi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda mi: (mi, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, d), jnp.float32),
+        interpret=True,
+    )(xp, w)
+    return out[:m]

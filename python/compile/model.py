@@ -1,0 +1,170 @@
+"""Layer-2 JAX model: decoder-only transformer with in-graph greedy decode.
+
+One lowered graph does everything the serving path needs for a batch:
+sequential prefill over the prompt (teacher forcing) followed by greedy
+decoding of ``decode_len`` tokens, with a KV cache carried through a
+``lax.scan`` over time steps and a second ``lax.scan`` over the stacked
+layer parameters.  Every projection runs through the Layer-1 Pallas
+``fused_linear`` kernel; attention and RMSNorm are Pallas kernels too, so
+the whole hot path lowers into a single compact HLO module the Rust
+runtime compiles once per (family, batch size).
+
+The exported entry point is :func:`generate`, taking the prompt first and
+then the parameter arrays in :meth:`Family.param_shapes` order — this fixed
+positional order is what the artifact manifest records for the Rust side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .families import Family
+from .kernels import attention_decode, fused_linear, rmsnorm
+
+PARAM_NAMES = ("embed", "attn_norm", "wqkv", "wo", "mlp_norm",
+               "w_gate", "w_up", "w_down", "final_norm", "unembed")
+
+
+def _layer(fam: Family, x, layer_in, pos):
+    """One transformer block at one time step.
+
+    x: [B, D] residual stream; layer_in carries this layer's stacked
+    parameters plus its KV cache slices [B, H, T, dh].
+    """
+    (attn_norm, wqkv, wo, mlp_norm, w_gate, w_up, w_down, kc, vc) = layer_in
+    b = x.shape[0]
+    h_heads, dh = fam.n_heads, fam.head_dim
+
+    # --- attention ---
+    h = rmsnorm(x, attn_norm)
+    qkv = fused_linear(h, wqkv)                          # [B, 3D]
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, h_heads, dh)
+    k_new = k_new.reshape(b, h_heads, 1, dh)
+    v_new = v_new.reshape(b, h_heads, 1, dh)
+    kc = jax.lax.dynamic_update_slice(kc, k_new, (0, 0, pos, 0))
+    vc = jax.lax.dynamic_update_slice(vc, v_new, (0, 0, pos, 0))
+    att = attention_decode(q, kc, vc, pos)               # [B, H, dh]
+    x = x + fused_linear(att.reshape(b, h_heads * dh), wo)
+
+    # --- gated MLP ---
+    h2 = rmsnorm(x, mlp_norm)
+    gate = fused_linear(h2, w_gate, act=fam.act)
+    up = fused_linear(h2, w_up)
+    x = x + fused_linear(gate * up, w_down)
+    return x, kc, vc
+
+
+def _step(fam: Family, params: dict, tokens, kcache, vcache, pos):
+    """Run all layers for one time step.
+
+    tokens: [B] i32; kcache/vcache: [L, B, H, T, dh]; pos: traced i32.
+    Returns (logits [B, V], updated caches).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)        # [B, D]
+
+    def body(x, inp):
+        x, kc, vc = _layer(fam, x, inp, pos)
+        return x, (kc, vc)
+
+    stacked = (params["attn_norm"], params["wqkv"], params["wo"],
+               params["mlp_norm"], params["w_gate"], params["w_up"],
+               params["w_down"], kcache, vcache)
+    x, (kcache, vcache) = jax.lax.scan(body, x, stacked)
+
+    h = rmsnorm(x, params["final_norm"])
+    logits = fused_linear(h, params["unembed"])          # [B, V]
+    return logits, kcache, vcache
+
+
+def generate(fam: Family, prompt, *param_arrays):
+    """Prefill + greedy-decode ``fam.decode_len`` tokens.
+
+    prompt: [B, prompt_len] i32 in [0, vocab).
+    Returns a 1-tuple ``(tokens [B, decode_len] i32,)`` — lowered with
+    return_tuple=True, so the Rust side unwraps a tuple literal.
+    """
+    assert len(param_arrays) == len(PARAM_NAMES), \
+        f"want {len(PARAM_NAMES)} param arrays, got {len(param_arrays)}"
+    params = dict(zip(PARAM_NAMES, param_arrays))
+    b, s = prompt.shape
+    assert s == fam.prompt_len, (s, fam.prompt_len)
+    t_total = fam.cache_len
+    l, hh, dh = fam.n_layers, fam.n_heads, fam.head_dim
+
+    kcache = jnp.zeros((l, b, hh, t_total, dh), jnp.float32)
+    vcache = jnp.zeros_like(kcache)
+
+    n_steps = s - 1 + fam.decode_len
+
+    def body(carry, t):
+        tok, kc, vc = carry
+        logits, kc, vc = _step(fam, params, tok, kc, vc, t)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # teacher-force while still inside the prompt
+        t_next = jnp.clip(t + 1, 0, s - 1)
+        forced = jax.lax.dynamic_index_in_dim(prompt, t_next, axis=1,
+                                              keepdims=False)
+        next_tok = jnp.where(t + 1 < s, forced, pred)
+        return (next_tok, kc, vc), pred
+
+    init = (prompt[:, 0], kcache, vcache)
+    _, preds = jax.lax.scan(body, init, jnp.arange(n_steps))
+    # preds: [n_steps, B]; generated tokens start at step s-1.
+    out = jnp.transpose(preds[s - 1:], (1, 0))           # [B, decode_len]
+    return (out,)
+
+
+def make_generate_fn(fam: Family):
+    """Positional-arg closure suitable for jax.jit().lower()."""
+    return functools.partial(generate, fam)
+
+
+def reference_generate(fam: Family, params: dict, prompt):
+    """Slow pure-jnp oracle of generate() for tests: same prefill+decode
+    loop but using the ref kernels (no Pallas), written independently."""
+    import numpy as np
+
+    from .kernels import ref
+
+    b, s = prompt.shape
+    t_total = fam.cache_len
+    l, hh, dh = fam.n_layers, fam.n_heads, fam.head_dim
+    kc = np.zeros((l, b, hh, t_total, dh), np.float32)
+    vc = np.zeros_like(kc)
+    tok = np.asarray(prompt[:, 0])
+    preds = []
+    for t in range(s - 1 + fam.decode_len):
+        x = np.asarray(params["embed"])[tok]
+        for li in range(l):
+            h = ref.rmsnorm_ref(jnp.asarray(x),
+                                jnp.asarray(params["attn_norm"][li]))
+            qkv = ref.fused_linear_ref(h, jnp.asarray(params["wqkv"][li]))
+            q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+            kc[li, :, :, t, :] = np.asarray(k_new).reshape(b, hh, dh)
+            vc[li, :, :, t, :] = np.asarray(v_new).reshape(b, hh, dh)
+            att = ref.attention_decode_ref(
+                jnp.asarray(np.asarray(q).reshape(b, hh, dh)),
+                jnp.asarray(kc[li]), jnp.asarray(vc[li]), t)
+            x = x + np.asarray(ref.fused_linear_ref(
+                jnp.asarray(np.asarray(att).reshape(b, hh * dh)),
+                jnp.asarray(params["wo"][li])))
+            h2 = ref.rmsnorm_ref(jnp.asarray(x),
+                                 jnp.asarray(params["mlp_norm"][li]))
+            gate = ref.fused_linear_ref(h2, jnp.asarray(params["w_gate"][li]),
+                                        act=fam.act)
+            up = ref.fused_linear_ref(h2, jnp.asarray(params["w_up"][li]))
+            x = x + np.asarray(ref.fused_linear_ref(
+                gate * up, jnp.asarray(params["w_down"][li])))
+        hfin = ref.rmsnorm_ref(jnp.asarray(x),
+                               jnp.asarray(params["final_norm"]))
+        logits = ref.fused_linear_ref(hfin, jnp.asarray(params["unembed"]))
+        pred = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        preds.append(pred)
+        if t + 1 < s:
+            tok = np.asarray(prompt[:, t + 1])
+        else:
+            tok = pred
+    preds = np.stack(preds, axis=1)                       # [B, n_steps]
+    return preds[:, s - 1:]

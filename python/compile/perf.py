@@ -1,0 +1,166 @@
+"""L1/L2 performance analysis (DESIGN.md §Perf).
+
+Because Pallas runs under ``interpret=True`` on CPU (real Mosaic
+lowering needs a TPU), kernel performance is assessed *structurally*:
+
+* L1 — per-kernel VMEM footprint and MXU utilization estimates derived
+  from the BlockSpecs that would drive a real TPU lowering;
+* L2 — HLO statistics of the lowered modules (op histogram, scan vs
+  unroll check, parameter traffic) plus per-step FLOP counts and
+  arithmetic intensity against the weights.
+
+Usage: ``python -m compile.perf [--out report.md]`` (run from python/).
+"""
+
+import argparse
+import re
+import sys
+
+from .families import FAMILIES, Family
+from .kernels.fused_linear import matmul_block_shapes, vmem_bytes, MXU_DIM
+from .model import PARAM_NAMES  # noqa: F401  (documented param order)
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes per TensorCore
+MXU_FLOPS_PER_CYCLE = 2 * MXU_DIM * MXU_DIM  # one 128x128 MAC wave
+
+
+def matmul_report(name: str, m: int, k: int, n: int) -> dict:
+    """Blocking + utilization estimate for one fused_linear call."""
+    bm, bk, bn = matmul_block_shapes(m, k, n)
+    grid = (-(-m // bm), -(-n // bn), -(-k // bk))
+    vmem = vmem_bytes(bm, bk, bn)
+    # MXU utilization of one block-matmul wave: fraction of the 128x128
+    # systolic array the block actually covers.
+    mxu_util = (min(bm, MXU_DIM) * min(bn, MXU_DIM)) / (MXU_DIM * MXU_DIM)
+    flops = 2 * m * k * n
+    return {
+        "name": name,
+        "shape": f"({m}x{k})@({k}x{n})",
+        "blocks": f"bm={bm} bk={bk} bn={bn}",
+        "grid": grid,
+        "vmem_bytes": vmem,
+        "vmem_ok": vmem <= VMEM_BUDGET,
+        "mxu_util": mxu_util,
+        "flops": flops,
+    }
+
+
+def family_step_matmuls(fam: Family, batch: int) -> list[dict]:
+    """All fused_linear calls in ONE decode step (per layer + head)."""
+    d, f, v = fam.d_model, fam.d_ff, fam.vocab
+    per_layer = [
+        matmul_report("wqkv", batch, d, 3 * d),
+        matmul_report("wo", batch, d, d),
+        matmul_report("w_gate", batch, d, f),
+        matmul_report("w_up", batch, d, f),
+        matmul_report("w_down", batch, f, d),
+    ]
+    return per_layer + [matmul_report("unembed", batch, d, v)]
+
+
+def family_flops(fam: Family, batch: int) -> float:
+    """Total FLOPs for one generate() call (prefill + decode)."""
+    steps = fam.prompt_len - 1 + fam.decode_len
+    per_step = sum(r["flops"] for r in family_step_matmuls(fam, batch)[:-1]
+                   ) * fam.n_layers \
+        + family_step_matmuls(fam, batch)[-1]["flops"]
+    # attention: q.K^T and p.V per layer, T = cache_len
+    attn = 2 * 2 * batch * fam.n_heads * fam.cache_len * fam.head_dim \
+        * fam.n_layers
+    return steps * (per_step + attn)
+
+
+def hlo_stats(text: str) -> dict:
+    """Cheap structural statistics over an HLO text module."""
+    ops = []
+    for line in text.splitlines():
+        if " = " not in line:
+            continue
+        # the opcode is the first bare identifier directly before a '('
+        # after the '=' (types like (s32[], ...) start with '(', not a
+        # letter, so they don't match)
+        m = re.search(r"([a-z][a-z0-9-]*)\(", line.split(" = ", 1)[1])
+        if m:
+            ops.append(m.group(1))
+    hist: dict[str, int] = {}
+    for op in ops:
+        hist[op] = hist.get(op, 0) + 1
+    return {
+        "total_instructions": len(ops),
+        "while_loops": hist.get("while", 0),
+        "dots": hist.get("dot", 0),
+        "dynamic_slices": hist.get("dynamic-slice", 0),
+        "top": sorted(hist.items(), key=lambda kv: -kv[1])[:8],
+    }
+
+
+def render(artifacts_dir: str | None) -> str:
+    out = ["# L1/L2 performance analysis (analytic)\n"]
+
+    out.append("## L1 — Pallas kernel blocking (batch = OBS-scale 16)\n")
+    out.append("| family | kernel | shape | blocks | grid | VMEM | "
+               "fits 16MiB | MXU util |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for fam in FAMILIES:
+        for r in family_step_matmuls(fam, 16):
+            out.append(
+                f"| {fam.name} | {r['name']} | {r['shape']} | "
+                f"{r['blocks']} | {r['grid']} | "
+                f"{r['vmem_bytes'] / 1024:.0f} KiB | "
+                f"{'yes' if r['vmem_ok'] else 'NO'} | "
+                f"{r['mxu_util'] * 100:.0f}% |")
+    out.append("")
+    out.append(
+        "MXU utilization below 100% reflects batch rows (< 128) — the\n"
+        "decode-step GEMMs are inherently skinny; a real deployment would\n"
+        "co-schedule batches (as the coordinator does) to fill rows.\n")
+
+    out.append("## L2 — per-call FLOPs and weight arithmetic intensity\n")
+    out.append("| family | batch | GFLOP/call | bytes(weights) | "
+               "intensity (flops/byte) |")
+    out.append("|---|---|---|---|---|")
+    for fam in FAMILIES:
+        for b in (1, 16, 32):
+            fl = family_flops(fam, b)
+            wb = fam.weight_bytes()
+            out.append(f"| {fam.name} | {b} | {fl / 1e9:.2f} | "
+                       f"{wb / 1e6:.1f} MB | {fl / wb:.0f} |")
+    out.append("")
+
+    if artifacts_dir:
+        import os
+        out.append("## L2 — lowered HLO structure\n")
+        out.append("| artifact | instructions | while | dot | "
+                   "dynamic-slice |")
+        out.append("|---|---|---|---|---|")
+        for fam in FAMILIES:
+            path = os.path.join(artifacts_dir, f"{fam.name}_b16.hlo.txt")
+            if not os.path.exists(path):
+                continue
+            st = hlo_stats(open(path).read())
+            out.append(f"| {fam.name}_b16 | {st['total_instructions']} | "
+                       f"{st['while_loops']} | {st['dots']} | "
+                       f"{st['dynamic_slices']} |")
+        out.append("")
+        out.append(
+            "`while` counts confirm scan-based decode (layers + time are\n"
+            "rolled loops, not 50x unrolled graphs); instruction counts in\n"
+            "the hundreds keep XLA compile times ~1s per artifact.\n")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    text = render(args.artifacts)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+"""AOT pipeline tests: manifest schema, weight blob layout, HLO output."""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.families import FAMILIES
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    """Build a shrunken artifact set once for all tests in this module."""
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    fam = dataclasses.replace(FAMILIES[0], prompt_len=4, decode_len=4)
+    manifest = aot.build(out, [fam], (1, 2))
+    return out, fam, manifest
+
+
+def test_manifest_shape(built):
+    _, fam, manifest = built
+    assert manifest["format_version"] == 1
+    assert manifest["batch_sizes"] == [1, 2]
+    (entry,) = manifest["families"]
+    assert entry["name"] == fam.name
+    assert entry["hf_name"] == "Llama-3.1-8B"
+    assert entry["paper_gb"] == pytest.approx(16.07)
+    assert entry["cache_len"] == fam.prompt_len + fam.decode_len
+    assert set(entry["artifacts"].keys()) == {"1", "2"}
+
+
+def test_weight_blob_layout(built):
+    out, fam, manifest = built
+    entry = manifest["families"][0]["weights"]
+    blob_path = os.path.join(out, entry["file"])
+    blob = open(blob_path, "rb").read()
+    assert len(blob) == entry["total_bytes"] == fam.weight_bytes()
+
+    params = fam.init_params()
+    for p in entry["params"]:
+        raw = blob[p["offset_bytes"]:p["offset_bytes"] + p["size_bytes"]]
+        arr = np.frombuffer(raw, np.float32).reshape(p["shape"])
+        assert np.array_equal(arr, params[p["name"]]), p["name"]
+
+    # offsets are dense and ordered
+    offs = [p["offset_bytes"] for p in entry["params"]]
+    sizes = [p["size_bytes"] for p in entry["params"]]
+    assert offs[0] == 0
+    for i in range(1, len(offs)):
+        assert offs[i] == offs[i - 1] + sizes[i - 1]
+
+
+def test_hlo_artifacts_written(built):
+    out, _, manifest = built
+    entry = manifest["families"][0]
+    for b, fname in entry["artifacts"].items():
+        text = open(os.path.join(out, fname)).read()
+        assert text.startswith("HloModule"), fname
+        # the prompt parameter must carry the right batch dimension
+        assert f"s32[{b},4]" in text, fname
+
+
+def test_weights_sha_matches(built):
+    import hashlib
+    out, _, manifest = built
+    entry = manifest["families"][0]["weights"]
+    blob = open(os.path.join(out, entry["file"]), "rb").read()
+    assert hashlib.sha256(blob).hexdigest() == entry["sha256"]
+
+
+def test_cli_roundtrip(tmp_path):
+    rc = aot.main(["--out", str(tmp_path), "--families", "llama-sim",
+                   "--batch-sizes", "1"])
+    assert rc == 0
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["families"][0]["name"] == "llama-sim"
+    assert (tmp_path / "llama-sim_b1.hlo.txt").exists()
+    assert (tmp_path / "llama-sim.weights.bin").exists()

@@ -1,0 +1,203 @@
+"""Kernel-vs-reference correctness: the core L1 signal.
+
+Every Pallas kernel is checked against its pure-jnp oracle in ref.py,
+with hypothesis sweeping shapes (including non-block-multiple shapes that
+exercise the padding path) and fixed-seed numpy data.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (attention_decode, fused_linear,
+                             matmul_block_shapes, rmsnorm)
+from compile.kernels import ref
+from compile.kernels.fused_linear import MXU_DIM, vmem_bytes
+
+RTOL, ATOL = 2e-5, 2e-5
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------- fused_linear
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu", "silu"])
+@pytest.mark.parametrize("m,k,n", [(1, 128, 128), (8, 128, 384),
+                                   (32, 192, 576), (5, 96, 200),
+                                   (130, 130, 130)])
+def test_fused_linear_matches_ref(act, m, k, n):
+    rng = np.random.RandomState(hash((act, m, k, n)) % 2**31)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    got = fused_linear(x, w, act=act)
+    want = ref.fused_linear_ref(x, w, act=act)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 64, 96), (17, 150, 33)])
+def test_fused_linear_bias(m, k, n):
+    rng = np.random.RandomState(7)
+    x, w, b = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, n)
+    got = fused_linear(x, w, b, act="gelu")
+    want = ref.fused_linear_ref(x, w, b, act="gelu")
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 140), k=st.integers(1, 140), n=st.integers(1, 140),
+       act=st.sampled_from(["none", "relu", "gelu", "silu"]),
+       bias=st.booleans(), seed=st.integers(0, 2**31 - 1))
+def test_fused_linear_hypothesis(m, k, n, act, bias, seed):
+    rng = np.random.RandomState(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    b = _arr(rng, n) if bias else None
+    got = fused_linear(x, w, b, act=act)
+    want = ref.fused_linear_ref(x, w, b, act=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_shape_mismatch_raises():
+    rng = np.random.RandomState(0)
+    with pytest.raises(AssertionError):
+        fused_linear(_arr(rng, 4, 8), _arr(rng, 9, 4))
+
+
+def test_fused_linear_zero_input_gives_zero():
+    out = fused_linear(jnp.zeros((3, 64)), jnp.zeros((64, 32)))
+    assert np.all(np.asarray(out) == 0.0)
+
+
+# ------------------------------------------------------------- block shapes
+
+def test_block_shapes_small_dims_stay_whole():
+    assert matmul_block_shapes(8, 96, 100) == (8, 96, 100)
+
+
+def test_block_shapes_capped_at_mxu():
+    bm, bk, bn = matmul_block_shapes(1000, 1000, 1000)
+    assert (bm, bk, bn) == (MXU_DIM, MXU_DIM, MXU_DIM)
+
+
+@given(m=st.integers(1, 4096), k=st.integers(1, 4096), n=st.integers(1, 4096))
+@settings(max_examples=50, deadline=None)
+def test_block_shapes_never_exceed_mxu_and_fit_vmem(m, k, n):
+    bm, bk, bn = matmul_block_shapes(m, k, n)
+    assert max(bm, bk, bn) <= MXU_DIM
+    # one grid cell must fit comfortably in a 16 MiB VMEM budget
+    assert vmem_bytes(bm, bk, bn) <= 16 * 1024 * 1024
+
+
+# ------------------------------------------------------------------- rmsnorm
+
+@pytest.mark.parametrize("m,d", [(1, 128), (8, 128), (33, 192), (200, 64)])
+def test_rmsnorm_matches_ref(m, d):
+    rng = np.random.RandomState(m * 1000 + d)
+    x, w = _arr(rng, m, d), _arr(rng, d)
+    np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_rmsnorm_scale_invariant_direction():
+    # rmsnorm(c*x) == rmsnorm(x) for any positive scalar c (eps-negligible)
+    rng = np.random.RandomState(3)
+    x, w = _arr(rng, 4, 128), _arr(rng, 128)
+    a = rmsnorm(x, w)
+    b = rmsnorm(x * 100.0, w)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 150), d=st.integers(2, 256),
+       seed=st.integers(0, 2**31 - 1))
+def test_rmsnorm_hypothesis(m, d, seed):
+    rng = np.random.RandomState(seed)
+    x, w = _arr(rng, m, d), _arr(rng, d)
+    np.testing.assert_allclose(rmsnorm(x, w), ref.rmsnorm_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ----------------------------------------------------------------- attention
+
+@pytest.mark.parametrize("b,h,t,dh", [(1, 1, 4, 16), (3, 4, 10, 32),
+                                      (8, 6, 66, 32)])
+def test_attention_matches_ref(b, h, t, dh):
+    rng = np.random.RandomState(b * 100 + t)
+    q = _arr(rng, b, h, dh)
+    k = _arr(rng, b, h, t, dh)
+    v = _arr(rng, b, h, t, dh)
+    for pos in [0, t // 2, t - 1]:
+        got = attention_decode(q, k, v, jnp.int32(pos))
+        want = ref.attention_decode_ref(q, k, v, pos)
+        np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_attention_masks_future_positions():
+    """Garbage beyond pos must not leak into the output."""
+    rng = np.random.RandomState(11)
+    b, h, t, dh = 2, 2, 8, 16
+    q = _arr(rng, b, h, dh)
+    k = _arr(rng, b, h, t, dh)
+    v = _arr(rng, b, h, t, dh)
+    pos = 3
+    k2 = k.at[:, :, pos + 1:, :].set(1e6)
+    v2 = v.at[:, :, pos + 1:, :].set(-1e6)
+    a = attention_decode(q, k, v, jnp.int32(pos))
+    b_ = attention_decode(q, k2, v2, jnp.int32(pos))
+    np.testing.assert_allclose(a, b_, rtol=1e-6, atol=1e-6)
+
+
+def test_attention_pos0_returns_v0():
+    """With only position 0 visible, softmax collapses to V[:, :, 0]."""
+    rng = np.random.RandomState(12)
+    b, h, t, dh = 2, 3, 5, 8
+    q = _arr(rng, b, h, dh)
+    k = _arr(rng, b, h, t, dh)
+    v = _arr(rng, b, h, t, dh)
+    out = attention_decode(q, k, v, jnp.int32(0))
+    np.testing.assert_allclose(out, v[:, :, 0, :], rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 8), h=st.integers(1, 6), t=st.integers(1, 40),
+       dh=st.sampled_from([8, 16, 32]), seed=st.integers(0, 2**31 - 1),
+       data=st.data())
+def test_attention_hypothesis(b, h, t, dh, seed, data):
+    pos = data.draw(st.integers(0, t - 1))
+    rng = np.random.RandomState(seed)
+    q = _arr(rng, b, h, dh)
+    k = _arr(rng, b, h, t, dh)
+    v = _arr(rng, b, h, t, dh)
+    got = attention_decode(q, k, v, jnp.int32(pos))
+    want = ref.attention_decode_ref(q, k, v, pos)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- dtypes
+
+def test_fused_linear_bf16_inputs():
+    """bf16 weights/activations with f32 accumulation (the MXU's native
+    mode); result compared against the f32 reference at bf16 tolerance."""
+    rng = np.random.RandomState(21)
+    x32 = rng.randn(8, 64).astype(np.float32)
+    w32 = rng.randn(64, 96).astype(np.float32)
+    x = jnp.asarray(x32, dtype=jnp.bfloat16)
+    w = jnp.asarray(w32, dtype=jnp.bfloat16)
+    got = fused_linear(x, w, act="none")
+    want = ref.fused_linear_ref(
+        x.astype(jnp.float32), w.astype(jnp.float32), act="none")
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-1)
+
+
+def test_rmsnorm_bf16_inputs():
+    rng = np.random.RandomState(22)
+    x = jnp.asarray(rng.randn(5, 64).astype(np.float32),
+                    dtype=jnp.bfloat16)
+    w = jnp.asarray(rng.randn(64).astype(np.float32), dtype=jnp.bfloat16)
+    got = rmsnorm(x, w)
+    want = ref.rmsnorm_ref(x.astype(jnp.float32), w.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want), rtol=3e-2, atol=3e-1)

@@ -1,0 +1,108 @@
+"""Layer-2 model invariants: generate() vs an independent oracle,
+determinism, teacher-forcing causality, and batch isolation."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.families import FAMILIES, by_name
+from compile.model import PARAM_NAMES, make_generate_fn, reference_generate
+
+
+def _tiny(fam, prompt_len=4, decode_len=5):
+    return dataclasses.replace(fam, prompt_len=prompt_len,
+                               decode_len=decode_len)
+
+
+def _run(fam, prompt):
+    params = fam.init_params()
+    args = [jnp.asarray(params[n]) for n, _ in fam.param_shapes()]
+    fn = jax.jit(make_generate_fn(fam))
+    return np.asarray(fn(jnp.asarray(prompt), *args)[0])
+
+
+@pytest.mark.parametrize("name", [f.name for f in FAMILIES])
+def test_generate_matches_reference(name):
+    fam = _tiny(by_name(name))
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, fam.vocab, size=(2, fam.prompt_len)) \
+        .astype(np.int32)
+    got = _run(fam, prompt)
+    want = reference_generate(fam, fam.init_params(), prompt)
+    assert got.shape == (2, fam.decode_len)
+    assert np.array_equal(got, want)
+
+
+def test_generate_deterministic():
+    fam = _tiny(FAMILIES[0])
+    rng = np.random.RandomState(1)
+    prompt = rng.randint(0, fam.vocab, size=(3, fam.prompt_len)) \
+        .astype(np.int32)
+    assert np.array_equal(_run(fam, prompt), _run(fam, prompt))
+
+
+def test_batch_rows_are_independent():
+    """Row i's generation must not depend on other rows in the batch —
+    the batcher pads batches with dummy rows, so cross-row leakage would
+    corrupt real requests."""
+    fam = _tiny(FAMILIES[0])
+    rng = np.random.RandomState(2)
+    a = rng.randint(0, fam.vocab, size=(1, fam.prompt_len)).astype(np.int32)
+    junk = rng.randint(0, fam.vocab, size=(3, fam.prompt_len)) \
+        .astype(np.int32)
+    solo = _run(fam, a)
+    batched = _run(fam, np.concatenate([a, junk], axis=0))
+    assert np.array_equal(solo[0], batched[0])
+
+
+def test_identical_rows_generate_identically():
+    fam = _tiny(FAMILIES[1])
+    rng = np.random.RandomState(3)
+    row = rng.randint(0, fam.vocab, size=(1, fam.prompt_len)) \
+        .astype(np.int32)
+    out = _run(fam, np.repeat(row, 4, axis=0))
+    for i in range(1, 4):
+        assert np.array_equal(out[0], out[i])
+
+
+def test_prompt_changes_propagate():
+    """Different prompts should (generically) give different generations —
+    a guard against the graph ignoring its inputs."""
+    fam = _tiny(FAMILIES[0], prompt_len=8, decode_len=8)
+    rng = np.random.RandomState(4)
+    p1 = rng.randint(0, fam.vocab, size=(1, fam.prompt_len)).astype(np.int32)
+    p2 = (p1 + 123) % fam.vocab
+    assert not np.array_equal(_run(fam, p1), _run(fam, p2))
+
+
+def test_param_order_matches_param_names():
+    for fam in FAMILIES:
+        assert tuple(n for n, _ in fam.param_shapes()) == PARAM_NAMES
+
+
+def test_family_table_ii_ordering():
+    """Weight bytes must preserve the paper's Table II ordering:
+    granite-7b (26.98 GB) > gemma-7b (17.07) > llama-3.1 (16.07)."""
+    sizes = {f.name: f.weight_bytes() for f in FAMILIES}
+    assert sizes["granite-sim"] > sizes["gemma-sim"] > sizes["llama-sim"]
+    gbs = {f.name: f.paper_gb for f in FAMILIES}
+    assert gbs["granite-sim"] > gbs["gemma-sim"] > gbs["llama-sim"]
+
+
+def test_kv_bytes_per_seq():
+    fam = FAMILIES[0]
+    expect = 2 * 4 * fam.n_layers * fam.n_heads * fam.cache_len \
+        * fam.head_dim
+    assert fam.kv_bytes_per_seq() == expect
+
+
+def test_init_params_deterministic_and_distinct():
+    fam = FAMILIES[0]
+    a, b = fam.init_params(), fam.init_params()
+    for k in a:
+        assert np.array_equal(a[k], b[k])
+    other = FAMILIES[1].init_params()
+    assert not np.array_equal(a["embed"][:, :64], other["embed"][:, :64])

@@ -1,0 +1,44 @@
+"""Sanity tests over the §Perf analytic model."""
+
+import os
+
+import pytest
+
+from compile import perf
+from compile.families import FAMILIES
+
+
+def test_all_kernels_fit_vmem():
+    for fam in FAMILIES:
+        for b in (1, 16, 32):
+            for r in perf.family_step_matmuls(fam, b):
+                assert r["vmem_ok"], (fam.name, b, r)
+
+
+def test_flops_scale_with_batch_and_size():
+    fam_small, fam_big = FAMILIES[0], FAMILIES[2]
+    assert perf.family_flops(fam_small, 32) > perf.family_flops(fam_small, 1)
+    assert perf.family_flops(fam_big, 16) > perf.family_flops(fam_small, 16)
+
+
+def test_mxu_util_increases_with_batch():
+    fam = FAMILIES[0]
+    u1 = perf.family_step_matmuls(fam, 1)[0]["mxu_util"]
+    u32 = perf.family_step_matmuls(fam, 32)[0]["mxu_util"]
+    assert u32 > u1
+
+
+def test_hlo_stats_on_real_artifact():
+    path = os.path.join(os.path.dirname(__file__), "..", "..",
+                        "artifacts", "llama-sim_b16.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    st = perf.hlo_stats(open(path).read())
+    assert st["total_instructions"] > 100
+    assert st["while_loops"] >= 2, "decode must be scan-rolled"
+
+
+def test_render_produces_markdown():
+    text = perf.render(None)
+    assert "MXU util" in text
+    assert "| llama-sim |" in text

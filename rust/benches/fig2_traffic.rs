@@ -1,0 +1,42 @@
+//! Fig 2 bench: traffic-generator performance and equal-mean check.
+//!
+//! Regenerates the Fig 2 data (arrival series per pattern at equal mean)
+//! and benchmarks schedule generation throughput.
+
+use sincere::bench::Bench;
+use sincere::traffic::rng::Pcg64;
+use sincere::traffic::{pattern_by_name, PATTERN_NAMES};
+
+fn main() {
+    let models = vec!["llama-sim".to_string(), "gemma-sim".to_string(),
+                      "granite-sim".to_string()];
+    let mut b = Bench::from_env(3, 30);
+
+    println!("# Fig 2 — input traffic distributions (mean 4 rps)");
+    println!("\n| pattern | arrivals/600s | realized rps | max 10s-window \
+              rps | min 10s-window rps |");
+    println!("|---|---|---|---|---|");
+    for name in PATTERN_NAMES {
+        let p = pattern_by_name(name).unwrap();
+        let mut rng = Pcg64::new(7);
+        let arr = p.generate(600.0, 4.0, &models, &mut rng);
+        let mut win = [0usize; 60];
+        for a in &arr {
+            win[(a.at_s / 10.0) as usize % 60] += 1;
+        }
+        println!("| {} | {} | {:.2} | {:.1} | {:.1} |", name, arr.len(),
+                 arr.len() as f64 / 600.0,
+                 *win.iter().max().unwrap() as f64 / 10.0,
+                 *win.iter().min().unwrap() as f64 / 10.0);
+    }
+
+    for name in PATTERN_NAMES {
+        let p = pattern_by_name(name).unwrap();
+        let mut rng = Pcg64::new(7);
+        b.run(&format!("generate 600s@4rps {name}"), || {
+            let arr = p.generate(600.0, 4.0, &models, &mut rng);
+            std::hint::black_box(arr);
+        });
+    }
+    b.print_table("generator micro-bench");
+}

@@ -1,0 +1,53 @@
+//! Fig 3 bench: model load times in CC vs No-CC, real DMA path.
+//!
+//! The bandwidth throttle is ON — these are the calibrated load times
+//! the scheduler actually experiences.  Also reports the crypto share
+//! of each CC load (the paper's identified bottleneck).
+
+use std::path::PathBuf;
+
+use sincere::bench::{fmt_dur, Bench};
+use sincere::gpu::device::{GpuConfig, SimGpu};
+use sincere::gpu::CcMode;
+use sincere::runtime::{Manifest, Registry};
+
+fn main() {
+    let artifacts = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&artifacts)
+        .expect("run `make artifacts` first");
+    // batch-1 graphs only: loads don't involve executables
+    let registry = Registry::load(&manifest, &[], &[1]).unwrap();
+    let mut b = Bench::from_env(1, 5);
+    let iters = b.iters;
+
+    println!("# Fig 3 — model loading times, CC vs No-CC\n");
+    println!("| model | mode | mean load | p99 load | crypto share | \
+              unload |");
+    println!("|---|---|---|---|---|---|");
+    for name in registry.names() {
+        let entry = registry.entry(&name).unwrap();
+        for mode in [CcMode::Off, CcMode::On] {
+            let mut gpu = SimGpu::new(GpuConfig {
+                mode, ..GpuConfig::default()
+            }).unwrap();
+            let mut samples = Vec::new();
+            let mut crypto_total = 0.0;
+            let mut unload_total = std::time::Duration::ZERO;
+            for _ in 0..iters {
+                let (buf, rep) = gpu.upload(&entry.weights.raw).unwrap();
+                samples.push(rep.elapsed);
+                crypto_total += rep.crypto.as_secs_f64();
+                unload_total += gpu.unload(buf);
+            }
+            let r = b.push_samples(
+                &format!("{name} {}", mode.as_str()), samples);
+            let crypto_share = crypto_total / iters as f64
+                / r.mean.as_secs_f64().max(1e-12);
+            println!("| {} | {} | {} | {} | {:.0}% | {} |", name,
+                     mode.as_str(), fmt_dur(r.mean), fmt_dur(r.p99),
+                     crypto_share * 100.0,
+                     fmt_dur(unload_total / iters as u32));
+        }
+    }
+    b.print_table("raw load-time samples");
+}

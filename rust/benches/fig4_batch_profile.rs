@@ -1,0 +1,68 @@
+//! Fig 4 bench: inference throughput vs batch size (OBS discovery),
+//! real PJRT execution per (family, batch) artifact, plus the OOM
+//! boundary from the device memory model.
+
+use std::path::PathBuf;
+use std::time::Instant;
+
+use sincere::bench::Bench;
+use sincere::gpu::device::GpuConfig;
+use sincere::runtime::{Manifest, Registry};
+
+fn main() {
+    let artifacts = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&artifacts)
+        .expect("run `make artifacts` first");
+    eprintln!("[fig4] compiling all executables ...");
+    let registry = Registry::load(&manifest, &[], &[]).unwrap();
+    let gpu_cfg = GpuConfig::default();
+    let mut b = Bench::from_env(1, 5);
+    let iters = b.iters;
+
+    println!("# Fig 4 — inference throughput vs batch size\n");
+    println!("| model | batch | mean exec (s) | throughput (req/s) | \
+              note |");
+    println!("|---|---|---|---|---|");
+    for name in registry.names() {
+        let entry = registry.entry(&name).unwrap();
+        let mut measured: Vec<(usize, f64)> = Vec::new();
+        let mut oom: Vec<(usize, u64)> = Vec::new();
+        for &batch in entry.spec.batch_sizes().iter() {
+            let need = entry.spec.weight_bytes()
+                + entry.spec.batch_workspace_bytes(batch);
+            if need > gpu_cfg.hbm_capacity {
+                oom.push((batch, need));
+                continue;
+            }
+            let rows: Vec<Vec<i32>> = (0..batch).map(|i| {
+                (0..entry.spec.prompt_len)
+                    .map(|j| ((i * 13 + j * 5) % entry.spec.vocab) as i32)
+                    .collect()
+            }).collect();
+            registry.execute(&name, &rows).unwrap(); // warmup
+            let mut samples = Vec::new();
+            for _ in 0..iters {
+                let t0 = Instant::now();
+                registry.execute(&name, &rows).unwrap();
+                samples.push(t0.elapsed());
+            }
+            let r = b.push_samples(&format!("{name} b{batch}"), samples);
+            measured.push((batch, r.mean_s()));
+        }
+        let obs = measured.iter()
+            .max_by(|a, b| (a.0 as f64 / a.1)
+                    .partial_cmp(&(b.0 as f64 / b.1)).unwrap())
+            .map(|&(b, _)| b).unwrap_or(0);
+        for (batch, exec_s) in &measured {
+            println!("| {} | {} | {:.3} | {:.2} | {} |", name, batch,
+                     exec_s, *batch as f64 / exec_s,
+                     if *batch == obs { "**OBS**" } else { "" });
+        }
+        for (batch, need) in &oom {
+            println!("| {} | {} | — | — | OOM ({:.1} MB > {:.1} MB HBM) |",
+                     name, batch, *need as f64 / 1e6,
+                     gpu_cfg.hbm_capacity as f64 / 1e6);
+        }
+    }
+    b.print_table("raw execution samples");
+}

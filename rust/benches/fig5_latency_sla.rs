@@ -1,0 +1,55 @@
+//! Fig 5 bench: latency and SLA attainment across traffic patterns,
+//! SLAs and strategies, CC vs No-CC — the calibrated DES grid slice
+//! behind the paper's central figure.
+
+use std::path::PathBuf;
+
+use sincere::config::{RunConfig, SLA_LADDER};
+use sincere::coordinator::STRATEGY_NAMES;
+use sincere::gpu::device::GpuConfig;
+use sincere::gpu::CcMode;
+use sincere::runtime::Manifest;
+use sincere::sim::{simulate, CostModel};
+use sincere::traffic::PATTERN_NAMES;
+
+fn main() {
+    let artifacts = PathBuf::from("artifacts");
+    let manifest = Manifest::load(&artifacts)
+        .expect("run `make artifacts` first");
+    let cm = CostModel::load_or_measure(
+        &artifacts, &PathBuf::from("results/cost_model.json"),
+        &GpuConfig::default(), 3).unwrap();
+
+    println!("# Fig 5 — latency and SLA attainment (DES, 120s cells, \
+              4 rps)\n");
+    println!("| pattern | strategy | SLA | CC lat (s) | No-CC lat (s) | \
+              CC att % | No-CC att % |");
+    println!("|---|---|---|---|---|---|---|");
+    let t0 = std::time::Instant::now();
+    let mut cells = 0;
+    for pattern in PATTERN_NAMES {
+        for strategy in STRATEGY_NAMES {
+            for &sla in SLA_LADDER {
+                let mut out: Vec<(f64, f64)> = Vec::new(); // (lat, att)
+                for mode in [CcMode::On, CcMode::Off] {
+                    let mut c = RunConfig::default();
+                    c.mode = mode;
+                    c.gpu.mode = mode;
+                    c.pattern = pattern.to_string();
+                    c.strategy = strategy.to_string();
+                    c.sla_s = sla;
+                    c.duration_s = 120.0;
+                    c.drain_s = sla;
+                    let s = simulate(&c, &manifest, &cm).unwrap();
+                    out.push((s.latency_mean_s, s.sla_attainment));
+                    cells += 1;
+                }
+                println!("| {} | {} | {} | {:.2} | {:.2} | {:.1} | \
+                          {:.1} |", pattern, strategy, sla, out[0].0,
+                         out[1].0, out[0].1 * 100.0, out[1].1 * 100.0);
+            }
+        }
+    }
+    eprintln!("\n[fig5] {} DES cells in {:.2}s", cells,
+              t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,134 @@
+//! Hot-path micro-benchmarks — the §Perf L3 profile targets.
+//!
+//! Everything the scheduler touches per tick or per batch: strategy
+//! decisions, queue ops, rate estimation, histogram recording,
+//! tokenization, CC seal/open throughput, and unthrottled DMA.
+
+use std::time::Duration;
+
+use sincere::bench::Bench;
+use sincere::coordinator::queues::ModelQueues;
+use sincere::coordinator::rate::RateEstimator;
+use sincere::coordinator::request::Request;
+use sincere::coordinator::strategy::{strategy_by_name, ModelView,
+                                     SchedContext};
+use sincere::gpu::cc::CcSession;
+use sincere::gpu::device::{GpuConfig, SimGpu};
+use sincere::gpu::dma::Dir;
+use sincere::gpu::CcMode;
+use sincere::metrics::hist::Histogram;
+use sincere::traffic::rng::Pcg64;
+use sincere::workload::tokenizer::tokenize;
+
+fn main() {
+    let mut b = Bench::from_env(50, 2000);
+
+    // ---- strategy decide over a realistic context ----
+    let ctx = SchedContext {
+        now_s: 100.0,
+        resident: Some("llama-sim".into()),
+        queues: (0..3).map(|i| ModelView {
+            model: format!("model-{i}"),
+            len: 7 + i,
+            oldest_wait_s: 1.5,
+            obs: 16,
+            rate_rps: 2.5,
+            est_load_s: 0.5,
+            est_exec_s: 0.3,
+        }).collect(),
+        sla_s: 6.0,
+        timeout_s: 3.0,
+    };
+    for name in sincere::coordinator::STRATEGY_NAMES {
+        let s = strategy_by_name(name).unwrap();
+        b.run(&format!("decide/{name}"), || {
+            std::hint::black_box(s.decide(&ctx));
+        });
+    }
+
+    // ---- queue churn ----
+    b.run("queues/push+pop batch of 16", || {
+        let mut q = ModelQueues::new();
+        for i in 0..16u64 {
+            q.push(Request {
+                id: i,
+                model: "m".into(),
+                tokens: vec![1; 16],
+                arrival_s: i as f64,
+            });
+        }
+        std::hint::black_box(q.pop_n("m", 16));
+    });
+
+    // ---- rate estimator ----
+    let mut est = RateEstimator::default();
+    let mut t = 0.0;
+    b.run("rate/on_arrival+query", || {
+        t += 0.25;
+        est.on_arrival("m", t);
+        std::hint::black_box(est.rate_rps("m", t));
+    });
+
+    // ---- histogram ----
+    let mut h = Histogram::new();
+    let mut rng = Pcg64::new(1);
+    b.run("hist/record+p99", || {
+        h.record(rng.next_f64() * 4.0);
+        std::hint::black_box(h.quantile(0.99));
+    });
+
+    // ---- tokenizer ----
+    let prompt = "Summarize the following invoice and flag anomalies \
+                  regarding a cloud infrastructure migration item-1 \
+                  item-2 item-3 item-4";
+    b.run("tokenize/24w->16", || {
+        std::hint::black_box(tokenize(prompt, 16, 512));
+    });
+
+    // ---- CC crypto throughput (1 MB chunks) ----
+    let session = CcSession::establish(7).unwrap();
+    let payload = vec![0xA5u8; 1 << 20];
+    let mut crypto = Bench::from_env(3, 30);
+    let r = crypto.run("cc/seal+open 1MB", || {
+        let sealed = session.seal(&payload);
+        std::hint::black_box(session.open(&sealed).unwrap());
+    });
+    let mbps = 1.0 / r.mean_s();
+    println!("\nCC seal+open throughput: {mbps:.0} MB/s \
+              (bounce-buffer roundtrip)");
+
+    // ---- unthrottled DMA upload (crypto + copy, no bandwidth sleep) ----
+    for mode in [CcMode::Off, CcMode::On] {
+        let mut gpu = SimGpu::new(GpuConfig {
+            mode, no_throttle: true, ..GpuConfig::default()
+        }).unwrap();
+        let blob = vec![0x5Au8; 4 << 20];
+        let r = crypto.run(&format!("dma/upload 4MB {}", mode.as_str()),
+                           || {
+            let (buf, _) = gpu.upload(&blob).unwrap();
+            gpu.free(buf);
+        });
+        println!("DMA upload 4MB ({}): {:.1} MB/s unthrottled",
+                 mode.as_str(), 4.0 / r.mean_s());
+    }
+
+    // ---- io transfer small payload ----
+    let mut gpu = SimGpu::new(GpuConfig {
+        mode: CcMode::On, no_throttle: true, ..GpuConfig::default()
+    }).unwrap();
+    let io = vec![0u8; 16 * 66 * 4];
+    crypto.run("io/seal 4KB request payload", || {
+        gpu.io_transfer(Dir::HostToDevice, &io).unwrap();
+    });
+
+    b.print_table("scheduler hot paths");
+    crypto.print_table("crypto / DMA hot paths");
+
+    // sanity floor: a decide must stay well under the 2 ms tick
+    for r in b.results() {
+        if r.name.starts_with("decide/") {
+            assert!(r.mean < Duration::from_micros(200),
+                    "{} too slow: {:?}", r.name, r.mean);
+        }
+    }
+}

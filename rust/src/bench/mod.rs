@@ -1,0 +1,156 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use this with `harness = false`: warmup, timed
+//! iterations, mean/p50/p99/stddev, and markdown table output that the
+//! figure benches print in the shape of the paper's tables.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_s(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+
+    /// Row for a markdown table.
+    pub fn row(&self) -> String {
+        format!("| {} | {} | {} | {} | {} | {} |",
+                self.name, fmt_dur(self.mean), fmt_dur(self.p50),
+                fmt_dur(self.p99), fmt_dur(self.stddev), self.iters)
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure iteration counts.
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Bench {
+        assert!(iters > 0);
+        Bench { warmup_iters, iters, results: Vec::new() }
+    }
+
+    /// Honour `SINCERE_BENCH_FAST=1` (CI smoke mode): divide iteration
+    /// counts by 5.
+    pub fn from_env(warmup: usize, iters: usize) -> Bench {
+        if std::env::var("SINCERE_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new((warmup / 5).max(1), (iters / 5).max(2))
+        } else {
+            Bench::new(warmup, iters)
+        }
+    }
+
+    /// Time `f` (called once per iteration).
+    pub fn run(&mut self, name: &str, mut f: impl FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        self.push_samples(name, samples)
+    }
+
+    /// Record externally-measured samples (e.g. per-batch times).
+    pub fn push_samples(&mut self, name: &str, mut samples: Vec<Duration>)
+                        -> &BenchResult {
+        assert!(!samples.is_empty());
+        samples.sort();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let mean = sum / n as u32;
+        let mean_s = mean.as_secs_f64();
+        let var = samples.iter()
+            .map(|d| (d.as_secs_f64() - mean_s).powi(2))
+            .sum::<f64>() / n as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: n,
+            mean,
+            p50: samples[n / 2],
+            p99: samples[(n * 99 / 100).min(n - 1)],
+            stddev: Duration::from_secs_f64(var.sqrt()),
+            min: samples[0],
+            max: samples[n - 1],
+        };
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Print all results as a markdown table.
+    pub fn print_table(&self, title: &str) {
+        println!("\n## {title}\n");
+        println!("| case | mean | p50 | p99 | stddev | iters |");
+        println!("|---|---|---|---|---|---|");
+        for r in &self.results {
+            println!("{}", r.row());
+        }
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_roughly() {
+        let mut b = Bench::new(1, 5);
+        let r = b.run("sleep1ms",
+                      || std::thread::sleep(Duration::from_millis(1)));
+        assert!(r.mean >= Duration::from_millis(1));
+        assert!(r.mean < Duration::from_millis(20));
+        assert_eq!(r.iters, 5);
+    }
+
+    #[test]
+    fn stats_ordering() {
+        let mut b = Bench::new(0, 1);
+        let samples = vec![
+            Duration::from_millis(1), Duration::from_millis(2),
+            Duration::from_millis(3), Duration::from_millis(10)];
+        let r = b.push_samples("s", samples);
+        assert!(r.min <= r.p50 && r.p50 <= r.p99 && r.p99 <= r.max);
+        assert_eq!(r.max, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut b = Bench::new(0, 2);
+        b.run("noop", || {});
+        let row = b.results()[0].row();
+        assert!(row.contains("noop"));
+    }
+}

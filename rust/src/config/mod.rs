@@ -1,0 +1,227 @@
+//! Run configuration: defaults, JSON config files, CLI overrides.
+//!
+//! Time scaling (DESIGN.md §Substitutions): the paper ran 20-minute
+//! experiments with SLAs of 40/60/80 s against GB-scale models whose CC
+//! loads sit at roughly 12–25% of the SLA.  Our models load in 1.7–5.4 s
+//! (CC) under the calibrated PCIe model, so a 0.3× scale — SLAs
+//! 12/18/24 s, 60 s runs — reproduces the same load/SLA regime.  All
+//! reported metrics are ratios, which the uniform scaling preserves;
+//! `--sla`/`--duration` restore any other regime.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use crate::gpu::device::GpuConfig;
+use crate::gpu::CcMode;
+use crate::util::json::Json;
+
+/// The paper's SLA ladder (seconds), time-scaled ×0.3.
+pub const SLA_LADDER: &[f64] = &[12.0, 18.0, 24.0];
+
+/// Full configuration of one serving run.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub artifacts_dir: PathBuf,
+    /// Where CSVs/summary go; None disables file output.
+    pub results_dir: Option<PathBuf>,
+    /// Label prefixing output files (derived from the grid cell).
+    pub label: String,
+
+    pub mode: CcMode,
+    /// Traffic pattern name: gamma | bursty | ramp.
+    pub pattern: String,
+    pub mean_rps: f64,
+    pub sla_s: f64,
+    /// Strategy name, see `coordinator::STRATEGY_NAMES`.
+    pub strategy: String,
+    pub duration_s: f64,
+    /// Extra drain time after arrivals stop before cutting off.
+    pub drain_s: f64,
+    pub seed: u64,
+    /// Families to serve (empty = all in manifest).
+    pub models: Vec<String>,
+    /// Artifact batch sizes to compile (empty = all).
+    pub batch_sizes: Vec<usize>,
+    /// Timer plan timeout as a fraction of the SLA.
+    pub timeout_frac: f64,
+    /// Scheduler tick when idle.
+    pub tick: Duration,
+    /// Monitor sampling period.
+    pub monitor_period: Duration,
+    pub gpu: GpuConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: None,
+            label: "run".into(),
+            mode: CcMode::Off,
+            pattern: "gamma".into(),
+            mean_rps: 9.0,
+            sla_s: 18.0,
+            strategy: "select-batch+timer".into(),
+            duration_s: 60.0,
+            drain_s: 240.0,
+            seed: 42,
+            models: Vec::new(),
+            batch_sizes: Vec::new(),
+            timeout_frac: 0.5,
+            tick: Duration::from_millis(2),
+            monitor_period: Duration::from_millis(250),
+            gpu: GpuConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Timer timeout in seconds.
+    pub fn timeout_s(&self) -> f64 {
+        self.timeout_frac * self.sla_s
+    }
+
+    /// Apply one `--key value` override; returns Err on unknown keys.
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "artifacts" => self.artifacts_dir = PathBuf::from(value),
+            "results" => self.results_dir = Some(PathBuf::from(value)),
+            "label" => self.label = value.to_string(),
+            "mode" => {
+                self.mode = CcMode::parse(value)?;
+                self.gpu.mode = self.mode;
+            }
+            "pattern" => self.pattern = value.to_string(),
+            "mean-rps" => self.mean_rps = parse_f64(key, value)?,
+            "sla" => self.sla_s = parse_f64(key, value)?,
+            "strategy" => self.strategy = value.to_string(),
+            "duration" => self.duration_s = parse_f64(key, value)?,
+            "drain" => self.drain_s = parse_f64(key, value)?,
+            "seed" => self.seed = value.parse()
+                .map_err(|_| anyhow::anyhow!("bad --seed {value:?}"))?,
+            "models" => self.models = value.split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty()).collect(),
+            "batch-sizes" => {
+                self.batch_sizes = value.split(',')
+                    .map(|s| s.trim().parse::<usize>())
+                    .collect::<Result<_, _>>()
+                    .map_err(|_| anyhow::anyhow!(
+                        "bad --batch-sizes {value:?}"))?;
+            }
+            "timeout-frac" => self.timeout_frac = parse_f64(key, value)?,
+            "hbm-mb" => self.gpu.hbm_capacity =
+                (parse_f64(key, value)? * 1024.0 * 1024.0) as u64,
+            "bw-plain-mbps" => self.gpu.bw_plain =
+                parse_f64(key, value)? * 1e6,
+            "bw-cc-mbps" => self.gpu.bw_cc = parse_f64(key, value)? * 1e6,
+            "tick-ms" => self.tick =
+                Duration::from_millis(value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --tick-ms"))?),
+            other => anyhow::bail!("unknown option --{other}"),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON object file ({"sla": 6.0, ...}).
+    pub fn apply_json_file(&mut self, path: &std::path::Path)
+                           -> anyhow::Result<()> {
+        let j = Json::parse_file(path)?;
+        let obj = j.as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config must be an object"))?;
+        for (k, v) in obj {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                other => other.to_string(),
+            };
+            self.set(k, &s)
+                .map_err(|e| anyhow::anyhow!("config {path:?}: {e}"))?;
+        }
+        Ok(())
+    }
+
+    /// Grid-cell label, e.g. `cc_gamma_select-batch+timer_sla6`.
+    pub fn cell_label(&self) -> String {
+        format!("{}_{}_{}_sla{}", self.mode.as_str(), self.pattern,
+                self.strategy, self.sla_s)
+    }
+
+    /// Validate cross-field constraints early.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.mean_rps > 0.0, "mean-rps must be > 0");
+        anyhow::ensure!(self.sla_s > 0.0, "sla must be > 0");
+        anyhow::ensure!(self.duration_s > 0.0, "duration must be > 0");
+        anyhow::ensure!((0.0..=1.0).contains(&self.timeout_frac),
+                        "timeout-frac must be in [0,1]");
+        crate::traffic::pattern_by_name(&self.pattern)?;
+        crate::coordinator::strategy_by_name(&self.strategy)?;
+        Ok(())
+    }
+}
+
+fn parse_f64(key: &str, value: &str) -> anyhow::Result<f64> {
+    value.parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("bad --{key} value {value:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        RunConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = RunConfig::default();
+        c.set("mode", "cc").unwrap();
+        c.set("sla", "8").unwrap();
+        c.set("models", "llama-sim,gemma-sim").unwrap();
+        c.set("batch-sizes", "1,4,8").unwrap();
+        c.set("bw-cc-mbps", "3.5").unwrap();
+        assert_eq!(c.mode, CcMode::On);
+        assert_eq!(c.gpu.mode, CcMode::On);
+        assert_eq!(c.sla_s, 8.0);
+        assert_eq!(c.models.len(), 2);
+        assert_eq!(c.batch_sizes, vec![1, 4, 8]);
+        assert!((c.gpu.bw_cc - 3.5e6).abs() < 1.0);
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("sla", "fast").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_fields() {
+        let mut c = RunConfig::default();
+        c.pattern = "nope".into();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.strategy = "nope".into();
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.mean_rps = 0.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn json_config_applies() {
+        let dir = std::env::temp_dir().join("sincere_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("c.json");
+        std::fs::write(&path,
+            r#"{"mode":"cc","sla":4,"pattern":"bursty"}"#).unwrap();
+        let mut c = RunConfig::default();
+        c.apply_json_file(&path).unwrap();
+        assert_eq!(c.mode, CcMode::On);
+        assert_eq!(c.sla_s, 4.0);
+        assert_eq!(c.pattern, "bursty");
+    }
+
+    #[test]
+    fn cell_label_stable() {
+        let c = RunConfig::default();
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18");
+    }
+}

@@ -1,0 +1,158 @@
+//! Batch assembly with a device-memory guard.
+//!
+//! Takes the strategy's `Process { model, take }` decision and turns it
+//! into an executable batch: pops requests, reserves the KV/activation
+//! workspace on the device, and — if the workspace doesn't fit — halves
+//! the batch and requeues the tail at the *front* of the queue,
+//! preserving FIFO order (the paper grows batches "until the GPU runs
+//! out of memory"; serving must therefore survive the OOM edge).
+
+use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::request::Request;
+use crate::gpu::device::SimGpu;
+use crate::gpu::hbm::HbmBuffer;
+use crate::runtime::Registry;
+
+/// A ready-to-execute batch with its reserved workspace.
+pub struct PreparedBatch {
+    pub model: String,
+    pub requests: Vec<Request>,
+    pub workspace: HbmBuffer,
+    /// Artifact batch size that will be used (>= requests.len()).
+    pub artifact_batch: usize,
+}
+
+/// Pop up to `take` requests for `model` and reserve device workspace,
+/// shrinking on OOM.  Returns None if the queue was empty or even a
+/// single-row workspace cannot fit.
+pub fn prepare(queues: &mut ModelQueues, gpu: &mut SimGpu,
+               registry: &Registry, model: &str, take: usize)
+               -> anyhow::Result<Option<PreparedBatch>> {
+    let entry = registry.entry(model)?;
+    let mut reqs = queues.pop_n(model, take.max(1));
+    if reqs.is_empty() {
+        return Ok(None);
+    }
+
+    loop {
+        let artifact_batch = entry.spec.batch_size_at_least(reqs.len());
+        let ws_bytes = entry.spec.batch_workspace_bytes(artifact_batch);
+        match gpu.alloc(ws_bytes) {
+            Ok(workspace) => {
+                return Ok(Some(PreparedBatch {
+                    model: model.to_string(),
+                    requests: reqs,
+                    workspace,
+                    artifact_batch,
+                }));
+            }
+            Err(_) if reqs.len() > 1 => {
+                // halve and requeue the tail in order
+                let keep = reqs.len() / 2;
+                let tail = reqs.split_off(keep);
+                queues.push_front(model, tail);
+            }
+            Err(e) => {
+                // cannot even fit one row: requeue and report
+                queues.push_front(model, reqs);
+                anyhow::bail!("workspace OOM for {model} even at batch 1: \
+                               {e}");
+            }
+        }
+    }
+}
+
+/// Release a batch's workspace after execution.
+pub fn release(gpu: &mut SimGpu, batch: PreparedBatch) -> Vec<Request> {
+    gpu.free(batch.workspace);
+    batch.requests
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::device::GpuConfig;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn registry() -> Registry {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        Registry::load(&m, &["llama-sim".to_string()], &[1, 2, 4, 8])
+            .unwrap()
+    }
+
+    fn req(id: u64) -> Request {
+        Request { id, model: "llama-sim".into(), tokens: vec![0; 16],
+                  arrival_s: id as f64 }
+    }
+
+    fn gpu(capacity: u64) -> SimGpu {
+        SimGpu::new(GpuConfig {
+            hbm_capacity: capacity, no_throttle: true, ..Default::default()
+        }).unwrap()
+    }
+
+    #[test]
+    fn prepares_full_batch() {
+        let reg = registry();
+        let mut gpu = gpu(24 * 1024 * 1024);
+        let mut q = ModelQueues::new();
+        for i in 0..5 {
+            q.push(req(i));
+        }
+        let b = prepare(&mut q, &mut gpu, &reg, "llama-sim", 4)
+            .unwrap().unwrap();
+        assert_eq!(b.requests.len(), 4);
+        assert_eq!(b.artifact_batch, 4);
+        assert_eq!(q.len("llama-sim"), 1);
+        assert!(gpu.mem_in_use() > 0);
+        let back = release(&mut gpu, b);
+        assert_eq!(back.len(), 4);
+        assert_eq!(gpu.mem_in_use(), 0);
+    }
+
+    #[test]
+    fn empty_queue_returns_none() {
+        let reg = registry();
+        let mut gpu = gpu(24 * 1024 * 1024);
+        let mut q = ModelQueues::new();
+        assert!(prepare(&mut q, &mut gpu, &reg, "llama-sim", 4)
+                .unwrap().is_none());
+    }
+
+    #[test]
+    fn oom_halves_batch_and_preserves_order() {
+        let reg = registry();
+        let spec = &reg.entry("llama-sim").unwrap().spec;
+        // capacity fits a 2-row workspace but not 8
+        let cap = spec.batch_workspace_bytes(2) + 1024;
+        let mut gpu = gpu(cap);
+        let mut q = ModelQueues::new();
+        for i in 0..8 {
+            q.push(req(i));
+        }
+        let b = prepare(&mut q, &mut gpu, &reg, "llama-sim", 8)
+            .unwrap().unwrap();
+        assert!(b.requests.len() <= 2, "shrunk to {}", b.requests.len());
+        assert_eq!(b.requests[0].id, 0, "head preserved");
+        // the requeued tail must still be in order behind the batch
+        let rest: Vec<u64> = q.pop_n("llama-sim", 10).iter()
+            .map(|r| r.id).collect();
+        let expect: Vec<u64> = (b.requests.len() as u64..8).collect();
+        assert_eq!(rest, expect);
+    }
+
+    #[test]
+    fn oom_at_one_row_errors_and_requeues() {
+        let reg = registry();
+        let mut gpu = gpu(1024); // nothing fits
+        let mut q = ModelQueues::new();
+        q.push(req(0));
+        assert!(prepare(&mut q, &mut gpu, &reg, "llama-sim", 1).is_err());
+        assert_eq!(q.len("llama-sim"), 1, "request must be requeued");
+    }
+}

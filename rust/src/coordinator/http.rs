@@ -1,0 +1,376 @@
+//! HTTP front-end — the paper's Flask inference API, in Rust.
+//!
+//! A minimal HTTP/1.1 server (std only; no frameworks exist in the
+//! offline crate set) exposing the serving system over the network:
+//!
+//! * `POST /infer`   `{"model": "...", "prompt": "..."}` → queued,
+//!   batched by the configured strategy, executed, answered with the
+//!   generated tokens and timing.  Requests whose SLA expires in the
+//!   queue get `408 Request Timeout` (§III-C3 unfulfilled semantics).
+//! * `GET /stats`    live counters (completed, expired, swaps, util).
+//! * `GET /healthz`  liveness.
+//!
+//! Connection handlers are one thread each (relaxed inference tolerates
+//! thread-per-request); the scheduler runs on the caller's thread, same
+//! queues/strategies/swap manager as the experiment loop.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher;
+use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::rate::RateEstimator;
+use crate::coordinator::request::Request;
+use crate::coordinator::strategy::{strategy_by_name, Decision, ModelView,
+                                   SchedContext};
+use crate::coordinator::swap::SwapManager;
+use crate::gpu::device::SimGpu;
+use crate::gpu::dma::Dir;
+use crate::runtime::Registry;
+use crate::util::json::Json;
+use crate::workload::tokenizer::tokenize;
+
+/// Reply to one inference call.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    /// Served: generated tokens + timings.
+    Done { tokens: Vec<i32>, latency_s: f64, batch: usize },
+    /// SLA expired while queued.
+    Expired,
+}
+
+struct Job {
+    req: Request,
+    reply: mpsc::Sender<Reply>,
+}
+
+/// Live server counters, exported at `GET /stats`.
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub received: AtomicU64,
+    pub completed: AtomicU64,
+    pub expired: AtomicU64,
+    pub rejected: AtomicU64,
+}
+
+impl ServerStats {
+    fn to_json(&self, swaps: u64, util: f64) -> Json {
+        Json::obj(vec![
+            ("received", Json::num(
+                self.received.load(Ordering::Relaxed) as f64)),
+            ("completed", Json::num(
+                self.completed.load(Ordering::Relaxed) as f64)),
+            ("expired", Json::num(
+                self.expired.load(Ordering::Relaxed) as f64)),
+            ("rejected", Json::num(
+                self.rejected.load(Ordering::Relaxed) as f64)),
+            ("swaps", Json::num(swaps as f64)),
+            ("gpu_util", Json::num(util)),
+        ])
+    }
+}
+
+/// Run the HTTP front-end until `shutdown` is set (checked between
+/// scheduler ticks).  Returns total served counts.
+///
+/// `addr` may use port 0; the bound address is reported through
+/// `on_bound` before serving starts (tests use this to learn the port).
+pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
+                shutdown: Arc<AtomicBool>,
+                on_bound: impl FnOnce(std::net::SocketAddr))
+                -> anyhow::Result<ServerStats> {
+    cfg.validate()?;
+    let strategy = strategy_by_name(&cfg.strategy)?;
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+    listener.set_nonblocking(true)?;
+    on_bound(listener.local_addr()?);
+
+    let stats = Arc::new(ServerStats::default());
+    let (tx, rx) = mpsc::channel::<Job>();
+    let start = Instant::now();
+
+    // ---------------- accept loop (thread) -----------------------------
+    let acceptor = {
+        let shutdown = shutdown.clone();
+        let stats = stats.clone();
+        let known: Vec<(String, usize, u32)> = registry.names().iter()
+            .map(|n| {
+                let s = &registry.entry(n).unwrap().spec;
+                (n.clone(), s.prompt_len, s.vocab as u32)
+            }).collect();
+        let next_id = AtomicU64::new(0);
+        std::thread::spawn(move || {
+            while !shutdown.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let tx = tx.clone();
+                        let stats = stats.clone();
+                        let known = known.clone();
+                        let id = next_id.fetch_add(1, Ordering::Relaxed);
+                        let t0 = start;
+                        std::thread::spawn(move || {
+                            let _ = handle_conn(stream, id, t0, &known,
+                                                tx, &stats);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(_) => break,
+                }
+            }
+            // tx drops here, closing the scheduler's channel
+        })
+    };
+
+    // ---------------- scheduler loop (this thread) ---------------------
+    let mut gpu = SimGpu::new(cfg.gpu.clone())?;
+    let mut queues = ModelQueues::new();
+    let mut rates = RateEstimator::default();
+    let mut swap_mgr = SwapManager::new();
+    let mut replies: HashMap<u64, mpsc::Sender<Reply>> = HashMap::new();
+    let now_s = move || start.elapsed().as_secs_f64();
+
+    loop {
+        loop {
+            match rx.try_recv() {
+                Ok(job) => {
+                    rates.on_arrival(&job.req.model, job.req.arrival_s);
+                    replies.insert(job.req.id, job.reply);
+                    queues.push(job.req);
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => break,
+            }
+        }
+        let t = now_s();
+        for r in queues.expire(t, cfg.sla_s) {
+            stats.expired.fetch_add(1, Ordering::Relaxed);
+            if let Some(tx) = replies.remove(&r.id) {
+                let _ = tx.send(Reply::Expired);
+            }
+        }
+        if shutdown.load(Ordering::Relaxed) && queues.is_empty() {
+            break;
+        }
+
+        let views: Vec<ModelView> = queues.nonempty_models().iter()
+            .map(|m| {
+                let entry = registry.entry(m).unwrap();
+                ModelView {
+                    model: m.to_string(),
+                    len: queues.len(m),
+                    oldest_wait_s: queues.head_arrival_s(m)
+                        .map(|a| (t - a).max(0.0)).unwrap_or(0.0),
+                    obs: entry.obs,
+                    rate_rps: rates.rate_rps(m, t),
+                    est_load_s: SwapManager::estimate_load_s(
+                        &gpu, registry, m),
+                    est_exec_s: 0.3,
+                }
+            }).collect();
+        let ctx = SchedContext {
+            now_s: t,
+            resident: swap_mgr.resident().map(|s| s.to_string()),
+            queues: views,
+            sla_s: cfg.sla_s,
+            timeout_s: cfg.timeout_s(),
+        };
+
+        match strategy.decide(&ctx) {
+            Decision::Wait => std::thread::sleep(cfg.tick),
+            Decision::Process { model, take } => {
+                swap_mgr.ensure_resident(&mut gpu, registry, &model)?;
+                let Some(batch) = batcher::prepare(&mut queues, &mut gpu,
+                                                   registry, &model,
+                                                   take)?
+                else {
+                    continue;
+                };
+                let rows: Vec<Vec<i32>> = batch.requests.iter()
+                    .map(|r| r.tokens.clone()).collect();
+                let in_bytes: Vec<u8> = rows.iter().flatten()
+                    .flat_map(|t| t.to_le_bytes()).collect();
+                gpu.io_transfer(Dir::HostToDevice, &in_bytes)?;
+                let rep = registry.execute(&model, &rows)?;
+                gpu.record_compute(rep.elapsed);
+                let complete = now_s();
+                let requests = batcher::release(&mut gpu, batch);
+                for (r, toks) in requests.into_iter()
+                    .zip(rep.tokens.into_iter())
+                {
+                    stats.completed.fetch_add(1, Ordering::Relaxed);
+                    if let Some(tx) = replies.remove(&r.id) {
+                        let _ = tx.send(Reply::Done {
+                            tokens: toks,
+                            latency_s: complete - r.arrival_s,
+                            batch: rep.batch,
+                        });
+                    }
+                }
+            }
+        }
+    }
+
+    swap_mgr.evict(&mut gpu);
+    acceptor.join().ok();
+    Ok(Arc::try_unwrap(stats).unwrap_or_default())
+}
+
+// ---------------------------------------------------------- connection
+
+fn handle_conn(mut stream: TcpStream, id: u64, start: Instant,
+               known: &[(String, usize, u32)], tx: mpsc::Sender<Job>,
+               stats: &ServerStats) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+
+    // request line + headers
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase()
+            .strip_prefix("content-length:")
+            .map(|v| v.trim().to_string())
+        {
+            content_len = v.parse().unwrap_or(0);
+        }
+    }
+
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, "{\"ok\":true}"),
+        ("GET", "/stats") => {
+            let body = stats.to_json(0, 0.0).to_string();
+            respond(&mut stream, 200, &body)
+        }
+        ("POST", "/infer") => {
+            let mut body = vec![0u8; content_len.min(1 << 20)];
+            reader.read_exact(&mut body)?;
+            stats.received.fetch_add(1, Ordering::Relaxed);
+            let j = match Json::parse(std::str::from_utf8(&body)?) {
+                Ok(j) => j,
+                Err(e) => {
+                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    return respond(&mut stream, 400,
+                                   &err_json(&format!("bad JSON: {e}")));
+                }
+            };
+            let model = j.get("model").and_then(|m| m.as_str())
+                .unwrap_or_default().to_string();
+            let prompt = j.get("prompt").and_then(|p| p.as_str())
+                .unwrap_or_default();
+            let Some((_, prompt_len, vocab)) =
+                known.iter().find(|(n, _, _)| *n == model)
+            else {
+                stats.rejected.fetch_add(1, Ordering::Relaxed);
+                return respond(&mut stream, 400,
+                               &err_json(&format!("unknown model \
+                                                   {model:?}")));
+            };
+            let req = Request {
+                id,
+                model: model.clone(),
+                tokens: tokenize(prompt, *prompt_len, *vocab),
+                arrival_s: start.elapsed().as_secs_f64(),
+            };
+            let (rtx, rrx) = mpsc::channel();
+            if tx.send(Job { req, reply: rtx }).is_err() {
+                return respond(&mut stream, 503,
+                               &err_json("server shutting down"));
+            }
+            match rrx.recv_timeout(Duration::from_secs(120)) {
+                Ok(Reply::Done { tokens, latency_s, batch }) => {
+                    let body = Json::obj(vec![
+                        ("model", Json::str(model)),
+                        ("tokens", Json::Arr(tokens.iter()
+                            .map(|&t| Json::num(t as f64)).collect())),
+                        ("latency_s", Json::num(latency_s)),
+                        ("batch", Json::num(batch as f64)),
+                    ]).to_string();
+                    respond(&mut stream, 200, &body)
+                }
+                Ok(Reply::Expired) => respond(
+                    &mut stream, 408,
+                    &err_json("SLA expired before dispatch")),
+                Err(_) => respond(&mut stream, 504,
+                                  &err_json("timed out")),
+            }
+        }
+        _ => respond(&mut stream, 404, &err_json("not found")),
+    }
+}
+
+fn err_json(msg: &str) -> String {
+    Json::obj(vec![("error", Json::str(msg))]).to_string()
+}
+
+fn respond(stream: &mut TcpStream, code: u16, body: &str)
+           -> anyhow::Result<()> {
+    let reason = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        408 => "Request Timeout",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    };
+    write!(stream,
+           "HTTP/1.1 {code} {reason}\r\ncontent-type: application/json\
+            \r\ncontent-length: {}\r\nconnection: close\r\n\r\n{body}",
+           body.len())?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Minimal blocking HTTP client for tests and the load-generator
+/// example: one request per connection.
+pub fn http_call(addr: &std::net::SocketAddr, method: &str, path: &str,
+                 body: Option<&str>) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_read_timeout(Some(Duration::from_secs(130)))?;
+    let body = body.unwrap_or("");
+    write!(stream,
+           "{method} {path} HTTP/1.1\r\nhost: sincere\r\n\
+            content-length: {}\r\nconnection: close\r\n\r\n{body}",
+           body.len())?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut status_line = String::new();
+    reader.read_line(&mut status_line)?;
+    let code: u16 = status_line.split_whitespace().nth(1)
+        .and_then(|c| c.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("bad status line {status_line:?}"))?;
+    let mut content_len = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h)?;
+        if h.trim().is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase()
+            .strip_prefix("content-length:")
+        {
+            content_len = v.trim().parse().unwrap_or(0);
+        }
+    }
+    let mut body = vec![0u8; content_len];
+    reader.read_exact(&mut body)?;
+    Ok((code, String::from_utf8_lossy(&body).into_owned()))
+}

@@ -1,0 +1,22 @@
+//! The serving coordinator — the paper's system contribution (§III).
+//!
+//! Relaxed batch inference against multiple models on one device that
+//! can hold a single model at a time: per-model FIFO queues, pluggable
+//! scheduling strategies (Table I), a swap manager that moves weights
+//! through the (optionally confidential) DMA path, SLA tracking, and
+//! the serve loop tying it together.
+
+pub mod batcher;
+pub mod http;
+pub mod queues;
+pub mod rate;
+pub mod request;
+pub mod server;
+pub mod sla;
+pub mod strategy;
+pub mod swap;
+
+pub use request::{CompletedRequest, Request};
+pub use server::{serve, RunSummary};
+pub use strategy::{strategy_by_name, Decision, SchedContext, Strategy,
+                   STRATEGY_NAMES};

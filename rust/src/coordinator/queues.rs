@@ -1,0 +1,171 @@
+//! Per-model FIFO queues (§III-C4: "inference requests are queued in
+//! order of arrival with one queue for every model").
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::coordinator::request::Request;
+
+/// One FIFO per model, arrival order preserved within each queue.
+#[derive(Debug, Default)]
+pub struct ModelQueues {
+    queues: BTreeMap<String, VecDeque<Request>>,
+}
+
+impl ModelQueues {
+    pub fn new() -> ModelQueues {
+        ModelQueues::default()
+    }
+
+    pub fn push(&mut self, req: Request) {
+        self.queues.entry(req.model.clone()).or_default().push_back(req);
+    }
+
+    /// Pop up to `n` requests from `model`'s queue head.
+    pub fn pop_n(&mut self, model: &str, n: usize) -> Vec<Request> {
+        let Some(q) = self.queues.get_mut(model) else {
+            return Vec::new();
+        };
+        let take = n.min(q.len());
+        q.drain(..take).collect()
+    }
+
+    /// Push requests back to the *front*, preserving their order — used
+    /// when a batch had to shrink (OOM guard).
+    pub fn push_front(&mut self, model: &str, reqs: Vec<Request>) {
+        let q = self.queues.entry(model.to_string()).or_default();
+        for r in reqs.into_iter().rev() {
+            q.push_front(r);
+        }
+    }
+
+    pub fn len(&self, model: &str) -> usize {
+        self.queues.get(model).map(|q| q.len()).unwrap_or(0)
+    }
+
+    pub fn total_len(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_len() == 0
+    }
+
+    /// Arrival time of the head (oldest) request, if any.
+    pub fn head_arrival_s(&self, model: &str) -> Option<f64> {
+        self.queues.get(model).and_then(|q| q.front())
+            .map(|r| r.arrival_s)
+    }
+
+    /// Models with at least one queued request, deterministic order.
+    pub fn nonempty_models(&self) -> Vec<&str> {
+        self.queues.iter().filter(|(_, q)| !q.is_empty())
+            .map(|(m, _)| m.as_str()).collect()
+    }
+
+    /// Drain everything (end-of-run accounting of unserved requests).
+    pub fn drain_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::new();
+        for (_, q) in self.queues.iter_mut() {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
+    /// Drop requests whose SLA has already expired while queued
+    /// (§III-C3: "beyond which they are considered unfulfilled").
+    /// Returns the expired requests for unfulfilled accounting.
+    /// Keeps queues bounded under overload — the paper's mechanism that
+    /// turns CC's slower swaps into lower throughput rather than
+    /// unbounded latency.
+    pub fn expire(&mut self, now_s: f64, sla_s: f64) -> Vec<Request> {
+        let mut out = Vec::new();
+        for (_, q) in self.queues.iter_mut() {
+            // FIFO per queue: expired requests are a prefix
+            while q.front().map(|r| now_s - r.arrival_s > sla_s)
+                .unwrap_or(false)
+            {
+                out.push(q.pop_front().unwrap());
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: &str, at: f64) -> Request {
+        Request { id, model: model.into(), tokens: vec![0; 4],
+                  arrival_s: at }
+    }
+
+    #[test]
+    fn fifo_order_within_model() {
+        let mut q = ModelQueues::new();
+        q.push(req(1, "a", 0.0));
+        q.push(req(2, "b", 0.1));
+        q.push(req(3, "a", 0.2));
+        let got = q.pop_n("a", 10);
+        assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
+        assert_eq!(q.len("a"), 0);
+        assert_eq!(q.len("b"), 1);
+    }
+
+    #[test]
+    fn pop_n_respects_limit() {
+        let mut q = ModelQueues::new();
+        for i in 0..5 {
+            q.push(req(i, "a", i as f64));
+        }
+        assert_eq!(q.pop_n("a", 3).len(), 3);
+        assert_eq!(q.len("a"), 2);
+        assert_eq!(q.pop_n("missing", 3).len(), 0);
+    }
+
+    #[test]
+    fn push_front_preserves_order() {
+        let mut q = ModelQueues::new();
+        q.push(req(3, "a", 3.0));
+        q.push_front("a", vec![req(1, "a", 1.0), req(2, "a", 2.0)]);
+        let ids: Vec<u64> = q.pop_n("a", 10).iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn head_arrival_and_nonempty() {
+        let mut q = ModelQueues::new();
+        assert!(q.head_arrival_s("a").is_none());
+        q.push(req(1, "a", 5.0));
+        q.push(req(2, "a", 6.0));
+        assert_eq!(q.head_arrival_s("a"), Some(5.0));
+        assert_eq!(q.nonempty_models(), vec!["a"]);
+        assert_eq!(q.total_len(), 2);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut q = ModelQueues::new();
+        q.push(req(1, "a", 0.0));
+        q.push(req(2, "b", 0.0));
+        assert_eq!(q.drain_all().len(), 2);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn expire_drops_only_overdue_prefix() {
+        let mut q = ModelQueues::new();
+        q.push(req(1, "a", 0.0));
+        q.push(req(2, "a", 5.0));
+        q.push(req(3, "b", 1.0));
+        // now=9, sla=6: requests older than 9-6=3 expire -> ids 1, 3
+        let dropped: Vec<u64> = q.expire(9.0, 6.0).iter()
+            .map(|r| r.id).collect();
+        assert_eq!(dropped, vec![1, 3]);
+        assert_eq!(q.len("a"), 1);
+        assert_eq!(q.head_arrival_s("a"), Some(5.0));
+        // boundary: exactly at SLA is NOT expired
+        assert!(q.expire(11.0, 6.0).is_empty());
+        assert_eq!(q.expire(11.1, 6.0).len(), 1);
+    }
+}

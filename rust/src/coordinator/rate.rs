@@ -1,0 +1,132 @@
+//! Per-model arrival-rate estimation for SelectBatch (§III-C4: "an
+//! estimate calculated from past request arrival frequency").
+//!
+//! EWMA over inter-arrival gaps: cheap, adapts within a few arrivals,
+//! and degrades gracefully through idle phases by clamping the gap to
+//! the elapsed silence when queried.
+
+use std::collections::HashMap;
+
+/// EWMA inter-arrival estimator per model.
+#[derive(Debug)]
+pub struct RateEstimator {
+    alpha: f64,
+    state: HashMap<String, Ewma>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Ewma {
+    last_arrival_s: f64,
+    mean_gap_s: f64,
+    count: u64,
+}
+
+impl RateEstimator {
+    pub fn new(alpha: f64) -> RateEstimator {
+        assert!((0.0..=1.0).contains(&alpha));
+        RateEstimator { alpha, state: HashMap::new() }
+    }
+
+    /// Record one arrival at `now_s`.
+    pub fn on_arrival(&mut self, model: &str, now_s: f64) {
+        match self.state.get_mut(model) {
+            None => {
+                self.state.insert(model.to_string(), Ewma {
+                    last_arrival_s: now_s,
+                    mean_gap_s: 0.0,
+                    count: 1,
+                });
+            }
+            Some(e) => {
+                let gap = (now_s - e.last_arrival_s).max(1e-6);
+                e.mean_gap_s = if e.count == 1 {
+                    gap
+                } else {
+                    self.alpha * gap + (1.0 - self.alpha) * e.mean_gap_s
+                };
+                e.last_arrival_s = now_s;
+                e.count += 1;
+            }
+        }
+    }
+
+    /// Estimated arrival rate (req/s) for `model` as of `now_s`.
+    /// Returns 0.0 until two arrivals have been seen.
+    ///
+    /// Pure EWMA over inter-arrival gaps ("an estimate calculated from
+    /// past request arrival frequency", §III-C4).  Deliberately NOT
+    /// decayed by current silence: during the post-generation drain (and
+    /// bursty idle phases) the backlog must still be batched at the
+    /// historical rate — a silence-decayed estimate collapses
+    /// SelectBatch to batch-1 swap thrashing.
+    pub fn rate_rps(&self, model: &str, _now_s: f64) -> f64 {
+        let Some(e) = self.state.get(model) else { return 0.0 };
+        if e.count < 2 || e.mean_gap_s <= 0.0 {
+            return 0.0;
+        }
+        1.0 / e.mean_gap_s
+    }
+
+    pub fn arrivals_seen(&self, model: &str) -> u64 {
+        self.state.get(model).map(|e| e.count).unwrap_or(0)
+    }
+}
+
+impl Default for RateEstimator {
+    fn default() -> Self {
+        RateEstimator::new(0.3)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_steady_rate() {
+        let mut est = RateEstimator::new(0.3);
+        // 4 rps steady arrivals
+        for i in 0..100 {
+            est.on_arrival("m", i as f64 * 0.25);
+        }
+        let r = est.rate_rps("m", 25.0);
+        assert!((r - 4.0).abs() < 0.4, "rate {r}");
+    }
+
+    #[test]
+    fn needs_two_arrivals() {
+        let mut est = RateEstimator::new(0.3);
+        assert_eq!(est.rate_rps("m", 0.0), 0.0);
+        est.on_arrival("m", 0.0);
+        assert_eq!(est.rate_rps("m", 1.0), 0.0);
+        est.on_arrival("m", 0.5);
+        assert!(est.rate_rps("m", 0.6) > 0.0);
+    }
+
+    #[test]
+    fn rate_stable_through_silence() {
+        // drain-phase semantics: the historical rate must survive
+        // arbitrary silence so backlog batching stays at size
+        let mut est = RateEstimator::new(0.3);
+        for i in 0..50 {
+            est.on_arrival("m", i as f64 * 0.1); // 10 rps
+        }
+        let fresh = est.rate_rps("m", 5.0);
+        let stale = est.rate_rps("m", 60.0); // 55s of silence
+        assert!((fresh - stale).abs() < 1e-9,
+                "fresh {fresh} != stale {stale}");
+        assert!((fresh - 10.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn models_tracked_independently() {
+        let mut est = RateEstimator::new(0.3);
+        for i in 0..40 {
+            est.on_arrival("fast", i as f64 * 0.1);
+            est.on_arrival("slow", i as f64 * 1.0);
+        }
+        let f = est.rate_rps("fast", 4.0);
+        let s = est.rate_rps("slow", 40.0);
+        assert!(f > 5.0 * s, "fast {f} slow {s}");
+    }
+}

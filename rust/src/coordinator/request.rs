@@ -1,0 +1,68 @@
+//! Request lifecycle types.
+//!
+//! Latency is defined exactly as in §IV-A: "the time elapsed from when
+//! a request is sent by the user until it is dispatched by the server
+//! after completing inference".
+
+/// An inference request, tokenized at ingest.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// Target model family name.
+    pub model: String,
+    /// Tokenized prompt, exactly `prompt_len` ids.
+    pub tokens: Vec<i32>,
+    /// Arrival time, seconds since experiment start.
+    pub arrival_s: f64,
+}
+
+/// A finished request with its measured timeline.
+#[derive(Debug, Clone)]
+pub struct CompletedRequest {
+    pub id: u64,
+    pub model: String,
+    pub arrival_s: f64,
+    /// When the batch containing it started executing.
+    pub exec_start_s: f64,
+    /// When inference finished and the response was dispatched.
+    pub complete_s: f64,
+    /// Artifact batch size it rode in.
+    pub batch: usize,
+    /// Real rows in that batch (<= batch).
+    pub batch_rows: usize,
+    /// Whether the batch required a model swap first.
+    pub caused_swap: bool,
+}
+
+impl CompletedRequest {
+    /// End-to-end latency (the paper's latency metric).
+    pub fn latency_s(&self) -> f64 {
+        self.complete_s - self.arrival_s
+    }
+
+    /// Time spent queued before execution began.
+    pub fn queue_wait_s(&self) -> f64 {
+        self.exec_start_s - self.arrival_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_accounting() {
+        let c = CompletedRequest {
+            id: 1,
+            model: "llama-sim".into(),
+            arrival_s: 10.0,
+            exec_start_s: 12.5,
+            complete_s: 13.0,
+            batch: 8,
+            batch_rows: 5,
+            caused_swap: true,
+        };
+        assert!((c.latency_s() - 3.0).abs() < 1e-12);
+        assert!((c.queue_wait_s() - 2.5).abs() < 1e-12);
+    }
+}

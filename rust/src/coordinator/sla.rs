@@ -1,0 +1,101 @@
+//! SLA accounting (§III-C3): requests must complete within the SLA or
+//! they count as unfulfilled.  Attainment = fraction of *all generated*
+//! requests that completed within the limit — requests still queued at
+//! the end of the run count against attainment, exactly as the paper's
+//! completion rates do.
+
+use crate::coordinator::request::CompletedRequest;
+
+/// Tracks attainment for one run.
+#[derive(Debug, Clone)]
+pub struct SlaTracker {
+    pub sla_s: f64,
+    met: u64,
+    missed_late: u64,
+    missed_unserved: u64,
+}
+
+impl SlaTracker {
+    pub fn new(sla_s: f64) -> SlaTracker {
+        assert!(sla_s > 0.0, "SLA must be positive");
+        SlaTracker { sla_s, met: 0, missed_late: 0, missed_unserved: 0 }
+    }
+
+    /// Record a served request; returns true if it met the SLA.
+    pub fn on_complete(&mut self, c: &CompletedRequest) -> bool {
+        let ok = c.latency_s() <= self.sla_s;
+        if ok {
+            self.met += 1;
+        } else {
+            self.missed_late += 1;
+        }
+        ok
+    }
+
+    /// Record requests never served by the end of the run.
+    pub fn on_unserved(&mut self, n: u64) {
+        self.missed_unserved += n;
+    }
+
+    pub fn met(&self) -> u64 {
+        self.met
+    }
+
+    pub fn missed(&self) -> u64 {
+        self.missed_late + self.missed_unserved
+    }
+
+    pub fn total(&self) -> u64 {
+        self.met + self.missed()
+    }
+
+    /// Attainment in [0, 1] (the paper's completion rate).
+    pub fn attainment(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.met as f64 / self.total() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn done(latency: f64) -> CompletedRequest {
+        CompletedRequest {
+            id: 0,
+            model: "m".into(),
+            arrival_s: 0.0,
+            exec_start_s: latency * 0.8,
+            complete_s: latency,
+            batch: 1,
+            batch_rows: 1,
+            caused_swap: false,
+        }
+    }
+
+    #[test]
+    fn attainment_counts_all_classes() {
+        let mut t = SlaTracker::new(4.0);
+        assert!(t.on_complete(&done(3.0)));
+        assert!(t.on_complete(&done(4.0))); // boundary: met
+        assert!(!t.on_complete(&done(4.01)));
+        t.on_unserved(2);
+        assert_eq!(t.met(), 2);
+        assert_eq!(t.missed(), 3);
+        assert!((t.attainment() - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_run_is_zero() {
+        assert_eq!(SlaTracker::new(1.0).attainment(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "SLA must be positive")]
+    fn zero_sla_rejected() {
+        SlaTracker::new(0.0);
+    }
+}

@@ -1,0 +1,221 @@
+//! Model swap manager: residency state machine + load/unload timing.
+//!
+//! "A single VM with one GPU ... capable of serving one model at a time"
+//! (§III-A): at most one model's weights are resident.  A swap unloads
+//! the current model (cheap, mode-independent) and DMAs the next model's
+//! weight blob through the device's (optionally confidential) transfer
+//! path — the expensive step whose CC overhead drives the paper's
+//! headline results.
+
+use crate::gpu::device::SimGpu;
+use crate::gpu::hbm::HbmBuffer;
+use crate::runtime::Registry;
+
+/// Timing of one `ensure_resident` call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwapReport {
+    /// True if a load (and possibly an unload) actually happened.
+    pub swapped: bool,
+    pub load_s: f64,
+    pub unload_s: f64,
+    /// Crypto share of the load (CC only).
+    pub crypto_s: f64,
+}
+
+/// Per-model load/unload statistics for Fig 3.
+#[derive(Debug, Clone, Default)]
+pub struct SwapStats {
+    pub swap_count: u64,
+    pub total_load_s: f64,
+    pub total_unload_s: f64,
+    pub total_crypto_s: f64,
+    /// (model, load_s) samples in order.
+    pub load_samples: Vec<(String, f64)>,
+}
+
+/// The residency manager.
+pub struct SwapManager {
+    resident: Option<(String, HbmBuffer)>,
+    stats: SwapStats,
+}
+
+impl Default for SwapManager {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SwapManager {
+    pub fn new() -> SwapManager {
+        SwapManager { resident: None, stats: SwapStats::default() }
+    }
+
+    pub fn resident(&self) -> Option<&str> {
+        self.resident.as_ref().map(|(m, _)| m.as_str())
+    }
+
+    pub fn stats(&self) -> &SwapStats {
+        &self.stats
+    }
+
+    /// Make `model` resident, swapping if needed. Returns timing.
+    pub fn ensure_resident(&mut self, gpu: &mut SimGpu, registry: &Registry,
+                           model: &str) -> anyhow::Result<SwapReport> {
+        if let Some((cur, _)) = &self.resident {
+            if cur == model {
+                return Ok(SwapReport::default());
+            }
+        }
+        let mut report = SwapReport { swapped: true, ..Default::default() };
+
+        // unload current (paper: 4–10 ms, similar in both modes)
+        if let Some((_, buf)) = self.resident.take() {
+            report.unload_s = gpu.unload(buf).as_secs_f64();
+            self.stats.total_unload_s += report.unload_s;
+        }
+
+        // load next: weights blob through the (CC) DMA path
+        let entry = registry.entry(model)?;
+        let (buf, rep) = gpu.upload(&entry.weights.raw)
+            .map_err(|e| anyhow::anyhow!("loading {model}: {e}"))?;
+        report.load_s = rep.elapsed.as_secs_f64();
+        report.crypto_s = rep.crypto.as_secs_f64();
+
+        self.resident = Some((model.to_string(), buf));
+        self.stats.swap_count += 1;
+        self.stats.total_load_s += report.load_s;
+        self.stats.total_crypto_s += report.crypto_s;
+        self.stats.load_samples.push((model.to_string(), report.load_s));
+        Ok(report)
+    }
+
+    /// Estimated load time for `model` in the device's mode — feeds the
+    /// SelectBatch `desired_latency` term.
+    pub fn estimate_load_s(gpu: &SimGpu, registry: &Registry, model: &str)
+                           -> f64 {
+        let Ok(entry) = registry.entry(model) else { return 0.0 };
+        let bytes = entry.spec.weight_bytes() as f64;
+        let bw = match gpu.mode() {
+            crate::gpu::CcMode::On => gpu.config().bw_cc,
+            crate::gpu::CcMode::Off => gpu.config().bw_plain,
+        };
+        bytes / bw
+    }
+
+    /// Drop residency (end of run), freeing device memory.
+    pub fn evict(&mut self, gpu: &mut SimGpu) {
+        if let Some((_, buf)) = self.resident.take() {
+            gpu.unload(buf);
+        }
+    }
+}
+
+/// Mean load seconds per model from collected samples (Fig 3 rows).
+pub fn mean_load_by_model(stats: &SwapStats)
+                          -> Vec<(String, f64, usize)> {
+    let mut agg: std::collections::BTreeMap<String, (f64, usize)> =
+        Default::default();
+    for (m, s) in &stats.load_samples {
+        let e = agg.entry(m.clone()).or_default();
+        e.0 += s;
+        e.1 += 1;
+    }
+    agg.into_iter().map(|(m, (sum, n))| (m, sum / n as f64, n)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::device::{GpuConfig, SimGpu};
+    use crate::gpu::CcMode;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn registry() -> Registry {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        Registry::load(&m,
+                       &["llama-sim".to_string(), "gemma-sim".to_string()],
+                       &[1]).unwrap()
+    }
+
+    fn gpu() -> SimGpu {
+        SimGpu::new(GpuConfig { no_throttle: true, ..Default::default() })
+            .unwrap()
+    }
+
+    #[test]
+    fn residency_state_machine() {
+        let reg = registry();
+        let mut gpu = gpu();
+        let mut sm = SwapManager::new();
+        assert_eq!(sm.resident(), None);
+
+        let r1 = sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        assert!(r1.swapped && r1.load_s > 0.0 && r1.unload_s == 0.0);
+        assert_eq!(sm.resident(), Some("llama-sim"));
+
+        // idempotent
+        let r2 = sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        assert!(!r2.swapped && r2.load_s == 0.0);
+        assert_eq!(sm.stats().swap_count, 1);
+
+        // swap unloads the old model
+        let r3 = sm.ensure_resident(&mut gpu, &reg, "gemma-sim").unwrap();
+        assert!(r3.swapped);
+        assert_eq!(sm.resident(), Some("gemma-sim"));
+        assert_eq!(sm.stats().swap_count, 2);
+        // only gemma resident -> memory in use == its weights
+        assert_eq!(gpu.mem_in_use(),
+                   reg.entry("gemma-sim").unwrap().spec.weight_bytes());
+    }
+
+    #[test]
+    fn unknown_model_fails_cleanly() {
+        let reg = registry();
+        let mut gpu = gpu();
+        let mut sm = SwapManager::new();
+        assert!(sm.ensure_resident(&mut gpu, &reg, "nope").is_err());
+        assert_eq!(sm.resident(), None, "failed swap must not set resident");
+    }
+
+    #[test]
+    fn evict_frees() {
+        let reg = registry();
+        let mut gpu = gpu();
+        let mut sm = SwapManager::new();
+        sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        sm.evict(&mut gpu);
+        assert_eq!(sm.resident(), None);
+        assert_eq!(gpu.mem_in_use(), 0);
+    }
+
+    #[test]
+    fn load_estimate_scales_with_mode() {
+        let reg = registry();
+        let gpu_plain = gpu();
+        let est_plain =
+            SwapManager::estimate_load_s(&gpu_plain, &reg, "llama-sim");
+        let gpu_cc = SimGpu::new(GpuConfig {
+            mode: CcMode::On, no_throttle: true, ..Default::default()
+        }).unwrap();
+        let est_cc = SwapManager::estimate_load_s(&gpu_cc, &reg,
+                                                  "llama-sim");
+        assert!(est_cc > 2.0 * est_plain,
+                "cc estimate {est_cc} vs plain {est_plain}");
+    }
+
+    #[test]
+    fn mean_load_by_model_aggregates() {
+        let mut stats = SwapStats::default();
+        stats.load_samples = vec![
+            ("a".into(), 1.0), ("a".into(), 3.0), ("b".into(), 2.0)];
+        let rows = mean_load_by_model(&stats);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0], ("a".to_string(), 2.0, 2));
+        assert_eq!(rows[1], ("b".to_string(), 2.0, 1));
+    }
+}

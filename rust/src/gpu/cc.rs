@@ -1,0 +1,286 @@
+//! Confidential-computing session: attestation + DMA sealing.
+//!
+//! Models the H100 CC-mode data path (Fig 1 of the paper): after an
+//! SPDM-style attested key exchange between the CVM and the GPU, every
+//! CPU↔GPU transfer is staged through *bounce buffers* and encrypted,
+//! because the PCIe link is visible to the untrusted hypervisor.
+//!
+//! The crypto is real (AES-128-CTR + HMAC-SHA256 encrypt-then-MAC over
+//! actual buffers) so CC overhead has the right shape — linear in bytes,
+//! CPU-bound — rather than being a fudge factor.  The *attestation* is
+//! simulated: measurements are SHA-256 digests of fixed "firmware"
+//! strings, and verification checks them against golden values, standing
+//! in for the NVIDIA RIM service round-trip.
+
+use aes::cipher::{BlockEncrypt, KeyInit};
+use aes::Aes128;
+use hmac::{Hmac, Mac};
+use sha2::{Digest, Sha256};
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Byte length of the HMAC tag appended to each sealed chunk.
+pub const TAG_LEN: usize = 32;
+/// Byte length of the per-chunk nonce prepended to each sealed chunk.
+pub const NONCE_LEN: usize = 8;
+
+/// Simulated GPU identity: what the device "measures" at secure boot.
+#[derive(Debug, Clone)]
+pub struct DeviceEvidence {
+    /// SHA-256 of the (simulated) VBIOS/firmware image.
+    pub firmware_digest: [u8; 32],
+    /// SHA-256 of the (simulated) driver blob.
+    pub driver_digest: [u8; 32],
+    /// Attestation nonce echoed back, proving freshness.
+    pub nonce: [u8; 32],
+}
+
+const SIM_FIRMWARE: &[u8] = b"sincere-sim-h100-vbios-96.00.30.00.01";
+const SIM_DRIVER: &[u8] = b"sincere-sim-driver-550.54.14";
+
+fn digest(data: &[u8]) -> [u8; 32] {
+    let mut h = Sha256::new();
+    h.update(data);
+    h.finalize().into()
+}
+
+/// Golden measurements the verifier expects (RIM stand-in).
+pub fn golden_measurements() -> ([u8; 32], [u8; 32]) {
+    (digest(SIM_FIRMWARE), digest(SIM_DRIVER))
+}
+
+/// Simulated secure-boot measurement + evidence generation.
+pub fn collect_evidence(nonce: [u8; 32]) -> DeviceEvidence {
+    DeviceEvidence {
+        firmware_digest: digest(SIM_FIRMWARE),
+        driver_digest: digest(SIM_DRIVER),
+        nonce,
+    }
+}
+
+/// Verify evidence against golden values; returns the attestation
+/// transcript hash that is mixed into the session key.
+pub fn verify_evidence(ev: &DeviceEvidence, nonce: [u8; 32])
+                       -> anyhow::Result<[u8; 32]> {
+    let (fw, drv) = golden_measurements();
+    anyhow::ensure!(ev.firmware_digest == fw, "firmware measurement mismatch");
+    anyhow::ensure!(ev.driver_digest == drv, "driver measurement mismatch");
+    anyhow::ensure!(ev.nonce == nonce, "stale attestation nonce");
+    let mut h = Sha256::new();
+    h.update(ev.firmware_digest);
+    h.update(ev.driver_digest);
+    h.update(ev.nonce);
+    Ok(h.finalize().into())
+}
+
+/// HKDF-style expansion over HMAC-SHA256 (extract-then-expand, one block).
+fn hkdf(ikm: &[u8], salt: &[u8], info: &[u8]) -> [u8; 32] {
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(salt).unwrap();
+    mac.update(ikm);
+    let prk = mac.finalize().into_bytes();
+    let mut mac = <HmacSha256 as Mac>::new_from_slice(&prk).unwrap();
+    mac.update(info);
+    mac.update(&[0x01]);
+    mac.finalize().into_bytes().into()
+}
+
+/// An established CC session: the keys protecting the PCIe link.
+pub struct CcSession {
+    enc: Aes128,
+    mac_key: [u8; 32],
+    /// Monotonic chunk counter — nonce uniqueness across the session.
+    seq: std::cell::Cell<u64>,
+}
+
+impl CcSession {
+    /// Run the (simulated) SPDM handshake and derive session keys.
+    ///
+    /// `host_secret` stands in for the CVM-side DH share; mixing in the
+    /// attestation transcript binds keys to verified measurements.
+    pub fn establish(host_secret: u64) -> anyhow::Result<CcSession> {
+        let nonce = digest(&host_secret.to_le_bytes());
+        let evidence = collect_evidence(nonce);
+        let transcript = verify_evidence(&evidence, nonce)?;
+        let ikm = [&host_secret.to_le_bytes()[..], &transcript[..]].concat();
+        let enc_key = hkdf(&ikm, b"sincere-cc-salt", b"pcie-enc");
+        let mac_key = hkdf(&ikm, b"sincere-cc-salt", b"pcie-mac");
+        Ok(CcSession {
+            enc: Aes128::new_from_slice(&enc_key[..16]).unwrap(),
+            mac_key,
+            seq: std::cell::Cell::new(0),
+        })
+    }
+
+    fn keystream_xor(&self, nonce: u64, data: &mut [u8]) {
+        // AES-128-CTR: counter block = nonce || block index.  Counter
+        // blocks are encrypted in batches of 8 so the AES units pipeline
+        // (measured ~2.3x over block-at-a-time on this host, §Perf).
+        const PAR: usize = 8;
+        let mut ctr = [aes::Block::default(); PAR];
+        let mut i = 0u64;
+        let mut off = 0usize;
+        while off < data.len() {
+            let n = ((data.len() - off) + 15) / 16;
+            let n = n.min(PAR);
+            for (j, blk) in ctr[..n].iter_mut().enumerate() {
+                blk[..8].copy_from_slice(&nonce.to_le_bytes());
+                blk[8..].copy_from_slice(&(i + j as u64).to_le_bytes());
+            }
+            self.enc.encrypt_blocks(&mut ctr[..n]);
+            for blk in &ctr[..n] {
+                let end = (off + 16).min(data.len());
+                for (b, k) in data[off..end].iter_mut().zip(blk.iter()) {
+                    *b ^= k;
+                }
+                off = end;
+            }
+            i += n as u64;
+        }
+    }
+
+    fn tag(&self, nonce: u64, ct: &[u8]) -> [u8; TAG_LEN] {
+        let mut mac =
+            <HmacSha256 as Mac>::new_from_slice(&self.mac_key).unwrap();
+        mac.update(&nonce.to_le_bytes());
+        mac.update(ct);
+        mac.finalize().into_bytes().into()
+    }
+
+    /// Seal one bounce-buffer chunk into `out` (cleared first):
+    /// `nonce || ciphertext || tag`.  Allocation-free when `out` has
+    /// capacity — the DMA engine reuses one bounce buffer per transfer.
+    pub fn seal_into(&self, plaintext: &[u8], out: &mut Vec<u8>) {
+        let nonce = self.seq.get();
+        self.seq.set(nonce + 1);
+        out.clear();
+        out.reserve(NONCE_LEN + plaintext.len() + TAG_LEN);
+        out.extend_from_slice(&nonce.to_le_bytes());
+        out.extend_from_slice(plaintext);
+        self.keystream_xor(nonce, &mut out[NONCE_LEN..]);
+        let tag = self.tag(nonce, &out[NONCE_LEN..]);
+        out.extend_from_slice(&tag);
+    }
+
+    /// Seal one chunk (allocating convenience wrapper).
+    pub fn seal(&self, plaintext: &[u8]) -> Vec<u8> {
+        let mut out = Vec::new();
+        self.seal_into(plaintext, &mut out);
+        out
+    }
+
+    /// Open a sealed chunk directly into `dst` (the "device" side of the
+    /// bounce buffer), authenticating before decrypting.
+    pub fn open_into(&self, sealed: &[u8], dst: &mut [u8])
+                     -> anyhow::Result<()> {
+        anyhow::ensure!(sealed.len() >= NONCE_LEN + TAG_LEN,
+                        "sealed chunk too short ({} bytes)", sealed.len());
+        let nonce = u64::from_le_bytes(sealed[..NONCE_LEN].try_into()?);
+        let (ct, tag) = sealed[NONCE_LEN..]
+            .split_at(sealed.len() - NONCE_LEN - TAG_LEN);
+        anyhow::ensure!(dst.len() == ct.len(),
+                        "open_into dst {} != ct {}", dst.len(), ct.len());
+        let want = self.tag(nonce, ct);
+        // constant-time compare
+        let mut diff = 0u8;
+        for (a, b) in want.iter().zip(tag) {
+            diff |= a ^ b;
+        }
+        anyhow::ensure!(diff == 0, "DMA authentication failure (tampered \
+                                    bounce buffer)");
+        dst.copy_from_slice(ct);
+        self.keystream_xor(nonce, dst);
+        Ok(())
+    }
+
+    /// Open a sealed chunk (allocating convenience wrapper).
+    pub fn open(&self, sealed: &[u8]) -> anyhow::Result<Vec<u8>> {
+        anyhow::ensure!(sealed.len() >= NONCE_LEN + TAG_LEN,
+                        "sealed chunk too short ({} bytes)", sealed.len());
+        let mut pt = vec![0u8; sealed.len() - NONCE_LEN - TAG_LEN];
+        self.open_into(sealed, &mut pt)?;
+        Ok(pt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session() -> CcSession {
+        CcSession::establish(0xA11CE).unwrap()
+    }
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let s = session();
+        for len in [0usize, 1, 15, 16, 17, 1000, 65536] {
+            let data: Vec<u8> = (0..len).map(|i| (i * 7) as u8).collect();
+            let sealed = s.seal(&data);
+            assert_eq!(sealed.len(), NONCE_LEN + len + TAG_LEN);
+            assert_eq!(s.open(&sealed).unwrap(), data);
+        }
+    }
+
+    #[test]
+    fn ciphertext_differs_from_plaintext() {
+        let s = session();
+        let data = vec![0xABu8; 256];
+        let sealed = s.seal(&data);
+        assert_ne!(&sealed[NONCE_LEN..NONCE_LEN + 256], &data[..]);
+    }
+
+    #[test]
+    fn nonce_reuse_avoided() {
+        let s = session();
+        let a = s.seal(b"same plaintext");
+        let b = s.seal(b"same plaintext");
+        assert_ne!(a, b, "two seals of same data must differ (fresh nonce)");
+    }
+
+    #[test]
+    fn tamper_detected() {
+        let s = session();
+        let mut sealed = s.seal(b"model weights chunk");
+        let mid = sealed.len() / 2;
+        sealed[mid] ^= 0x01;
+        assert!(s.open(&sealed).is_err());
+    }
+
+    #[test]
+    fn truncation_detected() {
+        let s = session();
+        let sealed = s.seal(b"data");
+        assert!(s.open(&sealed[..sealed.len() - 1]).is_err());
+        assert!(s.open(&sealed[..NONCE_LEN]).is_err());
+    }
+
+    #[test]
+    fn attestation_rejects_bad_measurement() {
+        let nonce = [7u8; 32];
+        let mut ev = collect_evidence(nonce);
+        ev.firmware_digest[0] ^= 1;
+        assert!(verify_evidence(&ev, nonce).is_err());
+    }
+
+    #[test]
+    fn attestation_rejects_stale_nonce() {
+        let ev = collect_evidence([1u8; 32]);
+        assert!(verify_evidence(&ev, [2u8; 32]).is_err());
+    }
+
+    #[test]
+    fn sessions_with_same_secret_interoperate() {
+        let a = CcSession::establish(42).unwrap();
+        let b = CcSession::establish(42).unwrap();
+        let sealed = a.seal(b"cross-session");
+        assert_eq!(b.open(&sealed).unwrap(), b"cross-session");
+    }
+
+    #[test]
+    fn sessions_with_different_secrets_reject() {
+        let a = CcSession::establish(1).unwrap();
+        let b = CcSession::establish(2).unwrap();
+        let sealed = a.seal(b"cross-session");
+        assert!(b.open(&sealed).is_err());
+    }
+}

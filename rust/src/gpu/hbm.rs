@@ -1,0 +1,222 @@
+//! Device-memory (HBM) allocator with capacity + fragmentation stats.
+//!
+//! First-fit free-list allocator over a byte range.  Backs the paper's
+//! memory behaviour: batch-size profiling grows batches "until the GPU
+//! runs out of memory" (§III-D2) — the OOM comes from here — and the
+//! monitor CSV reports allocation, peak usage and fragmentation ratio
+//! (§V metrics list).
+
+/// An allocation handle into simulated HBM.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HbmBuffer {
+    pub offset: u64,
+    pub len: u64,
+}
+
+/// Allocation failure — the GPU is out of memory.
+#[derive(Debug, thiserror::Error)]
+#[error("HBM OOM: requested {requested} B, free {free} B (largest block {largest} B) of {capacity} B")]
+pub struct HbmOom {
+    pub requested: u64,
+    pub free: u64,
+    pub largest: u64,
+    pub capacity: u64,
+}
+
+/// First-fit free-list allocator.
+#[derive(Debug)]
+pub struct HbmAllocator {
+    capacity: u64,
+    /// Sorted, coalesced (offset, len) free extents.
+    free: Vec<(u64, u64)>,
+    in_use: u64,
+    peak: u64,
+    allocs: u64,
+    frees: u64,
+}
+
+impl HbmAllocator {
+    pub fn new(capacity: u64) -> HbmAllocator {
+        HbmAllocator {
+            capacity,
+            free: vec![(0, capacity)],
+            in_use: 0,
+            peak: 0,
+            allocs: 0,
+            frees: 0,
+        }
+    }
+
+    /// Allocate `len` bytes, first-fit.
+    pub fn alloc(&mut self, len: u64) -> Result<HbmBuffer, HbmOom> {
+        assert!(len > 0, "zero-length HBM allocation");
+        for i in 0..self.free.len() {
+            let (off, flen) = self.free[i];
+            if flen >= len {
+                if flen == len {
+                    self.free.remove(i);
+                } else {
+                    self.free[i] = (off + len, flen - len);
+                }
+                self.in_use += len;
+                self.peak = self.peak.max(self.in_use);
+                self.allocs += 1;
+                return Ok(HbmBuffer { offset: off, len });
+            }
+        }
+        Err(HbmOom {
+            requested: len,
+            free: self.free_bytes(),
+            largest: self.largest_free(),
+            capacity: self.capacity,
+        })
+    }
+
+    /// Return a buffer to the free list, coalescing neighbours.
+    pub fn free(&mut self, buf: HbmBuffer) {
+        debug_assert!(buf.offset + buf.len <= self.capacity);
+        let pos = self.free.partition_point(|&(o, _)| o < buf.offset);
+        // guard against double-free overlapping an existing extent
+        if let Some(&(o, l)) = self.free.get(pos) {
+            assert!(buf.offset + buf.len <= o,
+                    "HBM double free at {}..{} overlaps free {}..{}",
+                    buf.offset, buf.offset + buf.len, o, o + l);
+        }
+        if pos > 0 {
+            let (o, l) = self.free[pos - 1];
+            assert!(o + l <= buf.offset,
+                    "HBM double free at {} inside free extent", buf.offset);
+        }
+        self.free.insert(pos, (buf.offset, buf.len));
+        self.in_use -= buf.len;
+        self.frees += 1;
+        self.coalesce();
+    }
+
+    fn coalesce(&mut self) {
+        let mut i = 0;
+        while i + 1 < self.free.len() {
+            let (o1, l1) = self.free[i];
+            let (o2, l2) = self.free[i + 1];
+            if o1 + l1 == o2 {
+                self.free[i] = (o1, l1 + l2);
+                self.free.remove(i + 1);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    pub fn in_use(&self) -> u64 {
+        self.in_use
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn free_bytes(&self) -> u64 {
+        self.free.iter().map(|&(_, l)| l).sum()
+    }
+
+    pub fn largest_free(&self) -> u64 {
+        self.free.iter().map(|&(_, l)| l).max().unwrap_or(0)
+    }
+
+    /// Fragmentation ratio in [0, 1]: 1 − largest_free / total_free.
+    /// 0 when free space is one extent (or none).
+    pub fn fragmentation(&self) -> f64 {
+        let total = self.free_bytes();
+        if total == 0 {
+            return 0.0;
+        }
+        1.0 - self.largest_free() as f64 / total as f64
+    }
+
+    pub fn alloc_count(&self) -> u64 {
+        self.allocs
+    }
+
+    pub fn free_count(&self) -> u64 {
+        self.frees
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_roundtrip() {
+        let mut h = HbmAllocator::new(1000);
+        let a = h.alloc(400).unwrap();
+        let b = h.alloc(600).unwrap();
+        assert_eq!(h.in_use(), 1000);
+        assert!(h.alloc(1).is_err());
+        h.free(a);
+        h.free(b);
+        assert_eq!(h.in_use(), 0);
+        assert_eq!(h.free_bytes(), 1000);
+        assert_eq!(h.largest_free(), 1000, "must coalesce");
+        assert_eq!(h.fragmentation(), 0.0);
+    }
+
+    #[test]
+    fn oom_reports_details() {
+        let mut h = HbmAllocator::new(100);
+        let _a = h.alloc(60).unwrap();
+        let err = h.alloc(50).unwrap_err();
+        assert_eq!(err.requested, 50);
+        assert_eq!(err.free, 40);
+        assert_eq!(err.capacity, 100);
+    }
+
+    #[test]
+    fn fragmentation_tracked() {
+        let mut h = HbmAllocator::new(300);
+        let a = h.alloc(100).unwrap();
+        let b = h.alloc(100).unwrap();
+        let _c = h.alloc(100).unwrap();
+        h.free(a); // hole at 0..100
+        h.free(b); // adjacent -> coalesce to 0..200
+        assert_eq!(h.largest_free(), 200);
+        assert_eq!(h.fragmentation(), 0.0);
+
+        let d = h.alloc(150).unwrap(); // splits the hole
+        assert_eq!(d.offset, 0);
+        // free extents: 150..200 (50). frag still 0 (one extent)
+        assert_eq!(h.free_bytes(), 50);
+    }
+
+    #[test]
+    fn peak_is_monotonic() {
+        let mut h = HbmAllocator::new(100);
+        let a = h.alloc(80).unwrap();
+        h.free(a);
+        let _b = h.alloc(10).unwrap();
+        assert_eq!(h.peak(), 80);
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_detected() {
+        let mut h = HbmAllocator::new(100);
+        let a = h.alloc(50).unwrap();
+        h.free(a);
+        h.free(a);
+    }
+
+    #[test]
+    fn first_fit_reuses_holes() {
+        let mut h = HbmAllocator::new(1000);
+        let a = h.alloc(100).unwrap();
+        let _b = h.alloc(100).unwrap();
+        h.free(a);
+        let c = h.alloc(50).unwrap();
+        assert_eq!(c.offset, 0, "first fit should reuse the hole");
+    }
+}

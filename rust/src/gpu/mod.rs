@@ -1,0 +1,63 @@
+//! The simulated confidential GPU (H100 stand-in).
+//!
+//! The paper's performance story is entirely about *where device time
+//! goes*: encrypted model-load DMA (CC ≫ No-CC, Fig 3), inference
+//! compute vs batch size (Fig 4), and idle/scheduling gaps (Fig 7).
+//! This module reproduces each component with real work:
+//!
+//! * [`hbm`] — device-memory allocator with capacity/fragmentation
+//!   accounting (the OOM boundary that ends batch-size profiling).
+//! * [`cc`] — the confidential-computing session: simulated SPDM-style
+//!   attestation, HKDF key schedule, and AES-128-CTR + HMAC-SHA256
+//!   bounce-buffer sealing of every DMA transfer (H100 CC mode's
+//!   encrypted PCIe path).
+//! * [`dma`] — the transfer engine that actually moves (and in CC mode
+//!   actually encrypts/decrypts) every model byte through fixed-size
+//!   bounce buffers, under a configurable PCIe bandwidth model.
+//! * [`device`] — `SimGpu`, tying the above together with busy/idle
+//!   occupancy accounting (the GPU-utilization metric of Fig 7).
+
+pub mod cc;
+pub mod device;
+pub mod dma;
+pub mod hbm;
+
+/// Confidential-computing mode of the device (the paper's CC / No-CC).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CcMode {
+    /// H100 CC mode: attested init, every DMA sealed through bounce
+    /// buffers.
+    On,
+    /// Plain mode: raw DMA.
+    Off,
+}
+
+impl CcMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            CcMode::On => "cc",
+            CcMode::Off => "no-cc",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<CcMode> {
+        match s {
+            "cc" | "on" | "CC" => Ok(CcMode::On),
+            "no-cc" | "nocc" | "off" | "No-CC" => Ok(CcMode::Off),
+            other => anyhow::bail!("unknown CC mode {other:?} (cc|no-cc)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_roundtrip() {
+        assert_eq!(CcMode::parse("cc").unwrap(), CcMode::On);
+        assert_eq!(CcMode::parse("no-cc").unwrap(), CcMode::Off);
+        assert_eq!(CcMode::parse(CcMode::On.as_str()).unwrap(), CcMode::On);
+        assert!(CcMode::parse("tdx").is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! # sincere — relaxed batch LLM inference on a (simulated) confidential GPU
+//!
+//! Reproduction of *“Performance of Confidential Computing GPUs”*
+//! (Martínez Ibarra et al., IEEE cs.PF 2025): a single-VM, single-GPU
+//! serving system that multiplexes several LLMs on one device, swapping
+//! models in and out of GPU memory under relaxed-inference SLAs, and the
+//! CC-vs-No-CC comparison built on top of it.
+//!
+//! The crate is Layer 3 of a three-layer stack:
+//!
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/`), the
+//!   transformer hot path, lowered at build time.
+//! * **Layer 2** — the JAX decoder-only transformer
+//!   (`python/compile/model.py`), AOT-lowered per (family, batch size) to
+//!   HLO text artifacts.
+//! * **Layer 3** — this crate: the PJRT runtime that compiles and executes
+//!   those artifacts, the confidential-GPU device model (HBM allocator,
+//!   DMA engine, AES-CTR+HMAC bounce buffers, attestation), the paper's
+//!   scheduler/batcher/swap-manager, traffic generation, metrics, and a
+//!   calibrated discrete-event mode for full-grid sweeps.
+//!
+//! Python never runs at serve time: once `make artifacts` has produced
+//! `artifacts/`, the `sincere` binary is self-contained.
+//!
+//! See `DESIGN.md` for the paper-to-module map and `EXPERIMENTS.md` for
+//! the reproduced tables and figures.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod metrics;
+pub mod runtime;
+pub mod sim;
+pub mod traffic;
+pub mod util;
+pub mod workload;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

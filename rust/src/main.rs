@@ -1,0 +1,348 @@
+//! `sincere` — the serving coordinator CLI.
+//!
+//! Subcommands (the paper's workflow, §III-A):
+//!
+//! * `profile` — measure model load/unload (Fig 3) and per-batch
+//!   execution (Fig 4); writes `results/cost_model.json` and sets OBS.
+//! * `serve` — run one serving experiment for real (one grid cell).
+//! * `sweep` — run the full evaluation grid in calibrated DES mode.
+//! * `report` — render paper-style tables from saved summaries.
+//! * `gen-traffic` — emit an arrival trace (jsonl) for inspection.
+//! * `models` — print the Table II analogue from the manifest.
+//!
+//! Options are `--key value` pairs; see `config::RunConfig::set`.
+
+use std::path::{Path, PathBuf};
+
+use sincere::config::RunConfig;
+use sincere::coordinator::{serve, STRATEGY_NAMES};
+use sincere::gpu::CcMode;
+use sincere::metrics::report;
+use sincere::runtime::{Manifest, Registry};
+use sincere::sim::{simulate, CostModel};
+use sincere::traffic::{pattern_by_name, PATTERN_NAMES};
+use sincere::util::json::Json;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: Vec<String>) -> anyhow::Result<()> {
+    let Some((cmd, rest)) = args.split_first() else {
+        print_usage();
+        return Ok(());
+    };
+    let mut cfg = RunConfig::default();
+    let rest = apply_flags(&mut cfg, rest)?;
+    anyhow::ensure!(rest.is_empty(), "unexpected arguments: {rest:?}");
+
+    match cmd.as_str() {
+        "serve" => cmd_serve(cfg),
+        "serve-http" => cmd_serve_http(cfg),
+        "profile" => cmd_profile(cfg),
+        "sweep" => cmd_sweep(cfg),
+        "report" => cmd_report(cfg),
+        "gen-traffic" => cmd_gen_traffic(cfg),
+        "models" => cmd_models(cfg),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?}; try `help`"),
+    }
+}
+
+/// Parse `--key value` flags into the config; `--config file.json` loads
+/// a JSON config first.  Returns leftover positional args.
+fn apply_flags(cfg: &mut RunConfig, args: &[String])
+               -> anyhow::Result<Vec<String>> {
+    let mut rest = Vec::new();
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        if let Some(key) = a.strip_prefix("--") {
+            let value = it.next().ok_or_else(
+                || anyhow::anyhow!("--{key} needs a value"))?;
+            if key == "config" {
+                cfg.apply_json_file(Path::new(value))?;
+            } else {
+                cfg.set(key, value)?;
+            }
+        } else {
+            rest.push(a.clone());
+        }
+    }
+    Ok(rest)
+}
+
+fn results_dir(cfg: &RunConfig) -> PathBuf {
+    cfg.results_dir.clone().unwrap_or_else(|| PathBuf::from("results"))
+}
+
+/// Load the registry and apply profiled OBS values if a cost model is
+/// cached on disk.
+fn load_registry(cfg: &RunConfig) -> anyhow::Result<(Manifest, Registry)> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    eprintln!("[sincere] compiling executables \
+               (families={:?}, batches={:?}) ...",
+              if cfg.models.is_empty() { manifest.family_names() }
+              else { cfg.models.clone() },
+              cfg.batch_sizes);
+    let mut registry = Registry::load(&manifest, &cfg.models,
+                                      &cfg.batch_sizes)?;
+    eprintln!("[sincere] compiled in {:.1}s",
+              registry.total_compile_time.as_secs_f64());
+    let cm_path = results_dir(cfg).join("cost_model.json");
+    if cm_path.exists() {
+        let cm = CostModel::load(&cm_path)?;
+        for name in registry.names() {
+            if let Ok(mc) = cm.costs(&name) {
+                let _ = registry.set_obs(&name, mc.obs);
+            }
+        }
+        eprintln!("[sincere] applied OBS from {cm_path:?}");
+    }
+    Ok((manifest, registry))
+}
+
+// ------------------------------------------------------------------ serve
+
+fn cmd_serve(mut cfg: RunConfig) -> anyhow::Result<()> {
+    if cfg.results_dir.is_none() {
+        cfg.results_dir = Some(PathBuf::from("results"));
+    }
+    if cfg.label == "run" {
+        cfg.label = cfg.cell_label();
+    }
+    let (_manifest, registry) = load_registry(&cfg)?;
+    eprintln!("[sincere] serving: {}", cfg.cell_label());
+    let (summary, _rec) = serve(&cfg, &registry)?;
+    println!("{}", summary.brief());
+    println!("{}", summary.to_json());
+    Ok(())
+}
+
+// ------------------------------------------------------------- serve-http
+
+/// Long-running network front-end (the paper's Flask API analogue):
+/// `POST /infer`, `GET /stats`, `GET /healthz`.  Listens on
+/// `SINCERE_HTTP_ADDR` (default 127.0.0.1:8080); stop with Ctrl-C.
+fn cmd_serve_http(cfg: RunConfig) -> anyhow::Result<()> {
+    let addr = std::env::var("SINCERE_HTTP_ADDR")
+        .unwrap_or_else(|_| "127.0.0.1:8080".to_string());
+    let (_manifest, registry) = load_registry(&cfg)?;
+    let shutdown = std::sync::Arc::new(
+        std::sync::atomic::AtomicBool::new(false));
+    eprintln!("[sincere] http front-end on {addr} (mode={}, strategy={},                sla={}s)", cfg.mode.as_str(), cfg.strategy, cfg.sla_s);
+    let stats = sincere::coordinator::http::run_http(
+        &cfg, &registry, &addr, shutdown, |bound| {
+            eprintln!("[sincere] listening on {bound}");
+        })?;
+    eprintln!("[sincere] served {} requests",
+              stats.completed.load(std::sync::atomic::Ordering::Relaxed));
+    Ok(())
+}
+
+// ---------------------------------------------------------------- profile
+
+fn cmd_profile(cfg: RunConfig) -> anyhow::Result<()> {
+    let (_manifest, registry) = load_registry(&cfg)?;
+    eprintln!("[sincere] profiling loads + batches (this sleeps through \
+               DMA throttles) ...");
+    let cm = CostModel::measure(&registry, &cfg.gpu, 3)?;
+
+    println!("\n## Model load times (Fig 3)\n");
+    println!("| model | No-CC load (s) | CC load (s) | CC/No-CC | \
+              unload (s) |");
+    println!("|---|---|---|---|---|");
+    for (name, mc) in &cm.models {
+        println!("| {} | {:.3} | {:.3} | {:.2}x | {:.4} |", name,
+                 mc.load_s_plain, mc.load_s_cc,
+                 mc.load_s_cc / mc.load_s_plain.max(1e-9), mc.unload_s);
+    }
+
+    println!("\n## Throughput vs batch size (Fig 4)\n");
+    println!("| model | batch | exec (s) | throughput (req/s) | note |");
+    println!("|---|---|---|---|---|");
+    for (name, mc) in &cm.models {
+        for (&b, &e) in &mc.exec_s_by_batch {
+            let note = if b == mc.obs { "OBS" } else { "" };
+            println!("| {} | {} | {:.3} | {:.2} | {} |", name, b, e,
+                     b as f64 / e, note);
+        }
+        for &b in &mc.oom_batches {
+            println!("| {} | {} | - | - | OOM |", name, b);
+        }
+    }
+
+    let path = results_dir(&cfg).join("cost_model.json");
+    cm.save(&path)?;
+    eprintln!("\n[sincere] saved {path:?}");
+    Ok(())
+}
+
+// ------------------------------------------------------------------ sweep
+
+fn cmd_sweep(cfg: RunConfig) -> anyhow::Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let cm_path = results_dir(&cfg).join("cost_model.json");
+    let cm = if cm_path.exists() {
+        eprintln!("[sincere] using cached {cm_path:?}");
+        CostModel::load(&cm_path)?
+    } else {
+        let (_m, registry) = load_registry(&cfg)?;
+        let cm = CostModel::measure(&registry, &cfg.gpu, 3)?;
+        cm.save(&cm_path)?;
+        cm
+    };
+
+    let slas = sincere::config::SLA_LADDER;
+    let mut cells = Vec::new();
+    for mode in [CcMode::Off, CcMode::On] {
+        for pattern in PATTERN_NAMES {
+            for strategy in STRATEGY_NAMES {
+                for &sla in slas {
+                    let mut c = cfg.clone();
+                    c.mode = mode;
+                    c.gpu.mode = mode;
+                    c.pattern = pattern.to_string();
+                    c.strategy = strategy.to_string();
+                    c.sla_s = sla;
+                    c.label = c.cell_label();
+                    let s = simulate(&c, &manifest, &cm)?;
+                    println!("{}", s.brief());
+                    cells.push(s);
+                }
+            }
+        }
+    }
+
+    println!("\n{}", report::cells_table(&cells));
+    println!("\n## Headline comparison (paper abstract)\n");
+    println!("{}", report::headline_table(&report::headline_ratios(&cells)));
+
+    // persist all summaries
+    let out = results_dir(&cfg).join("sweep_cells.json");
+    let arr = Json::Arr(cells.iter().map(|c| c.to_json()).collect());
+    std::fs::write(&out, arr.to_string())?;
+    eprintln!("[sincere] wrote {out:?}");
+    Ok(())
+}
+
+// ----------------------------------------------------------------- report
+
+fn cmd_report(cfg: RunConfig) -> anyhow::Result<()> {
+    let path = results_dir(&cfg).join("sweep_cells.json");
+    let j = Json::parse_file(&path)?;
+    let cells = parse_cells(&j)?;
+    println!("{}", report::cells_table(&cells));
+    println!("{}", report::headline_table(&report::headline_ratios(&cells)));
+    Ok(())
+}
+
+fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::coordinator::RunSummary>> {
+    let mut out = Vec::new();
+    for c in j.as_arr().unwrap_or(&[]) {
+        out.push(sincere::coordinator::RunSummary {
+            label: c.req("label")?.as_str().unwrap_or("").into(),
+            mode: c.req("mode")?.as_str().unwrap_or("").into(),
+            pattern: c.req("pattern")?.as_str().unwrap_or("").into(),
+            strategy: c.req("strategy")?.as_str().unwrap_or("").into(),
+            sla_s: c.req("sla_s")?.as_f64().unwrap_or(0.0),
+            mean_rps: c.req("mean_rps")?.as_f64().unwrap_or(0.0),
+            duration_s: c.req("duration_s")?.as_f64().unwrap_or(0.0),
+            runtime_s: c.req("runtime_s")?.as_f64().unwrap_or(0.0),
+            generated: c.req("generated")?.as_u64().unwrap_or(0),
+            completed: c.req("completed")?.as_u64().unwrap_or(0),
+            sla_met: c.req("sla_met")?.as_u64().unwrap_or(0),
+            sla_attainment: c.req("sla_attainment")?.as_f64().unwrap_or(0.0),
+            latency_mean_s: c.req("latency_mean_s")?.as_f64().unwrap_or(0.0),
+            latency_p50_s: c.req("latency_p50_s")?.as_f64().unwrap_or(0.0),
+            latency_p90_s: c.req("latency_p90_s")?.as_f64().unwrap_or(0.0),
+            latency_p99_s: c.req("latency_p99_s")?.as_f64().unwrap_or(0.0),
+            latency_max_s: c.req("latency_max_s")?.as_f64().unwrap_or(0.0),
+            throughput_rps: c.req("throughput_rps")?.as_f64().unwrap_or(0.0),
+            processing_rate_rps: c.req("processing_rate_rps")?.as_f64()
+                .unwrap_or(0.0),
+            gpu_util: c.req("gpu_util")?.as_f64().unwrap_or(0.0),
+            swap_count: c.req("swap_count")?.as_u64().unwrap_or(0),
+            total_load_s: c.req("total_load_s")?.as_f64().unwrap_or(0.0),
+            total_unload_s: c.req("total_unload_s")?.as_f64().unwrap_or(0.0),
+            total_exec_s: c.req("total_exec_s")?.as_f64().unwrap_or(0.0),
+            total_crypto_s: c.req("total_crypto_s")?.as_f64().unwrap_or(0.0),
+            mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
+        });
+    }
+    Ok(out)
+}
+
+// ------------------------------------------------------------ gen-traffic
+
+fn cmd_gen_traffic(cfg: RunConfig) -> anyhow::Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let models = if cfg.models.is_empty() {
+        manifest.family_names()
+    } else {
+        cfg.models.clone()
+    };
+    let mut rng = sincere::traffic::rng::Pcg64::new(cfg.seed);
+    let pattern = pattern_by_name(&cfg.pattern)?;
+    let arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps, &models,
+                                    &mut rng);
+    let mut prompts =
+        sincere::workload::promptgen::PromptGen::new(cfg.seed ^ 0xBEEF, 24);
+    let path = results_dir(&cfg)
+        .join(format!("trace_{}_{}rps.jsonl", cfg.pattern, cfg.mean_rps));
+    sincere::traffic::trace::write_trace(&path, &arrivals, &mut prompts)?;
+    println!("wrote {} arrivals to {path:?}", arrivals.len());
+    Ok(())
+}
+
+// ----------------------------------------------------------------- models
+
+fn cmd_models(cfg: RunConfig) -> anyhow::Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    println!("| model | stands in for | paper size | sim weights | \
+              layers | d_model | heads | d_ff | vocab |");
+    println!("|---|---|---|---|---|---|---|---|---|");
+    for f in &manifest.families {
+        println!("| {} | {} | {:.2} GB | {:.2} MB | {} | {} | {} | {} | \
+                  {} |",
+                 f.name, f.hf_name, f.paper_gb,
+                 f.weight_bytes() as f64 / 1e6, f.n_layers, f.d_model,
+                 f.n_heads, f.d_ff, f.vocab);
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "sincere — relaxed batch LLM inference on a simulated confidential \
+         GPU\n\n\
+         USAGE: sincere <command> [--key value ...]\n\n\
+         COMMANDS:\n\
+         \x20 profile      measure load times (Fig 3) + batch throughput \
+         (Fig 4); caches cost model\n\
+         \x20 serve        run one real serving experiment\n\
+         \x20 serve-http   network front-end (POST /infer; \
+         SINCERE_HTTP_ADDR)\n\
+         \x20 sweep        run the full 72-cell grid (calibrated DES)\n\
+         \x20 report       render tables from saved sweep results\n\
+         \x20 gen-traffic  write an arrival trace (jsonl)\n\
+         \x20 models       print the model fleet (Table II)\n\n\
+         COMMON OPTIONS:\n\
+         \x20 --mode cc|no-cc        confidential mode (default no-cc)\n\
+         \x20 --pattern {patterns}\n\
+         \x20 --strategy {strategies}\n\
+         \x20 --sla SECONDS          (default 6.0; ladder 4/6/8)\n\
+         \x20 --mean-rps RPS         (default 4.0)\n\
+         \x20 --duration SECONDS     (default 60)\n\
+         \x20 --models a,b           restrict families\n\
+         \x20 --batch-sizes 1,2,4    restrict compiled batches\n\
+         \x20 --artifacts DIR --results DIR --seed N --config FILE.json\n",
+        patterns = PATTERN_NAMES.join("|"),
+        strategies = STRATEGY_NAMES.join("|"));
+}

@@ -1,0 +1,200 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Fixed memory, ~2.4% relative bucket error: buckets are geometric with
+//! ratio 2^(1/16) starting at 10 µs.  Quantiles interpolate inside the
+//! winning bucket.  Exact min/max/sum are tracked separately so mean and
+//! extremes are error-free.
+
+const BASE: f64 = 10e-6; // 10 µs
+const RATIO_LOG2: f64 = 1.0 / 16.0; // 16 buckets per octave
+const NBUCKETS: usize = 512; // covers 10 µs .. ~47 000 s
+
+/// Histogram over seconds.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    n: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            counts: vec![0; NBUCKETS],
+            n: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn bucket(v: f64) -> usize {
+        if v <= BASE {
+            return 0;
+        }
+        let b = ((v / BASE).log2() / RATIO_LOG2).floor() as usize;
+        b.min(NBUCKETS - 1)
+    }
+
+    /// Lower edge of bucket i, seconds.
+    fn edge(i: usize) -> f64 {
+        BASE * 2f64.powf(i as f64 * RATIO_LOG2)
+    }
+
+    pub fn record(&mut self, v_secs: f64) {
+        assert!(v_secs.is_finite() && v_secs >= 0.0,
+                "bad latency {v_secs}");
+        self.counts[Self::bucket(v_secs)] += 1;
+        self.n += 1;
+        self.sum += v_secs;
+        self.min = self.min.min(v_secs);
+        self.max = self.max.max(v_secs);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.sum / self.n as f64 }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.max }
+    }
+
+    /// Approximate quantile, q in [0,1]; exact at the extremes.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        if q <= 0.0 {
+            return self.min();
+        }
+        if q >= 1.0 {
+            return self.max();
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                // interpolate within the bucket, clamped to observed range
+                let lo = Self::edge(i);
+                let hi = Self::edge(i + 1);
+                let mid = (lo + hi) / 2.0;
+                return mid.clamp(self.min(), self.max());
+            }
+        }
+        self.max()
+    }
+
+    /// Fraction of samples at or below `threshold_s` — SLA attainment.
+    pub fn fraction_le(&self, threshold_s: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        // conservative: whole buckets strictly below + the threshold's
+        // own bucket counts as attained only up to its lower edge rule.
+        let b = Self::bucket(threshold_s);
+        let below: u64 = self.counts[..=b].iter().sum();
+        below as f64 / self.n as f64
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.n += other.n;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+    }
+
+    #[test]
+    fn mean_min_max_exact() {
+        let mut h = Histogram::new();
+        for v in [0.1, 0.2, 0.3] {
+            h.record(v);
+        }
+        assert!((h.mean() - 0.2).abs() < 1e-12);
+        assert_eq!(h.min(), 0.1);
+        assert_eq!(h.max(), 0.3);
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error() {
+        let mut h = Histogram::new();
+        // uniform grid 1ms..1s
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        for (q, want) in [(0.5, 0.5), (0.9, 0.9), (0.99, 0.99)] {
+            let got = h.quantile(q);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.05, "q{q}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn fraction_le_tracks_sla() {
+        let mut h = Histogram::new();
+        for i in 0..100 {
+            h.record(i as f64 * 0.1); // 0 .. 9.9s
+        }
+        let att = h.fraction_le(4.0);
+        assert!((att - 0.41).abs() < 0.05, "attainment {att}");
+        assert_eq!(h.fraction_le(100.0), 1.0);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        a.record(0.1);
+        b.record(0.4);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert_eq!(a.max(), 0.4);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad latency")]
+    fn rejects_negative() {
+        Histogram::new().record(-1.0);
+    }
+
+    #[test]
+    fn extreme_values_clamped_to_buckets() {
+        let mut h = Histogram::new();
+        h.record(1e-9); // below base
+        h.record(1e9); // beyond last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.0) <= h.quantile(1.0));
+    }
+}

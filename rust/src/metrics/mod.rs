@@ -1,0 +1,7 @@
+//! Measurement: latency histograms, per-run recorders (the paper's three
+//! CSV classes, §III-B), system monitoring, and report rendering.
+
+pub mod hist;
+pub mod recorder;
+pub mod report;
+pub mod system;

@@ -1,0 +1,187 @@
+//! Per-run recording: the paper's three CSV classes (§III-B) plus the
+//! aggregated `RunSummary`.
+//!
+//! * `<label>_requests.csv` — request-level details: arrival, exec
+//!   start, completion, model, batch size, latency, SLA flag.
+//! * `<label>_batches.csv` — batch/throughput details: load/unload/exec
+//!   times, swap flag, rows, artifact batch.
+//! * `<label>_monitor.csv` — system monitoring: CPU/RSS/ctxt switches,
+//!   sim-GPU occupancy/memory/fragmentation/DMA counters.
+
+use std::path::Path;
+
+use crate::coordinator::request::CompletedRequest;
+use crate::metrics::hist::Histogram;
+use crate::metrics::system::ProcSample;
+use crate::util::csvio::CsvWriter;
+
+/// One executed batch.
+#[derive(Debug, Clone)]
+pub struct BatchRecord {
+    pub at_s: f64,
+    pub model: String,
+    pub rows: usize,
+    pub artifact_batch: usize,
+    pub swapped: bool,
+    pub load_s: f64,
+    pub unload_s: f64,
+    pub exec_s: f64,
+    pub io_s: f64,
+}
+
+/// One monitor sample (process + device).
+#[derive(Debug, Clone)]
+pub struct MonitorRecord {
+    pub proc: ProcSample,
+    pub gpu_util: f64,
+    pub mem_in_use: u64,
+    pub mem_peak: u64,
+    pub fragmentation: f64,
+    pub dma_h2d_bytes: u64,
+    pub dma_crypto_s: f64,
+    pub swaps: u64,
+}
+
+/// Collects everything during a run.
+#[derive(Default)]
+pub struct Recorder {
+    pub requests: Vec<(CompletedRequest, bool)>,
+    pub batches: Vec<BatchRecord>,
+    pub monitor: Vec<MonitorRecord>,
+    pub latency_hist: Histogram,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    pub fn on_complete(&mut self, c: CompletedRequest, sla_met: bool) {
+        self.latency_hist.record(c.latency_s());
+        self.requests.push((c, sla_met));
+    }
+
+    pub fn on_batch(&mut self, b: BatchRecord) {
+        self.batches.push(b);
+    }
+
+    pub fn on_monitor(&mut self, m: MonitorRecord) {
+        self.monitor.push(m);
+    }
+
+    /// Total wall time spent executing batches.
+    pub fn exec_busy_s(&self) -> f64 {
+        self.batches.iter().map(|b| b.exec_s).sum()
+    }
+
+    pub fn total_load_s(&self) -> f64 {
+        self.batches.iter().map(|b| b.load_s).sum()
+    }
+
+    /// Write the three CSV classes.
+    pub fn write_csvs(&self, dir: &Path, label: &str) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+
+        let mut w = CsvWriter::create(
+            &dir.join(format!("{label}_requests.csv")),
+            &["id", "model", "arrival_s", "exec_start_s", "complete_s",
+              "latency_s", "batch", "batch_rows", "caused_swap",
+              "sla_met"])?;
+        for (c, met) in &self.requests {
+            w.row(&[c.id.to_string(), c.model.clone(),
+                    fmt(c.arrival_s), fmt(c.exec_start_s),
+                    fmt(c.complete_s), fmt(c.latency_s()),
+                    c.batch.to_string(), c.batch_rows.to_string(),
+                    c.caused_swap.to_string(), met.to_string()])?;
+        }
+        w.flush()?;
+
+        let mut w = CsvWriter::create(
+            &dir.join(format!("{label}_batches.csv")),
+            &["at_s", "model", "rows", "artifact_batch", "swapped",
+              "load_s", "unload_s", "exec_s", "io_s"])?;
+        for b in &self.batches {
+            w.row(&[fmt(b.at_s), b.model.clone(), b.rows.to_string(),
+                    b.artifact_batch.to_string(), b.swapped.to_string(),
+                    fmt(b.load_s), fmt(b.unload_s), fmt(b.exec_s),
+                    fmt(b.io_s)])?;
+        }
+        w.flush()?;
+
+        let mut w = CsvWriter::create(
+            &dir.join(format!("{label}_monitor.csv")),
+            &["at_s", "cpu_user_s", "cpu_sys_s", "rss_bytes", "vol_ctxt",
+              "invol_ctxt", "gpu_util", "mem_in_use", "mem_peak",
+              "fragmentation", "dma_h2d_bytes", "dma_crypto_s", "swaps"])?;
+        for m in &self.monitor {
+            w.row(&[fmt(m.proc.at_s), fmt(m.proc.cpu_user_s),
+                    fmt(m.proc.cpu_sys_s), m.proc.rss_bytes.to_string(),
+                    m.proc.vol_ctxt.to_string(),
+                    m.proc.invol_ctxt.to_string(), fmt(m.gpu_util),
+                    m.mem_in_use.to_string(), m.mem_peak.to_string(),
+                    fmt(m.fragmentation), m.dma_h2d_bytes.to_string(),
+                    fmt(m.dma_crypto_s), m.swaps.to_string()])?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+fn fmt(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::csvio::CsvTable;
+
+    fn completed(id: u64, latency: f64) -> CompletedRequest {
+        CompletedRequest {
+            id,
+            model: "llama-sim".into(),
+            arrival_s: 1.0,
+            exec_start_s: 1.0 + latency * 0.7,
+            complete_s: 1.0 + latency,
+            batch: 4,
+            batch_rows: 3,
+            caused_swap: false,
+        }
+    }
+
+    #[test]
+    fn csvs_roundtrip() {
+        let mut r = Recorder::new();
+        r.on_complete(completed(1, 0.5), true);
+        r.on_complete(completed(2, 7.5), false);
+        r.on_batch(BatchRecord {
+            at_s: 2.0, model: "llama-sim".into(), rows: 3,
+            artifact_batch: 4, swapped: true, load_s: 0.4, unload_s: 0.01,
+            exec_s: 0.2, io_s: 0.005,
+        });
+        r.on_monitor(MonitorRecord {
+            proc: ProcSample { at_s: 2.5, ..Default::default() },
+            gpu_util: 0.3, mem_in_use: 100, mem_peak: 200,
+            fragmentation: 0.0, dma_h2d_bytes: 1000, dma_crypto_s: 0.1,
+            swaps: 1,
+        });
+
+        let dir = std::env::temp_dir().join("sincere_rec_test");
+        r.write_csvs(&dir, "t").unwrap();
+
+        let reqs = CsvTable::read(&dir.join("t_requests.csv")).unwrap();
+        assert_eq!(reqs.rows.len(), 2);
+        let lat = reqs.f64_col("latency_s").unwrap();
+        assert!((lat[0] - 0.5).abs() < 1e-6);
+        assert_eq!(reqs.rows[1][reqs.col("sla_met").unwrap()], "false");
+
+        let batches = CsvTable::read(&dir.join("t_batches.csv")).unwrap();
+        assert_eq!(batches.rows.len(), 1);
+        let mon = CsvTable::read(&dir.join("t_monitor.csv")).unwrap();
+        assert_eq!(mon.rows.len(), 1);
+
+        assert!((r.exec_busy_s() - 0.2).abs() < 1e-12);
+        assert!((r.total_load_s() - 0.4).abs() < 1e-12);
+        assert_eq!(r.latency_hist.count(), 2);
+    }
+}

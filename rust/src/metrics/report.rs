@@ -1,0 +1,159 @@
+//! Paper-style report rendering from run summaries.
+//!
+//! Turns a set of `RunSummary` cells into the tables behind Fig 5/6/7
+//! and the abstract's headline ratios, as markdown.
+
+use crate::coordinator::server::RunSummary;
+
+/// Render a markdown table of the given summaries, one row per cell.
+pub fn cells_table(cells: &[RunSummary]) -> String {
+    let mut out = String::from(
+        "| mode | pattern | strategy | SLA (s) | gen | done | attain % | \
+         lat mean (s) | lat p99 (s) | thr (rps) | proc rate (rps) | \
+         GPU util % | swaps |\n|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for c in cells {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {:.1} | {:.2} | {:.2} | \
+             {:.2} | {:.2} | {:.1} | {} |\n",
+            c.mode, c.pattern, c.strategy, c.sla_s, c.generated,
+            c.completed, c.sla_attainment * 100.0, c.latency_mean_s,
+            c.latency_p99_s, c.throughput_rps, c.processing_rate_rps,
+            c.gpu_util * 100.0, c.swap_count));
+    }
+    out
+}
+
+/// Mean of a metric across cells matching a predicate.
+pub fn mean_where(cells: &[RunSummary], f: impl Fn(&RunSummary) -> bool,
+                  metric: impl Fn(&RunSummary) -> f64) -> f64 {
+    let vals: Vec<f64> = cells.iter().filter(|c| f(c)).map(metric)
+        .collect();
+    crate::util::mean(&vals)
+}
+
+/// The abstract's four headline comparisons, computed from a grid.
+#[derive(Debug, Clone)]
+pub struct HeadlineRatios {
+    /// (No-CC latency − CC latency) / CC latency — paper: −20…−30 %.
+    pub latency_delta_frac: f64,
+    /// No-CC attainment − CC attainment, percentage points — paper:
+    /// +15…20 points.
+    pub sla_delta_points: f64,
+    /// No-CC throughput / CC throughput − 1 — paper: +45…70 %.
+    pub throughput_gain_frac: f64,
+    /// No-CC GPU util / CC GPU util − 1 — paper: ≈ +50 %.
+    pub util_gain_frac: f64,
+    /// processing-rate ratio (No-CC / CC) — paper: ≈ 1.
+    pub processing_rate_ratio: f64,
+}
+
+pub fn headline_ratios(cells: &[RunSummary]) -> HeadlineRatios {
+    let cc = |c: &RunSummary| c.mode == "cc";
+    let nocc = |c: &RunSummary| c.mode == "no-cc";
+    let lat_cc = mean_where(cells, cc, |c| c.latency_mean_s);
+    let lat_nocc = mean_where(cells, nocc, |c| c.latency_mean_s);
+    let att_cc = mean_where(cells, cc, |c| c.sla_attainment);
+    let att_nocc = mean_where(cells, nocc, |c| c.sla_attainment);
+    let thr_cc = mean_where(cells, cc, |c| c.throughput_rps);
+    let thr_nocc = mean_where(cells, nocc, |c| c.throughput_rps);
+    let util_cc = mean_where(cells, cc, |c| c.gpu_util);
+    let util_nocc = mean_where(cells, nocc, |c| c.gpu_util);
+    let pr_cc = mean_where(cells, cc, |c| c.processing_rate_rps);
+    let pr_nocc = mean_where(cells, nocc, |c| c.processing_rate_rps);
+    HeadlineRatios {
+        latency_delta_frac: if lat_cc > 0.0 {
+            (lat_nocc - lat_cc) / lat_cc
+        } else {
+            0.0
+        },
+        sla_delta_points: (att_nocc - att_cc) * 100.0,
+        throughput_gain_frac: if thr_cc > 0.0 {
+            thr_nocc / thr_cc - 1.0
+        } else {
+            0.0
+        },
+        util_gain_frac: if util_cc > 0.0 {
+            util_nocc / util_cc - 1.0
+        } else {
+            0.0
+        },
+        processing_rate_ratio: if pr_cc > 0.0 { pr_nocc / pr_cc } else { 0.0 },
+    }
+}
+
+/// Render the headline comparison next to the paper's claims.
+pub fn headline_table(h: &HeadlineRatios) -> String {
+    format!(
+        "| metric | paper (No-CC vs CC) | measured |\n|---|---|---|\n\
+         | latency | 20–30% lower | {:.1}% {} |\n\
+         | SLA attainment | 15–20 points higher | {:+.1} points |\n\
+         | throughput | 45–70% higher | {:+.1}% |\n\
+         | GPU utilization | ≈50% higher | {:+.1}% |\n\
+         | processing rate | ≈ equal | ratio {:.2} |\n",
+        h.latency_delta_frac.abs() * 100.0,
+        if h.latency_delta_frac < 0.0 { "lower" } else { "higher" },
+        h.sla_delta_points,
+        h.throughput_gain_frac * 100.0,
+        h.util_gain_frac * 100.0,
+        h.processing_rate_ratio)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cell(mode: &str, lat: f64, att: f64, thr: f64, util: f64)
+            -> RunSummary {
+        RunSummary {
+            label: "t".into(),
+            mode: mode.into(),
+            pattern: "gamma".into(),
+            strategy: "best-batch".into(),
+            sla_s: 6.0,
+            mean_rps: 4.0,
+            duration_s: 60.0,
+            runtime_s: 60.0,
+            generated: 240,
+            completed: 200,
+            sla_met: (att * 240.0) as u64,
+            sla_attainment: att,
+            latency_mean_s: lat,
+            latency_p50_s: lat,
+            latency_p90_s: lat * 1.5,
+            latency_p99_s: lat * 2.0,
+            latency_max_s: lat * 3.0,
+            throughput_rps: thr,
+            processing_rate_rps: 30.0,
+            gpu_util: util,
+            swap_count: 12,
+            total_load_s: 10.0,
+            total_unload_s: 0.1,
+            total_exec_s: 20.0,
+            total_crypto_s: 1.0,
+            mean_load_s: 0.8,
+        }
+    }
+
+    #[test]
+    fn ratios_match_construction() {
+        let cells = vec![
+            cell("cc", 4.0, 0.5, 2.0, 0.2),
+            cell("no-cc", 3.0, 0.7, 3.2, 0.3),
+        ];
+        let h = headline_ratios(&cells);
+        assert!((h.latency_delta_frac - (-0.25)).abs() < 1e-9);
+        assert!((h.sla_delta_points - 20.0).abs() < 1e-9);
+        assert!((h.throughput_gain_frac - 0.6).abs() < 1e-9);
+        assert!((h.util_gain_frac - 0.5).abs() < 1e-9);
+        assert!((h.processing_rate_ratio - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tables_render() {
+        let cells = vec![cell("cc", 4.0, 0.5, 2.0, 0.2)];
+        let t = cells_table(&cells);
+        assert!(t.contains("| cc | gamma |"));
+        let h = headline_table(&headline_ratios(&cells));
+        assert!(h.contains("latency"));
+    }
+}

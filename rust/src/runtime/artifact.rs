@@ -1,0 +1,65 @@
+//! HLO-text artifact loading and compilation.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+/// A compiled (family, batch) executable plus compile metadata.
+pub struct CompiledArtifact {
+    pub exe: xla::PjRtLoadedExecutable,
+    pub batch: usize,
+    pub compile_time: Duration,
+    pub hlo_bytes: usize,
+}
+
+/// Parse HLO text and compile it on the given client.
+pub fn compile_hlo(client: &xla::PjRtClient, path: &Path, batch: usize)
+                   -> anyhow::Result<CompiledArtifact> {
+    let start = Instant::now();
+    let hlo_bytes = std::fs::metadata(path)
+        .map_err(|e| anyhow::anyhow!("missing artifact {path:?}: {e}"))?
+        .len() as usize;
+    let path_str = path.to_str()
+        .ok_or_else(|| anyhow::anyhow!("non-utf8 path {path:?}"))?;
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| anyhow::anyhow!("parsing HLO {path:?}: {e}"))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)
+        .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e}"))?;
+    Ok(CompiledArtifact {
+        exe,
+        batch,
+        compile_time: start.elapsed(),
+        hlo_bytes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn compiles_real_artifact() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let art = compile_hlo(&client,
+                              &artifacts_dir().join("llama-sim_b1.hlo.txt"),
+                              1).unwrap();
+        assert!(art.hlo_bytes > 10_000);
+        assert!(art.compile_time > Duration::ZERO);
+    }
+
+    #[test]
+    fn missing_artifact_errors_cleanly() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let err = match compile_hlo(&client, Path::new("/nope/x.hlo.txt"),
+                                    1) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("missing artifact"));
+    }
+}

@@ -1,0 +1,229 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.  Parsed from `artifacts/manifest.json`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// One weight array inside the flat `.bin` blob.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+/// The weight blob of a family.
+#[derive(Debug, Clone)]
+pub struct WeightsSpec {
+    pub file: String,
+    pub total_bytes: usize,
+    pub sha256: String,
+    pub params: Vec<ParamSpec>,
+}
+
+/// One servable model family (Table II analogue).
+#[derive(Debug, Clone)]
+pub struct FamilySpec {
+    pub name: String,
+    pub hf_name: String,
+    pub paper_gb: f64,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub act: String,
+    pub prompt_len: usize,
+    pub decode_len: usize,
+    pub cache_len: usize,
+    pub kv_bytes_per_seq: u64,
+    pub param_count: u64,
+    pub weights: WeightsSpec,
+    /// batch size -> HLO artifact file name.
+    pub artifacts: BTreeMap<usize, String>,
+}
+
+impl FamilySpec {
+    /// Device bytes needed to *load* this model (weights only).
+    pub fn weight_bytes(&self) -> u64 {
+        self.weights.total_bytes as u64
+    }
+
+    /// Device bytes needed to *run* a batch of `b`: KV cache plus an
+    /// activation workspace estimate (logits + MLP intermediates).
+    pub fn batch_workspace_bytes(&self, b: usize) -> u64 {
+        let act = 4 * (self.vocab + 3 * self.d_ff + 4 * self.d_model);
+        b as u64 * (self.kv_bytes_per_seq + act as u64)
+    }
+
+    /// Batch sizes with an AOT artifact, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.artifacts.keys().copied().collect()
+    }
+
+    /// Largest artifact batch size <= `n` (None if even the smallest
+    /// exceeds n).
+    pub fn batch_size_at_most(&self, n: usize) -> Option<usize> {
+        self.artifacts.keys().copied().filter(|&b| b <= n).max()
+    }
+
+    /// Smallest artifact batch size >= `n`, else the largest available.
+    pub fn batch_size_at_least(&self, n: usize) -> usize {
+        self.artifacts.keys().copied().filter(|&b| b >= n).min()
+            .unwrap_or_else(|| *self.artifacts.keys().last().unwrap())
+    }
+}
+
+/// The whole artifact set.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch_sizes: Vec<usize>,
+    pub families: Vec<FamilySpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        anyhow::ensure!(j.req("format_version")?.as_u64() == Some(1),
+                        "unsupported manifest format_version");
+        let batch_sizes = j.req("batch_sizes")?.as_arr()
+            .ok_or_else(|| anyhow::anyhow!("batch_sizes not an array"))?
+            .iter().map(|b| b.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad batch size")))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let mut families = Vec::new();
+        for fj in j.req("families")?.as_arr().unwrap_or(&[]) {
+            families.push(parse_family(fj)?);
+        }
+        anyhow::ensure!(!families.is_empty(), "manifest has no families");
+        Ok(Manifest { dir: dir.to_path_buf(), batch_sizes, families })
+    }
+
+    pub fn family(&self, name: &str) -> anyhow::Result<&FamilySpec> {
+        self.families.iter().find(|f| f.name == name)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown model {name:?}; manifest has {:?}",
+                self.families.iter().map(|f| &f.name).collect::<Vec<_>>()))
+    }
+
+    pub fn family_names(&self) -> Vec<String> {
+        self.families.iter().map(|f| f.name.clone()).collect()
+    }
+}
+
+fn parse_family(j: &Json) -> anyhow::Result<FamilySpec> {
+    let s = |k: &str| -> anyhow::Result<String> {
+        Ok(j.req(k)?.as_str()
+            .ok_or_else(|| anyhow::anyhow!("{k} not a string"))?.to_string())
+    };
+    let n = |k: &str| -> anyhow::Result<usize> {
+        j.req(k)?.as_usize()
+            .ok_or_else(|| anyhow::anyhow!("{k} not a non-negative int"))
+    };
+
+    let wj = j.req("weights")?;
+    let mut params = Vec::new();
+    for pj in wj.req("params")?.as_arr().unwrap_or(&[]) {
+        params.push(ParamSpec {
+            name: pj.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: pj.req("shape")?.as_arr().unwrap_or(&[]).iter()
+                .map(|d| d.as_usize().unwrap_or(0)).collect(),
+            offset_bytes: pj.req("offset_bytes")?.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad offset"))?,
+            size_bytes: pj.req("size_bytes")?.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad size"))?,
+        });
+    }
+    anyhow::ensure!(!params.is_empty(), "family has no params");
+
+    let mut artifacts = BTreeMap::new();
+    if let Some(obj) = j.req("artifacts")?.as_obj() {
+        for (k, v) in obj {
+            artifacts.insert(
+                k.parse::<usize>()
+                    .map_err(|_| anyhow::anyhow!("bad batch key {k:?}"))?,
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact not a string"))?
+                    .to_string());
+        }
+    }
+    anyhow::ensure!(!artifacts.is_empty(), "family has no artifacts");
+
+    Ok(FamilySpec {
+        name: s("name")?,
+        hf_name: s("hf_name")?,
+        paper_gb: j.req("paper_gb")?.as_f64().unwrap_or(0.0),
+        d_model: n("d_model")?,
+        n_layers: n("n_layers")?,
+        n_heads: n("n_heads")?,
+        d_ff: n("d_ff")?,
+        vocab: n("vocab")?,
+        act: s("act")?,
+        prompt_len: n("prompt_len")?,
+        decode_len: n("decode_len")?,
+        cache_len: n("cache_len")?,
+        kv_bytes_per_seq: j.req("kv_bytes_per_seq")?.as_u64()
+            .ok_or_else(|| anyhow::anyhow!("bad kv_bytes_per_seq"))?,
+        param_count: j.req("param_count")?.as_u64().unwrap_or(0),
+        weights: WeightsSpec {
+            file: wj.req("file")?.as_str().unwrap_or_default().to_string(),
+            total_bytes: wj.req("total_bytes")?.as_usize()
+                .ok_or_else(|| anyhow::anyhow!("bad total_bytes"))?,
+            sha256: wj.req("sha256")?.as_str().unwrap_or_default()
+                .to_string(),
+            params,
+        },
+        artifacts,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(&artifacts_dir()).expect(
+            "run `make artifacts` before cargo test");
+        assert_eq!(m.families.len(), 3);
+        let names = m.family_names();
+        assert!(names.contains(&"llama-sim".to_string()));
+        let g = m.family("granite-sim").unwrap();
+        assert!(g.weight_bytes() > m.family("gemma-sim").unwrap()
+                .weight_bytes());
+        assert!(g.artifacts.len() >= 4);
+    }
+
+    #[test]
+    fn batch_size_selection() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let f = m.family("llama-sim").unwrap();
+        assert_eq!(f.batch_size_at_most(3), Some(2));
+        assert_eq!(f.batch_size_at_most(32), Some(32));
+        assert_eq!(f.batch_size_at_most(0), None);
+        assert_eq!(f.batch_size_at_least(3), 4);
+        assert_eq!(f.batch_size_at_least(1000), 32);
+    }
+
+    #[test]
+    fn unknown_family_rejected() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.family("gpt-5").is_err());
+    }
+
+    #[test]
+    fn workspace_bytes_scale_with_batch() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let f = m.family("llama-sim").unwrap();
+        assert!(f.batch_workspace_bytes(8) > 4 * f.batch_workspace_bytes(1));
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts, compile them once, execute batches.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT): HLO **text**
+//! artifacts produced by `python/compile/aot.py` are parsed with
+//! `HloModuleProto::from_text_file`, compiled per (family, batch size),
+//! and executed with the family's weight literals plus the batch's
+//! prompt tokens.  Python never runs here — this is the serve path.
+
+pub mod artifact;
+pub mod manifest;
+pub mod model;
+pub mod registry;
+
+pub use manifest::{FamilySpec, Manifest};
+pub use registry::Registry;

@@ -1,0 +1,150 @@
+//! Host-side model state: weights as XLA literals + raw bytes.
+//!
+//! Weights live on the *host* until the swap manager DMAs them into
+//! simulated HBM; `WeightSet::literals` are what the PJRT executable is
+//! fed at execute time.  The raw byte blob is what travels through the
+//! (optionally encrypting) DMA path — the same bytes the literals were
+//! built from, so the data flow mirrors the paper's load path.
+
+use std::path::Path;
+
+use crate::runtime::manifest::FamilySpec;
+
+/// A family's weights, materialized host-side once at startup.
+pub struct WeightSet {
+    /// One literal per parameter, in `FamilySpec.weights.params` order —
+    /// the HLO parameter order after the prompt.
+    pub literals: Vec<xla::Literal>,
+    /// The flat blob (what gets DMA'd on every model swap).
+    pub raw: Vec<u8>,
+}
+
+impl WeightSet {
+    /// Read and validate the weight blob; build literals.
+    pub fn load(spec: &FamilySpec, artifacts_dir: &Path)
+                -> anyhow::Result<WeightSet> {
+        let path = artifacts_dir.join(&spec.weights.file);
+        let raw = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading weights {path:?}: {e}"))?;
+        anyhow::ensure!(raw.len() == spec.weights.total_bytes,
+                        "weight blob {} bytes, manifest says {}",
+                        raw.len(), spec.weights.total_bytes);
+        let digest = sha256_hex(&raw);
+        anyhow::ensure!(digest == spec.weights.sha256,
+                        "weight blob sha256 mismatch for {}", spec.name);
+
+        let mut literals = Vec::with_capacity(spec.weights.params.len());
+        for p in &spec.weights.params {
+            let bytes = raw.get(p.offset_bytes..p.offset_bytes + p.size_bytes)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "param {} out of blob range", p.name))?;
+            anyhow::ensure!(bytes.len() % 4 == 0, "param {} unaligned",
+                            p.name);
+            let floats: Vec<f32> = bytes.chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            let numel: usize = p.shape.iter().product();
+            anyhow::ensure!(floats.len() == numel,
+                            "param {}: {} elements, shape {:?}", p.name,
+                            floats.len(), p.shape);
+            let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(&floats).reshape(&dims)
+                .map_err(|e| anyhow::anyhow!(
+                    "reshaping param {}: {e}", p.name))?);
+        }
+        Ok(WeightSet { literals, raw })
+    }
+}
+
+fn sha256_hex(data: &[u8]) -> String {
+    use sha2::{Digest, Sha256};
+    let mut h = Sha256::new();
+    h.update(data);
+    let d = h.finalize();
+    d.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Build the `[B, prompt_len]` i32 prompt literal from per-request token
+/// rows, padding short batches with zero rows (padding rows are inert:
+/// `test_batch_rows_are_independent` in python/tests guarantees row
+/// isolation).
+pub fn prompt_literal(rows: &[Vec<i32>], batch: usize, prompt_len: usize)
+                      -> anyhow::Result<xla::Literal> {
+    anyhow::ensure!(rows.len() <= batch,
+                    "{} rows exceed batch {batch}", rows.len());
+    let mut flat = Vec::with_capacity(batch * prompt_len);
+    for row in rows {
+        anyhow::ensure!(row.len() == prompt_len,
+                        "prompt row len {} != {prompt_len}", row.len());
+        flat.extend_from_slice(row);
+    }
+    flat.resize(batch * prompt_len, 0);
+    Ok(xla::Literal::vec1(&flat)
+        .reshape(&[batch as i64, prompt_len as i64])?)
+}
+
+/// Decode-token output of one execute: `rows x decode_len`.
+pub fn tokens_from_literal(lit: &xla::Literal, rows: usize,
+                           batch: usize, decode_len: usize)
+                           -> anyhow::Result<Vec<Vec<i32>>> {
+    let flat = lit.to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("decoding output literal: {e}"))?;
+    anyhow::ensure!(flat.len() == batch * decode_len,
+                    "output literal {} elements, want {}", flat.len(),
+                    batch * decode_len);
+    Ok(flat.chunks(decode_len).take(rows)
+        .map(|c| c.to_vec()).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_and_validates_weights() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let spec = m.family("llama-sim").unwrap();
+        let ws = WeightSet::load(spec, &artifacts_dir()).unwrap();
+        assert_eq!(ws.literals.len(), spec.weights.params.len());
+        assert_eq!(ws.raw.len(), spec.weights.total_bytes);
+    }
+
+    #[test]
+    fn corrupted_blob_rejected() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let spec = m.family("llama-sim").unwrap();
+        // copy artifacts to temp, flip a byte
+        let dir = std::env::temp_dir().join("sincere_ws_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut raw = std::fs::read(
+            artifacts_dir().join(&spec.weights.file)).unwrap();
+        raw[100] ^= 0xFF;
+        std::fs::write(dir.join(&spec.weights.file), &raw).unwrap();
+        let err = match WeightSet::load(spec, &dir) {
+            Err(e) => e.to_string(),
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.contains("sha256 mismatch"), "{err}");
+    }
+
+    #[test]
+    fn prompt_literal_pads_batch() {
+        let rows = vec![vec![1i32; 16], vec![2i32; 16]];
+        let lit = prompt_literal(&rows, 4, 16).unwrap();
+        let flat = lit.to_vec::<i32>().unwrap();
+        assert_eq!(flat.len(), 64);
+        assert!(flat[32..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn prompt_literal_rejects_bad_rows() {
+        assert!(prompt_literal(&[vec![1; 8]], 1, 16).is_err());
+        assert!(prompt_literal(&vec![vec![1; 16]; 3], 2, 16).is_err());
+    }
+}

@@ -1,0 +1,266 @@
+//! The model registry: every (family, batch size) executable, compiled
+//! once at startup, plus host weights and OBS bookkeeping.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::runtime::artifact::compile_hlo;
+use crate::runtime::manifest::{FamilySpec, Manifest};
+use crate::runtime::model::{prompt_literal, tokens_from_literal, WeightSet};
+
+/// One family's runtime state.
+pub struct ModelEntry {
+    pub spec: FamilySpec,
+    pub weights: WeightSet,
+    /// batch size -> compiled executable.
+    pub executables: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    /// Optimal batch size (max-throughput), set from profiling; defaults
+    /// to the largest compiled batch.
+    pub obs: usize,
+}
+
+impl ModelEntry {
+    /// Batch sizes actually compiled in this registry (may be a subset
+    /// of the manifest's artifact list), ascending.
+    pub fn compiled_batch_sizes(&self) -> Vec<usize> {
+        self.executables.keys().copied().collect()
+    }
+}
+
+/// Result of one batch execution.
+#[derive(Debug, Clone)]
+pub struct ExecReport {
+    /// Decode tokens per *real* (non-padding) row.
+    pub tokens: Vec<Vec<i32>>,
+    /// Wall time of the PJRT execute + literal transfers.
+    pub elapsed: Duration,
+    /// The artifact batch size actually used (>= rows).
+    pub batch: usize,
+}
+
+/// Registry over a PJRT CPU client.
+pub struct Registry {
+    pub client: xla::PjRtClient,
+    pub artifacts_dir: PathBuf,
+    entries: HashMap<String, ModelEntry>,
+    pub total_compile_time: Duration,
+}
+
+impl Registry {
+    /// Load manifest + weights and compile executables.
+    ///
+    /// `family_filter`/`batch_filter`: empty means "all"; tests restrict
+    /// both to keep startup fast.
+    pub fn load(manifest: &Manifest, family_filter: &[String],
+                batch_filter: &[usize]) -> anyhow::Result<Registry> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e}"))?;
+        let mut entries = HashMap::new();
+        let mut total_compile = Duration::ZERO;
+        for spec in &manifest.families {
+            if !family_filter.is_empty()
+                && !family_filter.contains(&spec.name)
+            {
+                continue;
+            }
+            let weights = WeightSet::load(spec, &manifest.dir)?;
+            let mut executables = BTreeMap::new();
+            for (&b, file) in &spec.artifacts {
+                if !batch_filter.is_empty() && !batch_filter.contains(&b) {
+                    continue;
+                }
+                let art = compile_hlo(&client, &manifest.dir.join(file), b)?;
+                total_compile += art.compile_time;
+                executables.insert(b, art.exe);
+            }
+            anyhow::ensure!(!executables.is_empty(),
+                            "no executables compiled for {}", spec.name);
+            let obs = *executables.keys().last().unwrap();
+            entries.insert(spec.name.clone(), ModelEntry {
+                spec: spec.clone(),
+                weights,
+                executables,
+                obs,
+            });
+        }
+        anyhow::ensure!(!entries.is_empty(), "registry is empty");
+        Ok(Registry {
+            client,
+            artifacts_dir: manifest.dir.clone(),
+            entries,
+            total_compile_time: total_compile,
+        })
+    }
+
+    pub fn entry(&self, name: &str) -> anyhow::Result<&ModelEntry> {
+        self.entries.get(name).ok_or_else(|| anyhow::anyhow!(
+            "model {name:?} not in registry (have {:?})",
+            self.entries.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Record the profiled OBS for a family (§III-D2).
+    pub fn set_obs(&mut self, name: &str, obs: usize) -> anyhow::Result<()> {
+        let e = self.entries.get_mut(name).ok_or_else(
+            || anyhow::anyhow!("model {name:?} not in registry"))?;
+        anyhow::ensure!(e.executables.contains_key(&obs),
+                        "OBS {obs} has no artifact for {name}");
+        e.obs = obs;
+        Ok(())
+    }
+
+    pub fn obs(&self, name: &str) -> anyhow::Result<usize> {
+        Ok(self.entry(name)?.obs)
+    }
+
+    /// Execute `rows` prompts on `name` using the smallest artifact batch
+    /// that fits them.  The swap manager is responsible for residency;
+    /// this is pure compute.
+    pub fn execute(&self, name: &str, rows: &[Vec<i32>])
+                   -> anyhow::Result<ExecReport> {
+        anyhow::ensure!(!rows.is_empty(), "empty batch for {name}");
+        let entry = self.entry(name)?;
+        // pick among *compiled* executables (a filtered registry may hold
+        // fewer batch sizes than the manifest lists)
+        let batch = entry.executables.keys().copied()
+            .filter(|&b| b >= rows.len()).min()
+            .ok_or_else(|| anyhow::anyhow!(
+                "no compiled batch size fits {} rows for {name} \
+                 (largest is {})", rows.len(),
+                entry.executables.keys().last().unwrap()))?;
+        let exe = entry.executables.get(&batch).unwrap();
+
+        let start = Instant::now();
+        let prompt = prompt_literal(rows, batch, entry.spec.prompt_len)?;
+        // args: prompt then weights, positionally (aot.py contract)
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(
+            1 + entry.weights.literals.len());
+        args.push(&prompt);
+        args.extend(entry.weights.literals.iter());
+        let result = exe.execute(&args)
+            .map_err(|e| anyhow::anyhow!("executing {name} b{batch}: {e}"))?;
+        let lit = result[0][0].to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching output: {e}"))?;
+        let out = lit.to_tuple1()
+            .map_err(|e| anyhow::anyhow!("unwrapping tuple: {e}"))?;
+        let tokens = tokens_from_literal(&out, rows.len(), batch,
+                                         entry.spec.decode_len)?;
+        Ok(ExecReport { tokens, elapsed: start.elapsed(), batch })
+    }
+}
+
+/// A registry shareable across threads (tests, benches, multi-run
+/// drivers) with all access serialized.
+///
+/// # Safety
+///
+/// The `xla` crate's types hold `Rc` internals and raw PJRT pointers, so
+/// they are neither `Send` nor `Sync`.  The PJRT CPU runtime itself is
+/// thread-safe, but `execute()` clones `Rc` client handles, so truly
+/// concurrent calls would race the non-atomic refcounts.  This wrapper
+/// is sound because (a) every access goes through the `Mutex`, so no two
+/// threads touch the inner `Registry` (or clone its `Rc`s)
+/// concurrently, and (b) `with()` cannot leak borrows of the inner
+/// value past the lock guard.
+pub struct SharedRegistry(std::sync::Mutex<Registry>);
+
+unsafe impl Send for SharedRegistry {}
+unsafe impl Sync for SharedRegistry {}
+
+impl SharedRegistry {
+    pub fn new(registry: Registry) -> SharedRegistry {
+        SharedRegistry(std::sync::Mutex::new(registry))
+    }
+
+    /// Run `f` with exclusive access to the registry.
+    pub fn with<T>(&self, f: impl FnOnce(&mut Registry) -> T) -> T {
+        let mut guard = self.0.lock().unwrap();
+        f(&mut guard)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn small_registry() -> Registry {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        Registry::load(&m, &["llama-sim".to_string()], &[1, 2, 4]).unwrap()
+    }
+
+    #[test]
+    fn execute_returns_decode_tokens() {
+        let reg = small_registry();
+        let spec = &reg.entry("llama-sim").unwrap().spec;
+        let rows = vec![vec![5i32; spec.prompt_len]];
+        let rep = reg.execute("llama-sim", &rows).unwrap();
+        assert_eq!(rep.batch, 1);
+        assert_eq!(rep.tokens.len(), 1);
+        assert_eq!(rep.tokens[0].len(), spec.decode_len);
+        assert!(rep.tokens[0].iter()
+                .all(|&t| (0..spec.vocab as i32).contains(&t)));
+    }
+
+    #[test]
+    fn execute_is_deterministic() {
+        let reg = small_registry();
+        let spec = &reg.entry("llama-sim").unwrap().spec;
+        let rows: Vec<Vec<i32>> = (0..2)
+            .map(|i| vec![(i * 17 + 3) as i32; spec.prompt_len]).collect();
+        let a = reg.execute("llama-sim", &rows).unwrap();
+        let b = reg.execute("llama-sim", &rows).unwrap();
+        assert_eq!(a.tokens, b.tokens);
+    }
+
+    #[test]
+    fn padding_rows_do_not_change_results() {
+        // 3 rows in a batch-4 artifact must equal the same rows bit-for-bit
+        // when run alone in smaller artifacts.
+        let reg = small_registry();
+        let spec = &reg.entry("llama-sim").unwrap().spec;
+        let rows: Vec<Vec<i32>> = (0..3)
+            .map(|i| {
+                (0..spec.prompt_len)
+                    .map(|j| ((i * 31 + j * 7) % spec.vocab) as i32)
+                    .collect()
+            }).collect();
+        let padded = reg.execute("llama-sim", &rows).unwrap();
+        assert_eq!(padded.batch, 4);
+        let solo = reg.execute("llama-sim", &rows[..1]).unwrap();
+        assert_eq!(padded.tokens[0], solo.tokens[0]);
+    }
+
+    #[test]
+    fn oversized_batch_uses_largest_and_fails() {
+        let reg = small_registry();
+        let spec = &reg.entry("llama-sim").unwrap().spec;
+        let rows = vec![vec![1i32; spec.prompt_len]; 5]; // > max batch 4
+        assert!(reg.execute("llama-sim", &rows).is_err());
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let reg = small_registry();
+        assert!(reg.execute("nope", &[vec![0; 16]]).is_err());
+        assert!(reg.obs("nope").is_err());
+    }
+
+    #[test]
+    fn set_obs_validates_artifact() {
+        let mut reg = small_registry();
+        assert!(reg.set_obs("llama-sim", 2).is_ok());
+        assert_eq!(reg.obs("llama-sim").unwrap(), 2);
+        assert!(reg.set_obs("llama-sim", 3).is_err());
+    }
+}

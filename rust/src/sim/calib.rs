@@ -1,0 +1,321 @@
+//! Cost-model calibration: measure the real system once, replay cheaply.
+//!
+//! `CostModel::measure` is simultaneously the paper's §III-D profiling:
+//! model load/unload times per mode (Fig 3) and per-batch execution
+//! times / throughput (Fig 4, OBS discovery).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::gpu::device::{GpuConfig, SimGpu};
+use crate::gpu::CcMode;
+use crate::runtime::Registry;
+use crate::util::json::Json;
+
+/// Measured costs for one model family.
+#[derive(Debug, Clone, Default)]
+pub struct ModelCosts {
+    pub load_s_plain: f64,
+    pub load_s_cc: f64,
+    pub unload_s: f64,
+    /// artifact batch size -> mean execute seconds.
+    pub exec_s_by_batch: BTreeMap<usize, f64>,
+    /// Which batch sizes OOM'd their workspace at profile time.
+    pub oom_batches: Vec<usize>,
+    /// Max-throughput batch size among non-OOM batches (§III-D2 OBS).
+    pub obs: usize,
+}
+
+impl ModelCosts {
+    /// Exec time for `batch`, interpolating to the nearest profiled size.
+    pub fn exec_s(&self, batch: usize) -> f64 {
+        if let Some(&e) = self.exec_s_by_batch.get(&batch) {
+            return e;
+        }
+        // nearest profiled batch at or above, else the largest below
+        self.exec_s_by_batch.range(batch..).next()
+            .or_else(|| self.exec_s_by_batch.range(..batch).next_back())
+            .map(|(_, &e)| e)
+            .unwrap_or(0.1)
+    }
+
+    pub fn load_s(&self, mode: CcMode) -> f64 {
+        match mode {
+            CcMode::On => self.load_s_cc,
+            CcMode::Off => self.load_s_plain,
+        }
+    }
+
+    /// Throughput (req/s) at a profiled batch size (Fig 4's y-axis).
+    pub fn throughput_at(&self, batch: usize) -> f64 {
+        let e = self.exec_s(batch);
+        if e > 0.0 { batch as f64 / e } else { 0.0 }
+    }
+}
+
+/// The full cost table.
+#[derive(Debug, Clone, Default)]
+pub struct CostModel {
+    pub models: BTreeMap<String, ModelCosts>,
+    /// Per-row request+response payload transfer seconds, by mode.
+    pub io_s_per_row_plain: f64,
+    pub io_s_per_row_cc: f64,
+}
+
+impl CostModel {
+    pub fn costs(&self, model: &str) -> anyhow::Result<&ModelCosts> {
+        self.models.get(model).ok_or_else(|| anyhow::anyhow!(
+            "no calibrated costs for model {model:?}"))
+    }
+
+    pub fn io_s_per_row(&self, mode: CcMode) -> f64 {
+        match mode {
+            CcMode::On => self.io_s_per_row_cc,
+            CcMode::Off => self.io_s_per_row_plain,
+        }
+    }
+
+    /// Profile the real system: loads per mode (Fig 3), execution per
+    /// batch size (Fig 4), unloads, and per-row I/O.  `reps` controls
+    /// measurement repetitions.
+    pub fn measure(registry: &Registry, base: &GpuConfig, reps: usize)
+                   -> anyhow::Result<CostModel> {
+        assert!(reps >= 1);
+        let mut cm = CostModel::default();
+
+        // one device per mode for load profiling
+        let mut gpus = Vec::new();
+        for mode in [CcMode::Off, CcMode::On] {
+            gpus.push((mode, SimGpu::new(GpuConfig {
+                mode, ..base.clone()
+            })?));
+        }
+
+        for name in registry.names() {
+            let entry = registry.entry(&name)?;
+            let mut mc = ModelCosts::default();
+
+            // ---- load/unload per mode (Fig 3) ----
+            for (mode, gpu) in gpus.iter_mut() {
+                let mut total = 0.0;
+                let mut unload_total = 0.0;
+                for _ in 0..reps {
+                    let (buf, rep) = gpu.upload(&entry.weights.raw)?;
+                    total += rep.elapsed.as_secs_f64();
+                    unload_total += gpu.unload(buf).as_secs_f64();
+                }
+                let mean = total / reps as f64;
+                match mode {
+                    CcMode::Off => mc.load_s_plain = mean,
+                    CcMode::On => mc.load_s_cc = mean,
+                }
+                mc.unload_s = unload_total / (reps as f64 * 2.0)
+                    + mc.unload_s / 2.0; // average across both modes
+            }
+
+            // ---- execution per batch size (Fig 4) ----
+            // memory check against the device model: weights + workspace
+            let capacity = base.hbm_capacity;
+            for &b in entry.compiled_batch_sizes().iter() {
+                let need = entry.spec.weight_bytes()
+                    + entry.spec.batch_workspace_bytes(b);
+                if need > capacity {
+                    mc.oom_batches.push(b);
+                    continue;
+                }
+                let rows: Vec<Vec<i32>> = (0..b)
+                    .map(|i| {
+                        (0..entry.spec.prompt_len)
+                            .map(|j| ((i * 31 + j * 7) % entry.spec.vocab)
+                                 as i32)
+                            .collect()
+                    }).collect();
+                // warmup once, then measure
+                registry.execute(&name, &rows)?;
+                let mut total = 0.0;
+                for _ in 0..reps {
+                    let t0 = Instant::now();
+                    registry.execute(&name, &rows)?;
+                    total += t0.elapsed().as_secs_f64();
+                }
+                mc.exec_s_by_batch.insert(b, total / reps as f64);
+            }
+            anyhow::ensure!(!mc.exec_s_by_batch.is_empty(),
+                            "all batch sizes OOM for {name}");
+
+            // OBS: max throughput among profiled batches
+            mc.obs = mc.exec_s_by_batch.iter()
+                .max_by(|a, b| {
+                    let ta = *a.0 as f64 / a.1;
+                    let tb = *b.0 as f64 / b.1;
+                    ta.partial_cmp(&tb).unwrap()
+                })
+                .map(|(&b, _)| b).unwrap();
+
+            cm.models.insert(name, mc);
+        }
+
+        // ---- per-row I/O (prompt in + tokens out) ----
+        let spec = &registry.entry(&registry.names()[0])?.spec;
+        let row_bytes = 4 * (spec.prompt_len + spec.decode_len);
+        let payload = vec![0u8; row_bytes];
+        for (mode, gpu) in gpus.iter_mut() {
+            let mut total = 0.0;
+            for _ in 0..reps.max(3) {
+                let rep = gpu.io_transfer(
+                    crate::gpu::dma::Dir::HostToDevice, &payload)?;
+                total += rep.elapsed.as_secs_f64();
+            }
+            let mean = total / reps.max(3) as f64;
+            match mode {
+                CcMode::Off => cm.io_s_per_row_plain = mean,
+                CcMode::On => cm.io_s_per_row_cc = mean,
+            }
+        }
+        Ok(cm)
+    }
+
+    // ------------------------------------------------------ persistence
+
+    pub fn to_json(&self) -> Json {
+        let models = self.models.iter().map(|(name, mc)| {
+            (name.clone(), Json::obj(vec![
+                ("load_s_plain", Json::num(mc.load_s_plain)),
+                ("load_s_cc", Json::num(mc.load_s_cc)),
+                ("unload_s", Json::num(mc.unload_s)),
+                ("obs", Json::num(mc.obs as f64)),
+                ("oom_batches", Json::Arr(mc.oom_batches.iter()
+                    .map(|&b| Json::num(b as f64)).collect())),
+                ("exec_s_by_batch", Json::Obj(mc.exec_s_by_batch.iter()
+                    .map(|(&b, &e)| (b.to_string(), Json::num(e)))
+                    .collect())),
+            ]))
+        }).collect();
+        Json::obj(vec![
+            ("io_s_per_row_plain", Json::num(self.io_s_per_row_plain)),
+            ("io_s_per_row_cc", Json::num(self.io_s_per_row_cc)),
+            ("models", Json::Obj(models)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<CostModel> {
+        let mut cm = CostModel {
+            io_s_per_row_plain: j.req("io_s_per_row_plain")?.as_f64()
+                .unwrap_or(0.0),
+            io_s_per_row_cc: j.req("io_s_per_row_cc")?.as_f64()
+                .unwrap_or(0.0),
+            ..Default::default()
+        };
+        for (name, mj) in j.req("models")?.as_obj()
+            .ok_or_else(|| anyhow::anyhow!("models not an object"))?
+        {
+            let mut mc = ModelCosts {
+                load_s_plain: mj.req("load_s_plain")?.as_f64().unwrap_or(0.0),
+                load_s_cc: mj.req("load_s_cc")?.as_f64().unwrap_or(0.0),
+                unload_s: mj.req("unload_s")?.as_f64().unwrap_or(0.0),
+                obs: mj.req("obs")?.as_usize().unwrap_or(1),
+                ..Default::default()
+            };
+            if let Some(arr) = mj.req("oom_batches")?.as_arr() {
+                mc.oom_batches = arr.iter()
+                    .filter_map(|b| b.as_usize()).collect();
+            }
+            for (b, e) in mj.req("exec_s_by_batch")?.as_obj()
+                .ok_or_else(|| anyhow::anyhow!("exec_s not an object"))?
+            {
+                mc.exec_s_by_batch.insert(
+                    b.parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad batch {b:?}"))?,
+                    e.as_f64().unwrap_or(0.0));
+            }
+            cm.models.insert(name.clone(), mc);
+        }
+        Ok(cm)
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<CostModel> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Load a cached cost model, or (compile the registry and) measure
+    /// one and cache it.  Shared by the figure benches and examples so
+    /// the expensive profiling happens once per checkout.
+    pub fn load_or_measure(artifacts_dir: &Path, cache_path: &Path,
+                           base: &GpuConfig, reps: usize)
+                           -> anyhow::Result<CostModel> {
+        if cache_path.exists() {
+            return Self::load(cache_path);
+        }
+        let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
+        let registry = crate::runtime::Registry::load(&manifest, &[], &[])?;
+        let cm = Self::measure(&registry, base, reps)?;
+        cm.save(cache_path)?;
+        Ok(cm)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> CostModel {
+        let mut cm = CostModel {
+            io_s_per_row_plain: 0.001,
+            io_s_per_row_cc: 0.003,
+            ..Default::default()
+        };
+        let mut mc = ModelCosts {
+            load_s_plain: 0.3,
+            load_s_cc: 0.9,
+            unload_s: 0.006,
+            obs: 8,
+            ..Default::default()
+        };
+        mc.exec_s_by_batch.insert(1, 0.05);
+        mc.exec_s_by_batch.insert(8, 0.2);
+        mc.oom_batches.push(32);
+        cm.models.insert("llama-sim".into(), mc);
+        cm
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let cm = sample();
+        let j = cm.to_json();
+        let back = CostModel::from_json(&j).unwrap();
+        let a = back.costs("llama-sim").unwrap();
+        assert_eq!(a.obs, 8);
+        assert_eq!(a.oom_batches, vec![32]);
+        assert!((a.load_s_cc - 0.9).abs() < 1e-12);
+        assert!((a.exec_s(8) - 0.2).abs() < 1e-12);
+        assert!((back.io_s_per_row_cc - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exec_interpolates_to_nearest() {
+        let cm = sample();
+        let mc = cm.costs("llama-sim").unwrap();
+        assert_eq!(mc.exec_s(4), 0.2, "rounds up to batch 8");
+        assert_eq!(mc.exec_s(100), 0.2, "clamps down to largest");
+        assert_eq!(mc.exec_s(1), 0.05);
+    }
+
+    #[test]
+    fn throughput_and_mode_selectors() {
+        let cm = sample();
+        let mc = cm.costs("llama-sim").unwrap();
+        assert!((mc.throughput_at(8) - 40.0).abs() < 1e-9);
+        assert_eq!(mc.load_s(CcMode::On), 0.9);
+        assert_eq!(mc.load_s(CcMode::Off), 0.3);
+        assert!(cm.costs("missing").is_err());
+    }
+}

@@ -1,0 +1,94 @@
+//! Bursty on/off traffic (§III-C1): alternating periods of intense
+//! activity and idle phases — promotional campaigns, sudden viral load.
+//!
+//! An on/off renewal process: exponentially-distributed burst and idle
+//! durations; inside a burst, arrivals are Poisson at `burst_factor`
+//! times the configured mean rate; idle phases emit nothing.  The duty
+//! cycle is chosen so the long-run mean equals `mean_rps` (§III-C2).
+
+use crate::traffic::{dist, finalize, pick_model, rng::Pcg64, Arrival,
+                     TrafficPattern};
+
+pub struct BurstyPattern {
+    /// Rate multiplier inside a burst.
+    pub burst_factor: f64,
+    /// Mean burst length, seconds.
+    pub mean_burst_s: f64,
+}
+
+impl Default for BurstyPattern {
+    fn default() -> Self {
+        BurstyPattern { burst_factor: 4.0, mean_burst_s: 8.0 }
+    }
+}
+
+impl TrafficPattern for BurstyPattern {
+    fn name(&self) -> &'static str {
+        "bursty"
+    }
+
+    fn generate(&self, duration_s: f64, mean_rps: f64, models: &[String],
+                rng: &mut Pcg64) -> Vec<Arrival> {
+        assert!(mean_rps > 0.0 && !models.is_empty());
+        assert!(self.burst_factor > 1.0);
+        // duty cycle d with rate burst_factor*mean inside bursts:
+        //   d * burst_factor * mean = mean  =>  d = 1 / burst_factor
+        let duty = 1.0 / self.burst_factor;
+        let mean_idle_s = self.mean_burst_s * (1.0 - duty) / duty;
+        let burst_rate = mean_rps * self.burst_factor;
+
+        let mut out = Vec::with_capacity((duration_s * mean_rps) as usize);
+        let mut t = 0.0;
+        // start in a random phase so experiment start isn't always a burst
+        let mut in_burst = rng.next_f64() < duty;
+        while t < duration_s {
+            let phase_len = if in_burst {
+                dist::exponential(rng, 1.0 / self.mean_burst_s)
+            } else {
+                dist::exponential(rng, 1.0 / mean_idle_s)
+            };
+            if in_burst {
+                let mut bt = t + dist::exponential(rng, burst_rate);
+                while bt < (t + phase_len).min(duration_s) {
+                    out.push(Arrival { at_s: bt,
+                                       model: pick_model(models, rng) });
+                    bt += dist::exponential(rng, burst_rate);
+                }
+            }
+            t += phase_len;
+            in_burst = !in_burst;
+        }
+        finalize(out, duration_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_idle_gaps_and_dense_bursts() {
+        let mut rng = Pcg64::new(4);
+        let p = BurstyPattern::default();
+        let arr = p.generate(600.0, 4.0, &["m".to_string()], &mut rng);
+        let gaps: Vec<f64> = arr.windows(2)
+            .map(|w| w[1].at_s - w[0].at_s).collect();
+        let max_gap = gaps.iter().cloned().fold(0.0, f64::max);
+        // idle phases mean multi-second silences must exist at 4 rps
+        assert!(max_gap > 3.0, "expected idle gaps, max={max_gap}");
+        // and bursts mean many sub-100ms gaps
+        let tight = gaps.iter().filter(|g| **g < 0.1).count();
+        assert!(tight as f64 / gaps.len() as f64 > 0.2,
+                "expected dense bursts");
+    }
+
+    #[test]
+    fn long_run_mean_preserved() {
+        let mut rng = Pcg64::new(5);
+        let p = BurstyPattern::default();
+        // long horizon to average over many on/off cycles
+        let arr = p.generate(3600.0, 4.0, &["m".to_string()], &mut rng);
+        let rate = arr.len() as f64 / 3600.0;
+        assert!((rate - 4.0).abs() / 4.0 < 0.10, "rate {rate}");
+    }
+}

@@ -1,0 +1,150 @@
+//! Probability distributions used by the traffic generators.
+//!
+//! Gamma sampling via Marsaglia–Tsang (2000) with the Ahrens–Dieter
+//! boost for shape < 1; exponential via inverse CDF; Poisson via
+//! Knuth/inversion (small mean) or PTRS-free normal approximation
+//! fallback for large mean.
+
+use crate::traffic::rng::Pcg64;
+
+/// Standard normal via Box–Muller (polar form avoided; the cached-pair
+/// variant would make the generator stateful).
+pub fn normal(rng: &mut Pcg64) -> f64 {
+    let u1 = rng.next_f64_open();
+    let u2 = rng.next_f64();
+    (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+}
+
+/// Exponential with the given rate (mean 1/rate).
+pub fn exponential(rng: &mut Pcg64, rate: f64) -> f64 {
+    assert!(rate > 0.0);
+    -rng.next_f64_open().ln() / rate
+}
+
+/// Gamma(shape k, scale θ) — Marsaglia–Tsang squeeze method.
+pub fn gamma(rng: &mut Pcg64, shape: f64, scale: f64) -> f64 {
+    assert!(shape > 0.0 && scale > 0.0);
+    if shape < 1.0 {
+        // boost: Gamma(k) = Gamma(k+1) * U^(1/k)
+        let u = rng.next_f64_open();
+        return gamma(rng, shape + 1.0, scale) * u.powf(1.0 / shape);
+    }
+    let d = shape - 1.0 / 3.0;
+    let c = 1.0 / (9.0 * d).sqrt();
+    loop {
+        let x = normal(rng);
+        let v = 1.0 + c * x;
+        if v <= 0.0 {
+            continue;
+        }
+        let v3 = v * v * v;
+        let u = rng.next_f64_open();
+        if u < 1.0 - 0.0331 * x * x * x * x {
+            return d * v3 * scale;
+        }
+        if u.ln() < 0.5 * x * x + d * (1.0 - v3 + v3.ln()) {
+            return d * v3 * scale;
+        }
+    }
+}
+
+/// Poisson with the given mean.
+pub fn poisson(rng: &mut Pcg64, mean: f64) -> u64 {
+    assert!(mean >= 0.0);
+    if mean == 0.0 {
+        return 0;
+    }
+    if mean < 30.0 {
+        // Knuth: product of uniforms
+        let l = (-mean).exp();
+        let mut k = 0u64;
+        let mut p = 1.0;
+        loop {
+            p *= rng.next_f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+    // normal approximation for large mean (adequate for burst sizing)
+    let x = mean + mean.sqrt() * normal(rng);
+    x.max(0.0).round() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_stats(mut f: impl FnMut(&mut Pcg64) -> f64, n: usize)
+                    -> (f64, f64) {
+        let mut rng = Pcg64::new(1234);
+        let xs: Vec<f64> = (0..n).map(|_| f(&mut rng)).collect();
+        (crate::util::mean(&xs), crate::util::stddev(&xs))
+    }
+
+    #[test]
+    fn normal_moments() {
+        let (m, s) = sample_stats(normal, 200_000);
+        assert!(m.abs() < 0.01, "mean {m}");
+        assert!((s - 1.0).abs() < 0.01, "std {s}");
+    }
+
+    #[test]
+    fn exponential_moments() {
+        let (m, s) = sample_stats(|r| exponential(r, 4.0), 200_000);
+        assert!((m - 0.25).abs() < 0.005, "mean {m}");
+        assert!((s - 0.25).abs() < 0.01, "std {s}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_above_one() {
+        // Gamma(k=2, θ=3): mean 6, var 18
+        let (m, s) = sample_stats(|r| gamma(r, 2.0, 3.0), 200_000);
+        assert!((m - 6.0).abs() < 0.1, "mean {m}");
+        assert!((s - 18f64.sqrt()).abs() < 0.1, "std {s}");
+    }
+
+    #[test]
+    fn gamma_moments_shape_below_one() {
+        // Gamma(k=0.5, θ=2): mean 1, var 2 — the irregular/spiky regime
+        // the paper's gamma traffic uses.
+        let (m, s) = sample_stats(|r| gamma(r, 0.5, 2.0), 200_000);
+        assert!((m - 1.0).abs() < 0.05, "mean {m}");
+        assert!((s - 2f64.sqrt()).abs() < 0.05, "std {s}");
+    }
+
+    #[test]
+    fn gamma_always_positive() {
+        let mut rng = Pcg64::new(5);
+        for _ in 0..10_000 {
+            assert!(gamma(&mut rng, 0.3, 1.0) > 0.0);
+        }
+    }
+
+    #[test]
+    fn poisson_small_mean() {
+        let mut rng = Pcg64::new(6);
+        let n = 100_000;
+        let mean = 3.5;
+        let total: u64 = (0..n).map(|_| poisson(&mut rng, mean)).sum();
+        let m = total as f64 / n as f64;
+        assert!((m - mean).abs() < 0.05, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_large_mean_normal_path() {
+        let mut rng = Pcg64::new(7);
+        let n = 50_000;
+        let mean = 100.0;
+        let total: u64 = (0..n).map(|_| poisson(&mut rng, mean)).sum();
+        let m = total as f64 / n as f64;
+        assert!((m - mean).abs() < 0.5, "mean {m}");
+    }
+
+    #[test]
+    fn poisson_zero_mean() {
+        let mut rng = Pcg64::new(8);
+        assert_eq!(poisson(&mut rng, 0.0), 0);
+    }
+}

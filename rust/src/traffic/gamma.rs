@@ -1,0 +1,62 @@
+//! Gamma-distributed inter-arrival traffic (§III-C1).
+//!
+//! "Characterized by irregular inter-arrival times, where some requests
+//! occur in rapid succession while others are spaced apart" — we use a
+//! shape parameter < 1, which produces exactly that clumpy behaviour
+//! (CV = 1/sqrt(k) > 1).  The scale is set so the mean inter-arrival
+//! time is 1/mean_rps, preserving the equal-mean normalization.
+
+use crate::traffic::{dist, finalize, pick_model, rng::Pcg64, Arrival,
+                     TrafficPattern};
+
+pub struct GammaPattern {
+    /// Gamma shape k; < 1 gives bursty-ish irregular arrivals (CV>1).
+    pub shape: f64,
+}
+
+impl Default for GammaPattern {
+    fn default() -> Self {
+        GammaPattern { shape: 0.5 }
+    }
+}
+
+impl TrafficPattern for GammaPattern {
+    fn name(&self) -> &'static str {
+        "gamma"
+    }
+
+    fn generate(&self, duration_s: f64, mean_rps: f64, models: &[String],
+                rng: &mut Pcg64) -> Vec<Arrival> {
+        assert!(mean_rps > 0.0 && !models.is_empty());
+        // mean inter-arrival = shape * scale = 1 / mean_rps
+        let scale = 1.0 / (mean_rps * self.shape);
+        let mut t = 0.0;
+        let mut out = Vec::with_capacity((duration_s * mean_rps) as usize);
+        loop {
+            t += dist::gamma(rng, self.shape, scale);
+            if t >= duration_s {
+                break;
+            }
+            out.push(Arrival { at_s: t, model: pick_model(models, rng) });
+        }
+        finalize(out, duration_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn irregular_interarrivals_cv_above_one() {
+        let mut rng = Pcg64::new(3);
+        let p = GammaPattern::default();
+        let arr = p.generate(600.0, 4.0, &["m".to_string()], &mut rng);
+        let gaps: Vec<f64> = arr.windows(2)
+            .map(|w| w[1].at_s - w[0].at_s).collect();
+        let m = crate::util::mean(&gaps);
+        let cv = crate::util::stddev(&gaps) / m;
+        assert!(cv > 1.1, "gamma traffic should be irregular, cv={cv}");
+        assert!((m - 0.25).abs() < 0.02, "mean gap {m}");
+    }
+}

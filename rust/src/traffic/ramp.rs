@@ -1,0 +1,92 @@
+//! Ramp traffic (§III-C1): "gradually increases to a peak before
+//! tapering off" — scheduled pipelines and system warm-ups.
+//!
+//! A triangular rate profile r(t) peaking at `peak_frac * duration`;
+//! the peak height is 2x the mean so the time-integral equals
+//! mean_rps * duration (§III-C2).  Arrivals are drawn from the
+//! inhomogeneous Poisson process with rate r(t) via thinning.
+
+use crate::traffic::{dist, finalize, pick_model, rng::Pcg64, Arrival,
+                     TrafficPattern};
+
+pub struct RampPattern {
+    /// Where the peak sits, as a fraction of the duration (0, 1).
+    pub peak_frac: f64,
+}
+
+impl Default for RampPattern {
+    fn default() -> Self {
+        RampPattern { peak_frac: 0.5 }
+    }
+}
+
+impl RampPattern {
+    /// Instantaneous rate at time t for the triangular profile.
+    fn rate_at(&self, t: f64, duration_s: f64, mean_rps: f64) -> f64 {
+        let peak_t = self.peak_frac * duration_s;
+        let peak_rate = 2.0 * mean_rps; // triangle area == mean * duration
+        if t <= peak_t {
+            peak_rate * (t / peak_t.max(1e-9))
+        } else {
+            peak_rate * ((duration_s - t) / (duration_s - peak_t).max(1e-9))
+        }
+    }
+}
+
+impl TrafficPattern for RampPattern {
+    fn name(&self) -> &'static str {
+        "ramp"
+    }
+
+    fn generate(&self, duration_s: f64, mean_rps: f64, models: &[String],
+                rng: &mut Pcg64) -> Vec<Arrival> {
+        assert!(mean_rps > 0.0 && !models.is_empty());
+        let lambda_max = 2.0 * mean_rps;
+        let mut out = Vec::with_capacity((duration_s * mean_rps) as usize);
+        let mut t = 0.0;
+        // Lewis–Shedler thinning against the constant majorant
+        while t < duration_s {
+            t += dist::exponential(rng, lambda_max);
+            if t >= duration_s {
+                break;
+            }
+            let accept = rng.next_f64()
+                < self.rate_at(t, duration_s, mean_rps) / lambda_max;
+            if accept {
+                out.push(Arrival { at_s: t, model: pick_model(models, rng) });
+            }
+        }
+        finalize(out, duration_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rate_rises_then_falls() {
+        let mut rng = Pcg64::new(6);
+        let p = RampPattern::default();
+        let dur = 600.0;
+        let arr = p.generate(dur, 4.0, &["m".to_string()], &mut rng);
+        // quarter-window counts: middle half must dominate the edges
+        let count = |lo: f64, hi: f64| {
+            arr.iter().filter(|a| a.at_s >= lo && a.at_s < hi).count()
+        };
+        let q = dur / 4.0;
+        let first = count(0.0, q);
+        let middle = count(q, 3.0 * q);
+        let last = count(3.0 * q, dur);
+        assert!(middle as f64 > 1.3 * (first + last) as f64,
+                "triangle shape violated: {first} {middle} {last}");
+    }
+
+    #[test]
+    fn peak_rate_is_double_mean() {
+        let p = RampPattern::default();
+        let peak = p.rate_at(300.0, 600.0, 4.0);
+        assert!((peak - 8.0).abs() < 1e-9);
+        assert_eq!(p.rate_at(0.0, 600.0, 4.0), 0.0);
+    }
+}

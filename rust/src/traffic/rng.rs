@@ -1,0 +1,132 @@
+//! PCG64 (PCG-XSL-RR 128/64) pseudo-random generator.
+//!
+//! Deterministic, seedable, and good enough statistically for workload
+//! generation (the `rand` crate is unavailable offline).  Reference:
+//! O'Neill, "PCG: A Family of Simple Fast Space-Efficient Statistically
+//! Good Algorithms for Random Number Generation".
+
+const MUL: u128 = 0x2360ed051fc65da44385df649fccf645;
+const INC: u128 = 0x5851f42d4c957f2d14057b7ef767814f;
+
+/// PCG-XSL-RR 128/64.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+}
+
+impl Pcg64 {
+    /// Seed the generator; distinct seeds give independent-looking streams.
+    pub fn new(seed: u64) -> Pcg64 {
+        let mut r = Pcg64 { state: (seed as u128).wrapping_mul(0x9E3779B97F4A7C15) ^ 0xcafef00dd15ea5e5 };
+        // advance a few steps so small seeds decorrelate
+        for _ in 0..4 {
+            r.next_u64();
+        }
+        r
+    }
+
+    /// Derive an independent child stream (for per-thread RNGs).
+    pub fn fork(&mut self, tag: u64) -> Pcg64 {
+        Pcg64::new(self.next_u64() ^ tag.wrapping_mul(0xD1B54A32D192ED03))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MUL).wrapping_add(INC);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f64 in (0, 1] — safe as a log() argument.
+    pub fn next_f64_open(&mut self) -> f64 {
+        1.0 - self.next_f64()
+    }
+
+    /// Uniform u64 in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(123);
+        let mut b = Pcg64::new(123);
+        for _ in 0..1000 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_decorrelate() {
+        let mut a = Pcg64::new(1);
+        let mut b = Pcg64::new(2);
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn f64_in_unit_interval_and_uniform_ish() {
+        let mut r = Pcg64::new(42);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn below_unbiased_small_range() {
+        let mut r = Pcg64::new(9);
+        let mut counts = [0usize; 7];
+        for _ in 0..70_000 {
+            counts[r.below(7) as usize] += 1;
+        }
+        for &c in &counts {
+            // each bucket expects 10_000, allow ±5%
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn fork_independent() {
+        let mut parent = Pcg64::new(5);
+        let mut a = parent.fork(1);
+        let mut b = parent.fork(2);
+        let same = (0..1000).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+
+    #[test]
+    fn open_interval_never_zero() {
+        let mut r = Pcg64::new(77);
+        for _ in 0..100_000 {
+            assert!(r.next_f64_open() > 0.0);
+        }
+    }
+}

@@ -1,0 +1,106 @@
+//! Arrival-trace emit/replay — the analogue of the paper's Instructlab
+//! jsonl → json request files (§III-A step 1).
+//!
+//! A trace is a jsonl file with one arrival per line:
+//! `{"at_s": 1.25, "model": "llama-sim", "prompt": "..."}`.
+//! Traces make experiments exactly repeatable across modes: the same
+//! trace is replayed in CC and No-CC so both see identical load.
+
+use std::io::{BufRead, Write};
+use std::path::Path;
+
+use crate::traffic::Arrival;
+use crate::util::json::Json;
+use crate::workload::promptgen::PromptGen;
+
+/// Write arrivals (with generated prompts) as a jsonl trace.
+pub fn write_trace(path: &Path, arrivals: &[Arrival],
+                   prompts: &mut PromptGen) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for a in arrivals {
+        let line = Json::obj(vec![
+            ("at_s", Json::num(a.at_s)),
+            ("model", Json::str(a.model.clone())),
+            ("prompt", Json::str(prompts.next_prompt(&a.model))),
+        ]);
+        writeln!(f, "{line}")?;
+    }
+    f.flush()?;
+    Ok(())
+}
+
+/// One replayed trace entry.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub at_s: f64,
+    pub model: String,
+    pub prompt: String,
+}
+
+/// Read a jsonl trace back.
+pub fn read_trace(path: &Path) -> anyhow::Result<Vec<TraceEntry>> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening trace {path:?}: {e}"))?;
+    let mut out = Vec::new();
+    for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let j = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        out.push(TraceEntry {
+            at_s: j.req("at_s")?.as_f64()
+                .ok_or_else(|| anyhow::anyhow!("at_s not a number"))?,
+            model: j.req("model")?.as_str()
+                .ok_or_else(|| anyhow::anyhow!("model not a string"))?
+                .to_string(),
+            prompt: j.req("prompt")?.as_str().unwrap_or_default().to_string(),
+        });
+    }
+    anyhow::ensure!(out.windows(2).all(|w| w[0].at_s <= w[1].at_s),
+                    "trace not sorted by at_s");
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::rng::Pcg64;
+    use crate::traffic::pattern_by_name;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sincere_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+
+        let mut rng = Pcg64::new(11);
+        let p = pattern_by_name("gamma").unwrap();
+        let arr = p.generate(30.0, 2.0, &["llama-sim".to_string()], &mut rng);
+        let mut pg = PromptGen::new(42, 16);
+        write_trace(&path, &arr, &mut pg).unwrap();
+
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.len(), arr.len());
+        for (a, b) in arr.iter().zip(&back) {
+            assert!((a.at_s - b.at_s).abs() < 1e-9);
+            assert_eq!(a.model, b.model);
+            assert!(!b.prompt.is_empty());
+        }
+    }
+
+    #[test]
+    fn rejects_unsorted() {
+        let dir = std::env::temp_dir().join("sincere_trace_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.jsonl");
+        std::fs::write(&path,
+            "{\"at_s\":2.0,\"model\":\"m\",\"prompt\":\"x\"}\n\
+             {\"at_s\":1.0,\"model\":\"m\",\"prompt\":\"y\"}\n").unwrap();
+        assert!(read_trace(&path).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! CSV writing/reading for the three result-file classes the paper's
+//! bash driver produced: request-level details, throughput metrics, and
+//! system-monitor logs.  RFC-4180-style quoting, header-checked reads.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Incremental CSV writer with a fixed header.
+pub struct CsvWriter {
+    out: Box<dyn Write + Send>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create a file-backed writer, writing the header immediately.
+    pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let f = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating {path:?}: {e}"))?;
+        Self::from_writer(Box::new(std::io::BufWriter::new(f)), header)
+    }
+
+    /// Writer over any sink (used by tests with `Vec<u8>` buffers).
+    pub fn from_writer(mut out: Box<dyn Write + Send>, header: &[&str])
+                       -> anyhow::Result<CsvWriter> {
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, cols: header.len() })
+    }
+
+    /// Write one row; must match the header width.
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        anyhow::ensure!(fields.len() == self.cols,
+                        "row has {} fields, header has {}", fields.len(),
+                        self.cols);
+        let line: Vec<String> = fields.iter().map(|f| quote(f)).collect();
+        writeln!(self.out, "{}", line.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> anyhow::Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Quote a field if it contains a comma, quote or newline.
+fn quote(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+/// Parsed CSV: header plus rows of equal width.
+#[derive(Debug, Clone)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn read(path: &Path) -> anyhow::Result<CsvTable> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path:?}: {e}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<CsvTable> {
+        let mut lines = split_records(text).into_iter();
+        let header = parse_record(
+            &lines.next().ok_or_else(|| anyhow::anyhow!("empty CSV"))?)?;
+        let mut rows = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                continue;
+            }
+            let row = parse_record(&line)?;
+            anyhow::ensure!(row.len() == header.len(),
+                            "row width {} != header width {}", row.len(),
+                            header.len());
+            rows.push(row);
+        }
+        Ok(CsvTable { header, rows })
+    }
+
+    /// Column index by name.
+    pub fn col(&self, name: &str) -> anyhow::Result<usize> {
+        self.header.iter().position(|h| h == name)
+            .ok_or_else(|| anyhow::anyhow!("no CSV column {name:?}"))
+    }
+
+    /// All values of a column parsed as f64.
+    pub fn f64_col(&self, name: &str) -> anyhow::Result<Vec<f64>> {
+        let i = self.col(name)?;
+        self.rows.iter()
+            .map(|r| r[i].parse::<f64>()
+                 .map_err(|e| anyhow::anyhow!("bad f64 {:?}: {e}", r[i])))
+            .collect()
+    }
+}
+
+/// Split on newlines, respecting quoted fields that contain newlines.
+fn split_records(text: &str) -> Vec<String> {
+    let mut records = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    for c in text.chars() {
+        match c {
+            '"' => {
+                in_quotes = !in_quotes;
+                cur.push(c);
+            }
+            '\n' if !in_quotes => {
+                records.push(std::mem::take(&mut cur));
+            }
+            '\r' => {}
+            c => cur.push(c),
+        }
+    }
+    if !cur.is_empty() {
+        records.push(cur);
+    }
+    records
+}
+
+fn parse_record(line: &str) -> anyhow::Result<Vec<String>> {
+    let mut fields = Vec::new();
+    let mut cur = String::new();
+    let mut chars = line.chars().peekable();
+    let mut in_quotes = false;
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    cur.push('"');
+                    chars.next();
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => fields.push(std::mem::take(&mut cur)),
+            c => cur.push(c),
+        }
+    }
+    anyhow::ensure!(!in_quotes, "unterminated quote in CSV record");
+    fields.push(cur);
+    Ok(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_quoting() {
+        let dir = std::env::temp_dir().join("sincere_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["plain".into(), "has,comma".into()]).unwrap();
+            w.row(&["has\"quote".into(), "multi\nline".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let t = CsvTable::read(&path).unwrap();
+        assert_eq!(t.header, vec!["a", "b"]);
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][1], "has,comma");
+        assert_eq!(t.rows[1][0], "has\"quote");
+        assert_eq!(t.rows[1][1], "multi\nline");
+    }
+
+    #[test]
+    fn width_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("sincere_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.row(&["only-one".into()]).is_err());
+    }
+
+    #[test]
+    fn f64_column() {
+        let t = CsvTable::parse("x,y\n1,2.5\n3,4.5\n").unwrap();
+        assert_eq!(t.f64_col("y").unwrap(), vec![2.5, 4.5]);
+        assert!(t.f64_col("z").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_ragged() {
+        assert!(CsvTable::parse("a,b\n1\n").is_err());
+    }
+}

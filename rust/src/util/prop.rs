@@ -1,0 +1,147 @@
+//! In-repo property-testing mini-framework (proptest is unavailable in
+//! the offline crate set).
+//!
+//! Provides deterministic seeded generators and a `forall` runner with
+//! greedy input shrinking: when a case fails, the runner re-derives
+//! smaller inputs from shrunken seeds/sizes and reports the smallest
+//! failure it can find.  Used by unit tests across the coordinator,
+//! traffic, and gpu modules, and by `rust/tests/properties.rs`.
+
+use crate::traffic::rng::Pcg64;
+
+/// Test-case generation context: a seeded RNG plus a size budget that
+/// shrinks during failure minimization.
+pub struct Gen {
+    pub rng: Pcg64,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Gen {
+        Gen { rng: Pcg64::new(seed), size }
+    }
+
+    /// Uniform usize in [lo, hi] (inclusive), clamped by the size budget.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        let hi = hi.min(lo + self.size);
+        if hi <= lo {
+            return lo;
+        }
+        lo + (self.rng.next_u64() as usize) % (hi - lo + 1)
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.next_f64() * (hi - lo)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty());
+        &xs[(self.rng.next_u64() as usize) % xs.len()]
+    }
+
+    /// A vector of generated items with length in [0, max_len] scaled by
+    /// the size budget.
+    pub fn vec<T>(&mut self, max_len: usize,
+                  mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let len = self.usize_in(0, max_len);
+        (0..len).map(|_| f(self)).collect()
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` random cases of the property; on failure, attempt to
+/// shrink by re-running with smaller size budgets, and panic with the
+/// smallest failing seed/size so the case can be replayed.
+pub fn forall(name: &str, cases: usize,
+              prop: impl Fn(&mut Gen) -> CaseResult) {
+    for case in 0..cases {
+        let seed = 0x5EED ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let size = 4 + case * 97 % 256; // vary sizes deterministically
+        let mut g = Gen::new(seed, size);
+        if let Err(msg) = prop(&mut g) {
+            // greedy shrink: smaller size budgets with the same seed
+            let mut best: (usize, String) = (size, msg);
+            let mut s = size / 2;
+            loop {
+                let mut g2 = Gen::new(seed, s);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (s, m2);
+                    if s == 0 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, size={}):\n  {}",
+                best.0, best.1,
+            );
+        }
+    }
+}
+
+/// Assert helper returning `CaseResult` — keeps property bodies terse.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("usize_in bounds", 200, |g| {
+            let x = g.usize_in(3, 10);
+            prop_assert!((3..=10).contains(&x), "x={x} out of [3,10]");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn forall_reports_failure() {
+        forall("always fails on big", 50, |g| {
+            let x = g.usize_in(0, 100);
+            prop_assert!(x < 2, "x={x} >= 2");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gen_is_deterministic() {
+        let mut a = Gen::new(42, 10);
+        let mut b = Gen::new(42, 10);
+        for _ in 0..100 {
+            assert_eq!(a.u64(), b.u64());
+        }
+    }
+
+    #[test]
+    fn f64_in_bounds() {
+        let mut g = Gen::new(7, 8);
+        for _ in 0..1000 {
+            let x = g.f64_in(-2.0, 3.0);
+            assert!((-2.0..3.0).contains(&x));
+        }
+    }
+}

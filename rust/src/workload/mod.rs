@@ -1,0 +1,9 @@
+//! Workload synthesis: prompts and tokenization.
+//!
+//! Stands in for the paper's Instructlab-generated jsonl corpus
+//! (§III-A step 1): prompt *content* never reaches the measured path
+//! (output length is fixed at `decode_len` tokens for consistency,
+//! §III-D2), so a deterministic synthetic corpus preserves behaviour.
+
+pub mod promptgen;
+pub mod tokenizer;

@@ -1,0 +1,69 @@
+//! Deterministic byte-hash tokenizer.
+//!
+//! The serving path needs prompts as fixed-length `i32` token rows in
+//! `[0, vocab)`.  Real subword vocabularies are irrelevant to the
+//! measured path (the model is synthetic), so we hash whitespace-split
+//! words into the vocabulary, then truncate/pad to `prompt_len` — stable
+//! across runs and platforms.
+
+/// Tokenize `text` into exactly `prompt_len` ids in `[0, vocab)`.
+///
+/// Padding uses token 0; truncation keeps the prompt head (instruction
+/// prefix carries the task).
+pub fn tokenize(text: &str, prompt_len: usize, vocab: u32) -> Vec<i32> {
+    assert!(vocab > 1);
+    let mut ids: Vec<i32> = text.split_whitespace()
+        .map(|w| (fnv1a(w.as_bytes()) % (vocab as u64 - 1) + 1) as i32)
+        .take(prompt_len)
+        .collect();
+    ids.resize(prompt_len, 0);
+    ids
+}
+
+/// FNV-1a 64-bit — tiny, stable, good avalanche for short words.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_length_and_range() {
+        let ids = tokenize("hello confidential computing world", 16, 512);
+        assert_eq!(ids.len(), 16);
+        assert!(ids.iter().all(|&t| (0..512).contains(&t)));
+        // 4 real tokens then zero padding
+        assert!(ids[..4].iter().all(|&t| t != 0));
+        assert!(ids[4..].iter().all(|&t| t == 0));
+    }
+
+    #[test]
+    fn truncates_long_input() {
+        let text = (0..100).map(|i| format!("w{i}")).collect::<Vec<_>>()
+            .join(" ");
+        let ids = tokenize(&text, 8, 512);
+        assert_eq!(ids.len(), 8);
+        assert!(ids.iter().all(|&t| t != 0));
+    }
+
+    #[test]
+    fn deterministic_and_word_sensitive() {
+        let a = tokenize("alpha beta", 4, 768);
+        let b = tokenize("alpha beta", 4, 768);
+        let c = tokenize("alpha gamma", 4, 768);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn empty_input_is_all_padding() {
+        assert!(tokenize("", 8, 512).iter().all(|&t| t == 0));
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration: the HTTP front-end end-to-end over real sockets —
+//! requests in, batched PJRT execution, JSON responses out.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+
+use sincere::config::RunConfig;
+use sincere::coordinator::http::{http_call, run_http};
+use sincere::runtime::{Manifest, Registry};
+use sincere::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn http_serves_inference_over_sockets() {
+    let manifest = Manifest::load(&artifacts_dir()).expect(
+        "run `make artifacts` before cargo test");
+    let registry = Registry::load(
+        &manifest, &["llama-sim".to_string()], &[1, 2, 4]).unwrap();
+
+    let mut cfg = RunConfig {
+        artifacts_dir: artifacts_dir(),
+        sla_s: 30.0,
+        models: vec!["llama-sim".into()],
+        ..RunConfig::default()
+    };
+    cfg.gpu.no_throttle = true;
+    cfg.timeout_frac = 0.02; // dispatch promptly in the test
+
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let (addr_tx, addr_rx) = mpsc::channel();
+
+    // clients drive the server from worker threads; the scheduler runs
+    // on this thread (xla types are !Send)
+    let client_shutdown = shutdown.clone();
+    let clients = std::thread::spawn(move || {
+        let addr = addr_rx.recv().unwrap();
+
+        // health + stats
+        let (code, body) = http_call(&addr, "GET", "/healthz", None)
+            .unwrap();
+        assert_eq!(code, 200, "{body}");
+        let (code, _) = http_call(&addr, "GET", "/stats", None).unwrap();
+        assert_eq!(code, 200);
+
+        // three concurrent inference calls -> should batch together
+        let mut joins = Vec::new();
+        for i in 0..3 {
+            let addr = addr;
+            joins.push(std::thread::spawn(move || {
+                let body = format!(
+                    "{{\"model\":\"llama-sim\",\"prompt\":\"request {i} \
+                     summarize the confidential computing benchmark\"}}");
+                http_call(&addr, "POST", "/infer", Some(&body)).unwrap()
+            }));
+        }
+        let responses: Vec<(u16, String)> =
+            joins.into_iter().map(|j| j.join().unwrap()).collect();
+        for (code, body) in &responses {
+            assert_eq!(*code, 200, "{body}");
+            let j = Json::parse(body).unwrap();
+            let tokens = j.req("tokens").unwrap().as_arr().unwrap();
+            assert_eq!(tokens.len(), 50, "decode_len tokens");
+            assert!(j.req("latency_s").unwrap().as_f64().unwrap() > 0.0);
+        }
+        // different prompts should generally produce different outputs
+        assert!(responses.iter().any(|(_, b)| b != &responses[0].1)
+                || responses.len() == 1);
+
+        // bad requests are rejected cleanly
+        let (code, _) = http_call(&addr, "POST", "/infer",
+                                  Some("{not json")).unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http_call(
+            &addr, "POST", "/infer",
+            Some("{\"model\":\"gpt-5\",\"prompt\":\"x\"}")).unwrap();
+        assert_eq!(code, 400);
+        let (code, _) = http_call(&addr, "GET", "/nope", None).unwrap();
+        assert_eq!(code, 404);
+
+        client_shutdown.store(true, Ordering::Relaxed);
+    });
+
+    let stats = run_http(&cfg, &registry, "127.0.0.1:0", shutdown,
+                         move |addr| {
+                             addr_tx.send(addr).unwrap();
+                         }).unwrap();
+    clients.join().unwrap();
+    assert_eq!(stats.completed.load(Ordering::Relaxed), 3);
+    assert_eq!(stats.rejected.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.expired.load(Ordering::Relaxed), 0);
+}

@@ -1,0 +1,154 @@
+//! Integration: cost-model calibration + DES, including a DES-vs-real
+//! cross-check on an unthrottled configuration.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::coordinator::serve;
+use sincere::gpu::device::GpuConfig;
+use sincere::gpu::CcMode;
+use sincere::runtime::registry::SharedRegistry;
+use sincere::runtime::{Manifest, Registry};
+use sincere::sim::{simulate, CostModel};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "run `make artifacts` before cargo test"))
+}
+
+fn registry() -> &'static SharedRegistry {
+    static REG: OnceLock<SharedRegistry> = OnceLock::new();
+    REG.get_or_init(|| SharedRegistry::new(Registry::load(
+        manifest(),
+        &["llama-sim".to_string(), "gemma-sim".to_string()],
+        &[1, 2, 4, 8]).unwrap()))
+}
+
+fn measured_costs() -> &'static CostModel {
+    static CM: OnceLock<CostModel> = OnceLock::new();
+    CM.get_or_init(|| {
+        let cfg = GpuConfig { no_throttle: true, ..GpuConfig::default() };
+        registry().with(|reg| CostModel::measure(reg, &cfg, 1)).unwrap()
+    })
+}
+
+#[test]
+fn measure_produces_sane_costs() {
+    let cm = measured_costs();
+    for name in ["llama-sim", "gemma-sim"] {
+        let mc = cm.costs(name).unwrap();
+        assert!(mc.load_s_cc > mc.load_s_plain,
+                "{name}: CC load {} <= plain {}", mc.load_s_cc,
+                mc.load_s_plain);
+        assert!(mc.unload_s < 0.1);
+        assert!(!mc.exec_s_by_batch.is_empty());
+        // exec time grows with batch but sublinearly
+        let e1 = mc.exec_s(1);
+        let e8 = mc.exec_s(8);
+        assert!(e8 > e1 * 0.8, "{name}: exec b8 {e8} vs b1 {e1}");
+        assert!(e8 < e1 * 8.0, "{name}: no batching benefit");
+        assert!(mc.exec_s_by_batch.contains_key(&mc.obs));
+    }
+    // CC I/O is costlier than plain
+    assert!(cm.io_s_per_row_cc >= cm.io_s_per_row_plain);
+}
+
+#[test]
+fn costs_json_roundtrip_through_disk() {
+    let cm = measured_costs();
+    let path = std::env::temp_dir().join("sincere_cm_roundtrip.json");
+    cm.save(&path).unwrap();
+    let back = CostModel::load(&path).unwrap();
+    for name in ["llama-sim", "gemma-sim"] {
+        let a = cm.costs(name).unwrap();
+        let b = back.costs(name).unwrap();
+        assert!((a.load_s_cc - b.load_s_cc).abs() < 1e-9);
+        assert_eq!(a.obs, b.obs);
+        assert_eq!(a.exec_s_by_batch.len(), b.exec_s_by_batch.len());
+    }
+}
+
+fn sim_cfg() -> RunConfig {
+    let mut cfg = RunConfig {
+        artifacts_dir: artifacts_dir(),
+        duration_s: 60.0,
+        drain_s: 6.0,
+        mean_rps: 4.0,
+        sla_s: 3.0,
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    };
+    cfg.gpu.no_throttle = true;
+    cfg
+}
+
+#[test]
+fn des_matches_real_serve_within_tolerance() {
+    // Same unthrottled config, same seed: DES with measured costs should
+    // land near the real run on the aggregate metrics.
+    let mut cfg = sim_cfg();
+    cfg.duration_s = 10.0;
+    let (real, _) = registry().with(|reg| serve(&cfg, reg)).unwrap();
+    let des = simulate(&cfg, manifest(), measured_costs()).unwrap();
+
+    assert_eq!(des.generated, real.generated,
+               "same seed must give the same schedule");
+    let done_ratio = des.completed as f64 / real.completed.max(1) as f64;
+    assert!((0.5..2.0).contains(&done_ratio),
+            "completed: des {} vs real {}", des.completed, real.completed);
+    if real.latency_mean_s > 0.0 && des.latency_mean_s > 0.0 {
+        let lat_ratio = des.latency_mean_s / real.latency_mean_s;
+        assert!((0.2..5.0).contains(&lat_ratio),
+                "latency: des {:.3} vs real {:.3}", des.latency_mean_s,
+                real.latency_mean_s);
+    }
+}
+
+#[test]
+fn des_sla_attainment_monotone_in_sla() {
+    // A looser SLA can only improve attainment (same schedule/strategy).
+    let cm = measured_costs();
+    let mut prev = -1.0;
+    for sla in [1.0, 3.0, 8.0] {
+        let mut cfg = sim_cfg();
+        cfg.sla_s = sla;
+        cfg.drain_s = 8.0; // keep the served set comparable across SLAs
+        let s = simulate(&cfg, manifest(), cm).unwrap();
+        assert!(s.sla_attainment >= prev - 0.02,
+                "attainment fell from {prev} to {} at sla {sla}",
+                s.sla_attainment);
+        prev = s.sla_attainment;
+    }
+}
+
+#[test]
+fn des_cc_consistently_worse_or_equal() {
+    let cm = measured_costs();
+    for pattern in ["gamma", "bursty", "ramp"] {
+        let run = |mode: CcMode| {
+            let mut cfg = sim_cfg();
+            cfg.pattern = pattern.into();
+            cfg.mode = mode;
+            cfg.gpu.mode = mode;
+            simulate(&cfg, manifest(), cm).unwrap()
+        };
+        let cc = run(CcMode::On);
+        let nc = run(CcMode::Off);
+        assert!(cc.latency_mean_s >= nc.latency_mean_s * 0.95,
+                "{pattern}: CC latency {} < No-CC {}", cc.latency_mean_s,
+                nc.latency_mean_s);
+    }
+}
+
+#[test]
+fn des_rejects_unknown_model() {
+    let mut cfg = sim_cfg();
+    cfg.models = vec!["gpt-5".into()];
+    assert!(simulate(&cfg, manifest(), measured_costs()).is_err());
+}

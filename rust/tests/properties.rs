@@ -1,0 +1,294 @@
+//! Property-based tests over coordinator/substrate invariants, using the
+//! in-repo `util::prop` framework (offline stand-in for proptest).
+
+use sincere::coordinator::queues::ModelQueues;
+use sincere::coordinator::request::Request;
+use sincere::coordinator::strategy::{strategy_by_name, Decision,
+                                     ModelView, SchedContext,
+                                     STRATEGY_NAMES};
+use sincere::gpu::cc::CcSession;
+use sincere::gpu::hbm::HbmAllocator;
+use sincere::metrics::hist::Histogram;
+use sincere::prop_assert;
+use sincere::util::json::Json;
+use sincere::util::prop::{forall, Gen};
+
+// ------------------------------------------------------------- queues
+
+/// FIFO per model under random interleavings of push/pop.
+#[test]
+fn prop_queues_fifo_per_model() {
+    forall("queues fifo", 200, |g| {
+        let models = ["a", "b", "c"];
+        let mut q = ModelQueues::new();
+        let mut popped: Vec<Vec<u64>> = vec![Vec::new(); models.len()];
+        let mut pushed: Vec<Vec<u64>> = vec![Vec::new(); models.len()];
+        let mut next_id = 0u64;
+        for _ in 0..g.usize_in(1, 60) {
+            if g.bool() {
+                let mi = g.usize_in(0, models.len() - 1);
+                q.push(Request {
+                    id: next_id,
+                    model: models[mi].into(),
+                    tokens: vec![],
+                    arrival_s: next_id as f64,
+                });
+                pushed[mi].push(next_id);
+                next_id += 1;
+            } else {
+                let mi = g.usize_in(0, models.len() - 1);
+                let n = g.usize_in(0, 5);
+                for r in q.pop_n(models[mi], n) {
+                    popped[mi].push(r.id);
+                }
+            }
+        }
+        // drain the rest
+        for (mi, m) in models.iter().enumerate() {
+            for r in q.pop_n(m, usize::MAX) {
+                popped[mi].push(r.id);
+            }
+        }
+        for mi in 0..models.len() {
+            prop_assert!(popped[mi] == pushed[mi],
+                         "model {} order: pushed {:?} popped {:?}",
+                         models[mi], pushed[mi], popped[mi]);
+        }
+        Ok(())
+    });
+}
+
+// -------------------------------------------------------------- strategy
+
+/// Every strategy decision must reference a known queue and take a
+/// positive number of requests no larger than the queue length.
+#[test]
+fn prop_strategy_decisions_valid() {
+    forall("strategy decisions valid", 400, |g| {
+        let n_queues = g.usize_in(1, 5);
+        let queues: Vec<ModelView> = (0..n_queues).map(|i| ModelView {
+            model: format!("m{i}"),
+            len: g.usize_in(1, 64),
+            oldest_wait_s: g.f64_in(0.0, 12.0),
+            obs: g.usize_in(1, 32),
+            rate_rps: g.f64_in(0.0, 16.0),
+            est_load_s: g.f64_in(0.0, 2.0),
+            est_exec_s: g.f64_in(0.0, 2.0),
+        }).collect();
+        let ctx = SchedContext {
+            now_s: g.f64_in(0.0, 1000.0),
+            resident: if g.bool() {
+                Some(format!("m{}", g.usize_in(0, n_queues - 1)))
+            } else {
+                None
+            },
+            queues: queues.clone(),
+            sla_s: g.f64_in(0.5, 10.0),
+            timeout_s: g.f64_in(0.1, 5.0),
+        };
+        for name in STRATEGY_NAMES {
+            let s = strategy_by_name(name).unwrap();
+            match s.decide(&ctx) {
+                Decision::Wait => {}
+                Decision::Process { model, take } => {
+                    let v = queues.iter().find(|v| v.model == model);
+                    prop_assert!(v.is_some(),
+                                 "{name} chose unknown model {model}");
+                    let v = v.unwrap();
+                    prop_assert!(take >= 1, "{name} take=0");
+                    prop_assert!(take <= v.len,
+                                 "{name} take {take} > len {}", v.len);
+                    prop_assert!(take <= v.obs.max(1),
+                                 "{name} take {take} > obs {}", v.obs);
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Timer guarantee: if any head request is overdue, timer strategies
+/// never answer Wait.
+#[test]
+fn prop_timer_never_waits_when_overdue() {
+    forall("timer liveness", 300, |g| {
+        let overdue_wait = g.f64_in(2.0, 20.0);
+        let timeout = g.f64_in(0.1, 2.0);
+        let queues = vec![ModelView {
+            model: "m0".into(),
+            len: g.usize_in(1, 32),
+            oldest_wait_s: overdue_wait,
+            obs: g.usize_in(1, 32),
+            rate_rps: g.f64_in(0.0, 8.0),
+            est_load_s: 0.3,
+            est_exec_s: 0.2,
+        }];
+        let ctx = SchedContext {
+            now_s: 50.0,
+            resident: None,
+            queues,
+            sla_s: 6.0,
+            timeout_s: timeout,
+        };
+        for name in ["best-batch+timer", "select-batch+timer",
+                     "best-batch+partial+timer"] {
+            let s = strategy_by_name(name).unwrap();
+            prop_assert!(s.decide(&ctx) != Decision::Wait,
+                         "{name} waited with an overdue head \
+                          (wait {overdue_wait} > timeout {timeout})");
+        }
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------------- hbm
+
+/// Allocator conservation + no-overlap under random alloc/free.
+#[test]
+fn prop_hbm_allocator_invariants() {
+    forall("hbm invariants", 200, |g| {
+        let capacity = 1u64 << g.usize_in(10, 20);
+        let mut h = HbmAllocator::new(capacity);
+        let mut live: Vec<sincere::gpu::hbm::HbmBuffer> = Vec::new();
+        for _ in 0..g.usize_in(1, 80) {
+            if g.bool() || live.is_empty() {
+                let len = 1 + g.u64() % (capacity / 4);
+                if let Ok(buf) = h.alloc(len) {
+                    // no overlap with any live buffer
+                    for other in &live {
+                        let disjoint = buf.offset + buf.len
+                            <= other.offset
+                            || other.offset + other.len <= buf.offset;
+                        prop_assert!(disjoint,
+                                     "overlap {buf:?} vs {other:?}");
+                    }
+                    live.push(buf);
+                }
+            } else {
+                let i = g.usize_in(0, live.len() - 1);
+                h.free(live.swap_remove(i));
+            }
+            let used: u64 = live.iter().map(|b| b.len).sum();
+            prop_assert!(h.in_use() == used,
+                         "in_use {} != live {}", h.in_use(), used);
+            prop_assert!(h.in_use() + h.free_bytes() == capacity,
+                         "conservation violated");
+            prop_assert!(h.fragmentation() >= 0.0
+                         && h.fragmentation() <= 1.0,
+                         "fragmentation out of range");
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------- crypto
+
+/// seal∘open == id for arbitrary lengths; any single-bit flip is caught.
+#[test]
+fn prop_cc_seal_open_roundtrip_and_tamper() {
+    let session = CcSession::establish(0xDEC0DE).unwrap();
+    forall("cc aead", 120, |g| {
+        let data: Vec<u8> = (0..g.usize_in(0, 4096))
+            .map(|_| g.u64() as u8).collect();
+        let sealed = session.seal(&data);
+        let opened = session.open(&sealed).map_err(|e| e.to_string())?;
+        prop_assert!(opened == data, "roundtrip mismatch at len {}",
+                     data.len());
+        if !sealed.is_empty() {
+            let mut tampered = sealed.clone();
+            let byte = g.usize_in(0, tampered.len() - 1);
+            let bit = 1u8 << g.usize_in(0, 7);
+            tampered[byte] ^= bit;
+            prop_assert!(session.open(&tampered).is_err(),
+                         "tamper at byte {byte} bit {bit} not caught");
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------- histogram
+
+/// Quantiles are monotone in q and bounded by min/max.
+#[test]
+fn prop_histogram_quantiles_monotone() {
+    forall("hist quantiles", 150, |g| {
+        let mut h = Histogram::new();
+        for _ in 0..g.usize_in(1, 300) {
+            h.record(g.f64_in(0.0, 100.0));
+        }
+        let qs = [0.0, 0.1, 0.5, 0.9, 0.99, 1.0];
+        let vals: Vec<f64> = qs.iter().map(|&q| h.quantile(q)).collect();
+        for w in vals.windows(2) {
+            prop_assert!(w[0] <= w[1] + 1e-12,
+                         "quantiles not monotone: {vals:?}");
+        }
+        prop_assert!(vals[0] >= h.min() - 1e-12, "q0 below min");
+        prop_assert!(*vals.last().unwrap() <= h.max() + 1e-12,
+                     "q1 above max");
+        // mean within [min, max]
+        prop_assert!(h.mean() >= h.min() - 1e-12
+                     && h.mean() <= h.max() + 1e-12, "mean out of range");
+        Ok(())
+    });
+}
+
+// ----------------------------------------------------------------- json
+
+fn random_json(g: &mut Gen, depth: usize) -> Json {
+    match if depth == 0 { g.usize_in(0, 3) } else { g.usize_in(0, 5) } {
+        0 => Json::Null,
+        1 => Json::Bool(g.bool()),
+        2 => Json::Num((g.u64() % 1_000_000) as f64
+                       * if g.bool() { -1.0 } else { 1.0 }),
+        3 => Json::Str((0..g.usize_in(0, 12))
+            .map(|_| char::from(b'a' + (g.u64() % 26) as u8))
+            .collect::<String>() + if g.bool() { "\"\\\n" } else { "" }),
+        4 => Json::Arr((0..g.usize_in(0, 4))
+            .map(|_| random_json(g, depth - 1)).collect()),
+        _ => Json::Obj((0..g.usize_in(0, 4))
+            .map(|i| (format!("k{i}"), random_json(g, depth - 1)))
+            .collect()),
+    }
+}
+
+/// parse(serialize(v)) == v for arbitrary JSON trees.
+#[test]
+fn prop_json_roundtrip() {
+    forall("json roundtrip", 300, |g| {
+        let v = random_json(g, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).map_err(|e| e.to_string())?;
+        prop_assert!(back == v, "roundtrip mismatch: {text}");
+        Ok(())
+    });
+}
+
+// --------------------------------------------------------------- traffic
+
+/// All patterns: arrivals sorted, within range, and nonempty at sane
+/// rates; realized mean within 35% on a single 600s draw.
+#[test]
+fn prop_traffic_patterns_sane() {
+    forall("traffic sanity", 40, |g| {
+        let names = ["gamma", "bursty", "ramp"];
+        let name = *g.choose(&names);
+        let mean = g.f64_in(0.5, 8.0);
+        // bursty's ~32s on/off cycles need a much longer horizon before
+        // a single draw's realized rate concentrates
+        let dur = if name == "bursty" { 4000.0 } else { 600.0 };
+        let p = sincere::traffic::pattern_by_name(name).unwrap();
+        let mut rng = sincere::traffic::rng::Pcg64::new(g.u64());
+        let models = vec!["m".to_string()];
+        let arr = p.generate(dur, mean, &models, &mut rng);
+        prop_assert!(!arr.is_empty(), "{name}@{mean}: empty");
+        for w in arr.windows(2) {
+            prop_assert!(w[0].at_s <= w[1].at_s, "{name}: unsorted");
+        }
+        prop_assert!(arr.iter().all(|a| (0.0..dur).contains(&a.at_s)),
+                     "{name}: out of range");
+        let realized = arr.len() as f64 / dur;
+        prop_assert!((realized - mean).abs() / mean < 0.35,
+                     "{name}@{mean}: realized {realized}");
+        Ok(())
+    });
+}
