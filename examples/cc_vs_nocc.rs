@@ -9,7 +9,7 @@
 use std::path::PathBuf;
 
 use sincere::config::RunConfig;
-use sincere::coordinator::serve;
+use sincere::engine::EngineBuilder;
 use sincere::metrics::report;
 use sincere::runtime::{Manifest, Registry};
 
@@ -37,7 +37,8 @@ fn main() -> anyhow::Result<()> {
         cfg.set("mode", mode)?;
         cfg.label = cfg.cell_label();
         eprintln!("[cc-vs-nocc] running {mode} ...");
-        let (summary, _) = serve(&cfg, &registry)?;
+        let (summary, _) = EngineBuilder::new(&cfg).real(&registry)?
+            .run()?;
         println!("{}", summary.brief());
         cells.push(summary);
     }

@@ -18,11 +18,12 @@ use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use sincere::config::{RunConfig, SLA_LADDER};
-use sincere::coordinator::{serve, RunSummary, STRATEGY_NAMES};
+use sincere::coordinator::STRATEGY_NAMES;
+use sincere::engine::{EngineBuilder, RunSummary};
 use sincere::gpu::CcMode;
 use sincere::metrics::report;
 use sincere::runtime::{Manifest, Registry};
-use sincere::sim::{simulate, CostModel};
+use sincere::sim::CostModel;
 use sincere::traffic::PATTERN_NAMES;
 use sincere::util::json::Json;
 
@@ -109,7 +110,8 @@ fn main() -> anyhow::Result<()> {
                     c.duration_s = 120.0;
                     c.drain_s = sla;
                     c.label = c.cell_label();
-                    cells.push(simulate(&c, &manifest, &cm)?);
+                    cells.push(EngineBuilder::new(&c).des(&manifest, &cm)?
+                        .run()?.0);
                 }
             }
         }
@@ -210,10 +212,12 @@ fn main() -> anyhow::Result<()> {
         c.drain_s = c.sla_s;
         c.results_dir = Some(out_dir.clone());
         c.label = format!("real_{}", c.cell_label());
-        let (real, _) = serve(&c, &registry)?;
+        let (real, _) = EngineBuilder::new(&c).real(&registry)?.run()?;
         let mut cd = c.clone();
         cd.duration_s = real_cell_secs;
-        let des = simulate(&cd, &manifest, &cm)?;
+        // keep the real run's CSVs; the DES cell is summary-only
+        cd.results_dir = None;
+        let des = EngineBuilder::new(&cd).des(&manifest, &cm)?.run()?.0;
         for (src, s) in [("real", &real), ("DES", &des)] {
             writeln!(md, "| {} | {} | {:.2} | {:.1} | {:.2} | {:.1} | \
                           {} |", s.mode, src, s.latency_mean_s,

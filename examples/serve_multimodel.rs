@@ -13,7 +13,7 @@
 use std::path::PathBuf;
 
 use sincere::config::RunConfig;
-use sincere::coordinator::serve;
+use sincere::engine::EngineBuilder;
 use sincere::runtime::{Manifest, Registry};
 use sincere::sim::CostModel;
 
@@ -60,7 +60,8 @@ fn main() -> anyhow::Result<()> {
 
     eprintln!("[e2e] serving {} for {:.0}s (CC mode, gamma 9 rps, \
                SLA 18s) ...", registry.names().join(", "), duration_s);
-    let (summary, recorder) = serve(&cfg, &registry)?;
+    let (summary, recorder) = EngineBuilder::new(&cfg)
+        .real(&registry)?.run()?;
 
     println!("\n=== end-to-end summary ===");
     println!("{}", summary.brief());

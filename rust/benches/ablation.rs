@@ -14,7 +14,8 @@ use sincere::config::RunConfig;
 use sincere::gpu::cc::CcSession;
 use sincere::gpu::CcMode;
 use sincere::runtime::Manifest;
-use sincere::sim::{simulate, CostModel};
+use sincere::engine::EngineBuilder;
+use sincere::sim::CostModel;
 
 fn main() {
     let artifacts = PathBuf::from("artifacts");
@@ -40,7 +41,8 @@ fn main() {
             c.mode = mode;
             c.gpu.mode = mode;
             c.sla_s = 12.0;
-            simulate(&c, &manifest, &cm).unwrap()
+            EngineBuilder::new(&c).des(&manifest, &cm).unwrap()
+                        .run().unwrap().0
         };
         let cc = run(CcMode::On);
         let nc = run(CcMode::Off);
@@ -66,7 +68,8 @@ fn main() {
         c.gpu.mode = CcMode::On;
         c.strategy = "best-batch+timer".into();
         c.timeout_frac = frac;
-        let s = simulate(&c, &manifest, &base_cm).unwrap();
+        let s = EngineBuilder::new(&c).des(&manifest, &base_cm)
+            .unwrap().run().unwrap().0;
         println!("| {frac:.2} | {:.1} | {:.2} | {} | {:.2} |",
                  s.sla_attainment * 100.0, s.throughput_rps,
                  s.swap_count, s.latency_mean_s);

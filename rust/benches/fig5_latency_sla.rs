@@ -9,7 +9,8 @@ use sincere::coordinator::STRATEGY_NAMES;
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::Manifest;
-use sincere::sim::{simulate, CostModel};
+use sincere::engine::EngineBuilder;
+use sincere::sim::CostModel;
 use sincere::traffic::PATTERN_NAMES;
 
 fn main() {
@@ -40,7 +41,8 @@ fn main() {
                     c.sla_s = sla;
                     c.duration_s = 120.0;
                     c.drain_s = sla;
-                    let s = simulate(&c, &manifest, &cm).unwrap();
+                    let s = EngineBuilder::new(&c).des(&manifest, &cm).unwrap()
+                        .run().unwrap().0;
                     out.push((s.latency_mean_s, s.sla_attainment));
                     cells += 1;
                 }

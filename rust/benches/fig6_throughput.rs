@@ -10,7 +10,8 @@ use sincere::coordinator::STRATEGY_NAMES;
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::Manifest;
-use sincere::sim::{simulate, CostModel};
+use sincere::engine::EngineBuilder;
+use sincere::sim::CostModel;
 use sincere::traffic::PATTERN_NAMES;
 
 fn main() {
@@ -37,7 +38,8 @@ fn main() {
                 c.sla_s = sla;
                 c.duration_s = 120.0;
                 c.drain_s = sla;
-                simulate(&c, &manifest, &cm).unwrap()
+                EngineBuilder::new(&c).des(&manifest, &cm).unwrap()
+                        .run().unwrap().0
             };
             let cc = run(CcMode::On);
             let nc = run(CcMode::Off);

@@ -9,7 +9,8 @@ use sincere::config::RunConfig;
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::Manifest;
-use sincere::sim::{simulate, CostModel};
+use sincere::engine::EngineBuilder;
+use sincere::sim::CostModel;
 use sincere::traffic::PATTERN_NAMES;
 
 fn main() {
@@ -32,7 +33,8 @@ fn main() {
             c.pattern = pattern.to_string();
             c.duration_s = 120.0;
             c.drain_s = c.sla_s;
-            let s = simulate(&c, &manifest, &cm).unwrap();
+            let s = EngineBuilder::new(&c).des(&manifest, &cm).unwrap()
+                        .run().unwrap().0;
             let load_frac = s.total_load_s / s.runtime_s;
             let unload_frac = s.total_unload_s / s.runtime_s;
             let idle = 1.0 - s.gpu_util - load_frac - unload_frac;

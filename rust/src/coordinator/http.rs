@@ -11,8 +11,11 @@
 //! * `GET /healthz`  liveness.
 //!
 //! Connection handlers are one thread each (relaxed inference tolerates
-//! thread-per-request); the scheduler runs on the caller's thread, same
-//! queues/strategies/swap manager as the experiment loop.
+//! thread-per-request); the scheduler runs on the caller's thread over
+//! the *same* [`RealBackend`] and view-builder the batch engine uses —
+//! the only difference from an experiment run is that arrivals come
+//! from sockets instead of a precomputed schedule, and completions are
+//! answered over a reply channel instead of recorded.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -22,15 +25,13 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
-use crate::coordinator::batcher;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::rate::RateEstimator;
 use crate::coordinator::request::Request;
-use crate::coordinator::strategy::{strategy_by_name, Decision, ModelView,
+use crate::coordinator::strategy::{strategy_by_name, Decision,
                                    SchedContext};
-use crate::coordinator::swap::SwapManager;
-use crate::gpu::device::SimGpu;
-use crate::gpu::dma::Dir;
+use crate::engine::{build_views, Clock, ExecBackend, RealBackend,
+                    WallClock};
 use crate::runtime::Registry;
 use crate::util::json::Json;
 use crate::workload::tokenizer::tokenize;
@@ -93,7 +94,9 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
 
     let stats = Arc::new(ServerStats::default());
     let (tx, rx) = mpsc::channel::<Job>();
-    let start = Instant::now();
+    // arrival stamps and scheduler decisions share one time origin
+    let mut clock = WallClock::new();
+    let start = clock.origin();
 
     // ---------------- accept loop (thread) -----------------------------
     let acceptor = {
@@ -131,12 +134,13 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
     };
 
     // ---------------- scheduler loop (this thread) ---------------------
-    let mut gpu = SimGpu::new(cfg.gpu.clone())?;
+    // Same backend as the experiment engine: residency, batching (OOM
+    // guard included), CC-sealed I/O, PJRT execution.
+    let mut backend = RealBackend::new(cfg, registry)?;
     let mut queues = ModelQueues::new();
     let mut rates = RateEstimator::default();
-    let mut swap_mgr = SwapManager::new();
+    let mut exec_est: HashMap<String, f64> = HashMap::new();
     let mut replies: HashMap<u64, mpsc::Sender<Reply>> = HashMap::new();
-    let now_s = move || start.elapsed().as_secs_f64();
 
     loop {
         loop {
@@ -150,7 +154,7 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
                 Err(mpsc::TryRecvError::Disconnected) => break,
             }
         }
-        let t = now_s();
+        let t = clock.now_s();
         for r in queues.expire(t, cfg.sla_s) {
             stats.expired.fetch_add(1, Ordering::Relaxed);
             if let Some(tx) = replies.remove(&r.id) {
@@ -161,24 +165,10 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
             break;
         }
 
-        let views: Vec<ModelView> = queues.nonempty_models().iter()
-            .map(|m| {
-                let entry = registry.entry(m).unwrap();
-                ModelView {
-                    model: m.to_string(),
-                    len: queues.len(m),
-                    oldest_wait_s: queues.head_arrival_s(m)
-                        .map(|a| (t - a).max(0.0)).unwrap_or(0.0),
-                    obs: entry.obs,
-                    rate_rps: rates.rate_rps(m, t),
-                    est_load_s: SwapManager::estimate_load_s(
-                        &gpu, registry, m),
-                    est_exec_s: 0.3,
-                }
-            }).collect();
+        let views = build_views(&queues, &rates, &backend, &exec_est, t);
         let ctx = SchedContext {
             now_s: t,
-            resident: swap_mgr.resident().map(|s| s.to_string()),
+            resident: backend.resident(),
             queues: views,
             sla_s: cfg.sla_s,
             timeout_s: cfg.timeout_s(),
@@ -187,31 +177,26 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
         match strategy.decide(&ctx) {
             Decision::Wait => std::thread::sleep(cfg.tick),
             Decision::Process { model, take } => {
-                swap_mgr.ensure_resident(&mut gpu, registry, &model)?;
-                let Some(batch) = batcher::prepare(&mut queues, &mut gpu,
-                                                   registry, &model,
-                                                   take)?
+                backend.ensure_resident(&mut clock, &model)?;
+                let Some(out) = backend.execute_batch(&mut clock,
+                                                      &mut queues,
+                                                      &model, take)?
                 else {
                     continue;
                 };
-                let rows: Vec<Vec<i32>> = batch.requests.iter()
-                    .map(|r| r.tokens.clone()).collect();
-                let in_bytes: Vec<u8> = rows.iter().flatten()
-                    .flat_map(|t| t.to_le_bytes()).collect();
-                gpu.io_transfer(Dir::HostToDevice, &in_bytes)?;
-                let rep = registry.execute(&model, &rows)?;
-                gpu.record_compute(rep.elapsed);
-                let complete = now_s();
-                let requests = batcher::release(&mut gpu, batch);
-                for (r, toks) in requests.into_iter()
-                    .zip(rep.tokens.into_iter())
+                let complete = clock.now_s();
+                let e = exec_est.entry(model.clone())
+                    .or_insert(out.exec_s);
+                *e = 0.3 * out.exec_s + 0.7 * *e;
+                for (r, toks) in out.requests.into_iter()
+                    .zip(out.tokens.into_iter())
                 {
                     stats.completed.fetch_add(1, Ordering::Relaxed);
                     if let Some(tx) = replies.remove(&r.id) {
                         let _ = tx.send(Reply::Done {
                             tokens: toks,
                             latency_s: complete - r.arrival_s,
-                            batch: rep.batch,
+                            batch: out.artifact_batch,
                         });
                     }
                 }
@@ -219,7 +204,7 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
         }
     }
 
-    swap_mgr.evict(&mut gpu);
+    backend.teardown();
     acceptor.join().ok();
     Ok(Arc::try_unwrap(stats).unwrap_or_default())
 }

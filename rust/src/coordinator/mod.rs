@@ -17,6 +17,8 @@ pub mod strategy;
 pub mod swap;
 
 pub use request::{CompletedRequest, Request};
-pub use server::{serve, RunSummary};
+#[allow(deprecated)]
+pub use server::serve;
+pub use server::RunSummary;
 pub use strategy::{strategy_by_name, Decision, SchedContext, Strategy,
                    STRATEGY_NAMES};

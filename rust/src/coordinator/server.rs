@@ -1,475 +1,66 @@
-//! The serve loop: ingest → queues → strategy → swap → execute → record.
+//! The real serve entry point — a thin shim over the [`Engine`].
 //!
-//! Mirrors the paper's three components (§III-B) in one binary: the
-//! request generator runs on an ingest thread walking a precomputed
-//! arrival schedule (open-loop, so overload shows up as queueing, not
-//! back-pressure on the generator); the scheduler/batcher/executor run
-//! on the calling thread; a monitor thread samples system metrics.
-
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+//! The serve loop itself (ingest → queues → strategy → swap → execute
+//! → record, §III-B) lives in [`crate::engine`], written once and
+//! parameterized by `Clock` and `ExecBackend`.  This module keeps the
+//! historical `coordinator::serve` API (and re-exports [`RunSummary`])
+//! for existing callers; new code should use
+//! [`EngineBuilder`](crate::engine::EngineBuilder) directly.
+//!
+//! [`Engine`]: crate::engine::Engine
 
 use crate::config::RunConfig;
-use crate::coordinator::batcher;
-use crate::coordinator::queues::ModelQueues;
-use crate::coordinator::rate::RateEstimator;
-use crate::coordinator::request::{CompletedRequest, Request};
-use crate::coordinator::sla::SlaTracker;
-use crate::coordinator::strategy::{strategy_by_name, Decision,
-                                   ModelView, SchedContext};
-use crate::coordinator::swap::{SwapManager, SwapStats};
-use crate::gpu::device::SimGpu;
-use crate::gpu::dma::Dir;
-use crate::metrics::recorder::{BatchRecord, MonitorRecord, Recorder};
-use crate::metrics::system::sample_proc;
+use crate::engine::EngineBuilder;
+use crate::metrics::recorder::Recorder;
 use crate::runtime::Registry;
-use crate::traffic::pattern_by_name;
-use crate::traffic::rng::Pcg64;
-use crate::util::json::Json;
-use crate::workload::promptgen::PromptGen;
-use crate::workload::tokenizer::tokenize;
 
-/// Aggregated outcome of one run — one grid cell of the evaluation.
-#[derive(Debug, Clone)]
-pub struct RunSummary {
-    pub label: String,
-    pub mode: String,
-    pub pattern: String,
-    pub strategy: String,
-    pub sla_s: f64,
-    pub mean_rps: f64,
-    pub duration_s: f64,
-    /// Actual wall time of the serving phase (duration + drain used).
-    pub runtime_s: f64,
+pub use crate::engine::RunSummary;
 
-    pub generated: u64,
-    pub completed: u64,
-    pub sla_met: u64,
-    pub sla_attainment: f64,
-
-    pub latency_mean_s: f64,
-    pub latency_p50_s: f64,
-    pub latency_p90_s: f64,
-    pub latency_p99_s: f64,
-    pub latency_max_s: f64,
-
-    /// Completed requests / runtime (the paper's overall throughput).
-    pub throughput_rps: f64,
-    /// Completed requests / time spent actually executing — the paper's
-    /// "processing rate during inference", which stays ~equal across
-    /// modes (§IV-B).
-    pub processing_rate_rps: f64,
-
-    pub gpu_util: f64,
-    pub swap_count: u64,
-    pub total_load_s: f64,
-    pub total_unload_s: f64,
-    pub total_exec_s: f64,
-    pub total_crypto_s: f64,
-    pub mean_load_s: f64,
-}
-
-impl RunSummary {
-    pub fn to_json(&self) -> Json {
-        Json::obj(vec![
-            ("label", Json::str(self.label.clone())),
-            ("mode", Json::str(self.mode.clone())),
-            ("pattern", Json::str(self.pattern.clone())),
-            ("strategy", Json::str(self.strategy.clone())),
-            ("sla_s", Json::num(self.sla_s)),
-            ("mean_rps", Json::num(self.mean_rps)),
-            ("duration_s", Json::num(self.duration_s)),
-            ("runtime_s", Json::num(self.runtime_s)),
-            ("generated", Json::num(self.generated as f64)),
-            ("completed", Json::num(self.completed as f64)),
-            ("sla_met", Json::num(self.sla_met as f64)),
-            ("sla_attainment", Json::num(self.sla_attainment)),
-            ("latency_mean_s", Json::num(self.latency_mean_s)),
-            ("latency_p50_s", Json::num(self.latency_p50_s)),
-            ("latency_p90_s", Json::num(self.latency_p90_s)),
-            ("latency_p99_s", Json::num(self.latency_p99_s)),
-            ("latency_max_s", Json::num(self.latency_max_s)),
-            ("throughput_rps", Json::num(self.throughput_rps)),
-            ("processing_rate_rps", Json::num(self.processing_rate_rps)),
-            ("gpu_util", Json::num(self.gpu_util)),
-            ("swap_count", Json::num(self.swap_count as f64)),
-            ("total_load_s", Json::num(self.total_load_s)),
-            ("total_unload_s", Json::num(self.total_unload_s)),
-            ("total_exec_s", Json::num(self.total_exec_s)),
-            ("total_crypto_s", Json::num(self.total_crypto_s)),
-            ("mean_load_s", Json::num(self.mean_load_s)),
-        ])
-    }
-
-    /// One-line human summary.
-    pub fn brief(&self) -> String {
-        format!(
-            "{:<6} {:<7} {:<26} sla={:<4} gen={:<5} done={:<5} \
-             att={:>5.1}% lat(mean/p99)={:.2}/{:.2}s thr={:.2}rps \
-             util={:>4.1}% swaps={}",
-            self.mode, self.pattern, self.strategy, self.sla_s,
-            self.generated, self.completed, self.sla_attainment * 100.0,
-            self.latency_mean_s, self.latency_p99_s, self.throughput_rps,
-            self.gpu_util * 100.0, self.swap_count)
-    }
-}
-
-/// Device-state snapshot shared with the monitor thread.
-#[derive(Debug, Clone, Default)]
-struct DeviceSnapshot {
-    gpu_util: f64,
-    mem_in_use: u64,
-    mem_peak: u64,
-    fragmentation: f64,
-    dma_h2d_bytes: u64,
-    dma_crypto_s: f64,
-    swaps: u64,
-}
-
-/// Run one serving experiment.  The registry is shared across runs (so
-/// XLA compiles once per process); OBS values should already be set.
+/// Run one serving experiment for real: wall clock, `SimGpu`, PJRT
+/// execution.  The registry is shared across runs (so XLA compiles
+/// once per process); OBS values should already be set.
+#[deprecated(
+    since = "0.2.0",
+    note = "use engine::EngineBuilder::new(cfg).real(registry)?.run()"
+)]
 pub fn serve(cfg: &RunConfig, registry: &Registry)
              -> anyhow::Result<(RunSummary, Recorder)> {
-    cfg.validate()?;
-    let strategy = strategy_by_name(&cfg.strategy)?;
-    let models: Vec<String> = if cfg.models.is_empty() {
-        registry.names()
-    } else {
-        cfg.models.clone()
-    };
-    for m in &models {
-        registry.entry(m)?; // fail fast on unknown models
+    EngineBuilder::new(cfg).real(registry)?.run()
+}
+
+#[cfg(test)]
+#[allow(deprecated)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
-    // ---------------- arrival schedule (open loop, precomputed) --------
-    let mut rng = Pcg64::new(cfg.seed);
-    let pattern = pattern_by_name(&cfg.pattern)?;
-    let arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps, &models,
-                                    &mut rng);
-    let mut prompts = PromptGen::new(cfg.seed ^ 0xBEEF, 24);
-    let schedule: Vec<Request> = arrivals.iter().enumerate().map(|(i, a)| {
-        let spec = &registry.entry(&a.model).unwrap().spec;
-        Request {
-            id: i as u64,
-            model: a.model.clone(),
-            tokens: tokenize(&prompts.next_prompt(&a.model),
-                             spec.prompt_len, spec.vocab as u32),
-            arrival_s: a.at_s,
-        }
-    }).collect();
-    let generated = schedule.len() as u64;
-
-    // ---------------- device + shared state ----------------------------
-    let mut gpu = SimGpu::new(cfg.gpu.clone())?;
-    let snapshot = Arc::new(Mutex::new(DeviceSnapshot::default()));
-    let stop = Arc::new(AtomicBool::new(false));
-
-    let start = Instant::now();
-    let now_s = move || start.elapsed().as_secs_f64();
-
-    // ---------------- ingest thread ------------------------------------
-    let (tx, rx) = mpsc::channel::<Request>();
-    let ingest = {
-        let stop = stop.clone();
-        std::thread::spawn(move || {
-            for req in schedule {
-                if stop.load(Ordering::Relaxed) {
-                    break;
-                }
-                let target = Duration::from_secs_f64(req.arrival_s);
-                let elapsed = start.elapsed();
-                if target > elapsed {
-                    std::thread::sleep(target - elapsed);
-                }
-                if tx.send(req).is_err() {
-                    break;
-                }
-            }
-            // channel closes when tx drops
-        })
-    };
-
-    // ---------------- monitor thread -----------------------------------
-    let monitor_records: Arc<Mutex<Vec<MonitorRecord>>> =
-        Arc::new(Mutex::new(Vec::new()));
-    let monitor = {
-        let stop = stop.clone();
-        let snapshot = snapshot.clone();
-        let records = monitor_records.clone();
-        let period = cfg.monitor_period;
-        std::thread::spawn(move || {
-            while !stop.load(Ordering::Relaxed) {
-                let snap = snapshot.lock().unwrap().clone();
-                let rec = MonitorRecord {
-                    proc: sample_proc(start.elapsed().as_secs_f64()),
-                    gpu_util: snap.gpu_util,
-                    mem_in_use: snap.mem_in_use,
-                    mem_peak: snap.mem_peak,
-                    fragmentation: snap.fragmentation,
-                    dma_h2d_bytes: snap.dma_h2d_bytes,
-                    dma_crypto_s: snap.dma_crypto_s,
-                    swaps: snap.swaps,
-                };
-                records.lock().unwrap().push(rec);
-                std::thread::sleep(period);
-            }
-        })
-    };
-
-    // ---------------- scheduler loop ------------------------------------
-    let mut queues = ModelQueues::new();
-    let mut rates = RateEstimator::default();
-    let mut swap_mgr = SwapManager::new();
-    let mut sla = SlaTracker::new(cfg.sla_s);
-    let mut recorder = Recorder::new();
-    // EWMA of observed exec time per model (SelectBatch headroom term)
-    let mut exec_est: std::collections::HashMap<String, f64> =
-        Default::default();
-    let mut ingest_open = true;
-    let mut last_complete_s = 0.0f64;
-    // instant of the last observable progress (arrival or completion);
-    // drives the stall exit for strategies that legitimately strand a
-    // sub-OBS remainder (plain best-batch has no timer)
-    let mut last_progress_s = 0.0f64;
-    // The paper's methodology: arrivals stop at duration_s but the
-    // system drains its backlog; drain_s is a safety cap, and the
-    // reported runtime extends to the last dispatched response.
-    let hard_stop_s = cfg.duration_s + cfg.drain_s;
-
-    loop {
-        // drain the ingest channel
-        loop {
-            match rx.try_recv() {
-                Ok(req) => {
-                    rates.on_arrival(&req.model, req.arrival_s);
-                    last_progress_s = now_s();
-                    queues.push(req);
-                }
-                Err(mpsc::TryRecvError::Empty) => break,
-                Err(mpsc::TryRecvError::Disconnected) => {
-                    ingest_open = false;
-                    break;
-                }
-            }
-        }
-
-        let t = now_s();
-        // SLA expiry: overdue queued requests are unfulfilled (§III-C3)
-        let expired = queues.expire(t, cfg.sla_s);
-        if !expired.is_empty() {
-            sla.on_unserved(expired.len() as u64);
-            last_progress_s = t;
-        }
-        if t >= hard_stop_s {
-            break;
-        }
-        if !ingest_open && queues.is_empty() {
-            break;
-        }
-        // stall exit: nothing new can arrive and no timer will ever fire
-        // for the stranded remainder
-        if !ingest_open
-            && t - last_progress_s > cfg.timeout_s() + 5.0 * cfg.sla_s
-        {
-            break;
-        }
-
-        // strategy snapshot
-        let views: Vec<ModelView> = queues.nonempty_models().iter()
-            .map(|m| {
-                let entry = registry.entry(m).unwrap();
-                ModelView {
-                    model: m.to_string(),
-                    len: queues.len(m),
-                    oldest_wait_s: queues.head_arrival_s(m)
-                        .map(|a| (t - a).max(0.0)).unwrap_or(0.0),
-                    obs: entry.obs,
-                    rate_rps: rates.rate_rps(m, t),
-                    est_load_s: SwapManager::estimate_load_s(&gpu, registry,
-                                                             m),
-                    est_exec_s: *exec_est.get(*m).unwrap_or(&0.2),
-                }
-            }).collect();
-        let ctx = SchedContext {
-            now_s: t,
-            resident: swap_mgr.resident().map(|s| s.to_string()),
-            queues: views,
-            sla_s: cfg.sla_s,
-            timeout_s: cfg.timeout_s(),
+    /// The deprecated shim must stay behaviourally identical to the
+    /// builder path (one release of compatibility).
+    #[test]
+    fn shim_matches_engine_builder() {
+        let manifest = Manifest::load(&artifacts_dir()).unwrap();
+        let registry = Registry::load(
+            &manifest, &["llama-sim".to_string()], &[1, 2, 4]).unwrap();
+        let mut cfg = RunConfig {
+            duration_s: 2.0,
+            drain_s: 2.0,
+            mean_rps: 3.0,
+            sla_s: 3.0,
+            models: vec!["llama-sim".into()],
+            ..RunConfig::default()
         };
-
-        match strategy.decide(&ctx) {
-            Decision::Wait => {
-                publish_snapshot(&snapshot, &gpu, swap_mgr.stats());
-                std::thread::sleep(cfg.tick);
-            }
-            Decision::Process { model, take } => {
-                // 1. residency (the expensive CC-sensitive step)
-                let swap = swap_mgr.ensure_resident(&mut gpu, registry,
-                                                    &model)?;
-                // 2. batch assembly + workspace reservation
-                let Some(batch) = batcher::prepare(&mut queues, &mut gpu,
-                                                   registry, &model, take)?
-                else {
-                    continue;
-                };
-                // 3. request payload in (CC seals it)
-                let io_start = Instant::now();
-                let in_bytes: Vec<u8> = batch.requests.iter()
-                    .flat_map(|r| r.tokens.iter()
-                              .flat_map(|t| t.to_le_bytes()))
-                    .collect();
-                gpu.io_transfer(Dir::HostToDevice, &in_bytes)?;
-                let mut io_s = io_start.elapsed().as_secs_f64();
-
-                // 4. execute
-                let rows: Vec<Vec<i32>> = batch.requests.iter()
-                    .map(|r| r.tokens.clone()).collect();
-                let exec_start_s = now_s();
-                let rep = registry.execute(&model, &rows)?;
-                gpu.record_compute(rep.elapsed);
-
-                // 5. response payload out
-                let io_start = Instant::now();
-                let out_bytes: Vec<u8> = rep.tokens.iter()
-                    .flat_map(|row| row.iter()
-                              .flat_map(|t| t.to_le_bytes()))
-                    .collect();
-                gpu.io_transfer(Dir::DeviceToHost, &out_bytes)?;
-                io_s += io_start.elapsed().as_secs_f64();
-
-                // 6. bookkeeping
-                let complete_s = now_s();
-                last_complete_s = complete_s;
-                last_progress_s = complete_s;
-                let exec_s = rep.elapsed.as_secs_f64();
-                let e = exec_est.entry(model.clone()).or_insert(exec_s);
-                *e = 0.3 * exec_s + 0.7 * *e;
-
-                let n_rows = batch.requests.len();
-                let requests = batcher::release(&mut gpu, batch);
-                for r in requests {
-                    let c = CompletedRequest {
-                        id: r.id,
-                        model: r.model,
-                        arrival_s: r.arrival_s,
-                        exec_start_s,
-                        complete_s,
-                        batch: rep.batch,
-                        batch_rows: n_rows,
-                        caused_swap: swap.swapped,
-                    };
-                    let met = sla.on_complete(&c);
-                    recorder.on_complete(c, met);
-                }
-                recorder.on_batch(BatchRecord {
-                    at_s: exec_start_s,
-                    model,
-                    rows: n_rows,
-                    artifact_batch: rep.batch,
-                    swapped: swap.swapped,
-                    load_s: swap.load_s,
-                    unload_s: swap.unload_s,
-                    exec_s,
-                    io_s,
-                });
-                publish_snapshot(&snapshot, &gpu, swap_mgr.stats());
-            }
-        }
-    }
-
-    // ---------------- teardown ------------------------------------------
-    stop.store(true, Ordering::Relaxed);
-    drop(rx);
-    // paper runtime: generation window + drain tail to last response
-    let runtime_s = last_complete_s.max(cfg.duration_s);
-    let unserved = queues.drain_all();
-    sla.on_unserved(unserved.len() as u64);
-    ingest.join().ok();
-    monitor.join().ok();
-    swap_mgr.evict(&mut gpu);
-
-    for m in monitor_records.lock().unwrap().drain(..) {
-        recorder.on_monitor(m);
-    }
-
-    // ---------------- summary -------------------------------------------
-    let stats = swap_mgr.stats().clone();
-    let summary = summarize(cfg, generated, runtime_s, &recorder, &sla,
-                            &gpu, &stats);
-    if let Some(dir) = &cfg.results_dir {
-        recorder.write_csvs(dir, &cfg.label)?;
-        std::fs::write(dir.join(format!("{}_summary.json", cfg.label)),
-                       summary.to_json().to_string())?;
-    }
-    Ok((summary, recorder))
-}
-
-fn publish_snapshot(snapshot: &Arc<Mutex<DeviceSnapshot>>, gpu: &SimGpu,
-                    swap_stats: &SwapStats) {
-    let mut s = snapshot.lock().unwrap();
-    s.gpu_util = gpu.utilization();
-    s.mem_in_use = gpu.mem_in_use();
-    s.mem_peak = gpu.mem_peak();
-    s.fragmentation = gpu.mem_fragmentation();
-    s.dma_h2d_bytes = gpu.dma_stats().h2d_bytes;
-    s.dma_crypto_s = gpu.dma_stats().crypto.as_secs_f64();
-    s.swaps = swap_stats.swap_count;
-}
-
-fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
-             recorder: &Recorder, sla: &SlaTracker, gpu: &SimGpu,
-             swap_stats: &SwapStats) -> RunSummary {
-    let h = &recorder.latency_hist;
-    let completed = recorder.requests.len() as u64;
-    let exec_busy = recorder.exec_busy_s();
-    RunSummary {
-        label: cfg.label.clone(),
-        mode: cfg.mode.as_str().to_string(),
-        pattern: cfg.pattern.clone(),
-        strategy: cfg.strategy.clone(),
-        sla_s: cfg.sla_s,
-        mean_rps: cfg.mean_rps,
-        duration_s: cfg.duration_s,
-        runtime_s,
-        generated,
-        completed,
-        sla_met: sla.met(),
-        sla_attainment: sla.attainment(),
-        latency_mean_s: h.mean(),
-        latency_p50_s: h.quantile(0.5),
-        latency_p90_s: h.quantile(0.9),
-        latency_p99_s: h.quantile(0.99),
-        latency_max_s: h.max(),
-        throughput_rps: if runtime_s > 0.0 {
-            completed as f64 / runtime_s
-        } else {
-            0.0
-        },
-        processing_rate_rps: if exec_busy > 0.0 {
-            completed as f64 / exec_busy
-        } else {
-            0.0
-        },
-        // utilization over the reported runtime (exec share of the run,
-        // Fig 7's metric); gpu.utilization() covers device lifetime and
-        // feeds the monitor CSV instead
-        gpu_util: if runtime_s > 0.0 {
-            (exec_busy / runtime_s).min(1.0)
-        } else {
-            gpu.utilization()
-        },
-        swap_count: swap_stats.swap_count,
-        total_load_s: swap_stats.total_load_s,
-        total_unload_s: swap_stats.total_unload_s,
-        total_exec_s: exec_busy,
-        total_crypto_s: swap_stats.total_crypto_s,
-        mean_load_s: if swap_stats.swap_count > 0 {
-            swap_stats.total_load_s / swap_stats.swap_count as f64
-        } else {
-            0.0
-        },
+        cfg.gpu.no_throttle = true;
+        let (a, _) = serve(&cfg, &registry).unwrap();
+        let (b, _) = EngineBuilder::new(&cfg).real(&registry).unwrap()
+            .run().unwrap();
+        assert_eq!(a.generated, b.generated,
+                   "same seed, same schedule through both entry points");
+        assert_eq!(a.mode, b.mode);
+        assert_eq!(a.strategy, b.strategy);
     }
 }

@@ -1,0 +1,115 @@
+//! The `ExecBackend` seam: what it means to *execute* a scheduling
+//! decision.
+//!
+//! The engine owns ingest, queues, strategy, SLA accounting and the
+//! `RunSummary`; a backend owns residency, execution and
+//! occupancy/crypto accounting.  Two implementations ship:
+//!
+//! * [`crate::engine::RealBackend`] — `SimGpu` + `Registry` +
+//!   `SwapManager`: real DMA (optionally CC-sealed), real PJRT
+//!   execution.
+//! * [`crate::engine::DesBackend`] — the calibrated [`CostModel`]:
+//!   every cost is a table lookup, virtual time only.
+//!
+//! Future backends (multi-GPU sharding, trace replay) implement this
+//! trait instead of hand-rolling a third serve loop.
+//!
+//! [`CostModel`]: crate::sim::CostModel
+
+use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::request::Request;
+use crate::coordinator::swap::SwapStats;
+use crate::engine::clock::Clock;
+
+/// Timing of one residency change, in the run's time domain.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SwapOutcome {
+    /// True if a load (and possibly an unload) actually happened.
+    pub swapped: bool,
+    pub load_s: f64,
+    pub unload_s: f64,
+    /// Crypto share of the load (CC only).
+    pub crypto_s: f64,
+}
+
+/// One executed batch, in the run's time domain.
+#[derive(Debug, Clone)]
+pub struct BatchOutcome {
+    /// The requests that rode in this batch (popped from the queue).
+    pub requests: Vec<Request>,
+    /// Generated tokens per request row (real execution only; empty
+    /// when the backend models cost without producing output).
+    pub tokens: Vec<Vec<i32>>,
+    /// Artifact batch size used (>= requests.len()).
+    pub artifact_batch: usize,
+    /// When execution began, on the engine's clock.
+    pub exec_start_s: f64,
+    pub exec_s: f64,
+    pub io_s: f64,
+}
+
+/// Device occupancy published to the monitor thread.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceSnapshot {
+    pub gpu_util: f64,
+    pub mem_in_use: u64,
+    pub mem_peak: u64,
+    pub fragmentation: f64,
+    pub dma_h2d_bytes: u64,
+    pub dma_crypto_s: f64,
+    pub swaps: u64,
+}
+
+/// Pluggable execution backend behind the single serve loop.
+///
+/// Time protocol: methods receive the engine's [`Clock`] and must
+/// account their own costs through it — real backends let wall time
+/// pass (and call `advance` only when running under virtual costs),
+/// the DES backend advances virtual time by table lookups.
+pub trait ExecBackend {
+    /// Short backend name for labels/diagnostics ("real" | "des").
+    fn kind(&self) -> &'static str;
+
+    /// Every model this backend can serve.
+    fn model_names(&self) -> Vec<String>;
+
+    /// Fail fast when `model` is unknown to the backend.
+    fn check_model(&self, model: &str) -> anyhow::Result<()>;
+
+    /// Tokenize a prompt for `model` (empty when payload content never
+    /// reaches the backend, as in the DES).
+    fn tokenize_prompt(&self, model: &str, prompt: &str) -> Vec<i32>;
+
+    /// Profiled optimal batch size for `model` (§III-D2).
+    fn obs(&self, model: &str) -> usize;
+
+    /// Estimated load seconds for `model` in the current CC mode
+    /// (SelectBatch's `desired_latency` term).
+    fn est_load_s(&self, model: &str) -> f64;
+
+    /// Seed value for the engine's per-model exec-time EWMA.
+    fn initial_exec_est_s(&self, model: &str) -> f64;
+
+    /// Currently resident model, if any.
+    fn resident(&self) -> Option<String>;
+
+    /// Make `model` resident, swapping if needed (the expensive
+    /// CC-sensitive step).
+    fn ensure_resident(&mut self, clock: &mut dyn Clock, model: &str)
+                       -> anyhow::Result<SwapOutcome>;
+
+    /// Pop up to `take` requests for `model` and execute them as one
+    /// batch.  `Ok(None)` when the queue was empty.
+    fn execute_batch(&mut self, clock: &mut dyn Clock,
+                     queues: &mut ModelQueues, model: &str, take: usize)
+                     -> anyhow::Result<Option<BatchOutcome>>;
+
+    /// Occupancy counters for the monitor thread.
+    fn snapshot(&self) -> DeviceSnapshot;
+
+    /// Swap/load/crypto totals for the run summary.
+    fn swap_stats(&self) -> SwapStats;
+
+    /// End of run: release residency and device state.
+    fn teardown(&mut self);
+}

@@ -1,0 +1,143 @@
+//! The `Clock` seam: one serve loop, two time domains.
+//!
+//! The paper's evaluation runs the identical control loop in wall-clock
+//! time (real execution) and in virtual time (calibrated DES).  This is
+//! the only module in the crate that advances experiment time; backends
+//! report costs and the engine moves the clock.
+
+use std::time::{Duration, Instant};
+
+/// Experiment time source.  `now_s` is seconds since run start.
+pub trait Clock {
+    fn now_s(&self) -> f64;
+
+    /// Account a modeled cost.  Virtual time advances by `dt_s`; wall
+    /// clocks ignore it (the cost was already paid in real sleeps).
+    fn advance(&mut self, dt_s: f64);
+
+    /// Idle until something can change the next decision.
+    ///
+    /// * Wall clock: sleep one scheduler tick, return `true`.
+    /// * Virtual clock: jump to `next_event_s` when it is in the
+    ///   future; return `false` when no future event exists (nothing
+    ///   can ever change the decision — the run is over).
+    fn idle(&mut self, next_event_s: Option<f64>, tick: Duration) -> bool;
+
+    fn is_virtual(&self) -> bool;
+}
+
+/// Real time, measured from construction.
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { start: Instant::now() }
+    }
+
+    /// The instant this clock calls `t = 0` — lets ingest/monitor
+    /// threads pace themselves against the same origin.
+    pub fn origin(&self) -> Instant {
+        self.start
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn advance(&mut self, _dt_s: f64) {}
+
+    fn idle(&mut self, _next_event_s: Option<f64>, tick: Duration)
+            -> bool {
+        std::thread::sleep(tick);
+        true
+    }
+
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Virtual time: advances only through `advance`/`idle`.
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: 0.0 }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_s(&self) -> f64 {
+        self.now
+    }
+
+    fn advance(&mut self, dt_s: f64) {
+        if dt_s > 0.0 {
+            self.now += dt_s;
+        }
+    }
+
+    fn idle(&mut self, next_event_s: Option<f64>, _tick: Duration)
+            -> bool {
+        match next_event_s {
+            Some(t) if t > self.now => {
+                self.now = t;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_advances_only_on_demand() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now_s(), 0.0);
+        c.advance(1.5);
+        assert_eq!(c.now_s(), 1.5);
+        c.advance(-1.0); // negative costs are ignored
+        assert_eq!(c.now_s(), 1.5);
+        assert!(c.idle(Some(4.0), Duration::from_millis(1)));
+        assert_eq!(c.now_s(), 4.0);
+        // no future event -> cannot make progress
+        assert!(!c.idle(Some(4.0), Duration::from_millis(1)));
+        assert!(!c.idle(None, Duration::from_millis(1)));
+    }
+
+    #[test]
+    fn wall_clock_moves_on_its_own() {
+        let mut c = WallClock::new();
+        let t0 = c.now_s();
+        assert!(c.idle(None, Duration::from_millis(5)));
+        assert!(c.now_s() >= t0 + 0.004);
+        c.advance(100.0); // modeled costs don't move wall time
+        assert!(c.now_s() < 50.0);
+        assert!(!c.is_virtual());
+    }
+}

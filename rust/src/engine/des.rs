@@ -1,0 +1,146 @@
+//! `DesBackend` — the calibrated discrete-event execution backend.
+//!
+//! Every cost the real backend pays for real (DMA throttles, crypto,
+//! PJRT execution) becomes a table lookup in the measured
+//! [`CostModel`], and the backend advances the engine's `VirtualClock`
+//! by exactly those amounts.  Payload content never exists here, which
+//! is what makes full-grid sweeps (72 cells, Fig 5–7) take milliseconds
+//! instead of hours.
+//!
+//! Known abstraction boundary: the DES models no device *memory*, so
+//! it always dispatches `batch_size_at_least(rows)` where the real
+//! backend's batcher would halve a batch on workspace OOM.  The
+//! DES-vs-real parity guarantee (`tests/engine_parity.rs`) therefore
+//! holds for configurations that fit their largest batch workspace —
+//! which every calibrated run does, because profiling marks
+//! memory-infeasible batch sizes as `oom_batches` and caps OBS below
+//! them.
+
+use crate::config::RunConfig;
+use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::swap::SwapStats;
+use crate::engine::backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
+                             SwapOutcome};
+use crate::engine::clock::Clock;
+use crate::gpu::CcMode;
+use crate::runtime::Manifest;
+use crate::sim::CostModel;
+
+pub struct DesBackend<'a> {
+    manifest: &'a Manifest,
+    costs: &'a CostModel,
+    mode: CcMode,
+    resident: Option<String>,
+    stats: SwapStats,
+}
+
+impl<'a> DesBackend<'a> {
+    pub fn new(cfg: &RunConfig, manifest: &'a Manifest,
+               costs: &'a CostModel) -> DesBackend<'a> {
+        DesBackend {
+            manifest,
+            costs,
+            mode: cfg.mode,
+            resident: None,
+            stats: SwapStats::default(),
+        }
+    }
+}
+
+impl ExecBackend for DesBackend<'_> {
+    fn kind(&self) -> &'static str {
+        "des"
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        self.manifest.family_names()
+    }
+
+    fn check_model(&self, model: &str) -> anyhow::Result<()> {
+        self.manifest.family(model)?;
+        self.costs.costs(model)?;
+        Ok(())
+    }
+
+    fn tokenize_prompt(&self, _model: &str, _prompt: &str) -> Vec<i32> {
+        // content never affects the DES
+        Vec::new()
+    }
+
+    fn obs(&self, model: &str) -> usize {
+        self.costs.costs(model).map(|mc| mc.obs).unwrap_or(1)
+    }
+
+    fn est_load_s(&self, model: &str) -> f64 {
+        self.costs.costs(model).map(|mc| mc.load_s(self.mode))
+            .unwrap_or(0.0)
+    }
+
+    fn initial_exec_est_s(&self, model: &str) -> f64 {
+        self.costs.costs(model).map(|mc| mc.exec_s(mc.obs)).unwrap_or(0.2)
+    }
+
+    fn resident(&self) -> Option<String> {
+        self.resident.clone()
+    }
+
+    fn ensure_resident(&mut self, clock: &mut dyn Clock, model: &str)
+                       -> anyhow::Result<SwapOutcome> {
+        if self.resident.as_deref() == Some(model) {
+            return Ok(SwapOutcome::default());
+        }
+        let mc = self.costs.costs(model)?;
+        let mut out = SwapOutcome { swapped: true, ..Default::default() };
+        if self.resident.is_some() {
+            out.unload_s = mc.unload_s;
+        }
+        out.load_s = mc.load_s(self.mode);
+        clock.advance(out.unload_s + out.load_s);
+        self.resident = Some(model.to_string());
+        self.stats.swap_count += 1;
+        self.stats.total_load_s += out.load_s;
+        self.stats.total_unload_s += out.unload_s;
+        self.stats.load_samples.push((model.to_string(), out.load_s));
+        Ok(out)
+    }
+
+    fn execute_batch(&mut self, clock: &mut dyn Clock,
+                     queues: &mut ModelQueues, model: &str, take: usize)
+                     -> anyhow::Result<Option<BatchOutcome>> {
+        let requests = queues.pop_n(model, take.max(1));
+        if requests.is_empty() {
+            return Ok(None);
+        }
+        let spec = self.manifest.family(model)?;
+        let mc = self.costs.costs(model)?;
+        let artifact_batch = spec.batch_size_at_least(requests.len());
+        let exec_s = mc.exec_s(artifact_batch);
+        let io_s = self.costs.io_s_per_row(self.mode)
+            * requests.len() as f64;
+        let exec_start_s = clock.now_s();
+        clock.advance(exec_s + io_s);
+        Ok(Some(BatchOutcome {
+            requests,
+            tokens: Vec::new(),
+            artifact_batch,
+            exec_start_s,
+            exec_s,
+            io_s,
+        }))
+    }
+
+    fn snapshot(&self) -> DeviceSnapshot {
+        DeviceSnapshot {
+            swaps: self.stats.swap_count,
+            ..Default::default()
+        }
+    }
+
+    fn swap_stats(&self) -> SwapStats {
+        self.stats.clone()
+    }
+
+    fn teardown(&mut self) {
+        self.resident = None;
+    }
+}

@@ -1,0 +1,511 @@
+//! The `Engine` — the crate's single serve loop.
+//!
+//! The paper's evaluation is one control loop — ingest → queues →
+//! strategy → swap → execute → record (§III-B) — run in two time
+//! domains: wall clock against the simulated GPU, and virtual time
+//! against the calibrated cost model.  The engine owns that loop
+//! *once*, parameterized by two seams:
+//!
+//! * [`Clock`] — wall vs virtual time ([`WallClock`], [`VirtualClock`]);
+//! * [`ExecBackend`] — what a decision costs and produces
+//!   ([`RealBackend`], [`DesBackend`]).
+//!
+//! [`EngineBuilder`] is the supported entry point:
+//!
+//! ```no_run
+//! # use sincere::config::RunConfig;
+//! # use sincere::engine::EngineBuilder;
+//! # use sincere::runtime::Registry;
+//! # fn demo(cfg: &RunConfig, registry: &Registry) -> anyhow::Result<()> {
+//! let (summary, _recorder) = EngineBuilder::new(cfg)
+//!     .real(registry)?      // or .des(&manifest, &costs)
+//!     .run()?;
+//! println!("{}", summary.brief());
+//! # Ok(()) }
+//! ```
+//!
+//! `coordinator::serve` and `sim::simulate` remain as thin deprecated
+//! shims over this builder.  This module is the only place in the
+//! crate that reads or advances experiment time.
+
+pub mod backend;
+pub mod clock;
+mod des;
+mod real;
+mod summary;
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::RunConfig;
+use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::rate::RateEstimator;
+use crate::coordinator::request::{CompletedRequest, Request};
+use crate::coordinator::sla::SlaTracker;
+use crate::coordinator::strategy::{strategy_by_name, Decision, ModelView,
+                                   SchedContext, Strategy};
+use crate::metrics::recorder::{BatchRecord, MonitorRecord, Recorder};
+use crate::metrics::system::sample_proc;
+use crate::traffic::pattern_by_name;
+use crate::traffic::rng::Pcg64;
+use crate::workload::promptgen::PromptGen;
+
+pub use backend::{BatchOutcome, DeviceSnapshot, ExecBackend, SwapOutcome};
+pub use clock::{Clock, VirtualClock, WallClock};
+pub use des::DesBackend;
+pub use real::RealBackend;
+pub use summary::RunSummary;
+
+use summary::summarize;
+
+/// Builder for one serving run: pick a backend, then [`run`].
+///
+/// [`run`]: EngineBuilder::run
+pub struct EngineBuilder<'a> {
+    cfg: RunConfig,
+    backend: Option<Box<dyn ExecBackend + 'a>>,
+    virtual_time: bool,
+}
+
+impl<'a> EngineBuilder<'a> {
+    pub fn new(cfg: &RunConfig) -> EngineBuilder<'a> {
+        EngineBuilder { cfg: cfg.clone(), backend: None,
+                        virtual_time: false }
+    }
+
+    /// Real execution on the wall clock: `SimGpu` + PJRT + swap
+    /// manager (the paper's measured system).
+    pub fn real(mut self, registry: &'a crate::runtime::Registry)
+                -> anyhow::Result<EngineBuilder<'a>> {
+        self.backend = Some(Box::new(RealBackend::new(&self.cfg,
+                                                      registry)?));
+        self.virtual_time = false;
+        Ok(self)
+    }
+
+    /// Calibrated DES in virtual time (full-grid sweeps).
+    pub fn des(mut self, manifest: &'a crate::runtime::Manifest,
+               costs: &'a crate::sim::CostModel)
+               -> anyhow::Result<EngineBuilder<'a>> {
+        self.backend = Some(Box::new(DesBackend::new(&self.cfg, manifest,
+                                                     costs)));
+        self.virtual_time = true;
+        Ok(self)
+    }
+
+    /// Real execution under virtual time with modeled costs — the
+    /// backend-parity seam (see `tests/engine_parity.rs`).  Pair with
+    /// `cfg.gpu.no_throttle = true` so the real work underneath takes
+    /// negligible wall time.
+    pub fn real_virtual(mut self,
+                        registry: &'a crate::runtime::Registry,
+                        costs: &crate::sim::CostModel)
+                        -> anyhow::Result<EngineBuilder<'a>> {
+        self.backend = Some(Box::new(RealBackend::with_virtual_costs(
+            &self.cfg, registry, costs)?));
+        self.virtual_time = true;
+        Ok(self)
+    }
+
+    /// Construct the engine (validates config and models).
+    pub fn build(self) -> anyhow::Result<Engine<'a>> {
+        let cfg = self.cfg;
+        cfg.validate()?;
+        let backend = self.backend.ok_or_else(|| anyhow::anyhow!(
+            "EngineBuilder: no backend configured \
+             (call .real()/.des()/.real_virtual())"))?;
+        let strategy = strategy_by_name(&cfg.strategy)?;
+        let models = if cfg.models.is_empty() {
+            backend.model_names()
+        } else {
+            cfg.models.clone()
+        };
+        for model in &models {
+            backend.check_model(model)?;
+        }
+        Ok(Engine {
+            cfg,
+            models,
+            strategy,
+            backend,
+            virtual_time: self.virtual_time,
+        })
+    }
+
+    /// Build and run to completion.
+    pub fn run(self) -> anyhow::Result<(RunSummary, Recorder)> {
+        self.build()?.run()
+    }
+}
+
+/// The serve loop, ready to run one experiment.
+pub struct Engine<'a> {
+    cfg: RunConfig,
+    models: Vec<String>,
+    strategy: Box<dyn Strategy>,
+    backend: Box<dyn ExecBackend + 'a>,
+    virtual_time: bool,
+}
+
+/// Arrival delivery into the loop: precomputed virtual schedule, or an
+/// open-loop wall-clock ingest thread.
+enum Ingest {
+    Virtual(VecDeque<Request>),
+    Wall {
+        rx: mpsc::Receiver<Request>,
+        open: bool,
+        handle: Option<JoinHandle<()>>,
+    },
+}
+
+impl Ingest {
+    fn open(&self) -> bool {
+        match self {
+            Ingest::Virtual(pending) => !pending.is_empty(),
+            Ingest::Wall { open, .. } => *open,
+        }
+    }
+
+    fn next_arrival_s(&self) -> Option<f64> {
+        match self {
+            Ingest::Virtual(pending) => pending.front().map(|r| r.arrival_s),
+            Ingest::Wall { .. } => None,
+        }
+    }
+}
+
+/// Monitor-thread plumbing (wall-clock runs only).
+struct MonitorCtx {
+    snapshot: Arc<Mutex<DeviceSnapshot>>,
+    records: Arc<Mutex<Vec<MonitorRecord>>>,
+    handle: JoinHandle<()>,
+}
+
+/// Strategy-visible snapshot of the queues, built the same way for
+/// every backend (the HTTP front-end reuses this).
+pub fn build_views(queues: &ModelQueues, rates: &RateEstimator,
+                   backend: &dyn ExecBackend,
+                   exec_est: &HashMap<String, f64>, now_s: f64)
+                   -> Vec<ModelView> {
+    queues.nonempty_models().iter().map(|m| ModelView {
+        model: m.to_string(),
+        len: queues.len(m),
+        oldest_wait_s: queues.head_arrival_s(m)
+            .map(|a| (now_s - a).max(0.0)).unwrap_or(0.0),
+        obs: backend.obs(m),
+        rate_rps: rates.rate_rps(m, now_s),
+        est_load_s: backend.est_load_s(m),
+        est_exec_s: exec_est.get(*m).copied()
+            .unwrap_or_else(|| backend.initial_exec_est_s(m)),
+    }).collect()
+}
+
+impl Engine<'_> {
+    /// Run the experiment to completion and assemble the summary.
+    ///
+    /// The loop is the paper's §III-B control loop; the drain/backlog
+    /// methodology (arrivals stop at `duration_s`, the backlog drains
+    /// up to `drain_s` more, runtime extends to the last response) is
+    /// implemented here once for both time domains.
+    pub fn run(mut self) -> anyhow::Result<(RunSummary, Recorder)> {
+        let cfg = self.cfg.clone();
+
+        // ---------------- arrival schedule (open loop) ----------------
+        let mut rng = Pcg64::new(cfg.seed);
+        let pattern = pattern_by_name(&cfg.pattern)?;
+        let arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps,
+                                        &self.models, &mut rng);
+        let generated = arrivals.len() as u64;
+        let mut prompts = PromptGen::new(cfg.seed ^ 0xBEEF, 24);
+        let schedule: Vec<Request> = arrivals.iter().enumerate()
+            .map(|(i, a)| Request {
+                id: i as u64,
+                model: a.model.clone(),
+                tokens: self.backend.tokenize_prompt(
+                    &a.model, &prompts.next_prompt(&a.model)),
+                arrival_s: a.at_s,
+            }).collect();
+
+        // ---------------- clock + ingest + monitor --------------------
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut clock: Box<dyn Clock>;
+        let mut ingest;
+        let monitor_ctx;
+        if self.virtual_time {
+            clock = Box::new(VirtualClock::new());
+            ingest = Ingest::Virtual(schedule.into_iter().collect());
+            monitor_ctx = None;
+        } else {
+            let wall = WallClock::new();
+            let origin = wall.origin();
+            clock = Box::new(wall);
+            let (rx, handle) = spawn_ingest(schedule, origin,
+                                            stop.clone());
+            ingest = Ingest::Wall { rx, open: true,
+                                    handle: Some(handle) };
+            monitor_ctx = Some(spawn_monitor(origin, stop.clone(),
+                                             cfg.monitor_period));
+        }
+
+        // ---------------- scheduler state ------------------------------
+        let mut queues = ModelQueues::new();
+        let mut rates = RateEstimator::default();
+        let mut sla = SlaTracker::new(cfg.sla_s);
+        let mut recorder = Recorder::new();
+        // EWMA of observed exec time per model (SelectBatch headroom)
+        let mut exec_est: HashMap<String, f64> = HashMap::new();
+        let mut ingested: u64 = 0;
+        let mut last_complete_s = 0.0f64;
+        // instant of the last observable progress (arrival, expiry or
+        // completion); drives the wall-clock stall exit for strategies
+        // that legitimately strand a sub-OBS remainder
+        let mut last_progress_s = 0.0f64;
+        // The paper's methodology: arrivals stop at duration_s but the
+        // system drains its backlog; drain_s is a safety cap, and the
+        // reported runtime extends to the last dispatched response.
+        let hard_stop_s = cfg.duration_s + cfg.drain_s;
+
+        loop {
+            // ingest everything due by now
+            match &mut ingest {
+                Ingest::Virtual(pending) => {
+                    let now = clock.now_s();
+                    while pending.front().map(|r| r.arrival_s <= now)
+                        .unwrap_or(false)
+                    {
+                        let r = pending.pop_front().unwrap();
+                        rates.on_arrival(&r.model, r.arrival_s);
+                        ingested += 1;
+                        queues.push(r);
+                    }
+                }
+                Ingest::Wall { rx, open, .. } => loop {
+                    match rx.try_recv() {
+                        Ok(r) => {
+                            rates.on_arrival(&r.model, r.arrival_s);
+                            ingested += 1;
+                            last_progress_s = clock.now_s();
+                            queues.push(r);
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            *open = false;
+                            break;
+                        }
+                    }
+                },
+            }
+
+            let t = clock.now_s();
+            // SLA expiry: overdue queued requests are unfulfilled
+            // (§III-C3)
+            let expired = queues.expire(t, cfg.sla_s);
+            if !expired.is_empty() {
+                sla.on_unserved(expired.len() as u64);
+                last_progress_s = t;
+            }
+            if t >= hard_stop_s {
+                break;
+            }
+            if !ingest.open() && queues.is_empty() {
+                break;
+            }
+            // wall-clock stall exit: nothing new can arrive and no
+            // timer will ever fire for the stranded remainder (virtual
+            // runs detect this exactly via Clock::idle instead)
+            if !self.virtual_time && !ingest.open()
+                && t - last_progress_s > cfg.timeout_s() + 5.0 * cfg.sla_s
+            {
+                break;
+            }
+
+            let views = build_views(&queues, &rates, self.backend.as_ref(),
+                                    &exec_est, t);
+            let ctx = SchedContext {
+                now_s: t,
+                resident: self.backend.resident(),
+                queues: views,
+                sla_s: cfg.sla_s,
+                timeout_s: cfg.timeout_s(),
+            };
+
+            match self.strategy.decide(&ctx) {
+                Decision::Wait => {
+                    if let Some(mc) = &monitor_ctx {
+                        *mc.snapshot.lock().unwrap() =
+                            self.backend.snapshot();
+                    }
+                    // next actionable instant: the next arrival or the
+                    // earliest not-yet-passed queue timer (virtual time
+                    // jumps there; wall time just sleeps a tick)
+                    let next = if self.virtual_time {
+                        let next_timer = queues.nonempty_models().iter()
+                            .filter_map(|m| queues.head_arrival_s(m))
+                            .flat_map(|a| {
+                                [a + cfg.timeout_s(), a + cfg.sla_s]
+                            })
+                            .filter(|&x| x > t)
+                            .fold(f64::INFINITY, f64::min);
+                        let n = ingest.next_arrival_s()
+                            .unwrap_or(f64::INFINITY).min(next_timer);
+                        n.is_finite().then_some(n.min(hard_stop_s))
+                    } else {
+                        None
+                    };
+                    if !clock.idle(next, cfg.tick) {
+                        break;
+                    }
+                }
+                Decision::Process { model, take } => {
+                    // 1. residency (the expensive CC-sensitive step)
+                    let swap = self.backend.ensure_resident(
+                        clock.as_mut(), &model)?;
+                    // 2.-5. batch assembly + payload I/O + execution,
+                    // costed by the backend in the engine's time domain
+                    let Some(out) = self.backend.execute_batch(
+                        clock.as_mut(), &mut queues, &model, take)?
+                    else {
+                        continue;
+                    };
+
+                    // 6. bookkeeping
+                    let complete_s = clock.now_s();
+                    last_complete_s = complete_s;
+                    last_progress_s = complete_s;
+                    let e = exec_est.entry(model.clone())
+                        .or_insert(out.exec_s);
+                    *e = 0.3 * out.exec_s + 0.7 * *e;
+
+                    let n_rows = out.requests.len();
+                    for r in &out.requests {
+                        let c = CompletedRequest {
+                            id: r.id,
+                            model: r.model.clone(),
+                            arrival_s: r.arrival_s,
+                            exec_start_s: out.exec_start_s,
+                            complete_s,
+                            batch: out.artifact_batch,
+                            batch_rows: n_rows,
+                            caused_swap: swap.swapped,
+                        };
+                        let met = sla.on_complete(&c);
+                        recorder.on_complete(c, met);
+                    }
+                    recorder.on_batch(BatchRecord {
+                        at_s: out.exec_start_s,
+                        model,
+                        rows: n_rows,
+                        artifact_batch: out.artifact_batch,
+                        swapped: swap.swapped,
+                        load_s: swap.load_s,
+                        unload_s: swap.unload_s,
+                        exec_s: out.exec_s,
+                        io_s: out.io_s,
+                    });
+                    if let Some(mc) = &monitor_ctx {
+                        *mc.snapshot.lock().unwrap() =
+                            self.backend.snapshot();
+                    }
+                }
+            }
+        }
+
+        // ---------------- teardown -------------------------------------
+        stop.store(true, Ordering::Relaxed);
+        // paper runtime: generation window + drain tail to last response
+        let runtime_s = last_complete_s.max(cfg.duration_s);
+        // unserved = still queued + never ingested before the cutoff
+        let drained = queues.drain_all().len() as u64;
+        sla.on_unserved(drained + (generated - ingested));
+        let ingest_handle = match &mut ingest {
+            Ingest::Wall { handle, .. } => handle.take(),
+            Ingest::Virtual(_) => None,
+        };
+        // dropping the receiver closes the channel, so a paced sender
+        // exits at its next send; then join
+        drop(ingest);
+        if let Some(h) = ingest_handle {
+            h.join().ok();
+        }
+        if let Some(mc) = monitor_ctx {
+            mc.handle.join().ok();
+            for m in mc.records.lock().unwrap().drain(..) {
+                recorder.on_monitor(m);
+            }
+        }
+        self.backend.teardown();
+
+        // ---------------- summary --------------------------------------
+        let stats = self.backend.swap_stats();
+        let summary = summarize(&cfg, generated, runtime_s, &recorder,
+                                &sla, &stats);
+        if let Some(dir) = &cfg.results_dir {
+            recorder.write_csvs(dir, &cfg.label)?;
+            std::fs::write(
+                dir.join(format!("{}_summary.json", cfg.label)),
+                summary.to_json().to_string())?;
+        }
+        Ok((summary, recorder))
+    }
+}
+
+/// Open-loop ingest thread: walks the precomputed schedule in wall
+/// time, so overload shows up as queueing, not back-pressure on the
+/// generator.
+fn spawn_ingest(schedule: Vec<Request>, origin: Instant,
+                stop: Arc<AtomicBool>)
+                -> (mpsc::Receiver<Request>, JoinHandle<()>) {
+    let (tx, rx) = mpsc::channel::<Request>();
+    let handle = std::thread::spawn(move || {
+        for req in schedule {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            let target = Duration::from_secs_f64(req.arrival_s);
+            let elapsed = origin.elapsed();
+            if target > elapsed {
+                std::thread::sleep(target - elapsed);
+            }
+            if tx.send(req).is_err() {
+                break;
+            }
+        }
+        // channel closes when tx drops
+    });
+    (rx, handle)
+}
+
+/// Monitor thread: samples process counters plus the backend's device
+/// snapshot at a fixed period (wall-clock runs only).
+fn spawn_monitor(origin: Instant, stop: Arc<AtomicBool>,
+                 period: Duration) -> MonitorCtx {
+    let snapshot = Arc::new(Mutex::new(DeviceSnapshot::default()));
+    let records: Arc<Mutex<Vec<MonitorRecord>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let handle = {
+        let snapshot = snapshot.clone();
+        let records = records.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                let snap = snapshot.lock().unwrap().clone();
+                let rec = MonitorRecord {
+                    proc: sample_proc(origin.elapsed().as_secs_f64()),
+                    gpu_util: snap.gpu_util,
+                    mem_in_use: snap.mem_in_use,
+                    mem_peak: snap.mem_peak,
+                    fragmentation: snap.fragmentation,
+                    dma_h2d_bytes: snap.dma_h2d_bytes,
+                    dma_crypto_s: snap.dma_crypto_s,
+                    swaps: snap.swaps,
+                };
+                records.lock().unwrap().push(rec);
+                std::thread::sleep(period);
+            }
+        })
+    };
+    MonitorCtx { snapshot, records, handle }
+}

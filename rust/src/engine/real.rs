@@ -1,0 +1,235 @@
+//! `RealBackend` — the execution backend over `SimGpu` + `Registry` +
+//! `SwapManager`: real (optionally CC-sealed) DMA, real PJRT
+//! execution, real device occupancy.
+//!
+//! Two time modes:
+//!
+//! * **Wall** (default, used by `coordinator::serve` and the HTTP
+//!   front-end): costs are whatever actually elapsed; `Clock::advance`
+//!   is a no-op on the engine's `WallClock`.
+//! * **Virtual costs** (`with_virtual_costs`): the same real execution
+//!   path runs, but reported times come from a calibrated
+//!   [`CostModel`], and the backend advances the engine's
+//!   `VirtualClock` by exactly the amounts a `DesBackend` would — the
+//!   seam the DES-vs-real parity test pins.
+
+use crate::config::RunConfig;
+use crate::coordinator::batcher;
+use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::swap::{SwapManager, SwapStats};
+use crate::engine::backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
+                             SwapOutcome};
+use crate::engine::clock::Clock;
+use crate::gpu::device::SimGpu;
+use crate::gpu::dma::Dir;
+use crate::runtime::Registry;
+use crate::sim::CostModel;
+use crate::workload::tokenizer::tokenize;
+
+pub struct RealBackend<'a> {
+    registry: &'a Registry,
+    gpu: SimGpu,
+    swaps: SwapManager,
+    /// Modeled swap accounting, maintained only in virtual-costs mode
+    /// (wall mode reads the swap manager's measured stats directly).
+    stats: SwapStats,
+    virtual_costs: Option<CostModel>,
+}
+
+impl<'a> RealBackend<'a> {
+    /// Wall-clock backend (the real experiment path).
+    pub fn new(cfg: &RunConfig, registry: &'a Registry)
+               -> anyhow::Result<RealBackend<'a>> {
+        Ok(RealBackend {
+            registry,
+            gpu: SimGpu::new(cfg.gpu.clone())?,
+            swaps: SwapManager::new(),
+            stats: SwapStats::default(),
+            virtual_costs: None,
+        })
+    }
+
+    /// Real execution under virtual time: all reported costs come from
+    /// `costs`, and the backend advances the engine's clock itself.
+    /// Combine with `cfg.gpu.no_throttle = true` so the real work
+    /// underneath takes negligible wall time.
+    pub fn with_virtual_costs(cfg: &RunConfig, registry: &'a Registry,
+                              costs: &CostModel)
+                              -> anyhow::Result<RealBackend<'a>> {
+        let mut backend = RealBackend::new(cfg, registry)?;
+        backend.virtual_costs = Some(costs.clone());
+        Ok(backend)
+    }
+}
+
+impl ExecBackend for RealBackend<'_> {
+    fn kind(&self) -> &'static str {
+        "real"
+    }
+
+    fn model_names(&self) -> Vec<String> {
+        self.registry.names()
+    }
+
+    fn check_model(&self, model: &str) -> anyhow::Result<()> {
+        self.registry.entry(model)?;
+        if let Some(costs) = &self.virtual_costs {
+            costs.costs(model)?;
+        }
+        Ok(())
+    }
+
+    fn tokenize_prompt(&self, model: &str, prompt: &str) -> Vec<i32> {
+        match self.registry.entry(model) {
+            Ok(entry) => tokenize(prompt, entry.spec.prompt_len,
+                                  entry.spec.vocab as u32),
+            Err(_) => Vec::new(),
+        }
+    }
+
+    fn obs(&self, model: &str) -> usize {
+        // In virtual-costs mode the cost table is the single source of
+        // truth for batch sizing (it must be for DES parity); it must
+        // only name OBS values the registry actually compiled.
+        match &self.virtual_costs {
+            Some(costs) => costs.costs(model).map(|mc| mc.obs)
+                .unwrap_or(1),
+            None => self.registry.entry(model).map(|e| e.obs).unwrap_or(1),
+        }
+    }
+
+    fn est_load_s(&self, model: &str) -> f64 {
+        match &self.virtual_costs {
+            Some(costs) => costs.costs(model)
+                .map(|mc| mc.load_s(self.gpu.mode())).unwrap_or(0.0),
+            None => SwapManager::estimate_load_s(&self.gpu, self.registry,
+                                                 model),
+        }
+    }
+
+    fn initial_exec_est_s(&self, model: &str) -> f64 {
+        match &self.virtual_costs {
+            Some(costs) => costs.costs(model)
+                .map(|mc| mc.exec_s(mc.obs)).unwrap_or(0.2),
+            // wall mode: optimistic prior, corrected by the EWMA after
+            // the first batch (same constant the old serve loop used)
+            None => 0.2,
+        }
+    }
+
+    fn resident(&self) -> Option<String> {
+        self.swaps.resident().map(|s| s.to_string())
+    }
+
+    fn ensure_resident(&mut self, clock: &mut dyn Clock, model: &str)
+                       -> anyhow::Result<SwapOutcome> {
+        let had_resident = self.swaps.resident().is_some();
+        let rep = self.swaps.ensure_resident(&mut self.gpu, self.registry,
+                                             model)?;
+        let mut out = SwapOutcome {
+            swapped: rep.swapped,
+            load_s: rep.load_s,
+            unload_s: rep.unload_s,
+            crypto_s: rep.crypto_s,
+        };
+        if !rep.swapped {
+            return Ok(out);
+        }
+        if let Some(costs) = &self.virtual_costs {
+            let mc = costs.costs(model)?;
+            out.load_s = mc.load_s(self.gpu.mode());
+            out.unload_s = if had_resident { mc.unload_s } else { 0.0 };
+            out.crypto_s = 0.0;
+            clock.advance(out.unload_s + out.load_s);
+            // virtual mode keeps its own stats: the swap manager's
+            // wall-measured values are not in the engine's time domain
+            self.stats.swap_count += 1;
+            self.stats.total_load_s += out.load_s;
+            self.stats.total_unload_s += out.unload_s;
+            self.stats.load_samples.push((model.to_string(), out.load_s));
+        }
+        Ok(out)
+    }
+
+    fn execute_batch(&mut self, clock: &mut dyn Clock,
+                     queues: &mut ModelQueues, model: &str, take: usize)
+                     -> anyhow::Result<Option<BatchOutcome>> {
+        // 1. batch assembly + workspace reservation (OOM guard)
+        let Some(batch) = batcher::prepare(queues, &mut self.gpu,
+                                           self.registry, model, take)?
+        else {
+            return Ok(None);
+        };
+
+        // 2. request payload in (CC seals it)
+        let io_start = clock.now_s();
+        let in_bytes: Vec<u8> = batch.requests.iter()
+            .flat_map(|r| r.tokens.iter().flat_map(|t| t.to_le_bytes()))
+            .collect();
+        self.gpu.io_transfer(Dir::HostToDevice, &in_bytes)?;
+        let mut io_s = clock.now_s() - io_start;
+
+        // 3. execute
+        let rows: Vec<Vec<i32>> = batch.requests.iter()
+            .map(|r| r.tokens.clone()).collect();
+        let mut exec_start_s = clock.now_s();
+        let rep = self.registry.execute(model, &rows)?;
+        self.gpu.record_compute(rep.elapsed);
+        let mut exec_s = rep.elapsed.as_secs_f64();
+
+        // 4. response payload out
+        let out_bytes: Vec<u8> = rep.tokens.iter()
+            .flat_map(|row| row.iter().flat_map(|t| t.to_le_bytes()))
+            .collect();
+        let io_start = clock.now_s();
+        self.gpu.io_transfer(Dir::DeviceToHost, &out_bytes)?;
+        io_s += clock.now_s() - io_start;
+
+        let n_rows = batch.requests.len();
+        let requests = batcher::release(&mut self.gpu, batch);
+
+        // 5. virtual mode: replace measured times with modeled costs
+        //    and advance the clock exactly as the DES backend would
+        if let Some(costs) = &self.virtual_costs {
+            let mc = costs.costs(model)?;
+            exec_s = mc.exec_s(rep.batch);
+            io_s = costs.io_s_per_row(self.gpu.mode()) * n_rows as f64;
+            exec_start_s = clock.now_s();
+            clock.advance(exec_s + io_s);
+        }
+
+        Ok(Some(BatchOutcome {
+            requests,
+            tokens: rep.tokens,
+            artifact_batch: rep.batch,
+            exec_start_s,
+            exec_s,
+            io_s,
+        }))
+    }
+
+    fn snapshot(&self) -> DeviceSnapshot {
+        DeviceSnapshot {
+            gpu_util: self.gpu.utilization(),
+            mem_in_use: self.gpu.mem_in_use(),
+            mem_peak: self.gpu.mem_peak(),
+            fragmentation: self.gpu.mem_fragmentation(),
+            dma_h2d_bytes: self.gpu.dma_stats().h2d_bytes,
+            dma_crypto_s: self.gpu.dma_stats().crypto.as_secs_f64(),
+            swaps: self.swap_stats().swap_count,
+        }
+    }
+
+    fn swap_stats(&self) -> SwapStats {
+        // Wall mode: the swap manager's measured stats are authoritative.
+        // Virtual mode: the backend's modeled stats are.
+        match &self.virtual_costs {
+            Some(_) => self.stats.clone(),
+            None => self.swaps.stats().clone(),
+        }
+    }
+
+    fn teardown(&mut self) {
+        self.swaps.evict(&mut self.gpu);
+    }
+}

@@ -1,0 +1,151 @@
+//! `RunSummary` — the aggregated outcome of one run (one grid cell of
+//! the evaluation), assembled in exactly one place for both time
+//! domains.
+
+use crate::config::RunConfig;
+use crate::coordinator::sla::SlaTracker;
+use crate::coordinator::swap::SwapStats;
+use crate::metrics::recorder::Recorder;
+use crate::util::json::Json;
+
+/// Aggregated outcome of one run — one grid cell of the evaluation.
+#[derive(Debug, Clone)]
+pub struct RunSummary {
+    pub label: String,
+    pub mode: String,
+    pub pattern: String,
+    pub strategy: String,
+    pub sla_s: f64,
+    pub mean_rps: f64,
+    pub duration_s: f64,
+    /// Actual runtime of the serving phase (duration + drain used).
+    pub runtime_s: f64,
+
+    pub generated: u64,
+    pub completed: u64,
+    pub sla_met: u64,
+    pub sla_attainment: f64,
+
+    pub latency_mean_s: f64,
+    pub latency_p50_s: f64,
+    pub latency_p90_s: f64,
+    pub latency_p99_s: f64,
+    pub latency_max_s: f64,
+
+    /// Completed requests / runtime (the paper's overall throughput).
+    pub throughput_rps: f64,
+    /// Completed requests / time spent actually executing — the paper's
+    /// "processing rate during inference", which stays ~equal across
+    /// modes (§IV-B).
+    pub processing_rate_rps: f64,
+
+    pub gpu_util: f64,
+    pub swap_count: u64,
+    pub total_load_s: f64,
+    pub total_unload_s: f64,
+    pub total_exec_s: f64,
+    pub total_crypto_s: f64,
+    pub mean_load_s: f64,
+}
+
+impl RunSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("mode", Json::str(self.mode.clone())),
+            ("pattern", Json::str(self.pattern.clone())),
+            ("strategy", Json::str(self.strategy.clone())),
+            ("sla_s", Json::num(self.sla_s)),
+            ("mean_rps", Json::num(self.mean_rps)),
+            ("duration_s", Json::num(self.duration_s)),
+            ("runtime_s", Json::num(self.runtime_s)),
+            ("generated", Json::num(self.generated as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("sla_met", Json::num(self.sla_met as f64)),
+            ("sla_attainment", Json::num(self.sla_attainment)),
+            ("latency_mean_s", Json::num(self.latency_mean_s)),
+            ("latency_p50_s", Json::num(self.latency_p50_s)),
+            ("latency_p90_s", Json::num(self.latency_p90_s)),
+            ("latency_p99_s", Json::num(self.latency_p99_s)),
+            ("latency_max_s", Json::num(self.latency_max_s)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("processing_rate_rps", Json::num(self.processing_rate_rps)),
+            ("gpu_util", Json::num(self.gpu_util)),
+            ("swap_count", Json::num(self.swap_count as f64)),
+            ("total_load_s", Json::num(self.total_load_s)),
+            ("total_unload_s", Json::num(self.total_unload_s)),
+            ("total_exec_s", Json::num(self.total_exec_s)),
+            ("total_crypto_s", Json::num(self.total_crypto_s)),
+            ("mean_load_s", Json::num(self.mean_load_s)),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn brief(&self) -> String {
+        format!(
+            "{:<6} {:<7} {:<26} sla={:<4} gen={:<5} done={:<5} \
+             att={:>5.1}% lat(mean/p99)={:.2}/{:.2}s thr={:.2}rps \
+             util={:>4.1}% swaps={}",
+            self.mode, self.pattern, self.strategy, self.sla_s,
+            self.generated, self.completed, self.sla_attainment * 100.0,
+            self.latency_mean_s, self.latency_p99_s, self.throughput_rps,
+            self.gpu_util * 100.0, self.swap_count)
+    }
+}
+
+/// Assemble the summary from a finished run's accounting — the single
+/// home of the paper's metric definitions, shared by every backend.
+pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
+                        recorder: &Recorder, sla: &SlaTracker,
+                        swap_stats: &SwapStats) -> RunSummary {
+    let h = &recorder.latency_hist;
+    let completed = recorder.requests.len() as u64;
+    let exec_busy = recorder.exec_busy_s();
+    RunSummary {
+        label: cfg.label.clone(),
+        mode: cfg.mode.as_str().to_string(),
+        pattern: cfg.pattern.clone(),
+        strategy: cfg.strategy.clone(),
+        sla_s: cfg.sla_s,
+        mean_rps: cfg.mean_rps,
+        duration_s: cfg.duration_s,
+        runtime_s,
+        generated,
+        completed,
+        sla_met: sla.met(),
+        sla_attainment: sla.attainment(),
+        latency_mean_s: h.mean(),
+        latency_p50_s: h.quantile(0.5),
+        latency_p90_s: h.quantile(0.9),
+        latency_p99_s: h.quantile(0.99),
+        latency_max_s: h.max(),
+        throughput_rps: if runtime_s > 0.0 {
+            completed as f64 / runtime_s
+        } else {
+            0.0
+        },
+        processing_rate_rps: if exec_busy > 0.0 {
+            completed as f64 / exec_busy
+        } else {
+            0.0
+        },
+        // utilization over the reported runtime (exec share of the run,
+        // Fig 7's metric); the device's lifetime utilization feeds the
+        // monitor CSV instead
+        gpu_util: if runtime_s > 0.0 {
+            (exec_busy / runtime_s).min(1.0)
+        } else {
+            0.0
+        },
+        swap_count: swap_stats.swap_count,
+        total_load_s: swap_stats.total_load_s,
+        total_unload_s: swap_stats.total_unload_s,
+        total_exec_s: exec_busy,
+        total_crypto_s: swap_stats.total_crypto_s,
+        mean_load_s: if swap_stats.swap_count > 0 {
+            swap_stats.total_load_s / swap_stats.swap_count as f64
+        } else {
+            0.0
+        },
+    }
+}

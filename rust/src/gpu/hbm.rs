@@ -14,14 +14,24 @@ pub struct HbmBuffer {
 }
 
 /// Allocation failure — the GPU is out of memory.
-#[derive(Debug, thiserror::Error)]
-#[error("HBM OOM: requested {requested} B, free {free} B (largest block {largest} B) of {capacity} B")]
+#[derive(Debug, Clone, Copy)]
 pub struct HbmOom {
     pub requested: u64,
     pub free: u64,
     pub largest: u64,
     pub capacity: u64,
 }
+
+impl std::fmt::Display for HbmOom {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f,
+               "HBM OOM: requested {} B, free {} B (largest block {} B) \
+                of {} B",
+               self.requested, self.free, self.largest, self.capacity)
+    }
+}
+
+impl std::error::Error for HbmOom {}
 
 /// First-fit free-list allocator.
 #[derive(Debug)]

@@ -16,8 +16,10 @@
 //! * **Layer 3** — this crate: the PJRT runtime that compiles and executes
 //!   those artifacts, the confidential-GPU device model (HBM allocator,
 //!   DMA engine, AES-CTR+HMAC bounce buffers, attestation), the paper's
-//!   scheduler/batcher/swap-manager, traffic generation, metrics, and a
-//!   calibrated discrete-event mode for full-grid sweeps.
+//!   scheduler/batcher/swap-manager, traffic generation, metrics, and the
+//!   [`engine`] — the single serve loop behind both the real wall-clock
+//!   path and the calibrated discrete-event mode (pluggable `Clock` +
+//!   `ExecBackend`; see `DESIGN.md`).
 //!
 //! Python never runs at serve time: once `make artifacts` has produced
 //! `artifacts/`, the `sincere` binary is self-contained.
@@ -28,6 +30,7 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod gpu;
 pub mod metrics;
 pub mod runtime;

@@ -1,11 +1,17 @@
 //! `sincere` — the serving coordinator CLI.
 //!
-//! Subcommands (the paper's workflow, §III-A):
+//! Subcommands (the paper's workflow, §III-A) — this list is rendered
+//! from the same [`COMMANDS`] table that drives dispatch and
+//! `print_usage`, so docs and help cannot drift:
 //!
 //! * `profile` — measure model load/unload (Fig 3) and per-batch
 //!   execution (Fig 4); writes `results/cost_model.json` and sets OBS.
-//! * `serve` — run one serving experiment for real (one grid cell).
-//! * `sweep` — run the full evaluation grid in calibrated DES mode.
+//! * `serve` — run one serving experiment for real (one grid cell),
+//!   via the `Engine` with the `RealBackend`.
+//! * `serve-http` — long-running network front-end (the paper's Flask
+//!   API analogue): `POST /infer`, `GET /stats`, `GET /healthz`.
+//! * `sweep` — run the full evaluation grid via the `Engine` with the
+//!   calibrated `DesBackend`.
 //! * `report` — render paper-style tables from saved summaries.
 //! * `gen-traffic` — emit an arrival trace (jsonl) for inspection.
 //! * `models` — print the Table II analogue from the manifest.
@@ -15,13 +21,62 @@
 use std::path::{Path, PathBuf};
 
 use sincere::config::RunConfig;
-use sincere::coordinator::{serve, STRATEGY_NAMES};
+use sincere::coordinator::STRATEGY_NAMES;
+use sincere::engine::EngineBuilder;
 use sincere::gpu::CcMode;
 use sincere::metrics::report;
 use sincere::runtime::{Manifest, Registry};
-use sincere::sim::{simulate, CostModel};
+use sincere::sim::CostModel;
 use sincere::traffic::{pattern_by_name, PATTERN_NAMES};
 use sincere::util::json::Json;
+
+/// One CLI subcommand: name, help blurb, and entry point.  The single
+/// source of truth for dispatch, `print_usage`, and the module doc.
+struct Command {
+    name: &'static str,
+    blurb: &'static str,
+    run: fn(RunConfig) -> anyhow::Result<()>,
+}
+
+const COMMANDS: &[Command] = &[
+    Command {
+        name: "profile",
+        blurb: "measure load times (Fig 3) + batch throughput (Fig 4); \
+                caches cost model",
+        run: cmd_profile,
+    },
+    Command {
+        name: "serve",
+        blurb: "run one real serving experiment (Engine + RealBackend)",
+        run: cmd_serve,
+    },
+    Command {
+        name: "serve-http",
+        blurb: "network front-end (POST /infer; SINCERE_HTTP_ADDR)",
+        run: cmd_serve_http,
+    },
+    Command {
+        name: "sweep",
+        blurb: "run the full 72-cell grid (Engine + calibrated \
+                DesBackend)",
+        run: cmd_sweep,
+    },
+    Command {
+        name: "report",
+        blurb: "render tables from saved sweep results",
+        run: cmd_report,
+    },
+    Command {
+        name: "gen-traffic",
+        blurb: "write an arrival trace (jsonl)",
+        run: cmd_gen_traffic,
+    },
+    Command {
+        name: "models",
+        blurb: "print the model fleet (Table II)",
+        run: cmd_models,
+    },
+];
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -36,24 +91,18 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
         print_usage();
         return Ok(());
     };
+    if matches!(cmd.as_str(), "help" | "--help" | "-h") {
+        print_usage();
+        return Ok(());
+    }
     let mut cfg = RunConfig::default();
     let rest = apply_flags(&mut cfg, rest)?;
     anyhow::ensure!(rest.is_empty(), "unexpected arguments: {rest:?}");
 
-    match cmd.as_str() {
-        "serve" => cmd_serve(cfg),
-        "serve-http" => cmd_serve_http(cfg),
-        "profile" => cmd_profile(cfg),
-        "sweep" => cmd_sweep(cfg),
-        "report" => cmd_report(cfg),
-        "gen-traffic" => cmd_gen_traffic(cfg),
-        "models" => cmd_models(cfg),
-        "help" | "--help" | "-h" => {
-            print_usage();
-            Ok(())
-        }
-        other => anyhow::bail!("unknown command {other:?}; try `help`"),
-    }
+    let command = COMMANDS.iter().find(|c| c.name == cmd.as_str())
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown command {cmd:?}; try `help`"))?;
+    (command.run)(cfg)
 }
 
 /// Parse `--key value` flags into the config; `--config file.json` loads
@@ -119,7 +168,8 @@ fn cmd_serve(mut cfg: RunConfig) -> anyhow::Result<()> {
     }
     let (_manifest, registry) = load_registry(&cfg)?;
     eprintln!("[sincere] serving: {}", cfg.cell_label());
-    let (summary, _rec) = serve(&cfg, &registry)?;
+    let (summary, _rec) = EngineBuilder::new(&cfg).real(&registry)?
+        .run()?;
     println!("{}", summary.brief());
     println!("{}", summary.to_json());
     Ok(())
@@ -136,7 +186,8 @@ fn cmd_serve_http(cfg: RunConfig) -> anyhow::Result<()> {
     let (_manifest, registry) = load_registry(&cfg)?;
     let shutdown = std::sync::Arc::new(
         std::sync::atomic::AtomicBool::new(false));
-    eprintln!("[sincere] http front-end on {addr} (mode={}, strategy={},                sla={}s)", cfg.mode.as_str(), cfg.strategy, cfg.sla_s);
+    eprintln!("[sincere] http front-end on {addr} (mode={}, strategy={}, \
+               sla={}s)", cfg.mode.as_str(), cfg.strategy, cfg.sla_s);
     let stats = sincere::coordinator::http::run_http(
         &cfg, &registry, &addr, shutdown, |bound| {
             eprintln!("[sincere] listening on {bound}");
@@ -212,7 +263,11 @@ fn cmd_sweep(cfg: RunConfig) -> anyhow::Result<()> {
                     c.strategy = strategy.to_string();
                     c.sla_s = sla;
                     c.label = c.cell_label();
-                    let s = simulate(&c, &manifest, &cm)?;
+                    // the sweep persists one aggregate JSON below, not
+                    // 72 sets of per-cell CSVs
+                    c.results_dir = None;
+                    let (s, _) = EngineBuilder::new(&c)
+                        .des(&manifest, &cm)?.run()?;
                     println!("{}", s.brief());
                     cells.push(s);
                 }
@@ -243,10 +298,10 @@ fn cmd_report(cfg: RunConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::coordinator::RunSummary>> {
+fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::engine::RunSummary>> {
     let mut out = Vec::new();
     for c in j.as_arr().unwrap_or(&[]) {
-        out.push(sincere::coordinator::RunSummary {
+        out.push(sincere::engine::RunSummary {
             label: c.req("label")?.as_str().unwrap_or("").into(),
             mode: c.req("mode")?.as_str().unwrap_or("").into(),
             pattern: c.req("pattern")?.as_str().unwrap_or("").into(),
@@ -318,31 +373,75 @@ fn cmd_models(cfg: RunConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn print_usage() {
-    println!(
-        "sincere — relaxed batch LLM inference on a simulated confidential \
-         GPU\n\n\
+/// Build the usage text from the [`COMMANDS`] table.
+fn usage_string() -> String {
+    let mut out = String::from(
+        "sincere — relaxed batch LLM inference on a simulated \
+         confidential GPU\n\n\
          USAGE: sincere <command> [--key value ...]\n\n\
-         COMMANDS:\n\
-         \x20 profile      measure load times (Fig 3) + batch throughput \
-         (Fig 4); caches cost model\n\
-         \x20 serve        run one real serving experiment\n\
-         \x20 serve-http   network front-end (POST /infer; \
-         SINCERE_HTTP_ADDR)\n\
-         \x20 sweep        run the full 72-cell grid (calibrated DES)\n\
-         \x20 report       render tables from saved sweep results\n\
-         \x20 gen-traffic  write an arrival trace (jsonl)\n\
-         \x20 models       print the model fleet (Table II)\n\n\
+         COMMANDS:\n");
+    for c in COMMANDS {
+        out.push_str(&format!("  {:<12} {}\n", c.name, c.blurb));
+    }
+    out.push_str(&format!(
+        "  {:<12} {}\n\n\
          COMMON OPTIONS:\n\
          \x20 --mode cc|no-cc        confidential mode (default no-cc)\n\
          \x20 --pattern {patterns}\n\
          \x20 --strategy {strategies}\n\
-         \x20 --sla SECONDS          (default 6.0; ladder 4/6/8)\n\
-         \x20 --mean-rps RPS         (default 4.0)\n\
+         \x20 --sla SECONDS          (default 18.0; ladder 12/18/24)\n\
+         \x20 --mean-rps RPS         (default 9.0)\n\
          \x20 --duration SECONDS     (default 60)\n\
          \x20 --models a,b           restrict families\n\
          \x20 --batch-sizes 1,2,4    restrict compiled batches\n\
          \x20 --artifacts DIR --results DIR --seed N --config FILE.json\n",
+        "help", "show this help",
         patterns = PATTERN_NAMES.join("|"),
-        strategies = STRATEGY_NAMES.join("|"));
+        strategies = STRATEGY_NAMES.join("|")));
+    out
+}
+
+fn print_usage() {
+    print!("{}", usage_string());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn command_names_unique() {
+        let mut names: Vec<&str> = COMMANDS.iter().map(|c| c.name)
+            .collect();
+        names.sort_unstable();
+        let n = names.len();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate command names");
+    }
+
+    /// Help text is generated from the dispatch table, so every
+    /// routable command (serve-http included) must appear in it.
+    #[test]
+    fn usage_lists_every_command() {
+        let usage = usage_string();
+        for c in COMMANDS {
+            assert!(usage.contains(c.name),
+                    "usage text is missing {:?}", c.name);
+        }
+        assert!(usage.contains("serve-http"));
+    }
+
+    #[test]
+    fn flags_parse_into_config() {
+        let mut cfg = RunConfig::default();
+        let rest = apply_flags(&mut cfg, &[
+            "--mode".into(), "cc".into(),
+            "--sla".into(), "12".into(),
+            "positional".into(),
+        ]).unwrap();
+        assert_eq!(cfg.sla_s, 12.0);
+        assert_eq!(cfg.mode, sincere::gpu::CcMode::On);
+        assert_eq!(rest, vec!["positional".to_string()]);
+        assert!(apply_flags(&mut cfg, &["--sla".into()]).is_err());
+    }
 }

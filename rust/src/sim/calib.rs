@@ -6,12 +6,12 @@
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::time::Instant;
 
 use crate::gpu::device::{GpuConfig, SimGpu};
 use crate::gpu::CcMode;
 use crate::runtime::Registry;
 use crate::util::json::Json;
+use crate::util::stopwatch::Stopwatch;
 
 /// Measured costs for one model family.
 #[derive(Debug, Clone, Default)]
@@ -135,9 +135,9 @@ impl CostModel {
                 registry.execute(&name, &rows)?;
                 let mut total = 0.0;
                 for _ in 0..reps {
-                    let t0 = Instant::now();
+                    let sw = Stopwatch::start();
                     registry.execute(&name, &rows)?;
-                    total += t0.elapsed().as_secs_f64();
+                    total += sw.elapsed_s();
                 }
                 mc.exec_s_by_batch.insert(b, total / reps as f64);
             }

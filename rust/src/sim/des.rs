@@ -1,232 +1,34 @@
-//! The discrete-event serve loop: identical decision logic to
-//! `coordinator::server::serve`, but time is virtual and costs come from
-//! the calibrated [`CostModel`].
+//! The discrete-event entry point — a thin shim over the [`Engine`].
 //!
-//! Because strategies are pure functions over `SchedContext`, the DES
-//! and the real server literally share the scheduling code — the DES
-//! only replaces (a) the clock, (b) the swap/execute costs, and (c) the
-//! device occupancy accounting.
+//! Identical decision logic to the real serve path by construction:
+//! the engine runs one loop for both time domains, and the DES is just
+//! `DesBackend` + `VirtualClock` (costs from the calibrated
+//! [`CostModel`], virtual time instead of execution).  This module
+//! keeps the historical `sim::simulate` API; new code should use
+//! [`EngineBuilder`](crate::engine::EngineBuilder) directly.
+//!
+//! [`Engine`]: crate::engine::Engine
 
 use crate::config::RunConfig;
-use crate::coordinator::queues::ModelQueues;
-use crate::coordinator::rate::RateEstimator;
-use crate::coordinator::request::{CompletedRequest, Request};
-use crate::coordinator::server::RunSummary;
-use crate::coordinator::sla::SlaTracker;
-use crate::coordinator::strategy::{strategy_by_name, Decision, ModelView,
-                                   SchedContext};
-use crate::metrics::hist::Histogram;
+use crate::engine::{EngineBuilder, RunSummary};
 use crate::runtime::Manifest;
 use crate::sim::calib::CostModel;
-use crate::traffic::pattern_by_name;
-use crate::traffic::rng::Pcg64;
 
-/// Simulate one grid cell. Returns the same `RunSummary` the real serve
-/// loop produces (with virtual time standing in for wall time).
+/// Simulate one grid cell. Returns the same `RunSummary` the real
+/// serve loop produces (with virtual time standing in for wall time).
+#[deprecated(
+    since = "0.2.0",
+    note = "use engine::EngineBuilder::new(cfg).des(manifest, costs)?.run()"
+)]
 pub fn simulate(cfg: &RunConfig, manifest: &Manifest, costs: &CostModel)
                 -> anyhow::Result<RunSummary> {
-    cfg.validate()?;
-    let strategy = strategy_by_name(&cfg.strategy)?;
-    let models: Vec<String> = if cfg.models.is_empty() {
-        manifest.family_names()
-    } else {
-        cfg.models.clone()
-    };
-    for m in &models {
-        manifest.family(m)?;
-        costs.costs(m)?;
-    }
-    let mode = cfg.mode;
-
-    // ---------------- arrival schedule (same generator as serve) -------
-    let mut rng = Pcg64::new(cfg.seed);
-    let pattern = pattern_by_name(&cfg.pattern)?;
-    let arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps, &models,
-                                    &mut rng);
-    let generated = arrivals.len() as u64;
-    let mut pending: std::collections::VecDeque<Request> =
-        arrivals.iter().enumerate().map(|(i, a)| Request {
-            id: i as u64,
-            model: a.model.clone(),
-            tokens: Vec::new(), // content never affects the DES
-            arrival_s: a.at_s,
-        }).collect();
-
-    // ---------------- virtual-time loop --------------------------------
-    let mut now = 0.0f64;
-    let mut queues = ModelQueues::new();
-    let mut rates = RateEstimator::default();
-    let mut sla = SlaTracker::new(cfg.sla_s);
-    let mut hist = Histogram::new();
-    let mut resident: Option<String> = None;
-
-    let mut completed = 0u64;
-    let mut swap_count = 0u64;
-    let mut total_load_s = 0.0;
-    let mut total_unload_s = 0.0;
-    let mut exec_busy_s = 0.0;
-    let mut last_complete_s = 0.0f64;
-    // The paper's methodology: generation stops at `duration_s`, but the
-    // system keeps draining the backlog; total runtime extends to the
-    // last dispatched response (this is where CC's lower throughput and
-    // GPU utilization come from).  `drain_s` is a safety cap only.
-    let hard_stop = cfg.duration_s + cfg.drain_s;
-
-    loop {
-        // ingest everything due by `now`
-        while pending.front().map(|r| r.arrival_s <= now).unwrap_or(false) {
-            let r = pending.pop_front().unwrap();
-            rates.on_arrival(&r.model, r.arrival_s);
-            queues.push(r);
-        }
-        // SLA expiry: overdue queued requests are unfulfilled (§III-C3)
-        let expired = queues.expire(now, cfg.sla_s);
-        sla.on_unserved(expired.len() as u64);
-        if now >= hard_stop {
-            break;
-        }
-        if pending.is_empty() && queues.is_empty() {
-            break;
-        }
-
-        let views: Vec<ModelView> = queues.nonempty_models().iter()
-            .map(|m| {
-                let mc = costs.costs(m).unwrap();
-                ModelView {
-                    model: m.to_string(),
-                    len: queues.len(m),
-                    oldest_wait_s: queues.head_arrival_s(m)
-                        .map(|a| (now - a).max(0.0)).unwrap_or(0.0),
-                    obs: mc.obs,
-                    rate_rps: rates.rate_rps(m, now),
-                    est_load_s: mc.load_s(mode),
-                    est_exec_s: mc.exec_s(mc.obs),
-                }
-            }).collect();
-        let ctx = SchedContext {
-            now_s: now,
-            resident: resident.clone(),
-            queues: views,
-            sla_s: cfg.sla_s,
-            timeout_s: cfg.timeout_s(),
-        };
-
-        match strategy.decide(&ctx) {
-            Decision::Wait => {
-                // jump to the next *future* actionable instant: the next
-                // arrival or the earliest not-yet-expired timer.  Timers
-                // already in the past are irrelevant — if the strategy
-                // cared about them it would have returned Process.
-                let next_arrival = pending.front().map(|r| r.arrival_s)
-                    .unwrap_or(f64::INFINITY);
-                let next_timer = queues.nonempty_models().iter()
-                    .filter_map(|m| queues.head_arrival_s(m))
-                    .flat_map(|a| [a + cfg.timeout_s(), a + cfg.sla_s])
-                    .filter(|&t| t > now)
-                    .fold(f64::INFINITY, f64::min);
-                let next = next_arrival.min(next_timer);
-                if !next.is_finite() || next <= now {
-                    // no future event can change the decision (e.g.
-                    // best-batch stranding a sub-OBS remainder): done
-                    break;
-                }
-                now = next.min(hard_stop);
-            }
-            Decision::Process { model, take } => {
-                let mc = costs.costs(&model)?;
-                // swap if needed
-                if resident.as_deref() != Some(model.as_str()) {
-                    if resident.is_some() {
-                        now += mc.unload_s;
-                        total_unload_s += mc.unload_s;
-                    }
-                    let load = mc.load_s(mode);
-                    now += load;
-                    total_load_s += load;
-                    swap_count += 1;
-                    resident = Some(model.clone());
-                }
-                // batch assembly
-                let reqs = queues.pop_n(&model, take.max(1));
-                if reqs.is_empty() {
-                    continue;
-                }
-                let spec = manifest.family(&model)?;
-                let artifact_batch = spec.batch_size_at_least(reqs.len());
-                let exec_s = mc.exec_s(artifact_batch);
-                let io_s = costs.io_s_per_row(mode) * reqs.len() as f64;
-
-                let exec_start_s = now;
-                now += exec_s + io_s;
-                exec_busy_s += exec_s;
-
-                for r in &reqs {
-                    let c = CompletedRequest {
-                        id: r.id,
-                        model: r.model.clone(),
-                        arrival_s: r.arrival_s,
-                        exec_start_s,
-                        complete_s: now,
-                        batch: artifact_batch,
-                        batch_rows: reqs.len(),
-                        caused_swap: false,
-                    };
-                    sla.on_complete(&c);
-                    hist.record(c.latency_s());
-                    completed += 1;
-                }
-                last_complete_s = now;
-            }
-        }
-    }
-
-    // runtime = generation window extended by the drain tail (paper:
-    // total runtime covers every processed request)
-    let runtime_s = last_complete_s.max(cfg.duration_s).max(1e-9);
-    let unserved = queues.drain_all().len() as u64
-        + pending.iter().filter(|r| r.arrival_s < cfg.duration_s).count()
-            as u64;
-    sla.on_unserved(unserved);
-
-    Ok(RunSummary {
-        label: cfg.label.clone(),
-        mode: mode.as_str().to_string(),
-        pattern: cfg.pattern.clone(),
-        strategy: cfg.strategy.clone(),
-        sla_s: cfg.sla_s,
-        mean_rps: cfg.mean_rps,
-        duration_s: cfg.duration_s,
-        runtime_s,
-        generated,
-        completed,
-        sla_met: sla.met(),
-        sla_attainment: sla.attainment(),
-        latency_mean_s: hist.mean(),
-        latency_p50_s: hist.quantile(0.5),
-        latency_p90_s: hist.quantile(0.9),
-        latency_p99_s: hist.quantile(0.99),
-        latency_max_s: hist.max(),
-        throughput_rps: completed as f64 / runtime_s,
-        processing_rate_rps: if exec_busy_s > 0.0 {
-            completed as f64 / exec_busy_s
-        } else {
-            0.0
-        },
-        gpu_util: (exec_busy_s / runtime_s).min(1.0),
-        swap_count,
-        total_load_s,
-        total_unload_s,
-        total_exec_s: exec_busy_s,
-        total_crypto_s: 0.0,
-        mean_load_s: if swap_count > 0 {
-            total_load_s / swap_count as f64
-        } else {
-            0.0
-        },
-    })
+    let (summary, _recorder) =
+        EngineBuilder::new(cfg).des(manifest, costs)?.run()?;
+    Ok(summary)
 }
 
 #[cfg(test)]
+#[allow(deprecated)]
 mod tests {
     use super::*;
     use crate::sim::calib::ModelCosts;

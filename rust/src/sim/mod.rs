@@ -13,4 +13,5 @@ pub mod calib;
 pub mod des;
 
 pub use calib::CostModel;
+#[allow(deprecated)]
 pub use des::simulate;

@@ -4,6 +4,7 @@
 pub mod csvio;
 pub mod json;
 pub mod prop;
+pub mod stopwatch;
 
 /// Format a `std::time::Duration` as fractional seconds with millisecond
 /// precision — the unit used throughout logs and CSVs.

@@ -1,0 +1,40 @@
+//! Wall-clock stopwatch for *measurement* (profiling, benchmarking).
+//!
+//! Experiment time is owned exclusively by `engine::clock`; everything
+//! else that needs to time an operation (cost-model calibration, the
+//! HTTP front-end's arrival stamps) goes through this wrapper so the
+//! raw monotonic clock has exactly two well-known homes.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Stopwatch {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_elapsed_time() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(sw.elapsed() >= Duration::from_millis(4));
+        assert!(sw.elapsed_s() < 2.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Engine parity: the same seed + config through `DesBackend` and
+//! through `RealBackend` with zeroed real-time sleeps (virtual clock +
+//! modeled costs) must agree *exactly* on the aggregate outcome.
+//!
+//! This is the payoff of the `Engine`/`Clock`/`ExecBackend` split: the
+//! serve loop exists once, so when both backends charge identical
+//! costs, every decision — and therefore every count — must coincide.
+//! The real backend still does all its real work underneath (residency
+//! via `SwapManager`, batch assembly with the OOM guard, PJRT
+//! execution, CC-sealed payload DMA); only its *reported times* come
+//! from the shared cost table.
+//!
+//! Preconditions the contract rests on (and this config satisfies):
+//! the cost table's OBS values name batch sizes the registry compiled,
+//! and every (weights + largest-batch workspace) fits device memory —
+//! the DES has no memory model, so real-side OOM halving would be the
+//! one divergence source (see `engine::des` module docs).
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::coordinator::STRATEGY_NAMES;
+use sincere::engine::EngineBuilder;
+use sincere::runtime::registry::SharedRegistry;
+use sincere::runtime::{Manifest, Registry};
+use sincere::sim::calib::{CostModel, ModelCosts};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "artifacts missing: run tools/gen_artifacts.py"))
+}
+
+fn registry() -> &'static SharedRegistry {
+    static REG: OnceLock<SharedRegistry> = OnceLock::new();
+    REG.get_or_init(|| SharedRegistry::new(Registry::load(
+        manifest(),
+        &["llama-sim".to_string(), "gemma-sim".to_string()],
+        &[1, 2, 4, 8]).unwrap()))
+}
+
+/// Toy cost table over the compiled batch range.  OBS is capped at the
+/// largest batch both backends can dispatch (8 here), so the DES's
+/// artifact choice and the registry's compiled-executable choice are
+/// the same function of the batch row count.
+fn toy_costs() -> CostModel {
+    let mut cm = CostModel {
+        io_s_per_row_plain: 0.0004,
+        io_s_per_row_cc: 0.0013,
+        ..Default::default()
+    };
+    for f in &manifest().families {
+        let size_factor = f.weights.total_bytes as f64 / 4e6;
+        let mut mc = ModelCosts {
+            load_s_plain: 0.30 * size_factor,
+            load_s_cc: 0.85 * size_factor,
+            unload_s: 0.006,
+            obs: 8,
+            ..Default::default()
+        };
+        for &b in &[1usize, 2, 4, 8] {
+            mc.exec_s_by_batch.insert(
+                b, 0.07 + 0.011 * b as f64 * size_factor);
+        }
+        cm.models.insert(f.name.clone(), mc);
+    }
+    cm
+}
+
+fn parity_cfg(mode: &str, strategy: &str) -> RunConfig {
+    let mut cfg = RunConfig {
+        duration_s: 20.0,
+        drain_s: 8.0,
+        mean_rps: 3.0,
+        sla_s: 6.0,
+        strategy: strategy.to_string(),
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    };
+    cfg.set("mode", mode).unwrap();
+    cfg.gpu.no_throttle = true; // zero the real-time sleeps
+    cfg
+}
+
+fn run_pair(cfg: &RunConfig) -> (sincere::engine::RunSummary,
+                                 sincere::engine::RunSummary) {
+    let cm = toy_costs();
+    let des = EngineBuilder::new(cfg).des(manifest(), &cm).unwrap()
+        .run().unwrap().0;
+    let real = registry()
+        .with(|reg| EngineBuilder::new(cfg).real_virtual(reg, &cm)
+            .and_then(|b| b.run()))
+        .unwrap().0;
+    (des, real)
+}
+
+#[test]
+fn des_and_real_backends_agree_exactly() {
+    for mode in ["no-cc", "cc"] {
+        let cfg = parity_cfg(mode, "select-batch+timer");
+        let (des, real) = run_pair(&cfg);
+        assert_eq!(des.generated, real.generated,
+                   "{mode}: same seed must give the same schedule");
+        assert_eq!(des.completed, real.completed,
+                   "{mode}: completed diverged");
+        assert_eq!(des.swap_count, real.swap_count,
+                   "{mode}: swap_count diverged");
+        assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+                "{mode}: attainment {} vs {}", des.sla_attainment,
+                real.sla_attainment);
+        // identical cost accounting means identical timelines
+        assert!((des.latency_mean_s - real.latency_mean_s).abs() < 1e-9,
+                "{mode}: latency {} vs {}", des.latency_mean_s,
+                real.latency_mean_s);
+        assert!((des.runtime_s - real.runtime_s).abs() < 1e-9,
+                "{mode}: runtime {} vs {}", des.runtime_s,
+                real.runtime_s);
+        assert!((des.total_load_s - real.total_load_s).abs() < 1e-9,
+                "{mode}: load totals diverged");
+        assert!(des.completed > 0, "{mode}: degenerate parity run");
+        assert!(des.swap_count > 0, "{mode}: no swaps exercised");
+    }
+}
+
+#[test]
+fn parity_holds_for_every_strategy() {
+    for strategy in STRATEGY_NAMES {
+        let cfg = parity_cfg("cc", strategy);
+        let (des, real) = run_pair(&cfg);
+        assert_eq!(des.generated, real.generated, "{strategy}");
+        assert_eq!(des.completed, real.completed, "{strategy}");
+        assert_eq!(des.swap_count, real.swap_count, "{strategy}");
+        assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+                "{strategy}: attainment {} vs {}", des.sla_attainment,
+                real.sla_attainment);
+    }
+}
+
+#[test]
+fn real_backend_still_does_real_work_under_virtual_time() {
+    // The parity mode is not a second simulator: PJRT output tokens and
+    // device accounting must still be produced by the real path.
+    let cfg = parity_cfg("cc", "select-batch+timer");
+    let cm = toy_costs();
+    let (summary, recorder) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real_virtual(reg, &cm)
+            .and_then(|b| b.run()))
+        .unwrap();
+    assert!(summary.completed > 0);
+    // batches carry the modeled (not wall-measured) costs
+    for b in &recorder.batches {
+        let mc = cm.costs(&b.model).unwrap();
+        assert!((b.exec_s - mc.exec_s(b.artifact_batch)).abs() < 1e-12,
+                "batch exec_s {} not from the cost table", b.exec_s);
+    }
+}

@@ -9,7 +9,8 @@ use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use sincere::config::RunConfig;
-use sincere::coordinator::{serve, STRATEGY_NAMES};
+use sincere::coordinator::STRATEGY_NAMES;
+use sincere::engine::EngineBuilder;
 use sincere::runtime::registry::SharedRegistry;
 use sincere::runtime::{Manifest, Registry};
 use sincere::util::csvio::CsvTable;
@@ -47,7 +48,9 @@ fn fast_cfg(label: &str) -> RunConfig {
 #[test]
 fn serve_accounting_identities() {
     let (summary, recorder) = registry()
-        .with(|reg| serve(&fast_cfg("acct"), reg)).unwrap();
+        .with(|reg| EngineBuilder::new(&fast_cfg("acct")).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
     assert!(summary.generated > 10, "generated {}", summary.generated);
     // every completed request is recorded exactly once
     assert_eq!(summary.completed as usize, recorder.requests.len());
@@ -72,7 +75,9 @@ fn all_strategies_serve_and_complete() {
     for name in STRATEGY_NAMES {
         let mut cfg = fast_cfg(&format!("strat_{name}"));
         cfg.strategy = name.to_string();
-        let (summary, _) = registry().with(|reg| serve(&cfg, reg))
+        let (summary, _) = registry()
+            .with(|reg| EngineBuilder::new(&cfg).real(reg)
+                .and_then(|b| b.run()))
             .unwrap();
         assert!(summary.completed > 0, "{name} completed nothing");
         if *name != "best-batch" {
@@ -97,7 +102,10 @@ fn cc_mode_serves_and_encrypts() {
     let mut cfg = fast_cfg("cc_serve");
     cfg.set("mode", "cc").unwrap();
     cfg.gpu.no_throttle = true;
-    let (summary, _) = registry().with(|reg| serve(&cfg, reg)).unwrap();
+    let (summary, _) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
     assert!(summary.completed > 0);
     assert!(summary.total_crypto_s > 0.0,
             "CC run must spend time in AEAD");
@@ -110,7 +118,10 @@ fn csvs_written_and_parse() {
     let _ = std::fs::remove_dir_all(&dir);
     let mut cfg = fast_cfg("csv");
     cfg.results_dir = Some(dir.clone());
-    let (summary, _) = registry().with(|reg| serve(&cfg, reg)).unwrap();
+    let (summary, _) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
 
     let reqs = CsvTable::read(&dir.join("csv_requests.csv")).unwrap();
     assert_eq!(reqs.rows.len() as u64, summary.completed);
@@ -141,7 +152,10 @@ fn zero_traffic_run_terminates() {
     cfg.mean_rps = 0.02; // likely zero arrivals in 6 s window
     cfg.duration_s = 2.0;
     cfg.drain_s = 1.0;
-    let (summary, _) = registry().with(|reg| serve(&cfg, reg)).unwrap();
+    let (summary, _) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
     // must terminate promptly and account cleanly either way
     assert!(summary.runtime_s < 10.0);
     assert!(summary.completed <= summary.generated);
@@ -151,5 +165,8 @@ fn zero_traffic_run_terminates() {
 fn unknown_model_in_config_fails_fast() {
     let mut cfg = fast_cfg("bad_model");
     cfg.models = vec!["gpt-5".into()];
-    assert!(registry().with(|reg| serve(&cfg, reg)).is_err());
+    assert!(registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .is_err());
 }

@@ -5,12 +5,12 @@ use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use sincere::config::RunConfig;
-use sincere::coordinator::serve;
+use sincere::engine::EngineBuilder;
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::registry::SharedRegistry;
 use sincere::runtime::{Manifest, Registry};
-use sincere::sim::{simulate, CostModel};
+use sincere::sim::CostModel;
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -94,8 +94,13 @@ fn des_matches_real_serve_within_tolerance() {
     // land near the real run on the aggregate metrics.
     let mut cfg = sim_cfg();
     cfg.duration_s = 10.0;
-    let (real, _) = registry().with(|reg| serve(&cfg, reg)).unwrap();
-    let des = simulate(&cfg, manifest(), measured_costs()).unwrap();
+    let (real, _) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
+    let des = EngineBuilder::new(&cfg)
+        .des(manifest(), measured_costs()).unwrap()
+        .run().unwrap().0;
 
     assert_eq!(des.generated, real.generated,
                "same seed must give the same schedule");
@@ -119,7 +124,8 @@ fn des_sla_attainment_monotone_in_sla() {
         let mut cfg = sim_cfg();
         cfg.sla_s = sla;
         cfg.drain_s = 8.0; // keep the served set comparable across SLAs
-        let s = simulate(&cfg, manifest(), cm).unwrap();
+        let s = EngineBuilder::new(&cfg).des(manifest(), cm)
+            .unwrap().run().unwrap().0;
         assert!(s.sla_attainment >= prev - 0.02,
                 "attainment fell from {prev} to {} at sla {sla}",
                 s.sla_attainment);
@@ -136,7 +142,8 @@ fn des_cc_consistently_worse_or_equal() {
             cfg.pattern = pattern.into();
             cfg.mode = mode;
             cfg.gpu.mode = mode;
-            simulate(&cfg, manifest(), cm).unwrap()
+            EngineBuilder::new(&cfg).des(manifest(), cm).unwrap()
+                .run().unwrap().0
         };
         let cc = run(CcMode::On);
         let nc = run(CcMode::Off);
@@ -150,5 +157,8 @@ fn des_cc_consistently_worse_or_equal() {
 fn des_rejects_unknown_model() {
     let mut cfg = sim_cfg();
     cfg.models = vec!["gpt-5".into()];
-    assert!(simulate(&cfg, manifest(), measured_costs()).is_err());
+    assert!(EngineBuilder::new(&cfg)
+        .des(manifest(), measured_costs())
+        .and_then(|b| b.run())
+        .is_err());
 }

@@ -1,0 +1,187 @@
+//! Table I unit tests: every `Strategy` implementation against
+//! hand-built `SchedContext` snapshots, covering the edge cases the
+//! paper's plan composition has to get right — empty queues, timer
+//! expiry, partial-batch drain, and the SelectBatch headroom clamp.
+
+use sincere::coordinator::strategy::{strategy_by_name, Decision,
+                                     ModelView, SchedContext,
+                                     SelectBatchTimer, STRATEGY_NAMES};
+
+fn view(model: &str, len: usize, wait_s: f64) -> ModelView {
+    ModelView {
+        model: model.into(),
+        len,
+        oldest_wait_s: wait_s,
+        obs: 8,
+        rate_rps: 2.0,
+        est_load_s: 0.5,
+        est_exec_s: 0.5,
+    }
+}
+
+fn ctx(resident: Option<&str>, queues: Vec<ModelView>) -> SchedContext {
+    SchedContext {
+        now_s: 100.0,
+        resident: resident.map(|s| s.to_string()),
+        queues,
+        sla_s: 6.0,
+        timeout_s: 3.0,
+    }
+}
+
+// ------------------------------------------------------- empty queues
+
+#[test]
+fn empty_queues_always_wait() {
+    for name in STRATEGY_NAMES {
+        let s = strategy_by_name(name).unwrap();
+        assert_eq!(s.decide(&ctx(None, vec![])), Decision::Wait,
+                   "{name} with no queues");
+        assert_eq!(s.decide(&ctx(Some("a"), vec![])), Decision::Wait,
+                   "{name} with a resident but no queues");
+    }
+}
+
+// -------------------------------------------------------- timer expiry
+
+#[test]
+fn timer_expiry_forces_undersized_batch() {
+    // 3 queued (obs 8), head overdue: every timer strategy must fire
+    // with exactly the queue contents, never wait for a full batch.
+    for name in ["best-batch+timer", "select-batch+timer",
+                 "best-batch+partial+timer"] {
+        let s = strategy_by_name(name).unwrap();
+        let c = ctx(None, vec![view("a", 3, 3.5)]);
+        match s.decide(&c) {
+            Decision::Process { model, take } => {
+                assert_eq!(model, "a", "{name}");
+                assert!(take >= 1 && take <= 3, "{name} take {take}");
+            }
+            Decision::Wait => panic!("{name} waited past the timer"),
+        }
+    }
+}
+
+#[test]
+fn timer_expiry_is_longest_wait_first_not_resident_first() {
+    // Both queues overdue; "b" has waited longer.  The resident
+    // preference must NOT apply to the timer override (a saturated
+    // resident queue would starve every other model forever).
+    let c = ctx(Some("a"),
+                vec![view("a", 8, 3.2), view("b", 2, 5.0)]);
+    for name in ["best-batch+timer", "select-batch+timer"] {
+        let s = strategy_by_name(name).unwrap();
+        match s.decide(&c) {
+            Decision::Process { model, .. } => {
+                assert_eq!(model, "b", "{name} must honour the oldest \
+                                        overdue head");
+            }
+            Decision::Wait => panic!("{name} waited"),
+        }
+    }
+}
+
+#[test]
+fn exactly_at_timeout_fires() {
+    // boundary: oldest_wait == timeout_s counts as overdue
+    let s = strategy_by_name("best-batch+timer").unwrap();
+    let c = ctx(None, vec![view("a", 2, 3.0)]);
+    assert_eq!(s.decide(&c),
+               Decision::Process { model: "a".into(), take: 2 });
+}
+
+#[test]
+fn below_timeout_below_obs_waits() {
+    let s = strategy_by_name("best-batch+timer").unwrap();
+    let c = ctx(None, vec![view("a", 7, 2.9)]);
+    assert_eq!(s.decide(&c), Decision::Wait);
+}
+
+// ------------------------------------------------- partial-batch drain
+
+#[test]
+fn partial_drains_resident_before_swapping_away() {
+    // "b" is overdue (would force a swap); resident "a" still has two
+    // queued — the Partial Batch plan drains them first.
+    let s = strategy_by_name("best-batch+partial+timer").unwrap();
+    let c = ctx(Some("a"), vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+    assert_eq!(s.decide(&c),
+               Decision::Process { model: "a".into(), take: 2 });
+}
+
+#[test]
+fn partial_drain_happens_once_per_residency() {
+    // Same strategy *instance* across ticks: the first decision drains
+    // the resident, the second must let the swap proceed (an
+    // unconditional drain rule would pin the resident forever under
+    // open-loop arrivals).
+    let s = strategy_by_name("best-batch+partial+timer").unwrap();
+    let c = ctx(Some("a"), vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+    assert_eq!(s.decide(&c),
+               Decision::Process { model: "a".into(), take: 2 });
+    // resident queue refilled during the drain — swap must still win
+    let c2 = ctx(Some("a"), vec![view("a", 1, 0.1), view("b", 3, 4.2)]);
+    assert_eq!(s.decide(&c2),
+               Decision::Process { model: "b".into(), take: 3 });
+}
+
+#[test]
+fn partial_without_resident_backlog_swaps_immediately() {
+    let s = strategy_by_name("best-batch+partial+timer").unwrap();
+    let c = ctx(Some("a"), vec![view("b", 3, 4.0)]);
+    assert_eq!(s.decide(&c),
+               Decision::Process { model: "b".into(), take: 3 });
+}
+
+// ------------------------------------------- select-batch headroom
+
+#[test]
+fn select_batch_sizes_from_rate_and_headroom() {
+    // rate 2 rps, desired latency = 6 − 0.5 − 0.5 = 5 s → target 10,
+    // clamped to OBS 8
+    let v = view("a", 12, 0.1);
+    assert_eq!(SelectBatchTimer::target_batch(&v, 6.0), 8);
+    // tighter SLA 2 s → desired 1 s → target 2
+    assert_eq!(SelectBatchTimer::target_batch(&v, 2.0), 2);
+}
+
+#[test]
+fn select_batch_headroom_clamp_floors_infeasible_slas() {
+    // est_load + est_exec exceed the SLA entirely: the naive formula
+    // would go negative and degrade to batch-1 thrashing; the clamp
+    // floors desired latency at 25% of the SLA.
+    let mut v = view("a", 12, 0.1);
+    v.est_load_s = 5.0;
+    v.est_exec_s = 3.0;
+    v.rate_rps = 4.0;
+    // desired = max(6 − 8, 0.25 × 6) = 1.5 s → target 6
+    assert_eq!(SelectBatchTimer::target_batch(&v, 6.0), 6);
+}
+
+#[test]
+fn select_batch_unknown_rate_clamps_to_one() {
+    let mut v = view("a", 12, 0.1);
+    v.rate_rps = 0.0;
+    assert_eq!(SelectBatchTimer::target_batch(&v, 6.0), 1,
+               "no rate estimate must still make progress");
+}
+
+#[test]
+fn select_batch_overdue_take_is_capped_by_queue_length() {
+    let s = strategy_by_name("select-batch+timer").unwrap();
+    // overdue head with only 3 queued while the target (rate 8 ×
+    // desired 5 s → obs-clamped 8) is larger: take the whole queue
+    let mut c = ctx(None, vec![view("a", 3, 4.0)]);
+    c.queues[0].rate_rps = 8.0;
+    assert_eq!(s.decide(&c),
+               Decision::Process { model: "a".into(), take: 3 });
+}
+
+#[test]
+fn select_batch_waits_below_target() {
+    let s = strategy_by_name("select-batch+timer").unwrap();
+    // rate 2, desired 5 → target 8 (obs clamp); queue of 5, not overdue
+    // → wait for more arrivals... but only when below target:
+    let c = ctx(None, vec![view("a", 7, 0.1)]);
+    assert_eq!(s.decide(&c), Decision::Wait);
+}

@@ -1,0 +1,152 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! Implements the subset this workspace uses: [`Error`], [`Result`],
+//! and the `anyhow!` / `bail!` / `ensure!` macros.  Every constructor
+//! funnels into a message string plus an optional boxed source, and any
+//! `std::error::Error + Send + Sync` converts via `?` exactly as with
+//! the real crate.
+
+use std::fmt;
+
+/// A dynamically typed error with a display message and optional source.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` emits).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error, keeping it as the source.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prefix the message with context (the `Context` trait's verb).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error {
+            msg: format!("{context}: {}", self.msg),
+            source: self.source,
+        }
+    }
+
+    /// Borrow the underlying source error, if any.
+    pub fn source_ref(&self)
+                      -> Option<&(dyn std::error::Error + Send + Sync)> {
+        self.source.as_deref()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error when a condition does not hold.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_debug() {
+        let e = anyhow!("bad {} ({})", "thing", 7);
+        assert_eq!(e.to_string(), "bad thing (7)");
+        assert_eq!(format!("{e:?}"), "bad thing (7)");
+        assert_eq!(format!("{e:#}"), "bad thing (7)");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("disk on fire"));
+        assert!(e.source_ref().is_some());
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn b() -> Result<u32> {
+            bail!("nope {}", 1);
+        }
+        fn e(x: u32) -> Result<u32> {
+            ensure!(x > 2, "x too small: {x}");
+            Ok(x)
+        }
+        fn bare(x: u32) -> Result<u32> {
+            ensure!(x > 2);
+            Ok(x)
+        }
+        assert_eq!(b().unwrap_err().to_string(), "nope 1");
+        assert_eq!(e(1).unwrap_err().to_string(), "x too small: 1");
+        assert_eq!(e(3).unwrap(), 3);
+        assert!(bare(1).unwrap_err().to_string().contains("x > 2"));
+    }
+
+    #[test]
+    fn context_prefixes() {
+        let e = anyhow!("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+}

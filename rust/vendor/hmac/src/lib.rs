@@ -1,0 +1,137 @@
+//! Minimal offline HMAC (RFC 2104) with the RustCrypto-style `Mac`
+//! surface used by this workspace: `Hmac<Sha256>` with
+//! `new_from_slice` / `update` / `finalize().into_bytes()`.
+//!
+//! Only SHA-256 is supported; the generic parameter exists to keep the
+//! call sites (`Hmac<Sha256>`) source-compatible with the real crate.
+
+use std::marker::PhantomData;
+
+use sha2::{Digest, Sha256};
+
+/// Error for over-long keys; never produced (long keys are hashed).
+#[derive(Debug, Clone, Copy)]
+pub struct InvalidLength;
+
+impl std::fmt::Display for InvalidLength {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("invalid HMAC key length")
+    }
+}
+
+impl std::error::Error for InvalidLength {}
+
+/// Finalized tag, convertible into a byte array like `CtOutput`.
+pub struct Output([u8; 32]);
+
+impl Output {
+    pub fn into_bytes(self) -> [u8; 32] {
+        self.0
+    }
+}
+
+/// Message-authentication-code interface (subset of the `digest`
+/// crate's `Mac`).
+pub trait Mac: Sized {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength>;
+    fn update(&mut self, data: &[u8]);
+    fn finalize(self) -> Output;
+}
+
+/// HMAC keyed with `D` (only `Sha256` is implemented offline).
+pub struct Hmac<D> {
+    inner: Sha256,
+    opad_key: [u8; Sha256::BLOCK_SIZE],
+    _digest: PhantomData<D>,
+}
+
+impl Mac for Hmac<Sha256> {
+    fn new_from_slice(key: &[u8]) -> Result<Self, InvalidLength> {
+        let mut block = [0u8; Sha256::BLOCK_SIZE];
+        if key.len() > Sha256::BLOCK_SIZE {
+            block[..32].copy_from_slice(&sha2::sha256(key));
+        } else {
+            block[..key.len()].copy_from_slice(key);
+        }
+        let mut ipad_key = block;
+        let mut opad_key = block;
+        for b in ipad_key.iter_mut() {
+            *b ^= 0x36;
+        }
+        for b in opad_key.iter_mut() {
+            *b ^= 0x5C;
+        }
+        let mut inner = Sha256::new();
+        inner.update(ipad_key);
+        Ok(Hmac { inner, opad_key, _digest: PhantomData })
+    }
+
+    fn update(&mut self, data: &[u8]) {
+        self.inner.update(data);
+    }
+
+    fn finalize(self) -> Output {
+        let inner_digest = self.inner.finalize();
+        let mut outer = Sha256::new();
+        outer.update(self.opad_key);
+        outer.update(inner_digest);
+        Output(outer.finalize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mac(key: &[u8], msg: &[u8]) -> [u8; 32] {
+        let mut m = <Hmac<Sha256> as Mac>::new_from_slice(key).unwrap();
+        m.update(msg);
+        m.finalize().into_bytes()
+    }
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn rfc4231_case_1() {
+        // key = 0x0b * 20, data = "Hi There"
+        let tag = mac(&[0x0b; 20], b"Hi There");
+        assert_eq!(
+            hex(&tag),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c\
+             2e32cff7");
+    }
+
+    #[test]
+    fn rfc4231_case_2() {
+        // key = "Jefe", data = "what do ya want for nothing?"
+        let tag = mac(b"Jefe", b"what do ya want for nothing?");
+        assert_eq!(
+            hex(&tag),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b9\
+             64ec3843");
+    }
+
+    #[test]
+    fn long_key_is_hashed() {
+        // RFC 4231 case 6: 131-byte key, "Test Using Larger Than
+        // Block-Size Key - Hash Key First"
+        let tag = mac(&[0xaa; 131],
+                      b"Test Using Larger Than Block-Size Key - Hash \
+                        Key First");
+        assert_eq!(
+            hex(&tag),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f\
+             0ee37f54");
+    }
+
+    #[test]
+    fn incremental_update_matches() {
+        let one = mac(b"key", b"hello world");
+        let mut m = <Hmac<Sha256> as Mac>::new_from_slice(b"key").unwrap();
+        m.update(b"hello ");
+        m.update(b"world");
+        assert_eq!(m.finalize().into_bytes(), one);
+    }
+}

@@ -1,0 +1,29 @@
+//! Minimal offline `libc` shim: exactly the `sysconf` surface
+//! `metrics::system` needs on Linux.
+
+#![allow(non_camel_case_types)]
+
+pub type c_int = i32;
+pub type c_long = i64;
+
+/// `_SC_CLK_TCK` on Linux/glibc.
+pub const _SC_CLK_TCK: c_int = 2;
+/// `_SC_PAGESIZE` on Linux/glibc.
+pub const _SC_PAGESIZE: c_int = 30;
+
+extern "C" {
+    pub fn sysconf(name: c_int) -> c_long;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sysconf_returns_sane_values() {
+        let ticks = unsafe { sysconf(_SC_CLK_TCK) };
+        let page = unsafe { sysconf(_SC_PAGESIZE) };
+        assert!(ticks > 0, "clock ticks {ticks}");
+        assert!(page >= 4096, "page size {page}");
+    }
+}

@@ -1,0 +1,445 @@
+//! Offline PJRT stand-in for the `xla` crate (xla_extension bindings).
+//!
+//! The real project AOT-lowers a JAX transformer to HLO text and
+//! executes it through PJRT.  This container has no XLA runtime, so
+//! this crate executes the repo's HLO artifacts *behaviourally*: each
+//! artifact carries a `// sincere.meta:` header (emitted by
+//! `tools/gen_artifacts.py`) describing its shapes and calibrated work
+//! factors, and `PjRtLoadedExecutable::execute` produces
+//!
+//! * deterministic decode tokens that are a pure per-row function of
+//!   the prompt row and the weight fingerprint (so padding rows are
+//!   inert and batch size never changes a row's output — the same
+//!   contracts `python/tests` pin for the real kernels), and
+//! * a deterministic amount of CPU work that grows sublinearly with
+//!   batch size (fixed per-dispatch cost + small per-row cost), so
+//!   profiling (Fig 4 / OBS discovery) sees the paper's shape.
+//!
+//! The API mirrors the exact subset of `xla` v0.5 the runtime layer
+//! uses; swapping the real crate back in is a Cargo.toml change.
+
+use std::fmt;
+
+// ------------------------------------------------------------------ error
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn err(msg: impl Into<String>) -> Error {
+    Error(msg.into())
+}
+
+// ---------------------------------------------------------------- literal
+
+/// Typed flat payload of a [`Literal`] (public because the
+/// `NativeType` conversion trait mentions it; not part of the real
+/// xla API surface).
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor value (array or tuple), with a content fingerprint
+/// computed once at construction so `execute` can cheaply mix weight
+/// identity into its outputs.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    payload: Payload,
+    dims: Vec<i64>,
+    fp: u64,
+}
+
+/// Element types `Literal::vec1`/`to_vec` accept.
+pub trait NativeType: Sized + Copy {
+    fn wrap(values: Vec<Self>) -> Payload;
+    fn unwrap(payload: &Payload) -> Option<&[Self]>;
+    fn hash_into(values: &[Self], h: &mut u64);
+}
+
+fn fnv_step(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0100_0000_01b3);
+    }
+}
+
+impl NativeType for f32 {
+    fn wrap(values: Vec<Self>) -> Payload {
+        Payload::F32(values)
+    }
+
+    fn unwrap(payload: &Payload) -> Option<&[Self]> {
+        match payload {
+            Payload::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn hash_into(values: &[Self], h: &mut u64) {
+        for v in values {
+            fnv_step(h, &v.to_bits().to_le_bytes());
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(values: Vec<Self>) -> Payload {
+        Payload::I32(values)
+    }
+
+    fn unwrap(payload: &Payload) -> Option<&[Self]> {
+        match payload {
+            Payload::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    fn hash_into(values: &[Self], h: &mut u64) {
+        for v in values {
+            fnv_step(h, &v.to_le_bytes());
+        }
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(values: &[T]) -> Literal {
+        let mut fp = 0xcbf2_9ce4_8422_2325u64;
+        T::hash_into(values, &mut fp);
+        let dims = vec![values.len() as i64];
+        Literal { payload: T::wrap(values.to_vec()), dims, fp }
+    }
+
+    /// Reinterpret the flat payload under new dimensions.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        let have = match &self.payload {
+            Payload::F32(v) => v.len(),
+            Payload::I32(v) => v.len(),
+            Payload::Tuple(_) => {
+                return Err(err("cannot reshape a tuple literal"));
+            }
+        };
+        if numel < 0 || numel as usize != have {
+            return Err(err(format!(
+                "reshape {dims:?} ({numel} elements) on literal of {have}")));
+        }
+        Ok(Literal {
+            payload: self.payload.clone(),
+            dims: dims.to_vec(),
+            fp: self.fp,
+        })
+    }
+
+    /// Extract the flat payload as `T` elements.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.payload)
+            .map(|v| v.to_vec())
+            .ok_or_else(|| err("literal element type mismatch"))
+    }
+
+    /// Unwrap a 1-element tuple (the artifact output convention).
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        match &self.payload {
+            Payload::Tuple(elems) if elems.len() == 1 => {
+                Ok(elems[0].clone())
+            }
+            Payload::Tuple(elems) => Err(err(format!(
+                "expected 1-tuple, got {}-tuple", elems.len()))),
+            _ => Err(err("expected tuple literal")),
+        }
+    }
+
+    /// Wrap literals into a tuple.
+    pub fn tuple(elems: Vec<Literal>) -> Literal {
+        let mut fp = 0x9e37_79b9_7f4a_7c15u64;
+        for e in &elems {
+            fp ^= e.fp;
+            fp = splitmix(fp);
+        }
+        Literal { payload: Payload::Tuple(elems), dims: Vec::new(), fp }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Content fingerprint (stable across reshape).
+    pub fn fingerprint(&self) -> u64 {
+        self.fp
+    }
+}
+
+// -------------------------------------------------------------- hlo meta
+
+/// Metadata parsed from an artifact's `// sincere.meta:` header.
+#[derive(Debug, Clone)]
+struct HloMeta {
+    name: String,
+    batch: usize,
+    prompt_len: usize,
+    decode_len: usize,
+    vocab: usize,
+    /// Fixed per-dispatch work units (deterministic spin).
+    work_base: u64,
+    /// Additional work units per batch row.
+    work_per_row: u64,
+}
+
+fn parse_meta(text: &str) -> Result<HloMeta> {
+    let line = text.lines()
+        .find_map(|l| l.trim().strip_prefix("// sincere.meta:"))
+        .ok_or_else(|| err("no sincere.meta header in HLO artifact"))?;
+    let mut meta = HloMeta {
+        name: String::new(),
+        batch: 0,
+        prompt_len: 0,
+        decode_len: 0,
+        vocab: 0,
+        work_base: 100_000,
+        work_per_row: 10_000,
+    };
+    for kv in line.split_whitespace() {
+        let Some((k, v)) = kv.split_once('=') else { continue };
+        match k {
+            "name" => meta.name = v.to_string(),
+            "batch" => meta.batch = parse_num(k, v)?,
+            "prompt_len" => meta.prompt_len = parse_num(k, v)?,
+            "decode_len" => meta.decode_len = parse_num(k, v)?,
+            "vocab" => meta.vocab = parse_num(k, v)?,
+            "work_base" => meta.work_base = parse_num(k, v)? as u64,
+            "work_per_row" => meta.work_per_row = parse_num(k, v)? as u64,
+            _ => {}
+        }
+    }
+    if meta.batch == 0 || meta.prompt_len == 0 || meta.decode_len == 0
+        || meta.vocab < 2
+    {
+        return Err(err(format!("incomplete sincere.meta: {line}")));
+    }
+    Ok(meta)
+}
+
+fn parse_num(key: &str, value: &str) -> Result<usize> {
+    value.parse::<usize>()
+        .map_err(|_| err(format!("bad sincere.meta {key}={value:?}")))
+}
+
+/// Parsed HLO module (text artifact + metadata).
+pub struct HloModuleProto {
+    meta: HloMeta,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text artifact from disk.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| err(format!("reading {path}: {e}")))?;
+        Ok(HloModuleProto { meta: parse_meta(&text)? })
+    }
+}
+
+/// A computation ready to compile.
+pub struct XlaComputation {
+    meta: HloMeta,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { meta: proto.meta.clone() }
+    }
+}
+
+// ---------------------------------------------------------------- client
+
+/// The PJRT client (CPU only in this stand-in).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn compile(&self, computation: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { meta: computation.meta.clone() })
+    }
+}
+
+/// Device-side buffer holding one execution output.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[inline]
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Compiled executable: deterministic behavioural model of one
+/// (family, batch) artifact.
+pub struct PjRtLoadedExecutable {
+    meta: HloMeta,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with `[prompt, weights...]` argument order (the aot.py
+    /// contract).  Returns one result tuple per device, PJRT-style.
+    pub fn execute(&self, args: &[&Literal])
+                   -> Result<Vec<Vec<PjRtBuffer>>> {
+        let m = &self.meta;
+        let prompt = args.first()
+            .ok_or_else(|| err("execute: missing prompt argument"))?;
+        let want = [m.batch as i64, m.prompt_len as i64];
+        if prompt.dims() != &want[..] {
+            return Err(err(format!(
+                "execute {}: prompt dims {:?} != {:?}", m.name,
+                prompt.dims(), want)));
+        }
+        let tokens = prompt.to_vec::<i32>()
+            .map_err(|e| err(format!("execute {}: {e}", m.name)))?;
+
+        // Weight identity: fold every weight literal's fingerprint.
+        let mut weights_fp = 0xcbf2_9ce4_8422_2325u64;
+        for w in &args[1..] {
+            weights_fp = splitmix(weights_fp ^ w.fingerprint());
+        }
+
+        // Deterministic dispatch cost: a fixed base plus a small
+        // per-row term, so throughput grows with batch size and
+        // batching pays for itself (Fig 4's premise).
+        let iters = m.work_base
+            .wrapping_add(m.work_per_row.wrapping_mul(m.batch as u64));
+        let mut acc = weights_fp | 1;
+        for _ in 0..iters {
+            acc = splitmix(acc);
+        }
+        std::hint::black_box(acc);
+
+        // Decode tokens: pure per-row function of (row, weights).
+        let mut out = Vec::with_capacity(m.batch * m.decode_len);
+        for row in tokens.chunks(m.prompt_len) {
+            let mut h = 0xcbf2_9ce4_8422_2325u64;
+            i32::hash_into(row, &mut h);
+            h = splitmix(h ^ weights_fp);
+            for j in 0..m.decode_len {
+                let mixed = splitmix(h ^ (j as u64 + 1));
+                out.push((mixed % m.vocab as u64) as i32);
+            }
+        }
+        let literal = Literal::vec1(&out)
+            .reshape(&[m.batch as i64, m.decode_len as i64])?;
+        Ok(vec![vec![PjRtBuffer {
+            literal: Literal::tuple(vec![literal]),
+        }]])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const HLO: &str = "\
+HloModule test_b2\n\
+// sincere.meta: name=test batch=2 prompt_len=4 decode_len=6 \
+vocab=128 work_base=1000 work_per_row=100\n\
+ENTRY main { ROOT x = s32[2,6] parameter(0) }\n";
+
+    fn exe() -> PjRtLoadedExecutable {
+        let meta = parse_meta(HLO).unwrap();
+        PjRtLoadedExecutable { meta }
+    }
+
+    fn prompt(rows: &[[i32; 4]]) -> Literal {
+        let flat: Vec<i32> = rows.iter().flatten().copied().collect();
+        Literal::vec1(&flat).reshape(&[2, 4]).unwrap()
+    }
+
+    fn weights() -> Literal {
+        Literal::vec1(&[0.5f32, -1.0, 2.0]).reshape(&[3]).unwrap()
+    }
+
+    fn run(exe: &PjRtLoadedExecutable, p: &Literal, w: &Literal)
+           -> Vec<i32> {
+        let out = exe.execute(&[p, w]).unwrap();
+        out[0][0].to_literal_sync().unwrap().to_tuple1().unwrap()
+            .to_vec::<i32>().unwrap()
+    }
+
+    #[test]
+    fn deterministic_and_in_vocab() {
+        let e = exe();
+        let p = prompt(&[[1, 2, 3, 4], [5, 6, 7, 8]]);
+        let w = weights();
+        let a = run(&e, &p, &w);
+        let b = run(&e, &p, &w);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 12);
+        assert!(a.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn rows_are_independent() {
+        let e = exe();
+        let w = weights();
+        let a = run(&e, &prompt(&[[1, 2, 3, 4], [0, 0, 0, 0]]), &w);
+        let b = run(&e, &prompt(&[[1, 2, 3, 4], [9, 9, 9, 9]]), &w);
+        assert_eq!(a[..6], b[..6], "row 0 must not see row 1");
+        assert_ne!(a[6..], b[6..]);
+    }
+
+    #[test]
+    fn weights_change_outputs() {
+        let e = exe();
+        let p = prompt(&[[1, 2, 3, 4], [5, 6, 7, 8]]);
+        let a = run(&e, &p, &weights());
+        let w2 = Literal::vec1(&[9.9f32, -1.0, 2.0]).reshape(&[3]).unwrap();
+        let b = run(&e, &p, &w2);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let e = exe();
+        let bad = Literal::vec1(&[1i32; 4]).reshape(&[1, 4]).unwrap();
+        assert!(e.execute(&[&bad, &weights()]).is_err());
+    }
+
+    #[test]
+    fn meta_parsing_requires_fields() {
+        assert!(parse_meta("HloModule x\n").is_err());
+        assert!(parse_meta("// sincere.meta: name=x batch=0").is_err());
+    }
+
+    #[test]
+    fn reshape_checks_numel() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+        assert_eq!(l.fingerprint(),
+                   l.reshape(&[1, 3]).unwrap().fingerprint());
+    }
+}
