@@ -18,7 +18,7 @@ use std::fmt::Write as _;
 use std::path::PathBuf;
 
 use sincere::config::{RunConfig, SLA_LADDER};
-use sincere::coordinator::STRATEGY_NAMES;
+use sincere::coordinator::strategy_names;
 use sincere::engine::{EngineBuilder, RunSummary};
 use sincere::gpu::CcMode;
 use sincere::metrics::report;
@@ -99,7 +99,7 @@ fn main() -> anyhow::Result<()> {
     let mut cells: Vec<RunSummary> = Vec::new();
     for mode in [CcMode::Off, CcMode::On] {
         for pattern in PATTERN_NAMES {
-            for strategy in STRATEGY_NAMES {
+            for strategy in strategy_names() {
                 for &sla in SLA_LADDER {
                     let mut c = RunConfig::default();
                     c.mode = mode;
@@ -163,7 +163,7 @@ fn main() -> anyhow::Result<()> {
                   gain % |")?;
     writeln!(md, "|---|---|---|---|---|")?;
     for pattern in PATTERN_NAMES {
-        for strategy in STRATEGY_NAMES {
+        for strategy in strategy_names() {
             let find = |mode: &str| cells.iter().find(|c| {
                 c.mode == mode && &c.pattern == pattern
                     && c.strategy == *strategy && c.sla_s == SLA_LADDER[0]

@@ -5,7 +5,7 @@
 use std::path::PathBuf;
 
 use sincere::config::{RunConfig, SLA_LADDER};
-use sincere::coordinator::STRATEGY_NAMES;
+use sincere::coordinator::strategy_names;
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::Manifest;
@@ -29,7 +29,7 @@ fn main() {
     let t0 = std::time::Instant::now();
     let mut cells = 0;
     for pattern in PATTERN_NAMES {
-        for strategy in STRATEGY_NAMES {
+        for strategy in strategy_names() {
             for &sla in SLA_LADDER {
                 let mut out: Vec<(f64, f64)> = Vec::new(); // (lat, att)
                 for mode in [CcMode::On, CcMode::Off] {

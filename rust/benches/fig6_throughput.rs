@@ -6,7 +6,7 @@
 use std::path::PathBuf;
 
 use sincere::config::{RunConfig, SLA_LADDER};
-use sincere::coordinator::STRATEGY_NAMES;
+use sincere::coordinator::strategy_names;
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::Manifest;
@@ -28,7 +28,7 @@ fn main() {
               No-CC gain | CC proc rate | No-CC proc rate |");
     println!("|---|---|---|---|---|---|---|");
     for pattern in PATTERN_NAMES {
-        for strategy in STRATEGY_NAMES {
+        for strategy in strategy_names() {
             let run = |mode: CcMode| {
                 let mut c = RunConfig::default();
                 c.mode = mode;

@@ -10,8 +10,8 @@ use sincere::bench::Bench;
 use sincere::coordinator::queues::ModelQueues;
 use sincere::coordinator::rate::RateEstimator;
 use sincere::coordinator::request::Request;
-use sincere::coordinator::strategy::{strategy_by_name, ModelView,
-                                     SchedContext};
+use sincere::coordinator::strategy::{strategy_by_name, strategy_names,
+                                     DeviceView, ModelView, SchedContext};
 use sincere::gpu::cc::CcSession;
 use sincere::gpu::device::{GpuConfig, SimGpu};
 use sincere::gpu::dma::Dir;
@@ -23,10 +23,17 @@ use sincere::workload::tokenizer::tokenize;
 fn main() {
     let mut b = Bench::from_env(50, 2000);
 
-    // ---- strategy decide over a realistic context ----
+    // ---- strategy decide over a realistic fleet context ----
     let ctx = SchedContext {
         now_s: 100.0,
-        resident: Some("llama-sim".into()),
+        devices: (0..4).map(|d| DeviceView {
+            id: d,
+            mode: if d % 2 == 0 { CcMode::On } else { CcMode::Off },
+            resident: (d == 0).then(|| "llama-sim".to_string()),
+            busy: d == 3,
+            busy_s: 10.0 + d as f64,
+            dispatched: 40 + d as u64,
+        }).collect(),
         queues: (0..3).map(|i| ModelView {
             model: format!("model-{i}"),
             len: 7 + i,
@@ -39,10 +46,19 @@ fn main() {
         sla_s: 6.0,
         timeout_s: 3.0,
     };
-    for name in sincere::coordinator::STRATEGY_NAMES {
+    for name in strategy_names() {
         let s = strategy_by_name(name).unwrap();
         b.run(&format!("decide/{name}"), || {
             std::hint::black_box(s.decide(&ctx));
+        });
+    }
+
+    // ---- placement over the same fleet context ----
+    let free: Vec<usize> = vec![0, 1, 2];
+    for entry in sincere::coordinator::PLACEMENTS {
+        let p = (entry.make)();
+        b.run(&format!("place/{}", entry.name), || {
+            std::hint::black_box(p.place(&ctx, &ctx.queues[0], &free));
         });
     }
 

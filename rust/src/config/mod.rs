@@ -32,7 +32,7 @@ pub struct RunConfig {
     pub pattern: String,
     pub mean_rps: f64,
     pub sla_s: f64,
-    /// Strategy name, see `coordinator::STRATEGY_NAMES`.
+    /// Strategy name, see `coordinator::strategy_names`.
     pub strategy: String,
     pub duration_s: f64,
     /// Extra drain time after arrivals stop before cutting off.
@@ -48,7 +48,23 @@ pub struct RunConfig {
     pub tick: Duration,
     /// Monitor sampling period.
     pub monitor_period: Duration,
+    /// Base device config; each fleet device starts from this.
     pub gpu: GpuConfig,
+
+    // ---- fleet (N-device) configuration ----
+    /// Number of devices in the fleet (1 = the paper's single GPU).
+    pub devices: usize,
+    /// Per-device CC mode overrides (empty = every device uses `mode`;
+    /// otherwise must name one mode per device).
+    pub device_modes: Vec<CcMode>,
+    /// Per-device HBM capacity overrides, MB (empty = `gpu.hbm_capacity`
+    /// everywhere; otherwise one entry per device).
+    pub device_hbm_mb: Vec<f64>,
+    /// Per-device PCIe rate scale, multiplying both plain and CC
+    /// bandwidth (empty = 1.0 everywhere; otherwise one per device).
+    pub device_bw_scale: Vec<f64>,
+    /// Fleet placement policy, see `coordinator::placement_names`.
+    pub placement: String,
 }
 
 impl Default for RunConfig {
@@ -71,6 +87,11 @@ impl Default for RunConfig {
             tick: Duration::from_millis(2),
             monitor_period: Duration::from_millis(250),
             gpu: GpuConfig::default(),
+            devices: 1,
+            device_modes: Vec::new(),
+            device_hbm_mb: Vec::new(),
+            device_bw_scale: Vec::new(),
+            placement: "affinity".into(),
         }
     }
 }
@@ -110,6 +131,22 @@ impl RunConfig {
                         "bad --batch-sizes {value:?}"))?;
             }
             "timeout-frac" => self.timeout_frac = parse_f64(key, value)?,
+            "devices" => {
+                self.devices = value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --devices {value:?}"))?;
+            }
+            "device-modes" => {
+                self.device_modes = value.split(',')
+                    .map(|s| CcMode::parse(s.trim()))
+                    .collect::<anyhow::Result<_>>()?;
+            }
+            "device-hbm-mb" => {
+                self.device_hbm_mb = parse_f64_list(key, value)?;
+            }
+            "device-bw-scale" => {
+                self.device_bw_scale = parse_f64_list(key, value)?;
+            }
+            "placement" => self.placement = value.to_string(),
             "hbm-mb" => self.gpu.hbm_capacity =
                 (parse_f64(key, value)? * 1024.0 * 1024.0) as u64,
             "bw-plain-mbps" => self.gpu.bw_plain =
@@ -140,10 +177,43 @@ impl RunConfig {
         Ok(())
     }
 
-    /// Grid-cell label, e.g. `cc_gamma_select-batch+timer_sla6`.
+    /// Grid-cell label, e.g. `cc_gamma_select-batch+timer_sla6`
+    /// (fleet runs append `_devN`).
     pub fn cell_label(&self) -> String {
-        format!("{}_{}_{}_sla{}", self.mode.as_str(), self.pattern,
-                self.strategy, self.sla_s)
+        let base = format!("{}_{}_{}_sla{}", self.mode.as_str(),
+                           self.pattern, self.strategy, self.sla_s);
+        if self.devices > 1 {
+            format!("{base}_dev{}", self.devices)
+        } else {
+            base
+        }
+    }
+
+    /// One `GpuConfig` per fleet device: the base `gpu` config with the
+    /// per-device mode / HBM / PCIe overrides applied.
+    pub fn fleet_configs(&self) -> Vec<GpuConfig> {
+        (0..self.devices.max(1)).map(|i| {
+            let mut g = self.gpu.clone();
+            // `mode` is the canonical experiment switch; per-device
+            // overrides sit on top of it
+            g.mode = self.mode;
+            if let Some(&m) = self.device_modes.get(i) {
+                g.mode = m;
+            }
+            if let Some(&mb) = self.device_hbm_mb.get(i) {
+                g.hbm_capacity = (mb * 1024.0 * 1024.0) as u64;
+            }
+            if let Some(&s) = self.device_bw_scale.get(i) {
+                g.bw_plain *= s;
+                g.bw_cc *= s;
+            }
+            g
+        }).collect()
+    }
+
+    /// CC mode of every fleet device, in id order.
+    pub fn fleet_modes(&self) -> Vec<CcMode> {
+        self.fleet_configs().iter().map(|g| g.mode).collect()
     }
 
     /// Validate cross-field constraints early.
@@ -153,8 +223,18 @@ impl RunConfig {
         anyhow::ensure!(self.duration_s > 0.0, "duration must be > 0");
         anyhow::ensure!((0.0..=1.0).contains(&self.timeout_frac),
                         "timeout-frac must be in [0,1]");
+        anyhow::ensure!(self.devices >= 1, "devices must be >= 1");
+        for (name, len) in [("device-modes", self.device_modes.len()),
+                            ("device-hbm-mb", self.device_hbm_mb.len()),
+                            ("device-bw-scale",
+                             self.device_bw_scale.len())] {
+            anyhow::ensure!(len == 0 || len == self.devices,
+                            "--{name} must list one entry per device \
+                             ({} given, {} devices)", len, self.devices);
+        }
         crate::traffic::pattern_by_name(&self.pattern)?;
         crate::coordinator::strategy_by_name(&self.strategy)?;
+        crate::coordinator::placement_by_name(&self.placement)?;
         Ok(())
     }
 }
@@ -162,6 +242,12 @@ impl RunConfig {
 fn parse_f64(key: &str, value: &str) -> anyhow::Result<f64> {
     value.parse::<f64>()
         .map_err(|_| anyhow::anyhow!("bad --{key} value {value:?}"))
+}
+
+fn parse_f64_list(key: &str, value: &str) -> anyhow::Result<Vec<f64>> {
+    value.split(',')
+        .map(|s| parse_f64(key, s.trim()))
+        .collect()
 }
 
 #[cfg(test)]
@@ -223,5 +309,52 @@ mod tests {
         let c = RunConfig::default();
         assert_eq!(c.cell_label(),
                    "no-cc_gamma_select-batch+timer_sla18");
+        let mut fleet = RunConfig::default();
+        fleet.devices = 4;
+        assert_eq!(fleet.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_dev4");
+    }
+
+    #[test]
+    fn fleet_overrides_parse_and_apply() {
+        let mut c = RunConfig::default();
+        c.set("devices", "3").unwrap();
+        c.set("device-modes", "cc,no-cc,cc").unwrap();
+        c.set("device-hbm-mb", "8,24,24").unwrap();
+        c.set("device-bw-scale", "1.0,2.0,1.0").unwrap();
+        c.set("placement", "least-loaded").unwrap();
+        c.validate().unwrap();
+        let fleet = c.fleet_configs();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(c.fleet_modes(),
+                   vec![CcMode::On, CcMode::Off, CcMode::On]);
+        assert_eq!(fleet[0].hbm_capacity, 8 * 1024 * 1024);
+        assert!((fleet[1].bw_plain - 2.0 * c.gpu.bw_plain).abs() < 1.0);
+        assert!((fleet[2].bw_cc - c.gpu.bw_cc).abs() < 1.0);
+        assert!(c.set("devices", "zero").is_err());
+        assert!(c.set("device-modes", "cc,tdx").is_err());
+    }
+
+    #[test]
+    fn fleet_validation_catches_mismatched_lists() {
+        let mut c = RunConfig::default();
+        c.devices = 2;
+        c.device_modes = vec![CcMode::On];
+        assert!(c.validate().is_err(), "1 mode for 2 devices");
+        let mut c = RunConfig::default();
+        c.devices = 0;
+        assert!(c.validate().is_err());
+        let mut c = RunConfig::default();
+        c.placement = "nope".into();
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn single_device_fleet_is_the_base_gpu() {
+        let c = RunConfig::default();
+        let fleet = c.fleet_configs();
+        assert_eq!(fleet.len(), 1);
+        assert_eq!(fleet[0].mode, c.gpu.mode);
+        assert_eq!(fleet[0].hbm_capacity, c.gpu.hbm_capacity);
     }
 }

@@ -25,13 +25,14 @@ use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
+use crate::coordinator::placement::placement_by_name;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::rate::RateEstimator;
 use crate::coordinator::request::Request;
 use crate::coordinator::strategy::{strategy_by_name, Decision,
                                    SchedContext};
-use crate::engine::{build_views, Clock, ExecBackend, RealBackend,
-                    WallClock};
+use crate::engine::{build_device_views, build_views, resolve_device,
+                    Clock, ExecBackend, RealBackend, WallClock};
 use crate::runtime::Registry;
 use crate::util::json::Json;
 use crate::workload::tokenizer::tokenize;
@@ -87,6 +88,7 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
                 -> anyhow::Result<ServerStats> {
     cfg.validate()?;
     let strategy = strategy_by_name(&cfg.strategy)?;
+    let placement = placement_by_name(&cfg.placement)?;
     let listener = TcpListener::bind(addr)
         .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
     listener.set_nonblocking(true)?;
@@ -135,8 +137,16 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
 
     // ---------------- scheduler loop (this thread) ---------------------
     // Same backend as the experiment engine: residency, batching (OOM
-    // guard included), CC-sealed I/O, PJRT execution.
+    // guard included), CC-sealed I/O, PJRT execution — over the whole
+    // (possibly mixed CC/No-CC) fleet.  Wall-clock execution is
+    // serialized on this thread, so every device is free at each
+    // decision point; placement still spreads residency and load.
     let mut backend = RealBackend::new(cfg, registry)?;
+    let n_dev = backend.n_devices();
+    let free: Vec<usize> = (0..n_dev).collect();
+    let idle_until = vec![0.0f64; n_dev];
+    let mut dev_busy_s = vec![0.0f64; n_dev];
+    let mut dispatched = vec![0u64; n_dev];
     let mut queues = ModelQueues::new();
     let mut rates = RateEstimator::default();
     let mut exec_est: HashMap<String, f64> = HashMap::new();
@@ -165,10 +175,12 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
             break;
         }
 
-        let views = build_views(&queues, &rates, &backend, &exec_est, t);
+        let views = build_views(&queues, &rates, &backend, &exec_est, t,
+                                &free);
         let ctx = SchedContext {
             now_s: t,
-            resident: backend.resident(),
+            devices: build_device_views(&backend, &idle_until,
+                                        &dev_busy_s, &dispatched, t),
             queues: views,
             sla_s: cfg.sla_s,
             timeout_s: cfg.timeout_s(),
@@ -176,15 +188,21 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
 
         match strategy.decide(&ctx) {
             Decision::Wait => std::thread::sleep(cfg.tick),
-            Decision::Process { model, take } => {
-                backend.ensure_resident(&mut clock, &model)?;
+            Decision::Process { model, take, device } => {
+                let dev = resolve_device(&ctx, placement.as_ref(),
+                                         &model, device, &free);
+                let swap = backend.ensure_resident(&mut clock, dev,
+                                                   &model)?;
                 let Some(out) = backend.execute_batch(&mut clock,
-                                                      &mut queues,
+                                                      &mut queues, dev,
                                                       &model, take)?
                 else {
                     continue;
                 };
                 let complete = clock.now_s();
+                dev_busy_s[dev] += swap.unload_s + swap.load_s
+                    + out.exec_s + out.io_s;
+                dispatched[dev] += 1;
                 let e = exec_est.entry(model.clone())
                     .or_insert(out.exec_s);
                 *e = 0.3 * out.exec_s + 0.7 * *e;

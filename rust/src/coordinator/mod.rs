@@ -1,24 +1,24 @@
 //! The serving coordinator — the paper's system contribution (§III).
 //!
-//! Relaxed batch inference against multiple models on one device that
-//! can hold a single model at a time: per-model FIFO queues, pluggable
-//! scheduling strategies (Table I), a swap manager that moves weights
-//! through the (optionally confidential) DMA path, SLA tracking, and
-//! the serve loop tying it together.
+//! Relaxed batch inference against multiple models on a fleet of
+//! devices, each of which can hold a single model at a time: per-model
+//! FIFO queues, pluggable scheduling strategies (Table I), fleet
+//! placement policies, a swap manager per device that moves weights
+//! through the (optionally confidential) DMA path, and SLA tracking.
+//! The serve loop itself lives in [`crate::engine`].
 
 pub mod batcher;
 pub mod http;
+pub mod placement;
 pub mod queues;
 pub mod rate;
 pub mod request;
-pub mod server;
 pub mod sla;
 pub mod strategy;
 pub mod swap;
 
+pub use placement::{placement_by_name, placement_names, Placement,
+                    PLACEMENTS};
 pub use request::{CompletedRequest, Request};
-#[allow(deprecated)]
-pub use server::serve;
-pub use server::RunSummary;
-pub use strategy::{strategy_by_name, Decision, SchedContext, Strategy,
-                   STRATEGY_NAMES};
+pub use strategy::{strategy_by_name, strategy_names, Decision, DeviceView,
+                   SchedContext, Strategy, STRATEGIES};

@@ -1,0 +1,337 @@
+//! Fleet placement policies: *where* a decided batch runs.
+//!
+//! Table I strategies pick *what* to run (model + batch size); on an
+//! N-device fleet someone must pick *which device*.  Placement is the
+//! fleet-level analogue of the strategies' swap-avoidance preference,
+//! and it is where the paper's CC load-time penalty becomes a routing
+//! trade-off: a swap onto a CC device costs ~2.7× the plain load, so
+//! keeping models sticky (affinity) or steering SLA-tight work to
+//! No-CC devices (cc-aware) changes throughput and attainment, not
+//! just placement bookkeeping.
+//!
+//! Policies are pure functions over the same [`SchedContext`] snapshot
+//! the strategies see, choosing among the *free* devices only (the
+//! engine never dispatches to a busy device).  On a one-device fleet
+//! every policy degenerates to "device 0", which is what keeps
+//! `devices=1` runs bit-identical to the paper's single-GPU engine.
+//!
+//! The policy table ([`PLACEMENTS`]) is the single source of truth for
+//! lookup, `--help`, and the unknown-name error message.
+
+use std::cell::Cell;
+
+use crate::coordinator::strategy::{ModelView, SchedContext};
+use crate::gpu::CcMode;
+
+/// A fleet placement policy.
+pub trait Placement: Send {
+    fn name(&self) -> &'static str;
+
+    /// Pick a device for the batch the strategy decided: `view` is the
+    /// chosen model's queue view, `free` the ids of free devices
+    /// (non-empty, ascending).
+    fn place(&self, ctx: &SchedContext, view: &ModelView, free: &[usize])
+             -> usize;
+}
+
+/// One placement policy: CLI name, help blurb, constructor.
+pub struct PlacementEntry {
+    pub name: &'static str,
+    pub blurb: &'static str,
+    pub make: fn() -> Box<dyn Placement>,
+}
+
+fn make_affinity() -> Box<dyn Placement> {
+    Box::new(Affinity)
+}
+
+fn make_round_robin() -> Box<dyn Placement> {
+    Box::new(RoundRobin::default())
+}
+
+fn make_least_loaded() -> Box<dyn Placement> {
+    Box::new(LeastLoaded)
+}
+
+fn make_cc_aware() -> Box<dyn Placement> {
+    Box::new(CcAware)
+}
+
+/// The policy table — drives `placement_by_name`, `--help`, and the
+/// unknown-name error, so the three cannot drift.
+pub const PLACEMENTS: &[PlacementEntry] = &[
+    PlacementEntry {
+        name: "affinity",
+        blurb: "route to the device where the model is resident \
+                (fewest swaps)",
+        make: make_affinity,
+    },
+    PlacementEntry {
+        name: "round-robin",
+        blurb: "cycle through devices regardless of residency",
+        make: make_round_robin,
+    },
+    PlacementEntry {
+        name: "least-loaded",
+        blurb: "device with the least cumulative busy time",
+        make: make_least_loaded,
+    },
+    PlacementEntry {
+        name: "cc-aware",
+        blurb: "prefer No-CC devices when the head request's SLA \
+                headroom is tight",
+        make: make_cc_aware,
+    },
+];
+
+/// Valid placement names, in table order.
+pub fn placement_names() -> Vec<&'static str> {
+    PLACEMENTS.iter().map(|e| e.name).collect()
+}
+
+/// Instantiate a placement policy by CLI name.
+pub fn placement_by_name(name: &str) -> anyhow::Result<Box<dyn Placement>> {
+    PLACEMENTS.iter().find(|e| e.name == name).map(|e| (e.make)())
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown placement {name:?} (have {:?})", placement_names()))
+}
+
+// ---------------------------------------------------------------- helpers
+
+/// Free device with the least cumulative busy time (ties: lowest id).
+fn least_loaded_of(ctx: &SchedContext, free: &[usize]) -> usize {
+    *free.iter()
+        .min_by(|&&a, &&b| {
+            (ctx.devices[a].busy_s, a)
+                .partial_cmp(&(ctx.devices[b].busy_s, b)).unwrap()
+        })
+        .expect("placement called with no free device")
+}
+
+/// Affinity step: resident free device if any, else least-loaded.
+fn sticky_or_least_loaded(ctx: &SchedContext, model: &str, free: &[usize])
+                          -> usize {
+    ctx.resident_on_free(model)
+        .filter(|d| free.contains(d))
+        .unwrap_or_else(|| least_loaded_of(ctx, free))
+}
+
+// ------------------------------------------------------------- policies
+
+/// Route to the device where the model is already resident, avoiding
+/// the (CC-expensive) swap; first placement of a model lands on the
+/// least-loaded device, which naturally spreads models over the fleet.
+pub struct Affinity;
+
+impl Placement for Affinity {
+    fn name(&self) -> &'static str {
+        "affinity"
+    }
+
+    fn place(&self, ctx: &SchedContext, view: &ModelView, free: &[usize])
+             -> usize {
+        sticky_or_least_loaded(ctx, &view.model, free)
+    }
+}
+
+/// Classic round-robin over device ids, skipping busy devices; the
+/// residency-blind baseline the affinity policy is measured against.
+#[derive(Default)]
+pub struct RoundRobin {
+    cursor: Cell<usize>,
+}
+
+impl Placement for RoundRobin {
+    fn name(&self) -> &'static str {
+        "round-robin"
+    }
+
+    fn place(&self, ctx: &SchedContext, _view: &ModelView, free: &[usize])
+             -> usize {
+        let n = ctx.devices.len().max(1);
+        let start = self.cursor.get();
+        for i in 0..n {
+            let d = (start + i) % n;
+            if free.contains(&d) {
+                self.cursor.set((d + 1) % n);
+                return d;
+            }
+        }
+        // `free` is non-empty and every id is < n, so the scan above
+        // always returns
+        unreachable!("place called with no free device")
+    }
+}
+
+/// Always the free device with the least cumulative busy time —
+/// utilization-balancing, residency-blind.
+pub struct LeastLoaded;
+
+impl Placement for LeastLoaded {
+    fn name(&self) -> &'static str {
+        "least-loaded"
+    }
+
+    fn place(&self, ctx: &SchedContext, _view: &ModelView, free: &[usize])
+             -> usize {
+        least_loaded_of(ctx, free)
+    }
+}
+
+/// CC-aware routing: when the head request's SLA headroom is tight —
+/// the wait already consumed, plus the estimated load + exec, would
+/// pass half the SLA — prefer free No-CC devices (their loads are
+/// ~2.7× cheaper); with comfortable headroom behave like affinity, so
+/// the fleet still avoids needless swaps.
+pub struct CcAware;
+
+impl CcAware {
+    fn tight(view: &ModelView, sla_s: f64) -> bool {
+        view.oldest_wait_s + view.est_load_s + view.est_exec_s
+            > 0.5 * sla_s
+    }
+}
+
+impl Placement for CcAware {
+    fn name(&self) -> &'static str {
+        "cc-aware"
+    }
+
+    fn place(&self, ctx: &SchedContext, view: &ModelView, free: &[usize])
+             -> usize {
+        if Self::tight(view, ctx.sla_s) {
+            let nocc: Vec<usize> = free.iter().copied()
+                .filter(|&d| ctx.devices[d].mode == CcMode::Off)
+                .collect();
+            if !nocc.is_empty() {
+                return sticky_or_least_loaded(ctx, &view.model, &nocc);
+            }
+        }
+        sticky_or_least_loaded(ctx, &view.model, free)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::strategy::DeviceView;
+
+    fn device(id: usize, mode: CcMode, resident: Option<&str>, busy_s: f64)
+              -> DeviceView {
+        DeviceView {
+            id,
+            mode,
+            resident: resident.map(|s| s.to_string()),
+            busy: false,
+            busy_s,
+            dispatched: 0,
+        }
+    }
+
+    fn view(model: &str, wait: f64) -> ModelView {
+        ModelView {
+            model: model.into(),
+            len: 4,
+            oldest_wait_s: wait,
+            obs: 8,
+            rate_rps: 2.0,
+            est_load_s: 0.5,
+            est_exec_s: 0.5,
+        }
+    }
+
+    fn ctx(devices: Vec<DeviceView>) -> SchedContext {
+        SchedContext {
+            now_s: 10.0,
+            devices,
+            queues: vec![view("a", 0.1)],
+            sla_s: 6.0,
+            timeout_s: 3.0,
+        }
+    }
+
+    #[test]
+    fn affinity_routes_to_resident_device() {
+        let c = ctx(vec![device(0, CcMode::Off, None, 5.0),
+                         device(1, CcMode::Off, Some("a"), 9.0)]);
+        let p = Affinity;
+        assert_eq!(p.place(&c, &view("a", 0.1), &[0, 1]), 1,
+                   "resident device wins even when busier");
+        assert_eq!(p.place(&c, &view("b", 0.1), &[0, 1]), 0,
+                   "unplaced model goes least-loaded");
+    }
+
+    #[test]
+    fn affinity_ignores_resident_outside_free_set() {
+        let c = ctx(vec![device(0, CcMode::Off, None, 5.0),
+                         device(1, CcMode::Off, Some("a"), 9.0)]);
+        assert_eq!(Affinity.place(&c, &view("a", 0.1), &[0]), 0);
+    }
+
+    #[test]
+    fn round_robin_cycles_free_devices() {
+        let c = ctx(vec![device(0, CcMode::Off, None, 0.0),
+                         device(1, CcMode::Off, None, 0.0),
+                         device(2, CcMode::Off, None, 0.0)]);
+        let p = RoundRobin::default();
+        let v = view("a", 0.1);
+        assert_eq!(p.place(&c, &v, &[0, 1, 2]), 0);
+        assert_eq!(p.place(&c, &v, &[0, 1, 2]), 1);
+        assert_eq!(p.place(&c, &v, &[0, 1, 2]), 2);
+        assert_eq!(p.place(&c, &v, &[0, 1, 2]), 0);
+        // busy device 1 is skipped without stalling the cycle
+        assert_eq!(p.place(&c, &v, &[0, 2]), 2,
+                   "cursor at 1, but 1 is not free");
+    }
+
+    #[test]
+    fn least_loaded_balances_busy_seconds() {
+        let c = ctx(vec![device(0, CcMode::Off, None, 7.0),
+                         device(1, CcMode::Off, None, 2.0),
+                         device(2, CcMode::Off, None, 2.0)]);
+        assert_eq!(LeastLoaded.place(&c, &view("a", 0.1), &[0, 1, 2]), 1,
+                   "ties break to the lowest id");
+    }
+
+    #[test]
+    fn cc_aware_steers_tight_requests_to_nocc() {
+        let c = ctx(vec![device(0, CcMode::On, Some("a"), 0.0),
+                         device(1, CcMode::Off, None, 5.0)]);
+        let p = CcAware;
+        // comfortable headroom: affinity keeps "a" on the CC device
+        assert_eq!(p.place(&c, &view("a", 0.1), &[0, 1]), 0);
+        // tight headroom (wait 2.5 + load 0.5 + exec 0.5 > 3.0):
+        // prefer the No-CC device even though it forces a swap
+        assert_eq!(p.place(&c, &view("a", 2.5), &[0, 1]), 1);
+    }
+
+    #[test]
+    fn cc_aware_falls_back_when_no_nocc_is_free() {
+        let c = ctx(vec![device(0, CcMode::On, None, 1.0),
+                         device(1, CcMode::On, None, 0.0)]);
+        assert_eq!(CcAware.place(&c, &view("a", 5.0), &[0, 1]), 1);
+    }
+
+    #[test]
+    fn single_device_fleet_always_places_on_device_zero() {
+        // the devices=1 parity guarantee: every policy is a constant
+        let c = ctx(vec![device(0, CcMode::Off, Some("a"), 3.0)]);
+        for entry in PLACEMENTS {
+            let p = (entry.make)();
+            assert_eq!(p.place(&c, &view("b", 4.0), &[0]), 0,
+                       "{}", entry.name);
+        }
+    }
+
+    #[test]
+    fn placement_names_roundtrip() {
+        for name in placement_names() {
+            assert_eq!(placement_by_name(name).unwrap().name(), name);
+        }
+        let err = placement_by_name("random").unwrap_err().to_string();
+        for name in placement_names() {
+            assert!(err.contains(name),
+                    "error message must list {name:?}: {err}");
+        }
+    }
+}

@@ -168,4 +168,54 @@ mod tests {
         assert!(q.expire(11.0, 6.0).is_empty());
         assert_eq!(q.expire(11.1, 6.0).len(), 1);
     }
+
+    #[test]
+    fn expire_exactly_at_deadline_keeps_request() {
+        // §III-C3 boundary, matching SlaTracker::on_complete's
+        // `latency <= sla` rule: a request whose age equals the SLA is
+        // still servable, and only strictly-older requests expire.
+        let mut q = ModelQueues::new();
+        q.push(req(1, "a", 4.0));
+        assert!(q.expire(10.0, 6.0).is_empty(),
+                "age == SLA must not expire");
+        assert_eq!(q.len("a"), 1);
+        let dropped = q.expire(10.0 + 1e-9, 6.0);
+        assert_eq!(dropped.len(), 1, "just past the deadline expires");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn expire_interleaved_with_partial_drain_counts_each_once() {
+        // The partial-batch plan pops a sub-OBS batch and (on OOM) can
+        // push a tail back to the queue front; expiry running between
+        // those steps must see each request exactly once — either
+        // popped for execution or expired, never both, none lost.
+        let mut q = ModelQueues::new();
+        for i in 0..6 {
+            q.push(req(i, "a", i as f64)); // arrivals at 0..5
+        }
+        // partial drain pops the two oldest
+        let batch: Vec<u64> = q.pop_n("a", 2).iter().map(|r| r.id)
+            .collect();
+        assert_eq!(batch, vec![0, 1]);
+        // OOM guard returns one row to the queue front
+        q.push_front("a", vec![req(1, "a", 1.0)]);
+        // now=7.5, sla=6: ages 6.5/5.5/... -> only id 1 expires
+        let expired: Vec<u64> = q.expire(7.5, 6.0).iter().map(|r| r.id)
+            .collect();
+        assert_eq!(expired, vec![1],
+                   "only the requeued overdue head expires");
+        // remaining queue is exactly the untouched tail, in order
+        let rest: Vec<u64> = q.pop_n("a", 10).iter().map(|r| r.id)
+            .collect();
+        assert_eq!(rest, vec![2, 3, 4, 5]);
+        // final accounting partition — executed {0} (id 1 was returned
+        // by the OOM guard before executing), expired {1}, still
+        // queued {2..5} — disjoint and complete: each counted once
+        let mut all: Vec<u64> = vec![0];
+        all.extend(&expired);
+        all.extend(&rest);
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3, 4, 5]);
+    }
 }

@@ -32,6 +32,8 @@ pub struct CompletedRequest {
     pub batch_rows: usize,
     /// Whether the batch required a model swap first.
     pub caused_swap: bool,
+    /// Fleet device the batch executed on.
+    pub device: usize,
 }
 
 impl CompletedRequest {
@@ -61,6 +63,7 @@ mod tests {
             batch: 8,
             batch_rows: 5,
             caused_swap: true,
+            device: 0,
         };
         assert!((c.latency_s() - 3.0).abs() < 1e-12);
         assert!((c.queue_wait_s() - 2.5).abs() < 1e-12);

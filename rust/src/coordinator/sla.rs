@@ -73,6 +73,7 @@ mod tests {
             batch: 1,
             batch_rows: 1,
             caused_swap: false,
+            device: 0,
         }
     }
 

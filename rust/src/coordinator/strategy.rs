@@ -14,7 +14,36 @@
 //!
 //! Strategies are pure decision functions over a [`SchedContext`]
 //! snapshot, which makes them unit-testable and reusable verbatim by the
-//! discrete-event simulator.
+//! discrete-event simulator.  On an N-device fleet the snapshot carries
+//! one [`DeviceView`] per device; strategies pick *what* to run (model +
+//! batch size) and normally leave *where* (`Decision::Process::device`)
+//! to the placement policy (`coordinator::placement`) — only the
+//! Partial Batch drain pins its device, because "the resident model"
+//! is a per-device notion.
+//!
+//! The strategy table ([`STRATEGIES`]) is the single source of truth
+//! for lookup, `--help`, and the unknown-name error message, so CLI
+//! docs and errors cannot drift.
+
+use crate::gpu::CcMode;
+
+/// Scheduler-visible state of one fleet device.
+#[derive(Debug, Clone)]
+pub struct DeviceView {
+    /// Device id (index into the fleet).
+    pub id: usize,
+    /// The device's confidential-computing mode.
+    pub mode: CcMode,
+    /// Model currently resident on this device, if any.
+    pub resident: Option<String>,
+    /// True while a previously dispatched batch is still executing
+    /// (virtual time); busy devices cannot take new work.
+    pub busy: bool,
+    /// Cumulative seconds this device has spent swapping + executing.
+    pub busy_s: f64,
+    /// Batches dispatched to this device so far.
+    pub dispatched: u64,
+}
 
 /// Scheduler-visible state of one model queue.
 #[derive(Debug, Clone)]
@@ -28,7 +57,8 @@ pub struct ModelView {
     pub obs: usize,
     /// Estimated arrival rate, req/s (0 when unknown).
     pub rate_rps: f64,
-    /// Estimated model load time in the current CC mode, seconds.
+    /// Estimated model load time on the most favourable free device,
+    /// seconds.
     pub est_load_s: f64,
     /// Estimated batch execution time at OBS, seconds.
     pub est_exec_s: f64,
@@ -38,8 +68,9 @@ pub struct ModelView {
 #[derive(Debug, Clone)]
 pub struct SchedContext {
     pub now_s: f64,
-    /// Currently resident model, if any.
-    pub resident: Option<String>,
+    /// One view per fleet device (a single entry on the paper's
+    /// one-GPU system).
+    pub devices: Vec<DeviceView>,
     /// Non-empty queues only.
     pub queues: Vec<ModelView>,
     /// The experiment SLA, seconds.
@@ -48,13 +79,35 @@ pub struct SchedContext {
     pub timeout_s: f64,
 }
 
+impl SchedContext {
+    /// Devices that can take a batch right now.
+    pub fn free_devices(&self) -> impl Iterator<Item = &DeviceView> {
+        self.devices.iter().filter(|d| !d.busy)
+    }
+
+    /// Id of a free device where `model` is already resident
+    /// (dispatching there avoids a swap).
+    pub fn resident_on_free(&self, model: &str) -> Option<usize> {
+        self.free_devices()
+            .find(|d| d.resident.as_deref() == Some(model))
+            .map(|d| d.id)
+    }
+
+    /// Models resident on free devices, in device-id order.
+    pub fn free_residents(&self) -> Vec<&str> {
+        self.free_devices().filter_map(|d| d.resident.as_deref())
+            .collect()
+    }
+}
+
 /// What to do this tick.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Decision {
     /// Nothing is ready; sleep a tick.
     Wait,
-    /// Dispatch up to `take` requests from `model`'s queue.
-    Process { model: String, take: usize },
+    /// Dispatch up to `take` requests from `model`'s queue.  `device`
+    /// pins a fleet device; `None` delegates to the placement policy.
+    Process { model: String, take: usize, device: Option<usize> },
 }
 
 /// A scheduling strategy (Table I row).
@@ -63,36 +116,64 @@ pub trait Strategy: Send {
     fn decide(&self, ctx: &SchedContext) -> Decision;
 }
 
-pub const STRATEGY_NAMES: &[&str] = &[
-    "best-batch",
-    "best-batch+timer",
-    "select-batch+timer",
-    "best-batch+partial+timer",
+/// One Table I strategy: CLI name + constructor.
+pub struct StrategyEntry {
+    pub name: &'static str,
+    pub make: fn() -> Box<dyn Strategy>,
+}
+
+fn make_best_batch() -> Box<dyn Strategy> {
+    Box::new(BestBatch)
+}
+
+fn make_best_batch_timer() -> Box<dyn Strategy> {
+    Box::new(BestBatchTimer)
+}
+
+fn make_select_batch_timer() -> Box<dyn Strategy> {
+    Box::new(SelectBatchTimer)
+}
+
+fn make_best_batch_partial_timer() -> Box<dyn Strategy> {
+    Box::new(BestBatchPartialTimer::default())
+}
+
+/// The strategy table — drives `strategy_by_name`, `--help`, and the
+/// unknown-name error, so the three cannot drift.
+pub const STRATEGIES: &[StrategyEntry] = &[
+    StrategyEntry { name: "best-batch",
+                    make: make_best_batch },
+    StrategyEntry { name: "best-batch+timer",
+                    make: make_best_batch_timer },
+    StrategyEntry { name: "select-batch+timer",
+                    make: make_select_batch_timer },
+    StrategyEntry { name: "best-batch+partial+timer",
+                    make: make_best_batch_partial_timer },
 ];
+
+/// Valid strategy names, in table order.
+pub fn strategy_names() -> Vec<&'static str> {
+    STRATEGIES.iter().map(|e| e.name).collect()
+}
 
 /// Instantiate a strategy by CLI name.
 pub fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn Strategy>> {
-    match name {
-        "best-batch" => Ok(Box::new(BestBatch)),
-        "best-batch+timer" => Ok(Box::new(BestBatchTimer)),
-        "select-batch+timer" => Ok(Box::new(SelectBatchTimer)),
-        "best-batch+partial+timer" =>
-            Ok(Box::new(BestBatchPartialTimer::default())),
-        other => anyhow::bail!(
-            "unknown strategy {other:?} (have {STRATEGY_NAMES:?})"),
-    }
+    STRATEGIES.iter().find(|e| e.name == name).map(|e| (e.make)())
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown strategy {name:?} (have {:?})", strategy_names()))
 }
 
 // ---------------------------------------------------------------- helpers
 
-/// Among *ready* (not overdue) candidates, prefer the resident model —
-/// avoiding a swap is free throughput — then the longest-waiting head.
+/// Among *ready* (not overdue) candidates, prefer a model already
+/// resident on a free device — avoiding a swap is free throughput —
+/// then the longest-waiting head.
 fn pick_ready<'a>(ctx: &'a SchedContext, candidates: &[&'a ModelView])
                   -> Option<&'a ModelView> {
-    if let Some(res) = &ctx.resident {
-        if let Some(v) = candidates.iter().find(|v| &v.model == res) {
-            return Some(v);
-        }
+    if let Some(v) = candidates.iter()
+        .find(|v| ctx.resident_on_free(&v.model).is_some())
+    {
+        return Some(v);
     }
     pick_oldest(candidates)
 }
@@ -125,7 +206,7 @@ impl Strategy for BestBatch {
             ctx.queues.iter().filter(|v| v.len >= v.obs).collect();
         match pick_ready(ctx, &full) {
             Some(v) => Decision::Process { model: v.model.clone(),
-                                           take: v.obs },
+                                           take: v.obs, device: None },
             None => Decision::Wait,
         }
     }
@@ -146,7 +227,8 @@ impl Strategy for BestBatchTimer {
             .filter(|v| v.oldest_wait_s >= ctx.timeout_s).collect();
         if let Some(v) = pick_oldest(&overdue) {
             return Decision::Process { model: v.model.clone(),
-                                       take: v.len.min(v.obs) };
+                                       take: v.len.min(v.obs),
+                                       device: None };
         }
         BestBatch.decide(ctx)
     }
@@ -187,7 +269,8 @@ impl Strategy for SelectBatchTimer {
         if let Some(v) = pick_oldest(&overdue) {
             let target = Self::target_batch(v, ctx.sla_s);
             return Decision::Process { model: v.model.clone(),
-                                       take: v.len.min(target) };
+                                       take: v.len.min(target),
+                                       device: None };
         }
         let ready: Vec<&ModelView> = ctx.queues.iter()
             .filter(|v| v.len >= Self::target_batch(v, ctx.sla_s))
@@ -196,7 +279,8 @@ impl Strategy for SelectBatchTimer {
             Some(v) => {
                 let target = Self::target_batch(v, ctx.sla_s);
                 Decision::Process { model: v.model.clone(),
-                                    take: v.len.min(target) }
+                                    take: v.len.min(target),
+                                    device: None }
             }
             None => Decision::Wait,
         }
@@ -204,9 +288,9 @@ impl Strategy for SelectBatchTimer {
 }
 
 /// Strategy 4: Best Batch + Partial Batch + Timer — before a decision
-/// would swap to another model, drain the resident model's incomplete
-/// batch first ("always processes incomplete batches for the currently
-/// loaded model before switching", §III-C4).
+/// would swap a device to another model, drain a resident model's
+/// incomplete batch first ("always processes incomplete batches for the
+/// currently loaded model before switching", §III-C4).
 ///
 /// The drain happens at most ONCE per residency: with open-loop
 /// arrivals the resident queue refills during the drain itself, and an
@@ -214,15 +298,26 @@ impl Strategy for SelectBatchTimer {
 /// other model (observed: 3 swaps per minute-long run, two models
 /// expiring wholesale).  One final batch before the swap is the paper's
 /// stated intent ("aiming to increase throughput while minimizing
-/// swaps") without the livelock.
+/// swaps") without the livelock.  The drain pins its device — "the
+/// resident" is a per-device notion on a fleet, and each free-device
+/// resident gets at most one drain per imminent swap (a single shared
+/// slot would let two residents ping-pong drains forever, starving the
+/// incoming model).  The drain ledger clears when the swap finally
+/// goes through; a residency that survives the swap (placement routed
+/// it to another device) regains drain eligibility, which is the
+/// conservative direction — one extra final batch, never a lost one.
 pub struct BestBatchPartialTimer {
-    /// Residency we already granted a final drain to.
-    drained_for: std::cell::RefCell<Option<String>>,
+    /// Residencies already granted their final drain, cleared when the
+    /// swap goes through.
+    drained: std::cell::RefCell<std::collections::HashSet<String>>,
 }
 
 impl Default for BestBatchPartialTimer {
     fn default() -> Self {
-        BestBatchPartialTimer { drained_for: std::cell::RefCell::new(None) }
+        BestBatchPartialTimer {
+            drained: std::cell::RefCell::new(
+                std::collections::HashSet::new()),
+        }
     }
 }
 
@@ -234,27 +329,27 @@ impl Strategy for BestBatchPartialTimer {
     fn decide(&self, ctx: &SchedContext) -> Decision {
         let inner = BestBatchTimer.decide(ctx);
         if let Decision::Process { model, .. } = &inner {
-            if let Some(res) = &ctx.resident {
-                if model != res
-                    && self.drained_for.borrow().as_deref() != Some(res)
-                {
-                    // a swap is imminent: drain the resident once
+            if ctx.resident_on_free(model).is_none() {
+                // a swap is imminent: drain one free-device resident
+                // with queued work, once per residency
+                for res in ctx.free_residents() {
+                    if self.drained.borrow().contains(res) {
+                        continue;
+                    }
                     if let Some(v) = ctx.queues.iter()
-                        .find(|v| &v.model == res && v.len > 0)
+                        .find(|v| v.model == res && v.len > 0)
                     {
-                        *self.drained_for.borrow_mut() = Some(res.clone());
+                        self.drained.borrow_mut().insert(res.to_string());
                         return Decision::Process {
-                            model: res.clone(),
+                            model: res.to_string(),
                             take: v.len.min(v.obs),
+                            device: ctx.resident_on_free(res),
                         };
                     }
                 }
-            }
-        }
-        if let Decision::Process { model, .. } = &inner {
-            // the swap goes through: the next residency gets a fresh drain
-            if Some(model.as_str()) != ctx.resident.as_deref() {
-                *self.drained_for.borrow_mut() = None;
+                // every resident had its final batch: the swap goes
+                // through and the next residencies drain afresh
+                self.drained.borrow_mut().clear();
             }
         }
         inner
@@ -264,6 +359,17 @@ impl Strategy for BestBatchPartialTimer {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    fn device(id: usize, resident: Option<&str>) -> DeviceView {
+        DeviceView {
+            id,
+            mode: CcMode::Off,
+            resident: resident.map(|s| s.to_string()),
+            busy: false,
+            busy_s: 0.0,
+            dispatched: 0,
+        }
+    }
 
     fn view(model: &str, len: usize, wait: f64) -> ModelView {
         ModelView {
@@ -280,11 +386,15 @@ mod tests {
     fn ctx(resident: Option<&str>, queues: Vec<ModelView>) -> SchedContext {
         SchedContext {
             now_s: 100.0,
-            resident: resident.map(|s| s.to_string()),
+            devices: vec![device(0, resident)],
             queues,
             sla_s: 6.0,
             timeout_s: 3.0,
         }
+    }
+
+    fn process(model: &str, take: usize) -> Decision {
+        Decision::Process { model: model.into(), take, device: None }
     }
 
     #[test]
@@ -296,22 +406,30 @@ mod tests {
     #[test]
     fn best_batch_fires_at_obs() {
         let c = ctx(None, vec![view("a", 8, 0.1)]);
-        assert_eq!(BestBatch.decide(&c),
-                   Decision::Process { model: "a".into(), take: 8 });
+        assert_eq!(BestBatch.decide(&c), process("a", 8));
     }
 
     #[test]
     fn best_batch_prefers_resident_on_tie() {
         let c = ctx(Some("b"), vec![view("a", 9, 5.0), view("b", 8, 1.0)]);
-        assert_eq!(BestBatch.decide(&c),
-                   Decision::Process { model: "b".into(), take: 8 });
+        assert_eq!(BestBatch.decide(&c), process("b", 8));
+    }
+
+    #[test]
+    fn busy_device_residency_does_not_count() {
+        // "b" is resident only on a busy device: the swap-avoidance
+        // preference must ignore it and pick the older head instead
+        let mut c = ctx(Some("b"), vec![view("a", 9, 5.0),
+                                        view("b", 8, 1.0)]);
+        c.devices[0].busy = true;
+        c.devices.push(device(1, None));
+        assert_eq!(BestBatch.decide(&c), process("a", 8));
     }
 
     #[test]
     fn timer_forces_partial_batch() {
         let c = ctx(None, vec![view("a", 3, 3.5)]);
-        assert_eq!(BestBatchTimer.decide(&c),
-                   Decision::Process { model: "a".into(), take: 3 });
+        assert_eq!(BestBatchTimer.decide(&c), process("a", 3));
     }
 
     #[test]
@@ -319,15 +437,13 @@ mod tests {
         let mut v = view("a", 20, 4.0);
         v.obs = 8;
         let c = ctx(None, vec![v]);
-        assert_eq!(BestBatchTimer.decide(&c),
-                   Decision::Process { model: "a".into(), take: 8 });
+        assert_eq!(BestBatchTimer.decide(&c), process("a", 8));
     }
 
     #[test]
     fn timer_falls_back_to_best_batch() {
         let c = ctx(None, vec![view("a", 8, 0.5)]);
-        assert_eq!(BestBatchTimer.decide(&c),
-                   Decision::Process { model: "a".into(), take: 8 });
+        assert_eq!(BestBatchTimer.decide(&c), process("a", 8));
     }
 
     #[test]
@@ -377,8 +493,7 @@ mod tests {
         v.rate_rps = 2.0;
         let mut c = ctx(None, vec![v]);
         c.sla_s = 2.0; // desired 1.0 -> target 2
-        assert_eq!(SelectBatchTimer.decide(&c),
-                   Decision::Process { model: "a".into(), take: 2 });
+        assert_eq!(SelectBatchTimer.decide(&c), process("a", 2));
     }
 
     #[test]
@@ -387,30 +502,46 @@ mod tests {
         let c = ctx(Some("a"),
                     vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
         assert_eq!(BestBatchPartialTimer::default().decide(&c),
-                   Decision::Process { model: "a".into(), take: 2 });
+                   Decision::Process { model: "a".into(), take: 2,
+                                       device: Some(0) });
     }
 
     #[test]
     fn partial_swaps_once_resident_is_drained() {
         let c = ctx(Some("a"), vec![view("b", 3, 4.0)]);
         assert_eq!(BestBatchPartialTimer::default().decide(&c),
-                   Decision::Process { model: "b".into(), take: 3 });
+                   process("b", 3));
+    }
+
+    #[test]
+    fn partial_drain_pins_the_residents_device() {
+        // resident "a" lives on device 1 of a 2-device fleet: the drain
+        // must target that device, not defer to placement
+        let mut c = ctx(None, vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+        c.devices.push(device(1, Some("a")));
+        assert_eq!(BestBatchPartialTimer::default().decide(&c),
+                   Decision::Process { model: "a".into(), take: 2,
+                                       device: Some(1) });
     }
 
     #[test]
     fn all_strategies_wait_on_empty() {
         let c = ctx(Some("a"), vec![]);
-        for name in STRATEGY_NAMES {
-            let s = strategy_by_name(name).unwrap();
-            assert_eq!(s.decide(&c), Decision::Wait, "{name}");
+        for entry in STRATEGIES {
+            let s = (entry.make)();
+            assert_eq!(s.decide(&c), Decision::Wait, "{}", entry.name);
         }
     }
 
     #[test]
     fn strategy_names_roundtrip() {
-        for name in STRATEGY_NAMES {
-            assert_eq!(strategy_by_name(name).unwrap().name(), *name);
+        for name in strategy_names() {
+            assert_eq!(strategy_by_name(name).unwrap().name(), name);
         }
-        assert!(strategy_by_name("fifo").is_err());
+        let err = strategy_by_name("fifo").unwrap_err().to_string();
+        for name in strategy_names() {
+            assert!(err.contains(name),
+                    "error message must list {name:?}: {err}");
+        }
     }
 }

@@ -1,18 +1,26 @@
 //! The `ExecBackend` seam: what it means to *execute* a scheduling
-//! decision.
+//! decision on a fleet device.
 //!
-//! The engine owns ingest, queues, strategy, SLA accounting and the
-//! `RunSummary`; a backend owns residency, execution and
-//! occupancy/crypto accounting.  Two implementations ship:
+//! The engine owns ingest, queues, strategy + placement, per-device
+//! busy-until timelines, SLA accounting and the `RunSummary`; a backend
+//! owns residency, execution and occupancy/crypto accounting for N
+//! devices addressed by id.  Two implementations ship:
 //!
-//! * [`crate::engine::RealBackend`] — `SimGpu` + `Registry` +
-//!   `SwapManager`: real DMA (optionally CC-sealed), real PJRT
-//!   execution.
+//! * [`crate::engine::RealBackend`] — a `DeviceSet` of `SimGpu`s +
+//!   `Registry` + one `SwapManager` per device: real DMA (optionally
+//!   CC-sealed), real PJRT execution.
 //! * [`crate::engine::DesBackend`] — the calibrated [`CostModel`]:
 //!   every cost is a table lookup, virtual time only.
 //!
-//! Future backends (multi-GPU sharding, trace replay) implement this
-//! trait instead of hand-rolling a third serve loop.
+//! Time protocol: in wall-clock runs costs simply elapse inside the
+//! backend calls.  In virtual-time runs the backend *reports* modeled
+//! costs in [`SwapOutcome`]/[`BatchOutcome`] and never advances the
+//! clock — the engine folds the costs into the dispatched device's
+//! busy-until timeline, which is what lets N devices execute
+//! concurrently in virtual time.
+//!
+//! Future backends (trace replay, remote pools) implement this trait
+//! instead of hand-rolling another serve loop.
 //!
 //! [`CostModel`]: crate::sim::CostModel
 
@@ -20,6 +28,7 @@ use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
 use crate::engine::clock::Clock;
+use crate::gpu::CcMode;
 
 /// Timing of one residency change, in the run's time domain.
 #[derive(Debug, Clone, Copy, Default)]
@@ -42,7 +51,9 @@ pub struct BatchOutcome {
     pub tokens: Vec<Vec<i32>>,
     /// Artifact batch size used (>= requests.len()).
     pub artifact_batch: usize,
-    /// When execution began, on the engine's clock.
+    /// When execution began, on the engine's clock (wall runs only;
+    /// in virtual time the engine computes the device timeline from
+    /// the reported costs and ignores this).
     pub exec_start_s: f64,
     pub exec_s: f64,
     pub io_s: f64,
@@ -61,14 +72,15 @@ pub struct DeviceSnapshot {
 }
 
 /// Pluggable execution backend behind the single serve loop.
-///
-/// Time protocol: methods receive the engine's [`Clock`] and must
-/// account their own costs through it — real backends let wall time
-/// pass (and call `advance` only when running under virtual costs),
-/// the DES backend advances virtual time by table lookups.
 pub trait ExecBackend {
     /// Short backend name for labels/diagnostics ("real" | "des").
     fn kind(&self) -> &'static str;
+
+    /// Number of fleet devices this backend drives.
+    fn n_devices(&self) -> usize;
+
+    /// CC mode of `device`.
+    fn mode(&self, device: usize) -> CcMode;
 
     /// Every model this backend can serve.
     fn model_names(&self) -> Vec<String>;
@@ -83,32 +95,32 @@ pub trait ExecBackend {
     /// Profiled optimal batch size for `model` (§III-D2).
     fn obs(&self, model: &str) -> usize;
 
-    /// Estimated load seconds for `model` in the current CC mode
+    /// Estimated load seconds for `model` in `device`'s CC mode
     /// (SelectBatch's `desired_latency` term).
-    fn est_load_s(&self, model: &str) -> f64;
+    fn est_load_s(&self, model: &str, device: usize) -> f64;
 
     /// Seed value for the engine's per-model exec-time EWMA.
     fn initial_exec_est_s(&self, model: &str) -> f64;
 
-    /// Currently resident model, if any.
-    fn resident(&self) -> Option<String>;
+    /// Model currently resident on `device`, if any.
+    fn resident(&self, device: usize) -> Option<String>;
 
-    /// Make `model` resident, swapping if needed (the expensive
-    /// CC-sensitive step).
-    fn ensure_resident(&mut self, clock: &mut dyn Clock, model: &str)
-                       -> anyhow::Result<SwapOutcome>;
+    /// Make `model` resident on `device`, swapping if needed (the
+    /// expensive CC-sensitive step).
+    fn ensure_resident(&mut self, clock: &mut dyn Clock, device: usize,
+                       model: &str) -> anyhow::Result<SwapOutcome>;
 
     /// Pop up to `take` requests for `model` and execute them as one
-    /// batch.  `Ok(None)` when the queue was empty.
+    /// batch on `device`.  `Ok(None)` when the queue was empty.
     fn execute_batch(&mut self, clock: &mut dyn Clock,
-                     queues: &mut ModelQueues, model: &str, take: usize)
-                     -> anyhow::Result<Option<BatchOutcome>>;
+                     queues: &mut ModelQueues, device: usize, model: &str,
+                     take: usize) -> anyhow::Result<Option<BatchOutcome>>;
 
-    /// Occupancy counters for the monitor thread.
-    fn snapshot(&self) -> DeviceSnapshot;
+    /// Occupancy counters for `device` (monitor thread).
+    fn snapshot(&self, device: usize) -> DeviceSnapshot;
 
-    /// Swap/load/crypto totals for the run summary.
-    fn swap_stats(&self) -> SwapStats;
+    /// Swap/load/crypto totals for `device` (run summary).
+    fn swap_stats(&self, device: usize) -> SwapStats;
 
     /// End of run: release residency and device state.
     fn teardown(&mut self);

@@ -2,10 +2,12 @@
 //!
 //! Every cost the real backend pays for real (DMA throttles, crypto,
 //! PJRT execution) becomes a table lookup in the measured
-//! [`CostModel`], and the backend advances the engine's `VirtualClock`
-//! by exactly those amounts.  Payload content never exists here, which
-//! is what makes full-grid sweeps (72 cells, Fig 5–7) take milliseconds
-//! instead of hours.
+//! [`CostModel`]; the engine folds the reported costs into the
+//! dispatched device's busy-until timeline (see `engine::backend` time
+//! protocol).  Payload content never exists here, which is what makes
+//! full-grid sweeps (72 cells, Fig 5–7) take milliseconds instead of
+//! hours.  Each fleet device has its own CC mode and residency, so a
+//! mixed CC/No-CC fleet charges per-device load and I/O costs.
 //!
 //! Known abstraction boundary: the DES models no device *memory*, so
 //! it always dispatches `batch_size_at_least(rows)` where the real
@@ -29,20 +31,25 @@ use crate::sim::CostModel;
 pub struct DesBackend<'a> {
     manifest: &'a Manifest,
     costs: &'a CostModel,
-    mode: CcMode,
-    resident: Option<String>,
-    stats: SwapStats,
+    /// Per-device CC mode (the fleet's mix).
+    modes: Vec<CcMode>,
+    /// Per-device resident model.
+    resident: Vec<Option<String>>,
+    /// Per-device modeled swap accounting.
+    stats: Vec<SwapStats>,
 }
 
 impl<'a> DesBackend<'a> {
     pub fn new(cfg: &RunConfig, manifest: &'a Manifest,
                costs: &'a CostModel) -> DesBackend<'a> {
+        let modes = cfg.fleet_modes();
+        let n = modes.len();
         DesBackend {
             manifest,
             costs,
-            mode: cfg.mode,
-            resident: None,
-            stats: SwapStats::default(),
+            modes,
+            resident: vec![None; n],
+            stats: vec![SwapStats::default(); n],
         }
     }
 }
@@ -50,6 +57,14 @@ impl<'a> DesBackend<'a> {
 impl ExecBackend for DesBackend<'_> {
     fn kind(&self) -> &'static str {
         "des"
+    }
+
+    fn n_devices(&self) -> usize {
+        self.modes.len()
+    }
+
+    fn mode(&self, device: usize) -> CcMode {
+        self.modes[device]
     }
 
     fn model_names(&self) -> Vec<String> {
@@ -71,8 +86,9 @@ impl ExecBackend for DesBackend<'_> {
         self.costs.costs(model).map(|mc| mc.obs).unwrap_or(1)
     }
 
-    fn est_load_s(&self, model: &str) -> f64 {
-        self.costs.costs(model).map(|mc| mc.load_s(self.mode))
+    fn est_load_s(&self, model: &str, device: usize) -> f64 {
+        self.costs.costs(model)
+            .map(|mc| mc.load_s(self.modes[device]))
             .unwrap_or(0.0)
     }
 
@@ -80,33 +96,33 @@ impl ExecBackend for DesBackend<'_> {
         self.costs.costs(model).map(|mc| mc.exec_s(mc.obs)).unwrap_or(0.2)
     }
 
-    fn resident(&self) -> Option<String> {
-        self.resident.clone()
+    fn resident(&self, device: usize) -> Option<String> {
+        self.resident[device].clone()
     }
 
-    fn ensure_resident(&mut self, clock: &mut dyn Clock, model: &str)
-                       -> anyhow::Result<SwapOutcome> {
-        if self.resident.as_deref() == Some(model) {
+    fn ensure_resident(&mut self, _clock: &mut dyn Clock, device: usize,
+                       model: &str) -> anyhow::Result<SwapOutcome> {
+        if self.resident[device].as_deref() == Some(model) {
             return Ok(SwapOutcome::default());
         }
         let mc = self.costs.costs(model)?;
         let mut out = SwapOutcome { swapped: true, ..Default::default() };
-        if self.resident.is_some() {
+        if self.resident[device].is_some() {
             out.unload_s = mc.unload_s;
         }
-        out.load_s = mc.load_s(self.mode);
-        clock.advance(out.unload_s + out.load_s);
-        self.resident = Some(model.to_string());
-        self.stats.swap_count += 1;
-        self.stats.total_load_s += out.load_s;
-        self.stats.total_unload_s += out.unload_s;
-        self.stats.load_samples.push((model.to_string(), out.load_s));
+        out.load_s = mc.load_s(self.modes[device]);
+        self.resident[device] = Some(model.to_string());
+        let stats = &mut self.stats[device];
+        stats.swap_count += 1;
+        stats.total_load_s += out.load_s;
+        stats.total_unload_s += out.unload_s;
+        stats.load_samples.push((model.to_string(), out.load_s));
         Ok(out)
     }
 
-    fn execute_batch(&mut self, clock: &mut dyn Clock,
-                     queues: &mut ModelQueues, model: &str, take: usize)
-                     -> anyhow::Result<Option<BatchOutcome>> {
+    fn execute_batch(&mut self, _clock: &mut dyn Clock,
+                     queues: &mut ModelQueues, device: usize, model: &str,
+                     take: usize) -> anyhow::Result<Option<BatchOutcome>> {
         let requests = queues.pop_n(model, take.max(1));
         if requests.is_empty() {
             return Ok(None);
@@ -115,32 +131,33 @@ impl ExecBackend for DesBackend<'_> {
         let mc = self.costs.costs(model)?;
         let artifact_batch = spec.batch_size_at_least(requests.len());
         let exec_s = mc.exec_s(artifact_batch);
-        let io_s = self.costs.io_s_per_row(self.mode)
+        let io_s = self.costs.io_s_per_row(self.modes[device])
             * requests.len() as f64;
-        let exec_start_s = clock.now_s();
-        clock.advance(exec_s + io_s);
         Ok(Some(BatchOutcome {
             requests,
             tokens: Vec::new(),
             artifact_batch,
-            exec_start_s,
+            // the engine computes the device timeline from the costs
+            exec_start_s: 0.0,
             exec_s,
             io_s,
         }))
     }
 
-    fn snapshot(&self) -> DeviceSnapshot {
+    fn snapshot(&self, device: usize) -> DeviceSnapshot {
         DeviceSnapshot {
-            swaps: self.stats.swap_count,
+            swaps: self.stats[device].swap_count,
             ..Default::default()
         }
     }
 
-    fn swap_stats(&self) -> SwapStats {
-        self.stats.clone()
+    fn swap_stats(&self, device: usize) -> SwapStats {
+        self.stats[device].clone()
     }
 
     fn teardown(&mut self) {
-        self.resident = None;
+        for r in self.resident.iter_mut() {
+            *r = None;
+        }
     }
 }

@@ -1,4 +1,4 @@
-//! The `Engine` — the crate's single serve loop.
+//! The `Engine` — the crate's single serve loop, fleet-aware.
 //!
 //! The paper's evaluation is one control loop — ingest → queues →
 //! strategy → swap → execute → record (§III-B) — run in two time
@@ -8,7 +8,17 @@
 //!
 //! * [`Clock`] — wall vs virtual time ([`WallClock`], [`VirtualClock`]);
 //! * [`ExecBackend`] — what a decision costs and produces
-//!   ([`RealBackend`], [`DesBackend`]).
+//!   ([`RealBackend`], [`DesBackend`]), for each of N fleet devices.
+//!
+//! Fleet semantics: every device has its own *busy-until* timeline.
+//! A dispatch assigns a batch to a free device and (in virtual time)
+//! extends that device's timeline by the reported swap + exec + I/O
+//! costs without advancing global time, so devices execute
+//! concurrently; the strategy is only consulted while at least one
+//! device is free, and the placement policy
+//! ([`crate::coordinator::placement`]) picks *which* free device runs
+//! the batch.  On a `devices=1` fleet this reduces exactly to the
+//! paper's single-GPU loop — same decision sequence, same timeline.
 //!
 //! [`EngineBuilder`] is the supported entry point:
 //!
@@ -24,9 +34,8 @@
 //! # Ok(()) }
 //! ```
 //!
-//! `coordinator::serve` and `sim::simulate` remain as thin deprecated
-//! shims over this builder.  This module is the only place in the
-//! crate that reads or advances experiment time.
+//! This module is the only place in the crate that reads or advances
+//! experiment time.
 
 pub mod backend;
 pub mod clock;
@@ -42,12 +51,15 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::RunConfig;
+use crate::coordinator::placement::{placement_by_name, Placement};
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::rate::RateEstimator;
 use crate::coordinator::request::{CompletedRequest, Request};
 use crate::coordinator::sla::SlaTracker;
-use crate::coordinator::strategy::{strategy_by_name, Decision, ModelView,
-                                   SchedContext, Strategy};
+use crate::coordinator::strategy::{strategy_by_name, Decision, DeviceView,
+                                   ModelView, SchedContext, Strategy};
+use crate::coordinator::swap::SwapStats;
+use crate::gpu::CcMode;
 use crate::metrics::recorder::{BatchRecord, MonitorRecord, Recorder};
 use crate::metrics::system::sample_proc;
 use crate::traffic::pattern_by_name;
@@ -58,7 +70,7 @@ pub use backend::{BatchOutcome, DeviceSnapshot, ExecBackend, SwapOutcome};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use des::DesBackend;
 pub use real::RealBackend;
-pub use summary::RunSummary;
+pub use summary::{DeviceSummary, RunSummary};
 
 use summary::summarize;
 
@@ -77,8 +89,8 @@ impl<'a> EngineBuilder<'a> {
                         virtual_time: false }
     }
 
-    /// Real execution on the wall clock: `SimGpu` + PJRT + swap
-    /// manager (the paper's measured system).
+    /// Real execution on the wall clock: `SimGpu` fleet + PJRT + swap
+    /// managers (the paper's measured system).
     pub fn real(mut self, registry: &'a crate::runtime::Registry)
                 -> anyhow::Result<EngineBuilder<'a>> {
         self.backend = Some(Box::new(RealBackend::new(&self.cfg,
@@ -119,6 +131,7 @@ impl<'a> EngineBuilder<'a> {
             "EngineBuilder: no backend configured \
              (call .real()/.des()/.real_virtual())"))?;
         let strategy = strategy_by_name(&cfg.strategy)?;
+        let placement = placement_by_name(&cfg.placement)?;
         let models = if cfg.models.is_empty() {
             backend.model_names()
         } else {
@@ -131,6 +144,7 @@ impl<'a> EngineBuilder<'a> {
             cfg,
             models,
             strategy,
+            placement,
             backend,
             virtual_time: self.virtual_time,
         })
@@ -147,6 +161,7 @@ pub struct Engine<'a> {
     cfg: RunConfig,
     models: Vec<String>,
     strategy: Box<dyn Strategy>,
+    placement: Box<dyn Placement>,
     backend: Box<dyn ExecBackend + 'a>,
     virtual_time: bool,
 }
@@ -180,17 +195,31 @@ impl Ingest {
 
 /// Monitor-thread plumbing (wall-clock runs only).
 struct MonitorCtx {
-    snapshot: Arc<Mutex<DeviceSnapshot>>,
+    snapshot: Arc<Mutex<Vec<DeviceSnapshot>>>,
     records: Arc<Mutex<Vec<MonitorRecord>>>,
     handle: JoinHandle<()>,
 }
 
 /// Strategy-visible snapshot of the queues, built the same way for
-/// every backend (the HTTP front-end reuses this).
+/// every backend (the HTTP front-end reuses this).  `free` names the
+/// devices available for dispatch; per-model load estimates take the
+/// most favourable free device (on a one-device fleet this is just
+/// that device's estimate).
 pub fn build_views(queues: &ModelQueues, rates: &RateEstimator,
                    backend: &dyn ExecBackend,
-                   exec_est: &HashMap<String, f64>, now_s: f64)
-                   -> Vec<ModelView> {
+                   exec_est: &HashMap<String, f64>, now_s: f64,
+                   free: &[usize]) -> Vec<ModelView> {
+    let est_load = |m: &str| -> f64 {
+        let mut best = f64::INFINITY;
+        for &d in free {
+            best = best.min(backend.est_load_s(m, d));
+        }
+        if best.is_finite() {
+            best
+        } else {
+            backend.est_load_s(m, 0)
+        }
+    };
     queues.nonempty_models().iter().map(|m| ModelView {
         model: m.to_string(),
         len: queues.len(m),
@@ -198,10 +227,45 @@ pub fn build_views(queues: &ModelQueues, rates: &RateEstimator,
             .map(|a| (now_s - a).max(0.0)).unwrap_or(0.0),
         obs: backend.obs(m),
         rate_rps: rates.rate_rps(m, now_s),
-        est_load_s: backend.est_load_s(m),
+        est_load_s: est_load(*m),
         est_exec_s: exec_est.get(*m).copied()
             .unwrap_or_else(|| backend.initial_exec_est_s(m)),
     }).collect()
+}
+
+/// One [`DeviceView`] per backend device, from the engine's busy-until
+/// timelines (the HTTP front-end reuses this with always-free devices).
+pub fn build_device_views(backend: &dyn ExecBackend, busy_until: &[f64],
+                          busy_s: &[f64], dispatched: &[u64], now_s: f64)
+                          -> Vec<DeviceView> {
+    (0..backend.n_devices()).map(|d| DeviceView {
+        id: d,
+        mode: backend.mode(d),
+        resident: backend.resident(d),
+        busy: busy_until[d] > now_s,
+        busy_s: busy_s[d],
+        dispatched: dispatched[d],
+    }).collect()
+}
+
+/// Resolve a decision's device target: honour a pinned free device,
+/// otherwise ask the placement policy to pick among the free ones.
+pub fn resolve_device(ctx: &SchedContext, placement: &dyn Placement,
+                      model: &str, pinned: Option<usize>, free: &[usize])
+                      -> usize {
+    if let Some(d) = pinned {
+        if free.contains(&d) {
+            return d;
+        }
+    }
+    match ctx.queues.iter().find(|v| v.model == model) {
+        Some(v) => placement.place(ctx, v, free),
+        None => free.first().copied().unwrap_or(0),
+    }
+}
+
+fn snapshot_all(backend: &dyn ExecBackend) -> Vec<DeviceSnapshot> {
+    (0..backend.n_devices()).map(|d| backend.snapshot(d)).collect()
 }
 
 impl Engine<'_> {
@@ -213,6 +277,7 @@ impl Engine<'_> {
     /// implemented here once for both time domains.
     pub fn run(mut self) -> anyhow::Result<(RunSummary, Recorder)> {
         let cfg = self.cfg.clone();
+        let n_dev = self.backend.n_devices();
 
         // ---------------- arrival schedule (open loop) ----------------
         let mut rng = Pcg64::new(cfg.seed);
@@ -248,7 +313,7 @@ impl Engine<'_> {
             ingest = Ingest::Wall { rx, open: true,
                                     handle: Some(handle) };
             monitor_ctx = Some(spawn_monitor(origin, stop.clone(),
-                                             cfg.monitor_period));
+                                             cfg.monitor_period, n_dev));
         }
 
         // ---------------- scheduler state ------------------------------
@@ -264,6 +329,13 @@ impl Engine<'_> {
         // completion); drives the wall-clock stall exit for strategies
         // that legitimately strand a sub-OBS remainder
         let mut last_progress_s = 0.0f64;
+        // Per-device fleet timelines: when each device frees up, its
+        // cumulative busy seconds, and its dispatch count.  In wall
+        // time execution is synchronous, so devices are free at every
+        // decision point; in virtual time these ARE the concurrency.
+        let mut busy_until = vec![0.0f64; n_dev];
+        let mut busy_s = vec![0.0f64; n_dev];
+        let mut dispatched = vec![0u64; n_dev];
         // The paper's methodology: arrivals stop at duration_s but the
         // system drains its backlog; drain_s is a safety cap, and the
         // reported runtime extends to the last dispatched response.
@@ -323,25 +395,41 @@ impl Engine<'_> {
                 break;
             }
 
-            let views = build_views(&queues, &rates, self.backend.as_ref(),
-                                    &exec_est, t);
-            let ctx = SchedContext {
-                now_s: t,
-                resident: self.backend.resident(),
-                queues: views,
-                sla_s: cfg.sla_s,
-                timeout_s: cfg.timeout_s(),
+            // the strategy is only consulted while a device can take
+            // work; otherwise time simply advances to the next event
+            let free: Vec<usize> = (0..n_dev)
+                .filter(|&d| busy_until[d] <= t).collect();
+            let mut ctx_cell: Option<SchedContext> = None;
+            let decision = if free.is_empty() {
+                Decision::Wait
+            } else {
+                let views = build_views(&queues, &rates,
+                                        self.backend.as_ref(),
+                                        &exec_est, t, &free);
+                let ctx = SchedContext {
+                    now_s: t,
+                    devices: build_device_views(self.backend.as_ref(),
+                                                &busy_until, &busy_s,
+                                                &dispatched, t),
+                    queues: views,
+                    sla_s: cfg.sla_s,
+                    timeout_s: cfg.timeout_s(),
+                };
+                let d = self.strategy.decide(&ctx);
+                ctx_cell = Some(ctx);
+                d
             };
 
-            match self.strategy.decide(&ctx) {
+            match decision {
                 Decision::Wait => {
                     if let Some(mc) = &monitor_ctx {
                         *mc.snapshot.lock().unwrap() =
-                            self.backend.snapshot();
+                            snapshot_all(self.backend.as_ref());
                     }
-                    // next actionable instant: the next arrival or the
-                    // earliest not-yet-passed queue timer (virtual time
-                    // jumps there; wall time just sleeps a tick)
+                    // next actionable instant: the next arrival, the
+                    // earliest not-yet-passed queue timer, or the next
+                    // device completion (virtual time jumps there;
+                    // wall time just sleeps a tick)
                     let next = if self.virtual_time {
                         let next_timer = queues.nonempty_models().iter()
                             .filter_map(|m| queues.head_arrival_s(m))
@@ -350,8 +438,12 @@ impl Engine<'_> {
                             })
                             .filter(|&x| x > t)
                             .fold(f64::INFINITY, f64::min);
+                        let next_free = busy_until.iter().copied()
+                            .filter(|&b| b > t)
+                            .fold(f64::INFINITY, f64::min);
                         let n = ingest.next_arrival_s()
-                            .unwrap_or(f64::INFINITY).min(next_timer);
+                            .unwrap_or(f64::INFINITY)
+                            .min(next_timer).min(next_free);
                         n.is_finite().then_some(n.min(hard_stop_s))
                     } else {
                         None
@@ -360,22 +452,35 @@ impl Engine<'_> {
                         break;
                     }
                 }
-                Decision::Process { model, take } => {
+                Decision::Process { model, take, device } => {
+                    let ctx = ctx_cell.as_ref()
+                        .expect("Process decided without a context");
+                    let dev = resolve_device(ctx, self.placement.as_ref(),
+                                             &model, device, &free);
                     // 1. residency (the expensive CC-sensitive step)
                     let swap = self.backend.ensure_resident(
-                        clock.as_mut(), &model)?;
+                        clock.as_mut(), dev, &model)?;
                     // 2.-5. batch assembly + payload I/O + execution,
-                    // costed by the backend in the engine's time domain
+                    // costed by the backend
                     let Some(out) = self.backend.execute_batch(
-                        clock.as_mut(), &mut queues, &model, take)?
+                        clock.as_mut(), &mut queues, dev, &model, take)?
                     else {
                         continue;
                     };
 
-                    // 6. bookkeeping
-                    let complete_s = clock.now_s();
-                    last_complete_s = complete_s;
-                    last_progress_s = complete_s;
+                    // 6. fold the costs into the device's timeline
+                    let swap_cost = swap.unload_s + swap.load_s;
+                    let (exec_start_s, complete_s) = if self.virtual_time {
+                        let start = t + swap_cost;
+                        (start, start + out.exec_s + out.io_s)
+                    } else {
+                        (out.exec_start_s, clock.now_s())
+                    };
+                    busy_until[dev] = complete_s;
+                    busy_s[dev] += swap_cost + out.exec_s + out.io_s;
+                    dispatched[dev] += 1;
+                    last_complete_s = last_complete_s.max(complete_s);
+                    last_progress_s = clock.now_s();
                     let e = exec_est.entry(model.clone())
                         .or_insert(out.exec_s);
                     *e = 0.3 * out.exec_s + 0.7 * *e;
@@ -386,18 +491,20 @@ impl Engine<'_> {
                             id: r.id,
                             model: r.model.clone(),
                             arrival_s: r.arrival_s,
-                            exec_start_s: out.exec_start_s,
+                            exec_start_s,
                             complete_s,
                             batch: out.artifact_batch,
                             batch_rows: n_rows,
                             caused_swap: swap.swapped,
+                            device: dev,
                         };
                         let met = sla.on_complete(&c);
                         recorder.on_complete(c, met);
                     }
                     recorder.on_batch(BatchRecord {
-                        at_s: out.exec_start_s,
+                        at_s: exec_start_s,
                         model,
+                        device: dev,
                         rows: n_rows,
                         artifact_batch: out.artifact_batch,
                         swapped: swap.swapped,
@@ -408,7 +515,7 @@ impl Engine<'_> {
                     });
                     if let Some(mc) = &monitor_ctx {
                         *mc.snapshot.lock().unwrap() =
-                            self.backend.snapshot();
+                            snapshot_all(self.backend.as_ref());
                     }
                 }
             }
@@ -440,9 +547,12 @@ impl Engine<'_> {
         self.backend.teardown();
 
         // ---------------- summary --------------------------------------
-        let stats = self.backend.swap_stats();
+        let dev_stats: Vec<SwapStats> = (0..n_dev)
+            .map(|d| self.backend.swap_stats(d)).collect();
+        let dev_modes: Vec<CcMode> = (0..n_dev)
+            .map(|d| self.backend.mode(d)).collect();
         let summary = summarize(&cfg, generated, runtime_s, &recorder,
-                                &sla, &stats);
+                                &sla, &dev_stats, &dev_modes);
         if let Some(dir) = &cfg.results_dir {
             recorder.write_csvs(dir, &cfg.label)?;
             std::fs::write(
@@ -479,11 +589,13 @@ fn spawn_ingest(schedule: Vec<Request>, origin: Instant,
     (rx, handle)
 }
 
-/// Monitor thread: samples process counters plus the backend's device
-/// snapshot at a fixed period (wall-clock runs only).
+/// Monitor thread: samples process counters plus every device's
+/// snapshot at a fixed period (wall-clock runs only) — one record per
+/// device per sample.
 fn spawn_monitor(origin: Instant, stop: Arc<AtomicBool>,
-                 period: Duration) -> MonitorCtx {
-    let snapshot = Arc::new(Mutex::new(DeviceSnapshot::default()));
+                 period: Duration, n_dev: usize) -> MonitorCtx {
+    let snapshot = Arc::new(Mutex::new(
+        vec![DeviceSnapshot::default(); n_dev]));
     let records: Arc<Mutex<Vec<MonitorRecord>>> =
         Arc::new(Mutex::new(Vec::new()));
     let handle = {
@@ -491,18 +603,23 @@ fn spawn_monitor(origin: Instant, stop: Arc<AtomicBool>,
         let records = records.clone();
         std::thread::spawn(move || {
             while !stop.load(Ordering::Relaxed) {
-                let snap = snapshot.lock().unwrap().clone();
-                let rec = MonitorRecord {
-                    proc: sample_proc(origin.elapsed().as_secs_f64()),
-                    gpu_util: snap.gpu_util,
-                    mem_in_use: snap.mem_in_use,
-                    mem_peak: snap.mem_peak,
-                    fragmentation: snap.fragmentation,
-                    dma_h2d_bytes: snap.dma_h2d_bytes,
-                    dma_crypto_s: snap.dma_crypto_s,
-                    swaps: snap.swaps,
-                };
-                records.lock().unwrap().push(rec);
+                let snaps = snapshot.lock().unwrap().clone();
+                let proc = sample_proc(origin.elapsed().as_secs_f64());
+                let mut recs = records.lock().unwrap();
+                for (d, snap) in snaps.iter().enumerate() {
+                    recs.push(MonitorRecord {
+                        proc: proc.clone(),
+                        device: d,
+                        gpu_util: snap.gpu_util,
+                        mem_in_use: snap.mem_in_use,
+                        mem_peak: snap.mem_peak,
+                        fragmentation: snap.fragmentation,
+                        dma_h2d_bytes: snap.dma_h2d_bytes,
+                        dma_crypto_s: snap.dma_crypto_s,
+                        swaps: snap.swaps,
+                    });
+                }
+                drop(recs);
                 std::thread::sleep(period);
             }
         })

@@ -1,17 +1,21 @@
-//! `RealBackend` — the execution backend over `SimGpu` + `Registry` +
-//! `SwapManager`: real (optionally CC-sealed) DMA, real PJRT
-//! execution, real device occupancy.
+//! `RealBackend` — the execution backend over a [`DeviceSet`] of
+//! `SimGpu`s + `Registry` + one `SwapManager` per device: real
+//! (optionally CC-sealed) DMA, real PJRT execution, real per-device
+//! occupancy.  A mixed CC/No-CC fleet is just a `DeviceSet` whose
+//! configs differ.
 //!
 //! Two time modes:
 //!
-//! * **Wall** (default, used by `coordinator::serve` and the HTTP
-//!   front-end): costs are whatever actually elapsed; `Clock::advance`
-//!   is a no-op on the engine's `WallClock`.
+//! * **Wall** (default, used by `sincere serve` and the HTTP
+//!   front-end): costs are whatever actually elapsed.  Execution is
+//!   serialized on the scheduler thread — the host simulates the fleet
+//!   — but residency, memory pressure and crypto accounting stay
+//!   per-device.
 //! * **Virtual costs** (`with_virtual_costs`): the same real execution
 //!   path runs, but reported times come from a calibrated
-//!   [`CostModel`], and the backend advances the engine's
-//!   `VirtualClock` by exactly the amounts a `DesBackend` would — the
-//!   seam the DES-vs-real parity test pins.
+//!   [`CostModel`]; the engine folds them into the device's busy-until
+//!   timeline exactly as it does for a `DesBackend` — the seam the
+//!   DES-vs-real parity test pins, now per device.
 
 use crate::config::RunConfig;
 use crate::coordinator::batcher;
@@ -20,19 +24,22 @@ use crate::coordinator::swap::{SwapManager, SwapStats};
 use crate::engine::backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
                              SwapOutcome};
 use crate::engine::clock::Clock;
-use crate::gpu::device::SimGpu;
 use crate::gpu::dma::Dir;
+use crate::gpu::fleet::DeviceSet;
+use crate::gpu::CcMode;
 use crate::runtime::Registry;
 use crate::sim::CostModel;
 use crate::workload::tokenizer::tokenize;
 
 pub struct RealBackend<'a> {
     registry: &'a Registry,
-    gpu: SimGpu,
-    swaps: SwapManager,
-    /// Modeled swap accounting, maintained only in virtual-costs mode
-    /// (wall mode reads the swap manager's measured stats directly).
-    stats: SwapStats,
+    fleet: DeviceSet,
+    /// One residency manager per device.
+    swaps: Vec<SwapManager>,
+    /// Modeled swap accounting per device, maintained only in
+    /// virtual-costs mode (wall mode reads each swap manager's measured
+    /// stats directly).
+    stats: Vec<SwapStats>,
     virtual_costs: Option<CostModel>,
 }
 
@@ -40,19 +47,21 @@ impl<'a> RealBackend<'a> {
     /// Wall-clock backend (the real experiment path).
     pub fn new(cfg: &RunConfig, registry: &'a Registry)
                -> anyhow::Result<RealBackend<'a>> {
+        let fleet = DeviceSet::new(cfg.fleet_configs())?;
+        let n = fleet.len();
         Ok(RealBackend {
             registry,
-            gpu: SimGpu::new(cfg.gpu.clone())?,
-            swaps: SwapManager::new(),
-            stats: SwapStats::default(),
+            fleet,
+            swaps: (0..n).map(|_| SwapManager::new()).collect(),
+            stats: vec![SwapStats::default(); n],
             virtual_costs: None,
         })
     }
 
     /// Real execution under virtual time: all reported costs come from
-    /// `costs`, and the backend advances the engine's clock itself.
-    /// Combine with `cfg.gpu.no_throttle = true` so the real work
-    /// underneath takes negligible wall time.
+    /// `costs` and the engine owns the device timelines.  Combine with
+    /// `cfg.gpu.no_throttle = true` so the real work underneath takes
+    /// negligible wall time.
     pub fn with_virtual_costs(cfg: &RunConfig, registry: &'a Registry,
                               costs: &CostModel)
                               -> anyhow::Result<RealBackend<'a>> {
@@ -65,6 +74,14 @@ impl<'a> RealBackend<'a> {
 impl ExecBackend for RealBackend<'_> {
     fn kind(&self) -> &'static str {
         "real"
+    }
+
+    fn n_devices(&self) -> usize {
+        self.fleet.len()
+    }
+
+    fn mode(&self, device: usize) -> CcMode {
+        self.fleet.get(device).mode()
     }
 
     fn model_names(&self) -> Vec<String> {
@@ -98,12 +115,13 @@ impl ExecBackend for RealBackend<'_> {
         }
     }
 
-    fn est_load_s(&self, model: &str) -> f64 {
+    fn est_load_s(&self, model: &str, device: usize) -> f64 {
         match &self.virtual_costs {
             Some(costs) => costs.costs(model)
-                .map(|mc| mc.load_s(self.gpu.mode())).unwrap_or(0.0),
-            None => SwapManager::estimate_load_s(&self.gpu, self.registry,
-                                                 model),
+                .map(|mc| mc.load_s(self.fleet.get(device).mode()))
+                .unwrap_or(0.0),
+            None => SwapManager::estimate_load_s(self.fleet.get(device),
+                                                 self.registry, model),
         }
     }
 
@@ -117,15 +135,15 @@ impl ExecBackend for RealBackend<'_> {
         }
     }
 
-    fn resident(&self) -> Option<String> {
-        self.swaps.resident().map(|s| s.to_string())
+    fn resident(&self, device: usize) -> Option<String> {
+        self.swaps[device].resident().map(|s| s.to_string())
     }
 
-    fn ensure_resident(&mut self, clock: &mut dyn Clock, model: &str)
-                       -> anyhow::Result<SwapOutcome> {
-        let had_resident = self.swaps.resident().is_some();
-        let rep = self.swaps.ensure_resident(&mut self.gpu, self.registry,
-                                             model)?;
+    fn ensure_resident(&mut self, _clock: &mut dyn Clock, device: usize,
+                       model: &str) -> anyhow::Result<SwapOutcome> {
+        let had_resident = self.swaps[device].resident().is_some();
+        let rep = self.swaps[device].ensure_resident(
+            self.fleet.get_mut(device), self.registry, model)?;
         let mut out = SwapOutcome {
             swapped: rep.swapped,
             load_s: rep.load_s,
@@ -137,25 +155,26 @@ impl ExecBackend for RealBackend<'_> {
         }
         if let Some(costs) = &self.virtual_costs {
             let mc = costs.costs(model)?;
-            out.load_s = mc.load_s(self.gpu.mode());
+            out.load_s = mc.load_s(self.fleet.get(device).mode());
             out.unload_s = if had_resident { mc.unload_s } else { 0.0 };
             out.crypto_s = 0.0;
-            clock.advance(out.unload_s + out.load_s);
             // virtual mode keeps its own stats: the swap manager's
             // wall-measured values are not in the engine's time domain
-            self.stats.swap_count += 1;
-            self.stats.total_load_s += out.load_s;
-            self.stats.total_unload_s += out.unload_s;
-            self.stats.load_samples.push((model.to_string(), out.load_s));
+            let stats = &mut self.stats[device];
+            stats.swap_count += 1;
+            stats.total_load_s += out.load_s;
+            stats.total_unload_s += out.unload_s;
+            stats.load_samples.push((model.to_string(), out.load_s));
         }
         Ok(out)
     }
 
     fn execute_batch(&mut self, clock: &mut dyn Clock,
-                     queues: &mut ModelQueues, model: &str, take: usize)
-                     -> anyhow::Result<Option<BatchOutcome>> {
+                     queues: &mut ModelQueues, device: usize, model: &str,
+                     take: usize) -> anyhow::Result<Option<BatchOutcome>> {
         // 1. batch assembly + workspace reservation (OOM guard)
-        let Some(batch) = batcher::prepare(queues, &mut self.gpu,
+        let Some(batch) = batcher::prepare(queues,
+                                           self.fleet.get_mut(device),
                                            self.registry, model, take)?
         else {
             return Ok(None);
@@ -166,15 +185,16 @@ impl ExecBackend for RealBackend<'_> {
         let in_bytes: Vec<u8> = batch.requests.iter()
             .flat_map(|r| r.tokens.iter().flat_map(|t| t.to_le_bytes()))
             .collect();
-        self.gpu.io_transfer(Dir::HostToDevice, &in_bytes)?;
+        self.fleet.get_mut(device)
+            .io_transfer(Dir::HostToDevice, &in_bytes)?;
         let mut io_s = clock.now_s() - io_start;
 
         // 3. execute
         let rows: Vec<Vec<i32>> = batch.requests.iter()
             .map(|r| r.tokens.clone()).collect();
-        let mut exec_start_s = clock.now_s();
+        let exec_start_s = clock.now_s();
         let rep = self.registry.execute(model, &rows)?;
-        self.gpu.record_compute(rep.elapsed);
+        self.fleet.get_mut(device).record_compute(rep.elapsed);
         let mut exec_s = rep.elapsed.as_secs_f64();
 
         // 4. response payload out
@@ -182,20 +202,20 @@ impl ExecBackend for RealBackend<'_> {
             .flat_map(|row| row.iter().flat_map(|t| t.to_le_bytes()))
             .collect();
         let io_start = clock.now_s();
-        self.gpu.io_transfer(Dir::DeviceToHost, &out_bytes)?;
+        self.fleet.get_mut(device)
+            .io_transfer(Dir::DeviceToHost, &out_bytes)?;
         io_s += clock.now_s() - io_start;
 
         let n_rows = batch.requests.len();
-        let requests = batcher::release(&mut self.gpu, batch);
+        let requests = batcher::release(self.fleet.get_mut(device), batch);
 
         // 5. virtual mode: replace measured times with modeled costs
-        //    and advance the clock exactly as the DES backend would
+        //    (the engine folds them into the device timeline)
         if let Some(costs) = &self.virtual_costs {
             let mc = costs.costs(model)?;
             exec_s = mc.exec_s(rep.batch);
-            io_s = costs.io_s_per_row(self.gpu.mode()) * n_rows as f64;
-            exec_start_s = clock.now_s();
-            clock.advance(exec_s + io_s);
+            io_s = costs.io_s_per_row(self.fleet.get(device).mode())
+                * n_rows as f64;
         }
 
         Ok(Some(BatchOutcome {
@@ -208,28 +228,31 @@ impl ExecBackend for RealBackend<'_> {
         }))
     }
 
-    fn snapshot(&self) -> DeviceSnapshot {
+    fn snapshot(&self, device: usize) -> DeviceSnapshot {
+        let gpu = self.fleet.get(device);
         DeviceSnapshot {
-            gpu_util: self.gpu.utilization(),
-            mem_in_use: self.gpu.mem_in_use(),
-            mem_peak: self.gpu.mem_peak(),
-            fragmentation: self.gpu.mem_fragmentation(),
-            dma_h2d_bytes: self.gpu.dma_stats().h2d_bytes,
-            dma_crypto_s: self.gpu.dma_stats().crypto.as_secs_f64(),
-            swaps: self.swap_stats().swap_count,
+            gpu_util: gpu.utilization(),
+            mem_in_use: gpu.mem_in_use(),
+            mem_peak: gpu.mem_peak(),
+            fragmentation: gpu.mem_fragmentation(),
+            dma_h2d_bytes: gpu.dma_stats().h2d_bytes,
+            dma_crypto_s: gpu.dma_stats().crypto.as_secs_f64(),
+            swaps: self.swap_stats(device).swap_count,
         }
     }
 
-    fn swap_stats(&self) -> SwapStats {
+    fn swap_stats(&self, device: usize) -> SwapStats {
         // Wall mode: the swap manager's measured stats are authoritative.
         // Virtual mode: the backend's modeled stats are.
         match &self.virtual_costs {
-            Some(_) => self.stats.clone(),
-            None => self.swaps.stats().clone(),
+            Some(_) => self.stats[device].clone(),
+            None => self.swaps[device].stats().clone(),
         }
     }
 
     fn teardown(&mut self) {
-        self.swaps.evict(&mut self.gpu);
+        for (d, sm) in self.swaps.iter_mut().enumerate() {
+            sm.evict(self.fleet.get_mut(d));
+        }
     }
 }

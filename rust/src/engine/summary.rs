@@ -1,17 +1,58 @@
 //! `RunSummary` — the aggregated outcome of one run (one grid cell of
 //! the evaluation), assembled in exactly one place for both time
-//! domains.
+//! domains, with per-device breakdowns plus fleet aggregates.
 
 use crate::config::RunConfig;
 use crate::coordinator::sla::SlaTracker;
 use crate::coordinator::swap::SwapStats;
+use crate::gpu::CcMode;
 use crate::metrics::recorder::Recorder;
 use crate::util::json::Json;
 
+/// Per-device slice of a run — one fleet device's share of the work.
+#[derive(Debug, Clone, Default)]
+pub struct DeviceSummary {
+    pub device: usize,
+    /// "cc" | "no-cc".
+    pub mode: String,
+    /// Batches dispatched to this device.
+    pub batches: u64,
+    /// Requests completed on this device.
+    pub completed: u64,
+    /// Seconds spent executing batches on this device.
+    pub exec_s: f64,
+    /// exec_s / runtime — this device's utilization (Fig 7 metric).
+    pub util: f64,
+    pub swap_count: u64,
+    pub load_s: f64,
+    pub unload_s: f64,
+    pub crypto_s: f64,
+}
+
+impl DeviceSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("device", Json::num(self.device as f64)),
+            ("mode", Json::str(self.mode.clone())),
+            ("batches", Json::num(self.batches as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("exec_s", Json::num(self.exec_s)),
+            ("util", Json::num(self.util)),
+            ("swap_count", Json::num(self.swap_count as f64)),
+            ("load_s", Json::num(self.load_s)),
+            ("unload_s", Json::num(self.unload_s)),
+            ("crypto_s", Json::num(self.crypto_s)),
+        ])
+    }
+}
+
 /// Aggregated outcome of one run — one grid cell of the evaluation.
-#[derive(Debug, Clone)]
+/// Totals (`swap_count`, `total_*`, throughput) are fleet aggregates;
+/// `per_device` carries the breakdown.
+#[derive(Debug, Clone, Default)]
 pub struct RunSummary {
     pub label: String,
+    /// "cc" | "no-cc", or "mixed" for a heterogeneous fleet.
     pub mode: String,
     pub pattern: String,
     pub strategy: String,
@@ -20,6 +61,11 @@ pub struct RunSummary {
     pub duration_s: f64,
     /// Actual runtime of the serving phase (duration + drain used).
     pub runtime_s: f64,
+
+    /// Fleet size.
+    pub devices: usize,
+    /// Placement policy name.
+    pub placement: String,
 
     pub generated: u64,
     pub completed: u64,
@@ -39,6 +85,7 @@ pub struct RunSummary {
     /// modes (§IV-B).
     pub processing_rate_rps: f64,
 
+    /// Fleet-average utilization: exec seconds / (runtime × devices).
     pub gpu_util: f64,
     pub swap_count: u64,
     pub total_load_s: f64,
@@ -46,6 +93,9 @@ pub struct RunSummary {
     pub total_exec_s: f64,
     pub total_crypto_s: f64,
     pub mean_load_s: f64,
+
+    /// Per-device breakdown, in device-id order.
+    pub per_device: Vec<DeviceSummary>,
 }
 
 impl RunSummary {
@@ -59,6 +109,8 @@ impl RunSummary {
             ("mean_rps", Json::num(self.mean_rps)),
             ("duration_s", Json::num(self.duration_s)),
             ("runtime_s", Json::num(self.runtime_s)),
+            ("devices", Json::num(self.devices as f64)),
+            ("placement", Json::str(self.placement.clone())),
             ("generated", Json::num(self.generated as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("sla_met", Json::num(self.sla_met as f64)),
@@ -77,39 +129,94 @@ impl RunSummary {
             ("total_exec_s", Json::num(self.total_exec_s)),
             ("total_crypto_s", Json::num(self.total_crypto_s)),
             ("mean_load_s", Json::num(self.mean_load_s)),
+            ("per_device", Json::Arr(self.per_device.iter()
+                .map(|d| d.to_json()).collect())),
         ])
     }
 
     /// One-line human summary.
     pub fn brief(&self) -> String {
+        let fleet = if self.devices > 1 {
+            format!(" devs={}({})", self.devices, self.placement)
+        } else {
+            String::new()
+        };
         format!(
             "{:<6} {:<7} {:<26} sla={:<4} gen={:<5} done={:<5} \
              att={:>5.1}% lat(mean/p99)={:.2}/{:.2}s thr={:.2}rps \
-             util={:>4.1}% swaps={}",
+             util={:>4.1}% swaps={}{}",
             self.mode, self.pattern, self.strategy, self.sla_s,
             self.generated, self.completed, self.sla_attainment * 100.0,
             self.latency_mean_s, self.latency_p99_s, self.throughput_rps,
-            self.gpu_util * 100.0, self.swap_count)
+            self.gpu_util * 100.0, self.swap_count, fleet)
     }
 }
 
 /// Assemble the summary from a finished run's accounting — the single
 /// home of the paper's metric definitions, shared by every backend.
+/// `dev_stats`/`dev_modes` carry one entry per fleet device.
 pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
                         recorder: &Recorder, sla: &SlaTracker,
-                        swap_stats: &SwapStats) -> RunSummary {
+                        dev_stats: &[SwapStats], dev_modes: &[CcMode])
+                        -> RunSummary {
     let h = &recorder.latency_hist;
     let completed = recorder.requests.len() as u64;
     let exec_busy = recorder.exec_busy_s();
+    let n_dev = dev_modes.len().max(1);
+
+    // fleet aggregates across devices
+    let swap_count: u64 = dev_stats.iter().map(|s| s.swap_count).sum();
+    let total_load_s: f64 = dev_stats.iter().map(|s| s.total_load_s).sum();
+    let total_unload_s: f64 =
+        dev_stats.iter().map(|s| s.total_unload_s).sum();
+    let total_crypto_s: f64 =
+        dev_stats.iter().map(|s| s.total_crypto_s).sum();
+
+    // heterogeneous fleets report "mixed"
+    let mode = match dev_modes.split_first() {
+        Some((first, rest)) if rest.iter().any(|m| m != first) =>
+            "mixed".to_string(),
+        Some((first, _)) => first.as_str().to_string(),
+        None => cfg.mode.as_str().to_string(),
+    };
+
+    let per_device: Vec<DeviceSummary> = (0..n_dev).map(|d| {
+        let exec_s = recorder.exec_busy_s_for(d);
+        let batches = recorder.batches.iter()
+            .filter(|b| b.device == d).count() as u64;
+        let dev_completed = recorder.requests.iter()
+            .filter(|(c, _)| c.device == d).count() as u64;
+        let stats = dev_stats.get(d).cloned().unwrap_or_default();
+        DeviceSummary {
+            device: d,
+            mode: dev_modes.get(d).map(|m| m.as_str())
+                .unwrap_or(cfg.mode.as_str()).to_string(),
+            batches,
+            completed: dev_completed,
+            exec_s,
+            util: if runtime_s > 0.0 {
+                (exec_s / runtime_s).min(1.0)
+            } else {
+                0.0
+            },
+            swap_count: stats.swap_count,
+            load_s: stats.total_load_s,
+            unload_s: stats.total_unload_s,
+            crypto_s: stats.total_crypto_s,
+        }
+    }).collect();
+
     RunSummary {
         label: cfg.label.clone(),
-        mode: cfg.mode.as_str().to_string(),
+        mode,
         pattern: cfg.pattern.clone(),
         strategy: cfg.strategy.clone(),
         sla_s: cfg.sla_s,
         mean_rps: cfg.mean_rps,
         duration_s: cfg.duration_s,
         runtime_s,
+        devices: n_dev,
+        placement: cfg.placement.clone(),
         generated,
         completed,
         sla_met: sla.met(),
@@ -129,23 +236,24 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         } else {
             0.0
         },
-        // utilization over the reported runtime (exec share of the run,
-        // Fig 7's metric); the device's lifetime utilization feeds the
-        // monitor CSV instead
+        // utilization over the reported runtime, averaged over the
+        // fleet (exec share of the run, Fig 7's metric); each device's
+        // own share is in per_device
         gpu_util: if runtime_s > 0.0 {
-            (exec_busy / runtime_s).min(1.0)
+            (exec_busy / (runtime_s * n_dev as f64)).min(1.0)
         } else {
             0.0
         },
-        swap_count: swap_stats.swap_count,
-        total_load_s: swap_stats.total_load_s,
-        total_unload_s: swap_stats.total_unload_s,
+        swap_count,
+        total_load_s,
+        total_unload_s,
         total_exec_s: exec_busy,
-        total_crypto_s: swap_stats.total_crypto_s,
-        mean_load_s: if swap_stats.swap_count > 0 {
-            swap_stats.total_load_s / swap_stats.swap_count as f64
+        total_crypto_s,
+        mean_load_s: if swap_count > 0 {
+            total_load_s / swap_count as f64
         } else {
             0.0
         },
+        per_device,
     }
 }

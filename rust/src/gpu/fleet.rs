@@ -1,0 +1,110 @@
+//! `DeviceSet` — an N-device fleet of simulated confidential GPUs.
+//!
+//! The paper measures a single VM with one GPU; the interesting regime
+//! it could not run is a *fleet* where CC and No-CC devices serve the
+//! same traffic side-by-side, so the CC load-time penalty becomes a
+//! live routing trade-off instead of two separate experiments (cf. the
+//! multi-GPU CC serving regime of "The Serialized Bridge").  A
+//! `DeviceSet` owns N independent [`SimGpu`]s, each with its own
+//! [`CcMode`], HBM capacity and PCIe rates — per-device residency,
+//! memory pressure and crypto accounting stay fully isolated.
+//!
+//! The fleet itself is policy-free: which device a batch lands on is
+//! the placement policy's job (`coordinator::placement`), and device
+//! concurrency (busy-until timelines) is the engine's.
+
+use crate::gpu::device::{GpuConfig, SimGpu};
+use crate::gpu::CcMode;
+
+/// An ordered set of simulated devices; device ids are indexes.
+pub struct DeviceSet {
+    devices: Vec<SimGpu>,
+}
+
+impl DeviceSet {
+    /// Bring up one device per config (CC devices pay their attestation
+    /// handshake here, exactly as a single `SimGpu` would).
+    pub fn new(configs: Vec<GpuConfig>) -> anyhow::Result<DeviceSet> {
+        anyhow::ensure!(!configs.is_empty(),
+                        "fleet needs at least one device");
+        let devices = configs.into_iter()
+            .map(SimGpu::new)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(DeviceSet { devices })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn get(&self, device: usize) -> &SimGpu {
+        &self.devices[device]
+    }
+
+    pub fn get_mut(&mut self, device: usize) -> &mut SimGpu {
+        &mut self.devices[device]
+    }
+
+    /// CC mode of every device, in id order.
+    pub fn modes(&self) -> Vec<CcMode> {
+        self.devices.iter().map(|g| g.mode()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &SimGpu> {
+        self.devices.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(mode: CcMode) -> GpuConfig {
+        GpuConfig { mode, no_throttle: true, ..GpuConfig::default() }
+    }
+
+    #[test]
+    fn mixed_fleet_reports_per_device_modes() {
+        let fleet = DeviceSet::new(vec![
+            cfg(CcMode::On), cfg(CcMode::Off), cfg(CcMode::On),
+        ]).unwrap();
+        assert_eq!(fleet.len(), 3);
+        assert_eq!(fleet.modes(),
+                   vec![CcMode::On, CcMode::Off, CcMode::On]);
+    }
+
+    #[test]
+    fn device_memory_is_isolated() {
+        let mut fleet = DeviceSet::new(vec![
+            cfg(CcMode::Off), cfg(CcMode::Off),
+        ]).unwrap();
+        let (buf, _) = fleet.get_mut(0).upload(&vec![7u8; 50_000]).unwrap();
+        assert_eq!(fleet.get(0).mem_in_use(), 50_000);
+        assert_eq!(fleet.get(1).mem_in_use(), 0,
+                   "an upload on device 0 must not touch device 1");
+        fleet.get_mut(0).unload(buf);
+        assert_eq!(fleet.get(0).mem_in_use(), 0);
+    }
+
+    #[test]
+    fn empty_fleet_rejected() {
+        assert!(DeviceSet::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn per_device_capacity_respected() {
+        let mut small = cfg(CcMode::Off);
+        small.hbm_capacity = 64 * 1024;
+        let mut fleet =
+            DeviceSet::new(vec![small, cfg(CcMode::Off)]).unwrap();
+        let blob = vec![1u8; 100_000];
+        assert!(fleet.get_mut(0).upload(&blob).is_err(),
+                "small device must OOM");
+        assert!(fleet.get_mut(1).upload(&blob).is_ok(),
+                "default-size device must fit the same blob");
+    }
+}

@@ -16,10 +16,13 @@
 //!   bounce buffers, under a configurable PCIe bandwidth model.
 //! * [`device`] — `SimGpu`, tying the above together with busy/idle
 //!   occupancy accounting (the GPU-utilization metric of Fig 7).
+//! * [`fleet`] — `DeviceSet`, N independent `SimGpu`s (per-device
+//!   `CcMode`/HBM/PCIe) behind the engine's fleet scheduling.
 
 pub mod cc;
 pub mod device;
 pub mod dma;
+pub mod fleet;
 pub mod hbm;
 
 /// Confidential-computing mode of the device (the paper's CC / No-CC).

@@ -21,7 +21,7 @@
 use std::path::{Path, PathBuf};
 
 use sincere::config::RunConfig;
-use sincere::coordinator::STRATEGY_NAMES;
+use sincere::coordinator::{placement_names, strategy_names};
 use sincere::engine::EngineBuilder;
 use sincere::gpu::CcMode;
 use sincere::metrics::report;
@@ -254,7 +254,7 @@ fn cmd_sweep(cfg: RunConfig) -> anyhow::Result<()> {
     let mut cells = Vec::new();
     for mode in [CcMode::Off, CcMode::On] {
         for pattern in PATTERN_NAMES {
-            for strategy in STRATEGY_NAMES {
+            for strategy in strategy_names() {
                 for &sla in slas {
                     let mut c = cfg.clone();
                     c.mode = mode;
@@ -310,6 +310,11 @@ fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::engine::RunSummary>> {
             mean_rps: c.req("mean_rps")?.as_f64().unwrap_or(0.0),
             duration_s: c.req("duration_s")?.as_f64().unwrap_or(0.0),
             runtime_s: c.req("runtime_s")?.as_f64().unwrap_or(0.0),
+            // fleet fields are optional for pre-fleet summary files
+            devices: c.get("devices").and_then(|v| v.as_usize())
+                .unwrap_or(1),
+            placement: c.get("placement").and_then(|v| v.as_str())
+                .unwrap_or("affinity").into(),
             generated: c.req("generated")?.as_u64().unwrap_or(0),
             completed: c.req("completed")?.as_u64().unwrap_or(0),
             sla_met: c.req("sla_met")?.as_u64().unwrap_or(0),
@@ -329,9 +334,32 @@ fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::engine::RunSummary>> {
             total_exec_s: c.req("total_exec_s")?.as_f64().unwrap_or(0.0),
             total_crypto_s: c.req("total_crypto_s")?.as_f64().unwrap_or(0.0),
             mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
+            per_device: parse_per_device(c),
         });
     }
     Ok(out)
+}
+
+fn parse_per_device(c: &Json) -> Vec<sincere::engine::DeviceSummary> {
+    let Some(arr) = c.get("per_device").and_then(|v| v.as_arr()) else {
+        return Vec::new();
+    };
+    arr.iter().map(|d| sincere::engine::DeviceSummary {
+        device: d.get("device").and_then(|v| v.as_usize()).unwrap_or(0),
+        mode: d.get("mode").and_then(|v| v.as_str()).unwrap_or("").into(),
+        batches: d.get("batches").and_then(|v| v.as_u64()).unwrap_or(0),
+        completed: d.get("completed").and_then(|v| v.as_u64())
+            .unwrap_or(0),
+        exec_s: d.get("exec_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        util: d.get("util").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        swap_count: d.get("swap_count").and_then(|v| v.as_u64())
+            .unwrap_or(0),
+        load_s: d.get("load_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
+        unload_s: d.get("unload_s").and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+        crypto_s: d.get("crypto_s").and_then(|v| v.as_f64())
+            .unwrap_or(0.0),
+    }).collect()
 }
 
 // ------------------------------------------------------------ gen-traffic
@@ -394,10 +422,17 @@ fn usage_string() -> String {
          \x20 --duration SECONDS     (default 60)\n\
          \x20 --models a,b           restrict families\n\
          \x20 --batch-sizes 1,2,4    restrict compiled batches\n\
-         \x20 --artifacts DIR --results DIR --seed N --config FILE.json\n",
+         \x20 --artifacts DIR --results DIR --seed N --config FILE.json\n\n\
+         FLEET OPTIONS:\n\
+         \x20 --devices N            fleet size (default 1)\n\
+         \x20 --device-modes cc,no-cc,...   per-device CC mode mix\n\
+         \x20 --device-hbm-mb a,b    per-device HBM capacity, MB\n\
+         \x20 --device-bw-scale a,b  per-device PCIe rate scale\n\
+         \x20 --placement {placements}\n",
         "help", "show this help",
         patterns = PATTERN_NAMES.join("|"),
-        strategies = STRATEGY_NAMES.join("|")));
+        strategies = strategy_names().join("|"),
+        placements = placement_names().join("|")));
     out
 }
 
@@ -429,6 +464,21 @@ mod tests {
                     "usage text is missing {:?}", c.name);
         }
         assert!(usage.contains("serve-http"));
+    }
+
+    /// Strategy and placement options in the help text are rendered
+    /// from the same tables that drive lookup, so the lists in docs
+    /// and error messages cannot drift.
+    #[test]
+    fn usage_lists_every_strategy_and_placement() {
+        let usage = usage_string();
+        for name in strategy_names() {
+            assert!(usage.contains(name), "usage missing strategy {name}");
+        }
+        for name in placement_names() {
+            assert!(usage.contains(name),
+                    "usage missing placement {name}");
+        }
     }
 
     #[test]

@@ -20,6 +20,8 @@ use crate::util::csvio::CsvWriter;
 pub struct BatchRecord {
     pub at_s: f64,
     pub model: String,
+    /// Fleet device the batch executed on.
+    pub device: usize,
     pub rows: usize,
     pub artifact_batch: usize,
     pub swapped: bool,
@@ -29,10 +31,12 @@ pub struct BatchRecord {
     pub io_s: f64,
 }
 
-/// One monitor sample (process + device).
+/// One monitor sample (process + one fleet device).
 #[derive(Debug, Clone)]
 pub struct MonitorRecord {
     pub proc: ProcSample,
+    /// Fleet device this sample describes.
+    pub device: usize,
     pub gpu_util: f64,
     pub mem_in_use: u64,
     pub mem_peak: u64,
@@ -69,9 +73,15 @@ impl Recorder {
         self.monitor.push(m);
     }
 
-    /// Total wall time spent executing batches.
+    /// Total time spent executing batches, summed over all devices.
     pub fn exec_busy_s(&self) -> f64 {
         self.batches.iter().map(|b| b.exec_s).sum()
+    }
+
+    /// Time spent executing batches on one fleet device.
+    pub fn exec_busy_s_for(&self, device: usize) -> f64 {
+        self.batches.iter().filter(|b| b.device == device)
+            .map(|b| b.exec_s).sum()
     }
 
     pub fn total_load_s(&self) -> f64 {
@@ -84,11 +94,12 @@ impl Recorder {
 
         let mut w = CsvWriter::create(
             &dir.join(format!("{label}_requests.csv")),
-            &["id", "model", "arrival_s", "exec_start_s", "complete_s",
-              "latency_s", "batch", "batch_rows", "caused_swap",
-              "sla_met"])?;
+            &["id", "model", "device", "arrival_s", "exec_start_s",
+              "complete_s", "latency_s", "batch", "batch_rows",
+              "caused_swap", "sla_met"])?;
         for (c, met) in &self.requests {
             w.row(&[c.id.to_string(), c.model.clone(),
+                    c.device.to_string(),
                     fmt(c.arrival_s), fmt(c.exec_start_s),
                     fmt(c.complete_s), fmt(c.latency_s()),
                     c.batch.to_string(), c.batch_rows.to_string(),
@@ -98,10 +109,11 @@ impl Recorder {
 
         let mut w = CsvWriter::create(
             &dir.join(format!("{label}_batches.csv")),
-            &["at_s", "model", "rows", "artifact_batch", "swapped",
-              "load_s", "unload_s", "exec_s", "io_s"])?;
+            &["at_s", "model", "device", "rows", "artifact_batch",
+              "swapped", "load_s", "unload_s", "exec_s", "io_s"])?;
         for b in &self.batches {
-            w.row(&[fmt(b.at_s), b.model.clone(), b.rows.to_string(),
+            w.row(&[fmt(b.at_s), b.model.clone(), b.device.to_string(),
+                    b.rows.to_string(),
                     b.artifact_batch.to_string(), b.swapped.to_string(),
                     fmt(b.load_s), fmt(b.unload_s), fmt(b.exec_s),
                     fmt(b.io_s)])?;
@@ -110,11 +122,13 @@ impl Recorder {
 
         let mut w = CsvWriter::create(
             &dir.join(format!("{label}_monitor.csv")),
-            &["at_s", "cpu_user_s", "cpu_sys_s", "rss_bytes", "vol_ctxt",
-              "invol_ctxt", "gpu_util", "mem_in_use", "mem_peak",
-              "fragmentation", "dma_h2d_bytes", "dma_crypto_s", "swaps"])?;
+            &["at_s", "device", "cpu_user_s", "cpu_sys_s", "rss_bytes",
+              "vol_ctxt", "invol_ctxt", "gpu_util", "mem_in_use",
+              "mem_peak", "fragmentation", "dma_h2d_bytes",
+              "dma_crypto_s", "swaps"])?;
         for m in &self.monitor {
-            w.row(&[fmt(m.proc.at_s), fmt(m.proc.cpu_user_s),
+            w.row(&[fmt(m.proc.at_s), m.device.to_string(),
+                    fmt(m.proc.cpu_user_s),
                     fmt(m.proc.cpu_sys_s), m.proc.rss_bytes.to_string(),
                     m.proc.vol_ctxt.to_string(),
                     m.proc.invol_ctxt.to_string(), fmt(m.gpu_util),
@@ -146,6 +160,7 @@ mod tests {
             batch: 4,
             batch_rows: 3,
             caused_swap: false,
+            device: 0,
         }
     }
 
@@ -155,12 +170,13 @@ mod tests {
         r.on_complete(completed(1, 0.5), true);
         r.on_complete(completed(2, 7.5), false);
         r.on_batch(BatchRecord {
-            at_s: 2.0, model: "llama-sim".into(), rows: 3,
+            at_s: 2.0, model: "llama-sim".into(), device: 1, rows: 3,
             artifact_batch: 4, swapped: true, load_s: 0.4, unload_s: 0.01,
             exec_s: 0.2, io_s: 0.005,
         });
         r.on_monitor(MonitorRecord {
             proc: ProcSample { at_s: 2.5, ..Default::default() },
+            device: 1,
             gpu_util: 0.3, mem_in_use: 100, mem_peak: 200,
             fragmentation: 0.0, dma_h2d_bytes: 1000, dma_crypto_s: 0.1,
             swaps: 1,
@@ -181,7 +197,10 @@ mod tests {
         assert_eq!(mon.rows.len(), 1);
 
         assert!((r.exec_busy_s() - 0.2).abs() < 1e-12);
+        assert!((r.exec_busy_s_for(1) - 0.2).abs() < 1e-12);
+        assert_eq!(r.exec_busy_s_for(0), 0.0);
         assert!((r.total_load_s() - 0.4).abs() < 1e-12);
         assert_eq!(r.latency_hist.count(), 2);
+        assert_eq!(batches.rows[0][batches.col("device").unwrap()], "1");
     }
 }

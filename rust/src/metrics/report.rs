@@ -3,7 +3,7 @@
 //! Turns a set of `RunSummary` cells into the tables behind Fig 5/6/7
 //! and the abstract's headline ratios, as markdown.
 
-use crate::coordinator::server::RunSummary;
+use crate::engine::RunSummary;
 
 /// Render a markdown table of the given summaries, one row per cell.
 pub fn cells_table(cells: &[RunSummary]) -> String {
@@ -131,6 +131,7 @@ mod tests {
             total_exec_s: 20.0,
             total_crypto_s: 1.0,
             mean_load_s: 0.8,
+            ..RunSummary::default()
         }
     }
 

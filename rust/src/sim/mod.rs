@@ -1,17 +1,15 @@
-//! Calibrated discrete-event simulation (DES) of the serving system.
+//! Calibrated discrete-event simulation (DES) support.
 //!
 //! The real serve loop executes XLA and sleeps through DMA throttles, so
 //! a full 72-cell grid (3 patterns × 4 strategies × 3 SLAs × 2 modes)
-//! costs hours of wall clock.  The DES replays the *same* scheduling
-//! code — `ModelQueues`, the `Strategy` impls, `SlaTracker`,
+//! costs hours of wall clock.  The DES path replays the *same*
+//! scheduling code — `ModelQueues`, the `Strategy` impls, `SlaTracker`,
 //! `RateEstimator` — against a cost table measured from the real system
-//! (`CostModel::measure`), advancing a virtual clock instead of
-//! executing.  EXPERIMENTS.md §Calibration cross-checks DES vs real
-//! cells.
+//! ([`CostModel::measure`]), advancing a virtual clock instead of
+//! executing.  Run it through
+//! `engine::EngineBuilder::new(&cfg).des(&manifest, &costs)`;
+//! EXPERIMENTS.md §Calibration cross-checks DES vs real cells.
 
 pub mod calib;
-pub mod des;
 
 pub use calib::CostModel;
-#[allow(deprecated)]
-pub use des::simulate;

@@ -20,7 +20,7 @@ use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use sincere::config::RunConfig;
-use sincere::coordinator::STRATEGY_NAMES;
+use sincere::coordinator::strategy_names;
 use sincere::engine::EngineBuilder;
 use sincere::runtime::registry::SharedRegistry;
 use sincere::runtime::{Manifest, Registry};
@@ -129,7 +129,7 @@ fn des_and_real_backends_agree_exactly() {
 
 #[test]
 fn parity_holds_for_every_strategy() {
-    for strategy in STRATEGY_NAMES {
+    for strategy in strategy_names() {
         let cfg = parity_cfg("cc", strategy);
         let (des, real) = run_pair(&cfg);
         assert_eq!(des.generated, real.generated, "{strategy}");
@@ -138,6 +138,49 @@ fn parity_holds_for_every_strategy() {
         assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
                 "{strategy}: attainment {} vs {}", des.sla_attainment,
                 real.sla_attainment);
+    }
+}
+
+/// The fleet extension of the parity contract: a 4-device mixed
+/// CC/No-CC fleet, with devices executing concurrently in virtual
+/// time, must still agree *exactly* between the DES and the real
+/// execution path — for every placement policy, since placement runs
+/// in the shared engine and both backends report identical per-device
+/// costs.
+#[test]
+fn fleet_parity_4_device_mixed() {
+    for placement in ["affinity", "round-robin"] {
+        let mut cfg = parity_cfg("cc", "select-batch+timer");
+        cfg.devices = 4;
+        cfg.set("device-modes", "cc,no-cc,cc,no-cc").unwrap();
+        cfg.placement = placement.to_string();
+        cfg.mean_rps = 6.0; // keep all four devices busy
+        let (des, real) = run_pair(&cfg);
+        assert_eq!(des.generated, real.generated, "{placement}");
+        assert_eq!(des.completed, real.completed, "{placement}");
+        assert_eq!(des.swap_count, real.swap_count, "{placement}");
+        assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+                "{placement}: attainment {} vs {}", des.sla_attainment,
+                real.sla_attainment);
+        assert!((des.latency_mean_s - real.latency_mean_s).abs() < 1e-9,
+                "{placement}: latency {} vs {}", des.latency_mean_s,
+                real.latency_mean_s);
+        assert!((des.total_load_s - real.total_load_s).abs() < 1e-9,
+                "{placement}: load totals diverged");
+        // per-device breakdowns must agree too
+        assert_eq!(des.per_device.len(), 4, "{placement}");
+        for (a, b) in des.per_device.iter().zip(real.per_device.iter()) {
+            assert_eq!(a.mode, b.mode, "{placement} dev {}", a.device);
+            assert_eq!(a.batches, b.batches,
+                       "{placement} dev {}", a.device);
+            assert_eq!(a.swap_count, b.swap_count,
+                       "{placement} dev {}", a.device);
+            assert_eq!(a.completed, b.completed,
+                       "{placement} dev {}", a.device);
+        }
+        assert!(des.completed > 0, "{placement}: degenerate run");
+        assert!(des.per_device.iter().filter(|d| d.batches > 0).count()
+                >= 2, "{placement}: fleet never spread work");
     }
 }
 

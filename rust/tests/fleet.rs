@@ -1,0 +1,198 @@
+//! Fleet-layer behaviour: placement policies and mixed CC/No-CC
+//! device sets over the DES backend.
+//!
+//! Pins the headline fleet scenarios:
+//! * `affinity` placement performs strictly fewer swaps than
+//!   `round-robin` under identical traffic (2-device fleet);
+//! * a mixed CC/No-CC fleet's per-device load split reflects the
+//!   ~2.7× CC load-cost ratio;
+//! * a `devices=1` fleet is placement-invariant (the backward-parity
+//!   guarantee: every policy degenerates to the single-GPU engine);
+//! * more devices complete more work under overload.
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::engine::{EngineBuilder, RunSummary};
+use sincere::runtime::Manifest;
+use sincere::sim::calib::{CostModel, ModelCosts};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "artifacts missing: run tools/gen_artifacts.py"))
+}
+
+/// Toy cost table with a ~2.83× CC/No-CC load ratio (the paper's
+/// ~2.7× regime) so per-device splits are deterministic.
+fn toy_costs() -> CostModel {
+    let mut cm = CostModel {
+        io_s_per_row_plain: 0.0004,
+        io_s_per_row_cc: 0.0013,
+        ..Default::default()
+    };
+    for f in &manifest().families {
+        let size_factor = f.weights.total_bytes as f64 / 4e6;
+        let mut mc = ModelCosts {
+            load_s_plain: 0.30 * size_factor,
+            load_s_cc: 0.85 * size_factor,
+            unload_s: 0.006,
+            obs: 8,
+            ..Default::default()
+        };
+        for &b in &[1usize, 2, 4, 8] {
+            mc.exec_s_by_batch.insert(
+                b, 0.07 + 0.011 * b as f64 * size_factor);
+        }
+        cm.models.insert(f.name.clone(), mc);
+    }
+    cm
+}
+
+fn fleet_cfg(devices: usize, placement: &str) -> RunConfig {
+    RunConfig {
+        duration_s: 90.0,
+        drain_s: 10.0,
+        mean_rps: 7.0,
+        sla_s: 6.0,
+        strategy: "select-batch+timer".into(),
+        devices,
+        placement: placement.to_string(),
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    }
+}
+
+fn run(cfg: &RunConfig) -> RunSummary {
+    let cm = toy_costs();
+    EngineBuilder::new(cfg).des(manifest(), &cm).unwrap()
+        .run().unwrap().0
+}
+
+/// Headline scenario 1: under identical traffic, affinity routing
+/// avoids the residency ping-pong round-robin causes, so it performs
+/// strictly fewer swaps on a 2-device fleet.
+#[test]
+fn affinity_performs_fewer_swaps_than_round_robin() {
+    let affinity = run(&fleet_cfg(2, "affinity"));
+    let rr = run(&fleet_cfg(2, "round-robin"));
+    assert_eq!(affinity.generated, rr.generated,
+               "same seed, same schedule");
+    assert!(affinity.completed > 0 && rr.completed > 0);
+    assert!(affinity.swap_count < rr.swap_count,
+            "affinity must swap strictly less: affinity {} vs \
+             round-robin {}", affinity.swap_count, rr.swap_count);
+    // fewer swaps means less dead load time, so latency cannot be
+    // meaningfully worse
+    assert!(affinity.latency_mean_s <= rr.latency_mean_s * 1.05,
+            "affinity latency {} vs round-robin {}",
+            affinity.latency_mean_s, rr.latency_mean_s);
+}
+
+/// Headline scenario 2: in a mixed CC/No-CC fleet serving one model
+/// through round-robin, each device loads the model exactly once, so
+/// the per-device load-time split is exactly the CC/No-CC load-cost
+/// ratio (~2.83× in the toy table, the paper's ~2.7× regime).
+#[test]
+fn mixed_fleet_load_split_reflects_cc_ratio() {
+    let mut cfg = fleet_cfg(2, "round-robin");
+    cfg.models = vec!["llama-sim".into()];
+    cfg.set("device-modes", "cc,no-cc").unwrap();
+    let s = run(&cfg);
+    assert_eq!(s.mode, "mixed");
+    assert_eq!(s.devices, 2);
+    assert_eq!(s.per_device.len(), 2);
+    let cc = &s.per_device[0];
+    let nocc = &s.per_device[1];
+    assert_eq!(cc.mode, "cc");
+    assert_eq!(nocc.mode, "no-cc");
+    assert_eq!(cc.swap_count, 1, "one model: one load per device");
+    assert_eq!(nocc.swap_count, 1);
+    let ratio = cc.load_s / nocc.load_s;
+    assert!((2.5..3.2).contains(&ratio),
+            "per-device load split {ratio:.2}x should reflect the \
+             ~2.7x CC load-cost ratio");
+    // both devices serve traffic and report utilization
+    assert!(cc.batches > 0 && nocc.batches > 0);
+    assert!(cc.util > 0.0 && nocc.util > 0.0);
+    // the CC device sinks strictly more seconds into loading — the
+    // utilization split the mixed fleet exists to expose
+    assert!(cc.load_s > nocc.load_s);
+    // per-device completions add up to the fleet aggregate
+    assert_eq!(cc.completed + nocc.completed, s.completed);
+}
+
+/// Backward parity: on a devices=1 fleet every placement policy is a
+/// constant, so the whole `RunSummary` is placement-invariant — the
+/// fleet engine degenerates to the paper's single-GPU loop.
+#[test]
+fn single_device_runs_are_placement_invariant() {
+    let base = run(&fleet_cfg(1, "affinity"));
+    assert_eq!(base.devices, 1);
+    assert_eq!(base.per_device.len(), 1);
+    // the single device carries all fleet aggregates
+    assert_eq!(base.per_device[0].swap_count, base.swap_count);
+    assert_eq!(base.per_device[0].completed, base.completed);
+    for placement in ["round-robin", "least-loaded", "cc-aware"] {
+        let other = run(&fleet_cfg(1, placement));
+        assert_eq!(base.generated, other.generated, "{placement}");
+        assert_eq!(base.completed, other.completed, "{placement}");
+        assert_eq!(base.swap_count, other.swap_count, "{placement}");
+        assert!((base.latency_mean_s - other.latency_mean_s).abs()
+                < 1e-12, "{placement}");
+        assert!((base.runtime_s - other.runtime_s).abs() < 1e-12,
+                "{placement}");
+    }
+}
+
+/// Scaling sanity: under overload, a 4-device fleet completes strictly
+/// more requests than a single device from the same arrival schedule.
+#[test]
+fn fleet_scales_completions_under_overload() {
+    // one device peaks near 50 rps with the toy exec table (batches of
+    // 8 at ~0.16 s) before swap losses; 80 rps saturates it while a
+    // 4-device fleet absorbs the load
+    let overload = |devices: usize| {
+        let mut cfg = fleet_cfg(devices, "affinity");
+        cfg.mean_rps = 80.0;
+        cfg.sla_s = 4.0;
+        cfg.duration_s = 60.0;
+        run(&cfg)
+    };
+    let one = overload(1);
+    let four = overload(4);
+    assert_eq!(one.generated, four.generated);
+    assert!(four.completed > one.completed,
+            "4 devices must complete more: {} vs {}", four.completed,
+            one.completed);
+    assert!(four.sla_attainment >= one.sla_attainment - 0.01,
+            "attainment fell with more devices: {} vs {}",
+            four.sla_attainment, one.sla_attainment);
+    // work actually spread across the fleet
+    assert!(four.per_device.iter().filter(|d| d.batches > 0).count()
+            >= 2);
+}
+
+/// cc-aware placement on a mixed fleet must not do worse on SLA
+/// attainment than residency-blind round-robin under pressure.
+#[test]
+fn cc_aware_attainment_not_worse_than_round_robin_on_mixed_fleet() {
+    let run_mixed = |placement: &str| {
+        let mut cfg = fleet_cfg(2, placement);
+        cfg.set("device-modes", "cc,no-cc").unwrap();
+        cfg.mean_rps = 10.0;
+        cfg.sla_s = 4.0;
+        run(&cfg)
+    };
+    let aware = run_mixed("cc-aware");
+    let rr = run_mixed("round-robin");
+    assert!(aware.completed > 0);
+    assert!(aware.sla_attainment >= rr.sla_attainment - 0.02,
+            "cc-aware {} vs round-robin {}", aware.sla_attainment,
+            rr.sla_attainment);
+}

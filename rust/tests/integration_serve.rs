@@ -9,7 +9,7 @@ use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use sincere::config::RunConfig;
-use sincere::coordinator::STRATEGY_NAMES;
+use sincere::coordinator::strategy_names;
 use sincere::engine::EngineBuilder;
 use sincere::runtime::registry::SharedRegistry;
 use sincere::runtime::{Manifest, Registry};
@@ -72,7 +72,7 @@ fn serve_accounting_identities() {
 
 #[test]
 fn all_strategies_serve_and_complete() {
-    for name in STRATEGY_NAMES {
+    for name in strategy_names() {
         let mut cfg = fast_cfg(&format!("strat_{name}"));
         cfg.strategy = name.to_string();
         let (summary, _) = registry()
@@ -80,7 +80,7 @@ fn all_strategies_serve_and_complete() {
                 .and_then(|b| b.run()))
             .unwrap();
         assert!(summary.completed > 0, "{name} completed nothing");
-        if *name != "best-batch" {
+        if name != "best-batch" {
             // timer-bearing strategies must drain almost everything in
             // an unthrottled run ...
             assert!(summary.completed * 10 >= summary.generated * 8,
@@ -95,6 +95,56 @@ fn all_strategies_serve_and_complete() {
                     summary.completed, summary.generated);
         }
     }
+}
+
+#[test]
+fn two_device_fleet_serves_with_per_device_accounting() {
+    let mut cfg = fast_cfg("fleet2");
+    cfg.devices = 2;
+    cfg.placement = "affinity".into();
+    let (summary, recorder) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
+    assert!(summary.completed > 0);
+    assert_eq!(summary.devices, 2);
+    assert_eq!(summary.per_device.len(), 2);
+    // per-device slices partition the fleet aggregates
+    let completed: u64 = summary.per_device.iter()
+        .map(|d| d.completed).sum();
+    assert_eq!(completed, summary.completed);
+    let swaps: u64 = summary.per_device.iter()
+        .map(|d| d.swap_count).sum();
+    assert_eq!(swaps, summary.swap_count);
+    // two models on two devices under affinity: each model keeps its
+    // own device, so residency churn stays minimal
+    assert!(summary.swap_count <= 6,
+            "affinity fleet thrashed: {} swaps", summary.swap_count);
+    // every batch record names a real device
+    assert!(recorder.batches.iter().all(|b| b.device < 2));
+}
+
+#[test]
+fn mixed_mode_fleet_runs_for_real() {
+    let mut cfg = fast_cfg("fleet_mixed");
+    cfg.devices = 2;
+    cfg.set("device-modes", "cc,no-cc").unwrap();
+    let (summary, _) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
+    assert!(summary.completed > 0);
+    assert_eq!(summary.mode, "mixed");
+    assert_eq!(summary.per_device[0].mode, "cc");
+    assert_eq!(summary.per_device[1].mode, "no-cc");
+    // only the CC device can accrue crypto time, and if it swapped at
+    // all it must have
+    if summary.per_device[0].swap_count > 0 {
+        assert!(summary.per_device[0].crypto_s > 0.0,
+                "CC device swapped without paying crypto");
+    }
+    assert_eq!(summary.per_device[1].crypto_s, 0.0,
+               "No-CC device must never pay crypto");
 }
 
 #[test]

@@ -1,15 +1,17 @@
-//! Integration: cost-model calibration + DES, including a DES-vs-real
+//! Integration: cost-model calibration + DES (through `EngineBuilder`,
+//! the single supported entry point), including a DES-vs-real
 //! cross-check on an unthrottled configuration.
 
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use sincere::config::RunConfig;
-use sincere::engine::EngineBuilder;
+use sincere::engine::{EngineBuilder, RunSummary};
 use sincere::gpu::device::GpuConfig;
 use sincere::gpu::CcMode;
 use sincere::runtime::registry::SharedRegistry;
 use sincere::runtime::{Manifest, Registry};
+use sincere::sim::calib::ModelCosts;
 use sincere::sim::CostModel;
 
 fn artifacts_dir() -> PathBuf {
@@ -161,4 +163,121 @@ fn des_rejects_unknown_model() {
         .des(manifest(), measured_costs())
         .and_then(|b| b.run())
         .is_err());
+}
+
+// ---------------------------------------------------------------------
+// DES behaviour on a hand-built toy cost table (ported from the old
+// `sim::simulate` shim's tests when the deprecated entry point was
+// removed; everything runs through `EngineBuilder` now).
+// ---------------------------------------------------------------------
+
+fn toy_costs(manifest: &Manifest) -> CostModel {
+    let mut cm = CostModel {
+        io_s_per_row_plain: 0.0005,
+        io_s_per_row_cc: 0.0015,
+        ..Default::default()
+    };
+    for f in &manifest.families {
+        let size_factor = f.weights.total_bytes as f64 / 4e6;
+        let mut mc = ModelCosts {
+            load_s_plain: 0.35 * size_factor,
+            load_s_cc: 1.0 * size_factor,
+            unload_s: 0.006,
+            obs: 16,
+            ..Default::default()
+        };
+        for &b in &[1usize, 2, 4, 8, 16, 32] {
+            mc.exec_s_by_batch.insert(
+                b, 0.08 + 0.012 * b as f64 * size_factor);
+        }
+        cm.models.insert(f.name.clone(), mc);
+    }
+    cm
+}
+
+fn toy_cfg() -> RunConfig {
+    RunConfig {
+        duration_s: 120.0,
+        drain_s: 10.0,
+        mean_rps: 4.0,
+        ..Default::default()
+    }
+}
+
+fn toy_run(cfg: &RunConfig) -> RunSummary {
+    let m = manifest();
+    let costs = toy_costs(m);
+    EngineBuilder::new(cfg).des(m, &costs).unwrap().run().unwrap().0
+}
+
+#[test]
+fn simulation_completes_requests() {
+    let s = toy_run(&toy_cfg());
+    assert!(s.generated > 300, "generated {}", s.generated);
+    assert!(s.completed > 0);
+    assert!(s.completed + 50 > s.generated / 2,
+            "too few completed: {}/{}", s.completed, s.generated);
+    assert!(s.gpu_util > 0.0 && s.gpu_util < 1.0);
+    assert!(s.swap_count > 1);
+}
+
+#[test]
+fn cc_mode_is_slower_end_to_end() {
+    let mut cc = toy_cfg();
+    cc.set("mode", "cc").unwrap();
+    let s_cc = toy_run(&cc);
+    let s_plain = toy_run(&toy_cfg());
+    assert!(s_cc.latency_mean_s > s_plain.latency_mean_s,
+            "cc {} <= plain {}", s_cc.latency_mean_s,
+            s_plain.latency_mean_s);
+    assert!(s_cc.sla_attainment <= s_plain.sla_attainment + 0.05);
+}
+
+#[test]
+fn deterministic_for_same_seed() {
+    let a = toy_run(&toy_cfg());
+    let b = toy_run(&toy_cfg());
+    assert_eq!(a.completed, b.completed);
+    assert!((a.latency_mean_s - b.latency_mean_s).abs() < 1e-12);
+}
+
+#[test]
+fn all_strategies_run() {
+    for name in sincere::coordinator::strategy_names() {
+        let mut cfg = toy_cfg();
+        cfg.strategy = name.to_string();
+        let s = toy_run(&cfg);
+        assert!(s.completed > 0, "{name} completed nothing");
+    }
+}
+
+#[test]
+fn accounting_identity_holds() {
+    // generated == completed + unserved (via sla totals)
+    let s = toy_run(&toy_cfg());
+    assert!(s.sla_met <= s.completed);
+    assert!(s.completed <= s.generated);
+}
+
+/// Satellite for `queues.rs::expire`: when expiry interleaves with
+/// partial-batch drains (the partial+timer strategy under a tight
+/// SLA), every generated request must be accounted exactly once —
+/// attainment's denominator equals the generated count, so nothing is
+/// double-counted between expiry, drain, and completion.
+#[test]
+fn expiry_interleaved_with_partial_drain_counts_once() {
+    let mut cfg = toy_cfg();
+    cfg.strategy = "best-batch+partial+timer".into();
+    cfg.sla_s = 1.5; // tight: plenty of in-queue expiry
+    cfg.mean_rps = 8.0;
+    let s = toy_run(&cfg);
+    assert!(s.completed > 0);
+    assert!(s.sla_met > 0, "degenerate run: nothing met the SLA");
+    assert!(s.completed < s.generated, "need some unfulfilled requests");
+    // attainment = met / (met + missed); the denominator must be the
+    // generated count — each request counted exactly once
+    let total = (s.sla_met as f64 / s.sla_attainment).round() as u64;
+    assert_eq!(total, s.generated,
+               "unfulfilled accounting drifted: met={} att={} gen={}",
+               s.sla_met, s.sla_attainment, s.generated);
 }

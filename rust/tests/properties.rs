@@ -3,10 +3,11 @@
 
 use sincere::coordinator::queues::ModelQueues;
 use sincere::coordinator::request::Request;
-use sincere::coordinator::strategy::{strategy_by_name, Decision,
-                                     ModelView, SchedContext,
-                                     STRATEGY_NAMES};
+use sincere::coordinator::strategy::{strategy_by_name, strategy_names,
+                                     Decision, DeviceView, ModelView,
+                                     SchedContext};
 use sincere::gpu::cc::CcSession;
+use sincere::gpu::CcMode;
 use sincere::gpu::hbm::HbmAllocator;
 use sincere::metrics::hist::Histogram;
 use sincere::prop_assert;
@@ -75,22 +76,33 @@ fn prop_strategy_decisions_valid() {
             est_load_s: g.f64_in(0.0, 2.0),
             est_exec_s: g.f64_in(0.0, 2.0),
         }).collect();
-        let ctx = SchedContext {
-            now_s: g.f64_in(0.0, 1000.0),
+        // a random small fleet with random residents; device 0 is
+        // always free so strategies can dispatch
+        let n_dev = g.usize_in(1, 3);
+        let devices: Vec<DeviceView> = (0..n_dev).map(|d| DeviceView {
+            id: d,
+            mode: if g.bool() { CcMode::On } else { CcMode::Off },
             resident: if g.bool() {
                 Some(format!("m{}", g.usize_in(0, n_queues - 1)))
             } else {
                 None
             },
+            busy: d != 0 && g.bool(),
+            busy_s: g.f64_in(0.0, 100.0),
+            dispatched: g.u64() % 100,
+        }).collect();
+        let ctx = SchedContext {
+            now_s: g.f64_in(0.0, 1000.0),
+            devices,
             queues: queues.clone(),
             sla_s: g.f64_in(0.5, 10.0),
             timeout_s: g.f64_in(0.1, 5.0),
         };
-        for name in STRATEGY_NAMES {
+        for name in strategy_names() {
             let s = strategy_by_name(name).unwrap();
             match s.decide(&ctx) {
                 Decision::Wait => {}
-                Decision::Process { model, take } => {
+                Decision::Process { model, take, device } => {
                     let v = queues.iter().find(|v| v.model == model);
                     prop_assert!(v.is_some(),
                                  "{name} chose unknown model {model}");
@@ -100,6 +112,12 @@ fn prop_strategy_decisions_valid() {
                                  "{name} take {take} > len {}", v.len);
                     prop_assert!(take <= v.obs.max(1),
                                  "{name} take {take} > obs {}", v.obs);
+                    if let Some(d) = device {
+                        prop_assert!(d < ctx.devices.len(),
+                                     "{name} pinned unknown device {d}");
+                        prop_assert!(!ctx.devices[d].busy,
+                                     "{name} pinned a busy device {d}");
+                    }
                 }
             }
         }
@@ -125,7 +143,14 @@ fn prop_timer_never_waits_when_overdue() {
         }];
         let ctx = SchedContext {
             now_s: 50.0,
-            resident: None,
+            devices: vec![DeviceView {
+                id: 0,
+                mode: CcMode::Off,
+                resident: None,
+                busy: false,
+                busy_s: 0.0,
+                dispatched: 0,
+            }],
             queues,
             sla_s: 6.0,
             timeout_s: timeout,

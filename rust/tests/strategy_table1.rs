@@ -3,9 +3,21 @@
 //! paper's plan composition has to get right — empty queues, timer
 //! expiry, partial-batch drain, and the SelectBatch headroom clamp.
 
-use sincere::coordinator::strategy::{strategy_by_name, Decision,
-                                     ModelView, SchedContext,
-                                     SelectBatchTimer, STRATEGY_NAMES};
+use sincere::coordinator::strategy::{strategy_by_name, strategy_names,
+                                     Decision, DeviceView, ModelView,
+                                     SchedContext, SelectBatchTimer};
+use sincere::gpu::CcMode;
+
+fn device(id: usize, resident: Option<&str>) -> DeviceView {
+    DeviceView {
+        id,
+        mode: CcMode::Off,
+        resident: resident.map(|s| s.to_string()),
+        busy: false,
+        busy_s: 0.0,
+        dispatched: 0,
+    }
+}
 
 fn view(model: &str, len: usize, wait_s: f64) -> ModelView {
     ModelView {
@@ -22,18 +34,22 @@ fn view(model: &str, len: usize, wait_s: f64) -> ModelView {
 fn ctx(resident: Option<&str>, queues: Vec<ModelView>) -> SchedContext {
     SchedContext {
         now_s: 100.0,
-        resident: resident.map(|s| s.to_string()),
+        devices: vec![device(0, resident)],
         queues,
         sla_s: 6.0,
         timeout_s: 3.0,
     }
 }
 
+fn process(model: &str, take: usize) -> Decision {
+    Decision::Process { model: model.into(), take, device: None }
+}
+
 // ------------------------------------------------------- empty queues
 
 #[test]
 fn empty_queues_always_wait() {
-    for name in STRATEGY_NAMES {
+    for name in strategy_names() {
         let s = strategy_by_name(name).unwrap();
         assert_eq!(s.decide(&ctx(None, vec![])), Decision::Wait,
                    "{name} with no queues");
@@ -53,7 +69,7 @@ fn timer_expiry_forces_undersized_batch() {
         let s = strategy_by_name(name).unwrap();
         let c = ctx(None, vec![view("a", 3, 3.5)]);
         match s.decide(&c) {
-            Decision::Process { model, take } => {
+            Decision::Process { model, take, .. } => {
                 assert_eq!(model, "a", "{name}");
                 assert!(take >= 1 && take <= 3, "{name} take {take}");
             }
@@ -86,8 +102,7 @@ fn exactly_at_timeout_fires() {
     // boundary: oldest_wait == timeout_s counts as overdue
     let s = strategy_by_name("best-batch+timer").unwrap();
     let c = ctx(None, vec![view("a", 2, 3.0)]);
-    assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 2 });
+    assert_eq!(s.decide(&c), process("a", 2));
 }
 
 #[test]
@@ -102,11 +117,13 @@ fn below_timeout_below_obs_waits() {
 #[test]
 fn partial_drains_resident_before_swapping_away() {
     // "b" is overdue (would force a swap); resident "a" still has two
-    // queued — the Partial Batch plan drains them first.
+    // queued — the Partial Batch plan drains them first, pinned to the
+    // resident's device.
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
     let c = ctx(Some("a"), vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
     assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 2 });
+               Decision::Process { model: "a".into(), take: 2,
+                                   device: Some(0) });
 }
 
 #[test]
@@ -118,19 +135,55 @@ fn partial_drain_happens_once_per_residency() {
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
     let c = ctx(Some("a"), vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
     assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 2 });
+               Decision::Process { model: "a".into(), take: 2,
+                                   device: Some(0) });
     // resident queue refilled during the drain — swap must still win
     let c2 = ctx(Some("a"), vec![view("a", 1, 0.1), view("b", 3, 4.2)]);
-    assert_eq!(s.decide(&c2),
-               Decision::Process { model: "b".into(), take: 3 });
+    assert_eq!(s.decide(&c2), process("b", 3));
 }
 
 #[test]
 fn partial_without_resident_backlog_swaps_immediately() {
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
     let c = ctx(Some("a"), vec![view("b", 3, 4.0)]);
+    assert_eq!(s.decide(&c), process("b", 3));
+}
+
+#[test]
+fn partial_drain_targets_resident_on_second_device() {
+    // Fleet: resident "a" on device 1; the drain decision must pin
+    // device 1 so the engine does not place the batch elsewhere.
+    let s = strategy_by_name("best-batch+partial+timer").unwrap();
+    let mut c = ctx(None, vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+    c.devices.push(device(1, Some("a")));
     assert_eq!(s.decide(&c),
-               Decision::Process { model: "b".into(), take: 3 });
+               Decision::Process { model: "a".into(), take: 2,
+                                   device: Some(1) });
+}
+
+#[test]
+fn partial_drain_is_bounded_on_multi_device_fleets() {
+    // Two residents (a on dev0, b on dev1) with refilling queues and an
+    // overdue third model: each resident gets exactly one final drain,
+    // then the swap to "c" must go through — a shared single drain slot
+    // would let a and b ping-pong drains and starve "c" forever.
+    let s = strategy_by_name("best-batch+partial+timer").unwrap();
+    let fleet_ctx = |a_len: usize, b_len: usize| {
+        let mut c = ctx(Some("a"),
+                        vec![view("a", a_len, 0.5), view("b", b_len, 0.6),
+                             view("c", 3, 4.0)]);
+        c.devices.push(device(1, Some("b")));
+        c
+    };
+    assert_eq!(s.decide(&fleet_ctx(2, 2)),
+               Decision::Process { model: "a".into(), take: 2,
+                                   device: Some(0) });
+    // a's queue refilled during its drain — b drains next, not a again
+    assert_eq!(s.decide(&fleet_ctx(2, 2)),
+               Decision::Process { model: "b".into(), take: 2,
+                                   device: Some(1) });
+    // both drained: the swap to the overdue model proceeds
+    assert_eq!(s.decide(&fleet_ctx(1, 1)), process("c", 3));
 }
 
 // ------------------------------------------- select-batch headroom
@@ -173,14 +226,13 @@ fn select_batch_overdue_take_is_capped_by_queue_length() {
     // desired 5 s → obs-clamped 8) is larger: take the whole queue
     let mut c = ctx(None, vec![view("a", 3, 4.0)]);
     c.queues[0].rate_rps = 8.0;
-    assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 3 });
+    assert_eq!(s.decide(&c), process("a", 3));
 }
 
 #[test]
 fn select_batch_waits_below_target() {
     let s = strategy_by_name("select-batch+timer").unwrap();
-    // rate 2, desired 5 → target 8 (obs clamp); queue of 5, not overdue
+    // rate 2, desired 5 → target 8 (obs clamp); queue of 7, not overdue
     // → wait for more arrivals... but only when below target:
     let c = ctx(None, vec![view("a", 7, 0.1)]);
     assert_eq!(s.decide(&c), Decision::Wait);
