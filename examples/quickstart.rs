@@ -35,7 +35,7 @@ fn main() -> anyhow::Result<()> {
     // Load the model through the CC bounce-buffer path.
     let rep = swaps.ensure_resident(&mut gpu, &registry, "llama-sim")?;
     println!("model load: {:.3}s ({:.3}s of AES-CTR+HMAC)",
-             rep.load_s, rep.crypto_s);
+             rep.load_s, rep.crypto_total_s);
 
     // Tokenize three prompts and run them as one batch.
     let spec = &registry.entry("llama-sim")?.spec;

@@ -65,6 +65,12 @@ pub struct RunConfig {
     pub device_bw_scale: Vec<f64>,
     /// Fleet placement policy, see `coordinator::placement_names`.
     pub placement: String,
+
+    /// Predictive model prefetch: while a batch executes, decrypt-ahead
+    /// the strategy's next-model hint into a staging buffer so the
+    /// following swap promotes it without a second DMA
+    /// (`coordinator::prefetch`).
+    pub prefetch: bool,
 }
 
 impl Default for RunConfig {
@@ -92,6 +98,7 @@ impl Default for RunConfig {
             device_hbm_mb: Vec::new(),
             device_bw_scale: Vec::new(),
             placement: "affinity".into(),
+            prefetch: false,
         }
     }
 }
@@ -147,6 +154,14 @@ impl RunConfig {
                 self.device_bw_scale = parse_f64_list(key, value)?;
             }
             "placement" => self.placement = value.to_string(),
+            "pipeline-depth" => {
+                self.gpu.pipeline_depth = value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --pipeline-depth {value:?}"))?;
+            }
+            "cc-crypto-frac" => {
+                self.gpu.cc_crypto_frac = parse_f64(key, value)?;
+            }
+            "prefetch" => self.prefetch = parse_bool(key, value)?,
             "hbm-mb" => self.gpu.hbm_capacity =
                 (parse_f64(key, value)? * 1024.0 * 1024.0) as u64,
             "bw-plain-mbps" => self.gpu.bw_plain =
@@ -178,15 +193,21 @@ impl RunConfig {
     }
 
     /// Grid-cell label, e.g. `cc_gamma_select-batch+timer_sla6`
-    /// (fleet runs append `_devN`).
+    /// (fleet runs append `_devN`; pipelined runs `_pipeN`; prefetch
+    /// runs `_pf`).
     pub fn cell_label(&self) -> String {
-        let base = format!("{}_{}_{}_sla{}", self.mode.as_str(),
-                           self.pattern, self.strategy, self.sla_s);
+        let mut base = format!("{}_{}_{}_sla{}", self.mode.as_str(),
+                               self.pattern, self.strategy, self.sla_s);
         if self.devices > 1 {
-            format!("{base}_dev{}", self.devices)
-        } else {
-            base
+            base.push_str(&format!("_dev{}", self.devices));
         }
+        if self.gpu.pipeline_depth >= 2 {
+            base.push_str(&format!("_pipe{}", self.gpu.pipeline_depth));
+        }
+        if self.prefetch {
+            base.push_str("_pf");
+        }
+        base
     }
 
     /// One `GpuConfig` per fleet device: the base `gpu` config with the
@@ -224,6 +245,10 @@ impl RunConfig {
         anyhow::ensure!((0.0..=1.0).contains(&self.timeout_frac),
                         "timeout-frac must be in [0,1]");
         anyhow::ensure!(self.devices >= 1, "devices must be >= 1");
+        anyhow::ensure!(
+            self.gpu.cc_crypto_frac.is_finite()
+                && (0.0..=1.0).contains(&self.gpu.cc_crypto_frac),
+            "cc-crypto-frac must be in [0,1]");
         for (name, len) in [("device-modes", self.device_modes.len()),
                             ("device-hbm-mb", self.device_hbm_mb.len()),
                             ("device-bw-scale",
@@ -248,6 +273,14 @@ fn parse_f64_list(key: &str, value: &str) -> anyhow::Result<Vec<f64>> {
     value.split(',')
         .map(|s| parse_f64(key, s.trim()))
         .collect()
+}
+
+fn parse_bool(key: &str, value: &str) -> anyhow::Result<bool> {
+    match value.trim().to_ascii_lowercase().as_str() {
+        "on" | "true" | "1" | "yes" => Ok(true),
+        "off" | "false" | "0" | "no" => Ok(false),
+        _ => anyhow::bail!("bad --{key} value {value:?} (want on|off)"),
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +380,26 @@ mod tests {
         let mut c = RunConfig::default();
         c.placement = "nope".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pipeline_and_prefetch_flags() {
+        let mut c = RunConfig::default();
+        c.set("pipeline-depth", "2").unwrap();
+        c.set("cc-crypto-frac", "0.4").unwrap();
+        c.set("prefetch", "on").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.gpu.pipeline_depth, 2);
+        assert!((c.gpu.cc_crypto_frac - 0.4).abs() < 1e-12);
+        assert!(c.prefetch);
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_pipe2_pf");
+        c.set("prefetch", "off").unwrap();
+        assert!(!c.prefetch);
+        assert!(c.set("pipeline-depth", "two").is_err());
+        assert!(c.set("prefetch", "maybe").is_err());
+        c.set("cc-crypto-frac", "1.5").unwrap();
+        assert!(c.validate().is_err(), "frac above 1 must fail validation");
     }
 
     #[test]

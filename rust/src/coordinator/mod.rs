@@ -10,6 +10,7 @@
 pub mod batcher;
 pub mod http;
 pub mod placement;
+pub mod prefetch;
 pub mod queues;
 pub mod rate;
 pub mod request;

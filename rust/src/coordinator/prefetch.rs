@@ -1,0 +1,107 @@
+//! Predictive model prefetch: pick the model a device should
+//! decrypt-ahead while its current batch executes.
+//!
+//! The CC swap path is expensive because the whole weight blob rides
+//! the encrypted bounce path at swap time.  PipeLLM-style speculative
+//! staging hides that cost: while device *d* executes a batch of model
+//! *M*, the engine stages the predicted next model *H* into a second
+//! device buffer through the (pipelined) DMA path, so a later swap to
+//! *H* promotes the staged buffer without a second DMA.
+//!
+//! The staged-residency state machine itself lives in
+//! [`crate::coordinator::swap::SwapManager`] (real path) and in the DES
+//! backend's mirrored staging slots; this module is the *predictor* —
+//! the default implementation behind [`Strategy::next_hint`]:
+//!
+//! ```text
+//!             prefetch(H)             ensure_resident(H)
+//!  (empty) ─────────────────▶ staged(H) ─────────────────▶ resident(H)
+//!     ▲                          │                          (promoted,
+//!     │   ensure_resident(X≠H)   │                           no DMA)
+//!     └──────────────────────────┘
+//!          wrong prediction: staged buffer dropped, normal swap
+//! ```
+//!
+//! The prediction mirrors how every Table I strategy actually picks
+//! work: the timer guarantee dispatches the longest-waiting head first,
+//! so among the queues that would force a swap, the one whose head has
+//! waited longest is the most likely next residency.  Ties break to the
+//! longer queue, then lexicographically, so the hint is deterministic —
+//! a requirement for the DES-vs-real parity contract.
+//!
+//! [`Strategy::next_hint`]: crate::coordinator::strategy::Strategy::next_hint
+
+use crate::coordinator::strategy::SchedContext;
+
+/// Predict the model most likely to be dispatched after `chosen`:
+/// the longest-waiting other queue (timer order), ties to the longer
+/// queue, then the lexicographically smallest name.  `None` when no
+/// other queue holds work.
+pub fn predict_next(ctx: &SchedContext, chosen: &str) -> Option<String> {
+    ctx.queues.iter()
+        .filter(|v| v.model != chosen && v.len > 0)
+        .max_by(|a, b| {
+            a.oldest_wait_s.partial_cmp(&b.oldest_wait_s).unwrap()
+                .then(a.len.cmp(&b.len))
+                // max_by keeps the *greater* element: reverse the name
+                // order so the smaller name wins ties
+                .then(b.model.cmp(&a.model))
+        })
+        .map(|v| v.model.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::strategy::ModelView;
+
+    fn view(model: &str, len: usize, wait: f64) -> ModelView {
+        ModelView {
+            model: model.into(),
+            len,
+            oldest_wait_s: wait,
+            obs: 8,
+            rate_rps: 2.0,
+            est_load_s: 0.5,
+            est_exec_s: 0.5,
+        }
+    }
+
+    fn ctx(queues: Vec<ModelView>) -> SchedContext {
+        SchedContext {
+            now_s: 10.0,
+            devices: Vec::new(),
+            queues,
+            sla_s: 6.0,
+            timeout_s: 3.0,
+        }
+    }
+
+    #[test]
+    fn predicts_longest_waiting_other_queue() {
+        let c = ctx(vec![view("a", 4, 5.0), view("b", 2, 2.0),
+                         view("c", 9, 4.0)]);
+        assert_eq!(predict_next(&c, "a"), Some("c".into()),
+                   "a excluded; c has waited longest among the rest");
+        assert_eq!(predict_next(&c, "c"), Some("a".into()));
+    }
+
+    #[test]
+    fn ties_break_to_longer_queue_then_name() {
+        let c = ctx(vec![view("a", 1, 2.0), view("b", 5, 2.0)]);
+        assert_eq!(predict_next(&c, "x"), Some("b".into()));
+        let c = ctx(vec![view("b", 3, 2.0), view("a", 3, 2.0)]);
+        assert_eq!(predict_next(&c, "x"), Some("a".into()),
+                   "full tie is deterministic: smallest name");
+    }
+
+    #[test]
+    fn no_other_work_means_no_hint() {
+        assert_eq!(predict_next(&ctx(vec![]), "a"), None);
+        let c = ctx(vec![view("a", 4, 1.0)]);
+        assert_eq!(predict_next(&c, "a"), None,
+                   "the dispatched model is never its own hint");
+        let c = ctx(vec![view("b", 0, 0.0)]);
+        assert_eq!(predict_next(&c, "a"), None, "empty queues don't hint");
+    }
+}

@@ -114,6 +114,16 @@ pub enum Decision {
 pub trait Strategy: Send {
     fn name(&self) -> &'static str;
     fn decide(&self, ctx: &SchedContext) -> Decision;
+
+    /// Next-model hint for predictive prefetch: the model this strategy
+    /// is most likely to dispatch after `chosen`, or `None` to skip
+    /// staging.  The default mirrors the timer guarantee every Table I
+    /// strategy shares — the longest-waiting other queue — which is
+    /// also deterministic, as the DES-vs-real parity contract requires
+    /// (see `coordinator::prefetch`).
+    fn next_hint(&self, ctx: &SchedContext, chosen: &str) -> Option<String> {
+        crate::coordinator::prefetch::predict_next(ctx, chosen)
+    }
 }
 
 /// One Table I strategy: CLI name + constructor.

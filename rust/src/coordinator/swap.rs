@@ -1,11 +1,19 @@
-//! Model swap manager: residency state machine + load/unload timing.
+//! Model swap manager: residency state machine + load/unload timing,
+//! plus the *staged* residency slot behind predictive prefetch.
 //!
-//! "A single VM with one GPU ... capable of serving one model at a time"
-//! (§III-A): at most one model's weights are resident.  A swap unloads
-//! the current model (cheap, mode-independent) and DMAs the next model's
-//! weight blob through the device's (optionally confidential) transfer
-//! path — the expensive step whose CC overhead drives the paper's
-//! headline results.
+//! "A single VM with one GPU ... capable of serving one model at a
+//! time" (§III-A): at most one model's weights are resident.  A swap
+//! unloads the current model (cheap, mode-independent) and DMAs the
+//! next model's weight blob through the device's (optionally
+//! confidential) transfer path — the expensive step whose CC overhead
+//! drives the paper's headline results.
+//!
+//! Prefetch (`coordinator::prefetch`) adds one more slot: a *staged*
+//! buffer holding a speculatively decrypted-ahead model.  `prefetch`
+//! uploads the hinted model next to the resident one while a batch
+//! executes; a later `ensure_resident` for that model *promotes* the
+//! staged buffer — no second DMA — while a wrong prediction just frees
+//! it and takes the normal swap path.
 
 use crate::gpu::device::SimGpu;
 use crate::gpu::hbm::HbmBuffer;
@@ -14,12 +22,35 @@ use crate::runtime::Registry;
 /// Timing of one `ensure_resident` call.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SwapReport {
-    /// True if a load (and possibly an unload) actually happened.
+    /// True if a residency change actually happened.
     pub swapped: bool,
+    /// True when the load was satisfied by promoting a staged
+    /// (prefetched) buffer — `load_s` is then zero: no second DMA.
+    pub promoted: bool,
+    /// True when a staged buffer for a *different* model was discarded
+    /// (wrong prediction).
+    pub dropped_staged: bool,
     pub load_s: f64,
     pub unload_s: f64,
-    /// Crypto share of the load (CC only).
-    pub crypto_s: f64,
+    /// Total modeled crypto work of the load (CC only).
+    pub crypto_total_s: f64,
+    /// Crypto time not hidden behind the link (== total when the DMA
+    /// pipeline is off; see `gpu::dma`).
+    pub crypto_exposed_s: f64,
+}
+
+/// Timing of one `prefetch` staging upload.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchReport {
+    /// Staging cost: the (pipelined) DMA load of the hinted model.
+    pub load_s: f64,
+    /// Crypto work done ahead of time.  None of it is *exposed* at the
+    /// swap — that is the point — so only the total is reported here;
+    /// any part of the staging that outlives the batch it hides behind
+    /// shows up on the engine's device timeline instead.
+    pub crypto_total_s: f64,
+    /// True when an older staged model was discarded to restage.
+    pub dropped_staged: bool,
 }
 
 /// Per-model load/unload statistics for Fig 3.
@@ -28,14 +59,27 @@ pub struct SwapStats {
     pub swap_count: u64,
     pub total_load_s: f64,
     pub total_unload_s: f64,
+    /// Total crypto work (demand loads + prefetch staging).
     pub total_crypto_s: f64,
-    /// (model, load_s) samples in order.
+    /// Crypto time exposed on the swap path (never includes staging).
+    pub total_crypto_exposed_s: f64,
+    /// Staging uploads issued.
+    pub prefetch_count: u64,
+    /// Swaps satisfied by promoting a staged buffer (no second DMA).
+    pub promoted_count: u64,
+    /// Staged buffers discarded on a wrong prediction or restage.
+    pub dropped_prefetches: u64,
+    /// Seconds spent in staging uploads (overlapped with execution).
+    pub total_prefetch_s: f64,
+    /// (model, load_s) samples in order (demand loads only).
     pub load_samples: Vec<(String, f64)>,
 }
 
 /// The residency manager.
 pub struct SwapManager {
     resident: Option<(String, HbmBuffer)>,
+    /// Speculatively staged next model (prefetch target).
+    staged: Option<(String, HbmBuffer)>,
     stats: SwapStats,
 }
 
@@ -47,11 +91,17 @@ impl Default for SwapManager {
 
 impl SwapManager {
     pub fn new() -> SwapManager {
-        SwapManager { resident: None, stats: SwapStats::default() }
+        SwapManager { resident: None, staged: None,
+                      stats: SwapStats::default() }
     }
 
     pub fn resident(&self) -> Option<&str> {
         self.resident.as_ref().map(|(m, _)| m.as_str())
+    }
+
+    /// Model currently staged by prefetch, if any.
+    pub fn staged(&self) -> Option<&str> {
+        self.staged.as_ref().map(|(m, _)| m.as_str())
     }
 
     pub fn stats(&self) -> &SwapStats {
@@ -63,6 +113,7 @@ impl SwapManager {
                            model: &str) -> anyhow::Result<SwapReport> {
         if let Some((cur, _)) = &self.resident {
             if cur == model {
+                // staged state is untouched: the hint may still pay off
                 return Ok(SwapReport::default());
             }
         }
@@ -74,38 +125,118 @@ impl SwapManager {
             self.stats.total_unload_s += report.unload_s;
         }
 
+        // staged hit: promote the prefetched buffer — no second DMA
+        if self.staged().is_some_and(|m| m == model) {
+            self.resident = self.staged.take();
+            report.promoted = true;
+            self.stats.swap_count += 1;
+            self.stats.promoted_count += 1;
+            self.stats.load_samples.push((model.to_string(), 0.0));
+            return Ok(report);
+        }
+        // wrong prediction: the staged buffer is dead weight — free it
+        // (no unload latency: it was never resident)
+        if let Some((_, buf)) = self.staged.take() {
+            gpu.free(buf);
+            report.dropped_staged = true;
+            self.stats.dropped_prefetches += 1;
+        }
+
         // load next: weights blob through the (CC) DMA path
         let entry = registry.entry(model)?;
         let (buf, rep) = gpu.upload(&entry.weights.raw)
             .map_err(|e| anyhow::anyhow!("loading {model}: {e}"))?;
         report.load_s = rep.elapsed.as_secs_f64();
-        report.crypto_s = rep.crypto.as_secs_f64();
+        report.crypto_total_s = rep.crypto_total.as_secs_f64();
+        report.crypto_exposed_s = rep.crypto_exposed.as_secs_f64();
 
         self.resident = Some((model.to_string(), buf));
         self.stats.swap_count += 1;
         self.stats.total_load_s += report.load_s;
-        self.stats.total_crypto_s += report.crypto_s;
+        self.stats.total_crypto_s += report.crypto_total_s;
+        self.stats.total_crypto_exposed_s += report.crypto_exposed_s;
         self.stats.load_samples.push((model.to_string(), report.load_s));
         Ok(report)
     }
 
-    /// Estimated load time for `model` in the device's mode — feeds the
-    /// SelectBatch `desired_latency` term.
-    pub fn estimate_load_s(gpu: &SimGpu, registry: &Registry, model: &str)
-                           -> f64 {
-        let Ok(entry) = registry.entry(model) else { return 0.0 };
-        let bytes = entry.spec.weight_bytes() as f64;
-        let bw = match gpu.mode() {
-            crate::gpu::CcMode::On => gpu.config().bw_cc,
-            crate::gpu::CcMode::Off => gpu.config().bw_plain,
+    /// Decrypt-ahead: stage `model` in a second device buffer so a
+    /// later swap can promote it without a DMA.  Returns `Ok(None)`
+    /// when staging is pointless (already resident/staged) or the
+    /// device lacks memory for a second blob (the speculation is
+    /// simply skipped — residency is never disturbed).
+    pub fn prefetch(&mut self, gpu: &mut SimGpu, registry: &Registry,
+                    model: &str) -> anyhow::Result<Option<PrefetchReport>> {
+        if self.resident().is_some_and(|m| m == model)
+            || self.staged().is_some_and(|m| m == model)
+        {
+            return Ok(None);
+        }
+        let entry = registry.entry(model)?;
+        let need = entry.weights.raw.len() as u64;
+        // Exact capacity gate, decided before touching the staged
+        // slot: the new blob must fit the largest hole *after*
+        // reclaiming the current staged buffer (fragmentation
+        // included), so a hint that cannot be staged never destroys a
+        // live speculation.
+        let fits = match &self.staged {
+            Some((_, buf)) => need <= gpu.mem_largest_free_after(*buf),
+            None => need <= gpu.mem_largest_free(),
         };
-        bytes / bw
+        if !fits {
+            return Ok(None);
+        }
+        let mut report = PrefetchReport::default();
+        if let Some((_, buf)) = self.staged.take() {
+            gpu.free(buf);
+            report.dropped_staged = true;
+            self.stats.dropped_prefetches += 1;
+        }
+        // the allocation now cannot OOM (first-fit into a hole the
+        // gate proved exists), so any upload error is a real DMA/CC
+        // fault — exactly as fatal here as it is on the demand path
+        let (buf, rep) = gpu.upload(&entry.weights.raw)
+            .map_err(|e| anyhow::anyhow!("staging {model}: {e}"))?;
+        report.load_s = rep.elapsed.as_secs_f64();
+        report.crypto_total_s = rep.crypto_total.as_secs_f64();
+        self.staged = Some((model.to_string(), buf));
+        self.stats.prefetch_count += 1;
+        self.stats.total_prefetch_s += report.load_s;
+        self.stats.total_crypto_s += report.crypto_total_s;
+        Ok(Some(report))
     }
 
-    /// Drop residency (end of run), freeing device memory.
+    /// Estimated load time for `model` in the device's mode — feeds the
+    /// SelectBatch `desired_latency` term.  A staged hit is free (the
+    /// promotion needs no DMA); otherwise the PCIe model under the
+    /// configured pipeline setting.
+    pub fn estimate_load_s(&self, gpu: &SimGpu, registry: &Registry,
+                           model: &str) -> f64 {
+        if self.staged().is_some_and(|m| m == model) {
+            return 0.0;
+        }
+        Self::estimate_cold_load_s(gpu, registry, model)
+    }
+
+    /// Load estimate ignoring staged state (profilers, cold paths).
+    pub fn estimate_cold_load_s(gpu: &SimGpu, registry: &Registry,
+                                model: &str) -> f64 {
+        let Ok(entry) = registry.entry(model) else { return 0.0 };
+        let bytes = entry.spec.weight_bytes() as f64;
+        match gpu.mode() {
+            crate::gpu::CcMode::On =>
+                bytes * gpu.config().cc_seconds_per_byte(),
+            crate::gpu::CcMode::Off => bytes / gpu.config().bw_plain,
+        }
+    }
+
+    /// Drop residency and any staged buffer (end of run), freeing
+    /// device memory.
     pub fn evict(&mut self, gpu: &mut SimGpu) {
         if let Some((_, buf)) = self.resident.take() {
             gpu.unload(buf);
+        }
+        if let Some((_, buf)) = self.staged.take() {
+            gpu.free(buf);
         }
     }
 }
@@ -188,24 +319,160 @@ mod tests {
         let mut gpu = gpu();
         let mut sm = SwapManager::new();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap();
         sm.evict(&mut gpu);
         assert_eq!(sm.resident(), None);
-        assert_eq!(gpu.mem_in_use(), 0);
+        assert_eq!(sm.staged(), None);
+        assert_eq!(gpu.mem_in_use(), 0, "evict must free staged too");
     }
 
     #[test]
-    fn load_estimate_scales_with_mode() {
+    fn prefetch_then_promote_skips_the_second_dma() {
+        let reg = registry();
+        let mut gpu = gpu();
+        let mut sm = SwapManager::new();
+        sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        let pf = sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap()
+            .expect("staging must fit");
+        assert!(pf.load_s > 0.0);
+        assert_eq!(sm.staged(), Some("gemma-sim"));
+        // both blobs resident while staged
+        let both = reg.entry("llama-sim").unwrap().spec.weight_bytes()
+            + reg.entry("gemma-sim").unwrap().spec.weight_bytes();
+        assert_eq!(gpu.mem_in_use(), both);
+
+        let uploads_before = gpu.dma_stats().h2d_transfers;
+        let rep = sm.ensure_resident(&mut gpu, &reg, "gemma-sim").unwrap();
+        assert!(rep.swapped && rep.promoted);
+        assert_eq!(rep.load_s, 0.0, "promotion is DMA-free");
+        assert_eq!(gpu.dma_stats().h2d_transfers, uploads_before,
+                   "promotion must not issue a second DMA");
+        assert_eq!(sm.resident(), Some("gemma-sim"));
+        assert_eq!(sm.staged(), None);
+        assert_eq!(sm.stats().promoted_count, 1);
+        // the promoted buffer is the only thing left in memory
+        assert_eq!(gpu.mem_in_use(),
+                   reg.entry("gemma-sim").unwrap().spec.weight_bytes());
+    }
+
+    #[test]
+    fn wrong_prediction_drops_staged_without_corrupting_residency() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let reg = Registry::load(&m, &["llama-sim".to_string(),
+                                       "gemma-sim".to_string(),
+                                       "granite-sim".to_string()],
+                                 &[1]).unwrap();
+        let mut gpu = gpu();
+        let mut sm = SwapManager::new();
+        sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap().unwrap();
+
+        // the next demand is llama again: staged gemma stays parked
+        let r = sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        assert!(!r.swapped);
+        assert_eq!(sm.staged(), Some("gemma-sim"));
+
+        // the demand then goes to a third model: gemma was a wrong
+        // prediction — dropped, residency lands on the demanded model
+        let r = sm.ensure_resident(&mut gpu, &reg, "granite-sim").unwrap();
+        assert!(r.swapped && !r.promoted && r.dropped_staged);
+        assert!(r.load_s > 0.0, "wrong prediction pays the full load");
+        assert_eq!(sm.resident(), Some("granite-sim"));
+        assert_eq!(sm.staged(), None);
+        assert_eq!(sm.stats().dropped_prefetches, 1);
+        assert_eq!(sm.stats().promoted_count, 0);
+        assert_eq!(gpu.mem_in_use(),
+                   reg.entry("granite-sim").unwrap().spec.weight_bytes(),
+                   "dropped staged buffer must be freed");
+
+        // restaging a different hint drops the old staged buffer too
+        sm.prefetch(&mut gpu, &reg, "llama-sim").unwrap().unwrap();
+        let pf = sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap().unwrap();
+        assert!(pf.dropped_staged);
+        assert_eq!(sm.staged(), Some("gemma-sim"));
+        assert_eq!(sm.stats().dropped_prefetches, 2);
+    }
+
+    #[test]
+    fn prefetch_oom_skips_speculation() {
+        let reg = registry();
+        let llama = reg.entry("llama-sim").unwrap().spec.weight_bytes();
+        let mut small = GpuConfig { no_throttle: true,
+                                    ..GpuConfig::default() };
+        // room for one blob only
+        small.hbm_capacity = llama + llama / 2;
+        let mut gpu = SimGpu::new(small).unwrap();
+        let mut sm = SwapManager::new();
+        sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        let pf = sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap();
+        assert!(pf.is_none(), "OOM staging must be skipped, not fatal");
+        assert_eq!(sm.staged(), None);
+        assert_eq!(sm.resident(), Some("llama-sim"));
+    }
+
+    #[test]
+    fn oversized_hint_never_destroys_live_speculation() {
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let reg = Registry::load(&m, &["llama-sim".to_string(),
+                                       "gemma-sim".to_string(),
+                                       "granite-sim".to_string()],
+                                 &[1]).unwrap();
+        let llama = reg.entry("llama-sim").unwrap().spec.weight_bytes();
+        let granite =
+            reg.entry("granite-sim").unwrap().spec.weight_bytes();
+        // llama + gemma fit (granite is the largest family), but
+        // granite can never fit next to llama — not even by
+        // reclaiming the staged gemma
+        let cfg = GpuConfig { no_throttle: true,
+                              hbm_capacity: llama + granite - 1,
+                              ..GpuConfig::default() };
+        let mut gpu = SimGpu::new(cfg).unwrap();
+        let mut sm = SwapManager::new();
+        sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap()
+            .expect("gemma staging must fit");
+        let pf = sm.prefetch(&mut gpu, &reg, "granite-sim").unwrap();
+        assert!(pf.is_none(), "too-big hint must be skipped");
+        assert_eq!(sm.staged(), Some("gemma-sim"),
+                   "live speculation must survive an oversized hint");
+        assert_eq!(sm.stats().dropped_prefetches, 0);
+    }
+
+    #[test]
+    fn load_estimate_scales_with_mode_and_pipeline() {
         let reg = registry();
         let gpu_plain = gpu();
+        let sm = SwapManager::new();
         let est_plain =
-            SwapManager::estimate_load_s(&gpu_plain, &reg, "llama-sim");
+            sm.estimate_load_s(&gpu_plain, &reg, "llama-sim");
         let gpu_cc = SimGpu::new(GpuConfig {
             mode: CcMode::On, no_throttle: true, ..Default::default()
         }).unwrap();
-        let est_cc = SwapManager::estimate_load_s(&gpu_cc, &reg,
-                                                  "llama-sim");
+        let est_cc = sm.estimate_load_s(&gpu_cc, &reg, "llama-sim");
         assert!(est_cc > 2.0 * est_plain,
                 "cc estimate {est_cc} vs plain {est_plain}");
+        let gpu_pipe = SimGpu::new(GpuConfig {
+            mode: CcMode::On, pipeline_depth: 2, no_throttle: true,
+            ..Default::default()
+        }).unwrap();
+        let est_pipe = sm.estimate_load_s(&gpu_pipe, &reg, "llama-sim");
+        assert!(est_pipe < est_cc,
+                "pipelined estimate {est_pipe} must undercut serialized \
+                 {est_cc}");
+        assert!(est_pipe > est_plain * 0.9,
+                "pipelined CC cannot beat the plain link");
+    }
+
+    #[test]
+    fn staged_model_estimates_as_free() {
+        let reg = registry();
+        let mut gpu = gpu();
+        let mut sm = SwapManager::new();
+        sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
+        assert!(sm.estimate_load_s(&gpu, &reg, "gemma-sim") > 0.0);
+        sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap().unwrap();
+        assert_eq!(sm.estimate_load_s(&gpu, &reg, "gemma-sim"), 0.0,
+                   "a staged model promotes for free");
     }
 
     #[test]

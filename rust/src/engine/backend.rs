@@ -29,16 +29,37 @@ use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
 use crate::engine::clock::Clock;
 use crate::gpu::CcMode;
+use crate::sim::calib::ModelCosts;
 
 /// Timing of one residency change, in the run's time domain.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SwapOutcome {
     /// True if a load (and possibly an unload) actually happened.
     pub swapped: bool,
+    /// True when the load promoted a prefetched (staged) buffer —
+    /// `load_s` is then zero: no second DMA.
+    pub promoted: bool,
+    /// True when a wrong-prediction staged buffer was discarded.
+    pub dropped_staged: bool,
     pub load_s: f64,
     pub unload_s: f64,
-    /// Crypto share of the load (CC only).
-    pub crypto_s: f64,
+    /// Total modeled crypto work of the load (CC only).
+    pub crypto_total_s: f64,
+    /// Crypto time not hidden behind the DMA pipeline (== total when
+    /// the pipeline is off; see `gpu::dma`).
+    pub crypto_exposed_s: f64,
+}
+
+/// Result of one decrypt-ahead staging attempt (predictive prefetch).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PrefetchOutcome {
+    /// True when the model was staged.  The engine overlaps `cost_s`
+    /// with the executing batch on the device timeline.
+    pub staged: bool,
+    /// Staging cost, seconds (a load without an unload).
+    pub cost_s: f64,
+    /// True when an older staged model was discarded to restage.
+    pub dropped_staged: bool,
 }
 
 /// One executed batch, in the run's time domain.
@@ -59,6 +80,76 @@ pub struct BatchOutcome {
     pub io_s: f64,
 }
 
+/// One modeled residency change, as a virtual-cost backend observed it
+/// (what happened is the backend's business; what it *costs* is not).
+pub(crate) struct SwapEvent<'a> {
+    pub model: &'a str,
+    pub had_resident: bool,
+    pub promoted: bool,
+    pub dropped_staged: bool,
+}
+
+/// Price one residency change from the cost table and fold it into
+/// `stats`.  This is the single definition of virtual swap pricing:
+/// `DesBackend` and the virtual-costs `RealBackend` both call it, so
+/// the exact DES-vs-real parity the tests pin is structural rather
+/// than two hand-maintained copies.
+pub(crate) fn price_swap(mc: &ModelCosts, mode: CcMode, pipelined: bool,
+                         ev: SwapEvent, stats: &mut SwapStats)
+                         -> SwapOutcome {
+    let mut out = SwapOutcome {
+        swapped: true,
+        promoted: ev.promoted,
+        dropped_staged: ev.dropped_staged,
+        ..Default::default()
+    };
+    if ev.had_resident {
+        out.unload_s = mc.unload_s;
+    }
+    stats.swap_count += 1;
+    stats.total_unload_s += out.unload_s;
+    if ev.promoted {
+        // promotion is DMA-free: the crypto was paid — and overlapped —
+        // at prefetch time
+        stats.promoted_count += 1;
+        stats.load_samples.push((ev.model.to_string(), 0.0));
+    } else {
+        if ev.dropped_staged {
+            stats.dropped_prefetches += 1;
+        }
+        out.load_s = mc.load_s_for(mode, pipelined);
+        let (ct, ce) = mc.load_crypto_for(mode, pipelined);
+        out.crypto_total_s = ct;
+        out.crypto_exposed_s = ce;
+        stats.total_load_s += out.load_s;
+        stats.total_crypto_s += ct;
+        stats.total_crypto_exposed_s += ce;
+        stats.load_samples.push((ev.model.to_string(), out.load_s));
+    }
+    out
+}
+
+/// Price one staging upload (a load without an unload) — the prefetch
+/// counterpart of [`price_swap`], shared by both virtual-cost backends
+/// for the same reason.
+pub(crate) fn price_prefetch(mc: &ModelCosts, mode: CcMode,
+                             pipelined: bool, dropped_staged: bool,
+                             stats: &mut SwapStats) -> PrefetchOutcome {
+    let out = PrefetchOutcome {
+        staged: true,
+        cost_s: mc.load_s_for(mode, pipelined),
+        dropped_staged,
+    };
+    if dropped_staged {
+        stats.dropped_prefetches += 1;
+    }
+    let (ct, _) = mc.load_crypto_for(mode, pipelined);
+    stats.prefetch_count += 1;
+    stats.total_prefetch_s += out.cost_s;
+    stats.total_crypto_s += ct;
+    out
+}
+
 /// Device occupancy published to the monitor thread.
 #[derive(Debug, Clone, Default)]
 pub struct DeviceSnapshot {
@@ -67,7 +158,10 @@ pub struct DeviceSnapshot {
     pub mem_peak: u64,
     pub fragmentation: f64,
     pub dma_h2d_bytes: u64,
-    pub dma_crypto_s: f64,
+    /// Total modeled crypto work so far (see `gpu::dma::DmaStats`).
+    pub dma_crypto_total_s: f64,
+    /// Crypto time not hidden behind the DMA pipeline.
+    pub dma_crypto_exposed_s: f64,
     pub swaps: u64,
 }
 
@@ -106,9 +200,18 @@ pub trait ExecBackend {
     fn resident(&self, device: usize) -> Option<String>;
 
     /// Make `model` resident on `device`, swapping if needed (the
-    /// expensive CC-sensitive step).
+    /// expensive CC-sensitive step).  A staged (prefetched) hit
+    /// promotes without a second DMA.
     fn ensure_resident(&mut self, clock: &mut dyn Clock, device: usize,
                        model: &str) -> anyhow::Result<SwapOutcome>;
+
+    /// Decrypt-ahead: stage `model` on `device` while the current batch
+    /// executes, so a later swap promotes it without a DMA.  Backends
+    /// without staging support keep the default no-op.
+    fn prefetch(&mut self, _clock: &mut dyn Clock, _device: usize,
+                _model: &str) -> anyhow::Result<PrefetchOutcome> {
+        Ok(PrefetchOutcome::default())
+    }
 
     /// Pop up to `take` requests for `model` and execute them as one
     /// batch on `device`.  `Ok(None)` when the queue was empty.

@@ -9,20 +9,34 @@
 //! hours.  Each fleet device has its own CC mode and residency, so a
 //! mixed CC/No-CC fleet charges per-device load and I/O costs.
 //!
+//! The pipelined swap path and predictive prefetch are mirrored in
+//! virtual time: CC loads price `load_s_for(mode, pipelined)` from the
+//! cost table (steady-state `max(crypto, link)` per chunk when the
+//! pipeline is on — see `sim::calib`), and each device keeps a staging
+//! slot whose state machine is identical to the real
+//! `SwapManager`'s — stage on `prefetch`, promote for free on a
+//! correct prediction, drop on a wrong one.  That mirroring is what
+//! keeps the DES-vs-real parity contract exact with the pipeline and
+//! prefetch enabled (`tests/engine_parity.rs`).
+//!
 //! Known abstraction boundary: the DES models no device *memory*, so
 //! it always dispatches `batch_size_at_least(rows)` where the real
-//! backend's batcher would halve a batch on workspace OOM.  The
-//! DES-vs-real parity guarantee (`tests/engine_parity.rs`) therefore
-//! holds for configurations that fit their largest batch workspace —
-//! which every calibrated run does, because profiling marks
+//! backend's batcher would halve a batch on workspace OOM, and its
+//! staging slot never OOMs where a real device without room for a
+//! second blob skips the speculation.  The DES-vs-real parity
+//! guarantee (`tests/engine_parity.rs`) therefore holds for
+//! configurations whose device memory fits (weights + largest-batch
+//! workspace) — plus a second weight blob when prefetch is on — which
+//! every calibrated run does, because profiling marks
 //! memory-infeasible batch sizes as `oom_batches` and caps OBS below
 //! them.
 
 use crate::config::RunConfig;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::swap::SwapStats;
-use crate::engine::backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
-                             SwapOutcome};
+use crate::engine::backend::{price_prefetch, price_swap, BatchOutcome,
+                             DeviceSnapshot, ExecBackend, PrefetchOutcome,
+                             SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
 use crate::gpu::CcMode;
 use crate::runtime::Manifest;
@@ -31,10 +45,15 @@ use crate::sim::CostModel;
 pub struct DesBackend<'a> {
     manifest: &'a Manifest,
     costs: &'a CostModel,
+    /// Whether CC loads price the chunk pipeline (`--pipeline-depth`).
+    pipelined: bool,
     /// Per-device CC mode (the fleet's mix).
     modes: Vec<CcMode>,
     /// Per-device resident model.
     resident: Vec<Option<String>>,
+    /// Per-device staged (prefetched) model — mirrors the real
+    /// `SwapManager`'s staging slot.
+    staged: Vec<Option<String>>,
     /// Per-device modeled swap accounting.
     stats: Vec<SwapStats>,
 }
@@ -44,11 +63,21 @@ impl<'a> DesBackend<'a> {
                costs: &'a CostModel) -> DesBackend<'a> {
         let modes = cfg.fleet_modes();
         let n = modes.len();
+        let pipelined = cfg.gpu.pipeline_depth >= 2;
+        if pipelined && costs.missing_pipeline_profile() {
+            eprintln!("[sincere] warning: cost model has no pipelined CC \
+                       load profile (cached before the pipeline \
+                       existed?) — --pipeline-depth prices as \
+                       serialized; delete the cached cost_model.json \
+                       to re-measure");
+        }
         DesBackend {
             manifest,
             costs,
+            pipelined,
             modes,
             resident: vec![None; n],
+            staged: vec![None; n],
             stats: vec![SwapStats::default(); n],
         }
     }
@@ -87,8 +116,11 @@ impl ExecBackend for DesBackend<'_> {
     }
 
     fn est_load_s(&self, model: &str, device: usize) -> f64 {
+        if self.staged[device].as_deref() == Some(model) {
+            return 0.0; // a staged model promotes for free
+        }
         self.costs.costs(model)
-            .map(|mc| mc.load_s(self.modes[device]))
+            .map(|mc| mc.load_s_for(self.modes[device], self.pipelined))
             .unwrap_or(0.0)
     }
 
@@ -103,20 +135,38 @@ impl ExecBackend for DesBackend<'_> {
     fn ensure_resident(&mut self, _clock: &mut dyn Clock, device: usize,
                        model: &str) -> anyhow::Result<SwapOutcome> {
         if self.resident[device].as_deref() == Some(model) {
+            // staged state is untouched: the hint may still pay off
             return Ok(SwapOutcome::default());
         }
         let mc = self.costs.costs(model)?;
-        let mut out = SwapOutcome { swapped: true, ..Default::default() };
-        if self.resident[device].is_some() {
-            out.unload_s = mc.unload_s;
-        }
-        out.load_s = mc.load_s(self.modes[device]);
+        let had_resident = self.resident[device].is_some();
+        // staged hit promotes; anything else staged is a wrong
+        // prediction and is dropped
+        let promoted = self.staged[device].as_deref() == Some(model);
+        let dropped_staged =
+            !promoted && self.staged[device].is_some();
+        self.staged[device] = None;
+        let out = price_swap(
+            mc, self.modes[device], self.pipelined,
+            SwapEvent { model, had_resident, promoted, dropped_staged },
+            &mut self.stats[device]);
         self.resident[device] = Some(model.to_string());
-        let stats = &mut self.stats[device];
-        stats.swap_count += 1;
-        stats.total_load_s += out.load_s;
-        stats.total_unload_s += out.unload_s;
-        stats.load_samples.push((model.to_string(), out.load_s));
+        Ok(out)
+    }
+
+    fn prefetch(&mut self, _clock: &mut dyn Clock, device: usize,
+                model: &str) -> anyhow::Result<PrefetchOutcome> {
+        if self.resident[device].as_deref() == Some(model)
+            || self.staged[device].as_deref() == Some(model)
+        {
+            return Ok(PrefetchOutcome::default());
+        }
+        let mc = self.costs.costs(model)?;
+        let dropped_staged = self.staged[device].is_some();
+        let out = price_prefetch(mc, self.modes[device], self.pipelined,
+                                 dropped_staged,
+                                 &mut self.stats[device]);
+        self.staged[device] = Some(model.to_string());
         Ok(out)
     }
 
@@ -158,6 +208,9 @@ impl ExecBackend for DesBackend<'_> {
     fn teardown(&mut self) {
         for r in self.resident.iter_mut() {
             *r = None;
+        }
+        for s in self.staged.iter_mut() {
+            *s = None;
         }
     }
 }

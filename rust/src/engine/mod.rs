@@ -66,7 +66,8 @@ use crate::traffic::pattern_by_name;
 use crate::traffic::rng::Pcg64;
 use crate::workload::promptgen::PromptGen;
 
-pub use backend::{BatchOutcome, DeviceSnapshot, ExecBackend, SwapOutcome};
+pub use backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
+                  PrefetchOutcome, SwapOutcome};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use des::DesBackend;
 pub use real::RealBackend;
@@ -457,7 +458,16 @@ impl Engine<'_> {
                         .expect("Process decided without a context");
                     let dev = resolve_device(ctx, self.placement.as_ref(),
                                              &model, device, &free);
-                    // 1. residency (the expensive CC-sensitive step)
+                    // predictive prefetch target, decided from the same
+                    // snapshot the dispatch came from
+                    let hint = if cfg.prefetch {
+                        self.strategy.next_hint(ctx, &model)
+                            .filter(|h| *h != model)
+                    } else {
+                        None
+                    };
+                    // 1. residency (the expensive CC-sensitive step);
+                    // a staged hit promotes without a second DMA
                     let swap = self.backend.ensure_resident(
                         clock.as_mut(), dev, &model)?;
                     // 2.-5. batch assembly + payload I/O + execution,
@@ -476,8 +486,41 @@ impl Engine<'_> {
                     } else {
                         (out.exec_start_s, clock.now_s())
                     };
-                    busy_until[dev] = complete_s;
-                    busy_s[dev] += swap_cost + out.exec_s + out.io_s;
+
+                    // 7. decrypt-ahead: stage the hinted model while the
+                    // batch executes.  Responses complete at
+                    // `complete_s` regardless; the staging occupies the
+                    // *device* concurrently, so the device frees at
+                    // max(batch end, staging end).  (Wall mode runs the
+                    // staging inline after the batch — the host
+                    // serializes the fleet anyway — so the device is
+                    // busy until the clock's now either way.)
+                    let mut prefetch_s = 0.0;
+                    if let Some(h) = &hint {
+                        let pf = self.backend.prefetch(clock.as_mut(),
+                                                       dev, h)?;
+                        if pf.staged {
+                            prefetch_s = pf.cost_s;
+                        }
+                    }
+                    // in virtual time the staging is hidden behind the
+                    // batch, so the device is busy for max(batch,
+                    // staging) — charging the sum would overstate
+                    // busy_s and skew least-loaded placement away from
+                    // exactly the devices that can promote for free;
+                    // in wall mode the host really ran it serially
+                    let batch_tail = out.exec_s + out.io_s;
+                    let busy_tail = if self.virtual_time {
+                        batch_tail.max(prefetch_s)
+                    } else {
+                        batch_tail + prefetch_s
+                    };
+                    busy_until[dev] = if self.virtual_time {
+                        complete_s.max(exec_start_s + prefetch_s)
+                    } else {
+                        clock.now_s()
+                    };
+                    busy_s[dev] += swap_cost + busy_tail;
                     dispatched[dev] += 1;
                     last_complete_s = last_complete_s.max(complete_s);
                     last_progress_s = clock.now_s();
@@ -508,10 +551,12 @@ impl Engine<'_> {
                         rows: n_rows,
                         artifact_batch: out.artifact_batch,
                         swapped: swap.swapped,
+                        promoted: swap.promoted,
                         load_s: swap.load_s,
                         unload_s: swap.unload_s,
                         exec_s: out.exec_s,
                         io_s: out.io_s,
+                        prefetch_s,
                     });
                     if let Some(mc) = &monitor_ctx {
                         *mc.snapshot.lock().unwrap() =
@@ -615,7 +660,8 @@ fn spawn_monitor(origin: Instant, stop: Arc<AtomicBool>,
                         mem_peak: snap.mem_peak,
                         fragmentation: snap.fragmentation,
                         dma_h2d_bytes: snap.dma_h2d_bytes,
-                        dma_crypto_s: snap.dma_crypto_s,
+                        dma_crypto_total_s: snap.dma_crypto_total_s,
+                        dma_crypto_exposed_s: snap.dma_crypto_exposed_s,
                         swaps: snap.swaps,
                     });
                 }

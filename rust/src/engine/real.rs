@@ -2,7 +2,10 @@
 //! `SimGpu`s + `Registry` + one `SwapManager` per device: real
 //! (optionally CC-sealed) DMA, real PJRT execution, real per-device
 //! occupancy.  A mixed CC/No-CC fleet is just a `DeviceSet` whose
-//! configs differ.
+//! configs differ.  The pipelined CC swap path and predictive prefetch
+//! run for real here: staging uploads go through the actual DMA engine
+//! into an actual second HBM buffer, and promotion really is just a
+//! pointer swap (`SwapManager`).
 //!
 //! Two time modes:
 //!
@@ -15,14 +18,16 @@
 //!   path runs, but reported times come from a calibrated
 //!   [`CostModel`]; the engine folds them into the device's busy-until
 //!   timeline exactly as it does for a `DesBackend` — the seam the
-//!   DES-vs-real parity test pins, now per device.
+//!   DES-vs-real parity test pins, now per device and inclusive of
+//!   staging/promotion.
 
 use crate::config::RunConfig;
 use crate::coordinator::batcher;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::swap::{SwapManager, SwapStats};
-use crate::engine::backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
-                             SwapOutcome};
+use crate::engine::backend::{price_prefetch, price_swap, BatchOutcome,
+                             DeviceSnapshot, ExecBackend, PrefetchOutcome,
+                             SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
 use crate::gpu::dma::Dir;
 use crate::gpu::fleet::DeviceSet;
@@ -36,6 +41,9 @@ pub struct RealBackend<'a> {
     fleet: DeviceSet,
     /// One residency manager per device.
     swaps: Vec<SwapManager>,
+    /// Whether CC loads are priced pipelined in virtual-costs mode
+    /// (the real DMA engine reads the same `GpuConfig` directly).
+    pipelined: bool,
     /// Modeled swap accounting per device, maintained only in
     /// virtual-costs mode (wall mode reads each swap manager's measured
     /// stats directly).
@@ -53,6 +61,7 @@ impl<'a> RealBackend<'a> {
             registry,
             fleet,
             swaps: (0..n).map(|_| SwapManager::new()).collect(),
+            pipelined: cfg.gpu.pipeline_depth >= 2,
             stats: vec![SwapStats::default(); n],
             virtual_costs: None,
         })
@@ -66,6 +75,13 @@ impl<'a> RealBackend<'a> {
                               costs: &CostModel)
                               -> anyhow::Result<RealBackend<'a>> {
         let mut backend = RealBackend::new(cfg, registry)?;
+        if backend.pipelined && costs.missing_pipeline_profile() {
+            eprintln!("[sincere] warning: cost model has no pipelined CC \
+                       load profile (cached before the pipeline \
+                       existed?) — --pipeline-depth prices as \
+                       serialized; delete the cached cost_model.json \
+                       to re-measure");
+        }
         backend.virtual_costs = Some(costs.clone());
         Ok(backend)
     }
@@ -116,12 +132,18 @@ impl ExecBackend for RealBackend<'_> {
     }
 
     fn est_load_s(&self, model: &str, device: usize) -> f64 {
+        // a staged model promotes for free in either time domain (the
+        // DES mirrors this, so parity requires it here too)
+        if self.swaps[device].staged() == Some(model) {
+            return 0.0;
+        }
         match &self.virtual_costs {
             Some(costs) => costs.costs(model)
-                .map(|mc| mc.load_s(self.fleet.get(device).mode()))
+                .map(|mc| mc.load_s_for(self.fleet.get(device).mode(),
+                                        self.pipelined))
                 .unwrap_or(0.0),
-            None => SwapManager::estimate_load_s(self.fleet.get(device),
-                                                 self.registry, model),
+            None => self.swaps[device].estimate_load_s(
+                self.fleet.get(device), self.registry, model),
         }
     }
 
@@ -146,25 +168,52 @@ impl ExecBackend for RealBackend<'_> {
             self.fleet.get_mut(device), self.registry, model)?;
         let mut out = SwapOutcome {
             swapped: rep.swapped,
+            promoted: rep.promoted,
+            dropped_staged: rep.dropped_staged,
             load_s: rep.load_s,
             unload_s: rep.unload_s,
-            crypto_s: rep.crypto_s,
+            crypto_total_s: rep.crypto_total_s,
+            crypto_exposed_s: rep.crypto_exposed_s,
         };
         if !rep.swapped {
             return Ok(out);
         }
         if let Some(costs) = &self.virtual_costs {
-            let mc = costs.costs(model)?;
-            out.load_s = mc.load_s(self.fleet.get(device).mode());
-            out.unload_s = if had_resident { mc.unload_s } else { 0.0 };
-            out.crypto_s = 0.0;
             // virtual mode keeps its own stats: the swap manager's
-            // wall-measured values are not in the engine's time domain
-            let stats = &mut self.stats[device];
-            stats.swap_count += 1;
-            stats.total_load_s += out.load_s;
-            stats.total_unload_s += out.unload_s;
-            stats.load_samples.push((model.to_string(), out.load_s));
+            // wall-measured values are not in the engine's time
+            // domain.  `price_swap` is the same pricing the DesBackend
+            // runs — that shared definition is the parity contract.
+            let mc = costs.costs(model)?;
+            let mode = self.fleet.get(device).mode();
+            out = price_swap(
+                mc, mode, self.pipelined,
+                SwapEvent { model, had_resident,
+                            promoted: rep.promoted,
+                            dropped_staged: rep.dropped_staged },
+                &mut self.stats[device]);
+        }
+        Ok(out)
+    }
+
+    fn prefetch(&mut self, _clock: &mut dyn Clock, device: usize,
+                model: &str) -> anyhow::Result<PrefetchOutcome> {
+        let rep = self.swaps[device].prefetch(
+            self.fleet.get_mut(device), self.registry, model)?;
+        let Some(rep) = rep else {
+            // already resident/staged, or no room for a second blob
+            return Ok(PrefetchOutcome::default());
+        };
+        let mut out = PrefetchOutcome {
+            staged: true,
+            cost_s: rep.load_s,
+            dropped_staged: rep.dropped_staged,
+        };
+        if let Some(costs) = &self.virtual_costs {
+            let mc = costs.costs(model)?;
+            let mode = self.fleet.get(device).mode();
+            out = price_prefetch(mc, mode, self.pipelined,
+                                 rep.dropped_staged,
+                                 &mut self.stats[device]);
         }
         Ok(out)
     }
@@ -236,7 +285,9 @@ impl ExecBackend for RealBackend<'_> {
             mem_peak: gpu.mem_peak(),
             fragmentation: gpu.mem_fragmentation(),
             dma_h2d_bytes: gpu.dma_stats().h2d_bytes,
-            dma_crypto_s: gpu.dma_stats().crypto.as_secs_f64(),
+            dma_crypto_total_s: gpu.dma_stats().crypto_total.as_secs_f64(),
+            dma_crypto_exposed_s:
+                gpu.dma_stats().crypto_exposed.as_secs_f64(),
             swaps: self.swap_stats(device).swap_count,
         }
     }

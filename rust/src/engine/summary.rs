@@ -26,7 +26,15 @@ pub struct DeviceSummary {
     pub swap_count: u64,
     pub load_s: f64,
     pub unload_s: f64,
+    /// Total crypto work on this device's swap + staging path.
     pub crypto_s: f64,
+    /// Crypto time actually exposed on the swap path (== `crypto_s`
+    /// without the DMA pipeline; see `gpu::dma`).
+    pub crypto_exposed_s: f64,
+    /// Staging uploads issued on this device (predictive prefetch).
+    pub prefetches: u64,
+    /// Swaps satisfied by promoting a staged buffer (no second DMA).
+    pub promotions: u64,
 }
 
 impl DeviceSummary {
@@ -42,6 +50,9 @@ impl DeviceSummary {
             ("load_s", Json::num(self.load_s)),
             ("unload_s", Json::num(self.unload_s)),
             ("crypto_s", Json::num(self.crypto_s)),
+            ("crypto_exposed_s", Json::num(self.crypto_exposed_s)),
+            ("prefetches", Json::num(self.prefetches as f64)),
+            ("promotions", Json::num(self.promotions as f64)),
         ])
     }
 }
@@ -66,6 +77,10 @@ pub struct RunSummary {
     pub devices: usize,
     /// Placement policy name.
     pub placement: String,
+    /// CC DMA pipeline staging buffers (0 = serialized swap path).
+    pub pipeline_depth: usize,
+    /// Whether predictive prefetch was enabled.
+    pub prefetch: bool,
 
     pub generated: u64,
     pub completed: u64,
@@ -91,7 +106,15 @@ pub struct RunSummary {
     pub total_load_s: f64,
     pub total_unload_s: f64,
     pub total_exec_s: f64,
+    /// Total crypto work across the fleet (swaps + staging).
     pub total_crypto_s: f64,
+    /// Crypto time exposed on the swap path — the figure Fig 3/7-style
+    /// reports should quote once the pipeline hides the rest.
+    pub total_crypto_exposed_s: f64,
+    /// Staging uploads across the fleet (predictive prefetch).
+    pub prefetch_count: u64,
+    /// Swaps satisfied by promotion (loads avoided entirely).
+    pub promoted_count: u64,
     pub mean_load_s: f64,
 
     /// Per-device breakdown, in device-id order.
@@ -111,6 +134,8 @@ impl RunSummary {
             ("runtime_s", Json::num(self.runtime_s)),
             ("devices", Json::num(self.devices as f64)),
             ("placement", Json::str(self.placement.clone())),
+            ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
+            ("prefetch", Json::Bool(self.prefetch)),
             ("generated", Json::num(self.generated as f64)),
             ("completed", Json::num(self.completed as f64)),
             ("sla_met", Json::num(self.sla_met as f64)),
@@ -128,6 +153,10 @@ impl RunSummary {
             ("total_unload_s", Json::num(self.total_unload_s)),
             ("total_exec_s", Json::num(self.total_exec_s)),
             ("total_crypto_s", Json::num(self.total_crypto_s)),
+            ("total_crypto_exposed_s",
+             Json::num(self.total_crypto_exposed_s)),
+            ("prefetch_count", Json::num(self.prefetch_count as f64)),
+            ("promoted_count", Json::num(self.promoted_count as f64)),
             ("mean_load_s", Json::num(self.mean_load_s)),
             ("per_device", Json::Arr(self.per_device.iter()
                 .map(|d| d.to_json()).collect())),
@@ -141,14 +170,22 @@ impl RunSummary {
         } else {
             String::new()
         };
+        let mut pipe = String::new();
+        if self.pipeline_depth >= 2 {
+            pipe.push_str(&format!(" pipe={}", self.pipeline_depth));
+        }
+        if self.prefetch {
+            pipe.push_str(&format!(" promo={}/{}", self.promoted_count,
+                                   self.swap_count));
+        }
         format!(
             "{:<6} {:<7} {:<26} sla={:<4} gen={:<5} done={:<5} \
              att={:>5.1}% lat(mean/p99)={:.2}/{:.2}s thr={:.2}rps \
-             util={:>4.1}% swaps={}{}",
+             util={:>4.1}% swaps={}{}{}",
             self.mode, self.pattern, self.strategy, self.sla_s,
             self.generated, self.completed, self.sla_attainment * 100.0,
             self.latency_mean_s, self.latency_p99_s, self.throughput_rps,
-            self.gpu_util * 100.0, self.swap_count, fleet)
+            self.gpu_util * 100.0, self.swap_count, fleet, pipe)
     }
 }
 
@@ -171,6 +208,12 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         dev_stats.iter().map(|s| s.total_unload_s).sum();
     let total_crypto_s: f64 =
         dev_stats.iter().map(|s| s.total_crypto_s).sum();
+    let total_crypto_exposed_s: f64 =
+        dev_stats.iter().map(|s| s.total_crypto_exposed_s).sum();
+    let prefetch_count: u64 =
+        dev_stats.iter().map(|s| s.prefetch_count).sum();
+    let promoted_count: u64 =
+        dev_stats.iter().map(|s| s.promoted_count).sum();
 
     // heterogeneous fleets report "mixed"
     let mode = match dev_modes.split_first() {
@@ -203,6 +246,9 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
             load_s: stats.total_load_s,
             unload_s: stats.total_unload_s,
             crypto_s: stats.total_crypto_s,
+            crypto_exposed_s: stats.total_crypto_exposed_s,
+            prefetches: stats.prefetch_count,
+            promotions: stats.promoted_count,
         }
     }).collect();
 
@@ -217,6 +263,8 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         runtime_s,
         devices: n_dev,
         placement: cfg.placement.clone(),
+        pipeline_depth: cfg.gpu.pipeline_depth,
+        prefetch: cfg.prefetch,
         generated,
         completed,
         sla_met: sla.met(),
@@ -249,6 +297,9 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         total_unload_s,
         total_exec_s: exec_busy,
         total_crypto_s,
+        total_crypto_exposed_s,
+        prefetch_count,
+        promoted_count,
         mean_load_s: if swap_count > 0 {
             total_load_s / swap_count as f64
         } else {

@@ -28,6 +28,13 @@ pub struct GpuConfig {
     pub bw_cc: f64,
     /// Bounce-buffer chunk, bytes.
     pub bounce_bytes: usize,
+    /// CC chunk-pipeline staging buffers (`gpu::dma`): `< 2` serializes
+    /// seal/open and link per chunk; `>= 2` overlaps sealing chunk k+1
+    /// with the link time of chunk k.
+    pub pipeline_depth: usize,
+    /// Fraction of the serialized CC per-byte budget that is crypto
+    /// (the rest is link time); serialized totals are insensitive to it.
+    pub cc_crypto_frac: f64,
     /// Device-side free latency (paper: unloads 4–10 ms in both modes).
     pub unload_latency: Duration,
     /// One-time attestation handshake latency (CC only).
@@ -50,10 +57,29 @@ impl Default for GpuConfig {
             bw_plain: 6.0e6,
             bw_cc: 2.2e6,
             bounce_bytes: 256 * 1024,
+            pipeline_depth: 0,
+            cc_crypto_frac: 0.5,
             unload_latency: Duration::from_millis(6),
             attest_latency: Duration::from_millis(50),
             host_secret: 0x51CE5E,
             no_throttle: false,
+        }
+    }
+}
+
+impl GpuConfig {
+    /// Effective CC seconds-per-byte under the configured pipeline
+    /// setting: the full serialized budget (`1/bw_cc`) when the
+    /// pipeline is off, the steady-state `max(crypto, link)` share of
+    /// it when on.  Load-time *estimates* (strategy headroom terms) use
+    /// this; the DMA engine itself runs the exact chunk recurrence.
+    pub fn cc_seconds_per_byte(&self) -> f64 {
+        let per_byte = 1.0 / self.bw_cc;
+        if self.pipeline_depth >= 2 {
+            let frac = self.cc_crypto_frac.clamp(0.0, 1.0);
+            per_byte * frac.max(1.0 - frac)
+        } else {
+            per_byte
         }
     }
 }
@@ -86,6 +112,8 @@ impl SimGpu {
         let mut dma = DmaEngine::new(cfg.bw_plain, cfg.bw_cc,
                                      cfg.bounce_bytes);
         dma.no_throttle = cfg.no_throttle;
+        dma.pipeline_depth = cfg.pipeline_depth;
+        dma.cc_crypto_frac = cfg.cc_crypto_frac;
         Ok(SimGpu {
             hbm: HbmAllocator::new(cfg.hbm_capacity),
             store: vec![0u8; cfg.hbm_capacity as usize],
@@ -211,6 +239,16 @@ impl SimGpu {
         self.hbm.capacity()
     }
 
+    pub fn mem_largest_free(&self) -> u64 {
+        self.hbm.largest_free()
+    }
+
+    /// Largest free extent if `buf` were returned first (prefetch
+    /// restaging decisions; see `HbmAllocator::largest_free_after`).
+    pub fn mem_largest_free_after(&self, buf: HbmBuffer) -> u64 {
+        self.hbm.largest_free_after(buf)
+    }
+
     pub fn mem_fragmentation(&self) -> f64 {
         self.hbm.fragmentation()
     }
@@ -234,9 +272,11 @@ mod tests {
             assert_eq!(gpu.peek(buf), &data[..], "{mode:?}");
             assert_eq!(rep.bytes, data.len() as u64);
             if mode == CcMode::On {
-                assert!(rep.crypto > Duration::ZERO);
+                assert!(rep.crypto_total > Duration::ZERO);
+                assert_eq!(rep.crypto_total, rep.crypto_exposed,
+                           "serialized CC exposes all crypto");
             } else {
-                assert_eq!(rep.crypto, Duration::ZERO);
+                assert_eq!(rep.crypto_total, Duration::ZERO);
             }
             let roundtrip = gpu.download(buf).unwrap();
             assert_eq!(roundtrip, data);
@@ -282,6 +322,21 @@ mod tests {
         let s = gpu.dma_stats();
         assert_eq!(s.h2d_bytes, 4096);
         assert_eq!(s.d2h_bytes, 2048);
-        assert!(s.crypto > Duration::ZERO);
+        assert!(s.crypto_total > Duration::ZERO);
+    }
+
+    #[test]
+    fn cc_seconds_per_byte_tracks_pipeline() {
+        let mut c = cfg(CcMode::On);
+        c.bw_cc = 2.0e6;
+        let serial = c.cc_seconds_per_byte();
+        assert!((serial - 0.5e-6).abs() < 1e-15);
+        c.pipeline_depth = 2;
+        c.cc_crypto_frac = 0.5;
+        assert!((c.cc_seconds_per_byte() - 0.25e-6).abs() < 1e-15,
+                "even split halves the steady-state cost");
+        c.cc_crypto_frac = 0.75;
+        assert!((c.cc_seconds_per_byte() - 0.375e-6).abs() < 1e-15,
+                "crypto-heavy split is bounded by the crypto stage");
     }
 }

@@ -7,10 +7,37 @@
 //! inside the trust boundary and only the PCIe link is protected.
 //!
 //! Bandwidth model: after doing the real work (copy + crypto) the engine
-//! sleeps out the remainder of `len / bandwidth`, so configured GB/s are
-//! an *upper* bound and CC crypto cost shows up organically when it
-//! exceeds the budget.  Defaults are calibrated in `config` so load
-//! times land in the paper's Fig 3 regime (CC ≈ 2.5–3× No-CC).
+//! sleeps out the remainder of the *modeled* transfer budget, so
+//! configured GB/s are an *upper* bound.  Defaults are calibrated in
+//! `config` so load times land in the paper's Fig 3 regime
+//! (CC ≈ 2.5–3× No-CC).
+//!
+//! ## The CC chunk pipeline
+//!
+//! The serialized CC budget per byte is `1/bw_cc`, split by
+//! `cc_crypto_frac` into a crypto share (seal + open) and a link share
+//! (bounce-buffer PCIe time).  With `pipeline_depth < 2` every chunk
+//! pays `crypto + link` in sequence — the paper's serialized bounce
+//! path.  With `pipeline_depth >= 2` staging buffers, sealing chunk
+//! *k+1* overlaps the link time of chunk *k* (PipeLLM-style speculative
+//! pipelined encryption):
+//!
+//! ```text
+//! serialized:  [seal+open 0][link 0][seal+open 1][link 1]...
+//! pipelined:   [seal+open 0][seal+open 1][seal+open 2]...
+//!                           [link 0]     [link 1]     [link 2]...
+//! ```
+//!
+//! Steady state the pipeline pays `max(crypto, link)` per chunk instead
+//! of their sum; only the fill latency and any crypto overhang are
+//! *exposed*.  `TransferReport`/`DmaStats` therefore split crypto time
+//! into `crypto_total` (work done) and `crypto_exposed` (time not
+//! hidden behind the link) — the two coincide exactly when serialized.
+//!
+//! The seal/open work itself still runs sequentially on the calling
+//! thread (data fidelity); the overlap is expressed through the modeled
+//! budget the throttle sleeps out, which is also what `sim::calib`
+//! prices into the DES cost tables.
 
 use std::time::{Duration, Instant};
 
@@ -25,16 +52,25 @@ pub struct DmaStats {
     pub d2h_transfers: u64,
     /// Wall time spent inside transfers.
     pub busy: Duration,
-    /// Portion of `busy` spent in seal/open (CC only).
-    pub crypto: Duration,
+    /// Modeled seal/open work across all CC transfers (budget domain).
+    pub crypto_total: Duration,
+    /// Crypto time not hidden behind the link; equals `crypto_total`
+    /// when the pipeline is off.
+    pub crypto_exposed: Duration,
 }
 
-/// Result of a single transfer.
+/// Result of a single transfer.  The crypto figures are in the modeled
+/// budget domain (what the throttle enforces), so they stay meaningful
+/// when `no_throttle` skips the sleeps.
 #[derive(Debug, Clone, Copy)]
 pub struct TransferReport {
     pub bytes: u64,
     pub elapsed: Duration,
-    pub crypto: Duration,
+    /// Total modeled seal/open work for this transfer (CC only).
+    pub crypto_total: Duration,
+    /// Crypto time not overlapped with the link (== total when
+    /// serialized; the pipeline fill + overhang when pipelined).
+    pub crypto_exposed: Duration,
 }
 
 /// Direction of a DMA transfer.
@@ -48,11 +84,21 @@ pub enum Dir {
 pub struct DmaEngine {
     /// Plain-mode PCIe bandwidth, bytes/second.
     pub bw_plain: f64,
-    /// CC-mode effective link bandwidth, bytes/second (bounce-buffer
-    /// staging halves usable bandwidth before crypto cost).
+    /// CC-mode effective *serialized* bandwidth, bytes/second: the
+    /// combined per-byte cost of bounce-buffer crypto + link time when
+    /// chunks run strictly in sequence.
     pub bw_cc: f64,
     /// Bounce-buffer chunk size, bytes.
     pub bounce_bytes: usize,
+    /// Staging buffers for the two-stage CC chunk pipeline: `< 2`
+    /// serializes crypto and link per chunk; `>= 2` overlaps sealing
+    /// chunk k+1 with the link time of chunk k.
+    pub pipeline_depth: usize,
+    /// Fraction of the serialized CC per-byte budget that is crypto
+    /// (the rest is link time).  Only the split — not the serialized
+    /// total — depends on this, so serialized runs are insensitive to
+    /// it.
+    pub cc_crypto_frac: f64,
     /// When true, skip the throttle sleeps (used by unit tests and the
     /// hot-path benches; experiment runs keep it on).
     pub no_throttle: bool,
@@ -65,8 +111,54 @@ pub struct DmaEngine {
 impl DmaEngine {
     pub fn new(bw_plain: f64, bw_cc: f64, bounce_bytes: usize) -> DmaEngine {
         assert!(bw_plain > 0.0 && bw_cc > 0.0 && bounce_bytes > 0);
-        DmaEngine { bw_plain, bw_cc, bounce_bytes, no_throttle: false,
+        DmaEngine { bw_plain, bw_cc, bounce_bytes, pipeline_depth: 0,
+                    cc_crypto_frac: 0.5, no_throttle: false,
                     bounce: Vec::new(), stats: DmaStats::default() }
+    }
+
+    /// Modeled CC transfer budget for `len` bytes under the current
+    /// pipeline setting: total seconds plus the (total, exposed) crypto
+    /// split.  Serialized this is `len/bw_cc` with crypto fully
+    /// exposed; pipelined, chunk crypto overlaps the previous chunk's
+    /// link time and only the fill + overhang is exposed.
+    fn cc_budget(&self, len: usize) -> (f64, f64, f64) {
+        let per_byte = 1.0 / self.bw_cc;
+        let frac = self.cc_crypto_frac.clamp(0.0, 1.0);
+        let crypto_pb = frac * per_byte;
+        let link_pb = (1.0 - frac) * per_byte;
+        let crypto_total = len as f64 * crypto_pb;
+        let link_total = len as f64 * link_pb;
+        if self.pipeline_depth < 2 {
+            // strictly serialized: every chunk pays crypto + link
+            return (len as f64 * per_byte, crypto_total, crypto_total);
+        }
+        // Two-stage pipeline with `pipeline_depth` staging buffers:
+        // crypto for chunk k may start once buffer (k - depth) has
+        // drained onto the link; the link takes chunks in order.
+        let depth = self.pipeline_depth;
+        let n_chunks = len.div_ceil(self.bounce_bytes).max(1);
+        let mut link_ends: Vec<f64> = Vec::with_capacity(n_chunks);
+        let mut crypto_end = 0.0f64;
+        let mut link_end = 0.0f64;
+        for k in 0..n_chunks {
+            let chunk = if (k + 1) * self.bounce_bytes <= len {
+                self.bounce_bytes
+            } else {
+                len - k * self.bounce_bytes
+            };
+            let c = chunk as f64 * crypto_pb;
+            let l = chunk as f64 * link_pb;
+            let buffer_free = if k >= depth {
+                link_ends[k - depth]
+            } else {
+                0.0
+            };
+            crypto_end = crypto_end.max(buffer_free) + c;
+            link_end = link_end.max(crypto_end) + l;
+            link_ends.push(link_end);
+        }
+        let exposed = (link_end - link_total).max(0.0);
+        (link_end, crypto_total, exposed)
     }
 
     /// Move `src` into `dst` (pre-sized by the caller), optionally
@@ -77,36 +169,42 @@ impl DmaEngine {
                         "dma size mismatch: src {} dst {}", src.len(),
                         dst.len());
         let start = Instant::now();
-        let mut crypto = Duration::ZERO;
 
-        match cc {
-            None => dst.copy_from_slice(src),
+        let (target_s, crypto_total_s, crypto_exposed_s) = match cc {
+            None => {
+                dst.copy_from_slice(src);
+                (src.len() as f64 / self.bw_plain, 0.0, 0.0)
+            }
             Some(session) => {
                 // Chunked: host seals into the reused bounce buffer, the
                 // "device" side authenticates and decrypts straight into
-                // its memory (zero extra copies, §Perf).
+                // its memory (zero extra copies, §Perf).  The work runs
+                // sequentially; the budget below models the overlap.
+                let mut bounce = std::mem::take(&mut self.bounce);
                 for (s_chunk, d_chunk) in src.chunks(self.bounce_bytes)
                     .zip(dst.chunks_mut(self.bounce_bytes))
                 {
-                    let t0 = Instant::now();
-                    session.seal_into(s_chunk, &mut self.bounce);
-                    session.open_into(&self.bounce, d_chunk)?;
-                    crypto += t0.elapsed();
+                    session.seal_into(s_chunk, &mut bounce);
+                    session.open_into(&bounce, d_chunk)?;
                 }
+                self.bounce = bounce;
+                self.cc_budget(src.len())
             }
-        }
+        };
 
         // Bandwidth throttle: sleep out the remainder of the budget.
-        let bw = if cc.is_some() { self.bw_cc } else { self.bw_plain };
-        let target = Duration::from_secs_f64(src.len() as f64 / bw);
+        let target = Duration::from_secs_f64(target_s);
         let done = start.elapsed();
         if !self.no_throttle && target > done {
             std::thread::sleep(target - done);
         }
 
         let elapsed = start.elapsed();
+        let crypto_total = Duration::from_secs_f64(crypto_total_s);
+        let crypto_exposed = Duration::from_secs_f64(crypto_exposed_s);
         self.stats.busy += elapsed;
-        self.stats.crypto += crypto;
+        self.stats.crypto_total += crypto_total;
+        self.stats.crypto_exposed += crypto_exposed;
         match dir {
             Dir::HostToDevice => {
                 self.stats.h2d_bytes += src.len() as u64;
@@ -117,7 +215,8 @@ impl DmaEngine {
                 self.stats.d2h_transfers += 1;
             }
         }
-        Ok(TransferReport { bytes: src.len() as u64, elapsed, crypto })
+        Ok(TransferReport { bytes: src.len() as u64, elapsed, crypto_total,
+                            crypto_exposed })
     }
 
     pub fn stats(&self) -> &DmaStats {
@@ -144,7 +243,8 @@ mod tests {
         let rep = e.transfer(Dir::HostToDevice, &src, &mut dst, None).unwrap();
         assert_eq!(dst, src);
         assert_eq!(rep.bytes, 100_000);
-        assert_eq!(rep.crypto, Duration::ZERO);
+        assert_eq!(rep.crypto_total, Duration::ZERO);
+        assert_eq!(rep.crypto_exposed, Duration::ZERO);
         assert_eq!(e.stats().h2d_transfers, 1);
     }
 
@@ -158,7 +258,28 @@ mod tests {
         let rep = e.transfer(Dir::HostToDevice, &src, &mut dst,
                              Some(&session)).unwrap();
         assert_eq!(dst, src, "plaintext must land in device memory");
-        assert!(rep.crypto > Duration::ZERO);
+        assert!(rep.crypto_total > Duration::ZERO);
+        // serialized: every crypto second is exposed
+        assert_eq!(rep.crypto_total, rep.crypto_exposed);
+    }
+
+    #[test]
+    fn pipelined_cc_transfer_still_decrypts() {
+        let mut e = engine_unthrottled();
+        e.bounce_bytes = 1024;
+        e.pipeline_depth = 2;
+        let session = CcSession::establish(99).unwrap();
+        let src: Vec<u8> = (0..10_000).map(|i| (i % 241) as u8).collect();
+        let mut dst = vec![0u8; src.len()];
+        let rep = e.transfer(Dir::HostToDevice, &src, &mut dst,
+                             Some(&session)).unwrap();
+        assert_eq!(dst, src);
+        // overlap hides most crypto: exposed strictly below total but
+        // never zero (the fill chunk cannot be hidden)
+        assert!(rep.crypto_exposed > Duration::ZERO);
+        assert!(rep.crypto_exposed < rep.crypto_total,
+                "pipeline must hide some crypto: exposed {:?} total {:?}",
+                rep.crypto_exposed, rep.crypto_total);
     }
 
     #[test]
@@ -186,6 +307,65 @@ mod tests {
         assert!(cc > plain, "cc {cc:?} <= plain {plain:?}");
         let ratio = cc.as_secs_f64() / plain.as_secs_f64();
         assert!(ratio > 3.0, "ratio {ratio} (want ~10 modulo load)");
+    }
+
+    #[test]
+    fn pipelined_cc_faster_than_serialized_under_throttle() {
+        // 1 MB at 5 MB/s serialized = ~200 ms; with depth 2 and an even
+        // crypto/link split the steady state halves to ~100 ms + fill
+        let src = vec![9u8; 1_000_000];
+        let mut dst = vec![0u8; src.len()];
+        let session = CcSession::establish(4).unwrap();
+        let mut serial = DmaEngine::new(50e6, 5e6, 64 * 1024);
+        let t_serial = serial.transfer(Dir::HostToDevice, &src, &mut dst,
+                                       Some(&session)).unwrap().elapsed;
+        let mut pipe = DmaEngine::new(50e6, 5e6, 64 * 1024);
+        pipe.pipeline_depth = 2;
+        let t_pipe = pipe.transfer(Dir::HostToDevice, &src, &mut dst,
+                                   Some(&session)).unwrap().elapsed;
+        assert!(t_pipe.as_secs_f64() < 0.8 * t_serial.as_secs_f64(),
+                "pipeline did not recover time: pipe {t_pipe:?} vs \
+                 serial {t_serial:?}");
+        // but it can never beat the pure link share of the budget
+        assert!(t_pipe.as_secs_f64() > 0.4 * t_serial.as_secs_f64(),
+                "pipeline beat the link floor: {t_pipe:?}");
+    }
+
+    #[test]
+    fn pipeline_budget_shape() {
+        // budget arithmetic, no sleeping: equal chunks, frac 0.5
+        let mut e = engine_unthrottled();
+        e.bounce_bytes = 1000;
+        e.cc_crypto_frac = 0.5;
+        let len = 10_000; // 10 chunks
+        let (serial, ct, ce) = e.cc_budget(len);
+        assert!((serial - len as f64 / e.bw_cc).abs() < 1e-12);
+        assert!((ct - 0.5 * serial).abs() < 1e-12);
+        assert!((ce - ct).abs() < 1e-12, "serialized exposes all crypto");
+        e.pipeline_depth = 2;
+        let (pipe, ct2, ce2) = e.cc_budget(len);
+        assert!((ct2 - ct).abs() < 1e-12, "work done is unchanged");
+        // steady state: fill chunk + 10 link slots = 11/20 of serialized
+        assert!((pipe - serial * 11.0 / 20.0).abs() < 1e-9,
+                "pipe {pipe} vs serial {serial}");
+        // exposed = exactly the fill chunk's crypto
+        assert!((ce2 - serial * 0.05).abs() < 1e-9, "exposed {ce2}");
+    }
+
+    #[test]
+    fn pipeline_depth_does_not_change_plain_mode() {
+        let src = vec![1u8; 500_000];
+        let mut dst = vec![0u8; src.len()];
+        let mut a = DmaEngine::new(20e6, 5e6, 64 * 1024);
+        let mut b = DmaEngine::new(20e6, 5e6, 64 * 1024);
+        b.pipeline_depth = 4;
+        let ta = a.transfer(Dir::HostToDevice, &src, &mut dst, None)
+            .unwrap().elapsed;
+        let tb = b.transfer(Dir::HostToDevice, &src, &mut dst, None)
+            .unwrap().elapsed;
+        // both sleep out the same plain budget (~25 ms); allow jitter
+        let diff = (ta.as_secs_f64() - tb.as_secs_f64()).abs();
+        assert!(diff < 0.02, "plain transfers diverged by {diff}s");
     }
 
     #[test]

@@ -137,6 +137,24 @@ impl HbmAllocator {
         self.free.iter().map(|&(_, l)| l).max().unwrap_or(0)
     }
 
+    /// Largest free extent *if* `buf` were returned first — exact,
+    /// because freeing only coalesces with the (at most two) adjacent
+    /// extents.  Lets callers decide whether reclaiming a buffer would
+    /// make room before actually giving it up (prefetch restaging).
+    pub fn largest_free_after(&self, buf: HbmBuffer) -> u64 {
+        let mut merged_off = buf.offset;
+        let mut merged_len = buf.len;
+        for &(o, l) in &self.free {
+            if o + l == merged_off {
+                merged_off = o;
+                merged_len += l;
+            } else if merged_off + merged_len == o {
+                merged_len += l;
+            }
+        }
+        self.largest_free().max(merged_len)
+    }
+
     /// Fragmentation ratio in [0, 1]: 1 − largest_free / total_free.
     /// 0 when free space is one extent (or none).
     pub fn fragmentation(&self) -> f64 {
@@ -200,6 +218,23 @@ mod tests {
         assert_eq!(d.offset, 0);
         // free extents: 150..200 (50). frag still 0 (one extent)
         assert_eq!(h.free_bytes(), 50);
+    }
+
+    #[test]
+    fn largest_free_after_merges_both_neighbours() {
+        let mut h = HbmAllocator::new(1000);
+        let a = h.alloc(200).unwrap(); // 0..200
+        let b = h.alloc(300).unwrap(); // 200..500
+        let c = h.alloc(400).unwrap(); // 500..900, tail 900..1000 free
+        h.free(a); // holes: 0..200, 900..1000
+        assert_eq!(h.largest_free(), 200);
+        // freeing b would coalesce with the left hole: 0..500
+        assert_eq!(h.largest_free_after(b), 500);
+        // freeing c coalesces with the tail only: 500..1000
+        assert_eq!(h.largest_free_after(c), 500);
+        // prediction matches reality
+        h.free(b);
+        assert_eq!(h.largest_free(), 500);
     }
 
     #[test]

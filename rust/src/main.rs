@@ -310,11 +310,15 @@ fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::engine::RunSummary>> {
             mean_rps: c.req("mean_rps")?.as_f64().unwrap_or(0.0),
             duration_s: c.req("duration_s")?.as_f64().unwrap_or(0.0),
             runtime_s: c.req("runtime_s")?.as_f64().unwrap_or(0.0),
-            // fleet fields are optional for pre-fleet summary files
+            // fleet/pipeline fields are optional for older summary files
             devices: c.get("devices").and_then(|v| v.as_usize())
                 .unwrap_or(1),
             placement: c.get("placement").and_then(|v| v.as_str())
                 .unwrap_or("affinity").into(),
+            pipeline_depth: c.get("pipeline_depth")
+                .and_then(|v| v.as_usize()).unwrap_or(0),
+            prefetch: c.get("prefetch").and_then(|v| v.as_bool())
+                .unwrap_or(false),
             generated: c.req("generated")?.as_u64().unwrap_or(0),
             completed: c.req("completed")?.as_u64().unwrap_or(0),
             sla_met: c.req("sla_met")?.as_u64().unwrap_or(0),
@@ -333,6 +337,12 @@ fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::engine::RunSummary>> {
             total_unload_s: c.req("total_unload_s")?.as_f64().unwrap_or(0.0),
             total_exec_s: c.req("total_exec_s")?.as_f64().unwrap_or(0.0),
             total_crypto_s: c.req("total_crypto_s")?.as_f64().unwrap_or(0.0),
+            total_crypto_exposed_s: c.get("total_crypto_exposed_s")
+                .and_then(|v| v.as_f64()).unwrap_or(0.0),
+            prefetch_count: c.get("prefetch_count")
+                .and_then(|v| v.as_u64()).unwrap_or(0),
+            promoted_count: c.get("promoted_count")
+                .and_then(|v| v.as_u64()).unwrap_or(0),
             mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
             per_device: parse_per_device(c),
         });
@@ -359,6 +369,12 @@ fn parse_per_device(c: &Json) -> Vec<sincere::engine::DeviceSummary> {
             .unwrap_or(0.0),
         crypto_s: d.get("crypto_s").and_then(|v| v.as_f64())
             .unwrap_or(0.0),
+        crypto_exposed_s: d.get("crypto_exposed_s")
+            .and_then(|v| v.as_f64()).unwrap_or(0.0),
+        prefetches: d.get("prefetches").and_then(|v| v.as_u64())
+            .unwrap_or(0),
+        promotions: d.get("promotions").and_then(|v| v.as_u64())
+            .unwrap_or(0),
     }).collect()
 }
 
@@ -428,7 +444,18 @@ fn usage_string() -> String {
          \x20 --device-modes cc,no-cc,...   per-device CC mode mix\n\
          \x20 --device-hbm-mb a,b    per-device HBM capacity, MB\n\
          \x20 --device-bw-scale a,b  per-device PCIe rate scale\n\
-         \x20 --placement {placements}\n",
+         \x20 --placement {placements}\n\n\
+         CC PIPELINE OPTIONS:\n\
+         \x20 --pipeline-depth N     CC bounce-chunk staging buffers: \
+         0|1 = serialized\n\
+         \x20                        (default), >=2 overlaps sealing \
+         with the link\n\
+         \x20 --cc-crypto-frac F     crypto share of the serialized CC \
+         budget (default 0.5)\n\
+         \x20 --prefetch on|off      decrypt-ahead the predicted next \
+         model while a batch\n\
+         \x20                        executes; the swap promotes it \
+         without a second DMA\n",
         "help", "show this help",
         patterns = PATTERN_NAMES.join("|"),
         strategies = strategy_names().join("|"),

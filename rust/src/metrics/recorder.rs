@@ -25,10 +25,15 @@ pub struct BatchRecord {
     pub rows: usize,
     pub artifact_batch: usize,
     pub swapped: bool,
+    /// The swap promoted a prefetched buffer (no DMA paid).
+    pub promoted: bool,
     pub load_s: f64,
     pub unload_s: f64,
     pub exec_s: f64,
     pub io_s: f64,
+    /// Decrypt-ahead staging issued after this batch's dispatch,
+    /// overlapped with its execution.
+    pub prefetch_s: f64,
 }
 
 /// One monitor sample (process + one fleet device).
@@ -42,7 +47,10 @@ pub struct MonitorRecord {
     pub mem_peak: u64,
     pub fragmentation: f64,
     pub dma_h2d_bytes: u64,
-    pub dma_crypto_s: f64,
+    /// Total modeled crypto work so far (see `gpu::dma::DmaStats`).
+    pub dma_crypto_total_s: f64,
+    /// Crypto time not hidden behind the DMA pipeline.
+    pub dma_crypto_exposed_s: f64,
     pub swaps: u64,
 }
 
@@ -110,13 +118,15 @@ impl Recorder {
         let mut w = CsvWriter::create(
             &dir.join(format!("{label}_batches.csv")),
             &["at_s", "model", "device", "rows", "artifact_batch",
-              "swapped", "load_s", "unload_s", "exec_s", "io_s"])?;
+              "swapped", "promoted", "load_s", "unload_s", "exec_s",
+              "io_s", "prefetch_s"])?;
         for b in &self.batches {
             w.row(&[fmt(b.at_s), b.model.clone(), b.device.to_string(),
                     b.rows.to_string(),
                     b.artifact_batch.to_string(), b.swapped.to_string(),
+                    b.promoted.to_string(),
                     fmt(b.load_s), fmt(b.unload_s), fmt(b.exec_s),
-                    fmt(b.io_s)])?;
+                    fmt(b.io_s), fmt(b.prefetch_s)])?;
         }
         w.flush()?;
 
@@ -125,7 +135,7 @@ impl Recorder {
             &["at_s", "device", "cpu_user_s", "cpu_sys_s", "rss_bytes",
               "vol_ctxt", "invol_ctxt", "gpu_util", "mem_in_use",
               "mem_peak", "fragmentation", "dma_h2d_bytes",
-              "dma_crypto_s", "swaps"])?;
+              "dma_crypto_total_s", "dma_crypto_exposed_s", "swaps"])?;
         for m in &self.monitor {
             w.row(&[fmt(m.proc.at_s), m.device.to_string(),
                     fmt(m.proc.cpu_user_s),
@@ -134,7 +144,8 @@ impl Recorder {
                     m.proc.invol_ctxt.to_string(), fmt(m.gpu_util),
                     m.mem_in_use.to_string(), m.mem_peak.to_string(),
                     fmt(m.fragmentation), m.dma_h2d_bytes.to_string(),
-                    fmt(m.dma_crypto_s), m.swaps.to_string()])?;
+                    fmt(m.dma_crypto_total_s), fmt(m.dma_crypto_exposed_s),
+                    m.swaps.to_string()])?;
         }
         w.flush()?;
         Ok(())
@@ -171,14 +182,16 @@ mod tests {
         r.on_complete(completed(2, 7.5), false);
         r.on_batch(BatchRecord {
             at_s: 2.0, model: "llama-sim".into(), device: 1, rows: 3,
-            artifact_batch: 4, swapped: true, load_s: 0.4, unload_s: 0.01,
-            exec_s: 0.2, io_s: 0.005,
+            artifact_batch: 4, swapped: true, promoted: false,
+            load_s: 0.4, unload_s: 0.01, exec_s: 0.2, io_s: 0.005,
+            prefetch_s: 0.15,
         });
         r.on_monitor(MonitorRecord {
             proc: ProcSample { at_s: 2.5, ..Default::default() },
             device: 1,
             gpu_util: 0.3, mem_in_use: 100, mem_peak: 200,
-            fragmentation: 0.0, dma_h2d_bytes: 1000, dma_crypto_s: 0.1,
+            fragmentation: 0.0, dma_h2d_bytes: 1000,
+            dma_crypto_total_s: 0.1, dma_crypto_exposed_s: 0.04,
             swaps: 1,
         });
 
@@ -202,5 +215,11 @@ mod tests {
         assert!((r.total_load_s() - 0.4).abs() < 1e-12);
         assert_eq!(r.latency_hist.count(), 2);
         assert_eq!(batches.rows[0][batches.col("device").unwrap()], "1");
+        assert_eq!(batches.rows[0][batches.col("promoted").unwrap()],
+                   "false");
+        let pf = batches.f64_col("prefetch_s").unwrap();
+        assert!((pf[0] - 0.15).abs() < 1e-6);
+        let exposed = mon.f64_col("dma_crypto_exposed_s").unwrap();
+        assert!((exposed[0] - 0.04).abs() < 1e-6);
     }
 }

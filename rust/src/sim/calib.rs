@@ -17,7 +17,19 @@ use crate::util::stopwatch::Stopwatch;
 #[derive(Debug, Clone, Default)]
 pub struct ModelCosts {
     pub load_s_plain: f64,
+    /// Serialized CC load (bounce chunks pay crypto + link in sequence).
     pub load_s_cc: f64,
+    /// Pipelined CC load (`gpu::dma` chunk pipeline: steady-state
+    /// `max(crypto, link)` per chunk instead of their sum).  Falls back
+    /// to `load_s_cc` when unprofiled (pre-pipeline cost tables).
+    pub load_s_cc_pipe: f64,
+    /// Total modeled crypto work of one CC load (identical serialized
+    /// or pipelined — the pipeline hides work, it doesn't remove it).
+    pub load_crypto_s_cc: f64,
+    /// Crypto seconds still exposed on a *pipelined* CC load (the fill
+    /// chunk + any crypto overhang).  Serialized loads expose
+    /// `load_crypto_s_cc` in full.
+    pub load_crypto_exposed_s_cc_pipe: f64,
     pub unload_s: f64,
     /// artifact batch size -> mean execute seconds.
     pub exec_s_by_batch: BTreeMap<usize, f64>,
@@ -47,6 +59,41 @@ impl ModelCosts {
         }
     }
 
+    /// Load seconds under an explicit pipeline setting.  Pre-pipeline
+    /// cost tables (no profiled `load_s_cc_pipe`) fall back to the
+    /// serialized figure, pricing the pipeline as a no-op rather than
+    /// inventing a speedup.
+    pub fn load_s_for(&self, mode: CcMode, pipelined: bool) -> f64 {
+        match (mode, pipelined) {
+            (CcMode::Off, _) => self.load_s_plain,
+            (CcMode::On, false) => self.load_s_cc,
+            (CcMode::On, true) => {
+                if self.load_s_cc_pipe > 0.0 {
+                    self.load_s_cc_pipe
+                } else {
+                    self.load_s_cc
+                }
+            }
+        }
+    }
+
+    /// `(crypto_total_s, crypto_exposed_s)` of one load under the given
+    /// mode/pipeline setting (both zero in No-CC).
+    pub fn load_crypto_for(&self, mode: CcMode, pipelined: bool)
+                           -> (f64, f64) {
+        match mode {
+            CcMode::Off => (0.0, 0.0),
+            CcMode::On => {
+                let exposed = if pipelined && self.load_s_cc_pipe > 0.0 {
+                    self.load_crypto_exposed_s_cc_pipe
+                } else {
+                    self.load_crypto_s_cc
+                };
+                (self.load_crypto_s_cc, exposed)
+            }
+        }
+    }
+
     /// Throughput (req/s) at a profiled batch size (Fig 4's y-axis).
     pub fn throughput_at(&self, batch: usize) -> f64 {
         let e = self.exec_s(batch);
@@ -64,6 +111,14 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// True when any model lacks a profiled pipelined CC load — i.e.
+    /// the table was cached before the pipeline existed, and pipelined
+    /// runs would silently price as serialized.  Backends warn on this
+    /// so a stale `cost_model.json` cannot fake a zero-benefit result.
+    pub fn missing_pipeline_profile(&self) -> bool {
+        self.models.values().any(|mc| mc.load_s_cc_pipe <= 0.0)
+    }
+
     pub fn costs(&self, model: &str) -> anyhow::Result<&ModelCosts> {
         self.models.get(model).ok_or_else(|| anyhow::anyhow!(
             "no calibrated costs for model {model:?}"))
@@ -84,13 +139,21 @@ impl CostModel {
         assert!(reps >= 1);
         let mut cm = CostModel::default();
 
-        // one device per mode for load profiling
+        // one device per mode for load profiling; the CC device is
+        // forced serialized so `load_s_cc` always means the worst-case
+        // bounce path, whatever the base config says
         let mut gpus = Vec::new();
         for mode in [CcMode::Off, CcMode::On] {
             gpus.push((mode, SimGpu::new(GpuConfig {
-                mode, ..base.clone()
+                mode, pipeline_depth: 0, ..base.clone()
             })?));
         }
+        // plus one pipelined CC device: same budget split, overlapped
+        let mut pipe_gpu = SimGpu::new(GpuConfig {
+            mode: CcMode::On,
+            pipeline_depth: base.pipeline_depth.max(2),
+            ..base.clone()
+        })?;
 
         for name in registry.names() {
             let entry = registry.entry(&name)?;
@@ -99,19 +162,39 @@ impl CostModel {
             // ---- load/unload per mode (Fig 3) ----
             for (mode, gpu) in gpus.iter_mut() {
                 let mut total = 0.0;
+                let mut crypto_total = 0.0;
                 let mut unload_total = 0.0;
                 for _ in 0..reps {
                     let (buf, rep) = gpu.upload(&entry.weights.raw)?;
                     total += rep.elapsed.as_secs_f64();
+                    crypto_total += rep.crypto_total.as_secs_f64();
                     unload_total += gpu.unload(buf).as_secs_f64();
                 }
                 let mean = total / reps as f64;
                 match mode {
                     CcMode::Off => mc.load_s_plain = mean,
-                    CcMode::On => mc.load_s_cc = mean,
+                    CcMode::On => {
+                        mc.load_s_cc = mean;
+                        mc.load_crypto_s_cc = crypto_total / reps as f64;
+                    }
                 }
                 mc.unload_s = unload_total / (reps as f64 * 2.0)
                     + mc.unload_s / 2.0; // average across both modes
+            }
+
+            // ---- pipelined CC load (the overlap the DES must price) ----
+            {
+                let mut total = 0.0;
+                let mut exposed_total = 0.0;
+                for _ in 0..reps {
+                    let (buf, rep) = pipe_gpu.upload(&entry.weights.raw)?;
+                    total += rep.elapsed.as_secs_f64();
+                    exposed_total += rep.crypto_exposed.as_secs_f64();
+                    pipe_gpu.unload(buf);
+                }
+                mc.load_s_cc_pipe = total / reps as f64;
+                mc.load_crypto_exposed_s_cc_pipe =
+                    exposed_total / reps as f64;
             }
 
             // ---- execution per batch size (Fig 4) ----
@@ -183,6 +266,10 @@ impl CostModel {
             (name.clone(), Json::obj(vec![
                 ("load_s_plain", Json::num(mc.load_s_plain)),
                 ("load_s_cc", Json::num(mc.load_s_cc)),
+                ("load_s_cc_pipe", Json::num(mc.load_s_cc_pipe)),
+                ("load_crypto_s_cc", Json::num(mc.load_crypto_s_cc)),
+                ("load_crypto_exposed_s_cc_pipe",
+                 Json::num(mc.load_crypto_exposed_s_cc_pipe)),
                 ("unload_s", Json::num(mc.unload_s)),
                 ("obs", Json::num(mc.obs as f64)),
                 ("oom_batches", Json::Arr(mc.oom_batches.iter()
@@ -213,6 +300,15 @@ impl CostModel {
             let mut mc = ModelCosts {
                 load_s_plain: mj.req("load_s_plain")?.as_f64().unwrap_or(0.0),
                 load_s_cc: mj.req("load_s_cc")?.as_f64().unwrap_or(0.0),
+                // pipeline fields are optional: pre-pipeline cost
+                // tables load with the serialized fallbacks
+                load_s_cc_pipe: mj.get("load_s_cc_pipe")
+                    .and_then(|v| v.as_f64()).unwrap_or(0.0),
+                load_crypto_s_cc: mj.get("load_crypto_s_cc")
+                    .and_then(|v| v.as_f64()).unwrap_or(0.0),
+                load_crypto_exposed_s_cc_pipe:
+                    mj.get("load_crypto_exposed_s_cc_pipe")
+                        .and_then(|v| v.as_f64()).unwrap_or(0.0),
                 unload_s: mj.req("unload_s")?.as_f64().unwrap_or(0.0),
                 obs: mj.req("obs")?.as_usize().unwrap_or(1),
                 ..Default::default()
@@ -276,6 +372,9 @@ mod tests {
         let mut mc = ModelCosts {
             load_s_plain: 0.3,
             load_s_cc: 0.9,
+            load_s_cc_pipe: 0.5,
+            load_crypto_s_cc: 0.45,
+            load_crypto_exposed_s_cc_pipe: 0.05,
             unload_s: 0.006,
             obs: 8,
             ..Default::default()
@@ -296,8 +395,54 @@ mod tests {
         assert_eq!(a.obs, 8);
         assert_eq!(a.oom_batches, vec![32]);
         assert!((a.load_s_cc - 0.9).abs() < 1e-12);
+        assert!((a.load_s_cc_pipe - 0.5).abs() < 1e-12);
+        assert!((a.load_crypto_s_cc - 0.45).abs() < 1e-12);
+        assert!((a.load_crypto_exposed_s_cc_pipe - 0.05).abs() < 1e-12);
         assert!((a.exec_s(8) - 0.2).abs() < 1e-12);
         assert!((back.io_s_per_row_cc - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pre_pipeline_cost_tables_still_load() {
+        // strip the pipeline fields from the JSON: a cached cost model
+        // from before the pipeline existed must parse, pricing the
+        // pipeline as a no-op
+        let cm = sample();
+        let j = cm.to_json();
+        let mut obj = j.as_obj().unwrap().clone();
+        let models = obj.get_mut("models").unwrap();
+        if let crate::util::json::Json::Obj(m) = models {
+            for (_, mj) in m.iter_mut() {
+                if let crate::util::json::Json::Obj(fields) = mj {
+                    fields.remove("load_s_cc_pipe");
+                    fields.remove("load_crypto_s_cc");
+                    fields.remove("load_crypto_exposed_s_cc_pipe");
+                }
+            }
+        }
+        let back =
+            CostModel::from_json(&crate::util::json::Json::Obj(obj))
+                .unwrap();
+        let a = back.costs("llama-sim").unwrap();
+        assert_eq!(a.load_s_cc_pipe, 0.0);
+        assert!((a.load_s_for(CcMode::On, true) - 0.9).abs() < 1e-12,
+                "missing pipe figure falls back to serialized");
+        assert_eq!(a.load_crypto_for(CcMode::On, true), (0.0, 0.0));
+    }
+
+    #[test]
+    fn load_selectors_respect_mode_and_pipeline() {
+        let cm = sample();
+        let mc = cm.costs("llama-sim").unwrap();
+        assert_eq!(mc.load_s_for(CcMode::Off, true), 0.3,
+                   "pipeline never changes No-CC");
+        assert_eq!(mc.load_s_for(CcMode::On, false), 0.9);
+        assert_eq!(mc.load_s_for(CcMode::On, true), 0.5);
+        assert_eq!(mc.load_crypto_for(CcMode::Off, false), (0.0, 0.0));
+        assert_eq!(mc.load_crypto_for(CcMode::On, false), (0.45, 0.45),
+                   "serialized exposes all crypto");
+        assert_eq!(mc.load_crypto_for(CcMode::On, true), (0.45, 0.05),
+                   "pipelined hides most crypto");
     }
 
     #[test]

@@ -19,12 +19,14 @@
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
+mod common;
+
 use sincere::config::RunConfig;
 use sincere::coordinator::strategy_names;
 use sincere::engine::EngineBuilder;
 use sincere::runtime::registry::SharedRegistry;
 use sincere::runtime::{Manifest, Registry};
-use sincere::sim::calib::{CostModel, ModelCosts};
+use sincere::sim::calib::CostModel;
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -44,32 +46,11 @@ fn registry() -> &'static SharedRegistry {
         &[1, 2, 4, 8]).unwrap()))
 }
 
-/// Toy cost table over the compiled batch range.  OBS is capped at the
-/// largest batch both backends can dispatch (8 here), so the DES's
-/// artifact choice and the registry's compiled-executable choice are
-/// the same function of the batch row count.
+/// The shared synthetic cost table (`tests/common/mod.rs`) — the same
+/// one the pipeline-effect tests and golden summaries price, so the
+/// suites stay comparable.
 fn toy_costs() -> CostModel {
-    let mut cm = CostModel {
-        io_s_per_row_plain: 0.0004,
-        io_s_per_row_cc: 0.0013,
-        ..Default::default()
-    };
-    for f in &manifest().families {
-        let size_factor = f.weights.total_bytes as f64 / 4e6;
-        let mut mc = ModelCosts {
-            load_s_plain: 0.30 * size_factor,
-            load_s_cc: 0.85 * size_factor,
-            unload_s: 0.006,
-            obs: 8,
-            ..Default::default()
-        };
-        for &b in &[1usize, 2, 4, 8] {
-            mc.exec_s_by_batch.insert(
-                b, 0.07 + 0.011 * b as f64 * size_factor);
-        }
-        cm.models.insert(f.name.clone(), mc);
-    }
-    cm
+    common::toy_costs(manifest())
 }
 
 fn parity_cfg(mode: &str, strategy: &str) -> RunConfig {
@@ -141,6 +122,45 @@ fn parity_holds_for_every_strategy() {
     }
 }
 
+/// The pipeline/prefetch extension of the contract: CC loads priced
+/// from the cost table's overlap figures and a staging slot per device
+/// must leave the DES and the real execution path (which really stages
+/// a second HBM buffer and really promotes it) in exact agreement,
+/// across the {serialized, pipelined} × {prefetch on/off} matrix.
+#[test]
+fn parity_matrix_pipeline_and_prefetch() {
+    for depth in [0usize, 2] {
+        for prefetch in [false, true] {
+            let mut cfg = parity_cfg("cc", "select-batch+timer");
+            cfg.gpu.pipeline_depth = depth;
+            cfg.prefetch = prefetch;
+            let (des, real) = run_pair(&cfg);
+            let tag = format!("depth={depth} prefetch={prefetch}");
+            assert_eq!(des.generated, real.generated, "{tag}");
+            assert_eq!(des.completed, real.completed, "{tag}");
+            assert_eq!(des.swap_count, real.swap_count, "{tag}");
+            assert_eq!(des.prefetch_count, real.prefetch_count, "{tag}");
+            assert_eq!(des.promoted_count, real.promoted_count, "{tag}");
+            assert!((des.sla_attainment - real.sla_attainment).abs()
+                    < 1e-9, "{tag}: attainment {} vs {}",
+                    des.sla_attainment, real.sla_attainment);
+            assert!((des.latency_mean_s - real.latency_mean_s).abs()
+                    < 1e-9, "{tag}: latency {} vs {}", des.latency_mean_s,
+                    real.latency_mean_s);
+            assert!((des.runtime_s - real.runtime_s).abs() < 1e-9,
+                    "{tag}: runtime {} vs {}", des.runtime_s,
+                    real.runtime_s);
+            assert!((des.total_load_s - real.total_load_s).abs() < 1e-9,
+                    "{tag}: load totals diverged");
+            assert!((des.total_crypto_exposed_s
+                     - real.total_crypto_exposed_s).abs() < 1e-9,
+                    "{tag}: exposed crypto diverged");
+            assert!(des.completed > 0, "{tag}: degenerate parity run");
+            assert!(des.swap_count > 0, "{tag}: no swaps exercised");
+        }
+    }
+}
+
 /// The fleet extension of the parity contract: a 4-device mixed
 /// CC/No-CC fleet, with devices executing concurrently in virtual
 /// time, must still agree *exactly* between the DES and the real
@@ -181,6 +201,53 @@ fn fleet_parity_4_device_mixed() {
         assert!(des.completed > 0, "{placement}: degenerate run");
         assert!(des.per_device.iter().filter(|d| d.batches > 0).count()
                 >= 2, "{placement}: fleet never spread work");
+    }
+}
+
+/// Acceptance pin: the 4-device mixed CC/No-CC fleet stays in exact
+/// DES-vs-real agreement with the pipelined swap path *and* prefetch
+/// enabled, per-device breakdowns included.
+#[test]
+fn fleet_parity_4_device_mixed_pipelined_prefetch() {
+    for placement in ["affinity", "round-robin"] {
+        let mut cfg = parity_cfg("cc", "select-batch+timer");
+        cfg.devices = 4;
+        cfg.set("device-modes", "cc,no-cc,cc,no-cc").unwrap();
+        cfg.placement = placement.to_string();
+        cfg.mean_rps = 6.0; // keep all four devices busy
+        cfg.gpu.pipeline_depth = 2;
+        cfg.prefetch = true;
+        let (des, real) = run_pair(&cfg);
+        assert_eq!(des.generated, real.generated, "{placement}");
+        assert_eq!(des.completed, real.completed, "{placement}");
+        assert_eq!(des.swap_count, real.swap_count, "{placement}");
+        assert_eq!(des.prefetch_count, real.prefetch_count,
+                   "{placement}");
+        assert_eq!(des.promoted_count, real.promoted_count,
+                   "{placement}");
+        assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+                "{placement}: attainment {} vs {}", des.sla_attainment,
+                real.sla_attainment);
+        assert!((des.latency_mean_s - real.latency_mean_s).abs() < 1e-9,
+                "{placement}: latency {} vs {}", des.latency_mean_s,
+                real.latency_mean_s);
+        assert!((des.total_load_s - real.total_load_s).abs() < 1e-9,
+                "{placement}: load totals diverged");
+        assert_eq!(des.per_device.len(), 4, "{placement}");
+        for (a, b) in des.per_device.iter().zip(real.per_device.iter()) {
+            assert_eq!(a.mode, b.mode, "{placement} dev {}", a.device);
+            assert_eq!(a.batches, b.batches,
+                       "{placement} dev {}", a.device);
+            assert_eq!(a.swap_count, b.swap_count,
+                       "{placement} dev {}", a.device);
+            assert_eq!(a.prefetches, b.prefetches,
+                       "{placement} dev {}", a.device);
+            assert_eq!(a.promotions, b.promotions,
+                       "{placement} dev {}", a.device);
+            assert_eq!(a.completed, b.completed,
+                       "{placement} dev {}", a.device);
+        }
+        assert!(des.completed > 0, "{placement}: degenerate run");
     }
 }
 

@@ -10,13 +10,15 @@
 //!   guarantee: every policy degenerates to the single-GPU engine);
 //! * more devices complete more work under overload.
 
+mod common;
+
 use std::path::PathBuf;
 use std::sync::OnceLock;
 
 use sincere::config::RunConfig;
 use sincere::engine::{EngineBuilder, RunSummary};
 use sincere::runtime::Manifest;
-use sincere::sim::calib::{CostModel, ModelCosts};
+use sincere::sim::calib::CostModel;
 
 fn artifacts_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -28,30 +30,11 @@ fn manifest() -> &'static Manifest {
         "artifacts missing: run tools/gen_artifacts.py"))
 }
 
-/// Toy cost table with a ~2.83× CC/No-CC load ratio (the paper's
-/// ~2.7× regime) so per-device splits are deterministic.
+/// The shared toy cost table (`tests/common/mod.rs`): ~2.83× CC/No-CC
+/// load ratio (the paper's ~2.7× regime) so per-device splits are
+/// deterministic.
 fn toy_costs() -> CostModel {
-    let mut cm = CostModel {
-        io_s_per_row_plain: 0.0004,
-        io_s_per_row_cc: 0.0013,
-        ..Default::default()
-    };
-    for f in &manifest().families {
-        let size_factor = f.weights.total_bytes as f64 / 4e6;
-        let mut mc = ModelCosts {
-            load_s_plain: 0.30 * size_factor,
-            load_s_cc: 0.85 * size_factor,
-            unload_s: 0.006,
-            obs: 8,
-            ..Default::default()
-        };
-        for &b in &[1usize, 2, 4, 8] {
-            mc.exec_s_by_batch.insert(
-                b, 0.07 + 0.011 * b as f64 * size_factor);
-        }
-        cm.models.insert(f.name.clone(), mc);
-    }
-    cm
+    common::toy_costs(manifest())
 }
 
 fn fleet_cfg(devices: usize, placement: &str) -> RunConfig {

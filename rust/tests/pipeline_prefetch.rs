@@ -1,0 +1,160 @@
+//! Engine-level behaviour of the pipelined CC swap path and predictive
+//! prefetch (the pieces `tests/engine_parity.rs` pins for *agreement*,
+//! this file pins for *effect*):
+//!
+//! * pipelining measurably cuts CC load time while leaving No-CC runs
+//!   bit-identical;
+//! * prefetch stages the hinted model and promotes it without a second
+//!   DMA, in both the DES and the real wall-clock path.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::engine::{EngineBuilder, RunSummary};
+use sincere::runtime::registry::SharedRegistry;
+use sincere::runtime::{Manifest, Registry};
+use sincere::sim::calib::CostModel;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "artifacts missing: run tools/gen_artifacts.py"))
+}
+
+fn registry() -> &'static SharedRegistry {
+    static REG: OnceLock<SharedRegistry> = OnceLock::new();
+    REG.get_or_init(|| SharedRegistry::new(Registry::load(
+        manifest(),
+        &["llama-sim".to_string(), "gemma-sim".to_string()],
+        &[1, 2, 4, 8]).unwrap()))
+}
+
+/// The shared synthetic cost table (`tests/common/mod.rs`); pipelined
+/// CC loads price the overlap.
+fn toy_costs() -> CostModel {
+    common::toy_costs(manifest())
+}
+
+fn base_cfg(mode: &str) -> RunConfig {
+    let mut cfg = RunConfig {
+        duration_s: 30.0,
+        drain_s: 10.0,
+        mean_rps: 8.0, // two saturated queues: swaps alternate models
+        sla_s: 6.0,
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    };
+    cfg.set("mode", mode).unwrap();
+    cfg.gpu.no_throttle = true;
+    cfg
+}
+
+fn run_des(cfg: &RunConfig) -> RunSummary {
+    let cm = toy_costs();
+    EngineBuilder::new(cfg).des(manifest(), &cm).unwrap()
+        .run().unwrap().0
+}
+
+#[test]
+fn pipelined_cc_cuts_load_time_in_the_des() {
+    let serial = run_des(&base_cfg("cc"));
+    let mut pipe_cfg = base_cfg("cc");
+    pipe_cfg.gpu.pipeline_depth = 2;
+    let pipe = run_des(&pipe_cfg);
+    assert!(serial.swap_count > 0 && pipe.swap_count > 0);
+    assert!(pipe.mean_load_s < 0.7 * serial.mean_load_s,
+            "pipelined mean load {} did not undercut serialized {}",
+            pipe.mean_load_s, serial.mean_load_s);
+    // the overlap hides crypto rather than removing it
+    assert!(pipe.total_crypto_exposed_s < serial.total_crypto_exposed_s,
+            "exposed crypto must shrink: pipe {} vs serial {}",
+            pipe.total_crypto_exposed_s, serial.total_crypto_exposed_s);
+    assert!(pipe.total_crypto_s > 0.0);
+    assert_eq!(pipe.pipeline_depth, 2, "summary must record the depth");
+}
+
+#[test]
+fn pipeline_depth_leaves_no_cc_runs_bit_identical() {
+    let a = run_des(&base_cfg("no-cc"));
+    let mut cfg = base_cfg("no-cc");
+    cfg.gpu.pipeline_depth = 2;
+    let b = run_des(&cfg);
+    assert_eq!(a.generated, b.generated);
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.swap_count, b.swap_count);
+    assert_eq!(a.latency_mean_s, b.latency_mean_s,
+               "No-CC timelines must be bit-identical");
+    assert_eq!(a.runtime_s, b.runtime_s);
+    assert_eq!(a.total_load_s, b.total_load_s);
+    assert_eq!(a.total_crypto_s, 0.0);
+}
+
+#[test]
+fn prefetch_promotes_in_the_des() {
+    let mut cfg = base_cfg("cc");
+    cfg.gpu.pipeline_depth = 2;
+    cfg.prefetch = true;
+    let s = run_des(&cfg);
+    assert!(s.prefetch_count > 0,
+            "two saturated queues must trigger staging");
+    assert!(s.promoted_count > 0,
+            "alternating swaps must promote at least one staged model");
+    assert!(s.promoted_count <= s.swap_count);
+    assert!(s.prefetch_count >= s.promoted_count,
+            "every promotion needs a prior staging");
+    assert!(s.prefetch, "summary must record the prefetch flag");
+    // promotions are free loads: the fleet mean over all swaps sits
+    // strictly below the mean over demand loads alone
+    let demand = s.swap_count - s.promoted_count;
+    assert!(demand > 0, "run must also pay some demand loads");
+    assert!(s.mean_load_s < s.total_load_s / demand as f64,
+            "promotions must dilute the mean load");
+    // and the batch records show it: a promoted swap with a zero load
+    let cm = toy_costs();
+    let mut cfg2 = base_cfg("cc");
+    cfg2.gpu.pipeline_depth = 2;
+    cfg2.prefetch = true;
+    let (_, recorder) = EngineBuilder::new(&cfg2).des(manifest(), &cm)
+        .unwrap().run().unwrap();
+    assert!(recorder.batches.iter()
+                .any(|b| b.promoted && b.swapped && b.load_s == 0.0),
+            "promoted batches must carry a zero-cost load");
+    assert!(recorder.batches.iter().any(|b| b.prefetch_s > 0.0),
+            "staging must be visible in the batch records");
+}
+
+#[test]
+fn prefetch_works_on_the_real_wall_clock_path() {
+    let mut cfg = base_cfg("cc");
+    cfg.duration_s = 6.0;
+    cfg.drain_s = 4.0;
+    cfg.mean_rps = 6.0;
+    cfg.sla_s = 3.0;
+    cfg.artifacts_dir = artifacts_dir();
+    cfg.gpu.pipeline_depth = 2;
+    cfg.prefetch = true;
+    let (summary, recorder) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real(reg)
+            .and_then(|b| b.run()))
+        .unwrap();
+    assert!(summary.completed > 0);
+    assert!(summary.prefetch_count >= summary.promoted_count);
+    // staging really rode the DMA path: batches carry prefetch seconds
+    // whenever staging happened
+    if summary.prefetch_count > 0 {
+        assert!(recorder.batches.iter().any(|b| b.prefetch_s > 0.0),
+                "staging must be visible in the batch records");
+    }
+    if summary.promoted_count > 0 {
+        assert!(recorder.batches.iter()
+                    .any(|b| b.promoted && b.load_s == 0.0),
+                "a promotion is a swap with a zero-cost load");
+    }
+}
