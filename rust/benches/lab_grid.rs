@@ -1,0 +1,51 @@
+//! Lab-runner scaling bench: the paper's 72-cell grid priced from the
+//! synthetic cost table, swept across worker thread counts.
+//!
+//! Two tables: wall time + cells/second vs `--threads` (the
+//! work-stealing pool's speedup over the old serial sweep), and a
+//! byte-identity check confirming that parallelism never changes the
+//! results the tables are built from.
+
+use sincere::config::RunConfig;
+use sincere::lab::{self, LabRunner};
+use sincere::runtime::Manifest;
+use sincere::sim::CostModel;
+
+fn main() {
+    let manifest = Manifest::load(&std::path::PathBuf::from("artifacts"))
+        .expect("run `make artifacts` first");
+    let cm = CostModel::synthetic(&manifest);
+
+    let spec = lab::preset_by_name("paper-72").unwrap();
+    let grid = spec.expand(&RunConfig::default()).unwrap();
+    let jobs = grid.jobs(grid.seeds);
+    println!("# Lab grid scaling — {} cells x {} seed(s)\n",
+             grid.cells.len(), grid.seeds);
+
+    println!("| threads | wall (s) | cells/s | speedup vs 1 |");
+    println!("|---|---|---|---|");
+    let mut serial_s = 0.0f64;
+    let mut baseline: Option<String> = None;
+    for threads in [1usize, 2, 4, 8] {
+        let t0 = std::time::Instant::now();
+        let cells = LabRunner::new(&manifest, &cm)
+            .threads(threads).quiet(true).run(&jobs).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        if threads == 1 {
+            serial_s = wall;
+        }
+        let bytes = lab::run_to_json(&cells).to_string();
+        match &baseline {
+            None => baseline = Some(bytes),
+            Some(b) => assert_eq!(
+                *b, bytes,
+                "{threads} threads changed the output bytes"),
+        }
+        println!("| {} | {:.3} | {:.1} | {:.2}x |", threads, wall,
+                 jobs.len() as f64 / wall.max(1e-9),
+                 serial_s / wall.max(1e-9));
+    }
+
+    println!("\nexpected shape: near-linear speedup until the core \
+              count, identical output bytes throughout.");
+}

@@ -71,6 +71,23 @@ pub struct RunConfig {
     /// following swap promotes it without a second DMA
     /// (`coordinator::prefetch`).
     pub prefetch: bool,
+
+    // ---- scenario-lab configuration (`lab` command) ----
+    /// Built-in preset for `lab run` (`lab list` names them).
+    pub lab_preset: Option<String>,
+    /// Scenario spec file for `lab run` (overrides `lab_preset`).
+    pub lab_spec: Option<PathBuf>,
+    /// Lab worker threads (0 = all available cores).
+    pub lab_threads: usize,
+    /// Override the spec's `seeds` replication factor.
+    pub lab_seeds: Option<usize>,
+    /// Where `lab run` writes the cells JSON
+    /// (default `<results>/sweep_cells.json`).
+    pub lab_out: Option<PathBuf>,
+    /// Price lab cells from the built-in synthetic cost table instead
+    /// of a measured `cost_model.json` — deterministic and instant
+    /// (the CI smoke job and the test suites use it).
+    pub synthetic_costs: bool,
 }
 
 impl Default for RunConfig {
@@ -99,6 +116,12 @@ impl Default for RunConfig {
             device_bw_scale: Vec::new(),
             placement: "affinity".into(),
             prefetch: false,
+            lab_preset: None,
+            lab_spec: None,
+            lab_threads: 0,
+            lab_seeds: None,
+            lab_out: None,
+            synthetic_costs: false,
         }
     }
 }
@@ -162,6 +185,20 @@ impl RunConfig {
                 self.gpu.cc_crypto_frac = parse_f64(key, value)?;
             }
             "prefetch" => self.prefetch = parse_bool(key, value)?,
+            "preset" => self.lab_preset = Some(value.to_string()),
+            "spec" => self.lab_spec = Some(PathBuf::from(value)),
+            "threads" => {
+                self.lab_threads = value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --threads {value:?}"))?;
+            }
+            "lab-seeds" => {
+                self.lab_seeds = Some(value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --lab-seeds {value:?}"))?);
+            }
+            "out" => self.lab_out = Some(PathBuf::from(value)),
+            "synthetic-costs" => {
+                self.synthetic_costs = parse_bool(key, value)?;
+            }
             "hbm-mb" => self.gpu.hbm_capacity =
                 (parse_f64(key, value)? * 1024.0 * 1024.0) as u64,
             "bw-plain-mbps" => self.gpu.bw_plain =
@@ -256,6 +293,9 @@ impl RunConfig {
             anyhow::ensure!(len == 0 || len == self.devices,
                             "--{name} must list one entry per device \
                              ({} given, {} devices)", len, self.devices);
+        }
+        if let Some(s) = self.lab_seeds {
+            anyhow::ensure!(s >= 1, "lab-seeds must be >= 1");
         }
         crate::traffic::pattern_by_name(&self.pattern)?;
         crate::coordinator::strategy_by_name(&self.strategy)?;
@@ -400,6 +440,28 @@ mod tests {
         assert!(c.set("prefetch", "maybe").is_err());
         c.set("cc-crypto-frac", "1.5").unwrap();
         assert!(c.validate().is_err(), "frac above 1 must fail validation");
+    }
+
+    #[test]
+    fn lab_flags_parse() {
+        let mut c = RunConfig::default();
+        c.set("preset", "paper-72").unwrap();
+        c.set("spec", "examples/lab_spec.json").unwrap();
+        c.set("threads", "4").unwrap();
+        c.set("lab-seeds", "3").unwrap();
+        c.set("out", "results/run.json").unwrap();
+        c.set("synthetic-costs", "on").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.lab_preset.as_deref(), Some("paper-72"));
+        assert_eq!(c.lab_spec.as_deref(),
+                   Some(std::path::Path::new("examples/lab_spec.json")));
+        assert_eq!(c.lab_threads, 4);
+        assert_eq!(c.lab_seeds, Some(3));
+        assert!(c.synthetic_costs);
+        assert!(c.set("threads", "many").is_err());
+        assert!(c.set("lab-seeds", "-1").is_err());
+        c.lab_seeds = Some(0);
+        assert!(c.validate().is_err(), "0 seed replicas is meaningless");
     }
 
     #[test]

@@ -55,6 +55,34 @@ impl DeviceSummary {
             ("promotions", Json::num(self.promotions as f64)),
         ])
     }
+
+    /// Parse one per-device row back from its `to_json` form (every
+    /// field defaults, so partial rows from older files still load).
+    pub fn from_json(d: &Json) -> DeviceSummary {
+        let f = |key: &str| -> f64 {
+            d.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+        };
+        let u = |key: &str| -> u64 {
+            d.get(key).and_then(|v| v.as_u64()).unwrap_or(0)
+        };
+        DeviceSummary {
+            device: d.get("device").and_then(|v| v.as_usize())
+                .unwrap_or(0),
+            mode: d.get("mode").and_then(|v| v.as_str())
+                .unwrap_or("").into(),
+            batches: u("batches"),
+            completed: u("completed"),
+            exec_s: f("exec_s"),
+            util: f("util"),
+            swap_count: u("swap_count"),
+            load_s: f("load_s"),
+            unload_s: f("unload_s"),
+            crypto_s: f("crypto_s"),
+            crypto_exposed_s: f("crypto_exposed_s"),
+            prefetches: u("prefetches"),
+            promotions: u("promotions"),
+        }
+    }
 }
 
 /// Aggregated outcome of one run — one grid cell of the evaluation.
@@ -72,6 +100,9 @@ pub struct RunSummary {
     pub duration_s: f64,
     /// Actual runtime of the serving phase (duration + drain used).
     pub runtime_s: f64,
+    /// Traffic RNG seed of this run — identifies seed replicas of one
+    /// grid cell in lab runs (`lab::spec::replica_seed`).
+    pub seed: u64,
 
     /// Fleet size.
     pub devices: usize,
@@ -132,6 +163,13 @@ impl RunSummary {
             ("mean_rps", Json::num(self.mean_rps)),
             ("duration_s", Json::num(self.duration_s)),
             ("runtime_s", Json::num(self.runtime_s)),
+            // seeds beyond f64's exact-integer range go through a
+            // string so the round-trip is lossless either way
+            ("seed", if self.seed <= (1u64 << 53) {
+                Json::num(self.seed as f64)
+            } else {
+                Json::str(self.seed.to_string())
+            }),
             ("devices", Json::num(self.devices as f64)),
             ("placement", Json::str(self.placement.clone())),
             ("pipeline_depth", Json::num(self.pipeline_depth as f64)),
@@ -161,6 +199,76 @@ impl RunSummary {
             ("per_device", Json::Arr(self.per_device.iter()
                 .map(|d| d.to_json()).collect())),
         ])
+    }
+
+    /// Parse a summary back from its `to_json` form.  Fields that
+    /// newer revisions added (fleet, pipeline, prefetch, seed) are
+    /// optional, so summary files saved by older builds still load.
+    pub fn from_json(c: &Json) -> anyhow::Result<RunSummary> {
+        let opt_f64 = |key: &str, default: f64| -> f64 {
+            c.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+        };
+        let opt_u64 = |key: &str| -> u64 {
+            c.get(key).and_then(|v| v.as_u64()).unwrap_or(0)
+        };
+        Ok(RunSummary {
+            label: c.req("label")?.as_str().unwrap_or("").into(),
+            mode: c.req("mode")?.as_str().unwrap_or("").into(),
+            pattern: c.req("pattern")?.as_str().unwrap_or("").into(),
+            strategy: c.req("strategy")?.as_str().unwrap_or("").into(),
+            sla_s: c.req("sla_s")?.as_f64().unwrap_or(0.0),
+            mean_rps: c.req("mean_rps")?.as_f64().unwrap_or(0.0),
+            duration_s: c.req("duration_s")?.as_f64().unwrap_or(0.0),
+            runtime_s: c.req("runtime_s")?.as_f64().unwrap_or(0.0),
+            seed: c.get("seed").and_then(|v| {
+                v.as_u64().or_else(|| v.as_str()
+                    .and_then(|s| s.parse().ok()))
+            }).unwrap_or(0),
+            devices: c.get("devices").and_then(|v| v.as_usize())
+                .unwrap_or(1),
+            placement: c.get("placement").and_then(|v| v.as_str())
+                .unwrap_or("affinity").into(),
+            pipeline_depth: c.get("pipeline_depth")
+                .and_then(|v| v.as_usize()).unwrap_or(0),
+            prefetch: c.get("prefetch").and_then(|v| v.as_bool())
+                .unwrap_or(false),
+            generated: c.req("generated")?.as_u64().unwrap_or(0),
+            completed: c.req("completed")?.as_u64().unwrap_or(0),
+            sla_met: c.req("sla_met")?.as_u64().unwrap_or(0),
+            sla_attainment: c.req("sla_attainment")?.as_f64()
+                .unwrap_or(0.0),
+            latency_mean_s: c.req("latency_mean_s")?.as_f64()
+                .unwrap_or(0.0),
+            latency_p50_s: c.req("latency_p50_s")?.as_f64()
+                .unwrap_or(0.0),
+            latency_p90_s: c.req("latency_p90_s")?.as_f64()
+                .unwrap_or(0.0),
+            latency_p99_s: c.req("latency_p99_s")?.as_f64()
+                .unwrap_or(0.0),
+            latency_max_s: c.req("latency_max_s")?.as_f64()
+                .unwrap_or(0.0),
+            throughput_rps: c.req("throughput_rps")?.as_f64()
+                .unwrap_or(0.0),
+            processing_rate_rps: c.req("processing_rate_rps")?.as_f64()
+                .unwrap_or(0.0),
+            gpu_util: c.req("gpu_util")?.as_f64().unwrap_or(0.0),
+            swap_count: c.req("swap_count")?.as_u64().unwrap_or(0),
+            total_load_s: c.req("total_load_s")?.as_f64().unwrap_or(0.0),
+            total_unload_s: c.req("total_unload_s")?.as_f64()
+                .unwrap_or(0.0),
+            total_exec_s: c.req("total_exec_s")?.as_f64().unwrap_or(0.0),
+            total_crypto_s: c.req("total_crypto_s")?.as_f64()
+                .unwrap_or(0.0),
+            total_crypto_exposed_s: opt_f64("total_crypto_exposed_s",
+                                            0.0),
+            prefetch_count: opt_u64("prefetch_count"),
+            promoted_count: opt_u64("promoted_count"),
+            mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
+            per_device: c.get("per_device").and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().map(DeviceSummary::from_json)
+                     .collect())
+                .unwrap_or_default(),
+        })
     }
 
     /// One-line human summary.
@@ -261,6 +369,7 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         mean_rps: cfg.mean_rps,
         duration_s: cfg.duration_s,
         runtime_s,
+        seed: cfg.seed,
         devices: n_dev,
         placement: cfg.placement.clone(),
         pipeline_depth: cfg.gpu.pipeline_depth,
@@ -306,5 +415,108 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
             0.0
         },
         per_device,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_preserves_every_field() {
+        let s = RunSummary {
+            label: "cc_gamma_best-batch_sla12".into(),
+            mode: "cc".into(),
+            pattern: "gamma".into(),
+            strategy: "best-batch".into(),
+            sla_s: 12.0,
+            mean_rps: 9.0,
+            duration_s: 60.0,
+            runtime_s: 63.5,
+            seed: 44,
+            devices: 2,
+            placement: "least-loaded".into(),
+            pipeline_depth: 2,
+            prefetch: true,
+            generated: 540,
+            completed: 500,
+            sla_met: 450,
+            sla_attainment: 450.0 / 540.0,
+            latency_mean_s: 3.25,
+            latency_p99_s: 9.5,
+            throughput_rps: 7.87,
+            processing_rate_rps: 30.0,
+            gpu_util: 0.41,
+            swap_count: 17,
+            total_load_s: 12.5,
+            total_crypto_s: 5.0,
+            total_crypto_exposed_s: 0.75,
+            prefetch_count: 6,
+            promoted_count: 4,
+            per_device: vec![DeviceSummary {
+                device: 1,
+                mode: "cc".into(),
+                batches: 40,
+                completed: 250,
+                exec_s: 20.0,
+                util: 0.31,
+                swap_count: 9,
+                load_s: 7.0,
+                crypto_s: 5.0,
+                crypto_exposed_s: 0.75,
+                prefetches: 6,
+                promotions: 4,
+                ..DeviceSummary::default()
+            }],
+            ..RunSummary::default()
+        };
+        let back = RunSummary::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.label, s.label);
+        assert_eq!(back.seed, 44);
+        assert_eq!(back.devices, 2);
+        assert_eq!(back.placement, "least-loaded");
+        assert_eq!(back.pipeline_depth, 2);
+        assert!(back.prefetch);
+        assert_eq!(back.swap_count, 17);
+        assert_eq!(back.prefetch_count, 6);
+        assert_eq!(back.promoted_count, 4);
+        assert!((back.sla_attainment - s.sla_attainment).abs() < 1e-12);
+        assert!((back.total_crypto_exposed_s - 0.75).abs() < 1e-12);
+        assert_eq!(back.per_device.len(), 1);
+        assert_eq!(back.per_device[0].device, 1);
+        assert_eq!(back.per_device[0].promotions, 4);
+        assert!((back.per_device[0].util - 0.31).abs() < 1e-12);
+    }
+
+    /// Seeds above 2^53 cannot ride an f64; the string fallback keeps
+    /// the round-trip lossless.
+    #[test]
+    fn huge_seeds_roundtrip_losslessly() {
+        let s = RunSummary { seed: u64::MAX - 1, ..Default::default() };
+        let back = RunSummary::from_json(&s.to_json()).unwrap();
+        assert_eq!(back.seed, u64::MAX - 1);
+        let small = RunSummary { seed: 44, ..Default::default() };
+        assert_eq!(RunSummary::from_json(&small.to_json()).unwrap().seed,
+                   44);
+    }
+
+    /// Summary files from before the fleet/pipeline/seed fields must
+    /// still parse, with those fields defaulted.
+    #[test]
+    fn legacy_summary_files_parse() {
+        let mut j = RunSummary::default().to_json();
+        if let Json::Obj(m) = &mut j {
+            for k in ["seed", "devices", "placement", "pipeline_depth",
+                      "prefetch", "total_crypto_exposed_s",
+                      "prefetch_count", "promoted_count", "per_device"] {
+                m.remove(k);
+            }
+        }
+        let back = RunSummary::from_json(&j).unwrap();
+        assert_eq!(back.seed, 0);
+        assert_eq!(back.devices, 1);
+        assert_eq!(back.placement, "affinity");
+        assert!(!back.prefetch);
+        assert!(back.per_device.is_empty());
     }
 }

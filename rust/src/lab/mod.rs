@@ -1,0 +1,58 @@
+//! The scenario lab: declarative experiment grids over the calibrated
+//! DES, run in parallel with deterministic results.
+//!
+//! The paper's findings are sweep-shaped — every headline number is a
+//! grid over traffic load, pattern, strategy and SLA — and the
+//! ROADMAP's scenario axes (fleet size, placement, pipeline depth,
+//! prefetch) multiply that grid further.  This module turns "run a
+//! grid" into data instead of code:
+//!
+//! * [`spec`] — [`ScenarioSpec`]: axes / exclusions / `seeds: N`
+//!   parsed from JSON, expanded into a [`Grid`] of labelled cells in
+//!   a canonical order.
+//! * [`presets`] — built-in named specs (`paper-72`, `smoke`,
+//!   `fleet-mix`, `cc-recovery`); the `sweep` CLI command is now a
+//!   thin alias for `paper-72`.
+//! * [`runner`] — [`LabRunner`]: a shared-queue `std::thread` pool
+//!   executing independent DES cells concurrently; results land in
+//!   per-job slots so thread count never changes output bytes.
+//! * [`stats`] — seed replicas folded into per-cell
+//!   mean/stddev/p50/p95 [`CellStats`].
+//!
+//! Rendering (grouped tables, baseline-vs-candidate comparison, the
+//! `paper-check` band verdict) lives in [`crate::metrics::report`],
+//! next to the paper's other tables.
+//!
+//! Determinism contract: output bytes are a pure function of
+//! (spec, base config, cost table).  Cell seeds derive from the base
+//! seed and the replica index only ([`spec::replica_seed`]), never
+//! from thread identity, completion order, or wall time.
+
+pub mod presets;
+pub mod runner;
+pub mod spec;
+pub mod stats;
+
+use std::path::Path;
+
+use crate::engine::RunSummary;
+use crate::util::json::Json;
+
+pub use presets::{preset_by_name, preset_names, PresetEntry, PRESETS};
+pub use runner::LabRunner;
+pub use spec::{axis_names, Grid, LabCell, LabJob, ScenarioSpec, AXES};
+pub use stats::{aggregate, stats_table, CellStats, Stat};
+
+/// Load a saved lab/sweep run (a JSON array of `RunSummary` cells, as
+/// written by `lab run` and the legacy `sweep`).
+pub fn load_run(path: &Path) -> anyhow::Result<Vec<RunSummary>> {
+    let j = Json::parse_file(path)?;
+    let arr = j.as_arr().ok_or_else(|| anyhow::anyhow!(
+        "{path:?}: expected a JSON array of run summaries"))?;
+    arr.iter().map(RunSummary::from_json).collect()
+}
+
+/// Serialize run summaries the way `lab run` persists them.
+pub fn run_to_json(cells: &[RunSummary]) -> Json {
+    Json::Arr(cells.iter().map(|c| c.to_json()).collect())
+}

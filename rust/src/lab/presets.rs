@@ -1,0 +1,213 @@
+//! Built-in named scenario presets (`sincere lab run --preset NAME`).
+//!
+//! The table is the single source of truth for `preset_by_name`,
+//! `lab list`, and the unknown-name error, like `STRATEGIES` and
+//! `PLACEMENTS`.  `paper-72` is built from the same name tables the
+//! legacy hardcoded sweep looped over (`strategy_names`,
+//! `PATTERN_NAMES`, `SLA_LADDER`), so `sweep` — now an alias for this
+//! preset — keeps its exact historical cell order.
+
+use crate::config::SLA_LADDER;
+use crate::coordinator::strategy_names;
+use crate::lab::spec::{fmt_num, ScenarioSpec};
+use crate::traffic::PATTERN_NAMES;
+
+/// One named preset: CLI name, help blurb, and constructor.
+pub struct PresetEntry {
+    pub name: &'static str,
+    pub blurb: &'static str,
+    pub make: fn() -> ScenarioSpec,
+}
+
+/// The preset table, in display order.
+pub const PRESETS: &[PresetEntry] = &[
+    PresetEntry {
+        name: "paper-72",
+        blurb: "the paper's full grid: mode x pattern x strategy x SLA \
+                (Fig 5-7)",
+        make: paper_72,
+    },
+    PresetEntry {
+        name: "smoke",
+        blurb: "4 cells x 2 seeds in ~80 virtual seconds (CI + quick \
+                sanity)",
+        make: smoke,
+    },
+    PresetEntry {
+        name: "fleet-mix",
+        blurb: "placement policies across fleet sizes, CC vs No-CC \
+                (exclusions drop the placement-invariant devices=1 \
+                duplicates)",
+        make: fleet_mix,
+    },
+    PresetEntry {
+        name: "cc-recovery",
+        blurb: "how much of the CC swap penalty the DMA pipeline and \
+                predictive prefetch recover, 3 seeds",
+        make: cc_recovery,
+    },
+];
+
+/// Valid preset names, in table order.
+pub fn preset_names() -> Vec<&'static str> {
+    PRESETS.iter().map(|p| p.name).collect()
+}
+
+/// Instantiate a preset by CLI name.
+pub fn preset_by_name(name: &str) -> anyhow::Result<ScenarioSpec> {
+    PRESETS.iter().find(|p| p.name == name).map(|p| (p.make)())
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown preset {name:?} (have {:?})", preset_names()))
+}
+
+fn axis(name: &str, vals: &[&str]) -> (String, Vec<String>) {
+    (name.to_string(), vals.iter().map(|v| v.to_string()).collect())
+}
+
+fn owned_axis(name: &str, vals: Vec<String>) -> (String, Vec<String>) {
+    (name.to_string(), vals)
+}
+
+fn rule(pairs: &[(&str, &str)]) -> Vec<(String, String)> {
+    pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+fn paper_72() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "paper-72".into(),
+        description: "the paper's full evaluation grid (Fig 5-7): \
+                      2 modes x 3 patterns x 4 strategies x 3 SLAs"
+            .into(),
+        base: Vec::new(),
+        axes: vec![
+            axis("mode", &["no-cc", "cc"]),
+            owned_axis("pattern", PATTERN_NAMES.iter()
+                .map(|s| s.to_string()).collect()),
+            owned_axis("strategy", strategy_names().iter()
+                .map(|s| s.to_string()).collect()),
+            owned_axis("sla", SLA_LADDER.iter().copied().map(fmt_num)
+                .collect()),
+        ],
+        exclude: Vec::new(),
+        seeds: 1,
+    }
+}
+
+fn smoke() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "smoke".into(),
+        description: "tiny deterministic grid: 2 modes x 2 strategies, \
+                      2 seeds, 20 virtual seconds per cell".into(),
+        base: vec![
+            ("duration".into(), "20".into()),
+            ("drain".into(), "8".into()),
+            ("mean-rps".into(), "4".into()),
+            ("sla".into(), "6".into()),
+            ("models".into(), "llama-sim,gemma-sim".into()),
+        ],
+        axes: vec![
+            axis("mode", &["no-cc", "cc"]),
+            axis("strategy", &["select-batch+timer",
+                               "best-batch+timer"]),
+        ],
+        exclude: Vec::new(),
+        seeds: 2,
+    }
+}
+
+fn fleet_mix() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "fleet-mix".into(),
+        description: "fleet scaling under overload: placement policies \
+                      x {1,2,4} devices x mode; devices=1 keeps only \
+                      affinity (placement-invariant)".into(),
+        base: vec![("mean-rps".into(), "18".into())],
+        axes: vec![
+            axis("mode", &["no-cc", "cc"]),
+            axis("devices", &["1", "2", "4"]),
+            axis("placement",
+                 &["affinity", "round-robin", "least-loaded"]),
+        ],
+        exclude: vec![
+            rule(&[("devices", "1"), ("placement", "round-robin")]),
+            rule(&[("devices", "1"), ("placement", "least-loaded")]),
+        ],
+        seeds: 1,
+    }
+}
+
+fn cc_recovery() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "cc-recovery".into(),
+        description: "CC swap-penalty recovery: DMA pipeline x \
+                      predictive prefetch across two patterns".into(),
+        base: vec![("mode".into(), "cc".into())],
+        axes: vec![
+            axis("pattern", &["gamma", "bursty"]),
+            axis("pipeline-depth", &["0", "2"]),
+            axis("prefetch", &["off", "on"]),
+        ],
+        exclude: Vec::new(),
+        seeds: 3,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn preset_names_unique_and_resolvable() {
+        let mut names = preset_names();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        for p in PRESETS {
+            preset_by_name(p.name).unwrap();
+        }
+        let err = preset_by_name("nope").unwrap_err().to_string();
+        assert!(err.contains("paper-72"), "{err}");
+    }
+
+    #[test]
+    fn every_preset_expands() {
+        let cli = RunConfig::default();
+        for p in PRESETS {
+            let g = (p.make)().expand(&cli)
+                .unwrap_or_else(|e| panic!("{}: {e}", p.name));
+            assert!(!g.cells.is_empty(), "{}", p.name);
+        }
+    }
+
+    #[test]
+    fn paper_72_matches_the_legacy_sweep() {
+        let g = paper_72().expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 72);
+        assert_eq!(g.seeds, 1);
+        // the legacy loop nested mode > pattern > strategy > sla
+        assert_eq!(g.cells[0].label, "no-cc_gamma_best-batch_sla12");
+        assert_eq!(g.cells[1].label, "no-cc_gamma_best-batch_sla18");
+        assert_eq!(g.cells[3].label,
+                   "no-cc_gamma_best-batch+timer_sla12");
+        assert_eq!(g.cells[36].label, "cc_gamma_best-batch_sla12");
+        assert_eq!(g.cells[71].label,
+                   "cc_ramp_best-batch+partial+timer_sla24");
+    }
+
+    #[test]
+    fn smoke_is_4_cells_2_seeds() {
+        let g = smoke().expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 4);
+        assert_eq!(g.seeds, 2);
+        assert_eq!(g.jobs(g.seeds).len(), 8);
+    }
+
+    #[test]
+    fn fleet_mix_prunes_devices_1_duplicates() {
+        let g = fleet_mix().expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.pruned, 4);
+        assert_eq!(g.cells.len(), 14);
+    }
+}

@@ -1,0 +1,159 @@
+//! The parallel grid runner: independent DES cells over a shared
+//! work queue of `std::thread` workers.
+//!
+//! Scheduling is work-stealing in the flat-queue sense: every idle
+//! worker steals the next pending job off one shared atomic cursor,
+//! so a slow cell never blocks the rest of the grid behind it.
+//! Determinism is by construction — each job's result lands in its
+//! own pre-allocated slot, indexed by the job's position in the
+//! expanded grid, and the returned `Vec<RunSummary>` reads those
+//! slots in order.  Thread count and completion order therefore
+//! *cannot* change the output: `--threads 1` and `--threads 8`
+//! produce byte-identical cells JSON (pinned by `tests/lab.rs` and
+//! the CI `lab` job).
+//!
+//! Every cell is one ordinary virtual-time `Engine` run
+//! (`EngineBuilder::des`), which spawns no threads of its own, so the
+//! only shared state between workers is the read-only manifest + cost
+//! table and the per-job slots.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::engine::{EngineBuilder, RunSummary};
+use crate::lab::spec::LabJob;
+use crate::runtime::Manifest;
+use crate::sim::CostModel;
+
+/// Resolve a `--threads` request: 0 means every available core, and
+/// there is never a point in more workers than jobs.
+pub fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.min(jobs.max(1)).max(1)
+}
+
+/// Per-cell progress lines on stderr:
+/// `[lab k/N label ... done in Xs, ETA Ys]`.
+struct Progress {
+    total: usize,
+    done: usize,
+    started: Instant,
+    enabled: bool,
+}
+
+impl Progress {
+    fn new(total: usize, enabled: bool) -> Progress {
+        Progress { total, done: 0, started: Instant::now(), enabled }
+    }
+
+    fn cell_done(&mut self, label: &str, cell_s: f64) {
+        self.done += 1;
+        if !self.enabled {
+            return;
+        }
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let eta = elapsed / self.done as f64
+            * (self.total - self.done) as f64;
+        eprintln!("[lab {}/{} {} ... done in {:.2}s, ETA {:.1}s]",
+                  self.done, self.total, label, cell_s, eta);
+    }
+}
+
+/// Runs a grid of [`LabJob`]s against one manifest + cost table.
+pub struct LabRunner<'a> {
+    manifest: &'a Manifest,
+    costs: &'a CostModel,
+    threads: usize,
+    quiet: bool,
+}
+
+impl<'a> LabRunner<'a> {
+    pub fn new(manifest: &'a Manifest, costs: &'a CostModel)
+               -> LabRunner<'a> {
+        LabRunner { manifest, costs, threads: 0, quiet: false }
+    }
+
+    /// Worker count (0 = all available cores).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = n;
+        self
+    }
+
+    /// Suppress the per-cell stderr progress lines.
+    pub fn quiet(mut self, q: bool) -> Self {
+        self.quiet = q;
+        self
+    }
+
+    /// Run every job; the result vector is in job order regardless of
+    /// thread count.  The first failing cell (by job index) reports
+    /// its label; later cells still ran.
+    pub fn run(&self, jobs: &[LabJob])
+               -> anyhow::Result<Vec<RunSummary>> {
+        anyhow::ensure!(!jobs.is_empty(), "lab grid has no jobs to run");
+        let n = jobs.len();
+        let threads = effective_threads(self.threads, n);
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<anyhow::Result<RunSummary>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let progress = Mutex::new(Progress::new(n, !self.quiet));
+
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let t0 = Instant::now();
+                    let r = self.run_one(&jobs[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                    progress.lock().unwrap().cell_done(
+                        &jobs[i].cfg.label,
+                        t0.elapsed().as_secs_f64());
+                });
+            }
+        });
+
+        let mut out = Vec::with_capacity(n);
+        for (i, slot) in slots.into_iter().enumerate() {
+            match slot.into_inner().unwrap() {
+                Some(Ok(s)) => out.push(s),
+                Some(Err(e)) => {
+                    return Err(e.context(format!(
+                        "lab cell {} (seed {})", jobs[i].cfg.label,
+                        jobs[i].cfg.seed)));
+                }
+                None => anyhow::bail!(
+                    "lab cell {} was never executed", jobs[i].cfg.label),
+            }
+        }
+        Ok(out)
+    }
+
+    fn run_one(&self, job: &LabJob) -> anyhow::Result<RunSummary> {
+        let (summary, _rec) = EngineBuilder::new(&job.cfg)
+            .des(self.manifest, self.costs)?
+            .run()?;
+        Ok(summary)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thread_resolution() {
+        assert_eq!(effective_threads(4, 100), 4);
+        assert_eq!(effective_threads(16, 3), 3);
+        assert_eq!(effective_threads(2, 0), 1);
+        assert!(effective_threads(0, 100) >= 1);
+    }
+}

@@ -1,0 +1,621 @@
+//! `ScenarioSpec` — a declarative experiment grid over the run
+//! configuration, parsed from JSON (or built in code by the presets).
+//!
+//! A spec names a set of *axes* (mode, pattern, strategy, SLA, rps,
+//! devices, placement, pipeline-depth, prefetch), each with a list of
+//! values; expansion takes the cross-product in the canonical
+//! [`AXES`] order (mode varies slowest, exactly the legacy sweep's
+//! nesting), prunes cells matched by *exclusion rules* (conjunctions
+//! of axis=value), and replicates every surviving cell `seeds` times
+//! with deterministic per-replica seeds ([`replica_seed`]).
+//!
+//! Determinism contract: the expanded cell list — order, labels,
+//! per-cell configs and seeds — is a pure function of (spec, base
+//! config).  The runner preserves that order whatever the thread
+//! count, so a lab run's output bytes depend only on the spec, the
+//! cost table and the base seed.
+//!
+//! Spec JSON schema (see `examples/lab_spec.json`):
+//!
+//! ```json
+//! {
+//!   "name": "my-experiment",
+//!   "description": "optional free text",
+//!   "base": {"duration": 30, "mean-rps": 6},
+//!   "axes": {"mode": ["no-cc", "cc"], "sla": [12, 18, 24]},
+//!   "exclude": [{"mode": "no-cc", "prefetch": "on"}],
+//!   "seeds": 3
+//! }
+//! ```
+//!
+//! `base` entries are `RunConfig::set` key/value pairs applied on top
+//! of the CLI config; axis values override both.  Unknown axis,
+//! strategy, pattern or placement names fail expansion with the
+//! valid-name table; an all-pruned grid is a hard error.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use crate::config::RunConfig;
+use crate::util::json::Json;
+
+/// One sweepable axis: the spec-facing name and the `RunConfig::set`
+/// key it drives, plus an optional name-table validator that runs per
+/// distinct value at expansion time, so a bad name fails before any
+/// cell runs.
+pub struct AxisEntry {
+    pub name: &'static str,
+    pub key: &'static str,
+    pub check: Option<fn(&str) -> anyhow::Result<()>>,
+}
+
+fn check_mode(v: &str) -> anyhow::Result<()> {
+    crate::gpu::CcMode::parse(v).map(|_| ())
+}
+
+fn check_pattern(v: &str) -> anyhow::Result<()> {
+    crate::traffic::pattern_by_name(v).map(|_| ())
+}
+
+fn check_strategy(v: &str) -> anyhow::Result<()> {
+    crate::coordinator::strategy_by_name(v).map(|_| ())
+}
+
+fn check_placement(v: &str) -> anyhow::Result<()> {
+    crate::coordinator::placement_by_name(v).map(|_| ())
+}
+
+/// The axis table, in canonical cross-product order (first entry
+/// varies slowest).  The first four match the legacy hardcoded sweep's
+/// loop nesting, so the `paper-72` preset reproduces its cell order
+/// exactly.
+pub const AXES: &[AxisEntry] = &[
+    AxisEntry { name: "mode", key: "mode", check: Some(check_mode) },
+    AxisEntry { name: "pattern", key: "pattern",
+                check: Some(check_pattern) },
+    AxisEntry { name: "strategy", key: "strategy",
+                check: Some(check_strategy) },
+    AxisEntry { name: "sla", key: "sla", check: None },
+    AxisEntry { name: "rps", key: "mean-rps", check: None },
+    AxisEntry { name: "devices", key: "devices", check: None },
+    AxisEntry { name: "placement", key: "placement",
+                check: Some(check_placement) },
+    AxisEntry { name: "pipeline-depth", key: "pipeline-depth",
+                check: None },
+    AxisEntry { name: "prefetch", key: "prefetch", check: None },
+];
+
+/// Valid axis names, in table order.
+pub fn axis_names() -> Vec<&'static str> {
+    AXES.iter().map(|a| a.name).collect()
+}
+
+/// Human hint for an axis's valid values (`lab list`).
+pub fn axis_hint(name: &str) -> String {
+    match name {
+        "mode" => "no-cc | cc".to_string(),
+        "pattern" => crate::traffic::PATTERN_NAMES.join(" | "),
+        "strategy" => crate::coordinator::strategy_names().join(" | "),
+        "sla" => "SLA seconds > 0 (paper ladder 12/18/24)".to_string(),
+        "rps" => "mean requests/second > 0".to_string(),
+        "devices" => "fleet size >= 1".to_string(),
+        "placement" => crate::coordinator::placement_names().join(" | "),
+        "pipeline-depth" => {
+            "0|1 = serialized, >= 2 = pipelined".to_string()
+        }
+        "prefetch" => "on | off".to_string(),
+        other => format!("unknown axis {other:?}"),
+    }
+}
+
+/// Format a float the way `util::json` serializes it (`12`, not
+/// `12.0`) — the canonical string form for axis values and labels.
+pub fn fmt_num(x: f64) -> String {
+    Json::num(x).to_string()
+}
+
+/// Read an axis's current value out of a config, in canonical string
+/// form (the inverse of applying `AxisEntry::key` via `set`).
+pub fn axis_value(cfg: &RunConfig, axis: &str) -> String {
+    match axis {
+        "mode" => cfg.mode.as_str().to_string(),
+        "pattern" => cfg.pattern.clone(),
+        "strategy" => cfg.strategy.clone(),
+        "sla" => fmt_num(cfg.sla_s),
+        "rps" => fmt_num(cfg.mean_rps),
+        "devices" => cfg.devices.to_string(),
+        "placement" => cfg.placement.clone(),
+        "pipeline-depth" => cfg.gpu.pipeline_depth.to_string(),
+        "prefetch" => {
+            (if cfg.prefetch { "on" } else { "off" }).to_string()
+        }
+        _ => String::new(),
+    }
+}
+
+/// Deterministic seed of replica `r`: replica 0 is the configured
+/// seed, so a 1-seed lab run reproduces the legacy serial sweep
+/// exactly; further replicas use adjacent seeds, which `Pcg64::new`
+/// decorrelates into independent streams.
+pub fn replica_seed(base: u64, replica: usize) -> u64 {
+    base.wrapping_add(replica as u64)
+}
+
+/// A declarative experiment grid (see the module docs for the JSON
+/// schema).
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub description: String,
+    /// `RunConfig::set` overrides applied before the axes.
+    pub base: Vec<(String, String)>,
+    /// Axis name -> value list; expansion order is canonical
+    /// ([`AXES`]), not spec order.
+    pub axes: Vec<(String, Vec<String>)>,
+    /// Exclusion rules: a cell is pruned when *all* axis=value pairs
+    /// of any rule match it.
+    pub exclude: Vec<Vec<(String, String)>>,
+    /// Seed-replication factor (>= 1).
+    pub seeds: usize,
+}
+
+/// One expanded grid point: its unique label, ready-to-run config,
+/// and the swept axis assignment that produced it.
+#[derive(Debug, Clone)]
+pub struct LabCell {
+    pub label: String,
+    pub cfg: RunConfig,
+    pub assignment: Vec<(String, String)>,
+}
+
+/// One unit of runner work: a cell replica with its derived seed.
+#[derive(Debug, Clone)]
+pub struct LabJob {
+    /// Index into [`Grid::cells`].
+    pub cell: usize,
+    pub replica: usize,
+    pub cfg: RunConfig,
+}
+
+/// The expanded grid: cells in canonical order plus expansion
+/// bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Grid {
+    pub spec_name: String,
+    pub cells: Vec<LabCell>,
+    /// Cells removed by exclusion rules.
+    pub pruned: usize,
+    /// The spec's replication factor (callers may override).
+    pub seeds: usize,
+}
+
+impl Grid {
+    /// Flatten the grid into runnable jobs, cell-major / replica-minor
+    /// — the order every lab artifact (cells JSON, tables) uses.
+    pub fn jobs(&self, seeds: usize) -> Vec<LabJob> {
+        let seeds = seeds.max(1);
+        let mut out = Vec::with_capacity(self.cells.len() * seeds);
+        for (ci, cell) in self.cells.iter().enumerate() {
+            for r in 0..seeds {
+                let mut cfg = cell.cfg.clone();
+                cfg.seed = replica_seed(cfg.seed, r);
+                out.push(LabJob { cell: ci, replica: r, cfg });
+            }
+        }
+        out
+    }
+}
+
+fn stringify(v: &Json) -> String {
+    match v {
+        Json::Str(s) => s.clone(),
+        other => other.to_string(),
+    }
+}
+
+/// Canonicalize one axis value: apply it to a scratch config and read
+/// it back, so `"12"`, `"12.0"` and `12` all normalize to the same
+/// string (bad values error here, naming the axis).
+fn canonical(base: &RunConfig, axis: &AxisEntry, value: &str)
+             -> anyhow::Result<String> {
+    let mut scratch = base.clone();
+    scratch.set(axis.key, value)
+        .map_err(|e| anyhow::anyhow!("axis {:?}: {e}", axis.name))?;
+    Ok(axis_value(&scratch, axis.name))
+}
+
+impl ScenarioSpec {
+    /// Parse a spec from its JSON form.
+    pub fn parse(j: &Json) -> anyhow::Result<ScenarioSpec> {
+        let obj = j.as_obj().ok_or_else(|| anyhow::anyhow!(
+            "scenario spec must be a JSON object"))?;
+        for k in obj.keys() {
+            anyhow::ensure!(
+                matches!(k.as_str(), "name" | "description" | "base"
+                         | "axes" | "exclude" | "seeds"),
+                "unknown spec key {k:?} \
+                 (have name|description|base|axes|exclude|seeds)");
+        }
+        let name = j.get("name").and_then(|v| v.as_str())
+            .unwrap_or("spec").to_string();
+        let description = j.get("description").and_then(|v| v.as_str())
+            .unwrap_or("").to_string();
+
+        let mut base = Vec::new();
+        if let Some(b) = j.get("base") {
+            let bo = b.as_obj().ok_or_else(|| anyhow::anyhow!(
+                "spec base must be an object of config overrides"))?;
+            for (k, v) in bo {
+                base.push((k.clone(), stringify(v)));
+            }
+        }
+
+        let mut axes = Vec::new();
+        if let Some(a) = j.get("axes") {
+            let ao = a.as_obj().ok_or_else(|| anyhow::anyhow!(
+                "spec axes must be an object of value arrays"))?;
+            for (k, v) in ao {
+                let arr = v.as_arr().ok_or_else(|| anyhow::anyhow!(
+                    "axis {k:?} must be an array of values"))?;
+                axes.push((k.clone(),
+                           arr.iter().map(stringify).collect()));
+            }
+        }
+
+        let mut exclude = Vec::new();
+        if let Some(e) = j.get("exclude") {
+            let arr = e.as_arr().ok_or_else(|| anyhow::anyhow!(
+                "spec exclude must be an array of rule objects"))?;
+            for r in arr {
+                let ro = r.as_obj().ok_or_else(|| anyhow::anyhow!(
+                    "each exclusion rule must be an object"))?;
+                exclude.push(ro.iter()
+                    .map(|(k, v)| (k.clone(), stringify(v)))
+                    .collect());
+            }
+        }
+
+        let seeds = match j.get("seeds") {
+            None => 1,
+            Some(v) => v.as_usize().ok_or_else(|| anyhow::anyhow!(
+                "spec seeds must be a non-negative integer"))?,
+        };
+
+        Ok(ScenarioSpec { name, description, base, axes, exclude, seeds })
+    }
+
+    /// Parse a spec from a JSON file.
+    pub fn from_file(path: &Path) -> anyhow::Result<ScenarioSpec> {
+        Self::parse(&Json::parse_file(path)?)
+    }
+
+    /// Total cells before exclusions (product of axis value counts).
+    pub fn raw_cells(&self) -> usize {
+        self.axes.iter().map(|(_, v)| v.len().max(1)).product()
+    }
+
+    /// Expand the spec over a base config into the runnable grid.
+    ///
+    /// Errors on unknown axis names, bad axis values (with the
+    /// valid-name table), empty axis value lists, duplicate cell
+    /// labels, and grids where exclusions prune every cell.
+    pub fn expand(&self, cli: &RunConfig) -> anyhow::Result<Grid> {
+        anyhow::ensure!(self.seeds >= 1,
+                        "spec {:?}: seeds must be >= 1", self.name);
+
+        // spec base overrides on top of the CLI config
+        let mut base = cli.clone();
+        for (k, v) in &self.base {
+            base.set(k, v).map_err(|e| anyhow::anyhow!(
+                "spec {:?} base: {e}", self.name))?;
+        }
+
+        // every spec axis must be in the table, once
+        let mut seen = BTreeSet::new();
+        for (name, _) in &self.axes {
+            anyhow::ensure!(AXES.iter().any(|a| a.name == name.as_str()),
+                            "unknown axis {name:?} (have {:?})",
+                            axis_names());
+            anyhow::ensure!(seen.insert(name.clone()),
+                            "axis {name:?} listed twice");
+        }
+
+        // per-axis canonical value lists, in canonical AXES order;
+        // unswept axes contribute their base-config value
+        let mut swept = Vec::with_capacity(AXES.len());
+        let mut values: Vec<Vec<String>> = Vec::with_capacity(AXES.len());
+        for ax in AXES {
+            match self.axes.iter().find(|(n, _)| n.as_str() == ax.name) {
+                Some((_, vals)) => {
+                    anyhow::ensure!(!vals.is_empty(),
+                                    "axis {:?} has no values", ax.name);
+                    let mut canon = Vec::with_capacity(vals.len());
+                    for v in vals {
+                        if let Some(check) = ax.check {
+                            check(v)?;
+                        }
+                        canon.push(canonical(&base, ax, v)?);
+                    }
+                    swept.push(true);
+                    values.push(canon);
+                }
+                None => {
+                    swept.push(false);
+                    values.push(vec![axis_value(&base, ax.name)]);
+                }
+            }
+        }
+
+        // canonicalized exclusion rules as (axis index, value)
+        let mut rules: Vec<Vec<(usize, String)>> = Vec::new();
+        for rule in &self.exclude {
+            anyhow::ensure!(!rule.is_empty(),
+                            "spec {:?}: empty exclusion rule", self.name);
+            let mut r = Vec::with_capacity(rule.len());
+            for (name, v) in rule {
+                let i = AXES.iter()
+                    .position(|a| a.name == name.as_str())
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "exclusion references unknown axis {name:?} \
+                         (have {:?})", axis_names()))?;
+                // rule values face the same name tables as axis values
+                // — a typo must error, not silently never match
+                if let Some(check) = AXES[i].check {
+                    check(v)?;
+                }
+                r.push((i, canonical(&base, &AXES[i], v)?));
+            }
+            rules.push(r);
+        }
+
+        // cell_label() omits rps and placement; suffix them when swept
+        // so every cell label stays unique
+        let rps_i = AXES.iter().position(|a| a.name == "rps").unwrap();
+        let plc_i = AXES.iter().position(|a| a.name == "placement")
+            .unwrap();
+
+        // odometer cross-product: AXES[0] varies slowest
+        let mut cells = Vec::new();
+        let mut pruned = 0usize;
+        let mut labels = BTreeSet::new();
+        let mut idx = vec![0usize; AXES.len()];
+        'grid: loop {
+            let excluded = rules.iter().any(|r| {
+                r.iter().all(|(a, v)| values[*a][idx[*a]] == *v)
+            });
+            if excluded {
+                pruned += 1;
+            } else {
+                let mut cfg = base.clone();
+                for (a, ax) in AXES.iter().enumerate() {
+                    if swept[a] {
+                        cfg.set(ax.key, &values[a][idx[a]])?;
+                    }
+                }
+                // like the legacy sweep, cells never write per-run
+                // CSVs; the lab persists one aggregate artifact
+                cfg.results_dir = None;
+                let mut label = cfg.cell_label();
+                if swept[rps_i] {
+                    label.push_str(
+                        &format!("_rps{}", values[rps_i][idx[rps_i]]));
+                }
+                if swept[plc_i] {
+                    label.push('_');
+                    label.push_str(&cfg.placement);
+                }
+                cfg.label = label.clone();
+                cfg.validate().map_err(|e| anyhow::anyhow!(
+                    "cell {label}: {e}"))?;
+                anyhow::ensure!(
+                    labels.insert(label.clone()),
+                    "duplicate cell label {label:?} — the swept axes do \
+                     not distinguish these cells");
+                let assignment = AXES.iter().enumerate()
+                    .filter(|(a, _)| swept[*a])
+                    .map(|(a, ax)| (ax.name.to_string(),
+                                    values[a][idx[a]].clone()))
+                    .collect();
+                cells.push(LabCell { label, cfg, assignment });
+            }
+
+            // increment the odometer from the fastest axis
+            let mut a = AXES.len();
+            loop {
+                if a == 0 {
+                    break 'grid;
+                }
+                a -= 1;
+                idx[a] += 1;
+                if idx[a] < values[a].len() {
+                    break;
+                }
+                idx[a] = 0;
+            }
+        }
+
+        anyhow::ensure!(
+            !cells.is_empty(),
+            "spec {:?} expands to an empty grid (exclusions pruned all \
+             {pruned} cells)", self.name);
+        Ok(Grid {
+            spec_name: self.name.clone(),
+            cells,
+            pruned,
+            seeds: self.seeds,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn axis(name: &str, vals: &[&str]) -> (String, Vec<String>) {
+        (name.to_string(),
+         vals.iter().map(|v| v.to_string()).collect())
+    }
+
+    fn two_by_two() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "t".into(),
+            description: String::new(),
+            base: Vec::new(),
+            axes: vec![axis("mode", &["no-cc", "cc"]),
+                       axis("sla", &["12", "18"])],
+            exclude: Vec::new(),
+            seeds: 1,
+        }
+    }
+
+    #[test]
+    fn canonical_order_mode_slowest() {
+        let g = two_by_two().expand(&RunConfig::default()).unwrap();
+        let labels: Vec<&str> =
+            g.cells.iter().map(|c| c.label.as_str()).collect();
+        assert_eq!(labels, vec![
+            "no-cc_gamma_select-batch+timer_sla12",
+            "no-cc_gamma_select-batch+timer_sla18",
+            "cc_gamma_select-batch+timer_sla12",
+            "cc_gamma_select-batch+timer_sla18",
+        ]);
+        assert_eq!(g.pruned, 0);
+    }
+
+    #[test]
+    fn axis_values_normalize() {
+        let mut s = two_by_two();
+        s.axes[1] = axis("sla", &["12.0", "18"]);
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells[0].assignment,
+                   vec![("mode".to_string(), "no-cc".to_string()),
+                        ("sla".to_string(), "12".to_string())]);
+    }
+
+    #[test]
+    fn cells_apply_mode_to_gpu_too() {
+        let g = two_by_two().expand(&RunConfig::default()).unwrap();
+        let cc = &g.cells[2].cfg;
+        assert_eq!(cc.mode, crate::gpu::CcMode::On);
+        assert_eq!(cc.gpu.mode, crate::gpu::CcMode::On);
+        assert!(cc.results_dir.is_none());
+    }
+
+    #[test]
+    fn swept_rps_and_placement_reach_the_label() {
+        let mut s = two_by_two();
+        s.axes = vec![axis("rps", &["6", "9"]),
+                      axis("devices", &["2"]),
+                      axis("placement", &["affinity", "least-loaded"])];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 4);
+        assert!(g.cells[0].label.contains("_rps6"));
+        assert!(g.cells[1].label.ends_with("least-loaded"),
+                "{}", g.cells[1].label);
+    }
+
+    #[test]
+    fn replica_seed_zero_is_base() {
+        assert_eq!(replica_seed(42, 0), 42);
+        assert_eq!(replica_seed(42, 3), 45);
+        assert_eq!(replica_seed(u64::MAX, 1), 0, "wraps, never panics");
+    }
+
+    #[test]
+    fn jobs_multiply_cells_by_seeds() {
+        let g = two_by_two().expand(&RunConfig::default()).unwrap();
+        let jobs = g.jobs(3);
+        assert_eq!(jobs.len(), 4 * 3);
+        // cell-major, replica-minor; replica 0 keeps the base seed
+        assert_eq!((jobs[0].cell, jobs[0].replica), (0, 0));
+        assert_eq!((jobs[2].cell, jobs[2].replica), (0, 2));
+        assert_eq!(jobs[0].cfg.seed, 42);
+        assert_eq!(jobs[1].cfg.seed, 43);
+        assert_eq!(jobs[3].cfg.seed, 42);
+    }
+
+    #[test]
+    fn unknown_axis_lists_the_table() {
+        let mut s = two_by_two();
+        s.axes.push(axis("frequency", &["1"]));
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("frequency") && err.contains("mode")
+                && err.contains("pipeline-depth"), "{err}");
+    }
+
+    #[test]
+    fn bad_strategy_value_lists_the_table() {
+        let mut s = two_by_two();
+        s.axes.push(axis("strategy", &["nope"]));
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("nope")
+                && err.contains("select-batch+timer"), "{err}");
+    }
+
+    #[test]
+    fn exclusions_prune() {
+        let mut s = two_by_two();
+        s.exclude = vec![vec![("mode".into(), "cc".into()),
+                              ("sla".into(), "12".into())]];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 3);
+        assert_eq!(g.pruned, 1);
+        assert!(g.cells.iter()
+            .all(|c| c.label != "cc_gamma_select-batch+timer_sla12"));
+    }
+
+    #[test]
+    fn exclusion_rule_values_face_the_name_tables() {
+        let mut s = two_by_two();
+        s.exclude = vec![vec![("strategy".into(),
+                               "bset-batch".into())]];
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("bset-batch")
+                && err.contains("best-batch"), "{err}");
+    }
+
+    #[test]
+    fn all_pruned_is_a_hard_error() {
+        let mut s = two_by_two();
+        s.exclude = vec![vec![("mode".into(), "no-cc".into())],
+                         vec![("mode".into(), "cc".into())]];
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("empty grid"), "{err}");
+    }
+
+    #[test]
+    fn empty_axis_is_a_hard_error() {
+        let mut s = two_by_two();
+        s.axes[0].1.clear();
+        assert!(s.expand(&RunConfig::default()).is_err());
+    }
+
+    #[test]
+    fn parse_roundtrips_the_schema() {
+        let j = Json::parse(
+            r#"{"name":"x","description":"d",
+                "base":{"duration":30,"mean-rps":6},
+                "axes":{"mode":["no-cc","cc"],"sla":[12,18]},
+                "exclude":[{"mode":"cc","sla":12}],
+                "seeds":3}"#).unwrap();
+        let s = ScenarioSpec::parse(&j).unwrap();
+        assert_eq!(s.name, "x");
+        assert_eq!(s.seeds, 3);
+        assert_eq!(s.raw_cells(), 4);
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 3);
+        assert!((g.cells[0].cfg.duration_s - 30.0).abs() < 1e-12,
+                "base override applies");
+    }
+
+    #[test]
+    fn parse_rejects_unknown_keys() {
+        let j = Json::parse(r#"{"name":"x","axis":{}}"#).unwrap();
+        let err = ScenarioSpec::parse(&j).unwrap_err().to_string();
+        assert!(err.contains("axis"), "{err}");
+    }
+}

@@ -1,0 +1,165 @@
+//! Seed-replica aggregation: fold a lab run's per-replica
+//! `RunSummary` rows into per-cell [`CellStats`]
+//! (mean / stddev / p50 / p95 over the replicas of each cell).
+//!
+//! Grouping is by cell label — replicas of one cell share it (only
+//! their seeds differ), and labels are unique per cell by
+//! construction (`spec::ScenarioSpec::expand`).  Cell order follows
+//! first appearance, i.e. grid order.
+
+use std::collections::BTreeMap;
+
+use crate::engine::RunSummary;
+use crate::util::{mean, quantile, stddev};
+
+/// Summary statistics of one metric across seed replicas.
+#[derive(Debug, Clone, Default)]
+pub struct Stat {
+    pub mean: f64,
+    pub stddev: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+impl Stat {
+    pub fn from_samples(xs: &[f64]) -> Stat {
+        Stat {
+            mean: mean(xs),
+            stddev: stddev(xs),
+            p50: quantile(xs, 0.5),
+            p95: quantile(xs, 0.95),
+        }
+    }
+}
+
+/// One grid cell's metrics folded across its seed replicas.
+#[derive(Debug, Clone)]
+pub struct CellStats {
+    pub label: String,
+    pub mode: String,
+    pub pattern: String,
+    pub strategy: String,
+    pub sla_s: f64,
+    /// Seed replicas folded into this row.
+    pub replicas: usize,
+    pub latency_mean_s: Stat,
+    pub latency_p99_s: Stat,
+    pub sla_attainment: Stat,
+    pub throughput_rps: Stat,
+    pub gpu_util: Stat,
+    pub swap_count: Stat,
+}
+
+fn stat_of(group: &[&RunSummary],
+           f: impl Fn(&RunSummary) -> f64) -> Stat {
+    let xs: Vec<f64> = group.iter().map(|c| f(c)).collect();
+    Stat::from_samples(&xs)
+}
+
+/// Fold replicas into per-cell stats, preserving grid order.
+pub fn aggregate(cells: &[RunSummary]) -> Vec<CellStats> {
+    let mut order: Vec<String> = Vec::new();
+    let mut groups: BTreeMap<String, Vec<&RunSummary>> = BTreeMap::new();
+    for c in cells {
+        if !groups.contains_key(&c.label) {
+            order.push(c.label.clone());
+        }
+        groups.entry(c.label.clone()).or_default().push(c);
+    }
+    order.iter().map(|label| {
+        let g = &groups[label];
+        let first = g[0];
+        CellStats {
+            label: label.clone(),
+            mode: first.mode.clone(),
+            pattern: first.pattern.clone(),
+            strategy: first.strategy.clone(),
+            sla_s: first.sla_s,
+            replicas: g.len(),
+            latency_mean_s: stat_of(g, |c| c.latency_mean_s),
+            latency_p99_s: stat_of(g, |c| c.latency_p99_s),
+            sla_attainment: stat_of(g, |c| c.sla_attainment),
+            throughput_rps: stat_of(g, |c| c.throughput_rps),
+            gpu_util: stat_of(g, |c| c.gpu_util),
+            swap_count: stat_of(g, |c| c.swap_count as f64),
+        }
+    }).collect()
+}
+
+/// Markdown table of per-cell replica statistics (mean ± stddev, and
+/// the p95 of the p99 latency across seeds).
+pub fn stats_table(stats: &[CellStats]) -> String {
+    let mut out = String::from(
+        "| cell | seeds | lat mean (s) | lat p99 p95 (s) | attain % | \
+         thr (rps) | GPU util % | swaps |\n\
+         |---|---|---|---|---|---|---|---|\n");
+    for s in stats {
+        out.push_str(&format!(
+            "| {} | {} | {:.2} ± {:.2} | {:.2} | {:.1} ± {:.1} | \
+             {:.2} ± {:.2} | {:.1} ± {:.1} | {:.1} ± {:.1} |\n",
+            s.label, s.replicas,
+            s.latency_mean_s.mean, s.latency_mean_s.stddev,
+            s.latency_p99_s.p95,
+            s.sla_attainment.mean * 100.0,
+            s.sla_attainment.stddev * 100.0,
+            s.throughput_rps.mean, s.throughput_rps.stddev,
+            s.gpu_util.mean * 100.0, s.gpu_util.stddev * 100.0,
+            s.swap_count.mean, s.swap_count.stddev));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn replica(label: &str, lat: f64, thr: f64) -> RunSummary {
+        RunSummary {
+            label: label.into(),
+            mode: "cc".into(),
+            pattern: "gamma".into(),
+            strategy: "best-batch".into(),
+            sla_s: 12.0,
+            latency_mean_s: lat,
+            latency_p99_s: lat * 2.0,
+            sla_attainment: 0.5,
+            throughput_rps: thr,
+            gpu_util: 0.25,
+            swap_count: 10,
+            ..RunSummary::default()
+        }
+    }
+
+    #[test]
+    fn folds_replicas_by_label_in_order() {
+        let cells = vec![
+            replica("b", 2.0, 4.0),
+            replica("b", 4.0, 6.0),
+            replica("a", 1.0, 1.0),
+        ];
+        let stats = aggregate(&cells);
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].label, "b", "first appearance wins");
+        assert_eq!(stats[0].replicas, 2);
+        assert!((stats[0].latency_mean_s.mean - 3.0).abs() < 1e-12);
+        assert!((stats[0].latency_mean_s.stddev - 1.0).abs() < 1e-12);
+        assert!((stats[0].throughput_rps.mean - 5.0).abs() < 1e-12);
+        assert_eq!(stats[1].replicas, 1);
+        assert_eq!(stats[1].latency_mean_s.stddev, 0.0);
+    }
+
+    #[test]
+    fn stat_quantiles() {
+        let s = Stat::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p95, 5.0);
+        assert_eq!(Stat::from_samples(&[]).mean, 0.0);
+    }
+
+    #[test]
+    fn table_renders() {
+        let stats = aggregate(&[replica("x", 2.0, 4.0)]);
+        let t = stats_table(&stats);
+        assert!(t.contains("| x | 1 |"), "{t}");
+    }
+}

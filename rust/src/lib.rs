@@ -32,6 +32,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod gpu;
+pub mod lab;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;

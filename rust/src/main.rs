@@ -10,8 +10,12 @@
 //!   via the `Engine` with the `RealBackend`.
 //! * `serve-http` — long-running network front-end (the paper's Flask
 //!   API analogue): `POST /infer`, `GET /stats`, `GET /healthz`.
-//! * `sweep` — run the full evaluation grid via the `Engine` with the
-//!   calibrated `DesBackend`.
+//! * `sweep` — the paper's 72-cell grid; a thin alias for
+//!   `lab run --preset paper-72`.
+//! * `lab` — the scenario lab: `run` a declarative experiment grid in
+//!   parallel over the calibrated DES, `list` presets and axes,
+//!   `compare` two saved runs, `check` a run against the abstract's
+//!   headline bands.
 //! * `report` — render paper-style tables from saved summaries.
 //! * `gen-traffic` — emit an arrival trace (jsonl) for inspection.
 //! * `models` — print the Table II analogue from the manifest.
@@ -22,20 +26,21 @@ use std::path::{Path, PathBuf};
 
 use sincere::config::RunConfig;
 use sincere::coordinator::{placement_names, strategy_names};
-use sincere::engine::EngineBuilder;
-use sincere::gpu::CcMode;
+use sincere::engine::{EngineBuilder, RunSummary};
+use sincere::lab::{self, LabRunner, ScenarioSpec};
 use sincere::metrics::report;
 use sincere::runtime::{Manifest, Registry};
 use sincere::sim::CostModel;
 use sincere::traffic::{pattern_by_name, PATTERN_NAMES};
-use sincere::util::json::Json;
 
 /// One CLI subcommand: name, help blurb, and entry point.  The single
 /// source of truth for dispatch, `print_usage`, and the module doc.
+/// `rest` carries the positional arguments left after `--key value`
+/// flag parsing (only `lab` and its subcommands use them).
 struct Command {
     name: &'static str,
     blurb: &'static str,
-    run: fn(RunConfig) -> anyhow::Result<()>,
+    run: fn(RunConfig, Vec<String>) -> anyhow::Result<()>,
 }
 
 const COMMANDS: &[Command] = &[
@@ -57,9 +62,15 @@ const COMMANDS: &[Command] = &[
     },
     Command {
         name: "sweep",
-        blurb: "run the full 72-cell grid (Engine + calibrated \
-                DesBackend)",
+        blurb: "the paper's 72-cell grid (alias for `lab run --preset \
+                paper-72`)",
         run: cmd_sweep,
+    },
+    Command {
+        name: "lab",
+        blurb: "scenario lab: run|list|compare|check declarative \
+                experiment grids",
+        run: cmd_lab,
     },
     Command {
         name: "report",
@@ -97,12 +108,11 @@ fn run(args: Vec<String>) -> anyhow::Result<()> {
     }
     let mut cfg = RunConfig::default();
     let rest = apply_flags(&mut cfg, rest)?;
-    anyhow::ensure!(rest.is_empty(), "unexpected arguments: {rest:?}");
 
     let command = COMMANDS.iter().find(|c| c.name == cmd.as_str())
         .ok_or_else(|| anyhow::anyhow!(
             "unknown command {cmd:?}; try `help`"))?;
-    (command.run)(cfg)
+    (command.run)(cfg, rest)
 }
 
 /// Parse `--key value` flags into the config; `--config file.json` loads
@@ -125,6 +135,12 @@ fn apply_flags(cfg: &mut RunConfig, args: &[String])
         }
     }
     Ok(rest)
+}
+
+/// Most commands take no positional arguments.
+fn no_extra_args(rest: &[String]) -> anyhow::Result<()> {
+    anyhow::ensure!(rest.is_empty(), "unexpected arguments: {rest:?}");
+    Ok(())
 }
 
 fn results_dir(cfg: &RunConfig) -> PathBuf {
@@ -159,7 +175,9 @@ fn load_registry(cfg: &RunConfig) -> anyhow::Result<(Manifest, Registry)> {
 
 // ------------------------------------------------------------------ serve
 
-fn cmd_serve(mut cfg: RunConfig) -> anyhow::Result<()> {
+fn cmd_serve(mut cfg: RunConfig, rest: Vec<String>)
+             -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
     if cfg.results_dir.is_none() {
         cfg.results_dir = Some(PathBuf::from("results"));
     }
@@ -180,7 +198,9 @@ fn cmd_serve(mut cfg: RunConfig) -> anyhow::Result<()> {
 /// Long-running network front-end (the paper's Flask API analogue):
 /// `POST /infer`, `GET /stats`, `GET /healthz`.  Listens on
 /// `SINCERE_HTTP_ADDR` (default 127.0.0.1:8080); stop with Ctrl-C.
-fn cmd_serve_http(cfg: RunConfig) -> anyhow::Result<()> {
+fn cmd_serve_http(cfg: RunConfig, rest: Vec<String>)
+                  -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
     let addr = std::env::var("SINCERE_HTTP_ADDR")
         .unwrap_or_else(|_| "127.0.0.1:8080".to_string());
     let (_manifest, registry) = load_registry(&cfg)?;
@@ -199,7 +219,8 @@ fn cmd_serve_http(cfg: RunConfig) -> anyhow::Result<()> {
 
 // ---------------------------------------------------------------- profile
 
-fn cmd_profile(cfg: RunConfig) -> anyhow::Result<()> {
+fn cmd_profile(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
     let (_manifest, registry) = load_registry(&cfg)?;
     eprintln!("[sincere] profiling loads + batches (this sleeps through \
                DMA throttles) ...");
@@ -237,150 +258,292 @@ fn cmd_profile(cfg: RunConfig) -> anyhow::Result<()> {
 
 // ------------------------------------------------------------------ sweep
 
-fn cmd_sweep(cfg: RunConfig) -> anyhow::Result<()> {
-    let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let cm_path = results_dir(&cfg).join("cost_model.json");
-    let cm = if cm_path.exists() {
+/// The paper's evaluation grid.  Historically a hardcoded serial
+/// 72-cell loop lived here; it is now the `paper-72` scenario preset,
+/// run by the lab's parallel runner with identical cell order, labels
+/// and output tables.
+fn cmd_sweep(mut cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
+    if cfg.lab_spec.is_none() && cfg.lab_preset.is_none() {
+        cfg.lab_preset = Some("paper-72".to_string());
+    }
+    lab_run(cfg)
+}
+
+// -------------------------------------------------------------------- lab
+
+fn cmd_lab(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
+    match rest.first().map(|s| s.as_str()) {
+        Some("run") => {
+            no_extra_args(&rest[1..])?;
+            lab_run(cfg)
+        }
+        Some("list") => {
+            no_extra_args(&rest[1..])?;
+            lab_list()
+        }
+        Some("compare") => {
+            anyhow::ensure!(
+                rest.len() == 3,
+                "usage: lab compare BASELINE.json CANDIDATE.json");
+            lab_compare(Path::new(&rest[1]), Path::new(&rest[2]))
+        }
+        Some("check") => {
+            no_extra_args(rest.get(2..).unwrap_or(&[]))?;
+            lab_check(&cfg, rest.get(1))
+        }
+        other => anyhow::bail!(
+            "lab needs a subcommand: run|list|compare|check (got {:?})",
+            other.unwrap_or("nothing")),
+    }
+}
+
+/// Resolve the scenario to run: `--spec FILE` wins, then `--preset
+/// NAME`, then the paper's grid.
+fn lab_spec(cfg: &RunConfig) -> anyhow::Result<ScenarioSpec> {
+    if let Some(path) = &cfg.lab_spec {
+        return ScenarioSpec::from_file(path);
+    }
+    let name = cfg.lab_preset.as_deref().unwrap_or("paper-72");
+    lab::preset_by_name(name)
+}
+
+/// Cost table for lab cells: the built-in synthetic table on
+/// `--synthetic-costs on`, else the cached `cost_model.json`, else
+/// measure-and-cache (exactly the legacy sweep behaviour).
+fn lab_costs(cfg: &RunConfig, manifest: &Manifest)
+             -> anyhow::Result<CostModel> {
+    if cfg.synthetic_costs {
+        eprintln!("[sincere] pricing cells from the built-in synthetic \
+                   cost table");
+        return Ok(CostModel::synthetic(manifest));
+    }
+    let cm_path = results_dir(cfg).join("cost_model.json");
+    if cm_path.exists() {
         eprintln!("[sincere] using cached {cm_path:?}");
-        CostModel::load(&cm_path)?
+        CostModel::load(&cm_path)
     } else {
-        let (_m, registry) = load_registry(&cfg)?;
+        let (_m, registry) = load_registry(cfg)?;
         let cm = CostModel::measure(&registry, &cfg.gpu, 3)?;
         cm.save(&cm_path)?;
-        cm
-    };
+        Ok(cm)
+    }
+}
 
-    let slas = sincere::config::SLA_LADDER;
-    let mut cells = Vec::new();
-    for mode in [CcMode::Off, CcMode::On] {
-        for pattern in PATTERN_NAMES {
-            for strategy in strategy_names() {
-                for &sla in slas {
-                    let mut c = cfg.clone();
-                    c.mode = mode;
-                    c.gpu.mode = mode;
-                    c.pattern = pattern.to_string();
-                    c.strategy = strategy.to_string();
-                    c.sla_s = sla;
-                    c.label = c.cell_label();
-                    // the sweep persists one aggregate JSON below, not
-                    // 72 sets of per-cell CSVs
-                    c.results_dir = None;
-                    let (s, _) = EngineBuilder::new(&c)
-                        .des(&manifest, &cm)?.run()?;
-                    println!("{}", s.brief());
-                    cells.push(s);
-                }
-            }
+fn lab_run(cfg: RunConfig) -> anyhow::Result<()> {
+    let spec = lab_spec(&cfg)?;
+    let manifest = Manifest::load(&cfg.artifacts_dir)?;
+    let cm = lab_costs(&cfg, &manifest)?;
+
+    let grid = spec.expand(&cfg)?;
+    let seeds = cfg.lab_seeds.unwrap_or(grid.seeds);
+    let jobs = grid.jobs(seeds);
+    let threads = sincere::lab::runner::effective_threads(
+        cfg.lab_threads, jobs.len());
+    eprintln!("[sincere] lab {}: {} cells x {} seed(s) = {} runs \
+               ({} pruned) on {} thread(s)",
+              grid.spec_name, grid.cells.len(), seeds, jobs.len(),
+              grid.pruned, threads);
+
+    let t0 = std::time::Instant::now();
+    let cells = LabRunner::new(&manifest, &cm)
+        .threads(cfg.lab_threads)
+        .run(&jobs)?;
+    eprintln!("[sincere] lab {} finished in {:.2}s", grid.spec_name,
+              t0.elapsed().as_secs_f64());
+
+    // every table is rendered exactly once and shared by stdout and
+    // the markdown report; stdout mirrors the legacy sweep exactly
+    // for 1-seed single-device grids (replica stats and per-device
+    // tables appear only when the grid exercises those axes)
+    let tables = LabTables::render(&spec, seeds, &cells);
+    for c in &cells {
+        println!("{}", c.brief());
+    }
+    println!("\n{}", tables.cells);
+    if let Some(stats) = &tables.stats {
+        println!("\n## Seed-replica statistics ({seeds} seeds/cell)\n");
+        println!("{stats}");
+    }
+    if let Some(per_device) = &tables.per_device {
+        println!("\n## Per-device breakdown\n");
+        println!("{per_device}");
+    }
+    if let Some(headline) = &tables.headline {
+        println!("\n## Headline comparison (paper abstract)\n");
+        println!("{headline}");
+    }
+
+    // persist all summaries (replicas included, job order); the
+    // markdown report lands next to the cells file it describes
+    let out = cells_out_path(&cfg);
+    if let Some(dir) = out.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(&out, lab::run_to_json(&cells).to_string())?;
+    eprintln!("[sincere] wrote {out:?}");
+
+    let md_path = out.parent()
+        .filter(|d| !d.as_os_str().is_empty())
+        .map(|d| d.join("lab_report.md"))
+        .unwrap_or_else(|| PathBuf::from("lab_report.md"));
+    std::fs::write(&md_path, tables.markdown())?;
+    eprintln!("[sincere] wrote {md_path:?}");
+    Ok(())
+}
+
+/// Where `lab run` writes (and `lab check` reads) the cells JSON:
+/// `--out` wins, else `<results>/sweep_cells.json`.
+fn cells_out_path(cfg: &RunConfig) -> PathBuf {
+    cfg.lab_out.clone()
+        .unwrap_or_else(|| results_dir(cfg).join("sweep_cells.json"))
+}
+
+/// Every table of one lab run, rendered exactly once — the stdout
+/// block and the markdown report both read these strings, so the two
+/// outputs cannot drift and nothing is computed twice.
+struct LabTables {
+    title: String,
+    description: String,
+    seeds: usize,
+    cells: String,
+    /// Only for seed-replicated grids.
+    stats: Option<String>,
+    /// Only when some cell ran a multi-device fleet.
+    per_device: Option<String>,
+    /// Only when the grid has both CC and No-CC cells — a one-mode
+    /// grid has nothing to ratio against (`lab check` guards the
+    /// same way).
+    headline: Option<String>,
+    bands: Option<String>,
+}
+
+impl LabTables {
+    fn render(spec: &ScenarioSpec, seeds: usize, cells: &[RunSummary])
+              -> LabTables {
+        let both_modes = cells.iter().any(|c| c.mode == "cc")
+            && cells.iter().any(|c| c.mode == "no-cc");
+        let h = both_modes
+            .then(|| report::headline_ratios(cells));
+        LabTables {
+            title: spec.name.clone(),
+            description: spec.description.clone(),
+            seeds,
+            cells: report::cells_table(cells),
+            stats: (seeds > 1).then(
+                || lab::stats_table(&lab::aggregate(cells))),
+            per_device: cells.iter()
+                .any(|c| c.per_device.len() > 1)
+                .then(|| report::per_device_table(cells)),
+            headline: h.as_ref().map(report::headline_table),
+            bands: h.as_ref().map(
+                |h| report::band_table(&report::paper_check(h))),
         }
     }
 
-    println!("\n{}", report::cells_table(&cells));
-    println!("\n## Headline comparison (paper abstract)\n");
-    println!("{}", report::headline_table(&report::headline_ratios(&cells)));
+    /// The self-contained markdown report (CI uploads this).
+    fn markdown(&self) -> String {
+        let mut md = format!("# Lab report: {}\n\n{}\n\n## Cells\n\n{}",
+                             self.title, self.description, self.cells);
+        if let Some(stats) = &self.stats {
+            md.push_str(&format!(
+                "\n## Seed-replica statistics ({} seeds/cell)\n\n\
+                 {stats}", self.seeds));
+        }
+        if let Some(per_device) = &self.per_device {
+            md.push_str(&format!(
+                "\n## Per-device breakdown\n\n{per_device}"));
+        }
+        if let Some(headline) = &self.headline {
+            md.push_str(&format!(
+                "\n## Headline comparison (paper abstract)\n\n\
+                 {headline}"));
+        }
+        if let Some(bands) = &self.bands {
+            md.push_str(&format!("\n## Paper-check\n\n{bands}"));
+        } else {
+            md.push_str("\nSingle-mode grid: no CC vs No-CC headline \
+                         comparison or paper-check applies.\n");
+        }
+        md
+    }
+}
 
-    // persist all summaries
-    let out = results_dir(&cfg).join("sweep_cells.json");
-    let arr = Json::Arr(cells.iter().map(|c| c.to_json()).collect());
-    std::fs::write(&out, arr.to_string())?;
-    eprintln!("[sincere] wrote {out:?}");
+fn lab_list() -> anyhow::Result<()> {
+    let cli = RunConfig::default();
+    println!("## Presets (`lab run --preset NAME`)\n");
+    println!("| preset | cells | seeds | runs | description |");
+    println!("|---|---|---|---|---|");
+    for p in lab::PRESETS {
+        let spec = (p.make)();
+        let (cells, runs) = match spec.expand(&cli) {
+            Ok(g) => (g.cells.len().to_string(),
+                      (g.cells.len() * g.seeds).to_string()),
+            Err(_) => ("?".to_string(), "?".to_string()),
+        };
+        println!("| {} | {} | {} | {} | {} |", p.name, cells,
+                 spec.seeds, runs, p.blurb);
+    }
+    println!("\n## Axes (`axes` keys in a spec file)\n");
+    println!("| axis | values |");
+    println!("|---|---|");
+    for name in lab::axis_names() {
+        println!("| {} | {} |", name, lab::spec::axis_hint(name));
+    }
+    println!("\nSpec schema: see examples/lab_spec.json and DESIGN.md \
+              \"The scenario lab\".");
+    Ok(())
+}
+
+fn lab_compare(base: &Path, cand: &Path) -> anyhow::Result<()> {
+    let b = lab::load_run(base)?;
+    let c = lab::load_run(cand)?;
+    println!("## Baseline {base:?} vs candidate {cand:?}\n");
+    println!("{}", report::compare_table(&b, &c));
+    Ok(())
+}
+
+fn lab_check(cfg: &RunConfig, path: Option<&String>)
+             -> anyhow::Result<()> {
+    let path = path.map(PathBuf::from)
+        .unwrap_or_else(|| cells_out_path(cfg));
+    let cells = lab::load_run(&path)?;
+    anyhow::ensure!(
+        cells.iter().any(|c| c.mode == "cc")
+            && cells.iter().any(|c| c.mode == "no-cc"),
+        "{path:?} has no CC vs No-CC cells to compare (run `sincere \
+         lab run --preset paper-72` first)");
+    let checks = report::paper_check(&report::headline_ratios(&cells));
+    println!("## Paper-check: {} cells from {path:?}\n", cells.len());
+    println!("{}", report::band_table(&checks));
+    let in_band = checks.iter().filter(|c| c.in_band).count();
+    println!("verdict: {in_band}/{} abstract bands in range",
+             checks.len());
     Ok(())
 }
 
 // ----------------------------------------------------------------- report
 
-fn cmd_report(cfg: RunConfig) -> anyhow::Result<()> {
+fn cmd_report(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
     let path = results_dir(&cfg).join("sweep_cells.json");
-    let j = Json::parse_file(&path)?;
-    let cells = parse_cells(&j)?;
+    let cells = lab::load_run(&path)?;
     println!("{}", report::cells_table(&cells));
+    if cells.iter().any(|c| c.per_device.len() > 1) {
+        println!("\n## Per-device breakdown\n");
+        println!("{}", report::per_device_table(&cells));
+    }
     println!("{}", report::headline_table(&report::headline_ratios(&cells)));
     Ok(())
 }
 
-fn parse_cells(j: &Json) -> anyhow::Result<Vec<sincere::engine::RunSummary>> {
-    let mut out = Vec::new();
-    for c in j.as_arr().unwrap_or(&[]) {
-        out.push(sincere::engine::RunSummary {
-            label: c.req("label")?.as_str().unwrap_or("").into(),
-            mode: c.req("mode")?.as_str().unwrap_or("").into(),
-            pattern: c.req("pattern")?.as_str().unwrap_or("").into(),
-            strategy: c.req("strategy")?.as_str().unwrap_or("").into(),
-            sla_s: c.req("sla_s")?.as_f64().unwrap_or(0.0),
-            mean_rps: c.req("mean_rps")?.as_f64().unwrap_or(0.0),
-            duration_s: c.req("duration_s")?.as_f64().unwrap_or(0.0),
-            runtime_s: c.req("runtime_s")?.as_f64().unwrap_or(0.0),
-            // fleet/pipeline fields are optional for older summary files
-            devices: c.get("devices").and_then(|v| v.as_usize())
-                .unwrap_or(1),
-            placement: c.get("placement").and_then(|v| v.as_str())
-                .unwrap_or("affinity").into(),
-            pipeline_depth: c.get("pipeline_depth")
-                .and_then(|v| v.as_usize()).unwrap_or(0),
-            prefetch: c.get("prefetch").and_then(|v| v.as_bool())
-                .unwrap_or(false),
-            generated: c.req("generated")?.as_u64().unwrap_or(0),
-            completed: c.req("completed")?.as_u64().unwrap_or(0),
-            sla_met: c.req("sla_met")?.as_u64().unwrap_or(0),
-            sla_attainment: c.req("sla_attainment")?.as_f64().unwrap_or(0.0),
-            latency_mean_s: c.req("latency_mean_s")?.as_f64().unwrap_or(0.0),
-            latency_p50_s: c.req("latency_p50_s")?.as_f64().unwrap_or(0.0),
-            latency_p90_s: c.req("latency_p90_s")?.as_f64().unwrap_or(0.0),
-            latency_p99_s: c.req("latency_p99_s")?.as_f64().unwrap_or(0.0),
-            latency_max_s: c.req("latency_max_s")?.as_f64().unwrap_or(0.0),
-            throughput_rps: c.req("throughput_rps")?.as_f64().unwrap_or(0.0),
-            processing_rate_rps: c.req("processing_rate_rps")?.as_f64()
-                .unwrap_or(0.0),
-            gpu_util: c.req("gpu_util")?.as_f64().unwrap_or(0.0),
-            swap_count: c.req("swap_count")?.as_u64().unwrap_or(0),
-            total_load_s: c.req("total_load_s")?.as_f64().unwrap_or(0.0),
-            total_unload_s: c.req("total_unload_s")?.as_f64().unwrap_or(0.0),
-            total_exec_s: c.req("total_exec_s")?.as_f64().unwrap_or(0.0),
-            total_crypto_s: c.req("total_crypto_s")?.as_f64().unwrap_or(0.0),
-            total_crypto_exposed_s: c.get("total_crypto_exposed_s")
-                .and_then(|v| v.as_f64()).unwrap_or(0.0),
-            prefetch_count: c.get("prefetch_count")
-                .and_then(|v| v.as_u64()).unwrap_or(0),
-            promoted_count: c.get("promoted_count")
-                .and_then(|v| v.as_u64()).unwrap_or(0),
-            mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
-            per_device: parse_per_device(c),
-        });
-    }
-    Ok(out)
-}
-
-fn parse_per_device(c: &Json) -> Vec<sincere::engine::DeviceSummary> {
-    let Some(arr) = c.get("per_device").and_then(|v| v.as_arr()) else {
-        return Vec::new();
-    };
-    arr.iter().map(|d| sincere::engine::DeviceSummary {
-        device: d.get("device").and_then(|v| v.as_usize()).unwrap_or(0),
-        mode: d.get("mode").and_then(|v| v.as_str()).unwrap_or("").into(),
-        batches: d.get("batches").and_then(|v| v.as_u64()).unwrap_or(0),
-        completed: d.get("completed").and_then(|v| v.as_u64())
-            .unwrap_or(0),
-        exec_s: d.get("exec_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        util: d.get("util").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        swap_count: d.get("swap_count").and_then(|v| v.as_u64())
-            .unwrap_or(0),
-        load_s: d.get("load_s").and_then(|v| v.as_f64()).unwrap_or(0.0),
-        unload_s: d.get("unload_s").and_then(|v| v.as_f64())
-            .unwrap_or(0.0),
-        crypto_s: d.get("crypto_s").and_then(|v| v.as_f64())
-            .unwrap_or(0.0),
-        crypto_exposed_s: d.get("crypto_exposed_s")
-            .and_then(|v| v.as_f64()).unwrap_or(0.0),
-        prefetches: d.get("prefetches").and_then(|v| v.as_u64())
-            .unwrap_or(0),
-        promotions: d.get("promotions").and_then(|v| v.as_u64())
-            .unwrap_or(0),
-    }).collect()
-}
-
 // ------------------------------------------------------------ gen-traffic
 
-fn cmd_gen_traffic(cfg: RunConfig) -> anyhow::Result<()> {
+fn cmd_gen_traffic(cfg: RunConfig, rest: Vec<String>)
+                   -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     let models = if cfg.models.is_empty() {
         manifest.family_names()
@@ -402,7 +565,8 @@ fn cmd_gen_traffic(cfg: RunConfig) -> anyhow::Result<()> {
 
 // ----------------------------------------------------------------- models
 
-fn cmd_models(cfg: RunConfig) -> anyhow::Result<()> {
+fn cmd_models(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
+    no_extra_args(&rest)?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
     println!("| model | stands in for | paper size | sim weights | \
               layers | d_model | heads | d_ff | vocab |");
@@ -455,7 +619,20 @@ fn usage_string() -> String {
          \x20 --prefetch on|off      decrypt-ahead the predicted next \
          model while a batch\n\
          \x20                        executes; the swap promotes it \
-         without a second DMA\n",
+         without a second DMA\n\n\
+         LAB OPTIONS (lab run|list|compare|check):\n\
+         \x20 --preset NAME          built-in scenario preset \
+         (`lab list` names them)\n\
+         \x20 --spec FILE.json       declarative grid: axes, \
+         exclusions, seeds\n\
+         \x20 --threads N            parallel DES workers \
+         (default 0 = all cores)\n\
+         \x20 --lab-seeds N          override the spec's seed \
+         replication\n\
+         \x20 --out FILE.json        cells output \
+         (default results/sweep_cells.json)\n\
+         \x20 --synthetic-costs on   price cells from the built-in \
+         synthetic cost table\n",
         "help", "show this help",
         patterns = PATTERN_NAMES.join("|"),
         strategies = strategy_names().join("|"),
@@ -491,6 +668,7 @@ mod tests {
                     "usage text is missing {:?}", c.name);
         }
         assert!(usage.contains("serve-http"));
+        assert!(usage.contains("lab"));
     }
 
     /// Strategy and placement options in the help text are rendered
@@ -509,6 +687,15 @@ mod tests {
     }
 
     #[test]
+    fn usage_lists_the_lab_flags() {
+        let usage = usage_string();
+        for flag in ["--preset", "--spec", "--threads", "--lab-seeds",
+                     "--out", "--synthetic-costs"] {
+            assert!(usage.contains(flag), "usage missing {flag}");
+        }
+    }
+
+    #[test]
     fn flags_parse_into_config() {
         let mut cfg = RunConfig::default();
         let rest = apply_flags(&mut cfg, &[
@@ -520,5 +707,33 @@ mod tests {
         assert_eq!(cfg.mode, sincere::gpu::CcMode::On);
         assert_eq!(rest, vec!["positional".to_string()]);
         assert!(apply_flags(&mut cfg, &["--sla".into()]).is_err());
+    }
+
+    #[test]
+    fn lab_requires_a_known_subcommand() {
+        let err = cmd_lab(RunConfig::default(), vec!["bogus".into()])
+            .unwrap_err().to_string();
+        assert!(err.contains("run|list|compare|check"), "{err}");
+        let err = cmd_lab(RunConfig::default(), Vec::new())
+            .unwrap_err().to_string();
+        assert!(err.contains("subcommand"), "{err}");
+    }
+
+    #[test]
+    fn lab_scenario_resolution() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(lab_spec(&cfg).unwrap().name, "paper-72",
+                   "bare `lab run` is the paper's grid");
+        cfg.lab_preset = Some("smoke".into());
+        assert_eq!(lab_spec(&cfg).unwrap().name, "smoke");
+        cfg.lab_preset = Some("nope".into());
+        assert!(lab_spec(&cfg).is_err());
+    }
+
+    #[test]
+    fn positional_args_rejected_where_unused() {
+        let err = cmd_models(RunConfig::default(),
+                             vec!["stray".into()]);
+        assert!(err.unwrap_err().to_string().contains("stray"));
     }
 }

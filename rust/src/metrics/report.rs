@@ -23,6 +23,116 @@ pub fn cells_table(cells: &[RunSummary]) -> String {
     out
 }
 
+/// Render the per-device breakdown of fleet cells (cells with a
+/// single device contribute nothing — their totals are already the
+/// cells-table row).  Fixes the gap where `RunSummary::per_device`
+/// was serialized but never rendered.
+pub fn per_device_table(cells: &[RunSummary]) -> String {
+    let mut out = String::from(
+        "| cell | dev | mode | batches | done | exec (s) | util % | \
+         swaps | load (s) | crypto exp (s) | prefetch | promoted |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for c in cells.iter().filter(|c| c.per_device.len() > 1) {
+        for d in &c.per_device {
+            out.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {:.2} | {:.1} | {} | \
+                 {:.2} | {:.3} | {} | {} |\n",
+                c.label, d.device, d.mode, d.batches, d.completed,
+                d.exec_s, d.util * 100.0, d.swap_count, d.load_s,
+                d.crypto_exposed_s, d.prefetches, d.promotions));
+        }
+    }
+    out
+}
+
+/// Mean of the headline metrics grouped by one axis of a grid
+/// (`mode` | `pattern` | `strategy` | `sla`), one row per distinct
+/// value in first-appearance order.
+pub fn grouped_table(cells: &[RunSummary], group: &str)
+                     -> anyhow::Result<String> {
+    let key: fn(&RunSummary) -> String = match group {
+        "mode" => |c| c.mode.clone(),
+        "pattern" => |c| c.pattern.clone(),
+        "strategy" => |c| c.strategy.clone(),
+        "sla" => |c| crate::util::json::Json::num(c.sla_s).to_string(),
+        other => anyhow::bail!(
+            "cannot group by {other:?} (have mode|pattern|strategy|sla)"),
+    };
+    let mut order: Vec<String> = Vec::new();
+    for c in cells {
+        let k = key(c);
+        if !order.contains(&k) {
+            order.push(k);
+        }
+    }
+    let mut out = format!(
+        "| {group} | cells | lat mean (s) | attain % | thr (rps) | \
+         proc rate (rps) | GPU util % | swaps/cell |\n\
+         |---|---|---|---|---|---|---|---|\n");
+    for k in &order {
+        let in_group = |c: &RunSummary| key(c) == *k;
+        let n = cells.iter().filter(|c| in_group(c)).count();
+        out.push_str(&format!(
+            "| {} | {} | {:.2} | {:.1} | {:.2} | {:.2} | {:.1} | \
+             {:.1} |\n",
+            k, n,
+            mean_where(cells, in_group, |c| c.latency_mean_s),
+            mean_where(cells, in_group, |c| c.sla_attainment) * 100.0,
+            mean_where(cells, in_group, |c| c.throughput_rps),
+            mean_where(cells, in_group, |c| c.processing_rate_rps),
+            mean_where(cells, in_group, |c| c.gpu_util) * 100.0,
+            mean_where(cells, in_group, |c| c.swap_count as f64)));
+    }
+    Ok(out)
+}
+
+/// Baseline-vs-candidate comparison of two saved runs, matched by
+/// cell label.  Seed replicas of one cell are folded first through
+/// `lab::stats::aggregate` — the one group-by-label implementation —
+/// so this table and the replica-stats table can never disagree.
+pub fn compare_table(base: &[RunSummary], cand: &[RunSummary])
+                     -> String {
+    let b = crate::lab::stats::aggregate(base);
+    let c = crate::lab::stats::aggregate(cand);
+    let cand_by_label: std::collections::BTreeMap<&str,
+                                                  &crate::lab::CellStats> =
+        c.iter().map(|s| (s.label.as_str(), s)).collect();
+    let base_labels: std::collections::BTreeSet<&str> =
+        b.iter().map(|s| s.label.as_str()).collect();
+
+    let mut out = String::from(
+        "| cell | lat base->cand (s) | d lat % | attain base->cand \
+         (%) | d pts | thr base->cand (rps) | d thr % |\n\
+         |---|---|---|---|---|---|---|\n");
+    let pct = |from: f64, to: f64| -> f64 {
+        if from > 0.0 { (to - from) / from * 100.0 } else { 0.0 }
+    };
+    let mut missing = 0usize;
+    for s in &b {
+        let Some(cv) = cand_by_label.get(s.label.as_str()) else {
+            missing += 1;
+            continue;
+        };
+        let (bl, cl) = (s.latency_mean_s.mean, cv.latency_mean_s.mean);
+        let (ba, ca) = (s.sla_attainment.mean, cv.sla_attainment.mean);
+        let (bt, ct) = (s.throughput_rps.mean, cv.throughput_rps.mean);
+        out.push_str(&format!(
+            "| {} | {:.2}->{:.2} | {:+.1} | {:.1}->{:.1} | {:+.1} | \
+             {:.2}->{:.2} | {:+.1} |\n",
+            s.label, bl, cl, pct(bl, cl),
+            ba * 100.0, ca * 100.0, (ca - ba) * 100.0,
+            bt, ct, pct(bt, ct)));
+    }
+    let extra = c.iter()
+        .filter(|s| !base_labels.contains(s.label.as_str())).count();
+    if missing + extra > 0 {
+        out.push_str(&format!(
+            "\n{missing} baseline cell(s) missing from the candidate, \
+             {extra} candidate cell(s) not in the baseline.\n"));
+    }
+    out
+}
+
 /// Mean of a metric across cells matching a predicate.
 pub fn mean_where(cells: &[RunSummary], f: impl Fn(&RunSummary) -> bool,
                   metric: impl Fn(&RunSummary) -> f64) -> f64 {
@@ -98,6 +208,67 @@ pub fn headline_table(h: &HeadlineRatios) -> String {
         h.processing_rate_ratio)
 }
 
+/// One abstract band checked against a measured grid (`lab check`).
+#[derive(Debug, Clone)]
+pub struct BandCheck {
+    pub metric: &'static str,
+    /// The abstract's claim, as text.
+    pub band: &'static str,
+    /// The measured figure, formatted.
+    pub measured: String,
+    pub in_band: bool,
+}
+
+/// The `paper-check` verdict: each of the abstract's four headline
+/// bands — latency 20–30% lower, SLA attainment 15–20 points higher,
+/// throughput 45–70% higher, GPU utilization ≈50% higher (we accept
+/// ±15 points around 50) — tested against the measured ratios.
+pub fn paper_check(h: &HeadlineRatios) -> Vec<BandCheck> {
+    let lat = h.latency_delta_frac;
+    vec![
+        BandCheck {
+            metric: "latency",
+            band: "No-CC 20-30% lower",
+            measured: format!(
+                "{:.1}% {}", lat.abs() * 100.0,
+                if lat < 0.0 { "lower" } else { "higher" }),
+            in_band: (-0.30..=-0.20).contains(&lat),
+        },
+        BandCheck {
+            metric: "SLA attainment",
+            band: "No-CC 15-20 points higher",
+            measured: format!("{:+.1} points", h.sla_delta_points),
+            in_band: (15.0..=20.0).contains(&h.sla_delta_points),
+        },
+        BandCheck {
+            metric: "throughput",
+            band: "No-CC 45-70% higher",
+            measured: format!("{:+.1}%",
+                              h.throughput_gain_frac * 100.0),
+            in_band: (0.45..=0.70).contains(&h.throughput_gain_frac),
+        },
+        BandCheck {
+            metric: "GPU utilization",
+            band: "No-CC ~50% higher (35-65 accepted)",
+            measured: format!("{:+.1}%", h.util_gain_frac * 100.0),
+            in_band: (0.35..=0.65).contains(&h.util_gain_frac),
+        },
+    ]
+}
+
+/// Render band checks as a markdown verdict table.
+pub fn band_table(checks: &[BandCheck]) -> String {
+    let mut out = String::from(
+        "| metric | paper band | measured | verdict |\n\
+         |---|---|---|---|\n");
+    for c in checks {
+        out.push_str(&format!(
+            "| {} | {} | {} | {} |\n", c.metric, c.band, c.measured,
+            if c.in_band { "in band" } else { "OUT OF BAND" }));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -156,5 +327,80 @@ mod tests {
         assert!(t.contains("| cc | gamma |"));
         let h = headline_table(&headline_ratios(&cells));
         assert!(h.contains("latency"));
+    }
+
+    #[test]
+    fn paper_check_bands() {
+        let in_band = headline_ratios(&[
+            cell("cc", 4.0, 0.5, 2.0, 0.2),
+            cell("no-cc", 3.0, 0.68, 3.2, 0.3),
+        ]);
+        let checks = paper_check(&in_band);
+        assert_eq!(checks.len(), 4);
+        assert!(checks.iter().all(|c| c.in_band),
+                "{:?}", checks.iter().map(|c| (&c.metric, c.in_band))
+                    .collect::<Vec<_>>());
+        // identical modes -> every delta is 0 -> all out of band
+        let flat = headline_ratios(&[
+            cell("cc", 4.0, 0.5, 2.0, 0.2),
+            cell("no-cc", 4.0, 0.5, 2.0, 0.2),
+        ]);
+        let checks = paper_check(&flat);
+        assert!(checks.iter().all(|c| !c.in_band));
+        let t = band_table(&checks);
+        assert!(t.contains("OUT OF BAND"), "{t}");
+    }
+
+    #[test]
+    fn per_device_only_renders_fleet_cells() {
+        let mut fleet = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        fleet.label = "fleet".into();
+        fleet.devices = 2;
+        fleet.per_device = vec![
+            crate::engine::DeviceSummary {
+                device: 0, mode: "cc".into(), batches: 3,
+                ..Default::default()
+            },
+            crate::engine::DeviceSummary {
+                device: 1, mode: "no-cc".into(), batches: 5,
+                ..Default::default()
+            },
+        ];
+        let single = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        let t = per_device_table(&[single, fleet]);
+        assert!(t.contains("| fleet | 0 | cc |"), "{t}");
+        assert!(t.contains("| fleet | 1 | no-cc |"), "{t}");
+        assert_eq!(t.matches("| t |").count(), 0,
+                   "single-device cells contribute no rows");
+    }
+
+    #[test]
+    fn grouped_table_groups_by_axis() {
+        let cells = vec![
+            cell("cc", 4.0, 0.5, 2.0, 0.2),
+            cell("cc", 6.0, 0.3, 1.0, 0.1),
+            cell("no-cc", 3.0, 0.7, 3.2, 0.3),
+        ];
+        let t = grouped_table(&cells, "mode").unwrap();
+        assert!(t.contains("| cc | 2 | 5.00 |"), "{t}");
+        assert!(t.contains("| no-cc | 1 | 3.00 |"), "{t}");
+        assert!(grouped_table(&cells, "color").is_err());
+    }
+
+    #[test]
+    fn compare_matches_labels_and_averages_replicas() {
+        let mut b1 = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        b1.label = "x".into();
+        let mut b2 = cell("cc", 6.0, 0.5, 4.0, 0.2);
+        b2.label = "x".into();
+        let mut c1 = cell("cc", 4.0, 0.6, 3.3, 0.2);
+        c1.label = "x".into();
+        let mut orphan = cell("cc", 1.0, 0.1, 1.0, 0.1);
+        orphan.label = "gone".into();
+        let t = compare_table(&[b1, b2, orphan], &[c1]);
+        // baseline replicas average to lat 5.0, thr 3.0
+        assert!(t.contains("| x | 5.00->4.00 | -20.0 |"), "{t}");
+        assert!(t.contains("| 3.00->3.30 | +10.0 |"), "{t}");
+        assert!(t.contains("1 baseline cell(s) missing"), "{t}");
     }
 }

@@ -131,6 +131,42 @@ impl CostModel {
         }
     }
 
+    /// The synthetic cost table: fixed constants scaled by model size,
+    /// never measured, so runs priced from it are bit-reproducible on
+    /// any host.  One definition on purpose — the parity matrix, the
+    /// pipeline/prefetch effect tests, the golden summaries and the CI
+    /// lab smoke job all price these exact figures (so retuning a
+    /// number here moves all of them together, and goldens then need
+    /// `UPDATE_GOLDENS=1`).  Pipelined CC loads are cheaper than
+    /// serialized ones with most of the crypto hidden, mirroring what
+    /// `measure` observes on the real DMA pipeline.
+    pub fn synthetic(manifest: &crate::runtime::Manifest) -> CostModel {
+        let mut cm = CostModel {
+            io_s_per_row_plain: 0.0004,
+            io_s_per_row_cc: 0.0013,
+            ..Default::default()
+        };
+        for f in &manifest.families {
+            let size_factor = f.weights.total_bytes as f64 / 4e6;
+            let mut mc = ModelCosts {
+                load_s_plain: 0.30 * size_factor,
+                load_s_cc: 0.85 * size_factor,
+                load_s_cc_pipe: 0.50 * size_factor,
+                load_crypto_s_cc: 0.42 * size_factor,
+                load_crypto_exposed_s_cc_pipe: 0.07 * size_factor,
+                unload_s: 0.006,
+                obs: 8,
+                ..Default::default()
+            };
+            for &b in &[1usize, 2, 4, 8] {
+                mc.exec_s_by_batch.insert(
+                    b, 0.07 + 0.011 * b as f64 * size_factor);
+            }
+            cm.models.insert(f.name.clone(), mc);
+        }
+        cm
+    }
+
     /// Profile the real system: loads per mode (Fig 3), execution per
     /// batch size (Fig 4), unloads, and per-row I/O.  `reps` controls
     /// measurement repetitions.

@@ -1,12 +1,14 @@
 //! Shared fixtures for the integration-test binaries.
 
 use sincere::runtime::Manifest;
-use sincere::sim::calib::{CostModel, ModelCosts};
+use sincere::sim::calib::CostModel;
 
 /// The synthetic cost table behind the parity matrix, the
-/// pipeline/prefetch effect tests and the golden summaries.  One
-/// definition on purpose: those suites are only comparable because
-/// they price identical costs, so retuning a figure here moves all of
+/// pipeline/prefetch effect tests, the lab determinism suite and the
+/// golden summaries — now defined once in the library
+/// (`CostModel::synthetic`) so the CI lab smoke job prices the same
+/// figures.  Those suites are only comparable because they price
+/// identical costs; retuning a figure in `synthetic` moves all of
 /// them together (goldens then need `UPDATE_GOLDENS=1`).
 ///
 /// OBS is capped at the largest compiled batch (8), so the DES's
@@ -14,28 +16,5 @@ use sincere::sim::calib::{CostModel, ModelCosts};
 /// the same function of the batch row count; pipelined CC loads are
 /// priced cheaper than serialized ones with most of the crypto hidden.
 pub fn toy_costs(manifest: &Manifest) -> CostModel {
-    let mut cm = CostModel {
-        io_s_per_row_plain: 0.0004,
-        io_s_per_row_cc: 0.0013,
-        ..Default::default()
-    };
-    for f in &manifest.families {
-        let size_factor = f.weights.total_bytes as f64 / 4e6;
-        let mut mc = ModelCosts {
-            load_s_plain: 0.30 * size_factor,
-            load_s_cc: 0.85 * size_factor,
-            load_s_cc_pipe: 0.50 * size_factor,
-            load_crypto_s_cc: 0.42 * size_factor,
-            load_crypto_exposed_s_cc_pipe: 0.07 * size_factor,
-            unload_s: 0.006,
-            obs: 8,
-            ..Default::default()
-        };
-        for &b in &[1usize, 2, 4, 8] {
-            mc.exec_s_by_batch.insert(
-                b, 0.07 + 0.011 * b as f64 * size_factor);
-        }
-        cm.models.insert(f.name.clone(), mc);
-    }
-    cm
+    CostModel::synthetic(manifest)
 }

@@ -1,0 +1,172 @@
+//! Scenario-lab integration: the parallel runner is deterministic
+//! across thread counts, the `paper-72` preset reproduces the legacy
+//! hand-rolled serial sweep cell-for-cell, seed replicas aggregate,
+//! and saved runs round-trip through disk.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::engine::EngineBuilder;
+use sincere::gpu::CcMode;
+use sincere::lab::{self, LabRunner};
+use sincere::runtime::Manifest;
+use sincere::sim::calib::CostModel;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "artifacts missing: run tools/gen_artifacts.py"))
+}
+
+fn costs() -> CostModel {
+    common::toy_costs(manifest())
+}
+
+/// Short cells so the 72-cell equivalence matrix stays fast.
+fn base_cfg() -> RunConfig {
+    RunConfig {
+        duration_s: 20.0,
+        drain_s: 8.0,
+        mean_rps: 4.0,
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    }
+}
+
+/// The acceptance property: `--threads 1` and `--threads N` produce
+/// byte-identical cells JSON (the CI `lab` job re-checks this through
+/// the real binary).
+#[test]
+fn thread_count_never_changes_output_bytes() {
+    let spec = lab::preset_by_name("smoke").unwrap();
+    let grid = spec.expand(&RunConfig::default()).unwrap();
+    let jobs = grid.jobs(grid.seeds);
+    let cm = costs();
+    let run = |threads: usize| -> String {
+        let cells = LabRunner::new(manifest(), &cm)
+            .threads(threads).quiet(true).run(&jobs).unwrap();
+        lab::run_to_json(&cells).to_string()
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(2), "2 threads changed the bytes");
+    assert_eq!(serial, run(8), "8 threads changed the bytes");
+}
+
+/// `sweep` is an alias for this preset, so the grid must reproduce
+/// the deleted hand-rolled loop exactly: same cell order, labels and
+/// summary JSON.
+#[test]
+fn paper_72_grid_matches_the_legacy_serial_loop() {
+    let cm = costs();
+    let base = base_cfg();
+    let spec = lab::preset_by_name("paper-72").unwrap();
+    let grid = spec.expand(&base).unwrap();
+    assert_eq!(grid.cells.len(), 72);
+    let jobs = grid.jobs(grid.seeds);
+    let cells = LabRunner::new(manifest(), &cm)
+        .threads(0).quiet(true).run(&jobs).unwrap();
+
+    // the legacy loop, verbatim from the old cmd_sweep
+    let mut legacy = Vec::new();
+    for mode in [CcMode::Off, CcMode::On] {
+        for pattern in sincere::traffic::PATTERN_NAMES {
+            for strategy in sincere::coordinator::strategy_names() {
+                for &sla in sincere::config::SLA_LADDER {
+                    let mut c = base.clone();
+                    c.mode = mode;
+                    c.gpu.mode = mode;
+                    c.pattern = pattern.to_string();
+                    c.strategy = strategy.to_string();
+                    c.sla_s = sla;
+                    c.label = c.cell_label();
+                    c.results_dir = None;
+                    let (s, _) = EngineBuilder::new(&c)
+                        .des(manifest(), &cm).unwrap().run().unwrap();
+                    legacy.push(s);
+                }
+            }
+        }
+    }
+
+    assert_eq!(cells.len(), legacy.len());
+    for (got, want) in cells.iter().zip(&legacy) {
+        assert_eq!(got.label, want.label, "cell order drifted");
+        assert_eq!(got.to_json().to_string(),
+                   want.to_json().to_string(),
+                   "cell {} differs from the legacy sweep", got.label);
+    }
+}
+
+#[test]
+fn seed_replicas_differ_and_aggregate() {
+    let spec = lab::preset_by_name("smoke").unwrap();
+    let grid = spec.expand(&RunConfig::default()).unwrap();
+    assert_eq!(grid.seeds, 2);
+    let jobs = grid.jobs(grid.seeds);
+    let cm = costs();
+    let cells = LabRunner::new(manifest(), &cm)
+        .threads(2).quiet(true).run(&jobs).unwrap();
+    assert_eq!(cells.len(), grid.cells.len() * 2);
+
+    // replicas of one cell share the label but not the seed
+    assert_eq!(cells[0].label, cells[1].label);
+    assert_eq!(cells[0].seed, 42);
+    assert_eq!(cells[1].seed, 43);
+
+    let stats = lab::aggregate(&cells);
+    assert_eq!(stats.len(), grid.cells.len());
+    for s in &stats {
+        assert_eq!(s.replicas, 2, "{}", s.label);
+    }
+    // different seeds draw different traffic, so at least one cell
+    // must show cross-replica spread
+    assert!(stats.iter().any(|s| s.latency_mean_s.stddev > 0.0),
+            "identical replicas: seeds are not reaching the traffic");
+    let table = lab::stats_table(&stats);
+    assert!(table.contains(&stats[0].label), "{table}");
+}
+
+#[test]
+fn bad_placement_name_reports_the_table() {
+    let spec = lab::ScenarioSpec {
+        name: "t".into(),
+        description: String::new(),
+        base: Vec::new(),
+        axes: vec![("placement".into(),
+                    vec!["teleport".into()])],
+        exclude: Vec::new(),
+        seeds: 1,
+    };
+    let err = spec.expand(&RunConfig::default()).unwrap_err()
+        .to_string();
+    assert!(err.contains("teleport") && err.contains("affinity"),
+            "{err}");
+}
+
+#[test]
+fn saved_runs_roundtrip_through_disk() {
+    let spec = lab::preset_by_name("smoke").unwrap();
+    let grid = spec.expand(&RunConfig::default()).unwrap();
+    let jobs = grid.jobs(1);
+    let cm = costs();
+    let cells = LabRunner::new(manifest(), &cm)
+        .threads(1).quiet(true).run(&jobs).unwrap();
+
+    let dir = std::env::temp_dir().join("sincere_lab_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cells.json");
+    std::fs::write(&path, lab::run_to_json(&cells).to_string())
+        .unwrap();
+    let back = lab::load_run(&path).unwrap();
+    assert_eq!(back.len(), cells.len());
+    for (a, b) in back.iter().zip(&cells) {
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+}

@@ -1,0 +1,17 @@
+#!/usr/bin/env sh
+# Seed (or refresh) the golden summaries and stage them for commit.
+#
+# The golden-summary test self-seeds missing files and CI warns until
+# they are committed; this script is the one-command way to pin them
+# on a machine with a Rust toolchain:
+#
+#   tools/seed_goldens.sh           # seed missing goldens
+#   UPDATE_GOLDENS=1 tools/seed_goldens.sh   # rewrite after an
+#                                            # intentional change
+set -e
+cd "$(dirname "$0")/.."
+cargo test --release --test golden_summary -- --nocapture
+git add rust/tests/goldens
+echo "--- staged goldens ---"
+git status --short rust/tests/goldens
+echo "commit rust/tests/goldens/ to pin them"
