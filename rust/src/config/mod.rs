@@ -72,6 +72,22 @@ pub struct RunConfig {
     /// (`coordinator::prefetch`).
     pub prefetch: bool,
 
+    /// CC-priced inference data path: price every batch's
+    /// request/response payload (`tokens_in`/`tokens_out` bytes)
+    /// through the CC bounce-buffer budget — serialized by default,
+    /// overlapped under `--pipeline-depth` exactly like swaps
+    /// (`engine::backend::price_data_path`).  Off by default so all
+    /// pre-existing timings and summaries stay byte-identical; No-CC
+    /// runs are unchanged even with it on (an unencrypted link has no
+    /// bounce serialization to price).
+    pub data_path: bool,
+    /// Priced input tokens per request on the data path (default:
+    /// the model's `prompt_len`) — the prompt-size sensitivity axis.
+    pub data_tokens_in: Option<usize>,
+    /// Priced output tokens per request on the data path (default:
+    /// the model's `decode_len`).
+    pub data_tokens_out: Option<usize>,
+
     // ---- scenario-lab configuration (`lab` command) ----
     /// Built-in preset for `lab run` (`lab list` names them).
     pub lab_preset: Option<String>,
@@ -116,6 +132,9 @@ impl Default for RunConfig {
             device_bw_scale: Vec::new(),
             placement: "affinity".into(),
             prefetch: false,
+            data_path: false,
+            data_tokens_in: None,
+            data_tokens_out: None,
             lab_preset: None,
             lab_spec: None,
             lab_threads: 0,
@@ -185,6 +204,15 @@ impl RunConfig {
                 self.gpu.cc_crypto_frac = parse_f64(key, value)?;
             }
             "prefetch" => self.prefetch = parse_bool(key, value)?,
+            "data-path" => self.data_path = parse_bool(key, value)?,
+            "data-tokens-in" => {
+                self.data_tokens_in = Some(value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --data-tokens-in {value:?}"))?);
+            }
+            "data-tokens-out" => {
+                self.data_tokens_out = Some(value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --data-tokens-out {value:?}"))?);
+            }
             "preset" => self.lab_preset = Some(value.to_string()),
             "spec" => self.lab_spec = Some(PathBuf::from(value)),
             "threads" => {
@@ -231,7 +259,8 @@ impl RunConfig {
 
     /// Grid-cell label, e.g. `cc_gamma_select-batch+timer_sla6`
     /// (fleet runs append `_devN`; pipelined runs `_pipeN`; prefetch
-    /// runs `_pf`).
+    /// runs `_pf`; data-path runs `_io` plus `_tinN`/`_toutN` when the
+    /// priced token counts are overridden).
     pub fn cell_label(&self) -> String {
         let mut base = format!("{}_{}_{}_sla{}", self.mode.as_str(),
                                self.pattern, self.strategy, self.sla_s);
@@ -243,6 +272,15 @@ impl RunConfig {
         }
         if self.prefetch {
             base.push_str("_pf");
+        }
+        if self.data_path {
+            base.push_str("_io");
+        }
+        if let Some(t) = self.data_tokens_in {
+            base.push_str(&format!("_tin{t}"));
+        }
+        if let Some(t) = self.data_tokens_out {
+            base.push_str(&format!("_tout{t}"));
         }
         base
     }
@@ -440,6 +478,31 @@ mod tests {
         assert!(c.set("prefetch", "maybe").is_err());
         c.set("cc-crypto-frac", "1.5").unwrap();
         assert!(c.validate().is_err(), "frac above 1 must fail validation");
+    }
+
+    #[test]
+    fn data_path_flags() {
+        let mut c = RunConfig::default();
+        assert!(!c.data_path, "data path must default off");
+        c.set("data-path", "on").unwrap();
+        c.set("data-tokens-in", "512").unwrap();
+        c.set("data-tokens-out", "128").unwrap();
+        c.validate().unwrap();
+        assert!(c.data_path);
+        assert_eq!(c.data_tokens_in, Some(512));
+        assert_eq!(c.data_tokens_out, Some(128));
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_io_tin512\
+                    _tout128");
+        c.set("data-path", "off").unwrap();
+        c.data_tokens_in = None;
+        c.data_tokens_out = None;
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18",
+                   "flag off leaves every pre-existing label untouched");
+        assert!(c.set("data-path", "maybe").is_err());
+        assert!(c.set("data-tokens-in", "-3").is_err());
+        assert!(c.set("data-tokens-out", "lots").is_err());
     }
 
     #[test]

@@ -28,8 +28,9 @@ use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
 use crate::engine::clock::Clock;
+use crate::gpu::device::GpuConfig;
 use crate::gpu::CcMode;
-use crate::sim::calib::ModelCosts;
+use crate::sim::calib::{CostModel, ModelCosts};
 
 /// Timing of one residency change, in the run's time domain.
 #[derive(Debug, Clone, Copy, Default)]
@@ -62,6 +63,27 @@ pub struct PrefetchOutcome {
     pub dropped_staged: bool,
 }
 
+/// Payload I/O of one batch under the CC-priced inference data path
+/// (`--data-path on`): the batch's request/response bytes cross the
+/// same serialized — or pipelined — bounce path as model loads.
+/// All-zero (the `Default`) when the data path is off.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DataPathOutcome {
+    /// Modeled seconds of the request-in + response-out transfers
+    /// (already folded into `BatchOutcome::io_s`).
+    pub io_s: f64,
+    /// Total modeled seal/open work of both transfers (CC only).
+    pub crypto_total_s: f64,
+    /// Crypto time not hidden behind the link (== total when the
+    /// chunk pipeline is off; see `gpu::dma`).
+    pub crypto_exposed_s: f64,
+    /// Payload bytes moved, request + response.
+    pub bytes: u64,
+    /// Bytes on the link including per-chunk AEAD framing
+    /// (`gpu::cc::wire_bytes`; == `bytes` in No-CC).
+    pub wire_bytes: u64,
+}
+
 /// One executed batch, in the run's time domain.
 #[derive(Debug, Clone)]
 pub struct BatchOutcome {
@@ -78,6 +100,8 @@ pub struct BatchOutcome {
     pub exec_start_s: f64,
     pub exec_s: f64,
     pub io_s: f64,
+    /// Data-path accounting for this batch (zeroes when off).
+    pub data: DataPathOutcome,
 }
 
 /// One modeled residency change, as a virtual-cost backend observed it
@@ -148,6 +172,53 @@ pub(crate) fn price_prefetch(mc: &ModelCosts, mode: CcMode,
     stats.total_prefetch_s += out.cost_s;
     stats.total_crypto_s += ct;
     out
+}
+
+/// Price one batch's payload I/O through the inference data path.
+/// Like [`price_swap`], this is the single definition both
+/// virtual-cost backends call, so the exact DES-vs-real parity of the
+/// data path is structural rather than two hand-maintained copies.
+///
+/// In No-CC mode the calibrated per-row figure stays authoritative —
+/// the data path models the *CC bounce* penalty, and an unencrypted
+/// link has no serialization to expose — so No-CC timings (and
+/// therefore summaries) are bit-identical whether the flag is on or
+/// off: a No-CC device contributes *no* data-path accounting at all
+/// (bytes included), which is what keeps the summary's conditional
+/// data-path block byte-identical too.  In CC mode each direction is
+/// priced from its byte count through the same chunk budget the swap
+/// path uses (`gpu::dma::cc_budget_s`), pipeline overlap included,
+/// with the total-vs-exposed crypto split accounted per batch.
+pub(crate) fn price_data_path(costs: &CostModel, gpu: &GpuConfig,
+                              rows: usize, tokens_in: usize,
+                              tokens_out: usize) -> DataPathOutcome {
+    let bytes_in = rows * 4 * tokens_in;
+    let bytes_out = rows * 4 * tokens_out;
+    let bytes = (bytes_in + bytes_out) as u64;
+    match gpu.mode {
+        CcMode::Off => DataPathOutcome {
+            io_s: costs.io_s_per_row(CcMode::Off) * rows as f64,
+            ..Default::default()
+        },
+        CcMode::On => {
+            let (in_s, in_ct, in_ce) = crate::gpu::dma::cc_budget_s(
+                bytes_in, gpu.bw_cc, gpu.bounce_bytes,
+                gpu.pipeline_depth, gpu.cc_crypto_frac);
+            let (out_s, out_ct, out_ce) = crate::gpu::dma::cc_budget_s(
+                bytes_out, gpu.bw_cc, gpu.bounce_bytes,
+                gpu.pipeline_depth, gpu.cc_crypto_frac);
+            let wire = crate::gpu::cc::wire_bytes(bytes_in,
+                                                  gpu.bounce_bytes)
+                + crate::gpu::cc::wire_bytes(bytes_out, gpu.bounce_bytes);
+            DataPathOutcome {
+                io_s: in_s + out_s,
+                crypto_total_s: in_ct + out_ct,
+                crypto_exposed_s: in_ce + out_ce,
+                bytes,
+                wire_bytes: wire as u64,
+            }
+        }
+    }
 }
 
 /// Device occupancy published to the monitor thread.

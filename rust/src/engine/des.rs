@@ -34,10 +34,12 @@
 use crate::config::RunConfig;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::swap::SwapStats;
-use crate::engine::backend::{price_prefetch, price_swap, BatchOutcome,
+use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
+                             BatchOutcome, DataPathOutcome,
                              DeviceSnapshot, ExecBackend, PrefetchOutcome,
                              SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
+use crate::gpu::device::GpuConfig;
 use crate::gpu::CcMode;
 use crate::runtime::Manifest;
 use crate::sim::CostModel;
@@ -47,8 +49,15 @@ pub struct DesBackend<'a> {
     costs: &'a CostModel,
     /// Whether CC loads price the chunk pipeline (`--pipeline-depth`).
     pipelined: bool,
-    /// Per-device CC mode (the fleet's mix).
-    modes: Vec<CcMode>,
+    /// Per-device GPU config (mode mix, bounce/pipeline/bandwidth) —
+    /// what the data path prices per-batch I/O from.
+    fleet: Vec<GpuConfig>,
+    /// CC-priced inference data path (`--data-path`).
+    data_path: bool,
+    /// Priced input tokens per request (None = model `prompt_len`).
+    data_tokens_in: Option<usize>,
+    /// Priced output tokens per request (None = model `decode_len`).
+    data_tokens_out: Option<usize>,
     /// Per-device resident model.
     resident: Vec<Option<String>>,
     /// Per-device staged (prefetched) model — mirrors the real
@@ -61,8 +70,8 @@ pub struct DesBackend<'a> {
 impl<'a> DesBackend<'a> {
     pub fn new(cfg: &RunConfig, manifest: &'a Manifest,
                costs: &'a CostModel) -> DesBackend<'a> {
-        let modes = cfg.fleet_modes();
-        let n = modes.len();
+        let fleet = cfg.fleet_configs();
+        let n = fleet.len();
         let pipelined = cfg.gpu.pipeline_depth >= 2;
         if pipelined && costs.missing_pipeline_profile() {
             eprintln!("[sincere] warning: cost model has no pipelined CC \
@@ -75,7 +84,10 @@ impl<'a> DesBackend<'a> {
             manifest,
             costs,
             pipelined,
-            modes,
+            fleet,
+            data_path: cfg.data_path,
+            data_tokens_in: cfg.data_tokens_in,
+            data_tokens_out: cfg.data_tokens_out,
             resident: vec![None; n],
             staged: vec![None; n],
             stats: vec![SwapStats::default(); n],
@@ -89,11 +101,11 @@ impl ExecBackend for DesBackend<'_> {
     }
 
     fn n_devices(&self) -> usize {
-        self.modes.len()
+        self.fleet.len()
     }
 
     fn mode(&self, device: usize) -> CcMode {
-        self.modes[device]
+        self.fleet[device].mode
     }
 
     fn model_names(&self) -> Vec<String> {
@@ -120,7 +132,8 @@ impl ExecBackend for DesBackend<'_> {
             return 0.0; // a staged model promotes for free
         }
         self.costs.costs(model)
-            .map(|mc| mc.load_s_for(self.modes[device], self.pipelined))
+            .map(|mc| mc.load_s_for(self.fleet[device].mode,
+                                    self.pipelined))
             .unwrap_or(0.0)
     }
 
@@ -147,7 +160,7 @@ impl ExecBackend for DesBackend<'_> {
             !promoted && self.staged[device].is_some();
         self.staged[device] = None;
         let out = price_swap(
-            mc, self.modes[device], self.pipelined,
+            mc, self.fleet[device].mode, self.pipelined,
             SwapEvent { model, had_resident, promoted, dropped_staged },
             &mut self.stats[device]);
         self.resident[device] = Some(model.to_string());
@@ -163,8 +176,8 @@ impl ExecBackend for DesBackend<'_> {
         }
         let mc = self.costs.costs(model)?;
         let dropped_staged = self.staged[device].is_some();
-        let out = price_prefetch(mc, self.modes[device], self.pipelined,
-                                 dropped_staged,
+        let out = price_prefetch(mc, self.fleet[device].mode,
+                                 self.pipelined, dropped_staged,
                                  &mut self.stats[device]);
         self.staged[device] = Some(model.to_string());
         Ok(out)
@@ -181,8 +194,21 @@ impl ExecBackend for DesBackend<'_> {
         let mc = self.costs.costs(model)?;
         let artifact_batch = spec.batch_size_at_least(requests.len());
         let exec_s = mc.exec_s(artifact_batch);
-        let io_s = self.costs.io_s_per_row(self.modes[device])
-            * requests.len() as f64;
+        // Payload I/O: per-row calibrated figure by default; with the
+        // data path on, the batch's byte count through the shared
+        // bounce-budget pricing (identical per-row figure in No-CC —
+        // see `price_data_path`).
+        let (io_s, data) = if self.data_path {
+            let d = price_data_path(
+                self.costs, &self.fleet[device], requests.len(),
+                self.data_tokens_in.unwrap_or(spec.prompt_len),
+                self.data_tokens_out.unwrap_or(spec.decode_len));
+            (d.io_s, d)
+        } else {
+            (self.costs.io_s_per_row(self.fleet[device].mode)
+                 * requests.len() as f64,
+             DataPathOutcome::default())
+        };
         Ok(Some(BatchOutcome {
             requests,
             tokens: Vec::new(),
@@ -191,6 +217,7 @@ impl ExecBackend for DesBackend<'_> {
             exec_start_s: 0.0,
             exec_s,
             io_s,
+            data,
         }))
     }
 

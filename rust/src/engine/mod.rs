@@ -66,8 +66,8 @@ use crate::traffic::pattern_by_name;
 use crate::traffic::rng::Pcg64;
 use crate::workload::promptgen::PromptGen;
 
-pub use backend::{BatchOutcome, DeviceSnapshot, ExecBackend,
-                  PrefetchOutcome, SwapOutcome};
+pub use backend::{BatchOutcome, DataPathOutcome, DeviceSnapshot,
+                  ExecBackend, PrefetchOutcome, SwapOutcome};
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use des::DesBackend;
 pub use real::RealBackend;
@@ -94,6 +94,16 @@ impl<'a> EngineBuilder<'a> {
     /// managers (the paper's measured system).
     pub fn real(mut self, registry: &'a crate::runtime::Registry)
                 -> anyhow::Result<EngineBuilder<'a>> {
+        if self.cfg.data_path
+            && (self.cfg.data_tokens_in.is_some()
+                || self.cfg.data_tokens_out.is_some())
+        {
+            eprintln!("[sincere] warning: wall-clock runs measure the \
+                       actual request/response payloads — \
+                       --data-tokens-in/--data-tokens-out only change \
+                       the *priced* shape in DES / virtual-cost runs \
+                       and are ignored here");
+        }
         self.backend = Some(Box::new(RealBackend::new(&self.cfg,
                                                       registry)?));
         self.virtual_time = false;
@@ -556,6 +566,10 @@ impl Engine<'_> {
                         unload_s: swap.unload_s,
                         exec_s: out.exec_s,
                         io_s: out.io_s,
+                        data_bytes: out.data.bytes,
+                        data_wire_bytes: out.data.wire_bytes,
+                        data_crypto_s: out.data.crypto_total_s,
+                        data_crypto_exposed_s: out.data.crypto_exposed_s,
                         prefetch_s,
                     });
                     if let Some(mc) = &monitor_ctx {

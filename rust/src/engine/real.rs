@@ -25,7 +25,8 @@ use crate::config::RunConfig;
 use crate::coordinator::batcher;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::swap::{SwapManager, SwapStats};
-use crate::engine::backend::{price_prefetch, price_swap, BatchOutcome,
+use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
+                             BatchOutcome, DataPathOutcome,
                              DeviceSnapshot, ExecBackend, PrefetchOutcome,
                              SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
@@ -44,6 +45,15 @@ pub struct RealBackend<'a> {
     /// Whether CC loads are priced pipelined in virtual-costs mode
     /// (the real DMA engine reads the same `GpuConfig` directly).
     pipelined: bool,
+    /// CC-priced inference data path (`--data-path`): wall mode
+    /// surfaces the measured bounce-crypto of the payload transfers it
+    /// already performs; virtual mode prices them via the shared
+    /// `price_data_path` helper (the DES-parity seam).
+    data_path: bool,
+    /// Priced input tokens per request (None = model `prompt_len`).
+    data_tokens_in: Option<usize>,
+    /// Priced output tokens per request (None = model `decode_len`).
+    data_tokens_out: Option<usize>,
     /// Modeled swap accounting per device, maintained only in
     /// virtual-costs mode (wall mode reads each swap manager's measured
     /// stats directly).
@@ -62,6 +72,9 @@ impl<'a> RealBackend<'a> {
             fleet,
             swaps: (0..n).map(|_| SwapManager::new()).collect(),
             pipelined: cfg.gpu.pipeline_depth >= 2,
+            data_path: cfg.data_path,
+            data_tokens_in: cfg.data_tokens_in,
+            data_tokens_out: cfg.data_tokens_out,
             stats: vec![SwapStats::default(); n],
             virtual_costs: None,
         })
@@ -234,7 +247,7 @@ impl ExecBackend for RealBackend<'_> {
         let in_bytes: Vec<u8> = batch.requests.iter()
             .flat_map(|r| r.tokens.iter().flat_map(|t| t.to_le_bytes()))
             .collect();
-        self.fleet.get_mut(device)
+        let rep_in = self.fleet.get_mut(device)
             .io_transfer(Dir::HostToDevice, &in_bytes)?;
         let mut io_s = clock.now_s() - io_start;
 
@@ -251,7 +264,7 @@ impl ExecBackend for RealBackend<'_> {
             .flat_map(|row| row.iter().flat_map(|t| t.to_le_bytes()))
             .collect();
         let io_start = clock.now_s();
-        self.fleet.get_mut(device)
+        let rep_out = self.fleet.get_mut(device)
             .io_transfer(Dir::DeviceToHost, &out_bytes)?;
         io_s += clock.now_s() - io_start;
 
@@ -260,11 +273,43 @@ impl ExecBackend for RealBackend<'_> {
 
         // 5. virtual mode: replace measured times with modeled costs
         //    (the engine folds them into the device timeline)
+        let mut data = DataPathOutcome::default();
         if let Some(costs) = &self.virtual_costs {
             let mc = costs.costs(model)?;
             exec_s = mc.exec_s(rep.batch);
-            io_s = costs.io_s_per_row(self.fleet.get(device).mode())
-                * n_rows as f64;
+            if self.data_path {
+                let spec = &self.registry.entry(model)?.spec;
+                data = price_data_path(
+                    costs, self.fleet.get(device).config(), n_rows,
+                    self.data_tokens_in.unwrap_or(spec.prompt_len),
+                    self.data_tokens_out.unwrap_or(spec.decode_len));
+                io_s = data.io_s;
+            } else {
+                io_s = costs.io_s_per_row(self.fleet.get(device).mode())
+                    * n_rows as f64;
+            }
+        } else if self.data_path
+            && self.fleet.get(device).mode() == CcMode::On
+        {
+            // wall mode: the payloads really crossed the sealed bounce
+            // path above — surface the measured-model crypto figures
+            // instead of re-pricing anything.  A No-CC device
+            // contributes no data-path accounting (see
+            // `price_data_path`), matching the virtual backends.
+            let gpu = self.fleet.get(device);
+            data = DataPathOutcome {
+                io_s,
+                crypto_total_s: rep_in.crypto_total.as_secs_f64()
+                    + rep_out.crypto_total.as_secs_f64(),
+                crypto_exposed_s: rep_in.crypto_exposed.as_secs_f64()
+                    + rep_out.crypto_exposed.as_secs_f64(),
+                bytes: rep_in.bytes + rep_out.bytes,
+                wire_bytes: (crate::gpu::cc::wire_bytes(
+                    in_bytes.len(), gpu.config().bounce_bytes)
+                    + crate::gpu::cc::wire_bytes(
+                        out_bytes.len(), gpu.config().bounce_bytes))
+                    as u64,
+            };
         }
 
         Ok(Some(BatchOutcome {
@@ -274,6 +319,7 @@ impl ExecBackend for RealBackend<'_> {
             exec_start_s,
             exec_s,
             io_s,
+            data,
         }))
     }
 

@@ -35,11 +35,18 @@ pub struct DeviceSummary {
     pub prefetches: u64,
     /// Swaps satisfied by promoting a staged buffer (no second DMA).
     pub promotions: u64,
+    /// Payload bytes this device shipped through the inference data
+    /// path (`--data-path on`; 0 otherwise).
+    pub data_bytes: u64,
+    /// Total payload crypto on this device's batch I/O.
+    pub data_crypto_s: f64,
+    /// Payload crypto actually exposed (== total without the pipeline).
+    pub data_crypto_exposed_s: f64,
 }
 
 impl DeviceSummary {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("device", Json::num(self.device as f64)),
             ("mode", Json::str(self.mode.clone())),
             ("batches", Json::num(self.batches as f64)),
@@ -53,7 +60,18 @@ impl DeviceSummary {
             ("crypto_exposed_s", Json::num(self.crypto_exposed_s)),
             ("prefetches", Json::num(self.prefetches as f64)),
             ("promotions", Json::num(self.promotions as f64)),
-        ])
+        ];
+        // data-path keys appear only when this device shipped CC batch
+        // I/O — the same bytes-or-crypto gate as the fleet block (see
+        // the byte-identity note on `RunSummary::to_json`), so the two
+        // levels can never disagree about whether the run priced I/O
+        if self.data_bytes > 0 || self.data_crypto_s > 0.0 {
+            fields.push(("data_bytes", Json::num(self.data_bytes as f64)));
+            fields.push(("data_crypto_s", Json::num(self.data_crypto_s)));
+            fields.push(("data_crypto_exposed_s",
+                         Json::num(self.data_crypto_exposed_s)));
+        }
+        Json::obj(fields)
     }
 
     /// Parse one per-device row back from its `to_json` form (every
@@ -81,6 +99,9 @@ impl DeviceSummary {
             crypto_exposed_s: f("crypto_exposed_s"),
             prefetches: u("prefetches"),
             promotions: u("promotions"),
+            data_bytes: u("data_bytes"),
+            data_crypto_s: f("data_crypto_s"),
+            data_crypto_exposed_s: f("data_crypto_exposed_s"),
         }
     }
 }
@@ -148,13 +169,24 @@ pub struct RunSummary {
     pub promoted_count: u64,
     pub mean_load_s: f64,
 
+    /// Total payload crypto across the fleet's batch I/O (the
+    /// inference data path, `--data-path on`; all four fields zero —
+    /// and absent from the JSON — otherwise).
+    pub total_data_crypto_s: f64,
+    /// Payload crypto actually exposed on the batch path.
+    pub total_data_crypto_exposed_s: f64,
+    /// Payload bytes shipped through the data path (request+response).
+    pub data_bytes: u64,
+    /// Data-path bytes on the link, per-chunk AEAD framing included.
+    pub data_wire_bytes: u64,
+
     /// Per-device breakdown, in device-id order.
     pub per_device: Vec<DeviceSummary>,
 }
 
 impl RunSummary {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("label", Json::str(self.label.clone())),
             ("mode", Json::str(self.mode.clone())),
             ("pattern", Json::str(self.pattern.clone())),
@@ -196,9 +228,28 @@ impl RunSummary {
             ("prefetch_count", Json::num(self.prefetch_count as f64)),
             ("promoted_count", Json::num(self.promoted_count as f64)),
             ("mean_load_s", Json::num(self.mean_load_s)),
-            ("per_device", Json::Arr(self.per_device.iter()
-                .map(|d| d.to_json()).collect())),
-        ])
+        ];
+        // Byte-identity contract (tests/golden_summary.rs): the
+        // data-path block appears only when the run actually shipped
+        // CC batch I/O.  With `--data-path off` — and in No-CC mode
+        // even with it on (No-CC devices record no data-path bytes at
+        // all, see `price_data_path`) — these keys are absent and
+        // every other value is untouched, so the JSON stays
+        // byte-identical to pre-data-path builds.  Gating on bytes,
+        // not crypto, keeps the block present for degenerate configs
+        // like `--cc-crypto-frac 0` whose crypto share is zero.
+        if self.data_bytes > 0 || self.total_data_crypto_s > 0.0 {
+            fields.push(("total_data_crypto_s",
+                         Json::num(self.total_data_crypto_s)));
+            fields.push(("total_data_crypto_exposed_s",
+                         Json::num(self.total_data_crypto_exposed_s)));
+            fields.push(("data_bytes", Json::num(self.data_bytes as f64)));
+            fields.push(("data_wire_bytes",
+                         Json::num(self.data_wire_bytes as f64)));
+        }
+        fields.push(("per_device", Json::Arr(self.per_device.iter()
+            .map(|d| d.to_json()).collect())));
+        Json::obj(fields)
     }
 
     /// Parse a summary back from its `to_json` form.  Fields that
@@ -264,6 +315,11 @@ impl RunSummary {
             prefetch_count: opt_u64("prefetch_count"),
             promoted_count: opt_u64("promoted_count"),
             mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
+            total_data_crypto_s: opt_f64("total_data_crypto_s", 0.0),
+            total_data_crypto_exposed_s:
+                opt_f64("total_data_crypto_exposed_s", 0.0),
+            data_bytes: opt_u64("data_bytes"),
+            data_wire_bytes: opt_u64("data_wire_bytes"),
             per_device: c.get("per_device").and_then(|v| v.as_arr())
                 .map(|arr| arr.iter().map(DeviceSummary::from_json)
                      .collect())
@@ -285,6 +341,10 @@ impl RunSummary {
         if self.prefetch {
             pipe.push_str(&format!(" promo={}/{}", self.promoted_count,
                                    self.swap_count));
+        }
+        if self.total_data_crypto_s > 0.0 {
+            pipe.push_str(&format!(" dio={:.2}s",
+                                   self.total_data_crypto_exposed_s));
         }
         format!(
             "{:<6} {:<7} {:<26} sla={:<4} gen={:<5} done={:<5} \
@@ -323,6 +383,24 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
     let promoted_count: u64 =
         dev_stats.iter().map(|s| s.promoted_count).sum();
 
+    // inference-data-path accounting, one pass over the per-batch
+    // records (all zero with `--data-path off`): per-device
+    // (bytes, crypto, exposed) triples plus the fleet wire total
+    let mut dev_data = vec![(0u64, 0.0f64, 0.0f64); n_dev];
+    let mut data_wire_bytes = 0u64;
+    for b in &recorder.batches {
+        if let Some(t) = dev_data.get_mut(b.device) {
+            t.0 += b.data_bytes;
+            t.1 += b.data_crypto_s;
+            t.2 += b.data_crypto_exposed_s;
+        }
+        data_wire_bytes += b.data_wire_bytes;
+    }
+    let data_bytes: u64 = dev_data.iter().map(|t| t.0).sum();
+    let total_data_crypto_s: f64 = dev_data.iter().map(|t| t.1).sum();
+    let total_data_crypto_exposed_s: f64 =
+        dev_data.iter().map(|t| t.2).sum();
+
     // heterogeneous fleets report "mixed"
     let mode = match dev_modes.split_first() {
         Some((first, rest)) if rest.iter().any(|m| m != first) =>
@@ -357,6 +435,9 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
             crypto_exposed_s: stats.total_crypto_exposed_s,
             prefetches: stats.prefetch_count,
             promotions: stats.promoted_count,
+            data_bytes: dev_data[d].0,
+            data_crypto_s: dev_data[d].1,
+            data_crypto_exposed_s: dev_data[d].2,
         }
     }).collect();
 
@@ -414,6 +495,10 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         } else {
             0.0
         },
+        total_data_crypto_s,
+        total_data_crypto_exposed_s,
+        data_bytes,
+        data_wire_bytes,
         per_device,
     }
 }
@@ -453,6 +538,10 @@ mod tests {
             total_crypto_exposed_s: 0.75,
             prefetch_count: 6,
             promoted_count: 4,
+            total_data_crypto_s: 1.5,
+            total_data_crypto_exposed_s: 0.25,
+            data_bytes: 123_456,
+            data_wire_bytes: 131_072,
             per_device: vec![DeviceSummary {
                 device: 1,
                 mode: "cc".into(),
@@ -466,6 +555,9 @@ mod tests {
                 crypto_exposed_s: 0.75,
                 prefetches: 6,
                 promotions: 4,
+                data_bytes: 123_456,
+                data_crypto_s: 1.5,
+                data_crypto_exposed_s: 0.25,
                 ..DeviceSummary::default()
             }],
             ..RunSummary::default()
@@ -482,10 +574,68 @@ mod tests {
         assert_eq!(back.promoted_count, 4);
         assert!((back.sla_attainment - s.sla_attainment).abs() < 1e-12);
         assert!((back.total_crypto_exposed_s - 0.75).abs() < 1e-12);
+        assert!((back.total_data_crypto_s - 1.5).abs() < 1e-12);
+        assert!((back.total_data_crypto_exposed_s - 0.25).abs() < 1e-12);
+        assert_eq!(back.data_bytes, 123_456);
+        assert_eq!(back.data_wire_bytes, 131_072);
         assert_eq!(back.per_device.len(), 1);
         assert_eq!(back.per_device[0].device, 1);
         assert_eq!(back.per_device[0].promotions, 4);
+        assert_eq!(back.per_device[0].data_bytes, 123_456);
+        assert!((back.per_device[0].data_crypto_s - 1.5).abs() < 1e-12);
         assert!((back.per_device[0].util - 0.31).abs() < 1e-12);
+    }
+
+    /// The data-path keys are present exactly when the run priced CC
+    /// batch I/O — a zero-crypto summary serializes without them, so
+    /// `--data-path off` (and No-CC with it on) cannot change a single
+    /// output byte.
+    #[test]
+    fn data_path_keys_absent_when_unused() {
+        let off = RunSummary {
+            per_device: vec![DeviceSummary::default()],
+            ..RunSummary::default()
+        };
+        let text = off.to_json().to_string();
+        assert!(!text.contains("data_"), "unexpected data keys: {text}");
+        let on = RunSummary {
+            total_data_crypto_s: 0.5,
+            total_data_crypto_exposed_s: 0.5,
+            data_bytes: 1000,
+            data_wire_bytes: 1080,
+            per_device: vec![DeviceSummary {
+                data_bytes: 1000,
+                data_crypto_s: 0.5,
+                data_crypto_exposed_s: 0.5,
+                ..DeviceSummary::default()
+            }],
+            ..RunSummary::default()
+        };
+        let text = on.to_json().to_string();
+        assert!(text.contains("total_data_crypto_s"), "{text}");
+        assert!(text.contains("data_wire_bytes"), "{text}");
+        assert!(text.contains("\"data_crypto_s\""), "{text}");
+        let back = RunSummary::from_json(&on.to_json()).unwrap();
+        assert_eq!(back.data_bytes, 1000);
+        assert_eq!(back.per_device[0].data_bytes, 1000);
+        assert!((back.per_device[0].data_crypto_exposed_s - 0.5).abs()
+                < 1e-12);
+        // degenerate crypto-free pricing (--cc-crypto-frac 0): both
+        // levels still report, on the same bytes-based gate
+        let frac0 = RunSummary {
+            data_bytes: 1000,
+            data_wire_bytes: 1080,
+            per_device: vec![DeviceSummary {
+                data_bytes: 1000,
+                ..DeviceSummary::default()
+            }],
+            ..RunSummary::default()
+        };
+        let text = frac0.to_json().to_string();
+        assert!(text.contains("\"data_bytes\""), "{text}");
+        assert!(text.contains("\"data_crypto_s\""),
+                "per-device block must not drop out when crypto is \
+                 zero but bytes moved: {text}");
     }
 
     /// Seeds above 2^53 cannot ride an f64; the string fallback keeps

@@ -24,6 +24,25 @@ pub const TAG_LEN: usize = 32;
 /// Byte length of the per-chunk nonce prepended to each sealed chunk.
 pub const NONCE_LEN: usize = 8;
 
+/// Bytes one sealed chunk occupies on the link for `plaintext_len`
+/// payload bytes: `nonce || ciphertext || tag`.
+pub fn sealed_len(plaintext_len: usize) -> usize {
+    NONCE_LEN + plaintext_len + TAG_LEN
+}
+
+/// Total bytes crossing the PCIe link when a `payload_len`-byte
+/// transfer is staged through `bounce_bytes`-sized sealed chunks:
+/// every chunk carries its own nonce + MAC tag, so CC wire traffic is
+/// amplified by `NONCE_LEN + TAG_LEN` per chunk.  Zero payloads move
+/// no chunks (matching `DmaEngine::transfer`, whose chunk iterator is
+/// empty then).  The timing model budgets *payload* bytes — this
+/// figure is accounting (`RunSummary::data_wire_bytes`), quantifying
+/// the framing overhead the bounce path adds on the wire.
+pub fn wire_bytes(payload_len: usize, bounce_bytes: usize) -> usize {
+    assert!(bounce_bytes > 0);
+    payload_len + payload_len.div_ceil(bounce_bytes) * (NONCE_LEN + TAG_LEN)
+}
+
 /// Simulated GPU identity: what the device "measures" at secure boot.
 #[derive(Debug, Clone)]
 pub struct DeviceEvidence {
@@ -252,6 +271,23 @@ mod tests {
         let sealed = s.seal(b"data");
         assert!(s.open(&sealed[..sealed.len() - 1]).is_err());
         assert!(s.open(&sealed[..NONCE_LEN]).is_err());
+    }
+
+    #[test]
+    fn wire_bytes_matches_actual_sealed_chunks() {
+        // the accounting helper must agree with what sealing really
+        // puts on the link, chunk for chunk
+        let s = session();
+        for (len, bounce) in [(0usize, 1024usize), (1, 1024), (1024, 1024),
+                              (1025, 1024), (10_000, 1024), (10_000, 256)] {
+            let payload = vec![0x5Au8; len];
+            let on_wire: usize = payload.chunks(bounce)
+                .map(|c| s.seal(c).len()).sum();
+            assert_eq!(wire_bytes(len, bounce), on_wire,
+                       "len {len} bounce {bounce}");
+        }
+        assert_eq!(sealed_len(100), NONCE_LEN + 100 + TAG_LEN);
+        assert_eq!(wire_bytes(0, 4096), 0, "empty payloads move nothing");
     }
 
     #[test]

@@ -108,6 +108,65 @@ pub struct DmaEngine {
     stats: DmaStats,
 }
 
+/// Modeled plain-mode transfer budget for `len` bytes, seconds.
+pub fn plain_budget_s(len: usize, bw_plain: f64) -> f64 {
+    len as f64 / bw_plain
+}
+
+/// Modeled CC transfer budget for `len` bytes under an explicit
+/// bounce/pipeline setting: total seconds plus the (total, exposed)
+/// crypto split.  Serialized (`pipeline_depth < 2`) this is
+/// `len/bw_cc` with crypto fully exposed; pipelined, chunk crypto
+/// overlaps the previous chunk's link time and only the fill +
+/// overhang is exposed.
+///
+/// This is the single definition of the CC per-transfer budget: the
+/// real [`DmaEngine`] throttles against it, and the virtual-cost
+/// backends price the inference data path from it
+/// (`engine::backend::price_data_path`), so the two time domains
+/// cannot drift.
+pub fn cc_budget_s(len: usize, bw_cc: f64, bounce_bytes: usize,
+                   pipeline_depth: usize, cc_crypto_frac: f64)
+                   -> (f64, f64, f64) {
+    let per_byte = 1.0 / bw_cc;
+    let frac = cc_crypto_frac.clamp(0.0, 1.0);
+    let crypto_pb = frac * per_byte;
+    let link_pb = (1.0 - frac) * per_byte;
+    let crypto_total = len as f64 * crypto_pb;
+    let link_total = len as f64 * link_pb;
+    if pipeline_depth < 2 {
+        // strictly serialized: every chunk pays crypto + link
+        return (len as f64 * per_byte, crypto_total, crypto_total);
+    }
+    // Two-stage pipeline with `pipeline_depth` staging buffers:
+    // crypto for chunk k may start once buffer (k - depth) has
+    // drained onto the link; the link takes chunks in order.
+    let depth = pipeline_depth;
+    let n_chunks = len.div_ceil(bounce_bytes).max(1);
+    let mut link_ends: Vec<f64> = Vec::with_capacity(n_chunks);
+    let mut crypto_end = 0.0f64;
+    let mut link_end = 0.0f64;
+    for k in 0..n_chunks {
+        let chunk = if (k + 1) * bounce_bytes <= len {
+            bounce_bytes
+        } else {
+            len - k * bounce_bytes
+        };
+        let c = chunk as f64 * crypto_pb;
+        let l = chunk as f64 * link_pb;
+        let buffer_free = if k >= depth {
+            link_ends[k - depth]
+        } else {
+            0.0
+        };
+        crypto_end = crypto_end.max(buffer_free) + c;
+        link_end = link_end.max(crypto_end) + l;
+        link_ends.push(link_end);
+    }
+    let exposed = (link_end - link_total).max(0.0);
+    (link_end, crypto_total, exposed)
+}
+
 impl DmaEngine {
     pub fn new(bw_plain: f64, bw_cc: f64, bounce_bytes: usize) -> DmaEngine {
         assert!(bw_plain > 0.0 && bw_cc > 0.0 && bounce_bytes > 0);
@@ -116,49 +175,10 @@ impl DmaEngine {
                     bounce: Vec::new(), stats: DmaStats::default() }
     }
 
-    /// Modeled CC transfer budget for `len` bytes under the current
-    /// pipeline setting: total seconds plus the (total, exposed) crypto
-    /// split.  Serialized this is `len/bw_cc` with crypto fully
-    /// exposed; pipelined, chunk crypto overlaps the previous chunk's
-    /// link time and only the fill + overhang is exposed.
+    /// This engine's CC budget for `len` bytes (see [`cc_budget_s`]).
     fn cc_budget(&self, len: usize) -> (f64, f64, f64) {
-        let per_byte = 1.0 / self.bw_cc;
-        let frac = self.cc_crypto_frac.clamp(0.0, 1.0);
-        let crypto_pb = frac * per_byte;
-        let link_pb = (1.0 - frac) * per_byte;
-        let crypto_total = len as f64 * crypto_pb;
-        let link_total = len as f64 * link_pb;
-        if self.pipeline_depth < 2 {
-            // strictly serialized: every chunk pays crypto + link
-            return (len as f64 * per_byte, crypto_total, crypto_total);
-        }
-        // Two-stage pipeline with `pipeline_depth` staging buffers:
-        // crypto for chunk k may start once buffer (k - depth) has
-        // drained onto the link; the link takes chunks in order.
-        let depth = self.pipeline_depth;
-        let n_chunks = len.div_ceil(self.bounce_bytes).max(1);
-        let mut link_ends: Vec<f64> = Vec::with_capacity(n_chunks);
-        let mut crypto_end = 0.0f64;
-        let mut link_end = 0.0f64;
-        for k in 0..n_chunks {
-            let chunk = if (k + 1) * self.bounce_bytes <= len {
-                self.bounce_bytes
-            } else {
-                len - k * self.bounce_bytes
-            };
-            let c = chunk as f64 * crypto_pb;
-            let l = chunk as f64 * link_pb;
-            let buffer_free = if k >= depth {
-                link_ends[k - depth]
-            } else {
-                0.0
-            };
-            crypto_end = crypto_end.max(buffer_free) + c;
-            link_end = link_end.max(crypto_end) + l;
-            link_ends.push(link_end);
-        }
-        let exposed = (link_end - link_total).max(0.0);
-        (link_end, crypto_total, exposed)
+        cc_budget_s(len, self.bw_cc, self.bounce_bytes,
+                    self.pipeline_depth, self.cc_crypto_frac)
     }
 
     /// Move `src` into `dst` (pre-sized by the caller), optionally
@@ -173,7 +193,7 @@ impl DmaEngine {
         let (target_s, crypto_total_s, crypto_exposed_s) = match cc {
             None => {
                 dst.copy_from_slice(src);
-                (src.len() as f64 / self.bw_plain, 0.0, 0.0)
+                (plain_budget_s(src.len(), self.bw_plain), 0.0, 0.0)
             }
             Some(session) => {
                 // Chunked: host seals into the reused bounce buffer, the
@@ -366,6 +386,24 @@ mod tests {
         // both sleep out the same plain budget (~25 ms); allow jitter
         let diff = (ta.as_secs_f64() - tb.as_secs_f64()).abs();
         assert!(diff < 0.02, "plain transfers diverged by {diff}s");
+    }
+
+    #[test]
+    fn budget_free_functions_match_the_engine() {
+        // the data-path pricing calls the free functions directly; they
+        // must be the same arithmetic the engine throttles against
+        let mut e = engine_unthrottled();
+        e.bounce_bytes = 1000;
+        e.pipeline_depth = 3;
+        e.cc_crypto_frac = 0.4;
+        assert_eq!(e.cc_budget(12_345),
+                   cc_budget_s(12_345, e.bw_cc, 1000, 3, 0.4));
+        e.pipeline_depth = 0;
+        assert_eq!(e.cc_budget(12_345),
+                   cc_budget_s(12_345, e.bw_cc, 1000, 0, 0.4));
+        // zero-length payloads price to zero in both modes
+        assert_eq!(cc_budget_s(0, e.bw_cc, 1000, 2, 0.5), (0.0, 0.0, 0.0));
+        assert_eq!(plain_budget_s(0, 1e9), 0.0);
     }
 
     #[test]

@@ -46,6 +46,13 @@ pub const PRESETS: &[PresetEntry] = &[
                 predictive prefetch recover, 3 seeds",
         make: cc_recovery,
     },
+    PresetEntry {
+        name: "cc-io",
+        blurb: "prompt/output-size sensitivity of the CC-priced batch \
+                I/O data path (--data-path), vs No-CC and flag-off \
+                baselines",
+        make: cc_io,
+    },
 ];
 
 /// Valid preset names, in table order.
@@ -152,6 +159,38 @@ fn cc_recovery() -> ScenarioSpec {
     }
 }
 
+fn cc_io() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "cc-io".into(),
+        description: "the second pillar of the CC gap: per-batch \
+                      request/response payloads priced through the \
+                      encrypted bounce path; sweeps prompt (tokens-in) \
+                      and output (tokens-out) sizes in both modes, \
+                      keeping one flag-off baseline cell per mode at \
+                      the models' native payload shape".into(),
+        base: vec![
+            ("duration".into(), "30".into()),
+            ("drain".into(), "12".into()),
+            ("mean-rps".into(), "6".into()),
+            ("models".into(), "llama-sim,gemma-sim".into()),
+        ],
+        axes: vec![
+            axis("mode", &["no-cc", "cc"]),
+            axis("data-path", &["off", "on"]),
+            axis("tokens-in", &["16", "512", "4096"]),
+            axis("tokens-out", &["50", "1024"]),
+        ],
+        // the flag-off baseline is payload-size-insensitive by
+        // construction — keep exactly one off cell per mode
+        exclude: vec![
+            rule(&[("data-path", "off"), ("tokens-in", "512")]),
+            rule(&[("data-path", "off"), ("tokens-in", "4096")]),
+            rule(&[("data-path", "off"), ("tokens-out", "1024")]),
+        ],
+        seeds: 2,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -209,5 +248,21 @@ mod tests {
         let g = fleet_mix().expand(&RunConfig::default()).unwrap();
         assert_eq!(g.pruned, 4);
         assert_eq!(g.cells.len(), 14);
+    }
+
+    #[test]
+    fn cc_io_keeps_one_off_baseline_per_mode() {
+        let g = cc_io().expand(&RunConfig::default()).unwrap();
+        // 2 modes x (1 off baseline + 3x2 on payload shapes)
+        assert_eq!(g.cells.len(), 14);
+        assert_eq!(g.pruned, 10);
+        assert_eq!(g.seeds, 2);
+        let off: Vec<_> = g.cells.iter()
+            .filter(|c| !c.cfg.data_path).collect();
+        assert_eq!(off.len(), 2, "one flag-off baseline per mode");
+        assert!(off.iter().all(|c| c.cfg.data_tokens_in == Some(16)
+                               && c.cfg.data_tokens_out == Some(50)));
+        assert!(g.cells.iter().filter(|c| c.cfg.data_path)
+                .any(|c| c.cfg.data_tokens_in == Some(4096)));
     }
 }

@@ -2,7 +2,8 @@
 //! configuration, parsed from JSON (or built in code by the presets).
 //!
 //! A spec names a set of *axes* (mode, pattern, strategy, SLA, rps,
-//! devices, placement, pipeline-depth, prefetch), each with a list of
+//! devices, placement, pipeline-depth, prefetch, data-path,
+//! tokens-in/out), each with a list of
 //! values; expansion takes the cross-product in the canonical
 //! [`AXES`] order (mode varies slowest, exactly the legacy sweep's
 //! nesting), prunes cells matched by *exclusion rules* (conjunctions
@@ -83,6 +84,9 @@ pub const AXES: &[AxisEntry] = &[
     AxisEntry { name: "pipeline-depth", key: "pipeline-depth",
                 check: None },
     AxisEntry { name: "prefetch", key: "prefetch", check: None },
+    AxisEntry { name: "data-path", key: "data-path", check: None },
+    AxisEntry { name: "tokens-in", key: "data-tokens-in", check: None },
+    AxisEntry { name: "tokens-out", key: "data-tokens-out", check: None },
 ];
 
 /// Valid axis names, in table order.
@@ -104,6 +108,18 @@ pub fn axis_hint(name: &str) -> String {
             "0|1 = serialized, >= 2 = pipelined".to_string()
         }
         "prefetch" => "on | off".to_string(),
+        "data-path" => {
+            "on | off — price batch I/O through the CC bounce path"
+                .to_string()
+        }
+        "tokens-in" => {
+            "priced input tokens/request (default: model prompt_len)"
+                .to_string()
+        }
+        "tokens-out" => {
+            "priced output tokens/request (default: model decode_len)"
+                .to_string()
+        }
         other => format!("unknown axis {other:?}"),
     }
 }
@@ -129,6 +145,16 @@ pub fn axis_value(cfg: &RunConfig, axis: &str) -> String {
         "prefetch" => {
             (if cfg.prefetch { "on" } else { "off" }).to_string()
         }
+        "data-path" => {
+            (if cfg.data_path { "on" } else { "off" }).to_string()
+        }
+        // unswept token axes read back as "" (no override in force);
+        // swept values always canonicalize through `set`, so a rule
+        // on these axes only ever matches swept cells
+        "tokens-in" => cfg.data_tokens_in.map(|t| t.to_string())
+            .unwrap_or_default(),
+        "tokens-out" => cfg.data_tokens_out.map(|t| t.to_string())
+            .unwrap_or_default(),
         _ => String::new(),
     }
 }
@@ -512,6 +538,32 @@ mod tests {
         assert!(g.cells[0].label.contains("_rps6"));
         assert!(g.cells[1].label.ends_with("least-loaded"),
                 "{}", g.cells[1].label);
+    }
+
+    #[test]
+    fn data_path_axes_reach_config_and_label() {
+        let mut s = two_by_two();
+        s.axes = vec![axis("data-path", &["off", "on"]),
+                      axis("tokens-in", &["16", "512"]),
+                      axis("tokens-out", &["50"])];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 4);
+        // canonical order: data-path varies slower than tokens-in
+        assert!(!g.cells[0].cfg.data_path);
+        assert_eq!(g.cells[0].cfg.data_tokens_in, Some(16));
+        assert!(g.cells[0].label.ends_with("_tin16_tout50"),
+                "{}", g.cells[0].label);
+        let on = &g.cells[3];
+        assert!(on.cfg.data_path);
+        assert_eq!(on.cfg.data_tokens_in, Some(512));
+        assert_eq!(on.cfg.data_tokens_out, Some(50));
+        assert!(on.label.contains("_io_tin512_tout50"),
+                "{}", on.label);
+        assert_eq!(on.assignment, vec![
+            ("data-path".to_string(), "on".to_string()),
+            ("tokens-in".to_string(), "512".to_string()),
+            ("tokens-out".to_string(), "50".to_string()),
+        ]);
     }
 
     #[test]

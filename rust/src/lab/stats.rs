@@ -162,4 +162,60 @@ mod tests {
         let t = stats_table(&stats);
         assert!(t.contains("| x | 1 |"), "{t}");
     }
+
+    /// One seed: every spread statistic degenerates to the sample —
+    /// stddev exactly 0, p50 == p95 == mean.
+    #[test]
+    fn single_seed_stddev_is_zero() {
+        let stats = aggregate(&[replica("solo", 3.5, 7.0)]);
+        assert_eq!(stats.len(), 1);
+        let s = &stats[0];
+        assert_eq!(s.replicas, 1);
+        assert_eq!(s.latency_mean_s.stddev, 0.0);
+        assert_eq!(s.throughput_rps.stddev, 0.0);
+        assert_eq!(s.latency_mean_s.p50, 3.5);
+        assert_eq!(s.latency_mean_s.p95, 3.5);
+        assert_eq!(s.latency_mean_s.mean, 3.5);
+    }
+
+    /// Two seeds pin the quantile index rounding:
+    /// `idx = round((n-1)·q)`, so with n = 2 both p50 (round(0.5) = 1,
+    /// half away from zero) and p95 (round(0.95) = 1) land on the
+    /// *larger* sample.
+    #[test]
+    fn two_seed_quantile_index_rounding() {
+        let stats = aggregate(&[replica("pair", 2.0, 4.0),
+                                replica("pair", 6.0, 8.0)]);
+        let s = &stats[0];
+        assert_eq!(s.replicas, 2);
+        assert_eq!(s.latency_mean_s.p50, 6.0, "round half away from zero");
+        assert_eq!(s.latency_mean_s.p95, 6.0);
+        assert!((s.latency_mean_s.mean - 4.0).abs() < 1e-12);
+        assert!((s.latency_mean_s.stddev - 2.0).abs() < 1e-12,
+                "population stddev of {{2, 6}}");
+        assert_eq!(s.throughput_rps.p50, 8.0);
+    }
+
+    /// Identical replicas must aggregate to exact, finite statistics —
+    /// no NaN from 0/0 or a degenerate variance anywhere in the row.
+    #[test]
+    fn identical_replicas_aggregate_nan_free() {
+        let cells: Vec<RunSummary> = (0..4)
+            .map(|_| replica("same", 2.5, 5.0)).collect();
+        let stats = aggregate(&cells);
+        let s = &stats[0];
+        assert_eq!(s.replicas, 4);
+        for stat in [&s.latency_mean_s, &s.latency_p99_s,
+                     &s.sla_attainment, &s.throughput_rps, &s.gpu_util,
+                     &s.swap_count] {
+            assert!(stat.mean.is_finite() && stat.stddev.is_finite()
+                    && stat.p50.is_finite() && stat.p95.is_finite(),
+                    "non-finite stat: {stat:?}");
+            assert_eq!(stat.stddev, 0.0, "identical samples spread");
+            assert_eq!(stat.p50, stat.p95, "quantiles of a constant");
+        }
+        assert_eq!(s.latency_mean_s.mean, 2.5);
+        // the rendered table must carry no NaN either
+        assert!(!stats_table(&stats).contains("NaN"));
+    }
 }

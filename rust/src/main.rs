@@ -369,6 +369,10 @@ fn lab_run(cfg: RunConfig) -> anyhow::Result<()> {
         println!("\n## Per-device breakdown\n");
         println!("{per_device}");
     }
+    if let Some(data_path) = &tables.data_path {
+        println!("\n## Batch I/O (CC data path)\n");
+        println!("{data_path}");
+    }
     if let Some(headline) = &tables.headline {
         println!("\n## Headline comparison (paper abstract)\n");
         println!("{headline}");
@@ -413,6 +417,8 @@ struct LabTables {
     stats: Option<String>,
     /// Only when some cell ran a multi-device fleet.
     per_device: Option<String>,
+    /// Only when some cell priced the CC inference data path.
+    data_path: Option<String>,
     /// Only when the grid has both CC and No-CC cells — a one-mode
     /// grid has nothing to ratio against (`lab check` guards the
     /// same way).
@@ -437,6 +443,8 @@ impl LabTables {
             per_device: cells.iter()
                 .any(|c| c.per_device.len() > 1)
                 .then(|| report::per_device_table(cells)),
+            data_path: report::has_data_path(cells)
+                .then(|| report::data_path_table(cells)),
             headline: h.as_ref().map(report::headline_table),
             bands: h.as_ref().map(
                 |h| report::band_table(&report::paper_check(h))),
@@ -455,6 +463,10 @@ impl LabTables {
         if let Some(per_device) = &self.per_device {
             md.push_str(&format!(
                 "\n## Per-device breakdown\n\n{per_device}"));
+        }
+        if let Some(data_path) = &self.data_path {
+            md.push_str(&format!(
+                "\n## Batch I/O (CC data path)\n\n{data_path}"));
         }
         if let Some(headline) = &self.headline {
             md.push_str(&format!(
@@ -534,6 +546,10 @@ fn cmd_report(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
     if cells.iter().any(|c| c.per_device.len() > 1) {
         println!("\n## Per-device breakdown\n");
         println!("{}", report::per_device_table(&cells));
+    }
+    if report::has_data_path(&cells) {
+        println!("\n## Batch I/O (CC data path)\n");
+        println!("{}", report::data_path_table(&cells));
     }
     println!("{}", report::headline_table(&report::headline_ratios(&cells)));
     Ok(())
@@ -620,6 +636,16 @@ fn usage_string() -> String {
          model while a batch\n\
          \x20                        executes; the swap promotes it \
          without a second DMA\n\n\
+         DATA-PATH OPTIONS:\n\
+         \x20 --data-path on|off     price each batch's request/response \
+         payload through the\n\
+         \x20                        CC bounce path (default off; No-CC \
+         timings unchanged\n\
+         \x20                        either way)\n\
+         \x20 --data-tokens-in N     priced input tokens per request \
+         (default: model prompt_len)\n\
+         \x20 --data-tokens-out N    priced output tokens per request \
+         (default: model decode_len)\n\n\
          LAB OPTIONS (lab run|list|compare|check):\n\
          \x20 --preset NAME          built-in scenario preset \
          (`lab list` names them)\n\
@@ -691,6 +717,15 @@ mod tests {
         let usage = usage_string();
         for flag in ["--preset", "--spec", "--threads", "--lab-seeds",
                      "--out", "--synthetic-costs"] {
+            assert!(usage.contains(flag), "usage missing {flag}");
+        }
+    }
+
+    #[test]
+    fn usage_lists_the_data_path_flags() {
+        let usage = usage_string();
+        for flag in ["--data-path", "--data-tokens-in",
+                     "--data-tokens-out"] {
             assert!(usage.contains(flag), "usage missing {flag}");
         }
     }

@@ -31,6 +31,16 @@ pub struct BatchRecord {
     pub unload_s: f64,
     pub exec_s: f64,
     pub io_s: f64,
+    /// Payload bytes of this batch priced by the inference data path
+    /// (`--data-path on`; 0 when off).
+    pub data_bytes: u64,
+    /// Data-path bytes on the link including per-chunk AEAD framing.
+    pub data_wire_bytes: u64,
+    /// Total modeled seal/open work of this batch's payload I/O.
+    pub data_crypto_s: f64,
+    /// Payload crypto not hidden behind the link (== total when the
+    /// chunk pipeline is off).
+    pub data_crypto_exposed_s: f64,
     /// Decrypt-ahead staging issued after this batch's dispatch,
     /// overlapped with its execution.
     pub prefetch_s: f64,
@@ -119,14 +129,17 @@ impl Recorder {
             &dir.join(format!("{label}_batches.csv")),
             &["at_s", "model", "device", "rows", "artifact_batch",
               "swapped", "promoted", "load_s", "unload_s", "exec_s",
-              "io_s", "prefetch_s"])?;
+              "io_s", "data_bytes", "data_wire_bytes", "data_crypto_s",
+              "data_crypto_exposed_s", "prefetch_s"])?;
         for b in &self.batches {
             w.row(&[fmt(b.at_s), b.model.clone(), b.device.to_string(),
                     b.rows.to_string(),
                     b.artifact_batch.to_string(), b.swapped.to_string(),
                     b.promoted.to_string(),
                     fmt(b.load_s), fmt(b.unload_s), fmt(b.exec_s),
-                    fmt(b.io_s), fmt(b.prefetch_s)])?;
+                    fmt(b.io_s), b.data_bytes.to_string(),
+                    b.data_wire_bytes.to_string(), fmt(b.data_crypto_s),
+                    fmt(b.data_crypto_exposed_s), fmt(b.prefetch_s)])?;
         }
         w.flush()?;
 
@@ -184,6 +197,8 @@ mod tests {
             at_s: 2.0, model: "llama-sim".into(), device: 1, rows: 3,
             artifact_batch: 4, swapped: true, promoted: false,
             load_s: 0.4, unload_s: 0.01, exec_s: 0.2, io_s: 0.005,
+            data_bytes: 792, data_wire_bytes: 872,
+            data_crypto_s: 0.002, data_crypto_exposed_s: 0.001,
             prefetch_s: 0.15,
         });
         r.on_monitor(MonitorRecord {
@@ -219,6 +234,14 @@ mod tests {
                    "false");
         let pf = batches.f64_col("prefetch_s").unwrap();
         assert!((pf[0] - 0.15).abs() < 1e-6);
+        assert_eq!(batches.rows[0][batches.col("data_bytes").unwrap()],
+                   "792");
+        assert_eq!(batches.rows[0][batches.col("data_wire_bytes")
+                                   .unwrap()], "872");
+        let dc = batches.f64_col("data_crypto_s").unwrap();
+        assert!((dc[0] - 0.002).abs() < 1e-9);
+        let dce = batches.f64_col("data_crypto_exposed_s").unwrap();
+        assert!((dce[0] - 0.001).abs() < 1e-9);
         let exposed = mon.f64_col("dma_crypto_exposed_s").unwrap();
         assert!((exposed[0] - 0.04).abs() < 1e-6);
     }

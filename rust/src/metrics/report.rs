@@ -45,6 +45,57 @@ pub fn per_device_table(cells: &[RunSummary]) -> String {
     out
 }
 
+/// One cell's data-path gate, shared by `has_data_path` and the table
+/// row filter so the section header and its rows cannot disagree.
+/// Keyed on bytes (not just crypto) so a `--cc-crypto-frac 0` run
+/// still reports its payload traffic.
+fn cell_has_data(c: &RunSummary) -> bool {
+    c.data_bytes > 0 || c.total_data_crypto_s > 0.0
+}
+
+/// True when any cell shipped CC data-path batch I/O — gates the
+/// batch-I/O table the same way fleet cells gate `per_device_table`.
+pub fn has_data_path(cells: &[RunSummary]) -> bool {
+    cells.iter().any(cell_has_data)
+}
+
+/// Fig-3-style batch-I/O table of the CC-priced inference data path:
+/// per cell, the payload volume, the wire amplification the bounce
+/// framing adds, total vs exposed payload crypto, and the crypto cost
+/// per completed request.  Cells that priced no CC batch I/O (flag
+/// off, or No-CC) contribute no rows.
+pub fn data_path_table(cells: &[RunSummary]) -> String {
+    let mut out = String::from(
+        "| cell | mode | data (MB) | wire amp | data crypto (s) | \
+         exposed (s) | crypto/req (ms) | of runtime % |\n\
+         |---|---|---|---|---|---|---|---|\n");
+    for c in cells.iter().filter(|c| cell_has_data(c)) {
+        let amp = if c.data_bytes > 0 {
+            c.data_wire_bytes as f64 / c.data_bytes as f64
+        } else {
+            1.0
+        };
+        let per_req_ms = if c.completed > 0 {
+            c.total_data_crypto_s * 1e3 / c.completed as f64
+        } else {
+            0.0
+        };
+        let share = if c.runtime_s > 0.0 {
+            c.total_data_crypto_s
+                / (c.runtime_s * c.devices.max(1) as f64) * 100.0
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "| {} | {} | {:.3} | {:.3}x | {:.3} | {:.3} | {:.3} | \
+             {:.2} |\n",
+            c.label, c.mode, c.data_bytes as f64 / 1e6, amp,
+            c.total_data_crypto_s, c.total_data_crypto_exposed_s,
+            per_req_ms, share));
+    }
+    out
+}
+
 /// Mean of the headline metrics grouped by one axis of a grid
 /// (`mode` | `pattern` | `strategy` | `sla`), one row per distinct
 /// value in first-appearance order.
@@ -372,6 +423,29 @@ mod tests {
         assert!(t.contains("| fleet | 1 | no-cc |"), "{t}");
         assert_eq!(t.matches("| t |").count(), 0,
                    "single-device cells contribute no rows");
+    }
+
+    #[test]
+    fn data_path_table_skips_cells_without_data_crypto() {
+        let plain = cell("no-cc", 3.0, 0.7, 3.2, 0.3);
+        let mut io = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        io.label = "cc_io".into();
+        io.completed = 200;
+        io.runtime_s = 60.0;
+        io.devices = 1;
+        io.total_data_crypto_s = 1.2;
+        io.total_data_crypto_exposed_s = 0.3;
+        io.data_bytes = 2_000_000;
+        io.data_wire_bytes = 2_160_000;
+        assert!(!has_data_path(&[plain.clone()]));
+        assert!(has_data_path(&[plain.clone(), io.clone()]));
+        let t = data_path_table(&[plain, io]);
+        assert!(t.contains("| cc_io | cc | 2.000 | 1.080x | 1.200 | \
+                            0.300 |"), "{t}");
+        // 1.2 s over 200 requests = 6 ms/req; 1.2/60 = 2% of runtime
+        assert!(t.contains("| 6.000 | 2.00 |"), "{t}");
+        assert_eq!(t.matches("no-cc").count(), 0,
+                   "cells without data crypto contribute no rows");
     }
 
     #[test]

@@ -1,0 +1,142 @@
+//! Effect tests for the CC-priced inference data path
+//! (`--data-path on`): per-batch request/response payloads crossing
+//! the sealed bounce buffers must *cost* something in CC mode, scale
+//! with the priced payload shape (`--data-tokens-in/out`), overlap
+//! under `--pipeline-depth` like swaps, and leave No-CC runs
+//! untouched.  All runs are virtual-time DES over the shared synthetic
+//! cost table, so every figure here is bit-reproducible.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::engine::{EngineBuilder, RunSummary};
+use sincere::runtime::Manifest;
+use sincere::sim::calib::CostModel;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "artifacts missing: run tools/gen_artifacts.py"))
+}
+
+fn toy_costs() -> CostModel {
+    common::toy_costs(manifest())
+}
+
+fn base_cfg(mode: &str) -> RunConfig {
+    let mut cfg = RunConfig {
+        duration_s: 20.0,
+        drain_s: 8.0,
+        mean_rps: 4.0,
+        sla_s: 6.0,
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    };
+    cfg.set("mode", mode).unwrap();
+    cfg.gpu.no_throttle = true;
+    // small bounce chunks so even token payloads span several chunks
+    // and the pipeline has something to overlap
+    cfg.gpu.bounce_bytes = 1024;
+    cfg
+}
+
+fn run(cfg: &RunConfig) -> RunSummary {
+    let cm = toy_costs();
+    EngineBuilder::new(cfg).des(manifest(), &cm).unwrap().run()
+        .unwrap().0
+}
+
+#[test]
+fn cc_data_path_prices_batch_crypto() {
+    let off = run(&base_cfg("cc"));
+    let mut cfg = base_cfg("cc");
+    cfg.data_path = true;
+    let on = run(&cfg);
+    assert_eq!(on.total_data_crypto_s, on.total_data_crypto_exposed_s,
+               "serialized data path exposes every crypto second");
+    assert!(on.total_data_crypto_s > 0.0,
+            "CC batches must pay payload crypto");
+    assert!(on.data_bytes > 0 && on.data_wire_bytes > on.data_bytes,
+            "sealed chunks add framing on the wire: {} vs {}",
+            on.data_wire_bytes, on.data_bytes);
+    assert_eq!(off.total_data_crypto_s, 0.0);
+    assert_eq!(off.data_bytes, 0, "flag off records no payload bytes");
+    // the schedule itself is unchanged — only the payload pricing moved
+    assert_eq!(on.generated, off.generated);
+    // per-device accounting carries the batch crypto
+    assert!((on.per_device[0].data_crypto_s
+             - on.total_data_crypto_s).abs() < 1e-12);
+}
+
+#[test]
+fn pipeline_hides_data_crypto_but_not_work() {
+    let mut serial = base_cfg("cc");
+    serial.data_path = true;
+    // large payloads: many 1 KiB bounce chunks per transfer
+    serial.data_tokens_in = Some(2048);
+    serial.data_tokens_out = Some(1024);
+    let mut pipe = serial.clone();
+    pipe.gpu.pipeline_depth = 2;
+    let s = run(&serial);
+    let p = run(&pipe);
+    assert_eq!(s.total_data_crypto_s, s.total_data_crypto_exposed_s,
+               "serialized exposes all data crypto");
+    assert!(p.total_data_crypto_exposed_s < p.total_data_crypto_s,
+            "pipelined data path must hide crypto behind the link: \
+             exposed {} vs total {}",
+            p.total_data_crypto_exposed_s, p.total_data_crypto_s);
+    assert!(p.total_data_crypto_exposed_s > 0.0,
+            "the fill chunk cannot be hidden");
+}
+
+#[test]
+fn data_crypto_scales_with_priced_payload_shape() {
+    let mut small = base_cfg("cc");
+    small.data_path = true;
+    small.data_tokens_in = Some(16);
+    small.data_tokens_out = Some(16);
+    let mut large = small.clone();
+    large.data_tokens_in = Some(1024);
+    large.data_tokens_out = Some(1024);
+    let s = run(&small);
+    let l = run(&large);
+    assert_eq!(s.generated, l.generated, "same schedule either way");
+    assert!(l.data_bytes > s.data_bytes);
+    assert!(l.total_data_crypto_s > 2.0 * s.total_data_crypto_s,
+            "64x the tokens must dominate the crypto bill: {} vs {}",
+            l.total_data_crypto_s, s.total_data_crypto_s);
+    // wire amplification shrinks as chunks fill up: framing is
+    // per-chunk, so big payloads amortize it better
+    let amp = |c: &RunSummary| c.data_wire_bytes as f64
+        / c.data_bytes as f64;
+    assert!(amp(&l) < amp(&s),
+            "framing overhead must amortize with payload size: \
+             {} vs {}", amp(&l), amp(&s));
+}
+
+#[test]
+fn nocc_run_is_identical_with_data_path_on() {
+    let off = run(&base_cfg("no-cc"));
+    let mut cfg = base_cfg("no-cc");
+    cfg.data_path = true;
+    cfg.data_tokens_in = Some(4096); // must be timing-inert in No-CC
+    let on = run(&cfg);
+    assert_eq!(on.generated, off.generated);
+    assert_eq!(on.completed, off.completed);
+    assert!((on.latency_mean_s - off.latency_mean_s).abs() < 1e-12,
+            "No-CC latency moved: {} vs {}", on.latency_mean_s,
+            off.latency_mean_s);
+    assert!((on.runtime_s - off.runtime_s).abs() < 1e-12);
+    assert_eq!(on.total_data_crypto_s, 0.0,
+               "an unencrypted link has no bounce crypto to price");
+    assert_eq!(on.data_bytes, 0,
+               "No-CC devices record no data-path accounting at all — \
+                that zero is what keeps the summary JSON byte-identical");
+}

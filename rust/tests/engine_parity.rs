@@ -161,6 +161,63 @@ fn parity_matrix_pipeline_and_prefetch() {
     }
 }
 
+/// The data-path extension of the contract (ISSUE 5 acceptance): with
+/// per-batch payload I/O priced through the bounce budget — serialized
+/// and pipelined, CC and No-CC — the DES and the real execution path
+/// (which really ships the payload bytes through the sealed DMA
+/// engine) must stay in exact agreement, data-crypto accounting
+/// included.
+#[test]
+fn parity_matrix_data_path() {
+    for mode in ["no-cc", "cc"] {
+        for depth in [0usize, 2] {
+            for data_path in [false, true] {
+                let mut cfg = parity_cfg(mode, "select-batch+timer");
+                cfg.gpu.pipeline_depth = depth;
+                cfg.data_path = data_path;
+                let (des, real) = run_pair(&cfg);
+                let tag = format!(
+                    "mode={mode} depth={depth} data-path={data_path}");
+                assert_eq!(des.generated, real.generated, "{tag}");
+                assert_eq!(des.completed, real.completed, "{tag}");
+                assert_eq!(des.swap_count, real.swap_count, "{tag}");
+                assert!((des.sla_attainment - real.sla_attainment).abs()
+                        < 1e-9, "{tag}: attainment {} vs {}",
+                        des.sla_attainment, real.sla_attainment);
+                assert!((des.latency_mean_s - real.latency_mean_s).abs()
+                        < 1e-9, "{tag}: latency {} vs {}",
+                        des.latency_mean_s, real.latency_mean_s);
+                assert!((des.runtime_s - real.runtime_s).abs() < 1e-9,
+                        "{tag}: runtime {} vs {}", des.runtime_s,
+                        real.runtime_s);
+                assert!((des.total_data_crypto_s
+                         - real.total_data_crypto_s).abs() < 1e-9,
+                        "{tag}: data crypto {} vs {}",
+                        des.total_data_crypto_s,
+                        real.total_data_crypto_s);
+                assert!((des.total_data_crypto_exposed_s
+                         - real.total_data_crypto_exposed_s).abs()
+                        < 1e-9, "{tag}: exposed data crypto diverged");
+                assert_eq!(des.data_bytes, real.data_bytes, "{tag}");
+                assert_eq!(des.data_wire_bytes, real.data_wire_bytes,
+                           "{tag}");
+                assert!(des.completed > 0, "{tag}: degenerate run");
+                if data_path && mode == "cc" {
+                    assert!(des.total_data_crypto_s > 0.0,
+                            "{tag}: CC data path priced no crypto");
+                    if depth >= 2 {
+                        assert!(des.total_data_crypto_exposed_s
+                                <= des.total_data_crypto_s + 1e-12,
+                                "{tag}: exposed above total");
+                    }
+                } else {
+                    assert_eq!(des.total_data_crypto_s, 0.0, "{tag}");
+                }
+            }
+        }
+    }
+}
+
 /// The fleet extension of the parity contract: a 4-device mixed
 /// CC/No-CC fleet, with devices executing concurrently in virtual
 /// time, must still agree *exactly* between the DES and the real

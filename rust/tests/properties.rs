@@ -1,6 +1,7 @@
 //! Property-based tests over coordinator/substrate invariants, using the
 //! in-repo `util::prop` framework (offline stand-in for proptest).
 
+use sincere::config::RunConfig;
 use sincere::coordinator::queues::ModelQueues;
 use sincere::coordinator::request::Request;
 use sincere::coordinator::strategy::{strategy_by_name, strategy_names,
@@ -288,6 +289,178 @@ fn prop_json_roundtrip() {
     });
 }
 
+// ------------------------------------------------------------- lab::spec
+
+/// The axis pools a random spec draws from — every value is valid, so
+/// expansion failures in these properties are real bugs, not typos.
+const AXIS_POOLS: &[(&str, &[&str])] = &[
+    ("mode", &["no-cc", "cc"]),
+    ("pattern", &["gamma", "bursty", "ramp"]),
+    ("strategy", &["best-batch", "select-batch+timer"]),
+    ("sla", &["6", "12", "18"]),
+    ("rps", &["3", "6", "9"]),
+    ("devices", &["1", "2"]),
+    ("placement", &["affinity", "round-robin", "least-loaded"]),
+    ("pipeline-depth", &["0", "2", "4"]),
+    ("prefetch", &["off", "on"]),
+    ("data-path", &["off", "on"]),
+    ("tokens-in", &["16", "128", "1024"]),
+    ("tokens-out", &["50", "256"]),
+];
+
+/// A random spec over the valid-value pools: each axis is swept with
+/// probability 1/2, with a random nonempty prefix-free subset of its
+/// pool (subset order randomized so declaration order varies too).
+fn random_spec(g: &mut Gen) -> sincere::lab::ScenarioSpec {
+    let mut axes = Vec::new();
+    for (name, pool) in AXIS_POOLS {
+        if !g.bool() {
+            continue;
+        }
+        let n = g.usize_in(1, pool.len());
+        let mut vals: Vec<String> = pool.iter().map(|v| v.to_string())
+            .collect();
+        // random rotation, then truncate: a distinct, shuffled subset
+        let rot = g.usize_in(0, vals.len() - 1);
+        vals.rotate_left(rot);
+        vals.truncate(n);
+        axes.push((name.to_string(), vals));
+    }
+    sincere::lab::ScenarioSpec {
+        name: "prop".into(),
+        description: String::new(),
+        base: Vec::new(),
+        axes,
+        exclude: Vec::new(),
+        seeds: 1 + g.usize_in(0, 3),
+    }
+}
+
+/// Expansion is canonical: the declaration order of the spec's axes is
+/// irrelevant — the expanded labels, configs and seeds depend only on
+/// the set of (axis, values) pairs.
+#[test]
+fn prop_lab_expansion_stable_under_axis_declaration_order() {
+    forall("lab axis order", 60, |g| {
+        let spec = random_spec(g);
+        let base = RunConfig::default();
+        let a = spec.expand(&base).map_err(|e| e.to_string())?;
+        let mut shuffled = spec.clone();
+        shuffled.axes.reverse();
+        if g.bool() && shuffled.axes.len() > 1 {
+            // an extra rotation so more than two orders are exercised
+            let rot = g.usize_in(0, shuffled.axes.len() - 1);
+            shuffled.axes.rotate_left(rot);
+        }
+        let b = shuffled.expand(&base).map_err(|e| e.to_string())?;
+        prop_assert!(a.cells.len() == b.cells.len(),
+                     "cell counts differ: {} vs {}", a.cells.len(),
+                     b.cells.len());
+        for (ca, cb) in a.cells.iter().zip(b.cells.iter()) {
+            prop_assert!(ca.label == cb.label,
+                         "label order drifted: {} vs {}", ca.label,
+                         cb.label);
+            prop_assert!(ca.cfg.seed == cb.cfg.seed, "seed drifted");
+            prop_assert!(ca.assignment == cb.assignment,
+                         "assignment drifted for {}", ca.label);
+        }
+        Ok(())
+    });
+}
+
+/// Exclusion rules only ever *shrink* the grid: every surviving cell
+/// was in the unexcluded expansion, order is preserved, and kept +
+/// pruned add up to the raw grid.
+#[test]
+fn prop_lab_exclusions_only_shrink() {
+    forall("lab exclusions shrink", 60, |g| {
+        let mut spec = random_spec(g);
+        spec.seeds = 1;
+        let base = RunConfig::default();
+        let full = spec.expand(&base).map_err(|e| e.to_string())?;
+
+        // random rules drawn from the swept axes' own (valid) values
+        let mut with_rules = spec.clone();
+        for _ in 0..g.usize_in(1, 3) {
+            if spec.axes.is_empty() {
+                break;
+            }
+            let rule: Vec<(String, String)> = (0..g.usize_in(1, 2))
+                .map(|_| {
+                    let (name, vals) = g.choose(&spec.axes);
+                    (name.clone(), g.choose(vals).clone())
+                })
+                .collect();
+            with_rules.exclude.push(rule);
+        }
+        let pruned_grid = match with_rules.expand(&base) {
+            Ok(grid) => grid,
+            // shrinking to nothing is still shrinking — the hard error
+            // is the lab refusing to run an empty grid
+            Err(e) if e.to_string().contains("empty grid") => {
+                return Ok(());
+            }
+            Err(e) => return Err(e.to_string()),
+        };
+        prop_assert!(pruned_grid.cells.len() <= full.cells.len(),
+                     "exclusions grew the grid");
+        prop_assert!(pruned_grid.cells.len() + pruned_grid.pruned
+                     == full.cells.len() + full.pruned,
+                     "kept + pruned must cover the raw grid");
+        // surviving cells appear in the full grid, in the same order
+        let full_labels: Vec<&str> = full.cells.iter()
+            .map(|c| c.label.as_str()).collect();
+        let mut cursor = 0usize;
+        for c in &pruned_grid.cells {
+            let pos = full_labels[cursor..].iter()
+                .position(|l| *l == c.label);
+            prop_assert!(pos.is_some(),
+                         "cell {} not a subsequence of the full grid",
+                         c.label);
+            cursor += pos.unwrap() + 1;
+        }
+        Ok(())
+    });
+}
+
+/// Replica seeds are unique per cell×replica: within a cell the seeds
+/// are distinct with replica 0 keeping the base seed, and the flattened
+/// (cell, replica) job list covers every pair exactly once.
+#[test]
+fn prop_lab_replica_seeds_unique_per_cell() {
+    forall("lab replica seeds", 60, |g| {
+        let spec = random_spec(g);
+        let base = RunConfig { seed: g.u64(), ..RunConfig::default() };
+        let grid = spec.expand(&base).map_err(|e| e.to_string())?;
+        let seeds = 1 + g.usize_in(0, 4);
+        let jobs = grid.jobs(seeds);
+        prop_assert!(jobs.len() == grid.cells.len() * seeds,
+                     "job count {} != cells {} x seeds {seeds}",
+                     jobs.len(), grid.cells.len());
+        let mut pairs = std::collections::BTreeSet::new();
+        for job in &jobs {
+            prop_assert!(pairs.insert((job.cell, job.replica)),
+                         "duplicate (cell, replica) = ({}, {})",
+                         job.cell, job.replica);
+            prop_assert!(
+                job.cfg.seed == sincere::lab::spec::replica_seed(
+                    grid.cells[job.cell].cfg.seed, job.replica),
+                "seed not derived from (base, replica)");
+        }
+        for ci in 0..grid.cells.len() {
+            let cell_seeds: std::collections::BTreeSet<u64> = jobs.iter()
+                .filter(|j| j.cell == ci).map(|j| j.cfg.seed).collect();
+            prop_assert!(cell_seeds.len() == seeds,
+                         "cell {ci}: {} distinct seeds for {seeds} \
+                          replicas", cell_seeds.len());
+        }
+        // replica 0 reproduces the configured seed exactly
+        prop_assert!(jobs[0].cfg.seed == grid.cells[0].cfg.seed,
+                     "replica 0 must keep the base seed");
+        Ok(())
+    });
+}
+
 // --------------------------------------------------------------- traffic
 
 /// All patterns: arrivals sorted, within range, and nonempty at sane
@@ -316,4 +489,75 @@ fn prop_traffic_patterns_sane() {
                      "{name}@{mean}: realized {realized}");
         Ok(())
     });
+}
+
+/// Deterministic-RNG regression across every traffic generator: the
+/// same seed must reproduce the arrival sequence *exactly* (times and
+/// model assignments), and different seeds must diverge.  This is the
+/// substrate of every replay guarantee in the repo — lab replica
+/// seeding, the golden summaries, DES-vs-real parity.
+#[test]
+fn prop_traffic_generators_deterministic_in_seed() {
+    let models = vec!["llama-sim".to_string(), "gemma-sim".to_string()];
+    forall("traffic rng determinism", 30, |g| {
+        let seed = g.u64();
+        let mean = g.f64_in(0.5, 8.0);
+        let dur = g.f64_in(60.0, 400.0);
+        for name in sincere::traffic::PATTERN_NAMES {
+            let p = sincere::traffic::pattern_by_name(name).unwrap();
+            let a = p.generate(dur, mean,
+                               &models,
+                               &mut sincere::traffic::rng::Pcg64::new(seed));
+            let b = p.generate(dur, mean,
+                               &models,
+                               &mut sincere::traffic::rng::Pcg64::new(seed));
+            prop_assert!(a == b,
+                         "{name}: same seed {seed} diverged \
+                          ({} vs {} arrivals)", a.len(), b.len());
+            let c = p.generate(
+                dur, mean, &models,
+                &mut sincere::traffic::rng::Pcg64::new(seed ^ 0x1));
+            prop_assert!(a != c,
+                         "{name}: seeds {seed} and {} gave identical \
+                          sequences", seed ^ 0x1);
+        }
+        Ok(())
+    });
+}
+
+/// Trace emit/replay is part of the determinism contract too: the same
+/// seed writes byte-identical jsonl, and replay returns exactly what
+/// was written.
+#[test]
+fn trace_roundtrip_deterministic_in_seed() {
+    let models = vec!["llama-sim".to_string()];
+    let dir = std::env::temp_dir().join("sincere_trace_prop");
+    std::fs::create_dir_all(&dir).unwrap();
+    let write = |seed: u64, path: &std::path::Path| {
+        let p = sincere::traffic::pattern_by_name("gamma").unwrap();
+        let arr = p.generate(
+            120.0, 3.0, &models,
+            &mut sincere::traffic::rng::Pcg64::new(seed));
+        let mut prompts =
+            sincere::workload::promptgen::PromptGen::new(seed ^ 0xBEEF, 24);
+        sincere::traffic::trace::write_trace(path, &arr, &mut prompts)
+            .unwrap();
+        arr
+    };
+    let a = write(9, &dir.join("a.jsonl"));
+    let b = write(9, &dir.join("b.jsonl"));
+    assert_eq!(std::fs::read(dir.join("a.jsonl")).unwrap(),
+               std::fs::read(dir.join("b.jsonl")).unwrap(),
+               "same seed must write byte-identical traces");
+    let c = write(10, &dir.join("c.jsonl"));
+    assert_ne!(a, c, "different seeds must write different traces");
+    assert_eq!(a, b);
+    let back = sincere::traffic::trace::read_trace(&dir.join("a.jsonl"))
+        .unwrap();
+    assert_eq!(back.len(), a.len());
+    for (t, arr) in back.iter().zip(&a) {
+        assert!((t.at_s - arr.at_s).abs() < 1e-9);
+        assert_eq!(t.model, arr.model);
+        assert!(!t.prompt.is_empty(), "trace prompts must replay");
+    }
 }
