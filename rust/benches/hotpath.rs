@@ -71,6 +71,7 @@ fn main() {
                 model: "m".into(),
                 tokens: vec![1; 16],
                 arrival_s: i as f64,
+                class: 0,
             });
         }
         std::hint::black_box(q.pop_n("m", 16));

@@ -88,6 +88,32 @@ pub struct RunConfig {
     /// the model's `decode_len`).
     pub data_tokens_out: Option<usize>,
 
+    // ---- multi-tenant configuration (`tenancy` module) ----
+    /// Synthetic catalog size: replace `models` with N `cat-*`
+    /// families cloned from the manifest with cycled size multipliers
+    /// (0 = off; DES/lab only — `serve` refuses it).
+    pub catalog: usize,
+    /// Zipf popularity skew over the model list, rank order = list
+    /// order (None = the pre-tenancy uniform model draw).
+    pub zipf_skew: Option<f64>,
+    /// Admission policy name, see `tenancy::admission::ADMISSIONS`
+    /// ("none" = queue everything, the pre-tenancy behavior).
+    pub admission: String,
+    /// Per-tenant SLA classes (gold/silver/free) with distinct
+    /// deadlines and admission weights.
+    pub sla_classes: bool,
+    /// Diurnal sinusoid amplitude in [0, 1) composed over the base
+    /// traffic pattern (0 = off).
+    pub diurnal_amp: f64,
+    /// Diurnal period, seconds (0 = one period per run).
+    pub diurnal_period_s: f64,
+    /// Flash-crowd rate multiplier inside the flash window (1 = off).
+    pub flash_mult: f64,
+    /// Flash-crowd window start, seconds.
+    pub flash_start_s: f64,
+    /// Flash-crowd window length, seconds (0 = off).
+    pub flash_dur_s: f64,
+
     // ---- scenario-lab configuration (`lab` command) ----
     /// Built-in preset for `lab run` (`lab list` names them).
     pub lab_preset: Option<String>,
@@ -135,6 +161,15 @@ impl Default for RunConfig {
             data_path: false,
             data_tokens_in: None,
             data_tokens_out: None,
+            catalog: 0,
+            zipf_skew: None,
+            admission: "none".into(),
+            sla_classes: false,
+            diurnal_amp: 0.0,
+            diurnal_period_s: 0.0,
+            flash_mult: 1.0,
+            flash_start_s: 0.0,
+            flash_dur_s: 0.0,
             lab_preset: None,
             lab_spec: None,
             lab_threads: 0,
@@ -213,6 +248,25 @@ impl RunConfig {
                 self.data_tokens_out = Some(value.parse().map_err(
                     |_| anyhow::anyhow!("bad --data-tokens-out {value:?}"))?);
             }
+            "catalog" => {
+                self.catalog = value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --catalog {value:?}"))?;
+            }
+            "zipf-skew" => {
+                self.zipf_skew = match value.trim() {
+                    "off" | "none" | "" => None,
+                    v => Some(parse_f64(key, v)?),
+                };
+            }
+            "admission" => self.admission = value.to_string(),
+            "sla-classes" => self.sla_classes = parse_bool(key, value)?,
+            "diurnal-amp" => self.diurnal_amp = parse_f64(key, value)?,
+            "diurnal-period" => {
+                self.diurnal_period_s = parse_f64(key, value)?;
+            }
+            "flash-mult" => self.flash_mult = parse_f64(key, value)?,
+            "flash-start" => self.flash_start_s = parse_f64(key, value)?,
+            "flash-dur" => self.flash_dur_s = parse_f64(key, value)?,
             "preset" => self.lab_preset = Some(value.to_string()),
             "spec" => self.lab_spec = Some(PathBuf::from(value)),
             "threads" => {
@@ -282,6 +336,24 @@ impl RunConfig {
         if let Some(t) = self.data_tokens_out {
             base.push_str(&format!("_tout{t}"));
         }
+        if self.catalog > 0 {
+            base.push_str(&format!("_cat{}", self.catalog));
+        }
+        if let Some(s) = self.zipf_skew {
+            base.push_str(&format!("_zipf{s}"));
+        }
+        if self.diurnal_amp > 0.0 {
+            base.push_str(&format!("_diu{}", self.diurnal_amp));
+        }
+        if self.flash_mult != 1.0 && self.flash_dur_s > 0.0 {
+            base.push_str(&format!("_flash{}", self.flash_mult));
+        }
+        if self.admission != "none" {
+            base.push_str(&format!("_adm-{}", self.admission));
+        }
+        if self.sla_classes {
+            base.push_str("_cls");
+        }
         base
     }
 
@@ -335,9 +407,24 @@ impl RunConfig {
         if let Some(s) = self.lab_seeds {
             anyhow::ensure!(s >= 1, "lab-seeds must be >= 1");
         }
+        if let Some(s) = self.zipf_skew {
+            anyhow::ensure!(s.is_finite() && s >= 0.0,
+                            "zipf-skew must be >= 0");
+        }
+        anyhow::ensure!(
+            self.diurnal_amp.is_finite()
+                && (0.0..1.0).contains(&self.diurnal_amp),
+            "diurnal-amp must be in [0,1) so the rate stays positive");
+        anyhow::ensure!(self.diurnal_period_s >= 0.0,
+                        "diurnal-period must be >= 0");
+        anyhow::ensure!(self.flash_mult.is_finite() && self.flash_mult > 0.0,
+                        "flash-mult must be > 0");
+        anyhow::ensure!(self.flash_start_s >= 0.0 && self.flash_dur_s >= 0.0,
+                        "flash window must be non-negative");
         crate::traffic::pattern_by_name(&self.pattern)?;
         crate::coordinator::strategy_by_name(&self.strategy)?;
         crate::coordinator::placement_by_name(&self.placement)?;
+        crate::tenancy::admission::admission_by_name(&self.admission)?;
         Ok(())
     }
 }
@@ -503,6 +590,50 @@ mod tests {
         assert!(c.set("data-path", "maybe").is_err());
         assert!(c.set("data-tokens-in", "-3").is_err());
         assert!(c.set("data-tokens-out", "lots").is_err());
+    }
+
+    #[test]
+    fn tenancy_flags() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.catalog, 0);
+        assert_eq!(c.zipf_skew, None);
+        assert_eq!(c.admission, "none");
+        assert!(!c.sla_classes, "tenancy must default fully off");
+        c.set("catalog", "12").unwrap();
+        c.set("zipf-skew", "1.1").unwrap();
+        c.set("admission", "class-weighted").unwrap();
+        c.set("sla-classes", "on").unwrap();
+        c.set("diurnal-amp", "0.4").unwrap();
+        c.set("flash-mult", "3").unwrap();
+        c.set("flash-start", "5").unwrap();
+        c.set("flash-dur", "4").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.catalog, 12);
+        assert_eq!(c.zipf_skew, Some(1.1));
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_cat12_zipf1.1\
+                    _diu0.4_flash3_adm-class-weighted_cls");
+        c.set("zipf-skew", "off").unwrap();
+        assert_eq!(c.zipf_skew, None);
+        // everything off leaves pre-tenancy labels untouched
+        let base = RunConfig::default();
+        assert_eq!(base.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18");
+        // bad values
+        assert!(c.set("catalog", "many").is_err());
+        assert!(c.set("sla-classes", "maybe").is_err());
+        let mut bad = RunConfig::default();
+        bad.admission = "fifo".into();
+        assert!(bad.validate().is_err(), "unknown admission must fail");
+        let mut bad = RunConfig::default();
+        bad.diurnal_amp = 1.0;
+        assert!(bad.validate().is_err(), "amp 1 would zero the rate");
+        let mut bad = RunConfig::default();
+        bad.zipf_skew = Some(-0.5);
+        assert!(bad.validate().is_err());
+        let mut bad = RunConfig::default();
+        bad.flash_mult = 0.0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

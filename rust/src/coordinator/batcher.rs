@@ -87,7 +87,7 @@ mod tests {
 
     fn req(id: u64) -> Request {
         Request { id, model: "llama-sim".into(), tokens: vec![0; 16],
-                  arrival_s: id as f64 }
+                  arrival_s: id as f64, class: 0 }
     }
 
     fn gpu(capacity: u64) -> SimGpu {

@@ -291,6 +291,7 @@ fn handle_conn(mut stream: TcpStream, id: u64, start: Instant,
                 model: model.clone(),
                 tokens: tokenize(prompt, *prompt_len, *vocab),
                 arrival_s: start.elapsed().as_secs_f64(),
+                class: 0,
             };
             let (rtx, rrx) = mpsc::channel();
             if tx.send(Job { req, reply: rtx }).is_err() {

@@ -89,6 +89,46 @@ impl ModelQueues {
         }
         out
     }
+
+    /// Per-class expiry: drop requests strictly past their own
+    /// deadline (`deadline_at` maps a request to its absolute deadline
+    /// in seconds).  Unlike [`expire`], deadlines differ per request,
+    /// so expired entries are no longer a queue prefix — this scans
+    /// each queue fully, preserving the order of survivors.  Only used
+    /// when `--sla-classes` is on; the uniform path keeps the exact
+    /// prefix-pop behavior golden runs pin.
+    pub fn expire_by<F>(&mut self, now_s: f64, deadline_at: F)
+                        -> Vec<Request>
+    where
+        F: Fn(&Request) -> f64,
+    {
+        let mut out = Vec::new();
+        for (_, q) in self.queues.iter_mut() {
+            let mut kept = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if now_s > deadline_at(&r) {
+                    out.push(r);
+                } else {
+                    kept.push_back(r);
+                }
+            }
+            *q = kept;
+        }
+        out
+    }
+
+    /// Queued requests per tenant class (admission's `class-weighted`
+    /// policy input).  Scans every queue — cheap at sim queue depths
+    /// and identical in DES and real-virtual runs.
+    pub fn class_counts(&self) -> [u64; crate::tenancy::N_CLASSES] {
+        let mut counts = [0u64; crate::tenancy::N_CLASSES];
+        for q in self.queues.values() {
+            for r in q {
+                counts[r.class as usize % crate::tenancy::N_CLASSES] += 1;
+            }
+        }
+        counts
+    }
 }
 
 #[cfg(test)]
@@ -97,7 +137,7 @@ mod tests {
 
     fn req(id: u64, model: &str, at: f64) -> Request {
         Request { id, model: model.into(), tokens: vec![0; 4],
-                  arrival_s: at }
+                  arrival_s: at, class: 0 }
     }
 
     #[test]
@@ -182,6 +222,67 @@ mod tests {
         let dropped = q.expire(10.0 + 1e-9, 6.0);
         assert_eq!(dropped.len(), 1, "just past the deadline expires");
         assert!(q.is_empty());
+    }
+
+    #[test]
+    fn expire_by_honors_per_class_deadlines() {
+        let mut q = ModelQueues::new();
+        let mut gold = req(1, "a", 0.0);
+        gold.class = 0; // deadline 3.0 at sla 6
+        let mut free = req(2, "a", 0.0);
+        free.class = 2; // deadline 9.0
+        q.push(gold);
+        q.push(free);
+        let sla = 6.0;
+        let deadline = |r: &Request| {
+            r.arrival_s + crate::tenancy::class_deadline_s(r.class, sla)
+        };
+        // t=3: gold exactly at its deadline — kept (boundary matches
+        // `expire`'s strict comparison)
+        assert!(q.expire_by(3.0, deadline).is_empty());
+        // t=4: gold past its window, free (mid-queue survivor order
+        // preserved) still live
+        let dropped: Vec<u64> = q.expire_by(4.0, deadline).iter()
+            .map(|r| r.id).collect();
+        assert_eq!(dropped, vec![1]);
+        assert_eq!(q.len("a"), 1);
+        assert_eq!(q.pop_n("a", 1)[0].id, 2);
+    }
+
+    #[test]
+    fn expire_by_keeps_survivor_order_across_gaps() {
+        // mixed deadlines mean expiry can hit the *middle* of a queue;
+        // the survivors around the gap must keep FIFO order
+        let mut q = ModelQueues::new();
+        for (id, at, class) in [(1, 0.0, 2), (2, 1.0, 0), (3, 2.0, 2)] {
+            let mut r = req(id, "a", at);
+            r.class = class;
+            q.push(r);
+        }
+        let deadline = |r: &Request| {
+            r.arrival_s + crate::tenancy::class_deadline_s(r.class, 6.0)
+        };
+        let dropped: Vec<u64> = q.expire_by(5.0, deadline).iter()
+            .map(|r| r.id).collect();
+        assert_eq!(dropped, vec![2], "only the gold in the middle dies");
+        let rest: Vec<u64> = q.pop_n("a", 10).iter().map(|r| r.id)
+            .collect();
+        assert_eq!(rest, vec![1, 3]);
+    }
+
+    #[test]
+    fn class_counts_cover_all_queues() {
+        let mut q = ModelQueues::new();
+        assert_eq!(q.class_counts(), [0, 0, 0]);
+        for (id, model, class) in [(1, "a", 0), (2, "a", 2),
+                                   (3, "b", 2), (4, "b", 1)] {
+            let mut r = req(id, model, 0.0);
+            r.class = class;
+            q.push(r);
+        }
+        assert_eq!(q.class_counts(), [1, 1, 2]);
+        q.pop_n("b", 2);
+        assert_eq!(q.class_counts(), [1, 1, 0]);
     }
 
     #[test]

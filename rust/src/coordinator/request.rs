@@ -14,6 +14,10 @@ pub struct Request {
     pub tokens: Vec<i32>,
     /// Arrival time, seconds since experiment start.
     pub arrival_s: f64,
+    /// Tenant SLA class (`tenancy::CLASS_NAMES` index, 0 = gold).
+    /// Always 0 when `--sla-classes` is off, so pre-tenancy behavior
+    /// is unchanged.
+    pub class: u8,
 }
 
 /// A finished request with its measured timeline.

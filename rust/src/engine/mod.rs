@@ -43,7 +43,7 @@ mod des;
 mod real;
 mod summary;
 
-use std::collections::{HashMap, VecDeque};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -62,6 +62,12 @@ use crate::coordinator::swap::SwapStats;
 use crate::gpu::CcMode;
 use crate::metrics::recorder::{BatchRecord, MonitorRecord, Recorder};
 use crate::metrics::system::sample_proc;
+use crate::tenancy::admission::{admission_by_name, queue_cap, AdmitCtx,
+                                AdmissionPolicy};
+use crate::tenancy::zipf::Zipf;
+use crate::tenancy::{assign_class, class_deadline_s, jain_fairness,
+                     TenancyStats, CLASS_NAMES, N_CLASSES};
+use crate::traffic::compose;
 use crate::traffic::pattern_by_name;
 use crate::traffic::rng::Pcg64;
 use crate::workload::promptgen::PromptGen;
@@ -71,7 +77,8 @@ pub use backend::{BatchOutcome, DataPathOutcome, DeviceSnapshot,
 pub use clock::{Clock, VirtualClock, WallClock};
 pub use des::DesBackend;
 pub use real::RealBackend;
-pub use summary::{DeviceSummary, RunSummary};
+pub use summary::{ClassSummary, DeviceSummary, RunSummary,
+                  TenancySummary};
 
 use summary::summarize;
 
@@ -279,6 +286,44 @@ fn snapshot_all(backend: &dyn ExecBackend) -> Vec<DeviceSnapshot> {
     (0..backend.n_devices()).map(|d| backend.snapshot(d)).collect()
 }
 
+/// Assemble the admission gate's view of one arriving request.  Every
+/// field derives from the virtual-time domain — queue lengths, cost
+/// table estimates, the engine's own exec-EWMA — so DES and
+/// real-virtual runs shed exactly the same requests (parity-pinned).
+/// Load is estimated like [`build_views`]: the most favourable free
+/// device, falling back to device 0 when the fleet is saturated.
+#[allow(clippy::too_many_arguments)]
+fn admit_ctx(r: &Request, now_s: f64, queues: &ModelQueues,
+             cfg: &RunConfig, queue_cap: usize,
+             backend: &dyn ExecBackend,
+             exec_est: &HashMap<String, f64>,
+             busy_until: &[f64]) -> AdmitCtx {
+    let mut est_load = f64::INFINITY;
+    for d in 0..backend.n_devices() {
+        if busy_until[d] <= now_s {
+            est_load = est_load.min(backend.est_load_s(&r.model, d));
+        }
+    }
+    if !est_load.is_finite() {
+        est_load = backend.est_load_s(&r.model, 0);
+    }
+    AdmitCtx {
+        now_s,
+        arrival_s: r.arrival_s,
+        class: r.class,
+        sla_s: cfg.sla_s,
+        classes_on: cfg.sla_classes,
+        queue_len: queues.len(&r.model),
+        total_queued: queues.total_len(),
+        class_queued: queues.class_counts(),
+        queue_cap,
+        est_load_s: est_load,
+        est_exec_s: exec_est.get(&r.model).copied()
+            .unwrap_or_else(|| backend.initial_exec_est_s(&r.model)),
+        obs: backend.obs(&r.model),
+    }
+}
+
 impl Engine<'_> {
     /// Run the experiment to completion and assemble the summary.
     ///
@@ -293,10 +338,40 @@ impl Engine<'_> {
         // ---------------- arrival schedule (open loop) ----------------
         let mut rng = Pcg64::new(cfg.seed);
         let pattern = pattern_by_name(&cfg.pattern)?;
-        let arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps,
-                                        &self.models, &mut rng);
+        let mut arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps,
+                                            &self.models, &mut rng);
+        // Zipf popularity: re-route each arrival to a rank drawn from
+        // a dedicated forked stream (rank order = model-list order).
+        // The fork draws from `rng`, so it only happens when the flag
+        // is set — the off path touches no extra RNG state and stays
+        // byte-identical.
+        if let Some(skew) = cfg.zipf_skew {
+            let zipf = Zipf::new(self.models.len(), skew);
+            let mut zrng = rng.fork(0x21BF);
+            for a in &mut arrivals {
+                a.model = self.models[zipf.sample(&mut zrng)].clone();
+            }
+        }
+        // diurnal/flash composition: a deterministic monotone time
+        // warp over the base pattern — zero RNG draws, no-op when off
+        let shape = compose::Shape {
+            diurnal_amp: cfg.diurnal_amp,
+            diurnal_period_s: cfg.diurnal_period_s,
+            flash_mult: cfg.flash_mult,
+            flash_start_s: cfg.flash_start_s,
+            flash_dur_s: cfg.flash_dur_s,
+        };
+        if shape.is_active() {
+            compose::warp(&mut arrivals, cfg.duration_s, &shape);
+        }
         let generated = arrivals.len() as u64;
         let mut prompts = PromptGen::new(cfg.seed ^ 0xBEEF, 24);
+        // tenant class assignment, again from a gated fork
+        let mut crng = if cfg.sla_classes {
+            Some(rng.fork(0xC1A5))
+        } else {
+            None
+        };
         let schedule: Vec<Request> = arrivals.iter().enumerate()
             .map(|(i, a)| Request {
                 id: i as u64,
@@ -304,7 +379,27 @@ impl Engine<'_> {
                 tokens: self.backend.tokenize_prompt(
                     &a.model, &prompts.next_prompt(&a.model)),
                 arrival_s: a.at_s,
+                class: crng.as_mut().map(assign_class).unwrap_or(0),
             }).collect();
+
+        // ---------------- tenancy state --------------------------------
+        // the admission gate and per-class counters; active only when a
+        // tenancy feature is on, so the summary of a plain run carries
+        // no tenancy key (byte-identity contract)
+        let mut gate: Option<Box<dyn AdmissionPolicy>> =
+            if cfg.admission != "none" {
+                Some(admission_by_name(&cfg.admission)?)
+            } else {
+                None
+            };
+        let tenancy_on = gate.is_some() || cfg.sla_classes;
+        let qcap = queue_cap(cfg.mean_rps, cfg.sla_s);
+        let mut tstats = TenancyStats::default();
+        if tenancy_on {
+            for r in &schedule {
+                tstats.generated[r.class as usize % N_CLASSES] += 1;
+            }
+        }
 
         // ---------------- clock + ingest + monitor --------------------
         let stop = Arc::new(AtomicBool::new(false));
@@ -353,7 +448,10 @@ impl Engine<'_> {
         let hard_stop_s = cfg.duration_s + cfg.drain_s;
 
         loop {
-            // ingest everything due by now
+            // ingest everything due by now; the admission gate sees
+            // each request *before* it is queued and may shed it —
+            // shed requests are ingested (counted, rated) but never
+            // occupy a queue, and miss their SLA by definition
             match &mut ingest {
                 Ingest::Virtual(pending) => {
                     let now = clock.now_s();
@@ -363,16 +461,42 @@ impl Engine<'_> {
                         let r = pending.pop_front().unwrap();
                         rates.on_arrival(&r.model, r.arrival_s);
                         ingested += 1;
+                        if let Some(g) = gate.as_mut() {
+                            let ctx = admit_ctx(
+                                &r, now, &queues, &cfg, qcap,
+                                self.backend.as_ref(), &exec_est,
+                                &busy_until);
+                            if !g.admit(&ctx) {
+                                sla.on_unserved(1);
+                                tstats.shed[r.class as usize
+                                            % N_CLASSES] += 1;
+                                continue;
+                            }
+                        }
                         queues.push(r);
                     }
                 }
                 Ingest::Wall { rx, open, .. } => loop {
                     match rx.try_recv() {
                         Ok(r) => {
+                            let now = clock.now_s();
                             rates.on_arrival(&r.model, r.arrival_s);
                             ingested += 1;
-                            last_progress_s = clock.now_s();
-                            queues.push(r);
+                            last_progress_s = now;
+                            let admit = match gate.as_mut() {
+                                Some(g) => g.admit(&admit_ctx(
+                                    &r, now, &queues, &cfg, qcap,
+                                    self.backend.as_ref(), &exec_est,
+                                    &busy_until)),
+                                None => true,
+                            };
+                            if admit {
+                                queues.push(r);
+                            } else {
+                                sla.on_unserved(1);
+                                tstats.shed[r.class as usize
+                                            % N_CLASSES] += 1;
+                            }
                         }
                         Err(mpsc::TryRecvError::Empty) => break,
                         Err(mpsc::TryRecvError::Disconnected) => {
@@ -385,10 +509,24 @@ impl Engine<'_> {
 
             let t = clock.now_s();
             // SLA expiry: overdue queued requests are unfulfilled
-            // (§III-C3)
-            let expired = queues.expire(t, cfg.sla_s);
+            // (§III-C3).  With SLA classes on, each request carries
+            // its class deadline; the uniform path keeps the exact
+            // prefix-pop behavior the goldens pin.
+            let expired = if cfg.sla_classes {
+                let sla_s = cfg.sla_s;
+                queues.expire_by(t, |r| {
+                    r.arrival_s + class_deadline_s(r.class, sla_s)
+                })
+            } else {
+                queues.expire(t, cfg.sla_s)
+            };
             if !expired.is_empty() {
                 sla.on_unserved(expired.len() as u64);
+                if tenancy_on {
+                    for r in &expired {
+                        tstats.expired[r.class as usize % N_CLASSES] += 1;
+                    }
+                }
                 last_progress_s = t;
             }
             if t >= hard_stop_s {
@@ -552,6 +690,13 @@ impl Engine<'_> {
                             device: dev,
                         };
                         let met = sla.on_complete(&c);
+                        if tenancy_on {
+                            let cls = r.class as usize % N_CLASSES;
+                            tstats.completed[cls] += 1;
+                            if met {
+                                tstats.met[cls] += 1;
+                            }
+                        }
                         recorder.on_complete(c, met);
                     }
                     recorder.on_batch(BatchRecord {
@@ -610,8 +755,57 @@ impl Engine<'_> {
             .map(|d| self.backend.swap_stats(d)).collect();
         let dev_modes: Vec<CcMode> = (0..n_dev)
             .map(|d| self.backend.mode(d)).collect();
+        // tenancy block: only assembled when a tenancy feature ran, so
+        // plain summaries carry no tenancy key at all
+        let tenancy = tenancy_on.then(|| {
+            let mut churn: BTreeMap<String, u64> = BTreeMap::new();
+            for st in &dev_stats {
+                for (m, load_s) in &st.load_samples {
+                    if *load_s > 0.0 {
+                        *churn.entry(m.clone()).or_insert(0) += 1;
+                    }
+                }
+            }
+            let classes: Vec<ClassSummary> = if cfg.sla_classes {
+                (0..N_CLASSES).map(|c| ClassSummary {
+                    name: CLASS_NAMES[c].to_string(),
+                    generated: tstats.generated[c],
+                    completed: tstats.completed[c],
+                    met: tstats.met[c],
+                    shed: tstats.shed[c],
+                    expired: tstats.expired[c],
+                    attainment: if tstats.generated[c] == 0 {
+                        0.0
+                    } else {
+                        tstats.met[c] as f64 / tstats.generated[c] as f64
+                    },
+                }).collect()
+            } else {
+                Vec::new()
+            };
+            let fairness = if cfg.sla_classes {
+                let atts: Vec<f64> = classes.iter()
+                    .filter(|c| c.generated > 0)
+                    .map(|c| c.attainment).collect();
+                jain_fairness(&atts)
+            } else {
+                1.0
+            };
+            TenancySummary {
+                admission: cfg.admission.clone(),
+                shed_total: tstats.shed_total(),
+                goodput_rps: if runtime_s > 0.0 {
+                    sla.met() as f64 / runtime_s
+                } else {
+                    0.0
+                },
+                fairness,
+                classes,
+                churn_by_model: churn.into_iter().collect(),
+            }
+        });
         let summary = summarize(&cfg, generated, runtime_s, &recorder,
-                                &sla, &dev_stats, &dev_modes);
+                                &sla, &dev_stats, &dev_modes, tenancy);
         if let Some(dir) = &cfg.results_dir {
             recorder.write_csvs(dir, &cfg.label)?;
             std::fs::write(

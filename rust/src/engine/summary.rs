@@ -106,6 +106,113 @@ impl DeviceSummary {
     }
 }
 
+/// Per-SLA-class slice of a tenancy run (gold/silver/free).
+#[derive(Debug, Clone, Default)]
+pub struct ClassSummary {
+    pub name: String,
+    pub generated: u64,
+    pub completed: u64,
+    /// Completions within the run's base SLA (the shared attainment
+    /// metric; class deadlines govern queue expiry, not this figure).
+    pub met: u64,
+    /// Requests refused by the admission gate.
+    pub shed: u64,
+    /// Requests dropped from the queues past their class deadline.
+    pub expired: u64,
+    /// met / generated for this class.
+    pub attainment: f64,
+}
+
+impl ClassSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("generated", Json::num(self.generated as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("met", Json::num(self.met as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("expired", Json::num(self.expired as f64)),
+            ("attainment", Json::num(self.attainment)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> ClassSummary {
+        let u = |k: &str| j.get(k).and_then(|v| v.as_u64()).unwrap_or(0);
+        ClassSummary {
+            name: j.get("name").and_then(|v| v.as_str())
+                .unwrap_or("").into(),
+            generated: u("generated"),
+            completed: u("completed"),
+            met: u("met"),
+            shed: u("shed"),
+            expired: u("expired"),
+            attainment: j.get("attainment").and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+        }
+    }
+}
+
+/// Multi-tenant accounting block, present in the JSON only when a
+/// tenancy feature (admission gate or SLA classes) was active — the
+/// byte-identity contract extends to it exactly like the data path.
+#[derive(Debug, Clone, Default)]
+pub struct TenancySummary {
+    /// Admission policy name ("none" when only classes were on).
+    pub admission: String,
+    /// Requests refused by the gate, all classes.
+    pub shed_total: u64,
+    /// SLA-met completions per second of runtime (admitted *useful*
+    /// work — the figure admission control is supposed to protect).
+    pub goodput_rps: f64,
+    /// Jain fairness index over per-class attainments (1.0 when
+    /// classes are off or equally served).
+    pub fairness: f64,
+    /// Per-class breakdown (empty when `--sla-classes` is off).
+    pub classes: Vec<ClassSummary>,
+    /// Swap loads per model, sorted by model name — the swap-churn
+    /// profile Zipf skew is supposed to flatten.
+    pub churn_by_model: Vec<(String, u64)>,
+}
+
+impl TenancySummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admission", Json::str(self.admission.clone())),
+            ("shed_total", Json::num(self.shed_total as f64)),
+            ("goodput_rps", Json::num(self.goodput_rps)),
+            ("fairness", Json::num(self.fairness)),
+            ("classes", Json::Arr(self.classes.iter()
+                .map(|c| c.to_json()).collect())),
+            ("churn_by_model", Json::Obj(self.churn_by_model.iter()
+                .map(|(m, n)| (m.clone(), Json::num(*n as f64)))
+                .collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> TenancySummary {
+        TenancySummary {
+            admission: j.get("admission").and_then(|v| v.as_str())
+                .unwrap_or("none").into(),
+            shed_total: j.get("shed_total").and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            goodput_rps: j.get("goodput_rps").and_then(|v| v.as_f64())
+                .unwrap_or(0.0),
+            fairness: j.get("fairness").and_then(|v| v.as_f64())
+                .unwrap_or(1.0),
+            classes: j.get("classes").and_then(|v| v.as_arr())
+                .map(|arr| arr.iter().map(ClassSummary::from_json)
+                     .collect())
+                .unwrap_or_default(),
+            churn_by_model: j.get("churn_by_model")
+                .and_then(|v| v.as_obj())
+                .map(|m| m.iter().map(|(k, v)| {
+                    (k.clone(), v.as_u64().unwrap_or(0))
+                }).collect())
+                .unwrap_or_default(),
+        }
+    }
+}
+
 /// Aggregated outcome of one run — one grid cell of the evaluation.
 /// Totals (`swap_count`, `total_*`, throughput) are fleet aggregates;
 /// `per_device` carries the breakdown.
@@ -182,6 +289,11 @@ pub struct RunSummary {
 
     /// Per-device breakdown, in device-id order.
     pub per_device: Vec<DeviceSummary>,
+
+    /// Multi-tenant block — Some only when a tenancy feature
+    /// (admission gate, SLA classes) was active; absent from the JSON
+    /// otherwise so pre-tenancy summaries stay byte-identical.
+    pub tenancy: Option<TenancySummary>,
 }
 
 impl RunSummary {
@@ -246,6 +358,11 @@ impl RunSummary {
             fields.push(("data_bytes", Json::num(self.data_bytes as f64)));
             fields.push(("data_wire_bytes",
                          Json::num(self.data_wire_bytes as f64)));
+        }
+        // same contract for the tenancy block: the key exists only
+        // when the engine ran with a tenancy feature on
+        if let Some(t) = &self.tenancy {
+            fields.push(("tenancy", t.to_json()));
         }
         fields.push(("per_device", Json::Arr(self.per_device.iter()
             .map(|d| d.to_json()).collect())));
@@ -324,6 +441,7 @@ impl RunSummary {
                 .map(|arr| arr.iter().map(DeviceSummary::from_json)
                      .collect())
                 .unwrap_or_default(),
+            tenancy: c.get("tenancy").map(TenancySummary::from_json),
         })
     }
 
@@ -346,6 +464,11 @@ impl RunSummary {
             pipe.push_str(&format!(" dio={:.2}s",
                                    self.total_data_crypto_exposed_s));
         }
+        if let Some(t) = &self.tenancy {
+            pipe.push_str(&format!(" shed={} good={:.2}rps fair={:.2}",
+                                   t.shed_total, t.goodput_rps,
+                                   t.fairness));
+        }
         format!(
             "{:<6} {:<7} {:<26} sla={:<4} gen={:<5} done={:<5} \
              att={:>5.1}% lat(mean/p99)={:.2}/{:.2}s thr={:.2}rps \
@@ -360,9 +483,13 @@ impl RunSummary {
 /// Assemble the summary from a finished run's accounting — the single
 /// home of the paper's metric definitions, shared by every backend.
 /// `dev_stats`/`dev_modes` carry one entry per fleet device.
+/// `tenancy` is pre-assembled by the engine (None for plain runs, so
+/// the block never appears in pre-tenancy summaries).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
                         recorder: &Recorder, sla: &SlaTracker,
-                        dev_stats: &[SwapStats], dev_modes: &[CcMode])
+                        dev_stats: &[SwapStats], dev_modes: &[CcMode],
+                        tenancy: Option<TenancySummary>)
                         -> RunSummary {
     let h = &recorder.latency_hist;
     let completed = recorder.requests.len() as u64;
@@ -500,6 +627,7 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         data_bytes,
         data_wire_bytes,
         per_device,
+        tenancy,
     }
 }
 
@@ -636,6 +764,59 @@ mod tests {
         assert!(text.contains("\"data_crypto_s\""),
                 "per-device block must not drop out when crypto is \
                  zero but bytes moved: {text}");
+    }
+
+    /// Tenancy mirror of the data-path contract: the key appears only
+    /// when the engine attached a block, and a populated block
+    /// round-trips losslessly.
+    #[test]
+    fn tenancy_keys_absent_when_unused_and_roundtrip() {
+        let off = RunSummary {
+            per_device: vec![DeviceSummary::default()],
+            ..RunSummary::default()
+        };
+        let text = off.to_json().to_string();
+        assert!(!text.contains("tenancy"), "leaked tenancy key: {text}");
+        assert!(!text.contains("shed") && !text.contains("goodput"),
+                "leaked tenancy sub-keys: {text}");
+
+        let on = RunSummary {
+            tenancy: Some(TenancySummary {
+                admission: "class-weighted".into(),
+                shed_total: 17,
+                goodput_rps: 3.25,
+                fairness: 0.91,
+                classes: vec![ClassSummary {
+                    name: "gold".into(),
+                    generated: 40,
+                    completed: 38,
+                    met: 36,
+                    shed: 1,
+                    expired: 1,
+                    attainment: 0.9,
+                }],
+                churn_by_model: vec![("gemma-sim".into(), 3),
+                                     ("llama-sim".into(), 5)],
+            }),
+            ..RunSummary::default()
+        };
+        let text = on.to_json().to_string();
+        assert!(text.contains("\"tenancy\"")
+                && text.contains("\"goodput_rps\"")
+                && text.contains("\"shed_total\""), "{text}");
+        let back = RunSummary::from_json(&on.to_json()).unwrap();
+        let t = back.tenancy.expect("tenancy block must parse back");
+        assert_eq!(t.admission, "class-weighted");
+        assert_eq!(t.shed_total, 17);
+        assert!((t.goodput_rps - 3.25).abs() < 1e-12);
+        assert!((t.fairness - 0.91).abs() < 1e-12);
+        assert_eq!(t.classes.len(), 1);
+        assert_eq!(t.classes[0].name, "gold");
+        assert_eq!(t.classes[0].shed, 1);
+        assert!((t.classes[0].attainment - 0.9).abs() < 1e-12);
+        assert_eq!(t.churn_by_model,
+                   vec![("gemma-sim".to_string(), 3),
+                        ("llama-sim".to_string(), 5)]);
     }
 
     /// Seeds above 2^53 cannot ride an f64; the string fallback keeps

@@ -53,6 +53,13 @@ pub const PRESETS: &[PresetEntry] = &[
                 baselines",
         make: cc_io,
     },
+    PresetEntry {
+        name: "tenancy",
+        blurb: "multi-tenant smoke: catalog size x Zipf skew x \
+                admission policy x SLA classes under diurnal traffic, \
+                with plain-serving baselines",
+        make: tenancy,
+    },
 ];
 
 /// Valid preset names, in table order.
@@ -191,6 +198,46 @@ fn cc_io() -> ScenarioSpec {
     }
 }
 
+fn tenancy() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "tenancy".into(),
+        description: "multi-tenant catalog serving at smoke scale: \
+                      {manifest, 6-model catalog} x Zipf popularity \
+                      {off, 1.1} x every admission policy x SLA \
+                      classes {off, on}, all under a diurnal sinusoid \
+                      with a mid-run flash crowd; admission=none cells \
+                      stay classes-off, so they are byte-identical \
+                      plain-serving baselines with no tenancy keys"
+            .into(),
+        base: vec![
+            ("duration".into(), "20".into()),
+            ("drain".into(), "8".into()),
+            ("mean-rps".into(), "4".into()),
+            ("sla".into(), "6".into()),
+            ("models".into(), "llama-sim,gemma-sim".into()),
+            ("mode".into(), "cc".into()),
+            ("diurnal-amp".into(), "0.3".into()),
+            ("flash-mult".into(), "2".into()),
+            ("flash-start".into(), "6".into()),
+            ("flash-dur".into(), "4".into()),
+        ],
+        axes: vec![
+            axis("catalog-size", &["0", "6"]),
+            axis("zipf-skew", &["off", "1.1"]),
+            axis("admission", &["none", "queue-cap",
+                                "deadline-infeasible",
+                                "class-weighted"]),
+            axis("sla-classes", &["off", "on"]),
+        ],
+        // keep the gate-off cells tenancy-free: classes alone would
+        // attach a tenancy block to an otherwise-baseline cell
+        exclude: vec![
+            rule(&[("admission", "none"), ("sla-classes", "on")]),
+        ],
+        seeds: 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +295,28 @@ mod tests {
         let g = fleet_mix().expand(&RunConfig::default()).unwrap();
         assert_eq!(g.pruned, 4);
         assert_eq!(g.cells.len(), 14);
+    }
+
+    #[test]
+    fn tenancy_baselines_never_carry_classes() {
+        let g = tenancy().expand(&RunConfig::default()).unwrap();
+        // 2 catalog x 2 zipf x 4 admission x 2 classes, minus the
+        // (none, classes-on) column
+        assert_eq!(g.pruned, 4);
+        assert_eq!(g.cells.len(), 28);
+        assert_eq!(g.seeds, 1);
+        let baselines: Vec<_> = g.cells.iter()
+            .filter(|c| c.cfg.admission == "none").collect();
+        assert_eq!(baselines.len(), 4, "one per catalog x zipf corner");
+        assert!(baselines.iter().all(|c| !c.cfg.sla_classes),
+                "admission-off cells must stay tenancy-off");
+        // diurnal + flash ride along in every cell
+        assert!(g.cells.iter().all(
+            |c| c.cfg.diurnal_amp > 0.0 && c.cfg.flash_mult > 1.0));
+        assert!(g.cells.iter().any(
+            |c| c.cfg.catalog == 6 && c.cfg.zipf_skew == Some(1.1)
+                && c.cfg.admission == "class-weighted"
+                && c.cfg.sla_classes));
     }
 
     #[test]

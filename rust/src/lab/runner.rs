@@ -138,6 +138,22 @@ impl<'a> LabRunner<'a> {
     }
 
     fn run_one(&self, job: &LabJob) -> anyhow::Result<RunSummary> {
+        if job.cfg.catalog > 0 {
+            // synthetic-catalog cell: serve the expanded model set
+            // instead of cfg.models, against a cost table priced from
+            // the expanded manifest.  Both are pure functions of
+            // (manifest, catalog), so worker identity cannot leak in.
+            let expanded = crate::tenancy::catalog::expand_manifest(
+                self.manifest, job.cfg.catalog);
+            let costs = CostModel::synthetic(&expanded);
+            let mut cfg = job.cfg.clone();
+            cfg.models = crate::tenancy::catalog::catalog_models(
+                job.cfg.catalog);
+            let (summary, _rec) = EngineBuilder::new(&cfg)
+                .des(&expanded, &costs)?
+                .run()?;
+            return Ok(summary);
+        }
         let (summary, _rec) = EngineBuilder::new(&job.cfg)
             .des(self.manifest, self.costs)?
             .run()?;

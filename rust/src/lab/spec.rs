@@ -66,6 +66,10 @@ fn check_placement(v: &str) -> anyhow::Result<()> {
     crate::coordinator::placement_by_name(v).map(|_| ())
 }
 
+fn check_admission(v: &str) -> anyhow::Result<()> {
+    crate::tenancy::admission::admission_by_name(v).map(|_| ())
+}
+
 /// The axis table, in canonical cross-product order (first entry
 /// varies slowest).  The first four match the legacy hardcoded sweep's
 /// loop nesting, so the `paper-72` preset reproduces its cell order
@@ -87,6 +91,11 @@ pub const AXES: &[AxisEntry] = &[
     AxisEntry { name: "data-path", key: "data-path", check: None },
     AxisEntry { name: "tokens-in", key: "data-tokens-in", check: None },
     AxisEntry { name: "tokens-out", key: "data-tokens-out", check: None },
+    AxisEntry { name: "catalog-size", key: "catalog", check: None },
+    AxisEntry { name: "zipf-skew", key: "zipf-skew", check: None },
+    AxisEntry { name: "admission", key: "admission",
+                check: Some(check_admission) },
+    AxisEntry { name: "sla-classes", key: "sla-classes", check: None },
 ];
 
 /// Valid axis names, in table order.
@@ -119,6 +128,20 @@ pub fn axis_hint(name: &str) -> String {
         "tokens-out" => {
             "priced output tokens/request (default: model decode_len)"
                 .to_string()
+        }
+        "catalog-size" => {
+            "0 = manifest models, N >= 1 = N-model synthetic catalog"
+                .to_string()
+        }
+        "zipf-skew" => {
+            "off | skew >= 0 — Zipf popularity over the model set"
+                .to_string()
+        }
+        "admission" => {
+            crate::tenancy::admission::admission_names().join(" | ")
+        }
+        "sla-classes" => {
+            "on | off — gold/silver/free SLA classes".to_string()
         }
         other => format!("unknown axis {other:?}"),
     }
@@ -155,6 +178,13 @@ pub fn axis_value(cfg: &RunConfig, axis: &str) -> String {
             .unwrap_or_default(),
         "tokens-out" => cfg.data_tokens_out.map(|t| t.to_string())
             .unwrap_or_default(),
+        "catalog-size" => cfg.catalog.to_string(),
+        "zipf-skew" => cfg.zipf_skew.map(fmt_num)
+            .unwrap_or_else(|| "off".to_string()),
+        "admission" => cfg.admission.clone(),
+        "sla-classes" => {
+            (if cfg.sla_classes { "on" } else { "off" }).to_string()
+        }
         _ => String::new(),
     }
 }
@@ -564,6 +594,48 @@ mod tests {
             ("tokens-in".to_string(), "512".to_string()),
             ("tokens-out".to_string(), "50".to_string()),
         ]);
+    }
+
+    #[test]
+    fn tenancy_axes_reach_config_and_label() {
+        let mut s = two_by_two();
+        s.axes = vec![axis("catalog-size", &["0", "6"]),
+                      axis("zipf-skew", &["off", "1.1"]),
+                      axis("admission", &["none", "queue-cap"]),
+                      axis("sla-classes", &["off", "on"])];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 16);
+        // all-off corner is the plain legacy cell
+        let first = &g.cells[0];
+        assert_eq!(first.cfg.catalog, 0);
+        assert!(first.cfg.zipf_skew.is_none());
+        assert_eq!(first.cfg.admission, "none");
+        assert!(!first.cfg.sla_classes);
+        assert!(!first.label.contains("cat")
+                && !first.label.contains("zipf")
+                && !first.label.contains("adm"), "{}", first.label);
+        // all-on corner carries every fragment
+        let last = &g.cells[15];
+        assert_eq!(last.cfg.catalog, 6);
+        assert_eq!(last.cfg.zipf_skew, Some(1.1));
+        assert_eq!(last.cfg.admission, "queue-cap");
+        assert!(last.cfg.sla_classes);
+        assert!(last.label.contains("_cat6")
+                && last.label.contains("_zipf1.1")
+                && last.label.contains("_adm-queue-cap")
+                && last.label.ends_with("_cls"), "{}", last.label);
+        assert_eq!(last.assignment, vec![
+            ("catalog-size".to_string(), "6".to_string()),
+            ("zipf-skew".to_string(), "1.1".to_string()),
+            ("admission".to_string(), "queue-cap".to_string()),
+            ("sla-classes".to_string(), "on".to_string()),
+        ]);
+        // bad admission names fail expansion with the name table
+        s.axes = vec![axis("admission", &["vip-only"])];
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("vip-only") && err.contains("queue-cap"),
+                "{err}");
     }
 
     #[test]

@@ -36,6 +36,7 @@ pub mod lab;
 pub mod metrics;
 pub mod runtime;
 pub mod sim;
+pub mod tenancy;
 pub mod traffic;
 pub mod util;
 pub mod workload;

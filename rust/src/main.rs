@@ -178,6 +178,10 @@ fn load_registry(cfg: &RunConfig) -> anyhow::Result<(Manifest, Registry)> {
 fn cmd_serve(mut cfg: RunConfig, rest: Vec<String>)
              -> anyhow::Result<()> {
     no_extra_args(&rest)?;
+    anyhow::ensure!(
+        cfg.catalog == 0,
+        "--catalog expands synthetic model families that have no \
+         compiled artifacts; it is DES-only (use `lab run`)");
     if cfg.results_dir.is_none() {
         cfg.results_dir = Some(PathBuf::from("results"));
     }
@@ -373,6 +377,10 @@ fn lab_run(cfg: RunConfig) -> anyhow::Result<()> {
         println!("\n## Batch I/O (CC data path)\n");
         println!("{data_path}");
     }
+    if let Some(tenancy) = &tables.tenancy {
+        println!("\n## Multi-tenant serving\n");
+        println!("{tenancy}");
+    }
     if let Some(headline) = &tables.headline {
         println!("\n## Headline comparison (paper abstract)\n");
         println!("{headline}");
@@ -419,6 +427,9 @@ struct LabTables {
     per_device: Option<String>,
     /// Only when some cell priced the CC inference data path.
     data_path: Option<String>,
+    /// Only when some cell ran with tenancy features (admission or
+    /// SLA classes).
+    tenancy: Option<String>,
     /// Only when the grid has both CC and No-CC cells — a one-mode
     /// grid has nothing to ratio against (`lab check` guards the
     /// same way).
@@ -445,6 +456,8 @@ impl LabTables {
                 .then(|| report::per_device_table(cells)),
             data_path: report::has_data_path(cells)
                 .then(|| report::data_path_table(cells)),
+            tenancy: report::has_tenancy(cells)
+                .then(|| report::tenancy_table(cells)),
             headline: h.as_ref().map(report::headline_table),
             bands: h.as_ref().map(
                 |h| report::band_table(&report::paper_check(h))),
@@ -467,6 +480,10 @@ impl LabTables {
         if let Some(data_path) = &self.data_path {
             md.push_str(&format!(
                 "\n## Batch I/O (CC data path)\n\n{data_path}"));
+        }
+        if let Some(tenancy) = &self.tenancy {
+            md.push_str(&format!(
+                "\n## Multi-tenant serving\n\n{tenancy}"));
         }
         if let Some(headline) = &self.headline {
             md.push_str(&format!(
@@ -551,30 +568,69 @@ fn cmd_report(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
         println!("\n## Batch I/O (CC data path)\n");
         println!("{}", report::data_path_table(&cells));
     }
+    if report::has_tenancy(&cells) {
+        println!("\n## Multi-tenant serving\n");
+        println!("{}", report::tenancy_table(&cells));
+    }
     println!("{}", report::headline_table(&report::headline_ratios(&cells)));
     Ok(())
 }
 
 // ------------------------------------------------------------ gen-traffic
 
+/// Emit an arrival trace, honouring the same tenancy pipeline as the
+/// engine and in the same order — base pattern, then Zipf remap, then
+/// the diurnal/flash time warp, then class assignment — from the same
+/// gated RNG forks, so a generated trace matches what a live run with
+/// identical flags would see.
 fn cmd_gen_traffic(cfg: RunConfig, rest: Vec<String>)
                    -> anyhow::Result<()> {
     no_extra_args(&rest)?;
     let manifest = Manifest::load(&cfg.artifacts_dir)?;
-    let models = if cfg.models.is_empty() {
+    let models = if cfg.catalog > 0 {
+        sincere::tenancy::catalog::catalog_models(cfg.catalog)
+    } else if cfg.models.is_empty() {
         manifest.family_names()
     } else {
         cfg.models.clone()
     };
     let mut rng = sincere::traffic::rng::Pcg64::new(cfg.seed);
     let pattern = pattern_by_name(&cfg.pattern)?;
-    let arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps, &models,
-                                    &mut rng);
+    let mut arrivals = pattern.generate(cfg.duration_s, cfg.mean_rps,
+                                        &models, &mut rng);
+    if let Some(skew) = cfg.zipf_skew {
+        let zipf = sincere::tenancy::zipf::Zipf::new(models.len(), skew);
+        let mut zrng = rng.fork(0x21BF);
+        for a in &mut arrivals {
+            a.model = models[zipf.sample(&mut zrng)].clone();
+        }
+    }
+    let shape = sincere::traffic::compose::Shape {
+        diurnal_amp: cfg.diurnal_amp,
+        diurnal_period_s: cfg.diurnal_period_s,
+        flash_mult: cfg.flash_mult,
+        flash_start_s: cfg.flash_start_s,
+        flash_dur_s: cfg.flash_dur_s,
+    };
+    if shape.is_active() {
+        sincere::traffic::compose::warp(&mut arrivals, cfg.duration_s,
+                                        &shape);
+    }
     let mut prompts =
         sincere::workload::promptgen::PromptGen::new(cfg.seed ^ 0xBEEF, 24);
     let path = results_dir(&cfg)
         .join(format!("trace_{}_{}rps.jsonl", cfg.pattern, cfg.mean_rps));
-    sincere::traffic::trace::write_trace(&path, &arrivals, &mut prompts)?;
+    if cfg.sla_classes {
+        let mut crng = rng.fork(0xC1A5);
+        let classes: Vec<u8> = arrivals.iter()
+            .map(|_| sincere::tenancy::assign_class(&mut crng))
+            .collect();
+        sincere::traffic::trace::write_trace_with_tenants(
+            &path, &arrivals, &classes, &mut prompts)?;
+    } else {
+        sincere::traffic::trace::write_trace(&path, &arrivals,
+                                             &mut prompts)?;
+    }
     println!("wrote {} arrivals to {path:?}", arrivals.len());
     Ok(())
 }
@@ -646,6 +702,25 @@ fn usage_string() -> String {
          (default: model prompt_len)\n\
          \x20 --data-tokens-out N    priced output tokens per request \
          (default: model decode_len)\n\n\
+         TENANCY OPTIONS (DES-only; all off by default, off is \
+         byte-identical to before):\n\
+         \x20 --catalog N            serve an N-model synthetic catalog \
+         cloned from the\n\
+         \x20                        manifest families (lab/gen-traffic \
+         only)\n\
+         \x20 --zipf-skew S|off      Zipf(S) popularity over the model \
+         set (0 = uniform)\n\
+         \x20 --admission NAME       admission gate before the queues: \
+         {admissions}\n\
+         \x20 --sla-classes on|off   gold/silver/free tenant classes \
+         (deadlines + shed\n\
+         \x20                        priority + per-class accounting)\n\
+         \x20 --diurnal-amp A        sinusoidal rate modulation, \
+         amplitude in [0,1)\n\
+         \x20 --diurnal-period S     sinusoid period (default: one \
+         period per run)\n\
+         \x20 --flash-mult M --flash-start S --flash-dur S   flash-crowd \
+         window\n\n\
          LAB OPTIONS (lab run|list|compare|check):\n\
          \x20 --preset NAME          built-in scenario preset \
          (`lab list` names them)\n\
@@ -662,7 +737,9 @@ fn usage_string() -> String {
         "help", "show this help",
         patterns = PATTERN_NAMES.join("|"),
         strategies = strategy_names().join("|"),
-        placements = placement_names().join("|")));
+        placements = placement_names().join("|"),
+        admissions =
+            sincere::tenancy::admission::admission_names().join("|")));
     out
 }
 
@@ -728,6 +805,32 @@ mod tests {
                      "--data-tokens-out"] {
             assert!(usage.contains(flag), "usage missing {flag}");
         }
+    }
+
+    /// Tenancy flags and the admission name table both render into
+    /// the help text, so docs cannot drift from the lookup tables.
+    #[test]
+    fn usage_lists_the_tenancy_flags_and_admissions() {
+        let usage = usage_string();
+        for flag in ["--catalog", "--zipf-skew", "--admission",
+                     "--sla-classes", "--diurnal-amp",
+                     "--diurnal-period", "--flash-mult"] {
+            assert!(usage.contains(flag), "usage missing {flag}");
+        }
+        for name in sincere::tenancy::admission::admission_names() {
+            assert!(usage.contains(name),
+                    "usage missing admission policy {name}");
+        }
+    }
+
+    /// `serve` compiles real artifacts, which synthetic catalog
+    /// families do not have — the guard must fire before any load.
+    #[test]
+    fn serve_rejects_catalog_cells() {
+        let mut cfg = RunConfig::default();
+        cfg.catalog = 4;
+        let err = cmd_serve(cfg, Vec::new()).unwrap_err().to_string();
+        assert!(err.contains("DES-only"), "{err}");
     }
 
     #[test]

@@ -96,6 +96,47 @@ pub fn data_path_table(cells: &[RunSummary]) -> String {
     out
 }
 
+/// True when any cell ran with tenancy features (admission gate or
+/// SLA classes) — gates the multi-tenant table the same way
+/// `has_data_path` gates the batch-I/O table.
+pub fn has_tenancy(cells: &[RunSummary]) -> bool {
+    cells.iter().any(|c| c.tenancy.is_some())
+}
+
+/// Multi-tenant table: per cell, the admission policy, shed volume,
+/// goodput (SLA-met completions per second), Jain fairness across
+/// class attainments, per-class shed rates, and the most-reloaded
+/// catalog model (swap churn).  Cells without a tenancy block (flags
+/// off) contribute no rows — mirroring the tenancy-off byte-identity
+/// contract.
+pub fn tenancy_table(cells: &[RunSummary]) -> String {
+    let mut out = String::from(
+        "| cell | admission | shed | goodput (rps) | fairness | \
+         gold shed % | silver shed % | free shed % | top churn |\n\
+         |---|---|---|---|---|---|---|---|---|\n");
+    for c in cells {
+        let Some(t) = &c.tenancy else { continue };
+        let class_shed = |name: &str| -> String {
+            match t.classes.iter().find(|k| k.name == name) {
+                Some(k) if k.generated > 0 => format!(
+                    "{:.1}", k.shed as f64 / k.generated as f64 * 100.0),
+                Some(_) => "0.0".to_string(),
+                None => "-".to_string(),
+            }
+        };
+        let churn = t.churn_by_model.iter()
+            .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|(m, n)| format!("{m} x{n}"))
+            .unwrap_or_else(|| "-".to_string());
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.2} | {:.3} | {} | {} | {} | {} |\n",
+            c.label, t.admission, t.shed_total, t.goodput_rps,
+            t.fairness, class_shed("gold"), class_shed("silver"),
+            class_shed("free"), churn));
+    }
+    out
+}
+
 /// Mean of the headline metrics grouped by one axis of a grid
 /// (`mode` | `pattern` | `strategy` | `sla`), one row per distinct
 /// value in first-appearance order.
@@ -446,6 +487,44 @@ mod tests {
         assert!(t.contains("| 6.000 | 2.00 |"), "{t}");
         assert_eq!(t.matches("no-cc").count(), 0,
                    "cells without data crypto contribute no rows");
+    }
+
+    #[test]
+    fn tenancy_table_renders_only_tenancy_cells() {
+        let plain = cell("no-cc", 3.0, 0.7, 3.2, 0.3);
+        let mut mt = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        mt.label = "cc_mt".into();
+        mt.tenancy = Some(crate::engine::TenancySummary {
+            admission: "class-weighted".into(),
+            shed_total: 14,
+            goodput_rps: 1.75,
+            fairness: 0.912,
+            classes: vec![
+                crate::engine::ClassSummary {
+                    name: "gold".into(), generated: 40, completed: 38,
+                    met: 36, shed: 1, expired: 1, attainment: 0.9,
+                },
+                crate::engine::ClassSummary {
+                    name: "silver".into(), generated: 60, completed: 50,
+                    met: 45, shed: 4, expired: 6, attainment: 0.75,
+                },
+                crate::engine::ClassSummary {
+                    name: "free".into(), generated: 100, completed: 80,
+                    met: 60, shed: 9, expired: 11, attainment: 0.6,
+                },
+            ],
+            churn_by_model: vec![("cat-00".into(), 2),
+                                 ("cat-01".into(), 7)],
+        });
+        assert!(!has_tenancy(&[plain.clone()]));
+        assert!(has_tenancy(&[plain.clone(), mt.clone()]));
+        let t = tenancy_table(&[plain, mt]);
+        // 1/40, 4/60, 9/100 shed; cat-01 is the churn leader
+        assert!(t.contains(
+            "| cc_mt | class-weighted | 14 | 1.75 | 0.912 | 2.5 | \
+             6.7 | 9.0 | cat-01 x7 |"), "{t}");
+        assert_eq!(t.matches("no-cc").count(), 0,
+                   "cells without a tenancy block contribute no rows");
     }
 
     #[test]

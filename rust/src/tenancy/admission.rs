@@ -1,0 +1,264 @@
+//! Admission control in front of the model queues.
+//!
+//! The gate sees every request at ingest time, *before* it is queued,
+//! and may shed it instead.  A shed request counts against SLA
+//! attainment immediately (it was generated and refused), but never
+//! occupies queue or device time — which is the whole point: under
+//! the CC swap tax, queueing infeasible work only makes every other
+//! tenant miss too.
+//!
+//! Policies live behind a name table (`ADMISSIONS`), mirroring the
+//! scheduler's `STRATEGIES`, so the CLI, the lab axes and `validate()`
+//! share one source of truth.  Every decision is a pure function of
+//! virtual-time-domain inputs (queue lengths, cost-table estimates,
+//! class deadlines), so DES and real-virtual backends shed exactly
+//! the same requests — parity-pinned in `tests/engine_parity.rs`.
+
+use super::{class_deadline_s, CLASS_WEIGHT, N_CLASSES};
+
+/// Everything a policy may look at for one decision.
+#[derive(Debug, Clone)]
+pub struct AdmitCtx {
+    /// Virtual now (seconds since run start) at ingest.
+    pub now_s: f64,
+    /// Arrival time of the request.
+    pub arrival_s: f64,
+    /// Tenant class (0 = gold); 0 when SLA classes are off.
+    pub class: u8,
+    /// Base SLA window (seconds); per-class deadlines derive from it.
+    pub sla_s: f64,
+    /// Whether per-class deadlines apply (else everyone gets `sla_s`).
+    pub classes_on: bool,
+    /// Queued requests for this request's model.
+    pub queue_len: usize,
+    /// Queued requests across all models.
+    pub total_queued: usize,
+    /// Queued requests per class.
+    pub class_queued: [u64; N_CLASSES],
+    /// System queue cap: `ceil(mean_rps * sla_s)` — one SLA window of
+    /// offered load.
+    pub queue_cap: usize,
+    /// Cheapest load estimate for this model over free devices (0 if
+    /// already resident somewhere).
+    pub est_load_s: f64,
+    /// Cost-table execution estimate for one batch of this model.
+    pub est_exec_s: f64,
+    /// Max batch rows the runtime will form.
+    pub obs: usize,
+}
+
+impl AdmitCtx {
+    /// Seconds left before this request's deadline.
+    pub fn remaining_s(&self) -> f64 {
+        let window = if self.classes_on {
+            class_deadline_s(self.class, self.sla_s)
+        } else {
+            self.sla_s
+        };
+        self.arrival_s + window - self.now_s
+    }
+}
+
+/// One admission policy; `admit` returns false to shed.
+pub trait AdmissionPolicy: Send {
+    fn name(&self) -> &'static str;
+    fn admit(&mut self, ctx: &AdmitCtx) -> bool;
+}
+
+/// `none`: the pre-tenancy behavior — everything is queued.
+struct NoGate;
+
+impl AdmissionPolicy for NoGate {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn admit(&mut self, _ctx: &AdmitCtx) -> bool {
+        true
+    }
+}
+
+/// `queue-cap`: shed once the total backlog exceeds one SLA window of
+/// offered load, regardless of class.
+struct QueueCap;
+
+impl AdmissionPolicy for QueueCap {
+    fn name(&self) -> &'static str {
+        "queue-cap"
+    }
+    fn admit(&mut self, ctx: &AdmitCtx) -> bool {
+        ctx.total_queued < ctx.queue_cap
+    }
+}
+
+/// `deadline-infeasible`: shed a request whose deadline cannot be met
+/// even optimistically — the cheapest possible load plus the batches
+/// already ahead of it in its own queue exceed the remaining window.
+struct DeadlineInfeasible;
+
+impl AdmissionPolicy for DeadlineInfeasible {
+    fn name(&self) -> &'static str {
+        "deadline-infeasible"
+    }
+    fn admit(&mut self, ctx: &AdmitCtx) -> bool {
+        let obs = ctx.obs.max(1);
+        let batches_ahead = (ctx.queue_len / obs + 1) as f64;
+        let eta_s = ctx.est_load_s + batches_ahead * ctx.est_exec_s;
+        eta_s <= ctx.remaining_s()
+    }
+}
+
+/// `class-weighted`: each class owns a share of the queue cap
+/// proportional to its weight (gold 3 : silver 2 : free 1); a class
+/// over its share is shed.  Free tenants therefore shed first as the
+/// backlog grows — shed priority without touching the scheduler.
+struct ClassWeighted;
+
+impl AdmissionPolicy for ClassWeighted {
+    fn name(&self) -> &'static str {
+        "class-weighted"
+    }
+    fn admit(&mut self, ctx: &AdmitCtx) -> bool {
+        let total_w: u64 = CLASS_WEIGHT.iter().sum();
+        let w = CLASS_WEIGHT[ctx.class as usize % N_CLASSES];
+        // ceil(cap * w / total_w), never below 1
+        let share = ((ctx.queue_cap as u64 * w + total_w - 1) / total_w).max(1);
+        ctx.class_queued[ctx.class as usize % N_CLASSES] < share
+    }
+}
+
+/// Name-table entry, mirroring `STRATEGIES`/`PLACEMENTS`.
+pub struct AdmissionEntry {
+    pub name: &'static str,
+    pub blurb: &'static str,
+    pub make: fn() -> Box<dyn AdmissionPolicy>,
+}
+
+pub const ADMISSIONS: &[AdmissionEntry] = &[
+    AdmissionEntry {
+        name: "none",
+        blurb: "queue everything (pre-tenancy behavior)",
+        make: || Box::new(NoGate),
+    },
+    AdmissionEntry {
+        name: "queue-cap",
+        blurb: "shed when total backlog exceeds one SLA window of load",
+        make: || Box::new(QueueCap),
+    },
+    AdmissionEntry {
+        name: "deadline-infeasible",
+        blurb: "shed requests whose deadline is already unreachable",
+        make: || Box::new(DeadlineInfeasible),
+    },
+    AdmissionEntry {
+        name: "class-weighted",
+        blurb: "per-class queue shares (gold 3 : silver 2 : free 1)",
+        make: || Box::new(ClassWeighted),
+    },
+];
+
+/// Instantiate a policy by name.
+pub fn admission_by_name(name: &str)
+                         -> anyhow::Result<Box<dyn AdmissionPolicy>> {
+    ADMISSIONS.iter().find(|e| e.name == name).map(|e| (e.make)())
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown admission policy {name:?} (have {:?})",
+            admission_names()))
+}
+
+pub fn admission_names() -> Vec<&'static str> {
+    ADMISSIONS.iter().map(|e| e.name).collect()
+}
+
+/// System queue cap shared by the capped policies.
+pub fn queue_cap(mean_rps: f64, sla_s: f64) -> usize {
+    (mean_rps * sla_s).ceil().max(1.0) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx() -> AdmitCtx {
+        AdmitCtx {
+            now_s: 10.0,
+            arrival_s: 10.0,
+            class: 2,
+            sla_s: 6.0,
+            classes_on: true,
+            queue_len: 0,
+            total_queued: 0,
+            class_queued: [0; N_CLASSES],
+            queue_cap: 24,
+            est_load_s: 0.0,
+            est_exec_s: 0.2,
+            obs: 8,
+        }
+    }
+
+    #[test]
+    fn table_resolves_every_name() {
+        for e in ADMISSIONS {
+            let p = admission_by_name(e.name).unwrap();
+            assert_eq!(p.name(), e.name);
+        }
+        assert!(admission_by_name("fifo").is_err());
+        assert_eq!(admission_names().len(), 4);
+    }
+
+    #[test]
+    fn none_admits_everything() {
+        let mut p = admission_by_name("none").unwrap();
+        let mut c = ctx();
+        c.total_queued = 10_000;
+        assert!(p.admit(&c));
+    }
+
+    #[test]
+    fn queue_cap_sheds_at_cap() {
+        let mut p = admission_by_name("queue-cap").unwrap();
+        let mut c = ctx();
+        c.total_queued = 23;
+        assert!(p.admit(&c));
+        c.total_queued = 24;
+        assert!(!p.admit(&c));
+    }
+
+    #[test]
+    fn deadline_infeasible_sheds_hopeless_requests() {
+        let mut p = admission_by_name("deadline-infeasible").unwrap();
+        let mut c = ctx();
+        // empty system, resident model: trivially feasible
+        assert!(p.admit(&c));
+        // a cold load longer than the free-class window: shed
+        c.est_load_s = 100.0;
+        assert!(!p.admit(&c));
+        // gold deadline (3 s) vs a 2.8 s ETA: feasible...
+        c.est_load_s = 2.6;
+        c.class = 0;
+        assert!(p.admit(&c));
+        // ...until the queue ahead pushes the ETA past it
+        c.queue_len = 16;
+        assert!(!p.admit(&c));
+    }
+
+    #[test]
+    fn class_weighted_gives_gold_the_biggest_share() {
+        let mut p = admission_by_name("class-weighted").unwrap();
+        // cap 24, weights 3:2:1 -> shares gold 12, silver 8, free 4
+        let mut c = ctx();
+        c.class = 2;
+        c.class_queued = [0, 0, 4];
+        assert!(!p.admit(&c), "free over its share must shed");
+        c.class = 0;
+        c.class_queued = [11, 0, 4];
+        assert!(p.admit(&c), "gold under its share is admitted");
+        c.class_queued = [12, 0, 4];
+        assert!(!p.admit(&c));
+    }
+
+    #[test]
+    fn cap_is_one_sla_window_of_load() {
+        assert_eq!(queue_cap(4.0, 6.0), 24);
+        assert_eq!(queue_cap(0.1, 1.0), 1);
+    }
+}

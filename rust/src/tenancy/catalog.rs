@@ -1,0 +1,108 @@
+//! Synthetic model catalog: N families cloned from the manifest's
+//! real ones with cycled size multipliers, so `--catalog 64` stresses
+//! the swap path with a realistic spread of model sizes without any
+//! artifacts on disk.
+//!
+//! Catalog families are DES-only: they have no weight blobs or
+//! compiled executables, so `serve` refuses them.  The lab runner
+//! builds an expanded manifest plus a `CostModel::synthetic` table
+//! per cell, which prices each `cat-*` family from its (scaled)
+//! weight bytes exactly like the base families.
+
+use crate::runtime::manifest::{FamilySpec, Manifest};
+
+/// Size multipliers cycled across the catalog, small/base/large.
+const SIZE_MULT: [f64; 3] = [0.6, 1.0, 1.6];
+
+/// Names of the `n` synthetic catalog models, in Zipf rank order.
+pub fn catalog_models(n: usize) -> Vec<String> {
+    (0..n).map(|i| format!("cat-{i:02}")).collect()
+}
+
+/// Clone one base family into a scaled catalog entry.
+fn scaled_family(base: &FamilySpec, name: String, mult: f64) -> FamilySpec {
+    let mut f = base.clone();
+    f.name = name;
+    f.hf_name = format!("synthetic/{}", f.name);
+    f.paper_gb = base.paper_gb * mult;
+    f.param_count = (base.param_count as f64 * mult) as u64;
+    f.kv_bytes_per_seq = ((base.kv_bytes_per_seq as f64 * mult) as u64).max(1);
+    f.weights.total_bytes =
+        ((base.weights.total_bytes as f64 * mult) as usize).max(1);
+    f.weights.file = String::new();
+    f.weights.sha256 = String::new();
+    // artifacts stay cloned from the base: batch-size selection needs a
+    // non-empty table, and the DES prices batches from the cost model,
+    // not the artifact files
+    f
+}
+
+/// Expanded manifest: the base families plus `n` catalog entries
+/// (`cat-00` .. ), each cloned round-robin from a base family with a
+/// cycled size multiplier.  Deterministic — no RNG — so every run and
+/// both lab threads build the identical catalog.
+pub fn expand_manifest(base: &Manifest, n: usize) -> Manifest {
+    let mut m = base.clone();
+    for (i, name) in catalog_models(n).into_iter().enumerate() {
+        let src = &base.families[i % base.families.len()];
+        let mult = SIZE_MULT[i % SIZE_MULT.len()];
+        m.families.push(scaled_family(src, name, mult));
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn base() -> Manifest {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).expect("run `make artifacts` first")
+    }
+
+    #[test]
+    fn names_are_rank_ordered() {
+        assert_eq!(catalog_models(3),
+                   vec!["cat-00", "cat-01", "cat-02"]);
+        assert!(catalog_models(0).is_empty());
+    }
+
+    #[test]
+    fn expansion_keeps_base_families_and_adds_n() {
+        let b = base();
+        let m = expand_manifest(&b, 6);
+        assert_eq!(m.families.len(), b.families.len() + 6);
+        for name in catalog_models(6) {
+            let f = m.family(&name).unwrap();
+            assert!(!f.artifacts.is_empty(),
+                    "catalog family must keep artifact batch sizes");
+            assert!(f.weight_bytes() > 0);
+            // batch-size selection must not panic on an empty table
+            let _ = f.batch_size_at_least(1);
+        }
+    }
+
+    #[test]
+    fn sizes_cycle() {
+        let b = base();
+        let m = expand_manifest(&b, 6);
+        let w0 = m.family("cat-00").unwrap().weight_bytes() as f64;
+        let base0 = b.families[0].weight_bytes() as f64;
+        assert!((w0 / base0 - 0.6).abs() < 1e-6);
+        let w1 = m.family("cat-01").unwrap().weight_bytes() as f64;
+        let base1 = b.families[1].weight_bytes() as f64;
+        assert!((w1 / base1 - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn expansion_is_deterministic() {
+        let b = base();
+        let a = expand_manifest(&b, 4);
+        let c = expand_manifest(&b, 4);
+        for (x, y) in a.families.iter().zip(&c.families) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.weights.total_bytes, y.weights.total_bytes);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Multi-tenant serving: a synthetic model catalog, Zipf-skewed
+//! popularity, per-tenant SLA classes, and an admission-control gate
+//! (ROADMAP item 1 — "millions of users" means the coordinator must
+//! sometimes *refuse* work instead of queueing it to death).
+//!
+//! Everything here is strictly additive: with `--catalog 0`,
+//! `--zipf-skew off`, `--admission none` and `--sla-classes off` the
+//! engine draws no extra RNG values and the summary JSON carries no
+//! tenancy key, so runs reduce byte-identically to pre-tenancy builds
+//! (pinned by the golden-summary suite).
+
+pub mod admission;
+pub mod catalog;
+pub mod zipf;
+
+use crate::traffic::rng::Pcg64;
+
+/// SLA class count: gold / silver / free.
+pub const N_CLASSES: usize = 3;
+
+/// Class names in priority order (class 0 = most protected).
+pub const CLASS_NAMES: [&str; N_CLASSES] = ["gold", "silver", "free"];
+
+/// Per-class deadline as a fraction of the base `--sla` limit: gold
+/// gets half the window, free gets 1.5x.
+pub const CLASS_DEADLINE_FRAC: [f64; N_CLASSES] = [0.5, 1.0, 1.5];
+
+/// Admission weights for the `class-weighted` policy (share of the
+/// queue cap each class may occupy).
+pub const CLASS_WEIGHT: [u64; N_CLASSES] = [3, 2, 1];
+
+/// Population mix: 20% gold, 30% silver, 50% free.
+pub const CLASS_MIX: [f64; N_CLASSES] = [0.2, 0.3, 0.5];
+
+/// Completion deadline (seconds after arrival) for a class.
+pub fn class_deadline_s(class: u8, sla_s: f64) -> f64 {
+    CLASS_DEADLINE_FRAC[class as usize % N_CLASSES] * sla_s
+}
+
+/// Draw a tenant class from the population mix (one `next_f64` per
+/// request, always from a dedicated forked stream so the base
+/// schedule is untouched).
+pub fn assign_class(rng: &mut Pcg64) -> u8 {
+    let u = rng.next_f64();
+    if u < CLASS_MIX[0] {
+        0
+    } else if u < CLASS_MIX[0] + CLASS_MIX[1] {
+        1
+    } else {
+        2
+    }
+}
+
+/// Per-class counters accumulated by the engine while a tenancy
+/// feature (admission gate or SLA classes) is active.  With classes
+/// off every request lands in class 0.
+#[derive(Debug, Clone, Default)]
+pub struct TenancyStats {
+    pub generated: [u64; N_CLASSES],
+    pub shed: [u64; N_CLASSES],
+    pub expired: [u64; N_CLASSES],
+    pub completed: [u64; N_CLASSES],
+    pub met: [u64; N_CLASSES],
+}
+
+impl TenancyStats {
+    pub fn shed_total(&self) -> u64 {
+        self.shed.iter().sum()
+    }
+}
+
+/// Jain fairness index over per-class SLA attainments:
+/// `(Σx)² / (n·Σx²)` — 1.0 when every class is served equally well,
+/// approaching `1/n` when one class starves the rest.  Classes with
+/// no traffic are skipped; an empty or all-zero sample is perfectly
+/// fair by convention.
+pub fn jain_fairness(xs: &[f64]) -> f64 {
+    let xs: Vec<f64> = xs.iter().copied().filter(|x| x.is_finite()).collect();
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq <= 0.0 {
+        1.0
+    } else {
+        sum * sum / (xs.len() as f64 * sq)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_mix_draws_every_class() {
+        let mut rng = Pcg64::new(3);
+        let mut counts = [0u64; N_CLASSES];
+        let n = 30_000;
+        for _ in 0..n {
+            counts[assign_class(&mut rng) as usize] += 1;
+        }
+        for (c, &want) in CLASS_MIX.iter().enumerate() {
+            let got = counts[c] as f64 / n as f64;
+            assert!((got - want).abs() < 0.02,
+                    "class {c}: {got} vs mix {want}");
+        }
+    }
+
+    #[test]
+    fn deadlines_ordered_by_priority() {
+        assert!(class_deadline_s(0, 6.0) < class_deadline_s(1, 6.0));
+        assert!(class_deadline_s(1, 6.0) < class_deadline_s(2, 6.0));
+        assert_eq!(class_deadline_s(1, 6.0), 6.0);
+    }
+
+    #[test]
+    fn jain_bounds() {
+        assert_eq!(jain_fairness(&[]), 1.0);
+        assert_eq!(jain_fairness(&[0.0, 0.0]), 1.0);
+        assert!((jain_fairness(&[0.7, 0.7, 0.7]) - 1.0).abs() < 1e-12);
+        // one class starves: index tends to 1/n
+        let skewed = jain_fairness(&[1.0, 0.0, 0.0]);
+        assert!((skewed - 1.0 / 3.0).abs() < 1e-12);
+        let mid = jain_fairness(&[0.9, 0.6, 0.3]);
+        assert!(mid > 1.0 / 3.0 && mid < 1.0, "{mid}");
+    }
+
+    #[test]
+    fn stats_total() {
+        let mut t = TenancyStats::default();
+        t.shed = [1, 2, 3];
+        assert_eq!(t.shed_total(), 6);
+    }
+}

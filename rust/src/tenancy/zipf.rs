@@ -1,0 +1,101 @@
+//! Zipf(s) popularity sampler over model ranks.
+//!
+//! Rank i (0-based) gets weight `(i+1)^-s`, normalized; `s = 0` is
+//! uniform, larger `s` concentrates mass on rank 0.  Sampling is one
+//! `next_f64` + a binary search over the precomputed CDF, so the draw
+//! count per request is fixed and seed-reproducible.
+
+use crate::traffic::rng::Pcg64;
+
+#[derive(Debug, Clone)]
+pub struct Zipf {
+    weights: Vec<f64>,
+    cdf: Vec<f64>,
+}
+
+impl Zipf {
+    /// Build a sampler over `n` ranks with skew `s >= 0`.
+    pub fn new(n: usize, skew: f64) -> Zipf {
+        assert!(n > 0, "Zipf needs at least one rank");
+        assert!(skew >= 0.0 && skew.is_finite(), "Zipf skew must be >= 0");
+        let raw: Vec<f64> = (0..n)
+            .map(|i| ((i + 1) as f64).powf(-skew))
+            .collect();
+        let total: f64 = raw.iter().sum();
+        let weights: Vec<f64> = raw.iter().map(|w| w / total).collect();
+        let mut cdf = Vec::with_capacity(n);
+        let mut acc = 0.0;
+        for w in &weights {
+            acc += w;
+            cdf.push(acc);
+        }
+        // guard against float drift: the last bucket must cover 1.0
+        if let Some(last) = cdf.last_mut() {
+            *last = 1.0;
+        }
+        Zipf { weights, cdf }
+    }
+
+    /// Normalized rank weights (sum to 1).
+    pub fn weights(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Draw a rank in `[0, n)`.
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let u = rng.next_f64();
+        // first bucket whose cumulative weight exceeds u
+        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+            Ok(i) => (i + 1).min(self.cdf.len() - 1),
+            Err(i) => i,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skew_zero_is_uniform() {
+        let z = Zipf::new(5, 0.0);
+        for &w in z.weights() {
+            assert!((w - 0.2).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn weights_normalized_and_monotone() {
+        let z = Zipf::new(8, 1.2);
+        let sum: f64 = z.weights().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        for w in z.weights().windows(2) {
+            assert!(w[0] > w[1], "weights must strictly decrease");
+        }
+    }
+
+    #[test]
+    fn sampling_tracks_weights() {
+        let z = Zipf::new(4, 1.0);
+        let mut rng = Pcg64::new(17);
+        let mut counts = [0u64; 4];
+        let n = 40_000;
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let got = c as f64 / n as f64;
+            assert!((got - z.weights()[i]).abs() < 0.02,
+                    "rank {i}: {got} vs {}", z.weights()[i]);
+        }
+    }
+
+    #[test]
+    fn single_rank_always_zero() {
+        let z = Zipf::new(1, 2.0);
+        let mut rng = Pcg64::new(1);
+        for _ in 0..100 {
+            assert_eq!(z.sample(&mut rng), 0);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Traffic composition: diurnal sinusoid and flash-crowd multipliers
+//! layered over any base pattern (gamma/bursty/ramp) by a
+//! deterministic monotone time warp.
+//!
+//! The warp maps each arrival at base time `u` to the `t` where the
+//! cumulative rate multiplier satisfies `C(t)/C(D) = u/D`.  Because
+//! the multiplier `m(t)` is strictly positive, `C` is strictly
+//! increasing: the warp preserves arrival count, ordering and the
+//! `[0, D)` range, and draws **zero** RNG values — composed runs stay
+//! byte-identical per seed and the off path is untouched.
+
+use crate::traffic::Arrival;
+
+/// Composition parameters (all off by default).
+#[derive(Debug, Clone, Copy)]
+pub struct Shape {
+    /// Diurnal amplitude in [0, 1): 0 disables the sinusoid.
+    pub diurnal_amp: f64,
+    /// Diurnal period in seconds; <= 0 means one period per run.
+    pub diurnal_period_s: f64,
+    /// Flash-crowd rate multiplier (1 disables it).
+    pub flash_mult: f64,
+    /// Flash-crowd window start, seconds.
+    pub flash_start_s: f64,
+    /// Flash-crowd window length, seconds (0 disables it).
+    pub flash_dur_s: f64,
+}
+
+impl Shape {
+    /// True when any composition layer changes the rate.
+    pub fn is_active(&self) -> bool {
+        self.diurnal_amp > 0.0
+            || (self.flash_mult != 1.0 && self.flash_dur_s > 0.0)
+    }
+
+    /// Instantaneous rate multiplier at `t`, strictly positive.
+    fn mult_at(&self, t: f64, duration_s: f64) -> f64 {
+        let period = if self.diurnal_period_s > 0.0 {
+            self.diurnal_period_s
+        } else {
+            duration_s
+        };
+        let mut m = 1.0 + self.diurnal_amp
+            * (2.0 * std::f64::consts::PI * t / period).sin();
+        if self.flash_dur_s > 0.0
+            && t >= self.flash_start_s
+            && t < self.flash_start_s + self.flash_dur_s
+        {
+            m *= self.flash_mult;
+        }
+        m
+    }
+}
+
+/// Grid resolution for the cumulative-rate table.
+const GRID: usize = 2048;
+
+/// Warp arrivals in place so their density follows `shape`'s rate
+/// multiplier.  No-op on an empty schedule or inactive shape.
+pub fn warp(arrivals: &mut [Arrival], duration_s: f64, shape: &Shape) {
+    if arrivals.is_empty() || !shape.is_active() || duration_s <= 0.0 {
+        return;
+    }
+    // cumulative multiplier C on a uniform grid (midpoint rule)
+    let dt = duration_s / GRID as f64;
+    let mut cum = Vec::with_capacity(GRID + 1);
+    cum.push(0.0);
+    let mut acc = 0.0;
+    for k in 0..GRID {
+        let mid = (k as f64 + 0.5) * dt;
+        acc += shape.mult_at(mid, duration_s) * dt;
+        cum.push(acc);
+    }
+    let total = *cum.last().unwrap();
+
+    for a in arrivals.iter_mut() {
+        let target = total * (a.at_s / duration_s);
+        // first grid index with cum[i] >= target
+        let i = cum.partition_point(|&c| c < target).max(1).min(GRID);
+        let (c0, c1) = (cum[i - 1], cum[i]);
+        let frac = if c1 > c0 { (target - c0) / (c1 - c0) } else { 0.0 };
+        let t = ((i - 1) as f64 + frac) * dt;
+        // clamp so the range contract of `finalize` survives float edges
+        a.at_s = t.clamp(0.0, duration_s * (1.0 - 1e-12));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::traffic::{pattern_by_name, rng::Pcg64};
+
+    fn arrivals(seed: u64) -> Vec<Arrival> {
+        let mut rng = Pcg64::new(seed);
+        pattern_by_name("gamma").unwrap()
+            .generate(120.0, 4.0, &["m".to_string()], &mut rng)
+    }
+
+    fn flat() -> Shape {
+        Shape { diurnal_amp: 0.0, diurnal_period_s: 0.0, flash_mult: 1.0,
+                flash_start_s: 0.0, flash_dur_s: 0.0 }
+    }
+
+    #[test]
+    fn inactive_shape_is_identity() {
+        let mut a = arrivals(5);
+        let before = a.clone();
+        warp(&mut a, 120.0, &flat());
+        assert_eq!(a, before);
+        assert!(!flat().is_active());
+    }
+
+    #[test]
+    fn warp_preserves_count_order_and_range() {
+        let mut a = arrivals(6);
+        let n = a.len();
+        let shape = Shape { diurnal_amp: 0.5, flash_mult: 3.0,
+                            flash_start_s: 40.0, flash_dur_s: 20.0,
+                            ..flat() };
+        assert!(shape.is_active());
+        warp(&mut a, 120.0, &shape);
+        assert_eq!(a.len(), n);
+        for w in a.windows(2) {
+            assert!(w[0].at_s <= w[1].at_s, "warp must stay monotone");
+        }
+        assert!(a.iter().all(|x| (0.0..120.0).contains(&x.at_s)));
+    }
+
+    #[test]
+    fn flash_window_concentrates_arrivals() {
+        let mut a = arrivals(7);
+        let total = a.len() as f64;
+        let shape = Shape { flash_mult: 6.0, flash_start_s: 40.0,
+                            flash_dur_s: 20.0, ..flat() };
+        warp(&mut a, 120.0, &shape);
+        let inside = a.iter()
+            .filter(|x| (40.0..60.0).contains(&x.at_s)).count() as f64;
+        // flat share of the window is 1/6; with a 6x multiplier the
+        // window holds 6/11 of the mass
+        assert!(inside / total > 0.35,
+                "flash window got only {}", inside / total);
+    }
+
+    #[test]
+    fn diurnal_peak_beats_trough() {
+        let mut a = arrivals(8);
+        let shape = Shape { diurnal_amp: 0.8, diurnal_period_s: 120.0,
+                            ..flat() };
+        warp(&mut a, 120.0, &shape);
+        // sin peaks in the first half-period, troughs in the second
+        let first = a.iter().filter(|x| x.at_s < 60.0).count();
+        let second = a.len() - first;
+        assert!(first > second,
+                "peak half {first} must beat trough half {second}");
+    }
+
+    #[test]
+    fn warp_is_deterministic() {
+        let (mut a, mut b) = (arrivals(9), arrivals(9));
+        let shape = Shape { diurnal_amp: 0.3, ..flat() };
+        warp(&mut a, 120.0, &shape);
+        warp(&mut b, 120.0, &shape);
+        assert_eq!(a, b);
+    }
+}

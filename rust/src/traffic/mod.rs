@@ -6,6 +6,7 @@
 //! cross-pattern comparisons see identical load.
 
 pub mod bursty;
+pub mod compose;
 pub mod dist;
 pub mod gamma;
 pub mod ramp;

@@ -1,32 +1,64 @@
 //! Arrival-trace emit/replay — the analogue of the paper's Instructlab
 //! jsonl → json request files (§III-A step 1).
 //!
-//! A trace is a jsonl file with one arrival per line:
-//! `{"at_s": 1.25, "model": "llama-sim", "prompt": "..."}`.
-//! Traces make experiments exactly repeatable across modes: the same
-//! trace is replayed in CC and No-CC so both see identical load.
+//! A trace is a jsonl file.  Version 2 starts with a header line
+//! `{"sincere_trace": 2}` followed by one arrival per line:
+//! `{"at_s": 1.25, "model": "llama-sim", "prompt": "...",
+//!   "tenant": "gold"}` — the `tenant` column is optional and names
+//! the SLA class of a multi-tenant run.  Headerless version-1 traces
+//! (no `tenant` column) still parse.  Traces make experiments exactly
+//! repeatable across modes: the same trace is replayed in CC and
+//! No-CC so both see identical load.
 
 use std::io::{BufRead, Write};
 use std::path::Path;
 
+use crate::tenancy::{CLASS_NAMES, N_CLASSES};
 use crate::traffic::Arrival;
 use crate::util::json::Json;
 use crate::workload::promptgen::PromptGen;
 
+/// Current trace format version (the header line's value).
+pub const TRACE_VERSION: u64 = 2;
+
 /// Write arrivals (with generated prompts) as a jsonl trace.
 pub fn write_trace(path: &Path, arrivals: &[Arrival],
                    prompts: &mut PromptGen) -> anyhow::Result<()> {
+    write_trace_impl(path, arrivals, None, prompts)
+}
+
+/// Write a multi-tenant trace: `classes[i]` is arrival `i`'s SLA
+/// class, emitted as a per-line `tenant` column.
+pub fn write_trace_with_tenants(path: &Path, arrivals: &[Arrival],
+                                classes: &[u8], prompts: &mut PromptGen)
+                                -> anyhow::Result<()> {
+    anyhow::ensure!(classes.len() == arrivals.len(),
+                    "one class per arrival ({} classes, {} arrivals)",
+                    classes.len(), arrivals.len());
+    write_trace_impl(path, arrivals, Some(classes), prompts)
+}
+
+fn write_trace_impl(path: &Path, arrivals: &[Arrival],
+                    classes: Option<&[u8]>, prompts: &mut PromptGen)
+                    -> anyhow::Result<()> {
     if let Some(dir) = path.parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    for a in arrivals {
-        let line = Json::obj(vec![
+    writeln!(f, "{}", Json::obj(vec![
+        ("sincere_trace", Json::num(TRACE_VERSION as f64)),
+    ]))?;
+    for (i, a) in arrivals.iter().enumerate() {
+        let mut fields = vec![
             ("at_s", Json::num(a.at_s)),
             ("model", Json::str(a.model.clone())),
             ("prompt", Json::str(prompts.next_prompt(&a.model))),
-        ]);
-        writeln!(f, "{line}")?;
+        ];
+        if let Some(cs) = classes {
+            let c = cs[i] as usize % N_CLASSES;
+            fields.push(("tenant", Json::str(CLASS_NAMES[c].to_string())));
+        }
+        writeln!(f, "{}", Json::obj(fields))?;
     }
     f.flush()?;
     Ok(())
@@ -38,13 +70,26 @@ pub struct TraceEntry {
     pub at_s: f64,
     pub model: String,
     pub prompt: String,
+    /// SLA class name ("gold"/"silver"/"free"); None in single-tenant
+    /// and version-1 traces.
+    pub tenant: Option<String>,
 }
 
-/// Read a jsonl trace back.
+impl TraceEntry {
+    /// Class index of `tenant` (`CLASS_NAMES` order); 0 when absent
+    /// or unknown, matching the engine's classes-off default.
+    pub fn class(&self) -> u8 {
+        self.tenant.as_deref()
+            .and_then(|t| CLASS_NAMES.iter().position(|n| *n == t))
+            .unwrap_or(0) as u8
+    }
+}
+
+/// Read a jsonl trace back (any version up to [`TRACE_VERSION`]).
 pub fn read_trace(path: &Path) -> anyhow::Result<Vec<TraceEntry>> {
     let f = std::fs::File::open(path)
         .map_err(|e| anyhow::anyhow!("opening trace {path:?}: {e}"))?;
-    let mut out = Vec::new();
+    let mut out: Vec<TraceEntry> = Vec::new();
     for (i, line) in std::io::BufReader::new(f).lines().enumerate() {
         let line = line?;
         if line.trim().is_empty() {
@@ -52,6 +97,16 @@ pub fn read_trace(path: &Path) -> anyhow::Result<Vec<TraceEntry>> {
         }
         let j = Json::parse(&line)
             .map_err(|e| anyhow::anyhow!("trace line {}: {e}", i + 1))?;
+        if out.is_empty() {
+            if let Some(v) = j.get("sincere_trace") {
+                let version = v.as_u64().unwrap_or(0);
+                anyhow::ensure!(
+                    (1..=TRACE_VERSION).contains(&version),
+                    "trace {path:?} has unsupported version {version} \
+                     (this build reads up to {TRACE_VERSION})");
+                continue;
+            }
+        }
         out.push(TraceEntry {
             at_s: j.req("at_s")?.as_f64()
                 .ok_or_else(|| anyhow::anyhow!("at_s not a number"))?,
@@ -59,6 +114,8 @@ pub fn read_trace(path: &Path) -> anyhow::Result<Vec<TraceEntry>> {
                 .ok_or_else(|| anyhow::anyhow!("model not a string"))?
                 .to_string(),
             prompt: j.req("prompt")?.as_str().unwrap_or_default().to_string(),
+            tenant: j.get("tenant").and_then(|t| t.as_str())
+                .map(|t| t.to_string()),
         });
     }
     anyhow::ensure!(out.windows(2).all(|w| w[0].at_s <= w[1].at_s),
@@ -84,19 +141,87 @@ mod tests {
         let mut pg = PromptGen::new(42, 16);
         write_trace(&path, &arr, &mut pg).unwrap();
 
+        // v2 writer emits the version header first
+        let raw = std::fs::read_to_string(&path).unwrap();
+        assert!(raw.lines().next().unwrap().contains("sincere_trace"));
+
         let back = read_trace(&path).unwrap();
         assert_eq!(back.len(), arr.len());
         for (a, b) in arr.iter().zip(&back) {
             assert!((a.at_s - b.at_s).abs() < 1e-9);
             assert_eq!(a.model, b.model);
             assert!(!b.prompt.is_empty());
+            assert!(b.tenant.is_none(),
+                    "single-tenant traces carry no tenant column");
         }
+    }
+
+    #[test]
+    fn tenant_column_roundtrips() {
+        let dir = std::env::temp_dir().join("sincere_trace_test_mt");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mt.jsonl");
+
+        let mut rng = Pcg64::new(12);
+        let p = pattern_by_name("gamma").unwrap();
+        let arr = p.generate(20.0, 2.0, &["llama-sim".to_string()], &mut rng);
+        let classes: Vec<u8> =
+            (0..arr.len()).map(|i| (i % N_CLASSES) as u8).collect();
+        let mut pg = PromptGen::new(42, 16);
+        write_trace_with_tenants(&path, &arr, &classes, &mut pg).unwrap();
+
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.len(), arr.len());
+        for (i, e) in back.iter().enumerate() {
+            let want = CLASS_NAMES[i % N_CLASSES];
+            assert_eq!(e.tenant.as_deref(), Some(want));
+            assert_eq!(e.class(), (i % N_CLASSES) as u8);
+        }
+        // length mismatch is rejected before anything is written
+        assert!(write_trace_with_tenants(&path, &arr, &[0], &mut pg)
+                .is_err());
+    }
+
+    #[test]
+    fn headerless_v1_traces_still_parse() {
+        let dir = std::env::temp_dir().join("sincere_trace_test_v1");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v1.jsonl");
+        std::fs::write(&path,
+            "{\"at_s\":1.0,\"model\":\"m\",\"prompt\":\"x\"}\n\
+             {\"at_s\":2.0,\"model\":\"m\",\"prompt\":\"y\"}\n").unwrap();
+        let back = read_trace(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].model, "m");
+        assert!(back[0].tenant.is_none());
+        assert_eq!(back[0].class(), 0);
+    }
+
+    #[test]
+    fn future_versions_rejected() {
+        let dir = std::env::temp_dir().join("sincere_trace_test_v9");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("v9.jsonl");
+        std::fs::write(&path,
+            "{\"sincere_trace\":9}\n\
+             {\"at_s\":1.0,\"model\":\"m\",\"prompt\":\"x\"}\n").unwrap();
+        assert!(read_trace(&path).is_err());
     }
 
     #[test]
     fn rejects_unsorted() {
         let dir = std::env::temp_dir().join("sincere_trace_test2");
         std::fs::create_dir_all(&dir).unwrap();
+        // with a v2 header and tenant columns...
+        let path = dir.join("bad_v2.jsonl");
+        std::fs::write(&path,
+            "{\"sincere_trace\":2}\n\
+             {\"at_s\":2.0,\"model\":\"m\",\"prompt\":\"x\",\
+              \"tenant\":\"gold\"}\n\
+             {\"at_s\":1.0,\"model\":\"m\",\"prompt\":\"y\",\
+              \"tenant\":\"free\"}\n").unwrap();
+        assert!(read_trace(&path).is_err());
+        // ...and in the old headerless format
         let path = dir.join("bad.jsonl");
         std::fs::write(&path,
             "{\"at_s\":2.0,\"model\":\"m\",\"prompt\":\"x\"}\n\

@@ -308,6 +308,90 @@ fn fleet_parity_4_device_mixed_pipelined_prefetch() {
     }
 }
 
+/// The tenancy extension of the parity contract (ISSUE 6 acceptance):
+/// admission gating + Zipf popularity + diurnal/flash traffic + SLA
+/// classes on a mixed 4-device fleet must leave the DES and the real
+/// execution path in exact agreement — shed accounting, per-class
+/// counters, goodput, fairness and swap churn included.  The gate
+/// runs engine-side on time-domain-independent inputs (queue depths,
+/// cost-table load estimates, the engine's own exec EWMA), so the
+/// same requests are shed in both time domains.
+#[test]
+fn fleet_parity_4_device_tenancy() {
+    for admission in ["queue-cap", "deadline-infeasible",
+                      "class-weighted"] {
+        let mut cfg = parity_cfg("cc", "select-batch+timer");
+        cfg.devices = 4;
+        cfg.set("device-modes", "cc,no-cc,cc,no-cc").unwrap();
+        cfg.mean_rps = 6.0; // overload enough that the gate fires
+        cfg.set("zipf-skew", "1.1").unwrap();
+        cfg.set("admission", admission).unwrap();
+        cfg.set("sla-classes", "on").unwrap();
+        cfg.set("diurnal-amp", "0.3").unwrap();
+        cfg.set("flash-mult", "2").unwrap();
+        cfg.set("flash-start", "6").unwrap();
+        cfg.set("flash-dur", "4").unwrap();
+        let (des, real) = run_pair(&cfg);
+        assert_eq!(des.generated, real.generated, "{admission}");
+        assert_eq!(des.completed, real.completed, "{admission}");
+        assert_eq!(des.swap_count, real.swap_count, "{admission}");
+        assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+                "{admission}: attainment {} vs {}", des.sla_attainment,
+                real.sla_attainment);
+        assert!((des.latency_mean_s - real.latency_mean_s).abs() < 1e-9,
+                "{admission}: latency {} vs {}", des.latency_mean_s,
+                real.latency_mean_s);
+        assert!((des.runtime_s - real.runtime_s).abs() < 1e-9,
+                "{admission}: runtime diverged");
+
+        let dt = des.tenancy.as_ref()
+            .unwrap_or_else(|| panic!("{admission}: DES tenancy block \
+                                       missing"));
+        let rt = real.tenancy.as_ref()
+            .unwrap_or_else(|| panic!("{admission}: real tenancy block \
+                                       missing"));
+        assert_eq!(dt.admission, admission, "{admission}");
+        assert_eq!(dt.shed_total, rt.shed_total,
+                   "{admission}: shed diverged");
+        assert!((dt.goodput_rps - rt.goodput_rps).abs() < 1e-9,
+                "{admission}: goodput {} vs {}", dt.goodput_rps,
+                rt.goodput_rps);
+        assert!((dt.fairness - rt.fairness).abs() < 1e-9,
+                "{admission}: fairness {} vs {}", dt.fairness,
+                rt.fairness);
+        assert_eq!(dt.classes.len(), 3, "{admission}");
+        for (a, b) in dt.classes.iter().zip(rt.classes.iter()) {
+            assert_eq!(a.name, b.name, "{admission}");
+            assert_eq!(a.generated, b.generated,
+                       "{admission} class {}", a.name);
+            assert_eq!(a.completed, b.completed,
+                       "{admission} class {}", a.name);
+            assert_eq!(a.met, b.met, "{admission} class {}", a.name);
+            assert_eq!(a.shed, b.shed, "{admission} class {}", a.name);
+            assert_eq!(a.expired, b.expired,
+                       "{admission} class {}", a.name);
+        }
+        assert_eq!(dt.churn_by_model, rt.churn_by_model,
+                   "{admission}: swap churn diverged");
+
+        // per-device breakdowns must agree too
+        assert_eq!(des.per_device.len(), 4, "{admission}");
+        for (a, b) in des.per_device.iter().zip(real.per_device.iter()) {
+            assert_eq!(a.mode, b.mode, "{admission} dev {}", a.device);
+            assert_eq!(a.batches, b.batches,
+                       "{admission} dev {}", a.device);
+            assert_eq!(a.swap_count, b.swap_count,
+                       "{admission} dev {}", a.device);
+            assert_eq!(a.completed, b.completed,
+                       "{admission} dev {}", a.device);
+        }
+        assert!(des.completed > 0, "{admission}: degenerate run");
+        assert!(dt.classes.iter().map(|c| c.generated).sum::<u64>()
+                == des.generated,
+                "{admission}: per-class generated must cover the run");
+    }
+}
+
 #[test]
 fn real_backend_still_does_real_work_under_virtual_time() {
     // The parity mode is not a second simulator: PJRT output tokens and

@@ -122,6 +122,21 @@ fn golden_summaries_match() {
         cfg.gpu.pipeline_depth = depth;
         cells.push(cfg);
     }
+    // the tenancy extension: Zipf popularity + diurnal/flash traffic
+    // + SLA classes behind each capped admission policy, so the
+    // goldens pin the shed/goodput/fairness accounting end to end
+    for admission in ["queue-cap", "deadline-infeasible",
+                      "class-weighted"] {
+        let mut cfg = golden_cfg("cc", "select-batch+timer");
+        cfg.set("zipf-skew", "1.1").unwrap();
+        cfg.set("admission", admission).unwrap();
+        cfg.set("sla-classes", "on").unwrap();
+        cfg.set("diurnal-amp", "0.3").unwrap();
+        cfg.set("flash-mult", "2").unwrap();
+        cfg.set("flash-start", "6").unwrap();
+        cfg.set("flash-dur", "4").unwrap();
+        cells.push(cfg);
+    }
 
     for mut cfg in cells {
         cfg.label = cfg.cell_label();
@@ -185,4 +200,63 @@ fn data_path_off_and_nocc_are_byte_identical() {
     assert!(text.contains("total_data_crypto_s")
             && text.contains("data_wire_bytes"),
             "CC data-path summary missing the batch-I/O block: {text}");
+}
+
+/// Byte-identity contract of the tenancy flags (ISSUE 6 acceptance):
+/// `catalog off, zipf off, admission none, classes off` must reduce
+/// the engine to exactly the pre-tenancy code path — same RNG draws,
+/// same schedule, same summary bytes — and the off-path document must
+/// carry no tenancy key at all.
+#[test]
+fn tenancy_off_is_byte_identical() {
+    // explicitly-set off values vs the untouched defaults, identical
+    // labels forced so the comparison covers every byte
+    let mut explicit = golden_cfg("cc", "select-batch+timer");
+    explicit.set("catalog", "0").unwrap();
+    explicit.set("zipf-skew", "off").unwrap();
+    explicit.set("admission", "none").unwrap();
+    explicit.set("sla-classes", "off").unwrap();
+    explicit.set("diurnal-amp", "0").unwrap();
+    explicit.set("flash-mult", "1").unwrap();
+    explicit.label = "tenancy_probe".into();
+    let mut default = golden_cfg("cc", "select-batch+timer");
+    default.label = "tenancy_probe".into();
+    assert_eq!(golden_cell(&explicit), golden_cell(&default),
+               "spelling the tenancy defaults out must not change a \
+                single byte");
+
+    // flags off: no tenancy key (nor any of its nested keys) may
+    // appear — this is what lets CI grep admission-off lab cells
+    for mode in ["no-cc", "cc"] {
+        let mut cfg = golden_cfg(mode, "select-batch+timer");
+        cfg.label = cfg.cell_label();
+        let text = golden_cell(&cfg);
+        for key in ["tenancy", "\"shed", "\"goodput", "fairness"] {
+            assert!(!text.contains(key),
+                    "{mode}: flag-off summary leaks {key}: {text}");
+        }
+    }
+
+    // admission alone attaches the block (classes stay off: one
+    // all-zero-impossible case — classes vec must then be empty)
+    let mut gate = golden_cfg("cc", "select-batch+timer");
+    gate.set("admission", "queue-cap").unwrap();
+    gate.label = gate.cell_label();
+    let text = golden_cell(&gate);
+    assert!(text.contains("\"tenancy\"")
+            && text.contains("\"shed_total\"")
+            && text.contains("\"goodput_rps\"")
+            && text.contains("\"classes\":[]"),
+            "admission-only summary missing the tenancy block: {text}");
+
+    // classes + admission: per-class rows appear with the fixed names
+    let mut classes = golden_cfg("cc", "select-batch+timer");
+    classes.set("admission", "class-weighted").unwrap();
+    classes.set("sla-classes", "on").unwrap();
+    classes.label = classes.cell_label();
+    let text = golden_cell(&classes);
+    for name in ["gold", "silver", "free"] {
+        assert!(text.contains(name),
+                "classes-on summary missing class {name}: {text}");
+    }
 }

@@ -34,6 +34,7 @@ fn prop_queues_fifo_per_model() {
                     model: models[mi].into(),
                     tokens: vec![],
                     arrival_s: next_id as f64,
+                    class: 0,
                 });
                 pushed[mi].push(next_id);
                 next_id += 1;
@@ -306,6 +307,11 @@ const AXIS_POOLS: &[(&str, &[&str])] = &[
     ("data-path", &["off", "on"]),
     ("tokens-in", &["16", "128", "1024"]),
     ("tokens-out", &["50", "256"]),
+    ("catalog-size", &["0", "4", "8"]),
+    ("zipf-skew", &["off", "0.8", "1.2"]),
+    ("admission", &["none", "queue-cap", "deadline-infeasible",
+                    "class-weighted"]),
+    ("sla-classes", &["off", "on"]),
 ];
 
 /// A random spec over the valid-value pools: each axis is swept with
@@ -457,6 +463,83 @@ fn prop_lab_replica_seeds_unique_per_cell() {
         // replica 0 reproduces the configured seed exactly
         prop_assert!(jobs[0].cfg.seed == grid.cells[0].cfg.seed,
                      "replica 0 must keep the base seed");
+        Ok(())
+    });
+}
+
+// ------------------------------------------------------------------ zipf
+
+/// Zipf(0) is the uniform distribution: every weight is exactly 1/n.
+#[test]
+fn prop_zipf_skew_zero_is_uniform() {
+    forall("zipf uniform at skew 0", 100, |g| {
+        let n = g.usize_in(1, 40);
+        let z = sincere::tenancy::zipf::Zipf::new(n, 0.0);
+        let w = z.weights();
+        prop_assert!(w.len() == n, "weight count");
+        for (i, &wi) in w.iter().enumerate() {
+            prop_assert!((wi - 1.0 / n as f64).abs() < 1e-12,
+                         "rank {i} weight {wi} != 1/{n}");
+        }
+        Ok(())
+    });
+}
+
+/// Raising the skew strictly concentrates mass on rank 1 (for any
+/// catalog with at least two models).
+#[test]
+fn prop_zipf_higher_skew_concentrates_rank_one() {
+    forall("zipf skew monotone", 100, |g| {
+        let n = g.usize_in(2, 40);
+        let lo = g.f64_in(0.0, 2.0);
+        let hi = lo + g.f64_in(0.1, 2.0);
+        let zl = sincere::tenancy::zipf::Zipf::new(n, lo);
+        let zh = sincere::tenancy::zipf::Zipf::new(n, hi);
+        prop_assert!(zh.weights()[0] > zl.weights()[0],
+                     "n={n}: rank-1 mass {} at skew {hi} not above {} \
+                      at skew {lo}", zh.weights()[0], zl.weights()[0]);
+        // and within one distribution, weights never increase by rank
+        for w in zh.weights().windows(2) {
+            prop_assert!(w[0] >= w[1], "weights not rank-monotone");
+        }
+        Ok(())
+    });
+}
+
+/// Sampling is deterministic in the seed: identical streams from
+/// identical forks, divergent streams from different seeds.
+#[test]
+fn prop_zipf_sampling_deterministic_in_seed() {
+    forall("zipf rng determinism", 60, |g| {
+        let n = g.usize_in(2, 24);
+        let skew = g.f64_in(0.1, 2.5);
+        let seed = g.u64();
+        let z = sincere::tenancy::zipf::Zipf::new(n, skew);
+        let draw = |s: u64| -> Vec<usize> {
+            let mut rng = sincere::traffic::rng::Pcg64::new(s);
+            (0..200).map(|_| z.sample(&mut rng)).collect()
+        };
+        let a = draw(seed);
+        prop_assert!(a == draw(seed), "same seed diverged");
+        prop_assert!(a != draw(seed ^ 0x5A5A),
+                     "different seeds gave identical rank streams");
+        prop_assert!(a.iter().all(|&r| r < n), "rank out of range");
+        Ok(())
+    });
+}
+
+/// Weights are a probability distribution at every skew: they sum to 1.
+#[test]
+fn prop_zipf_weights_sum_to_one() {
+    forall("zipf normalization", 100, |g| {
+        let n = g.usize_in(1, 64);
+        let skew = g.f64_in(0.0, 4.0);
+        let z = sincere::tenancy::zipf::Zipf::new(n, skew);
+        let sum: f64 = z.weights().iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-9,
+                     "n={n} skew={skew}: weights sum to {sum}");
+        prop_assert!(z.weights().iter().all(|&w| w > 0.0),
+                     "every model must keep positive mass");
         Ok(())
     });
 }

@@ -1,0 +1,68 @@
+#!/usr/bin/env sh
+# Record one point of the perf trajectory (ROADMAP item: tracked
+# simulator speed): run the lab_grid and hotpath benches and assemble
+# BENCH_<n>.json at the repo root with the two headline figures —
+# cells/sec (grid throughput of the lab runner) and simulated
+# requests/sec (DES request volume per wall second).
+#
+#   tools/record_bench.sh 6        # writes BENCH_6.json
+#
+# Requires a Rust toolchain and `make artifacts` (tools/gen_artifacts.py)
+# to have been run; the container CI image has neither, so trajectory
+# points are recorded on developer machines and committed.
+set -e
+n="${1:?usage: tools/record_bench.sh <trajectory-number>}"
+cd "$(dirname "$0")/.."
+out="BENCH_${n}.json"
+
+cargo build --release --benches
+
+grid=$(./target/release/deps/lab_grid-* 2>/dev/null \
+       || cargo bench --bench lab_grid 2>/dev/null)
+hot=$(cargo bench --bench hotpath 2>/dev/null)
+
+# lab_grid rows: | threads | wall (s) | cells/s | sim req/s | speedup |
+# take the best (max cells/s) row as the headline figure
+best=$(printf '%s\n' "$grid" | awk -F'|' '
+    /^\| [0-9]+ \|/ {
+        gsub(/ /, "", $4); gsub(/ /, "", $5)
+        if ($4 + 0 > c) { c = $4 + 0; r = $5 + 0; t = $2 + 0 }
+    }
+    END { printf "%s %s %s", c, r, t }')
+cells_s=$(printf '%s' "$best" | cut -d' ' -f1)
+reqs_s=$(printf '%s' "$best" | cut -d' ' -f2)
+threads=$(printf '%s' "$best" | cut -d' ' -f3)
+
+serial=$(printf '%s\n' "$grid" | awk -F'|' '
+    /^\| 1 \|/ { gsub(/ /, "", $4); print $4 + 0; exit }')
+
+# hotpath headline: the slowest strategy decide mean, in microseconds
+decide=$(printf '%s\n' "$hot" | awk -F'|' '
+    /decide\// { gsub(/[^0-9.]/, "", $3); if ($3 + 0 > d) d = $3 + 0 }
+    END { print d }')
+
+host=$(uname -sm | tr ' ' '-')
+date=$(date -u +%Y-%m-%d)
+
+cat > "$out" <<EOF
+{
+  "trajectory_point": ${n},
+  "date": "${date}",
+  "host": "${host}",
+  "bench": {
+    "lab_grid": {
+      "preset": "paper-72",
+      "cells_per_s_best": ${cells_s:-0},
+      "cells_per_s_serial": ${serial:-0},
+      "sim_requests_per_s_best": ${reqs_s:-0},
+      "best_threads": ${threads:-0}
+    },
+    "hotpath": {
+      "decide_mean_us_worst": ${decide:-0}
+    }
+  },
+  "notes": "recorded by tools/record_bench.sh; compare against the previous BENCH_*.json before merging a perf-sensitive change"
+}
+EOF
+echo "wrote ${out}:"
+cat "$out"

@@ -1,7 +1,7 @@
 #!/usr/bin/env sh
 # Seed (or refresh) the golden summaries and stage them for commit.
 #
-# The golden-summary test self-seeds missing files and CI warns until
+# The golden-summary test self-seeds missing files and CI fails until
 # they are committed; this script is the one-command way to pin them
 # on a machine with a Rust toolchain:
 #
