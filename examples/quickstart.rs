@@ -12,7 +12,7 @@ use std::path::PathBuf;
 use sincere::coordinator::swap::SwapManager;
 use sincere::gpu::device::{GpuConfig, SimGpu};
 use sincere::gpu::CcMode;
-use sincere::runtime::{Manifest, Registry};
+use sincere::runtime::{Manifest, ModelTable, Registry};
 use sincere::workload::tokenizer::tokenize;
 
 fn main() -> anyhow::Result<()> {
@@ -30,7 +30,9 @@ fn main() -> anyhow::Result<()> {
         mode: CcMode::On,
         ..GpuConfig::default()
     })?;
-    let mut swaps = SwapManager::new();
+    // the swap manager records per-model stats through an intern table
+    let mut swaps =
+        SwapManager::new(ModelTable::shared(registry.names()));
 
     // Load the model through the CC bounce-buffer path.
     let rep = swaps.ensure_resident(&mut gpu, &registry, "llama-sim")?;

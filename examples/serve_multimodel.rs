@@ -66,12 +66,15 @@ fn main() -> anyhow::Result<()> {
     println!("\n=== end-to-end summary ===");
     println!("{}", summary.brief());
     println!("\nper-model load samples (Fig 3 shape):");
-    // batches CSV has per-batch load times; aggregate here
+    // batches carry interned ids; resolve through the registry's
+    // sorted intern table (the same table the backend built)
+    let table = sincere::runtime::ModelTable::new(registry.names());
     let mut agg: std::collections::BTreeMap<String, (f64, usize)> =
         Default::default();
     for b in &recorder.batches {
         if b.swapped {
-            let e = agg.entry(b.model.clone()).or_default();
+            let e = agg.entry(table.name(b.model).to_string())
+                .or_default();
             e.0 += b.load_s;
             e.1 += 1;
         }

@@ -17,6 +17,7 @@ use sincere::gpu::device::{GpuConfig, SimGpu};
 use sincere::gpu::dma::Dir;
 use sincere::gpu::CcMode;
 use sincere::metrics::hist::Histogram;
+use sincere::runtime::{ModelId, ModelTable};
 use sincere::traffic::rng::Pcg64;
 use sincere::workload::tokenizer::tokenize;
 
@@ -29,13 +30,13 @@ fn main() {
         devices: (0..4).map(|d| DeviceView {
             id: d,
             mode: if d % 2 == 0 { CcMode::On } else { CcMode::Off },
-            resident: (d == 0).then(|| "llama-sim".to_string()),
+            resident: (d == 0).then_some(ModelId(0)),
             busy: d == 3,
             busy_s: 10.0 + d as f64,
             dispatched: 40 + d as u64,
         }).collect(),
         queues: (0..3).map(|i| ModelView {
-            model: format!("model-{i}"),
+            model: ModelId(i as u32),
             len: 7 + i,
             oldest_wait_s: 1.5,
             obs: 16,
@@ -62,19 +63,24 @@ fn main() {
         });
     }
 
-    // ---- queue churn ----
+    // ---- queue churn (steady state: one queue + one drain buffer,
+    // reused — the engine's allocation-free protocol) ----
+    const M: ModelId = ModelId(0);
+    let mut q = ModelQueues::new(ModelTable::shared(["m"]));
+    let mut drain: Vec<Request> = Vec::with_capacity(16);
     b.run("queues/push+pop batch of 16", || {
-        let mut q = ModelQueues::new();
         for i in 0..16u64 {
             q.push(Request {
                 id: i,
-                model: "m".into(),
+                model: M,
                 tokens: vec![1; 16],
                 arrival_s: i as f64,
                 class: 0,
             });
         }
-        std::hint::black_box(q.pop_n("m", 16));
+        drain.clear();
+        q.pop_n_into(M, 16, &mut drain);
+        std::hint::black_box(drain.len());
     });
 
     // ---- rate estimator ----
@@ -82,8 +88,8 @@ fn main() {
     let mut t = 0.0;
     b.run("rate/on_arrival+query", || {
         t += 0.25;
-        est.on_arrival("m", t);
-        std::hint::black_box(est.rate_rps("m", t));
+        est.on_arrival(M, t);
+        std::hint::black_box(est.rate_rps(M, t));
     });
 
     // ---- histogram ----

@@ -16,41 +16,49 @@ fn main() {
         .expect("run `make artifacts` first");
     let cm = CostModel::synthetic(&manifest);
 
-    let spec = lab::preset_by_name("paper-72").unwrap();
-    let grid = spec.expand(&RunConfig::default()).unwrap();
-    let jobs = grid.jobs(grid.seeds);
-    println!("# Lab grid scaling — {} cells x {} seed(s)\n",
-             grid.cells.len(), grid.seeds);
+    // paper-72: the headline grid; tenancy: the hot-path stressor
+    // (multi-tenant catalog + Zipf + classes, far more requests per
+    // cell) whose sim-req/s is the trajectory figure BENCH_*.json pins
+    for preset in ["paper-72", "tenancy"] {
+        let spec = lab::preset_by_name(preset).unwrap();
+        let grid = spec.expand(&RunConfig::default()).unwrap();
+        let jobs = grid.jobs(grid.seeds);
+        println!("# Lab grid scaling [{preset}] — {} cells x {} \
+                  seed(s)\n",
+                 grid.cells.len(), grid.seeds);
 
-    println!("| threads | wall (s) | cells/s | sim req/s | \
-              speedup vs 1 |");
-    println!("|---|---|---|---|---|");
-    let mut serial_s = 0.0f64;
-    let mut baseline: Option<String> = None;
-    for threads in [1usize, 2, 4, 8] {
-        let t0 = std::time::Instant::now();
-        let cells = LabRunner::new(&manifest, &cm)
-            .threads(threads).quiet(true).run(&jobs).unwrap();
-        let wall = t0.elapsed().as_secs_f64();
-        if threads == 1 {
-            serial_s = wall;
+        println!("| threads | wall (s) | cells/s | sim req/s | \
+                  speedup vs 1 |");
+        println!("|---|---|---|---|---|");
+        let mut serial_s = 0.0f64;
+        let mut baseline: Option<String> = None;
+        for threads in [1usize, 2, 4, 8] {
+            let t0 = std::time::Instant::now();
+            let cells = LabRunner::new(&manifest, &cm)
+                .threads(threads).quiet(true).run(&jobs).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            if threads == 1 {
+                serial_s = wall;
+            }
+            let bytes = lab::run_to_json(&cells).to_string();
+            match &baseline {
+                None => baseline = Some(bytes),
+                Some(b) => assert_eq!(
+                    *b, bytes,
+                    "{preset}: {threads} threads changed the output \
+                     bytes"),
+            }
+            // simulated request volume the pool pushed through per
+            // wall second — the grid-level analogue of cells/s
+            let sim_reqs: u64 = cells.iter().map(|c| c.generated).sum();
+            println!("| {} | {:.3} | {:.1} | {:.0} | {:.2}x |", threads,
+                     wall, jobs.len() as f64 / wall.max(1e-9),
+                     sim_reqs as f64 / wall.max(1e-9),
+                     serial_s / wall.max(1e-9));
         }
-        let bytes = lab::run_to_json(&cells).to_string();
-        match &baseline {
-            None => baseline = Some(bytes),
-            Some(b) => assert_eq!(
-                *b, bytes,
-                "{threads} threads changed the output bytes"),
-        }
-        // simulated request volume the pool pushed through per wall
-        // second — the grid-level analogue of cells/s
-        let sim_reqs: u64 = cells.iter().map(|c| c.generated).sum();
-        println!("| {} | {:.3} | {:.1} | {:.0} | {:.2}x |", threads,
-                 wall, jobs.len() as f64 / wall.max(1e-9),
-                 sim_reqs as f64 / wall.max(1e-9),
-                 serial_s / wall.max(1e-9));
+        println!();
     }
 
-    println!("\nexpected shape: near-linear speedup until the core \
+    println!("expected shape: near-linear speedup until the core \
               count, identical output bytes throughout.");
 }

@@ -11,11 +11,11 @@ use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::gpu::device::SimGpu;
 use crate::gpu::hbm::HbmBuffer;
-use crate::runtime::Registry;
+use crate::runtime::{ModelId, Registry};
 
 /// A ready-to-execute batch with its reserved workspace.
 pub struct PreparedBatch {
-    pub model: String,
+    pub model: ModelId,
     pub requests: Vec<Request>,
     pub workspace: HbmBuffer,
     /// Artifact batch size that will be used (>= requests.len()).
@@ -26,9 +26,11 @@ pub struct PreparedBatch {
 /// shrinking on OOM.  Returns None if the queue was empty or even a
 /// single-row workspace cannot fit.
 pub fn prepare(queues: &mut ModelQueues, gpu: &mut SimGpu,
-               registry: &Registry, model: &str, take: usize)
+               registry: &Registry, model: ModelId, take: usize)
                -> anyhow::Result<Option<PreparedBatch>> {
-    let entry = registry.entry(model)?;
+    let table = queues.table().clone();
+    let name = table.name(model);
+    let entry = registry.entry(name)?;
     let mut reqs = queues.pop_n(model, take.max(1));
     if reqs.is_empty() {
         return Ok(None);
@@ -40,7 +42,7 @@ pub fn prepare(queues: &mut ModelQueues, gpu: &mut SimGpu,
         match gpu.alloc(ws_bytes) {
             Ok(workspace) => {
                 return Ok(Some(PreparedBatch {
-                    model: model.to_string(),
+                    model,
                     requests: reqs,
                     workspace,
                     artifact_batch,
@@ -55,7 +57,7 @@ pub fn prepare(queues: &mut ModelQueues, gpu: &mut SimGpu,
             Err(e) => {
                 // cannot even fit one row: requeue and report
                 queues.push_front(model, reqs);
-                anyhow::bail!("workspace OOM for {model} even at batch 1: \
+                anyhow::bail!("workspace OOM for {name} even at batch 1: \
                                {e}");
             }
         }
@@ -73,7 +75,15 @@ mod tests {
     use super::*;
     use crate::gpu::device::GpuConfig;
     use crate::runtime::manifest::Manifest;
+    use crate::runtime::ModelTable;
     use std::path::PathBuf;
+
+    // sole entry of the single-model test table
+    const LLAMA: ModelId = ModelId(0);
+
+    fn queues() -> ModelQueues {
+        ModelQueues::new(ModelTable::shared(["llama-sim"]))
+    }
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -86,7 +96,7 @@ mod tests {
     }
 
     fn req(id: u64) -> Request {
-        Request { id, model: "llama-sim".into(), tokens: vec![0; 16],
+        Request { id, model: LLAMA, tokens: vec![0; 16],
                   arrival_s: id as f64, class: 0 }
     }
 
@@ -100,15 +110,15 @@ mod tests {
     fn prepares_full_batch() {
         let reg = registry();
         let mut gpu = gpu(24 * 1024 * 1024);
-        let mut q = ModelQueues::new();
+        let mut q = queues();
         for i in 0..5 {
             q.push(req(i));
         }
-        let b = prepare(&mut q, &mut gpu, &reg, "llama-sim", 4)
+        let b = prepare(&mut q, &mut gpu, &reg, LLAMA, 4)
             .unwrap().unwrap();
         assert_eq!(b.requests.len(), 4);
         assert_eq!(b.artifact_batch, 4);
-        assert_eq!(q.len("llama-sim"), 1);
+        assert_eq!(q.len(LLAMA), 1);
         assert!(gpu.mem_in_use() > 0);
         let back = release(&mut gpu, b);
         assert_eq!(back.len(), 4);
@@ -119,8 +129,8 @@ mod tests {
     fn empty_queue_returns_none() {
         let reg = registry();
         let mut gpu = gpu(24 * 1024 * 1024);
-        let mut q = ModelQueues::new();
-        assert!(prepare(&mut q, &mut gpu, &reg, "llama-sim", 4)
+        let mut q = queues();
+        assert!(prepare(&mut q, &mut gpu, &reg, LLAMA, 4)
                 .unwrap().is_none());
     }
 
@@ -131,16 +141,16 @@ mod tests {
         // capacity fits a 2-row workspace but not 8
         let cap = spec.batch_workspace_bytes(2) + 1024;
         let mut gpu = gpu(cap);
-        let mut q = ModelQueues::new();
+        let mut q = queues();
         for i in 0..8 {
             q.push(req(i));
         }
-        let b = prepare(&mut q, &mut gpu, &reg, "llama-sim", 8)
+        let b = prepare(&mut q, &mut gpu, &reg, LLAMA, 8)
             .unwrap().unwrap();
         assert!(b.requests.len() <= 2, "shrunk to {}", b.requests.len());
         assert_eq!(b.requests[0].id, 0, "head preserved");
         // the requeued tail must still be in order behind the batch
-        let rest: Vec<u64> = q.pop_n("llama-sim", 10).iter()
+        let rest: Vec<u64> = q.pop_n(LLAMA, 10).iter()
             .map(|r| r.id).collect();
         let expect: Vec<u64> = (b.requests.len() as u64..8).collect();
         assert_eq!(rest, expect);
@@ -150,9 +160,9 @@ mod tests {
     fn oom_at_one_row_errors_and_requeues() {
         let reg = registry();
         let mut gpu = gpu(1024); // nothing fits
-        let mut q = ModelQueues::new();
+        let mut q = queues();
         q.push(req(0));
-        assert!(prepare(&mut q, &mut gpu, &reg, "llama-sim", 1).is_err());
-        assert_eq!(q.len("llama-sim"), 1, "request must be requeued");
+        assert!(prepare(&mut q, &mut gpu, &reg, LLAMA, 1).is_err());
+        assert_eq!(q.len(LLAMA), 1, "request must be requeued");
     }
 }

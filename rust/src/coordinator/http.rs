@@ -33,7 +33,7 @@ use crate::coordinator::strategy::{strategy_by_name, Decision,
                                    SchedContext};
 use crate::engine::{build_device_views, build_views, resolve_device,
                     Clock, ExecBackend, RealBackend, WallClock};
-use crate::runtime::Registry;
+use crate::runtime::{ModelId, Registry};
 use crate::util::json::Json;
 use crate::workload::tokenizer::tokenize;
 
@@ -99,15 +99,20 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
     // arrival stamps and scheduler decisions share one time origin
     let mut clock = WallClock::new();
     let start = clock.origin();
+    // the backend owns the run's intern table; connection handlers
+    // resolve each arriving model name to its id exactly once
+    let mut backend = RealBackend::new(cfg, registry)?;
+    let table = backend.table().clone();
 
     // ---------------- accept loop (thread) -----------------------------
     let acceptor = {
         let shutdown = shutdown.clone();
         let stats = stats.clone();
-        let known: Vec<(String, usize, u32)> = registry.names().iter()
-            .map(|n| {
+        let known: Vec<(String, ModelId, usize, u32)> =
+            registry.names().iter().map(|n| {
                 let s = &registry.entry(n).unwrap().spec;
-                (n.clone(), s.prompt_len, s.vocab as u32)
+                (n.clone(), table.require(n).unwrap(),
+                 s.prompt_len, s.vocab as u32)
             }).collect();
         let next_id = AtomicU64::new(0);
         std::thread::spawn(move || {
@@ -141,22 +146,23 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
     // (possibly mixed CC/No-CC) fleet.  Wall-clock execution is
     // serialized on this thread, so every device is free at each
     // decision point; placement still spreads residency and load.
-    let mut backend = RealBackend::new(cfg, registry)?;
     let n_dev = backend.n_devices();
     let free: Vec<usize> = (0..n_dev).collect();
     let idle_until = vec![0.0f64; n_dev];
     let mut dev_busy_s = vec![0.0f64; n_dev];
     let mut dispatched = vec![0u64; n_dev];
-    let mut queues = ModelQueues::new();
+    let mut queues = ModelQueues::new(table.clone());
     let mut rates = RateEstimator::default();
-    let mut exec_est: HashMap<String, f64> = HashMap::new();
+    // id-indexed exec-EWMA; NaN = never executed
+    let mut exec_est: Vec<f64> = vec![f64::NAN; table.len()];
+    let mut batch_buf: Vec<Request> = Vec::new();
     let mut replies: HashMap<u64, mpsc::Sender<Reply>> = HashMap::new();
 
     loop {
         loop {
             match rx.try_recv() {
                 Ok(job) => {
-                    rates.on_arrival(&job.req.model, job.req.arrival_s);
+                    rates.on_arrival(job.req.model, job.req.arrival_s);
                     replies.insert(job.req.id, job.reply);
                     queues.push(job.req);
                 }
@@ -190,12 +196,14 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
             Decision::Wait => std::thread::sleep(cfg.tick),
             Decision::Process { model, take, device } => {
                 let dev = resolve_device(&ctx, placement.as_ref(),
-                                         &model, device, &free);
+                                         model, device, &free);
                 let swap = backend.ensure_resident(&mut clock, dev,
-                                                   &model)?;
+                                                   model)?;
+                batch_buf.clear();
                 let Some(out) = backend.execute_batch(&mut clock,
                                                       &mut queues, dev,
-                                                      &model, take)?
+                                                      model, take,
+                                                      &mut batch_buf)?
                 else {
                     continue;
                 };
@@ -203,10 +211,10 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
                 dev_busy_s[dev] += swap.unload_s + swap.load_s
                     + out.exec_s + out.io_s;
                 dispatched[dev] += 1;
-                let e = exec_est.entry(model.clone())
-                    .or_insert(out.exec_s);
-                *e = 0.3 * out.exec_s + 0.7 * *e;
-                for (r, toks) in out.requests.into_iter()
+                let e = &mut exec_est[model.index()];
+                let prev = if e.is_nan() { out.exec_s } else { *e };
+                *e = 0.3 * out.exec_s + 0.7 * prev;
+                for (r, toks) in batch_buf.drain(..)
                     .zip(out.tokens.into_iter())
                 {
                     stats.completed.fetch_add(1, Ordering::Relaxed);
@@ -230,7 +238,8 @@ pub fn run_http(cfg: &RunConfig, registry: &Registry, addr: &str,
 // ---------------------------------------------------------- connection
 
 fn handle_conn(mut stream: TcpStream, id: u64, start: Instant,
-               known: &[(String, usize, u32)], tx: mpsc::Sender<Job>,
+               known: &[(String, ModelId, usize, u32)],
+               tx: mpsc::Sender<Job>,
                stats: &ServerStats) -> anyhow::Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
@@ -278,8 +287,8 @@ fn handle_conn(mut stream: TcpStream, id: u64, start: Instant,
                 .unwrap_or_default().to_string();
             let prompt = j.get("prompt").and_then(|p| p.as_str())
                 .unwrap_or_default();
-            let Some((_, prompt_len, vocab)) =
-                known.iter().find(|(n, _, _)| *n == model)
+            let Some((_, mid, prompt_len, vocab)) =
+                known.iter().find(|(n, _, _, _)| *n == model)
             else {
                 stats.rejected.fetch_add(1, Ordering::Relaxed);
                 return respond(&mut stream, 400,
@@ -288,7 +297,7 @@ fn handle_conn(mut stream: TcpStream, id: u64, start: Instant,
             };
             let req = Request {
                 id,
-                model: model.clone(),
+                model: *mid,
                 tokens: tokenize(prompt, *prompt_len, *vocab),
                 arrival_s: start.elapsed().as_secs_f64(),
                 class: 0,

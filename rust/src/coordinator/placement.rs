@@ -22,6 +22,7 @@ use std::cell::Cell;
 
 use crate::coordinator::strategy::{ModelView, SchedContext};
 use crate::gpu::CcMode;
+use crate::runtime::ModelId;
 
 /// A fleet placement policy.
 pub trait Placement: Send {
@@ -109,8 +110,8 @@ fn least_loaded_of(ctx: &SchedContext, free: &[usize]) -> usize {
 }
 
 /// Affinity step: resident free device if any, else least-loaded.
-fn sticky_or_least_loaded(ctx: &SchedContext, model: &str, free: &[usize])
-                          -> usize {
+fn sticky_or_least_loaded(ctx: &SchedContext, model: ModelId,
+                          free: &[usize]) -> usize {
     ctx.resident_on_free(model)
         .filter(|d| free.contains(d))
         .unwrap_or_else(|| least_loaded_of(ctx, free))
@@ -130,7 +131,7 @@ impl Placement for Affinity {
 
     fn place(&self, ctx: &SchedContext, view: &ModelView, free: &[usize])
              -> usize {
-        sticky_or_least_loaded(ctx, &view.model, free)
+        sticky_or_least_loaded(ctx, view.model, free)
     }
 }
 
@@ -204,10 +205,10 @@ impl Placement for CcAware {
                 .filter(|&d| ctx.devices[d].mode == CcMode::Off)
                 .collect();
             if !nocc.is_empty() {
-                return sticky_or_least_loaded(ctx, &view.model, &nocc);
+                return sticky_or_least_loaded(ctx, view.model, &nocc);
             }
         }
-        sticky_or_least_loaded(ctx, &view.model, free)
+        sticky_or_least_loaded(ctx, view.model, free)
     }
 }
 
@@ -216,21 +217,25 @@ mod tests {
     use super::*;
     use crate::coordinator::strategy::DeviceView;
 
-    fn device(id: usize, mode: CcMode, resident: Option<&str>, busy_s: f64)
-              -> DeviceView {
+    // Sorted-table ids for a two-model test fleet ("a" < "b").
+    const A: ModelId = ModelId(0);
+    const B: ModelId = ModelId(1);
+
+    fn device(id: usize, mode: CcMode, resident: Option<ModelId>,
+              busy_s: f64) -> DeviceView {
         DeviceView {
             id,
             mode,
-            resident: resident.map(|s| s.to_string()),
+            resident,
             busy: false,
             busy_s,
             dispatched: 0,
         }
     }
 
-    fn view(model: &str, wait: f64) -> ModelView {
+    fn view(model: ModelId, wait: f64) -> ModelView {
         ModelView {
-            model: model.into(),
+            model,
             len: 4,
             oldest_wait_s: wait,
             obs: 8,
@@ -244,7 +249,7 @@ mod tests {
         SchedContext {
             now_s: 10.0,
             devices,
-            queues: vec![view("a", 0.1)],
+            queues: vec![view(A, 0.1)],
             sla_s: 6.0,
             timeout_s: 3.0,
         }
@@ -253,19 +258,19 @@ mod tests {
     #[test]
     fn affinity_routes_to_resident_device() {
         let c = ctx(vec![device(0, CcMode::Off, None, 5.0),
-                         device(1, CcMode::Off, Some("a"), 9.0)]);
+                         device(1, CcMode::Off, Some(A), 9.0)]);
         let p = Affinity;
-        assert_eq!(p.place(&c, &view("a", 0.1), &[0, 1]), 1,
+        assert_eq!(p.place(&c, &view(A, 0.1), &[0, 1]), 1,
                    "resident device wins even when busier");
-        assert_eq!(p.place(&c, &view("b", 0.1), &[0, 1]), 0,
+        assert_eq!(p.place(&c, &view(B, 0.1), &[0, 1]), 0,
                    "unplaced model goes least-loaded");
     }
 
     #[test]
     fn affinity_ignores_resident_outside_free_set() {
         let c = ctx(vec![device(0, CcMode::Off, None, 5.0),
-                         device(1, CcMode::Off, Some("a"), 9.0)]);
-        assert_eq!(Affinity.place(&c, &view("a", 0.1), &[0]), 0);
+                         device(1, CcMode::Off, Some(A), 9.0)]);
+        assert_eq!(Affinity.place(&c, &view(A, 0.1), &[0]), 0);
     }
 
     #[test]
@@ -274,7 +279,7 @@ mod tests {
                          device(1, CcMode::Off, None, 0.0),
                          device(2, CcMode::Off, None, 0.0)]);
         let p = RoundRobin::default();
-        let v = view("a", 0.1);
+        let v = view(A, 0.1);
         assert_eq!(p.place(&c, &v, &[0, 1, 2]), 0);
         assert_eq!(p.place(&c, &v, &[0, 1, 2]), 1);
         assert_eq!(p.place(&c, &v, &[0, 1, 2]), 2);
@@ -289,36 +294,36 @@ mod tests {
         let c = ctx(vec![device(0, CcMode::Off, None, 7.0),
                          device(1, CcMode::Off, None, 2.0),
                          device(2, CcMode::Off, None, 2.0)]);
-        assert_eq!(LeastLoaded.place(&c, &view("a", 0.1), &[0, 1, 2]), 1,
+        assert_eq!(LeastLoaded.place(&c, &view(A, 0.1), &[0, 1, 2]), 1,
                    "ties break to the lowest id");
     }
 
     #[test]
     fn cc_aware_steers_tight_requests_to_nocc() {
-        let c = ctx(vec![device(0, CcMode::On, Some("a"), 0.0),
+        let c = ctx(vec![device(0, CcMode::On, Some(A), 0.0),
                          device(1, CcMode::Off, None, 5.0)]);
         let p = CcAware;
         // comfortable headroom: affinity keeps "a" on the CC device
-        assert_eq!(p.place(&c, &view("a", 0.1), &[0, 1]), 0);
+        assert_eq!(p.place(&c, &view(A, 0.1), &[0, 1]), 0);
         // tight headroom (wait 2.5 + load 0.5 + exec 0.5 > 3.0):
         // prefer the No-CC device even though it forces a swap
-        assert_eq!(p.place(&c, &view("a", 2.5), &[0, 1]), 1);
+        assert_eq!(p.place(&c, &view(A, 2.5), &[0, 1]), 1);
     }
 
     #[test]
     fn cc_aware_falls_back_when_no_nocc_is_free() {
         let c = ctx(vec![device(0, CcMode::On, None, 1.0),
                          device(1, CcMode::On, None, 0.0)]);
-        assert_eq!(CcAware.place(&c, &view("a", 5.0), &[0, 1]), 1);
+        assert_eq!(CcAware.place(&c, &view(A, 5.0), &[0, 1]), 1);
     }
 
     #[test]
     fn single_device_fleet_always_places_on_device_zero() {
         // the devices=1 parity guarantee: every policy is a constant
-        let c = ctx(vec![device(0, CcMode::Off, Some("a"), 3.0)]);
+        let c = ctx(vec![device(0, CcMode::Off, Some(A), 3.0)]);
         for entry in PLACEMENTS {
             let p = (entry.make)();
-            assert_eq!(p.place(&c, &view("b", 4.0), &[0]), 0,
+            assert_eq!(p.place(&c, &view(B, 4.0), &[0]), 0,
                        "{}", entry.name);
         }
     }

@@ -26,28 +26,32 @@
 //! work: the timer guarantee dispatches the longest-waiting head first,
 //! so among the queues that would force a swap, the one whose head has
 //! waited longest is the most likely next residency.  Ties break to the
-//! longer queue, then lexicographically, so the hint is deterministic —
-//! a requirement for the DES-vs-real parity contract.
+//! longer queue, then lexicographically — and because the intern table
+//! is sorted, comparing [`ModelId`]s decides those name ties
+//! identically — so the hint is deterministic, a requirement for the
+//! DES-vs-real parity contract.
 //!
 //! [`Strategy::next_hint`]: crate::coordinator::strategy::Strategy::next_hint
 
 use crate::coordinator::strategy::SchedContext;
+use crate::runtime::ModelId;
 
 /// Predict the model most likely to be dispatched after `chosen`:
 /// the longest-waiting other queue (timer order), ties to the longer
-/// queue, then the lexicographically smallest name.  `None` when no
-/// other queue holds work.
-pub fn predict_next(ctx: &SchedContext, chosen: &str) -> Option<String> {
+/// queue, then the lexicographically smallest name (== smallest id).
+/// `None` when no other queue holds work.
+pub fn predict_next(ctx: &SchedContext, chosen: ModelId)
+                    -> Option<ModelId> {
     ctx.queues.iter()
         .filter(|v| v.model != chosen && v.len > 0)
         .max_by(|a, b| {
             a.oldest_wait_s.partial_cmp(&b.oldest_wait_s).unwrap()
                 .then(a.len.cmp(&b.len))
-                // max_by keeps the *greater* element: reverse the name
+                // max_by keeps the *greater* element: reverse the id
                 // order so the smaller name wins ties
                 .then(b.model.cmp(&a.model))
         })
-        .map(|v| v.model.clone())
+        .map(|v| v.model)
 }
 
 #[cfg(test)]
@@ -55,9 +59,16 @@ mod tests {
     use super::*;
     use crate::coordinator::strategy::ModelView;
 
-    fn view(model: &str, len: usize, wait: f64) -> ModelView {
+    // Sorted-table ids: "a" < "b" < "c"; X is a model outside the
+    // queue set (the currently dispatched one in some tests).
+    const A: ModelId = ModelId(0);
+    const B: ModelId = ModelId(1);
+    const C: ModelId = ModelId(2);
+    const X: ModelId = ModelId(9);
+
+    fn view(model: ModelId, len: usize, wait: f64) -> ModelView {
         ModelView {
-            model: model.into(),
+            model,
             len,
             oldest_wait_s: wait,
             obs: 8,
@@ -79,29 +90,29 @@ mod tests {
 
     #[test]
     fn predicts_longest_waiting_other_queue() {
-        let c = ctx(vec![view("a", 4, 5.0), view("b", 2, 2.0),
-                         view("c", 9, 4.0)]);
-        assert_eq!(predict_next(&c, "a"), Some("c".into()),
-                   "a excluded; c has waited longest among the rest");
-        assert_eq!(predict_next(&c, "c"), Some("a".into()));
+        let c = ctx(vec![view(A, 4, 5.0), view(B, 2, 2.0),
+                         view(C, 9, 4.0)]);
+        assert_eq!(predict_next(&c, A), Some(C),
+                   "A excluded; C has waited longest among the rest");
+        assert_eq!(predict_next(&c, C), Some(A));
     }
 
     #[test]
     fn ties_break_to_longer_queue_then_name() {
-        let c = ctx(vec![view("a", 1, 2.0), view("b", 5, 2.0)]);
-        assert_eq!(predict_next(&c, "x"), Some("b".into()));
-        let c = ctx(vec![view("b", 3, 2.0), view("a", 3, 2.0)]);
-        assert_eq!(predict_next(&c, "x"), Some("a".into()),
-                   "full tie is deterministic: smallest name");
+        let c = ctx(vec![view(A, 1, 2.0), view(B, 5, 2.0)]);
+        assert_eq!(predict_next(&c, X), Some(B));
+        let c = ctx(vec![view(B, 3, 2.0), view(A, 3, 2.0)]);
+        assert_eq!(predict_next(&c, X), Some(A),
+                   "full tie is deterministic: smallest name wins");
     }
 
     #[test]
     fn no_other_work_means_no_hint() {
-        assert_eq!(predict_next(&ctx(vec![]), "a"), None);
-        let c = ctx(vec![view("a", 4, 1.0)]);
-        assert_eq!(predict_next(&c, "a"), None,
+        assert_eq!(predict_next(&ctx(vec![]), A), None);
+        let c = ctx(vec![view(A, 4, 1.0)]);
+        assert_eq!(predict_next(&c, A), None,
                    "the dispatched model is never its own hint");
-        let c = ctx(vec![view("b", 0, 0.0)]);
-        assert_eq!(predict_next(&c, "a"), None, "empty queues don't hint");
+        let c = ctx(vec![view(B, 0, 0.0)]);
+        assert_eq!(predict_next(&c, A), None, "empty queues don't hint");
     }
 }

@@ -1,49 +1,81 @@
 //! Per-model FIFO queues (§III-C4: "inference requests are queued in
 //! order of arrival with one queue for every model").
+//!
+//! Queues are a dense `Vec<VecDeque<Request>>` indexed by interned
+//! [`ModelId`] — no per-push map lookups or key clones.  Because the
+//! intern table is sorted, iterating queues by index visits models in
+//! exactly the lexicographic order the old `BTreeMap<String, _>` did,
+//! so expiry order, drain order and every downstream table stay
+//! byte-identical.
+//!
+//! The drain entry points come in two flavors: allocating (`pop_n`,
+//! `expire`, `expire_by` — convenient for tests and cold paths) and
+//! `_into` variants that fill a caller-owned buffer, which the engine
+//! reuses across every tick so the steady-state loop allocates
+//! nothing.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::VecDeque;
+use std::sync::Arc;
 
 use crate::coordinator::request::Request;
+use crate::runtime::{ModelId, ModelTable};
 
-/// One FIFO per model, arrival order preserved within each queue.
-#[derive(Debug, Default)]
+/// One FIFO per interned model, arrival order preserved within each
+/// queue.
+#[derive(Debug)]
 pub struct ModelQueues {
-    queues: BTreeMap<String, VecDeque<Request>>,
+    table: Arc<ModelTable>,
+    queues: Vec<VecDeque<Request>>,
 }
 
 impl ModelQueues {
-    pub fn new() -> ModelQueues {
-        ModelQueues::default()
+    /// Queues for every model in `table`; ids minted by that table are
+    /// the only valid keys.
+    pub fn new(table: Arc<ModelTable>) -> ModelQueues {
+        let queues = (0..table.len()).map(|_| VecDeque::new()).collect();
+        ModelQueues { table, queues }
+    }
+
+    /// The intern table the queues are addressed by.
+    pub fn table(&self) -> &Arc<ModelTable> {
+        &self.table
     }
 
     pub fn push(&mut self, req: Request) {
-        self.queues.entry(req.model.clone()).or_default().push_back(req);
+        self.queues[req.model.index()].push_back(req);
     }
 
     /// Pop up to `n` requests from `model`'s queue head.
-    pub fn pop_n(&mut self, model: &str, n: usize) -> Vec<Request> {
-        let Some(q) = self.queues.get_mut(model) else {
-            return Vec::new();
-        };
+    pub fn pop_n(&mut self, model: ModelId, n: usize) -> Vec<Request> {
+        let mut out = Vec::new();
+        self.pop_n_into(model, n, &mut out);
+        out
+    }
+
+    /// Pop up to `n` requests from `model`'s queue head into `out`
+    /// (appended; `out` is *not* cleared — callers own its lifecycle).
+    pub fn pop_n_into(&mut self, model: ModelId, n: usize,
+                      out: &mut Vec<Request>) {
+        let q = &mut self.queues[model.index()];
         let take = n.min(q.len());
-        q.drain(..take).collect()
+        out.extend(q.drain(..take));
     }
 
     /// Push requests back to the *front*, preserving their order — used
     /// when a batch had to shrink (OOM guard).
-    pub fn push_front(&mut self, model: &str, reqs: Vec<Request>) {
-        let q = self.queues.entry(model.to_string()).or_default();
+    pub fn push_front(&mut self, model: ModelId, reqs: Vec<Request>) {
+        let q = &mut self.queues[model.index()];
         for r in reqs.into_iter().rev() {
             q.push_front(r);
         }
     }
 
-    pub fn len(&self, model: &str) -> usize {
-        self.queues.get(model).map(|q| q.len()).unwrap_or(0)
+    pub fn len(&self, model: ModelId) -> usize {
+        self.queues[model.index()].len()
     }
 
     pub fn total_len(&self) -> usize {
-        self.queues.values().map(|q| q.len()).sum()
+        self.queues.iter().map(|q| q.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -51,21 +83,23 @@ impl ModelQueues {
     }
 
     /// Arrival time of the head (oldest) request, if any.
-    pub fn head_arrival_s(&self, model: &str) -> Option<f64> {
-        self.queues.get(model).and_then(|q| q.front())
-            .map(|r| r.arrival_s)
+    pub fn head_arrival_s(&self, model: ModelId) -> Option<f64> {
+        self.queues[model.index()].front().map(|r| r.arrival_s)
     }
 
-    /// Models with at least one queued request, deterministic order.
-    pub fn nonempty_models(&self) -> Vec<&str> {
-        self.queues.iter().filter(|(_, q)| !q.is_empty())
-            .map(|(m, _)| m.as_str()).collect()
+    /// Models with at least one queued request, in table (==
+    /// lexicographic) order — an iterator, so the per-tick view build
+    /// allocates nothing.
+    pub fn nonempty_ids(&self) -> impl Iterator<Item = ModelId> + '_ {
+        self.queues.iter().enumerate()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(i, _)| ModelId(i as u32))
     }
 
     /// Drain everything (end-of-run accounting of unserved requests).
     pub fn drain_all(&mut self) -> Vec<Request> {
         let mut out = Vec::new();
-        for (_, q) in self.queues.iter_mut() {
+        for q in self.queues.iter_mut() {
             out.extend(q.drain(..));
         }
         out
@@ -79,7 +113,15 @@ impl ModelQueues {
     /// unbounded latency.
     pub fn expire(&mut self, now_s: f64, sla_s: f64) -> Vec<Request> {
         let mut out = Vec::new();
-        for (_, q) in self.queues.iter_mut() {
+        self.expire_into(now_s, sla_s, &mut out);
+        out
+    }
+
+    /// Allocation-free [`expire`]: expired requests are appended to
+    /// `out` in the same (queue-then-FIFO) order.
+    pub fn expire_into(&mut self, now_s: f64, sla_s: f64,
+                       out: &mut Vec<Request>) {
+        for q in self.queues.iter_mut() {
             // FIFO per queue: expired requests are a prefix
             while q.front().map(|r| now_s - r.arrival_s > sla_s)
                 .unwrap_or(false)
@@ -87,7 +129,6 @@ impl ModelQueues {
                 out.push(q.pop_front().unwrap());
             }
         }
-        out
     }
 
     /// Per-class expiry: drop requests strictly past their own
@@ -103,18 +144,30 @@ impl ModelQueues {
         F: Fn(&Request) -> f64,
     {
         let mut out = Vec::new();
-        for (_, q) in self.queues.iter_mut() {
-            let mut kept = VecDeque::with_capacity(q.len());
-            for r in q.drain(..) {
+        self.expire_by_into(now_s, deadline_at, &mut out);
+        out
+    }
+
+    /// Allocation-free [`expire_by`]: instead of draining into a fresh
+    /// `kept` deque per queue, rotate each queue through itself —
+    /// survivors pop off the front and push back on, so after exactly
+    /// `len` steps the queue holds the survivors in their original
+    /// order and expired entries landed in `out`.
+    pub fn expire_by_into<F>(&mut self, now_s: f64, deadline_at: F,
+                             out: &mut Vec<Request>)
+    where
+        F: Fn(&Request) -> f64,
+    {
+        for q in self.queues.iter_mut() {
+            for _ in 0..q.len() {
+                let r = q.pop_front().unwrap();
                 if now_s > deadline_at(&r) {
                     out.push(r);
                 } else {
-                    kept.push_back(r);
+                    q.push_back(r);
                 }
             }
-            *q = kept;
         }
-        out
     }
 
     /// Queued requests per tenant class (admission's `class-weighted`
@@ -122,7 +175,7 @@ impl ModelQueues {
     /// and identical in DES and real-virtual runs.
     pub fn class_counts(&self) -> [u64; crate::tenancy::N_CLASSES] {
         let mut counts = [0u64; crate::tenancy::N_CLASSES];
-        for q in self.queues.values() {
+        for q in &self.queues {
             for r in q {
                 counts[r.class as usize % crate::tenancy::N_CLASSES] += 1;
             }
@@ -135,75 +188,104 @@ impl ModelQueues {
 mod tests {
     use super::*;
 
-    fn req(id: u64, model: &str, at: f64) -> Request {
-        Request { id, model: model.into(), tokens: vec![0; 4],
-                  arrival_s: at, class: 0 }
+    fn table() -> Arc<ModelTable> {
+        ModelTable::shared(["a", "b"])
     }
+
+    fn req(id: u64, model: ModelId, at: f64) -> Request {
+        Request { id, model, tokens: vec![0; 4], arrival_s: at, class: 0 }
+    }
+
+    // With the sorted two-model table, "a" is id 0 and "b" is id 1.
+    const A: ModelId = ModelId(0);
+    const B: ModelId = ModelId(1);
 
     #[test]
     fn fifo_order_within_model() {
-        let mut q = ModelQueues::new();
-        q.push(req(1, "a", 0.0));
-        q.push(req(2, "b", 0.1));
-        q.push(req(3, "a", 0.2));
-        let got = q.pop_n("a", 10);
+        let mut q = ModelQueues::new(table());
+        q.push(req(1, A, 0.0));
+        q.push(req(2, B, 0.1));
+        q.push(req(3, A, 0.2));
+        let got = q.pop_n(A, 10);
         assert_eq!(got.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1, 3]);
-        assert_eq!(q.len("a"), 0);
-        assert_eq!(q.len("b"), 1);
+        assert_eq!(q.len(A), 0);
+        assert_eq!(q.len(B), 1);
     }
 
     #[test]
     fn pop_n_respects_limit() {
-        let mut q = ModelQueues::new();
+        let mut q = ModelQueues::new(table());
         for i in 0..5 {
-            q.push(req(i, "a", i as f64));
+            q.push(req(i, A, i as f64));
         }
-        assert_eq!(q.pop_n("a", 3).len(), 3);
-        assert_eq!(q.len("a"), 2);
-        assert_eq!(q.pop_n("missing", 3).len(), 0);
+        assert_eq!(q.pop_n(A, 3).len(), 3);
+        assert_eq!(q.len(A), 2);
+        assert_eq!(q.pop_n(B, 3).len(), 0, "empty queue pops nothing");
+    }
+
+    #[test]
+    fn pop_n_into_appends_without_clearing() {
+        let mut q = ModelQueues::new(table());
+        for i in 0..4 {
+            q.push(req(i, A, i as f64));
+        }
+        let mut buf = Vec::new();
+        q.pop_n_into(A, 2, &mut buf);
+        q.pop_n_into(A, 10, &mut buf);
+        let ids: Vec<u64> = buf.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
     }
 
     #[test]
     fn push_front_preserves_order() {
-        let mut q = ModelQueues::new();
-        q.push(req(3, "a", 3.0));
-        q.push_front("a", vec![req(1, "a", 1.0), req(2, "a", 2.0)]);
-        let ids: Vec<u64> = q.pop_n("a", 10).iter().map(|r| r.id).collect();
+        let mut q = ModelQueues::new(table());
+        q.push(req(3, A, 3.0));
+        q.push_front(A, vec![req(1, A, 1.0), req(2, A, 2.0)]);
+        let ids: Vec<u64> = q.pop_n(A, 10).iter().map(|r| r.id).collect();
         assert_eq!(ids, vec![1, 2, 3]);
     }
 
     #[test]
     fn head_arrival_and_nonempty() {
-        let mut q = ModelQueues::new();
-        assert!(q.head_arrival_s("a").is_none());
-        q.push(req(1, "a", 5.0));
-        q.push(req(2, "a", 6.0));
-        assert_eq!(q.head_arrival_s("a"), Some(5.0));
-        assert_eq!(q.nonempty_models(), vec!["a"]);
+        let mut q = ModelQueues::new(table());
+        assert!(q.head_arrival_s(A).is_none());
+        q.push(req(1, A, 5.0));
+        q.push(req(2, A, 6.0));
+        assert_eq!(q.head_arrival_s(A), Some(5.0));
+        assert_eq!(q.nonempty_ids().collect::<Vec<_>>(), vec![A]);
         assert_eq!(q.total_len(), 2);
     }
 
     #[test]
+    fn nonempty_ids_in_table_order() {
+        let mut q = ModelQueues::new(table());
+        q.push(req(1, B, 0.0));
+        q.push(req(2, A, 1.0));
+        // table order, not arrival order — the old BTreeMap contract
+        assert_eq!(q.nonempty_ids().collect::<Vec<_>>(), vec![A, B]);
+    }
+
+    #[test]
     fn drain_all_empties() {
-        let mut q = ModelQueues::new();
-        q.push(req(1, "a", 0.0));
-        q.push(req(2, "b", 0.0));
+        let mut q = ModelQueues::new(table());
+        q.push(req(1, A, 0.0));
+        q.push(req(2, B, 0.0));
         assert_eq!(q.drain_all().len(), 2);
         assert!(q.is_empty());
     }
 
     #[test]
     fn expire_drops_only_overdue_prefix() {
-        let mut q = ModelQueues::new();
-        q.push(req(1, "a", 0.0));
-        q.push(req(2, "a", 5.0));
-        q.push(req(3, "b", 1.0));
+        let mut q = ModelQueues::new(table());
+        q.push(req(1, A, 0.0));
+        q.push(req(2, A, 5.0));
+        q.push(req(3, B, 1.0));
         // now=9, sla=6: requests older than 9-6=3 expire -> ids 1, 3
         let dropped: Vec<u64> = q.expire(9.0, 6.0).iter()
             .map(|r| r.id).collect();
         assert_eq!(dropped, vec![1, 3]);
-        assert_eq!(q.len("a"), 1);
-        assert_eq!(q.head_arrival_s("a"), Some(5.0));
+        assert_eq!(q.len(A), 1);
+        assert_eq!(q.head_arrival_s(A), Some(5.0));
         // boundary: exactly at SLA is NOT expired
         assert!(q.expire(11.0, 6.0).is_empty());
         assert_eq!(q.expire(11.1, 6.0).len(), 1);
@@ -214,11 +296,11 @@ mod tests {
         // §III-C3 boundary, matching SlaTracker::on_complete's
         // `latency <= sla` rule: a request whose age equals the SLA is
         // still servable, and only strictly-older requests expire.
-        let mut q = ModelQueues::new();
-        q.push(req(1, "a", 4.0));
+        let mut q = ModelQueues::new(table());
+        q.push(req(1, A, 4.0));
         assert!(q.expire(10.0, 6.0).is_empty(),
                 "age == SLA must not expire");
-        assert_eq!(q.len("a"), 1);
+        assert_eq!(q.len(A), 1);
         let dropped = q.expire(10.0 + 1e-9, 6.0);
         assert_eq!(dropped.len(), 1, "just past the deadline expires");
         assert!(q.is_empty());
@@ -226,10 +308,10 @@ mod tests {
 
     #[test]
     fn expire_by_honors_per_class_deadlines() {
-        let mut q = ModelQueues::new();
-        let mut gold = req(1, "a", 0.0);
+        let mut q = ModelQueues::new(table());
+        let mut gold = req(1, A, 0.0);
         gold.class = 0; // deadline 3.0 at sla 6
-        let mut free = req(2, "a", 0.0);
+        let mut free = req(2, A, 0.0);
         free.class = 2; // deadline 9.0
         q.push(gold);
         q.push(free);
@@ -245,17 +327,17 @@ mod tests {
         let dropped: Vec<u64> = q.expire_by(4.0, deadline).iter()
             .map(|r| r.id).collect();
         assert_eq!(dropped, vec![1]);
-        assert_eq!(q.len("a"), 1);
-        assert_eq!(q.pop_n("a", 1)[0].id, 2);
+        assert_eq!(q.len(A), 1);
+        assert_eq!(q.pop_n(A, 1)[0].id, 2);
     }
 
     #[test]
     fn expire_by_keeps_survivor_order_across_gaps() {
         // mixed deadlines mean expiry can hit the *middle* of a queue;
-        // the survivors around the gap must keep FIFO order
-        let mut q = ModelQueues::new();
+        // the rotation must keep FIFO order around the gap
+        let mut q = ModelQueues::new(table());
         for (id, at, class) in [(1, 0.0, 2), (2, 1.0, 0), (3, 2.0, 2)] {
-            let mut r = req(id, "a", at);
+            let mut r = req(id, A, at);
             r.class = class;
             q.push(r);
         }
@@ -265,23 +347,23 @@ mod tests {
         let dropped: Vec<u64> = q.expire_by(5.0, deadline).iter()
             .map(|r| r.id).collect();
         assert_eq!(dropped, vec![2], "only the gold in the middle dies");
-        let rest: Vec<u64> = q.pop_n("a", 10).iter().map(|r| r.id)
+        let rest: Vec<u64> = q.pop_n(A, 10).iter().map(|r| r.id)
             .collect();
         assert_eq!(rest, vec![1, 3]);
     }
 
     #[test]
     fn class_counts_cover_all_queues() {
-        let mut q = ModelQueues::new();
+        let mut q = ModelQueues::new(table());
         assert_eq!(q.class_counts(), [0, 0, 0]);
-        for (id, model, class) in [(1, "a", 0), (2, "a", 2),
-                                   (3, "b", 2), (4, "b", 1)] {
+        for (id, model, class) in [(1, A, 0), (2, A, 2),
+                                   (3, B, 2), (4, B, 1)] {
             let mut r = req(id, model, 0.0);
             r.class = class;
             q.push(r);
         }
         assert_eq!(q.class_counts(), [1, 1, 2]);
-        q.pop_n("b", 2);
+        q.pop_n(B, 2);
         assert_eq!(q.class_counts(), [1, 1, 0]);
     }
 
@@ -291,23 +373,23 @@ mod tests {
         // push a tail back to the queue front; expiry running between
         // those steps must see each request exactly once — either
         // popped for execution or expired, never both, none lost.
-        let mut q = ModelQueues::new();
+        let mut q = ModelQueues::new(table());
         for i in 0..6 {
-            q.push(req(i, "a", i as f64)); // arrivals at 0..5
+            q.push(req(i, A, i as f64)); // arrivals at 0..5
         }
         // partial drain pops the two oldest
-        let batch: Vec<u64> = q.pop_n("a", 2).iter().map(|r| r.id)
+        let batch: Vec<u64> = q.pop_n(A, 2).iter().map(|r| r.id)
             .collect();
         assert_eq!(batch, vec![0, 1]);
         // OOM guard returns one row to the queue front
-        q.push_front("a", vec![req(1, "a", 1.0)]);
+        q.push_front(A, vec![req(1, A, 1.0)]);
         // now=7.5, sla=6: ages 6.5/5.5/... -> only id 1 expires
         let expired: Vec<u64> = q.expire(7.5, 6.0).iter().map(|r| r.id)
             .collect();
         assert_eq!(expired, vec![1],
                    "only the requeued overdue head expires");
         // remaining queue is exactly the untouched tail, in order
-        let rest: Vec<u64> = q.pop_n("a", 10).iter().map(|r| r.id)
+        let rest: Vec<u64> = q.pop_n(A, 10).iter().map(|r| r.id)
             .collect();
         assert_eq!(rest, vec![2, 3, 4, 5]);
         // final accounting partition — executed {0} (id 1 was returned

@@ -4,14 +4,18 @@
 //! EWMA over inter-arrival gaps: cheap, adapts within a few arrivals,
 //! and degrades gracefully through idle phases by clamping the gap to
 //! the elapsed silence when queried.
+//!
+//! State is a dense vector indexed by [`ModelId`] (grown on first
+//! sight of an id), so the per-arrival hot path is an array index —
+//! no hashing, no key clone.
 
-use std::collections::HashMap;
+use crate::runtime::ModelId;
 
 /// EWMA inter-arrival estimator per model.
 #[derive(Debug)]
 pub struct RateEstimator {
     alpha: f64,
-    state: HashMap<String, Ewma>,
+    state: Vec<Option<Ewma>>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -24,14 +28,18 @@ struct Ewma {
 impl RateEstimator {
     pub fn new(alpha: f64) -> RateEstimator {
         assert!((0.0..=1.0).contains(&alpha));
-        RateEstimator { alpha, state: HashMap::new() }
+        RateEstimator { alpha, state: Vec::new() }
     }
 
     /// Record one arrival at `now_s`.
-    pub fn on_arrival(&mut self, model: &str, now_s: f64) {
-        match self.state.get_mut(model) {
-            None => {
-                self.state.insert(model.to_string(), Ewma {
+    pub fn on_arrival(&mut self, model: ModelId, now_s: f64) {
+        let i = model.index();
+        if self.state.len() <= i {
+            self.state.resize(i + 1, None);
+        }
+        match &mut self.state[i] {
+            slot @ None => {
+                *slot = Some(Ewma {
                     last_arrival_s: now_s,
                     mean_gap_s: 0.0,
                     count: 1,
@@ -59,16 +67,19 @@ impl RateEstimator {
     /// bursty idle phases) the backlog must still be batched at the
     /// historical rate — a silence-decayed estimate collapses
     /// SelectBatch to batch-1 swap thrashing.
-    pub fn rate_rps(&self, model: &str, _now_s: f64) -> f64 {
-        let Some(e) = self.state.get(model) else { return 0.0 };
+    pub fn rate_rps(&self, model: ModelId, _now_s: f64) -> f64 {
+        let Some(Some(e)) = self.state.get(model.index()) else {
+            return 0.0;
+        };
         if e.count < 2 || e.mean_gap_s <= 0.0 {
             return 0.0;
         }
         1.0 / e.mean_gap_s
     }
 
-    pub fn arrivals_seen(&self, model: &str) -> u64 {
-        self.state.get(model).map(|e| e.count).unwrap_or(0)
+    pub fn arrivals_seen(&self, model: ModelId) -> u64 {
+        self.state.get(model.index())
+            .and_then(|s| s.map(|e| e.count)).unwrap_or(0)
     }
 }
 
@@ -82,25 +93,27 @@ impl Default for RateEstimator {
 mod tests {
     use super::*;
 
+    const M: ModelId = ModelId(0);
+
     #[test]
     fn converges_to_steady_rate() {
         let mut est = RateEstimator::new(0.3);
         // 4 rps steady arrivals
         for i in 0..100 {
-            est.on_arrival("m", i as f64 * 0.25);
+            est.on_arrival(M, i as f64 * 0.25);
         }
-        let r = est.rate_rps("m", 25.0);
+        let r = est.rate_rps(M, 25.0);
         assert!((r - 4.0).abs() < 0.4, "rate {r}");
     }
 
     #[test]
     fn needs_two_arrivals() {
         let mut est = RateEstimator::new(0.3);
-        assert_eq!(est.rate_rps("m", 0.0), 0.0);
-        est.on_arrival("m", 0.0);
-        assert_eq!(est.rate_rps("m", 1.0), 0.0);
-        est.on_arrival("m", 0.5);
-        assert!(est.rate_rps("m", 0.6) > 0.0);
+        assert_eq!(est.rate_rps(M, 0.0), 0.0);
+        est.on_arrival(M, 0.0);
+        assert_eq!(est.rate_rps(M, 1.0), 0.0);
+        est.on_arrival(M, 0.5);
+        assert!(est.rate_rps(M, 0.6) > 0.0);
     }
 
     #[test]
@@ -109,10 +122,10 @@ mod tests {
         // arbitrary silence so backlog batching stays at size
         let mut est = RateEstimator::new(0.3);
         for i in 0..50 {
-            est.on_arrival("m", i as f64 * 0.1); // 10 rps
+            est.on_arrival(M, i as f64 * 0.1); // 10 rps
         }
-        let fresh = est.rate_rps("m", 5.0);
-        let stale = est.rate_rps("m", 60.0); // 55s of silence
+        let fresh = est.rate_rps(M, 5.0);
+        let stale = est.rate_rps(M, 60.0); // 55s of silence
         assert!((fresh - stale).abs() < 1e-9,
                 "fresh {fresh} != stale {stale}");
         assert!((fresh - 10.0).abs() < 1.0);
@@ -120,13 +133,27 @@ mod tests {
 
     #[test]
     fn models_tracked_independently() {
+        let fast = ModelId(0);
+        let slow = ModelId(1);
         let mut est = RateEstimator::new(0.3);
         for i in 0..40 {
-            est.on_arrival("fast", i as f64 * 0.1);
-            est.on_arrival("slow", i as f64 * 1.0);
+            est.on_arrival(fast, i as f64 * 0.1);
+            est.on_arrival(slow, i as f64 * 1.0);
         }
-        let f = est.rate_rps("fast", 4.0);
-        let s = est.rate_rps("slow", 40.0);
+        let f = est.rate_rps(fast, 4.0);
+        let s = est.rate_rps(slow, 40.0);
         assert!(f > 5.0 * s, "fast {f} slow {s}");
+    }
+
+    #[test]
+    fn sparse_ids_grow_on_demand() {
+        let mut est = RateEstimator::new(0.3);
+        let late = ModelId(7);
+        assert_eq!(est.arrivals_seen(late), 0);
+        est.on_arrival(late, 1.0);
+        est.on_arrival(late, 1.5);
+        assert_eq!(est.arrivals_seen(late), 2);
+        assert_eq!(est.arrivals_seen(ModelId(3)), 0,
+                   "untouched ids in the grown range stay empty");
     }
 }

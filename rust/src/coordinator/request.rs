@@ -3,13 +3,21 @@
 //! Latency is defined exactly as in §IV-A: "the time elapsed from when
 //! a request is sent by the user until it is dispatched by the server
 //! after completing inference".
+//!
+//! Requests carry an interned [`ModelId`] rather than a name: ingest
+//! resolves the name once against the run's
+//! [`ModelTable`](crate::runtime::ModelTable), and everything
+//! downstream — queues, strategies, placement, swap accounting — moves
+//! a `u32` instead of cloning a `String` per hop.
+
+use crate::runtime::ModelId;
 
 /// An inference request, tokenized at ingest.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// Target model family name.
-    pub model: String,
+    /// Target model family, interned against the run's table.
+    pub model: ModelId,
     /// Tokenized prompt, exactly `prompt_len` ids.
     pub tokens: Vec<i32>,
     /// Arrival time, seconds since experiment start.
@@ -24,7 +32,7 @@ pub struct Request {
 #[derive(Debug, Clone)]
 pub struct CompletedRequest {
     pub id: u64,
-    pub model: String,
+    pub model: ModelId,
     pub arrival_s: f64,
     /// When the batch containing it started executing.
     pub exec_start_s: f64,
@@ -60,7 +68,7 @@ mod tests {
     fn latency_accounting() {
         let c = CompletedRequest {
             id: 1,
-            model: "llama-sim".into(),
+            model: ModelId(0),
             arrival_s: 10.0,
             exec_start_s: 12.5,
             complete_s: 13.0,

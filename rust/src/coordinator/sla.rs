@@ -62,11 +62,12 @@ impl SlaTracker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::ModelId;
 
     fn done(latency: f64) -> CompletedRequest {
         CompletedRequest {
             id: 0,
-            model: "m".into(),
+            model: ModelId(0),
             arrival_s: 0.0,
             exec_start_s: latency * 0.8,
             complete_s: latency,

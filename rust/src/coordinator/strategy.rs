@@ -21,11 +21,16 @@
 //! Partial Batch drain pins its device, because "the resident model"
 //! is a per-device notion.
 //!
+//! Views carry interned [`ModelId`]s, so a strategy decision moves
+//! `u32`s, never clones a name; because the intern table is sorted,
+//! `ModelId` comparisons order exactly like the names they stand for.
+//!
 //! The strategy table ([`STRATEGIES`]) is the single source of truth
 //! for lookup, `--help`, and the unknown-name error message, so CLI
 //! docs and errors cannot drift.
 
 use crate::gpu::CcMode;
+use crate::runtime::ModelId;
 
 /// Scheduler-visible state of one fleet device.
 #[derive(Debug, Clone)]
@@ -35,7 +40,7 @@ pub struct DeviceView {
     /// The device's confidential-computing mode.
     pub mode: CcMode,
     /// Model currently resident on this device, if any.
-    pub resident: Option<String>,
+    pub resident: Option<ModelId>,
     /// True while a previously dispatched batch is still executing
     /// (virtual time); busy devices cannot take new work.
     pub busy: bool,
@@ -48,7 +53,7 @@ pub struct DeviceView {
 /// Scheduler-visible state of one model queue.
 #[derive(Debug, Clone)]
 pub struct ModelView {
-    pub model: String,
+    pub model: ModelId,
     /// Queued requests.
     pub len: usize,
     /// Seconds the head (oldest) request has waited.
@@ -65,7 +70,11 @@ pub struct ModelView {
 }
 
 /// Snapshot handed to a strategy each scheduling tick.
-#[derive(Debug, Clone)]
+///
+/// The `devices` and `queues` vectors are built into caller-pooled
+/// buffers each tick (see `engine::build_views_into`), so the
+/// steady-state loop reuses their capacity instead of allocating.
+#[derive(Debug, Clone, Default)]
 pub struct SchedContext {
     pub now_s: f64,
     /// One view per fleet device (a single entry on the paper's
@@ -87,27 +96,26 @@ impl SchedContext {
 
     /// Id of a free device where `model` is already resident
     /// (dispatching there avoids a swap).
-    pub fn resident_on_free(&self, model: &str) -> Option<usize> {
+    pub fn resident_on_free(&self, model: ModelId) -> Option<usize> {
         self.free_devices()
-            .find(|d| d.resident.as_deref() == Some(model))
+            .find(|d| d.resident == Some(model))
             .map(|d| d.id)
     }
 
     /// Models resident on free devices, in device-id order.
-    pub fn free_residents(&self) -> Vec<&str> {
-        self.free_devices().filter_map(|d| d.resident.as_deref())
-            .collect()
+    pub fn free_residents(&self) -> impl Iterator<Item = ModelId> + '_ {
+        self.free_devices().filter_map(|d| d.resident)
     }
 }
 
 /// What to do this tick.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Decision {
     /// Nothing is ready; sleep a tick.
     Wait,
     /// Dispatch up to `take` requests from `model`'s queue.  `device`
     /// pins a fleet device; `None` delegates to the placement policy.
-    Process { model: String, take: usize, device: Option<usize> },
+    Process { model: ModelId, take: usize, device: Option<usize> },
 }
 
 /// A scheduling strategy (Table I row).
@@ -121,7 +129,8 @@ pub trait Strategy: Send {
     /// strategy shares — the longest-waiting other queue — which is
     /// also deterministic, as the DES-vs-real parity contract requires
     /// (see `coordinator::prefetch`).
-    fn next_hint(&self, ctx: &SchedContext, chosen: &str) -> Option<String> {
+    fn next_hint(&self, ctx: &SchedContext, chosen: ModelId)
+                 -> Option<ModelId> {
         crate::coordinator::prefetch::predict_next(ctx, chosen)
     }
 }
@@ -181,7 +190,7 @@ pub fn strategy_by_name(name: &str) -> anyhow::Result<Box<dyn Strategy>> {
 fn pick_ready<'a>(ctx: &'a SchedContext, candidates: &[&'a ModelView])
                   -> Option<&'a ModelView> {
     if let Some(v) = candidates.iter()
-        .find(|v| ctx.resident_on_free(&v.model).is_some())
+        .find(|v| ctx.resident_on_free(v.model).is_some())
     {
         return Some(v);
     }
@@ -215,7 +224,7 @@ impl Strategy for BestBatch {
         let full: Vec<&ModelView> =
             ctx.queues.iter().filter(|v| v.len >= v.obs).collect();
         match pick_ready(ctx, &full) {
-            Some(v) => Decision::Process { model: v.model.clone(),
+            Some(v) => Decision::Process { model: v.model,
                                            take: v.obs, device: None },
             None => Decision::Wait,
         }
@@ -236,7 +245,7 @@ impl Strategy for BestBatchTimer {
         let overdue: Vec<&ModelView> = ctx.queues.iter()
             .filter(|v| v.oldest_wait_s >= ctx.timeout_s).collect();
         if let Some(v) = pick_oldest(&overdue) {
-            return Decision::Process { model: v.model.clone(),
+            return Decision::Process { model: v.model,
                                        take: v.len.min(v.obs),
                                        device: None };
         }
@@ -278,7 +287,7 @@ impl Strategy for SelectBatchTimer {
             .filter(|v| v.oldest_wait_s >= ctx.timeout_s).collect();
         if let Some(v) = pick_oldest(&overdue) {
             let target = Self::target_batch(v, ctx.sla_s);
-            return Decision::Process { model: v.model.clone(),
+            return Decision::Process { model: v.model,
                                        take: v.len.min(target),
                                        device: None };
         }
@@ -288,7 +297,7 @@ impl Strategy for SelectBatchTimer {
         match pick_ready(ctx, &ready) {
             Some(v) => {
                 let target = Self::target_batch(v, ctx.sla_s);
-                Decision::Process { model: v.model.clone(),
+                Decision::Process { model: v.model,
                                     take: v.len.min(target),
                                     device: None }
             }
@@ -319,7 +328,7 @@ impl Strategy for SelectBatchTimer {
 pub struct BestBatchPartialTimer {
     /// Residencies already granted their final drain, cleared when the
     /// swap goes through.
-    drained: std::cell::RefCell<std::collections::HashSet<String>>,
+    drained: std::cell::RefCell<std::collections::HashSet<ModelId>>,
 }
 
 impl Default for BestBatchPartialTimer {
@@ -338,20 +347,20 @@ impl Strategy for BestBatchPartialTimer {
 
     fn decide(&self, ctx: &SchedContext) -> Decision {
         let inner = BestBatchTimer.decide(ctx);
-        if let Decision::Process { model, .. } = &inner {
+        if let Decision::Process { model, .. } = inner {
             if ctx.resident_on_free(model).is_none() {
                 // a swap is imminent: drain one free-device resident
                 // with queued work, once per residency
                 for res in ctx.free_residents() {
-                    if self.drained.borrow().contains(res) {
+                    if self.drained.borrow().contains(&res) {
                         continue;
                     }
                     if let Some(v) = ctx.queues.iter()
                         .find(|v| v.model == res && v.len > 0)
                     {
-                        self.drained.borrow_mut().insert(res.to_string());
+                        self.drained.borrow_mut().insert(res);
                         return Decision::Process {
-                            model: res.to_string(),
+                            model: res,
                             take: v.len.min(v.obs),
                             device: ctx.resident_on_free(res),
                         };
@@ -370,20 +379,24 @@ impl Strategy for BestBatchPartialTimer {
 mod tests {
     use super::*;
 
-    fn device(id: usize, resident: Option<&str>) -> DeviceView {
+    // Sorted-table ids for a two-model test fleet ("a" < "b").
+    const A: ModelId = ModelId(0);
+    const B: ModelId = ModelId(1);
+
+    fn device(id: usize, resident: Option<ModelId>) -> DeviceView {
         DeviceView {
             id,
             mode: CcMode::Off,
-            resident: resident.map(|s| s.to_string()),
+            resident,
             busy: false,
             busy_s: 0.0,
             dispatched: 0,
         }
     }
 
-    fn view(model: &str, len: usize, wait: f64) -> ModelView {
+    fn view(model: ModelId, len: usize, wait: f64) -> ModelView {
         ModelView {
-            model: model.into(),
+            model,
             len,
             oldest_wait_s: wait,
             obs: 8,
@@ -393,7 +406,8 @@ mod tests {
         }
     }
 
-    fn ctx(resident: Option<&str>, queues: Vec<ModelView>) -> SchedContext {
+    fn ctx(resident: Option<ModelId>, queues: Vec<ModelView>)
+           -> SchedContext {
         SchedContext {
             now_s: 100.0,
             devices: vec![device(0, resident)],
@@ -403,64 +417,64 @@ mod tests {
         }
     }
 
-    fn process(model: &str, take: usize) -> Decision {
-        Decision::Process { model: model.into(), take, device: None }
+    fn process(model: ModelId, take: usize) -> Decision {
+        Decision::Process { model, take, device: None }
     }
 
     #[test]
     fn best_batch_waits_below_obs() {
-        let c = ctx(None, vec![view("a", 7, 10.0)]);
+        let c = ctx(None, vec![view(A, 7, 10.0)]);
         assert_eq!(BestBatch.decide(&c), Decision::Wait);
     }
 
     #[test]
     fn best_batch_fires_at_obs() {
-        let c = ctx(None, vec![view("a", 8, 0.1)]);
-        assert_eq!(BestBatch.decide(&c), process("a", 8));
+        let c = ctx(None, vec![view(A, 8, 0.1)]);
+        assert_eq!(BestBatch.decide(&c), process(A, 8));
     }
 
     #[test]
     fn best_batch_prefers_resident_on_tie() {
-        let c = ctx(Some("b"), vec![view("a", 9, 5.0), view("b", 8, 1.0)]);
-        assert_eq!(BestBatch.decide(&c), process("b", 8));
+        let c = ctx(Some(B), vec![view(A, 9, 5.0), view(B, 8, 1.0)]);
+        assert_eq!(BestBatch.decide(&c), process(B, 8));
     }
 
     #[test]
     fn busy_device_residency_does_not_count() {
-        // "b" is resident only on a busy device: the swap-avoidance
+        // B is resident only on a busy device: the swap-avoidance
         // preference must ignore it and pick the older head instead
-        let mut c = ctx(Some("b"), vec![view("a", 9, 5.0),
-                                        view("b", 8, 1.0)]);
+        let mut c = ctx(Some(B), vec![view(A, 9, 5.0),
+                                      view(B, 8, 1.0)]);
         c.devices[0].busy = true;
         c.devices.push(device(1, None));
-        assert_eq!(BestBatch.decide(&c), process("a", 8));
+        assert_eq!(BestBatch.decide(&c), process(A, 8));
     }
 
     #[test]
     fn timer_forces_partial_batch() {
-        let c = ctx(None, vec![view("a", 3, 3.5)]);
-        assert_eq!(BestBatchTimer.decide(&c), process("a", 3));
+        let c = ctx(None, vec![view(A, 3, 3.5)]);
+        assert_eq!(BestBatchTimer.decide(&c), process(A, 3));
     }
 
     #[test]
     fn timer_respects_obs_cap() {
-        let mut v = view("a", 20, 4.0);
+        let mut v = view(A, 20, 4.0);
         v.obs = 8;
         let c = ctx(None, vec![v]);
-        assert_eq!(BestBatchTimer.decide(&c), process("a", 8));
+        assert_eq!(BestBatchTimer.decide(&c), process(A, 8));
     }
 
     #[test]
     fn timer_falls_back_to_best_batch() {
-        let c = ctx(None, vec![view("a", 8, 0.5)]);
-        assert_eq!(BestBatchTimer.decide(&c), process("a", 8));
+        let c = ctx(None, vec![view(A, 8, 0.5)]);
+        assert_eq!(BestBatchTimer.decide(&c), process(A, 8));
     }
 
     #[test]
     fn select_batch_sizes_from_rate_and_headroom() {
         // rate 2 rps, desired latency = 6 - 0.5 - 0.5 = 5 -> target 10,
         // clamped to obs 8
-        let v = view("a", 12, 0.1);
+        let v = view(A, 12, 0.1);
         assert_eq!(SelectBatchTimer::target_batch(&v, 6.0), 8);
         // tighter SLA 2.0 -> desired 1.0 -> target 2
         assert_eq!(SelectBatchTimer::target_batch(&v, 2.0), 2);
@@ -475,7 +489,7 @@ mod tests {
         // property: target <= max(1, rate * (sla - load - exec))
         crate::util::prop::forall("select-batch invariant", 300, |g| {
             let v = ModelView {
-                model: "m".into(),
+                model: ModelId(0),
                 len: g.usize_in(1, 64),
                 oldest_wait_s: g.f64_in(0.0, 10.0),
                 obs: g.usize_in(1, 32),
@@ -499,44 +513,44 @@ mod tests {
     fn select_batch_fires_smaller_batches() {
         // queue of 3 at rate 2 with tight SLA: target 2 -> fire with 3? no:
         // take = min(len, target) = 2
-        let mut v = view("a", 3, 0.1);
+        let mut v = view(A, 3, 0.1);
         v.rate_rps = 2.0;
         let mut c = ctx(None, vec![v]);
         c.sla_s = 2.0; // desired 1.0 -> target 2
-        assert_eq!(SelectBatchTimer.decide(&c), process("a", 2));
+        assert_eq!(SelectBatchTimer.decide(&c), process(A, 2));
     }
 
     #[test]
     fn partial_drains_resident_before_swap() {
-        // "b" is overdue, but resident "a" still has 2 queued -> drain a
-        let c = ctx(Some("a"),
-                    vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+        // B is overdue, but resident A still has 2 queued -> drain A
+        let c = ctx(Some(A),
+                    vec![view(A, 2, 0.5), view(B, 3, 4.0)]);
         assert_eq!(BestBatchPartialTimer::default().decide(&c),
-                   Decision::Process { model: "a".into(), take: 2,
+                   Decision::Process { model: A, take: 2,
                                        device: Some(0) });
     }
 
     #[test]
     fn partial_swaps_once_resident_is_drained() {
-        let c = ctx(Some("a"), vec![view("b", 3, 4.0)]);
+        let c = ctx(Some(A), vec![view(B, 3, 4.0)]);
         assert_eq!(BestBatchPartialTimer::default().decide(&c),
-                   process("b", 3));
+                   process(B, 3));
     }
 
     #[test]
     fn partial_drain_pins_the_residents_device() {
-        // resident "a" lives on device 1 of a 2-device fleet: the drain
+        // resident A lives on device 1 of a 2-device fleet: the drain
         // must target that device, not defer to placement
-        let mut c = ctx(None, vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
-        c.devices.push(device(1, Some("a")));
+        let mut c = ctx(None, vec![view(A, 2, 0.5), view(B, 3, 4.0)]);
+        c.devices.push(device(1, Some(A)));
         assert_eq!(BestBatchPartialTimer::default().decide(&c),
-                   Decision::Process { model: "a".into(), take: 2,
+                   Decision::Process { model: A, take: 2,
                                        device: Some(1) });
     }
 
     #[test]
     fn all_strategies_wait_on_empty() {
-        let c = ctx(Some("a"), vec![]);
+        let c = ctx(Some(A), vec![]);
         for entry in STRATEGIES {
             let s = (entry.make)();
             assert_eq!(s.decide(&c), Decision::Wait, "{}", entry.name);

@@ -15,9 +15,11 @@
 //! staged buffer — no second DMA — while a wrong prediction just frees
 //! it and takes the normal swap path.
 
+use std::sync::Arc;
+
 use crate::gpu::device::SimGpu;
 use crate::gpu::hbm::HbmBuffer;
-use crate::runtime::Registry;
+use crate::runtime::{ModelId, ModelTable, Registry};
 
 /// Timing of one `ensure_resident` call.
 #[derive(Debug, Clone, Copy, Default)]
@@ -71,27 +73,25 @@ pub struct SwapStats {
     pub dropped_prefetches: u64,
     /// Seconds spent in staging uploads (overlapped with execution).
     pub total_prefetch_s: f64,
-    /// (model, load_s) samples in order (demand loads only).
-    pub load_samples: Vec<(String, f64)>,
+    /// (model, load_s) samples in order (demand loads only).  Interned
+    /// ids — one `u32` copy per swap instead of a `String` clone.
+    pub load_samples: Vec<(ModelId, f64)>,
 }
 
 /// The residency manager.
 pub struct SwapManager {
+    /// The run's intern table, for recording per-model samples without
+    /// cloning names.
+    table: Arc<ModelTable>,
     resident: Option<(String, HbmBuffer)>,
     /// Speculatively staged next model (prefetch target).
     staged: Option<(String, HbmBuffer)>,
     stats: SwapStats,
 }
 
-impl Default for SwapManager {
-    fn default() -> Self {
-        Self::new()
-    }
-}
-
 impl SwapManager {
-    pub fn new() -> SwapManager {
-        SwapManager { resident: None, staged: None,
+    pub fn new(table: Arc<ModelTable>) -> SwapManager {
+        SwapManager { table, resident: None, staged: None,
                       stats: SwapStats::default() }
     }
 
@@ -131,7 +131,7 @@ impl SwapManager {
             report.promoted = true;
             self.stats.swap_count += 1;
             self.stats.promoted_count += 1;
-            self.stats.load_samples.push((model.to_string(), 0.0));
+            self.stats.load_samples.push((self.table.require(model)?, 0.0));
             return Ok(report);
         }
         // wrong prediction: the staged buffer is dead weight — free it
@@ -155,7 +155,8 @@ impl SwapManager {
         self.stats.total_load_s += report.load_s;
         self.stats.total_crypto_s += report.crypto_total_s;
         self.stats.total_crypto_exposed_s += report.crypto_exposed_s;
-        self.stats.load_samples.push((model.to_string(), report.load_s));
+        self.stats.load_samples.push((self.table.require(model)?,
+                                      report.load_s));
         Ok(report)
     }
 
@@ -242,12 +243,14 @@ impl SwapManager {
 }
 
 /// Mean load seconds per model from collected samples (Fig 3 rows).
+/// Rows come back in id order, which — the intern table being sorted —
+/// is exactly the name order the old `BTreeMap<String, _>` produced.
 pub fn mean_load_by_model(stats: &SwapStats)
-                          -> Vec<(String, f64, usize)> {
-    let mut agg: std::collections::BTreeMap<String, (f64, usize)> =
+                          -> Vec<(ModelId, f64, usize)> {
+    let mut agg: std::collections::BTreeMap<ModelId, (f64, usize)> =
         Default::default();
-    for (m, s) in &stats.load_samples {
-        let e = agg.entry(m.clone()).or_default();
+    for &(m, s) in &stats.load_samples {
+        let e = agg.entry(m).or_default();
         e.0 += s;
         e.1 += 1;
     }
@@ -273,6 +276,14 @@ mod tests {
                        &[1]).unwrap()
     }
 
+    fn table() -> Arc<ModelTable> {
+        ModelTable::shared(["llama-sim", "gemma-sim", "granite-sim"])
+    }
+
+    fn manager() -> SwapManager {
+        SwapManager::new(table())
+    }
+
     fn gpu() -> SimGpu {
         SimGpu::new(GpuConfig { no_throttle: true, ..Default::default() })
             .unwrap()
@@ -282,7 +293,7 @@ mod tests {
     fn residency_state_machine() {
         let reg = registry();
         let mut gpu = gpu();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         assert_eq!(sm.resident(), None);
 
         let r1 = sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
@@ -308,7 +319,7 @@ mod tests {
     fn unknown_model_fails_cleanly() {
         let reg = registry();
         let mut gpu = gpu();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         assert!(sm.ensure_resident(&mut gpu, &reg, "nope").is_err());
         assert_eq!(sm.resident(), None, "failed swap must not set resident");
     }
@@ -317,7 +328,7 @@ mod tests {
     fn evict_frees() {
         let reg = registry();
         let mut gpu = gpu();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
         sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap();
         sm.evict(&mut gpu);
@@ -330,7 +341,7 @@ mod tests {
     fn prefetch_then_promote_skips_the_second_dma() {
         let reg = registry();
         let mut gpu = gpu();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
         let pf = sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap()
             .expect("staging must fit");
@@ -363,7 +374,7 @@ mod tests {
                                        "granite-sim".to_string()],
                                  &[1]).unwrap();
         let mut gpu = gpu();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
         sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap().unwrap();
 
@@ -402,7 +413,7 @@ mod tests {
         // room for one blob only
         small.hbm_capacity = llama + llama / 2;
         let mut gpu = SimGpu::new(small).unwrap();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
         let pf = sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap();
         assert!(pf.is_none(), "OOM staging must be skipped, not fatal");
@@ -427,7 +438,7 @@ mod tests {
                               hbm_capacity: llama + granite - 1,
                               ..GpuConfig::default() };
         let mut gpu = SimGpu::new(cfg).unwrap();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
         sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap()
             .expect("gemma staging must fit");
@@ -442,7 +453,7 @@ mod tests {
     fn load_estimate_scales_with_mode_and_pipeline() {
         let reg = registry();
         let gpu_plain = gpu();
-        let sm = SwapManager::new();
+        let sm = manager();
         let est_plain =
             sm.estimate_load_s(&gpu_plain, &reg, "llama-sim");
         let gpu_cc = SimGpu::new(GpuConfig {
@@ -467,7 +478,7 @@ mod tests {
     fn staged_model_estimates_as_free() {
         let reg = registry();
         let mut gpu = gpu();
-        let mut sm = SwapManager::new();
+        let mut sm = manager();
         sm.ensure_resident(&mut gpu, &reg, "llama-sim").unwrap();
         assert!(sm.estimate_load_s(&gpu, &reg, "gemma-sim") > 0.0);
         sm.prefetch(&mut gpu, &reg, "gemma-sim").unwrap().unwrap();
@@ -479,10 +490,10 @@ mod tests {
     fn mean_load_by_model_aggregates() {
         let mut stats = SwapStats::default();
         stats.load_samples = vec![
-            ("a".into(), 1.0), ("a".into(), 3.0), ("b".into(), 2.0)];
+            (ModelId(0), 1.0), (ModelId(0), 3.0), (ModelId(1), 2.0)];
         let rows = mean_load_by_model(&stats);
         assert_eq!(rows.len(), 2);
-        assert_eq!(rows[0], ("a".to_string(), 2.0, 2));
-        assert_eq!(rows[1], ("b".to_string(), 2.0, 1));
+        assert_eq!(rows[0], (ModelId(0), 2.0, 2));
+        assert_eq!(rows[1], (ModelId(1), 2.0, 1));
     }
 }

@@ -24,12 +24,15 @@
 //!
 //! [`CostModel`]: crate::sim::CostModel
 
+use std::sync::Arc;
+
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
 use crate::engine::clock::Clock;
 use crate::gpu::device::GpuConfig;
 use crate::gpu::CcMode;
+use crate::runtime::{ModelId, ModelTable};
 use crate::sim::calib::{CostModel, ModelCosts};
 
 /// Timing of one residency change, in the run's time domain.
@@ -85,10 +88,13 @@ pub struct DataPathOutcome {
 }
 
 /// One executed batch, in the run's time domain.
+///
+/// The batch's requests are not carried here: `execute_batch` drains
+/// them into the caller-provided buffer, which the engine recycles
+/// across batches so the steady-state loop allocates nothing per
+/// dispatch.
 #[derive(Debug, Clone)]
 pub struct BatchOutcome {
-    /// The requests that rode in this batch (popped from the queue).
-    pub requests: Vec<Request>,
     /// Generated tokens per request row (real execution only; empty
     /// when the backend models cost without producing output).
     pub tokens: Vec<Vec<i32>>,
@@ -106,8 +112,8 @@ pub struct BatchOutcome {
 
 /// One modeled residency change, as a virtual-cost backend observed it
 /// (what happened is the backend's business; what it *costs* is not).
-pub(crate) struct SwapEvent<'a> {
-    pub model: &'a str,
+pub(crate) struct SwapEvent {
+    pub model: ModelId,
     pub had_resident: bool,
     pub promoted: bool,
     pub dropped_staged: bool,
@@ -136,7 +142,7 @@ pub(crate) fn price_swap(mc: &ModelCosts, mode: CcMode, pipelined: bool,
         // promotion is DMA-free: the crypto was paid — and overlapped —
         // at prefetch time
         stats.promoted_count += 1;
-        stats.load_samples.push((ev.model.to_string(), 0.0));
+        stats.load_samples.push((ev.model, 0.0));
     } else {
         if ev.dropped_staged {
             stats.dropped_prefetches += 1;
@@ -148,7 +154,7 @@ pub(crate) fn price_swap(mc: &ModelCosts, mode: CcMode, pipelined: bool,
         stats.total_load_s += out.load_s;
         stats.total_crypto_s += ct;
         stats.total_crypto_exposed_s += ce;
-        stats.load_samples.push((ev.model.to_string(), out.load_s));
+        stats.load_samples.push((ev.model, out.load_s));
     }
     out
 }
@@ -237,9 +243,21 @@ pub struct DeviceSnapshot {
 }
 
 /// Pluggable execution backend behind the single serve loop.
+///
+/// Hot-path methods address models by interned [`ModelId`] — the ids
+/// of the backend's own [`ModelTable`] (see [`table`]) — so per-tick
+/// consultation costs an array index, never a key clone or a hash.
+/// Startup-only methods (validation, tokenization) keep `&str`.
+///
+/// [`table`]: ExecBackend::table
 pub trait ExecBackend {
     /// Short backend name for labels/diagnostics ("real" | "des").
     fn kind(&self) -> &'static str;
+
+    /// The intern table every [`ModelId`] this backend understands
+    /// comes from.  The engine clones the `Arc` once per run and
+    /// interns each arrival's model name exactly once.
+    fn table(&self) -> &Arc<ModelTable>;
 
     /// Number of fleet devices this backend drives.
     fn n_devices(&self) -> usize;
@@ -247,7 +265,8 @@ pub trait ExecBackend {
     /// CC mode of `device`.
     fn mode(&self, device: usize) -> CcMode;
 
-    /// Every model this backend can serve.
+    /// Every model this backend can serve, in the backend's native
+    /// order (registry/manifest order, not intern order).
     fn model_names(&self) -> Vec<String>;
 
     /// Fail fast when `model` is unknown to the backend.
@@ -258,37 +277,41 @@ pub trait ExecBackend {
     fn tokenize_prompt(&self, model: &str, prompt: &str) -> Vec<i32>;
 
     /// Profiled optimal batch size for `model` (§III-D2).
-    fn obs(&self, model: &str) -> usize;
+    fn obs(&self, model: ModelId) -> usize;
 
     /// Estimated load seconds for `model` in `device`'s CC mode
     /// (SelectBatch's `desired_latency` term).
-    fn est_load_s(&self, model: &str, device: usize) -> f64;
+    fn est_load_s(&self, model: ModelId, device: usize) -> f64;
 
     /// Seed value for the engine's per-model exec-time EWMA.
-    fn initial_exec_est_s(&self, model: &str) -> f64;
+    fn initial_exec_est_s(&self, model: ModelId) -> f64;
 
     /// Model currently resident on `device`, if any.
-    fn resident(&self, device: usize) -> Option<String>;
+    fn resident(&self, device: usize) -> Option<ModelId>;
 
     /// Make `model` resident on `device`, swapping if needed (the
     /// expensive CC-sensitive step).  A staged (prefetched) hit
     /// promotes without a second DMA.
     fn ensure_resident(&mut self, clock: &mut dyn Clock, device: usize,
-                       model: &str) -> anyhow::Result<SwapOutcome>;
+                       model: ModelId) -> anyhow::Result<SwapOutcome>;
 
     /// Decrypt-ahead: stage `model` on `device` while the current batch
     /// executes, so a later swap promotes it without a DMA.  Backends
     /// without staging support keep the default no-op.
     fn prefetch(&mut self, _clock: &mut dyn Clock, _device: usize,
-                _model: &str) -> anyhow::Result<PrefetchOutcome> {
+                _model: ModelId) -> anyhow::Result<PrefetchOutcome> {
         Ok(PrefetchOutcome::default())
     }
 
-    /// Pop up to `take` requests for `model` and execute them as one
-    /// batch on `device`.  `Ok(None)` when the queue was empty.
+    /// Pop up to `take` requests for `model` into `out_requests`
+    /// (appended; the caller clears and recycles the buffer) and
+    /// execute them as one batch on `device`.  `Ok(None)` when the
+    /// queue was empty — nothing is appended in that case.
     fn execute_batch(&mut self, clock: &mut dyn Clock,
-                     queues: &mut ModelQueues, device: usize, model: &str,
-                     take: usize) -> anyhow::Result<Option<BatchOutcome>>;
+                     queues: &mut ModelQueues, device: usize,
+                     model: ModelId, take: usize,
+                     out_requests: &mut Vec<Request>)
+                     -> anyhow::Result<Option<BatchOutcome>>;
 
     /// Occupancy counters for `device` (monitor thread).
     fn snapshot(&self, device: usize) -> DeviceSnapshot;

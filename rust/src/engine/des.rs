@@ -9,6 +9,13 @@
 //! hours.  Each fleet device has its own CC mode and residency, so a
 //! mixed CC/No-CC fleet charges per-device load and I/O costs.
 //!
+//! Hot-path layout: model names are interned once at construction
+//! into a sorted [`ModelTable`], and the per-model cost row + family
+//! spec are resolved into id-indexed vectors.  Every per-dispatch
+//! consult — residency compare, load estimate, OBS, exec pricing — is
+//! then an array index on a `Copy` id: the steady-state loop clones no
+//! strings and hashes no keys.
+//!
 //! The pipelined swap path and predictive prefetch are mirrored in
 //! virtual time: CC loads price `load_s_for(mode, pipelined)` from the
 //! cost table (steady-state `max(crypto, link)` per chunk when the
@@ -31,8 +38,11 @@
 //! memory-infeasible batch sizes as `oom_batches` and caps OBS below
 //! them.
 
+use std::sync::Arc;
+
 use crate::config::RunConfig;
 use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
 use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
                              BatchOutcome, DataPathOutcome,
@@ -41,12 +51,27 @@ use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
 use crate::engine::clock::Clock;
 use crate::gpu::device::GpuConfig;
 use crate::gpu::CcMode;
-use crate::runtime::Manifest;
+use crate::runtime::manifest::FamilySpec;
+use crate::runtime::{Manifest, ModelId, ModelTable};
+use crate::sim::calib::ModelCosts;
 use crate::sim::CostModel;
+
+/// Id-indexed per-model lookups, resolved once at construction so the
+/// hot path never goes back through a name-keyed map.  Entries stay
+/// `None` for families without a cost/spec row — the cold fallback
+/// then reproduces the original name-keyed error.
+struct PerModel<'a> {
+    spec: Option<&'a FamilySpec>,
+    mc: Option<&'a ModelCosts>,
+}
 
 pub struct DesBackend<'a> {
     manifest: &'a Manifest,
     costs: &'a CostModel,
+    /// Sorted intern table over the manifest's family names.
+    table: Arc<ModelTable>,
+    /// One row per interned id, in table order.
+    by_id: Vec<PerModel<'a>>,
     /// Whether CC loads price the chunk pipeline (`--pipeline-depth`).
     pipelined: bool,
     /// Per-device GPU config (mode mix, bounce/pipeline/bandwidth) —
@@ -59,10 +84,10 @@ pub struct DesBackend<'a> {
     /// Priced output tokens per request (None = model `decode_len`).
     data_tokens_out: Option<usize>,
     /// Per-device resident model.
-    resident: Vec<Option<String>>,
+    resident: Vec<Option<ModelId>>,
     /// Per-device staged (prefetched) model — mirrors the real
     /// `SwapManager`'s staging slot.
-    staged: Vec<Option<String>>,
+    staged: Vec<Option<ModelId>>,
     /// Per-device modeled swap accounting.
     stats: Vec<SwapStats>,
 }
@@ -80,9 +105,16 @@ impl<'a> DesBackend<'a> {
                        serialized; delete the cached cost_model.json \
                        to re-measure");
         }
+        let table = ModelTable::shared(manifest.family_names());
+        let by_id = table.names().iter().map(|name| PerModel {
+            spec: manifest.family(name).ok(),
+            mc: costs.costs(name).ok(),
+        }).collect();
         DesBackend {
             manifest,
             costs,
+            table,
+            by_id,
             pipelined,
             fleet,
             data_path: cfg.data_path,
@@ -93,11 +125,34 @@ impl<'a> DesBackend<'a> {
             stats: vec![SwapStats::default(); n],
         }
     }
+
+    /// Cost row for `model`; the cold `None` path re-resolves by name
+    /// so the error text matches the name-keyed original.
+    fn mc(&self, model: ModelId) -> anyhow::Result<&'a ModelCosts> {
+        match self.by_id.get(model.index()).and_then(|p| p.mc) {
+            Some(mc) => Ok(mc),
+            None => self.costs.costs(self.table.name(model)),
+        }
+    }
+
+    /// Family spec for `model`, same cold-path contract as [`mc`].
+    ///
+    /// [`mc`]: DesBackend::mc
+    fn spec(&self, model: ModelId) -> anyhow::Result<&'a FamilySpec> {
+        match self.by_id.get(model.index()).and_then(|p| p.spec) {
+            Some(spec) => Ok(spec),
+            None => self.manifest.family(self.table.name(model)),
+        }
+    }
 }
 
 impl ExecBackend for DesBackend<'_> {
     fn kind(&self) -> &'static str {
         "des"
+    }
+
+    fn table(&self) -> &Arc<ModelTable> {
+        &self.table
     }
 
     fn n_devices(&self) -> usize {
@@ -123,39 +178,41 @@ impl ExecBackend for DesBackend<'_> {
         Vec::new()
     }
 
-    fn obs(&self, model: &str) -> usize {
-        self.costs.costs(model).map(|mc| mc.obs).unwrap_or(1)
+    fn obs(&self, model: ModelId) -> usize {
+        self.by_id.get(model.index()).and_then(|p| p.mc)
+            .map(|mc| mc.obs).unwrap_or(1)
     }
 
-    fn est_load_s(&self, model: &str, device: usize) -> f64 {
-        if self.staged[device].as_deref() == Some(model) {
+    fn est_load_s(&self, model: ModelId, device: usize) -> f64 {
+        if self.staged[device] == Some(model) {
             return 0.0; // a staged model promotes for free
         }
-        self.costs.costs(model)
+        self.by_id.get(model.index()).and_then(|p| p.mc)
             .map(|mc| mc.load_s_for(self.fleet[device].mode,
                                     self.pipelined))
             .unwrap_or(0.0)
     }
 
-    fn initial_exec_est_s(&self, model: &str) -> f64 {
-        self.costs.costs(model).map(|mc| mc.exec_s(mc.obs)).unwrap_or(0.2)
+    fn initial_exec_est_s(&self, model: ModelId) -> f64 {
+        self.by_id.get(model.index()).and_then(|p| p.mc)
+            .map(|mc| mc.exec_s(mc.obs)).unwrap_or(0.2)
     }
 
-    fn resident(&self, device: usize) -> Option<String> {
-        self.resident[device].clone()
+    fn resident(&self, device: usize) -> Option<ModelId> {
+        self.resident[device]
     }
 
     fn ensure_resident(&mut self, _clock: &mut dyn Clock, device: usize,
-                       model: &str) -> anyhow::Result<SwapOutcome> {
-        if self.resident[device].as_deref() == Some(model) {
+                       model: ModelId) -> anyhow::Result<SwapOutcome> {
+        if self.resident[device] == Some(model) {
             // staged state is untouched: the hint may still pay off
             return Ok(SwapOutcome::default());
         }
-        let mc = self.costs.costs(model)?;
+        let mc = self.mc(model)?;
         let had_resident = self.resident[device].is_some();
         // staged hit promotes; anything else staged is a wrong
         // prediction and is dropped
-        let promoted = self.staged[device].as_deref() == Some(model);
+        let promoted = self.staged[device] == Some(model);
         let dropped_staged =
             !promoted && self.staged[device].is_some();
         self.staged[device] = None;
@@ -163,36 +220,39 @@ impl ExecBackend for DesBackend<'_> {
             mc, self.fleet[device].mode, self.pipelined,
             SwapEvent { model, had_resident, promoted, dropped_staged },
             &mut self.stats[device]);
-        self.resident[device] = Some(model.to_string());
+        self.resident[device] = Some(model);
         Ok(out)
     }
 
     fn prefetch(&mut self, _clock: &mut dyn Clock, device: usize,
-                model: &str) -> anyhow::Result<PrefetchOutcome> {
-        if self.resident[device].as_deref() == Some(model)
-            || self.staged[device].as_deref() == Some(model)
+                model: ModelId) -> anyhow::Result<PrefetchOutcome> {
+        if self.resident[device] == Some(model)
+            || self.staged[device] == Some(model)
         {
             return Ok(PrefetchOutcome::default());
         }
-        let mc = self.costs.costs(model)?;
+        let mc = self.mc(model)?;
         let dropped_staged = self.staged[device].is_some();
         let out = price_prefetch(mc, self.fleet[device].mode,
                                  self.pipelined, dropped_staged,
                                  &mut self.stats[device]);
-        self.staged[device] = Some(model.to_string());
+        self.staged[device] = Some(model);
         Ok(out)
     }
 
     fn execute_batch(&mut self, _clock: &mut dyn Clock,
-                     queues: &mut ModelQueues, device: usize, model: &str,
-                     take: usize) -> anyhow::Result<Option<BatchOutcome>> {
-        let requests = queues.pop_n(model, take.max(1));
-        if requests.is_empty() {
+                     queues: &mut ModelQueues, device: usize,
+                     model: ModelId, take: usize,
+                     out_requests: &mut Vec<Request>)
+                     -> anyhow::Result<Option<BatchOutcome>> {
+        queues.pop_n_into(model, take.max(1), out_requests);
+        if out_requests.is_empty() {
             return Ok(None);
         }
-        let spec = self.manifest.family(model)?;
-        let mc = self.costs.costs(model)?;
-        let artifact_batch = spec.batch_size_at_least(requests.len());
+        let spec = self.spec(model)?;
+        let mc = self.mc(model)?;
+        let rows = out_requests.len();
+        let artifact_batch = spec.batch_size_at_least(rows);
         let exec_s = mc.exec_s(artifact_batch);
         // Payload I/O: per-row calibrated figure by default; with the
         // data path on, the batch's byte count through the shared
@@ -200,17 +260,16 @@ impl ExecBackend for DesBackend<'_> {
         // see `price_data_path`).
         let (io_s, data) = if self.data_path {
             let d = price_data_path(
-                self.costs, &self.fleet[device], requests.len(),
+                self.costs, &self.fleet[device], rows,
                 self.data_tokens_in.unwrap_or(spec.prompt_len),
                 self.data_tokens_out.unwrap_or(spec.decode_len));
             (d.io_s, d)
         } else {
             (self.costs.io_s_per_row(self.fleet[device].mode)
-                 * requests.len() as f64,
+                 * rows as f64,
              DataPathOutcome::default())
         };
         Ok(Some(BatchOutcome {
-            requests,
             tokens: Vec::new(),
             artifact_batch,
             // the engine computes the device timeline from the costs

@@ -43,7 +43,7 @@ mod des;
 mod real;
 mod summary;
 
-use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -62,6 +62,7 @@ use crate::coordinator::swap::SwapStats;
 use crate::gpu::CcMode;
 use crate::metrics::recorder::{BatchRecord, MonitorRecord, Recorder};
 use crate::metrics::system::sample_proc;
+use crate::runtime::ModelId;
 use crate::tenancy::admission::{admission_by_name, queue_cap, AdmitCtx,
                                 AdmissionPolicy};
 use crate::tenancy::zipf::Zipf;
@@ -218,59 +219,98 @@ struct MonitorCtx {
     handle: JoinHandle<()>,
 }
 
+/// Per-model exec-time EWMA, id-indexed.  `NaN` is the "never
+/// executed" sentinel — exactly the states the old
+/// `HashMap::entry/or_insert` pair distinguished, without the hashing
+/// or the `String` keys.
+#[inline]
+fn exec_est_or(exec_est: &[f64], backend: &dyn ExecBackend, m: ModelId)
+               -> f64 {
+    let e = exec_est.get(m.index()).copied().unwrap_or(f64::NAN);
+    if e.is_nan() {
+        backend.initial_exec_est_s(m)
+    } else {
+        e
+    }
+}
+
 /// Strategy-visible snapshot of the queues, built the same way for
 /// every backend (the HTTP front-end reuses this).  `free` names the
 /// devices available for dispatch; per-model load estimates take the
 /// most favourable free device (on a one-device fleet this is just
-/// that device's estimate).
-pub fn build_views(queues: &ModelQueues, rates: &RateEstimator,
-                   backend: &dyn ExecBackend,
-                   exec_est: &HashMap<String, f64>, now_s: f64,
-                   free: &[usize]) -> Vec<ModelView> {
-    let est_load = |m: &str| -> f64 {
+/// that device's estimate).  Views are appended to the caller's
+/// (cleared) buffer so the steady-state loop reuses one allocation.
+pub fn build_views_into(queues: &ModelQueues, rates: &RateEstimator,
+                        backend: &dyn ExecBackend, exec_est: &[f64],
+                        now_s: f64, free: &[usize],
+                        out: &mut Vec<ModelView>) {
+    out.clear();
+    for m in queues.nonempty_ids() {
         let mut best = f64::INFINITY;
         for &d in free {
             best = best.min(backend.est_load_s(m, d));
         }
-        if best.is_finite() {
-            best
-        } else {
-            backend.est_load_s(m, 0)
+        if !best.is_finite() {
+            best = backend.est_load_s(m, 0);
         }
-    };
-    queues.nonempty_models().iter().map(|m| ModelView {
-        model: m.to_string(),
-        len: queues.len(m),
-        oldest_wait_s: queues.head_arrival_s(m)
-            .map(|a| (now_s - a).max(0.0)).unwrap_or(0.0),
-        obs: backend.obs(m),
-        rate_rps: rates.rate_rps(m, now_s),
-        est_load_s: est_load(*m),
-        est_exec_s: exec_est.get(*m).copied()
-            .unwrap_or_else(|| backend.initial_exec_est_s(m)),
-    }).collect()
+        out.push(ModelView {
+            model: m,
+            len: queues.len(m),
+            oldest_wait_s: queues.head_arrival_s(m)
+                .map(|a| (now_s - a).max(0.0)).unwrap_or(0.0),
+            obs: backend.obs(m),
+            rate_rps: rates.rate_rps(m, now_s),
+            est_load_s: best,
+            est_exec_s: exec_est_or(exec_est, backend, m),
+        });
+    }
+}
+
+/// Allocating convenience over [`build_views_into`].
+pub fn build_views(queues: &ModelQueues, rates: &RateEstimator,
+                   backend: &dyn ExecBackend, exec_est: &[f64],
+                   now_s: f64, free: &[usize]) -> Vec<ModelView> {
+    let mut out = Vec::new();
+    build_views_into(queues, rates, backend, exec_est, now_s, free,
+                     &mut out);
+    out
 }
 
 /// One [`DeviceView`] per backend device, from the engine's busy-until
-/// timelines (the HTTP front-end reuses this with always-free devices).
+/// timelines (the HTTP front-end reuses this with always-free
+/// devices), appended to the caller's (cleared) reusable buffer.
+pub fn build_device_views_into(backend: &dyn ExecBackend,
+                               busy_until: &[f64], busy_s: &[f64],
+                               dispatched: &[u64], now_s: f64,
+                               out: &mut Vec<DeviceView>) {
+    out.clear();
+    for d in 0..backend.n_devices() {
+        out.push(DeviceView {
+            id: d,
+            mode: backend.mode(d),
+            resident: backend.resident(d),
+            busy: busy_until[d] > now_s,
+            busy_s: busy_s[d],
+            dispatched: dispatched[d],
+        });
+    }
+}
+
+/// Allocating convenience over [`build_device_views_into`].
 pub fn build_device_views(backend: &dyn ExecBackend, busy_until: &[f64],
                           busy_s: &[f64], dispatched: &[u64], now_s: f64)
                           -> Vec<DeviceView> {
-    (0..backend.n_devices()).map(|d| DeviceView {
-        id: d,
-        mode: backend.mode(d),
-        resident: backend.resident(d),
-        busy: busy_until[d] > now_s,
-        busy_s: busy_s[d],
-        dispatched: dispatched[d],
-    }).collect()
+    let mut out = Vec::new();
+    build_device_views_into(backend, busy_until, busy_s, dispatched,
+                            now_s, &mut out);
+    out
 }
 
 /// Resolve a decision's device target: honour a pinned free device,
 /// otherwise ask the placement policy to pick among the free ones.
 pub fn resolve_device(ctx: &SchedContext, placement: &dyn Placement,
-                      model: &str, pinned: Option<usize>, free: &[usize])
-                      -> usize {
+                      model: ModelId, pinned: Option<usize>,
+                      free: &[usize]) -> usize {
     if let Some(d) = pinned {
         if free.contains(&d) {
             return d;
@@ -295,17 +335,16 @@ fn snapshot_all(backend: &dyn ExecBackend) -> Vec<DeviceSnapshot> {
 #[allow(clippy::too_many_arguments)]
 fn admit_ctx(r: &Request, now_s: f64, queues: &ModelQueues,
              cfg: &RunConfig, queue_cap: usize,
-             backend: &dyn ExecBackend,
-             exec_est: &HashMap<String, f64>,
+             backend: &dyn ExecBackend, exec_est: &[f64],
              busy_until: &[f64]) -> AdmitCtx {
     let mut est_load = f64::INFINITY;
     for d in 0..backend.n_devices() {
         if busy_until[d] <= now_s {
-            est_load = est_load.min(backend.est_load_s(&r.model, d));
+            est_load = est_load.min(backend.est_load_s(r.model, d));
         }
     }
     if !est_load.is_finite() {
-        est_load = backend.est_load_s(&r.model, 0);
+        est_load = backend.est_load_s(r.model, 0);
     }
     AdmitCtx {
         now_s,
@@ -313,14 +352,13 @@ fn admit_ctx(r: &Request, now_s: f64, queues: &ModelQueues,
         class: r.class,
         sla_s: cfg.sla_s,
         classes_on: cfg.sla_classes,
-        queue_len: queues.len(&r.model),
+        queue_len: queues.len(r.model),
         total_queued: queues.total_len(),
         class_queued: queues.class_counts(),
         queue_cap,
         est_load_s: est_load,
-        est_exec_s: exec_est.get(&r.model).copied()
-            .unwrap_or_else(|| backend.initial_exec_est_s(&r.model)),
-        obs: backend.obs(&r.model),
+        est_exec_s: exec_est_or(exec_est, backend, r.model),
+        obs: backend.obs(r.model),
     }
 }
 
@@ -334,6 +372,10 @@ impl Engine<'_> {
     pub fn run(mut self) -> anyhow::Result<(RunSummary, Recorder)> {
         let cfg = self.cfg.clone();
         let n_dev = self.backend.n_devices();
+        // The run's intern table: every model name is resolved to a
+        // ModelId exactly once (at schedule build below); the loop
+        // proper moves u32 copies only.
+        let table = self.backend.table().clone();
 
         // ---------------- arrival schedule (open loop) ----------------
         let mut rng = Pcg64::new(cfg.seed);
@@ -373,14 +415,14 @@ impl Engine<'_> {
             None
         };
         let schedule: Vec<Request> = arrivals.iter().enumerate()
-            .map(|(i, a)| Request {
+            .map(|(i, a)| anyhow::Ok(Request {
                 id: i as u64,
-                model: a.model.clone(),
+                model: table.require(&a.model)?,
                 tokens: self.backend.tokenize_prompt(
                     &a.model, &prompts.next_prompt(&a.model)),
                 arrival_s: a.at_s,
                 class: crng.as_mut().map(assign_class).unwrap_or(0),
-            }).collect();
+            })).collect::<anyhow::Result<_>>()?;
 
         // ---------------- tenancy state --------------------------------
         // the admission gate and per-class counters; active only when a
@@ -423,12 +465,22 @@ impl Engine<'_> {
         }
 
         // ---------------- scheduler state ------------------------------
-        let mut queues = ModelQueues::new();
+        let mut queues = ModelQueues::new(table.clone());
         let mut rates = RateEstimator::default();
         let mut sla = SlaTracker::new(cfg.sla_s);
         let mut recorder = Recorder::new();
-        // EWMA of observed exec time per model (SelectBatch headroom)
-        let mut exec_est: HashMap<String, f64> = HashMap::new();
+        // EWMA of observed exec time per model (SelectBatch headroom),
+        // id-indexed; NaN = never executed (the old map's "absent")
+        let mut exec_est: Vec<f64> = vec![f64::NAN; table.len()];
+        // Steady-state buffer pool: the per-tick context views, the
+        // free-device list, the per-batch request drain and the expiry
+        // drain all reuse these across iterations — the loop proper
+        // performs no per-dispatch allocation.
+        let mut view_buf: Vec<ModelView> = Vec::new();
+        let mut dev_buf: Vec<DeviceView> = Vec::new();
+        let mut free: Vec<usize> = Vec::with_capacity(n_dev);
+        let mut batch_buf: Vec<Request> = Vec::new();
+        let mut expired_buf: Vec<Request> = Vec::new();
         let mut ingested: u64 = 0;
         let mut last_complete_s = 0.0f64;
         // instant of the last observable progress (arrival, expiry or
@@ -459,7 +511,7 @@ impl Engine<'_> {
                         .unwrap_or(false)
                     {
                         let r = pending.pop_front().unwrap();
-                        rates.on_arrival(&r.model, r.arrival_s);
+                        rates.on_arrival(r.model, r.arrival_s);
                         ingested += 1;
                         if let Some(g) = gate.as_mut() {
                             let ctx = admit_ctx(
@@ -480,7 +532,7 @@ impl Engine<'_> {
                     match rx.try_recv() {
                         Ok(r) => {
                             let now = clock.now_s();
-                            rates.on_arrival(&r.model, r.arrival_s);
+                            rates.on_arrival(r.model, r.arrival_s);
                             ingested += 1;
                             last_progress_s = now;
                             let admit = match gate.as_mut() {
@@ -512,18 +564,19 @@ impl Engine<'_> {
             // (§III-C3).  With SLA classes on, each request carries
             // its class deadline; the uniform path keeps the exact
             // prefix-pop behavior the goldens pin.
-            let expired = if cfg.sla_classes {
+            expired_buf.clear();
+            if cfg.sla_classes {
                 let sla_s = cfg.sla_s;
-                queues.expire_by(t, |r| {
+                queues.expire_by_into(t, |r| {
                     r.arrival_s + class_deadline_s(r.class, sla_s)
-                })
+                }, &mut expired_buf);
             } else {
-                queues.expire(t, cfg.sla_s)
-            };
-            if !expired.is_empty() {
-                sla.on_unserved(expired.len() as u64);
+                queues.expire_into(t, cfg.sla_s, &mut expired_buf);
+            }
+            if !expired_buf.is_empty() {
+                sla.on_unserved(expired_buf.len() as u64);
                 if tenancy_on {
-                    for r in &expired {
+                    for r in &expired_buf {
                         tstats.expired[r.class as usize % N_CLASSES] += 1;
                     }
                 }
@@ -545,29 +598,45 @@ impl Engine<'_> {
             }
 
             // the strategy is only consulted while a device can take
-            // work; otherwise time simply advances to the next event
-            let free: Vec<usize> = (0..n_dev)
-                .filter(|&d| busy_until[d] <= t).collect();
-            let mut ctx_cell: Option<SchedContext> = None;
-            let decision = if free.is_empty() {
-                Decision::Wait
-            } else {
-                let views = build_views(&queues, &rates,
-                                        self.backend.as_ref(),
-                                        &exec_est, t, &free);
+            // work; otherwise time simply advances to the next event.
+            // The context borrows the pooled view buffers via
+            // `mem::take` and hands them back before the dispatch, so
+            // `Decision` (Copy) plus the resolved device/hint are all
+            // that outlive it — no per-tick allocation.
+            free.clear();
+            free.extend((0..n_dev).filter(|&d| busy_until[d] <= t));
+            let mut decision = Decision::Wait;
+            let mut dev = 0usize;
+            let mut hint: Option<ModelId> = None;
+            if !free.is_empty() {
+                build_views_into(&queues, &rates, self.backend.as_ref(),
+                                 &exec_est, t, &free, &mut view_buf);
+                build_device_views_into(self.backend.as_ref(),
+                                        &busy_until, &busy_s,
+                                        &dispatched, t, &mut dev_buf);
                 let ctx = SchedContext {
                     now_s: t,
-                    devices: build_device_views(self.backend.as_ref(),
-                                                &busy_until, &busy_s,
-                                                &dispatched, t),
-                    queues: views,
+                    devices: std::mem::take(&mut dev_buf),
+                    queues: std::mem::take(&mut view_buf),
                     sla_s: cfg.sla_s,
                     timeout_s: cfg.timeout_s(),
                 };
-                let d = self.strategy.decide(&ctx);
-                ctx_cell = Some(ctx);
-                d
-            };
+                decision = self.strategy.decide(&ctx);
+                if let Decision::Process { model, device, .. } = decision {
+                    // placement + predictive-prefetch target, decided
+                    // from the same snapshot the dispatch came from
+                    dev = resolve_device(&ctx, self.placement.as_ref(),
+                                         model, device, &free);
+                    hint = if cfg.prefetch {
+                        self.strategy.next_hint(&ctx, model)
+                            .filter(|h| *h != model)
+                    } else {
+                        None
+                    };
+                }
+                dev_buf = ctx.devices;
+                view_buf = ctx.queues;
+            }
 
             match decision {
                 Decision::Wait => {
@@ -580,7 +649,7 @@ impl Engine<'_> {
                     // device completion (virtual time jumps there;
                     // wall time just sleeps a tick)
                     let next = if self.virtual_time {
-                        let next_timer = queues.nonempty_models().iter()
+                        let next_timer = queues.nonempty_ids()
                             .filter_map(|m| queues.head_arrival_s(m))
                             .flat_map(|a| {
                                 [a + cfg.timeout_s(), a + cfg.sla_s]
@@ -601,27 +670,18 @@ impl Engine<'_> {
                         break;
                     }
                 }
-                Decision::Process { model, take, device } => {
-                    let ctx = ctx_cell.as_ref()
-                        .expect("Process decided without a context");
-                    let dev = resolve_device(ctx, self.placement.as_ref(),
-                                             &model, device, &free);
-                    // predictive prefetch target, decided from the same
-                    // snapshot the dispatch came from
-                    let hint = if cfg.prefetch {
-                        self.strategy.next_hint(ctx, &model)
-                            .filter(|h| *h != model)
-                    } else {
-                        None
-                    };
+                Decision::Process { model, take, .. } => {
                     // 1. residency (the expensive CC-sensitive step);
                     // a staged hit promotes without a second DMA
                     let swap = self.backend.ensure_resident(
-                        clock.as_mut(), dev, &model)?;
+                        clock.as_mut(), dev, model)?;
                     // 2.-5. batch assembly + payload I/O + execution,
-                    // costed by the backend
+                    // costed by the backend; the batch drains into the
+                    // pooled buffer
+                    batch_buf.clear();
                     let Some(out) = self.backend.execute_batch(
-                        clock.as_mut(), &mut queues, dev, &model, take)?
+                        clock.as_mut(), &mut queues, dev, model, take,
+                        &mut batch_buf)?
                     else {
                         continue;
                     };
@@ -644,7 +704,7 @@ impl Engine<'_> {
                     // serializes the fleet anyway — so the device is
                     // busy until the clock's now either way.)
                     let mut prefetch_s = 0.0;
-                    if let Some(h) = &hint {
+                    if let Some(h) = hint {
                         let pf = self.backend.prefetch(clock.as_mut(),
                                                        dev, h)?;
                         if pf.staged {
@@ -672,15 +732,17 @@ impl Engine<'_> {
                     dispatched[dev] += 1;
                     last_complete_s = last_complete_s.max(complete_s);
                     last_progress_s = clock.now_s();
-                    let e = exec_est.entry(model.clone())
-                        .or_insert(out.exec_s);
-                    *e = 0.3 * out.exec_s + 0.7 * *e;
+                    // first observation seeds the EWMA then folds once
+                    // (0.3x + 0.7x), exactly as the map-entry original
+                    let e = &mut exec_est[model.index()];
+                    let prev = if e.is_nan() { out.exec_s } else { *e };
+                    *e = 0.3 * out.exec_s + 0.7 * prev;
 
-                    let n_rows = out.requests.len();
-                    for r in &out.requests {
+                    let n_rows = batch_buf.len();
+                    for r in &batch_buf {
                         let c = CompletedRequest {
                             id: r.id,
-                            model: r.model.clone(),
+                            model: r.model,
                             arrival_s: r.arrival_s,
                             exec_start_s,
                             complete_s,
@@ -758,11 +820,13 @@ impl Engine<'_> {
         // tenancy block: only assembled when a tenancy feature ran, so
         // plain summaries carry no tenancy key at all
         let tenancy = tenancy_on.then(|| {
-            let mut churn: BTreeMap<String, u64> = BTreeMap::new();
+            // keyed by id; id order == sorted-name order, so the
+            // resolved rows keep the old name-keyed BTreeMap order
+            let mut churn: BTreeMap<ModelId, u64> = BTreeMap::new();
             for st in &dev_stats {
                 for (m, load_s) in &st.load_samples {
                     if *load_s > 0.0 {
-                        *churn.entry(m.clone()).or_insert(0) += 1;
+                        *churn.entry(*m).or_insert(0) += 1;
                     }
                 }
             }
@@ -801,13 +865,15 @@ impl Engine<'_> {
                 },
                 fairness,
                 classes,
-                churn_by_model: churn.into_iter().collect(),
+                churn_by_model: churn.into_iter()
+                    .map(|(m, n)| (table.name(m).to_string(), n))
+                    .collect(),
             }
         });
         let summary = summarize(&cfg, generated, runtime_s, &recorder,
                                 &sla, &dev_stats, &dev_modes, tenancy);
         if let Some(dir) = &cfg.results_dir {
-            recorder.write_csvs(dir, &cfg.label)?;
+            recorder.write_csvs(dir, &cfg.label, &table)?;
             std::fs::write(
                 dir.join(format!("{}_summary.json", cfg.label)),
                 summary.to_json().to_string())?;

@@ -21,9 +21,12 @@
 //!   DES-vs-real parity test pins, now per device and inclusive of
 //!   staging/promotion.
 
+use std::sync::Arc;
+
 use crate::config::RunConfig;
 use crate::coordinator::batcher;
 use crate::coordinator::queues::ModelQueues;
+use crate::coordinator::request::Request;
 use crate::coordinator::swap::{SwapManager, SwapStats};
 use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
                              BatchOutcome, DataPathOutcome,
@@ -33,12 +36,14 @@ use crate::engine::clock::Clock;
 use crate::gpu::dma::Dir;
 use crate::gpu::fleet::DeviceSet;
 use crate::gpu::CcMode;
-use crate::runtime::Registry;
+use crate::runtime::{ModelId, ModelTable, Registry};
 use crate::sim::CostModel;
 use crate::workload::tokenizer::tokenize;
 
 pub struct RealBackend<'a> {
     registry: &'a Registry,
+    /// Sorted intern table over the registry's loaded model names.
+    table: Arc<ModelTable>,
     fleet: DeviceSet,
     /// One residency manager per device.
     swaps: Vec<SwapManager>,
@@ -67,10 +72,13 @@ impl<'a> RealBackend<'a> {
                -> anyhow::Result<RealBackend<'a>> {
         let fleet = DeviceSet::new(cfg.fleet_configs())?;
         let n = fleet.len();
+        let table = ModelTable::shared(registry.names());
         Ok(RealBackend {
             registry,
             fleet,
-            swaps: (0..n).map(|_| SwapManager::new()).collect(),
+            swaps: (0..n).map(|_| SwapManager::new(table.clone()))
+                .collect(),
+            table,
             pipelined: cfg.gpu.pipeline_depth >= 2,
             data_path: cfg.data_path,
             data_tokens_in: cfg.data_tokens_in,
@@ -105,6 +113,10 @@ impl ExecBackend for RealBackend<'_> {
         "real"
     }
 
+    fn table(&self) -> &Arc<ModelTable> {
+        &self.table
+    }
+
     fn n_devices(&self) -> usize {
         self.fleet.len()
     }
@@ -133,7 +145,8 @@ impl ExecBackend for RealBackend<'_> {
         }
     }
 
-    fn obs(&self, model: &str) -> usize {
+    fn obs(&self, model: ModelId) -> usize {
+        let model = self.table.name(model);
         // In virtual-costs mode the cost table is the single source of
         // truth for batch sizing (it must be for DES parity); it must
         // only name OBS values the registry actually compiled.
@@ -144,7 +157,8 @@ impl ExecBackend for RealBackend<'_> {
         }
     }
 
-    fn est_load_s(&self, model: &str, device: usize) -> f64 {
+    fn est_load_s(&self, model: ModelId, device: usize) -> f64 {
+        let model = self.table.name(model);
         // a staged model promotes for free in either time domain (the
         // DES mirrors this, so parity requires it here too)
         if self.swaps[device].staged() == Some(model) {
@@ -160,7 +174,8 @@ impl ExecBackend for RealBackend<'_> {
         }
     }
 
-    fn initial_exec_est_s(&self, model: &str) -> f64 {
+    fn initial_exec_est_s(&self, model: ModelId) -> f64 {
+        let model = self.table.name(model);
         match &self.virtual_costs {
             Some(costs) => costs.costs(model)
                 .map(|mc| mc.exec_s(mc.obs)).unwrap_or(0.2),
@@ -170,15 +185,19 @@ impl ExecBackend for RealBackend<'_> {
         }
     }
 
-    fn resident(&self, device: usize) -> Option<String> {
-        self.swaps[device].resident().map(|s| s.to_string())
+    fn resident(&self, device: usize) -> Option<ModelId> {
+        // the resident name always came from this table, so the id
+        // lookup (a binary search, no clone) cannot miss
+        self.swaps[device].resident().and_then(|s| self.table.id(s))
     }
 
     fn ensure_resident(&mut self, _clock: &mut dyn Clock, device: usize,
-                       model: &str) -> anyhow::Result<SwapOutcome> {
+                       model: ModelId) -> anyhow::Result<SwapOutcome> {
+        let table = self.table.clone();
+        let name = table.name(model);
         let had_resident = self.swaps[device].resident().is_some();
         let rep = self.swaps[device].ensure_resident(
-            self.fleet.get_mut(device), self.registry, model)?;
+            self.fleet.get_mut(device), self.registry, name)?;
         let mut out = SwapOutcome {
             swapped: rep.swapped,
             promoted: rep.promoted,
@@ -196,7 +215,7 @@ impl ExecBackend for RealBackend<'_> {
             // wall-measured values are not in the engine's time
             // domain.  `price_swap` is the same pricing the DesBackend
             // runs — that shared definition is the parity contract.
-            let mc = costs.costs(model)?;
+            let mc = costs.costs(name)?;
             let mode = self.fleet.get(device).mode();
             out = price_swap(
                 mc, mode, self.pipelined,
@@ -209,9 +228,11 @@ impl ExecBackend for RealBackend<'_> {
     }
 
     fn prefetch(&mut self, _clock: &mut dyn Clock, device: usize,
-                model: &str) -> anyhow::Result<PrefetchOutcome> {
+                model: ModelId) -> anyhow::Result<PrefetchOutcome> {
+        let table = self.table.clone();
+        let name = table.name(model);
         let rep = self.swaps[device].prefetch(
-            self.fleet.get_mut(device), self.registry, model)?;
+            self.fleet.get_mut(device), self.registry, name)?;
         let Some(rep) = rep else {
             // already resident/staged, or no room for a second blob
             return Ok(PrefetchOutcome::default());
@@ -222,7 +243,7 @@ impl ExecBackend for RealBackend<'_> {
             dropped_staged: rep.dropped_staged,
         };
         if let Some(costs) = &self.virtual_costs {
-            let mc = costs.costs(model)?;
+            let mc = costs.costs(name)?;
             let mode = self.fleet.get(device).mode();
             out = price_prefetch(mc, mode, self.pipelined,
                                  rep.dropped_staged,
@@ -232,8 +253,12 @@ impl ExecBackend for RealBackend<'_> {
     }
 
     fn execute_batch(&mut self, clock: &mut dyn Clock,
-                     queues: &mut ModelQueues, device: usize, model: &str,
-                     take: usize) -> anyhow::Result<Option<BatchOutcome>> {
+                     queues: &mut ModelQueues, device: usize,
+                     model: ModelId, take: usize,
+                     out_requests: &mut Vec<Request>)
+                     -> anyhow::Result<Option<BatchOutcome>> {
+        let table = self.table.clone();
+        let name = table.name(model);
         // 1. batch assembly + workspace reservation (OOM guard)
         let Some(batch) = batcher::prepare(queues,
                                            self.fleet.get_mut(device),
@@ -255,7 +280,7 @@ impl ExecBackend for RealBackend<'_> {
         let rows: Vec<Vec<i32>> = batch.requests.iter()
             .map(|r| r.tokens.clone()).collect();
         let exec_start_s = clock.now_s();
-        let rep = self.registry.execute(model, &rows)?;
+        let rep = self.registry.execute(name, &rows)?;
         self.fleet.get_mut(device).record_compute(rep.elapsed);
         let mut exec_s = rep.elapsed.as_secs_f64();
 
@@ -269,16 +294,18 @@ impl ExecBackend for RealBackend<'_> {
         io_s += clock.now_s() - io_start;
 
         let n_rows = batch.requests.len();
-        let requests = batcher::release(self.fleet.get_mut(device), batch);
+        let mut requests =
+            batcher::release(self.fleet.get_mut(device), batch);
+        out_requests.append(&mut requests);
 
         // 5. virtual mode: replace measured times with modeled costs
         //    (the engine folds them into the device timeline)
         let mut data = DataPathOutcome::default();
         if let Some(costs) = &self.virtual_costs {
-            let mc = costs.costs(model)?;
+            let mc = costs.costs(name)?;
             exec_s = mc.exec_s(rep.batch);
             if self.data_path {
-                let spec = &self.registry.entry(model)?.spec;
+                let spec = &self.registry.entry(name)?.spec;
                 data = price_data_path(
                     costs, self.fleet.get(device).config(), n_rows,
                     self.data_tokens_in.unwrap_or(spec.prompt_len),
@@ -313,7 +340,6 @@ impl ExecBackend for RealBackend<'_> {
         }
 
         Ok(Some(BatchOutcome {
-            requests,
             tokens: rep.tokens,
             artifact_batch: rep.batch,
             exec_start_s,

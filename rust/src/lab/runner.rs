@@ -17,14 +17,22 @@
 //! only shared state between workers is the read-only manifest + cost
 //! table and the per-job slots.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::engine::{EngineBuilder, RunSummary};
 use crate::lab::spec::LabJob;
 use crate::runtime::Manifest;
 use crate::sim::CostModel;
+
+/// Per-`run` cache of synthetic-catalog expansions, keyed by catalog
+/// size and shared read-only across workers once built.  Expansion is
+/// a pure function of (manifest, catalog), so caching cannot change
+/// any cell's bytes — it only stops a 72-cell catalog grid from
+/// re-deriving the same expanded manifest + cost table 72 times.
+type CatalogCache = Mutex<HashMap<usize, Arc<(Manifest, CostModel)>>>;
 
 /// Resolve a `--threads` request: 0 means every available core, and
 /// there is never a point in more workers than jobs.
@@ -103,6 +111,7 @@ impl<'a> LabRunner<'a> {
         let slots: Vec<Mutex<Option<anyhow::Result<RunSummary>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
         let progress = Mutex::new(Progress::new(n, !self.quiet));
+        let catalogs: CatalogCache = Mutex::new(HashMap::new());
 
         std::thread::scope(|scope| {
             for _ in 0..threads {
@@ -112,7 +121,7 @@ impl<'a> LabRunner<'a> {
                         break;
                     }
                     let t0 = Instant::now();
-                    let r = self.run_one(&jobs[i]);
+                    let r = self.run_one(&jobs[i], &catalogs);
                     *slots[i].lock().unwrap() = Some(r);
                     progress.lock().unwrap().cell_done(
                         &jobs[i].cfg.label,
@@ -137,20 +146,29 @@ impl<'a> LabRunner<'a> {
         Ok(out)
     }
 
-    fn run_one(&self, job: &LabJob) -> anyhow::Result<RunSummary> {
+    fn run_one(&self, job: &LabJob, catalogs: &CatalogCache)
+               -> anyhow::Result<RunSummary> {
         if job.cfg.catalog > 0 {
             // synthetic-catalog cell: serve the expanded model set
             // instead of cfg.models, against a cost table priced from
             // the expanded manifest.  Both are pure functions of
-            // (manifest, catalog), so worker identity cannot leak in.
-            let expanded = crate::tenancy::catalog::expand_manifest(
-                self.manifest, job.cfg.catalog);
-            let costs = CostModel::synthetic(&expanded);
+            // (manifest, catalog), so worker identity cannot leak in —
+            // and the grid shares one expansion per catalog size.
+            let entry = catalogs.lock().unwrap()
+                .entry(job.cfg.catalog)
+                .or_insert_with(|| {
+                    let expanded =
+                        crate::tenancy::catalog::expand_manifest(
+                            self.manifest, job.cfg.catalog);
+                    let costs = CostModel::synthetic(&expanded);
+                    Arc::new((expanded, costs))
+                })
+                .clone();
             let mut cfg = job.cfg.clone();
             cfg.models = crate::tenancy::catalog::catalog_models(
                 job.cfg.catalog);
             let (summary, _rec) = EngineBuilder::new(&cfg)
-                .des(&expanded, &costs)?
+                .des(&entry.0, &entry.1)?
                 .run()?;
             return Ok(summary);
         }

@@ -13,13 +13,16 @@ use std::path::Path;
 use crate::coordinator::request::CompletedRequest;
 use crate::metrics::hist::Histogram;
 use crate::metrics::system::ProcSample;
+use crate::runtime::{ModelId, ModelTable};
 use crate::util::csvio::CsvWriter;
 
 /// One executed batch.
 #[derive(Debug, Clone)]
 pub struct BatchRecord {
     pub at_s: f64,
-    pub model: String,
+    /// Interned model id; resolved back to its name at CSV-write time
+    /// (the hot loop records a `Copy` id, never a `String` clone).
+    pub model: ModelId,
     /// Fleet device the batch executed on.
     pub device: usize,
     pub rows: usize,
@@ -106,17 +109,23 @@ impl Recorder {
         self.batches.iter().map(|b| b.load_s).sum()
     }
 
-    /// Write the three CSV classes.
-    pub fn write_csvs(&self, dir: &Path, label: &str) -> anyhow::Result<()> {
+    /// Write the three CSV classes.  `table` resolves interned ids
+    /// back to model names; writers are pre-sized by row count so bulk
+    /// dumps stream through a right-sized buffer.
+    pub fn write_csvs(&self, dir: &Path, label: &str,
+                      table: &ModelTable) -> anyhow::Result<()> {
         std::fs::create_dir_all(dir)?;
+        // ~96 bytes/row is a comfortable over-estimate for every table
+        let cap = |rows: usize| (rows.max(64) * 96).min(1 << 22);
 
-        let mut w = CsvWriter::create(
+        let mut w = CsvWriter::create_with_capacity(
             &dir.join(format!("{label}_requests.csv")),
             &["id", "model", "device", "arrival_s", "exec_start_s",
               "complete_s", "latency_s", "batch", "batch_rows",
-              "caused_swap", "sla_met"])?;
+              "caused_swap", "sla_met"],
+            cap(self.requests.len()))?;
         for (c, met) in &self.requests {
-            w.row(&[c.id.to_string(), c.model.clone(),
+            w.row(&[c.id.to_string(), table.name(c.model).to_string(),
                     c.device.to_string(),
                     fmt(c.arrival_s), fmt(c.exec_start_s),
                     fmt(c.complete_s), fmt(c.latency_s()),
@@ -125,14 +134,16 @@ impl Recorder {
         }
         w.flush()?;
 
-        let mut w = CsvWriter::create(
+        let mut w = CsvWriter::create_with_capacity(
             &dir.join(format!("{label}_batches.csv")),
             &["at_s", "model", "device", "rows", "artifact_batch",
               "swapped", "promoted", "load_s", "unload_s", "exec_s",
               "io_s", "data_bytes", "data_wire_bytes", "data_crypto_s",
-              "data_crypto_exposed_s", "prefetch_s"])?;
+              "data_crypto_exposed_s", "prefetch_s"],
+            cap(self.batches.len()))?;
         for b in &self.batches {
-            w.row(&[fmt(b.at_s), b.model.clone(), b.device.to_string(),
+            w.row(&[fmt(b.at_s), table.name(b.model).to_string(),
+                    b.device.to_string(),
                     b.rows.to_string(),
                     b.artifact_batch.to_string(), b.swapped.to_string(),
                     b.promoted.to_string(),
@@ -177,7 +188,7 @@ mod tests {
     fn completed(id: u64, latency: f64) -> CompletedRequest {
         CompletedRequest {
             id,
-            model: "llama-sim".into(),
+            model: ModelId(0),
             arrival_s: 1.0,
             exec_start_s: 1.0 + latency * 0.7,
             complete_s: 1.0 + latency,
@@ -194,7 +205,7 @@ mod tests {
         r.on_complete(completed(1, 0.5), true);
         r.on_complete(completed(2, 7.5), false);
         r.on_batch(BatchRecord {
-            at_s: 2.0, model: "llama-sim".into(), device: 1, rows: 3,
+            at_s: 2.0, model: ModelId(0), device: 1, rows: 3,
             artifact_batch: 4, swapped: true, promoted: false,
             load_s: 0.4, unload_s: 0.01, exec_s: 0.2, io_s: 0.005,
             data_bytes: 792, data_wire_bytes: 872,
@@ -211,7 +222,8 @@ mod tests {
         });
 
         let dir = std::env::temp_dir().join("sincere_rec_test");
-        r.write_csvs(&dir, "t").unwrap();
+        let table = ModelTable::new(["llama-sim"]);
+        r.write_csvs(&dir, "t", &table).unwrap();
 
         let reqs = CsvTable::read(&dir.join("t_requests.csv")).unwrap();
         assert_eq!(reqs.rows.len(), 2);

@@ -1,0 +1,170 @@
+//! Model-name interning: every model a run can serve is assigned one
+//! dense [`ModelId`] at startup, and the hot path moves `u32` copies
+//! around instead of `String` clones.
+//!
+//! The table is built **sorted** (and deduplicated), which buys two
+//! invariants the byte-identity contract leans on:
+//!
+//! * Iterating queues / per-model state by index visits models in the
+//!   same lexicographic order the old `BTreeMap<String, _>` keyed by
+//!   name did, so every table, CSV and golden stays byte-identical.
+//! * `ModelId`'s derived `Ord` *is* the name order — tie-breaks that
+//!   used to compare names (e.g. the prefetch predictor's
+//!   `b.model.cmp(&a.model)`) compare ids and decide identically.
+//!
+//! The table is immutable after construction and shared by `Arc`: the
+//! engine, backend, queues and recorder all point at the same one, so
+//! an id minted anywhere resolves everywhere.
+
+use std::sync::Arc;
+
+/// A dense, table-scoped model identifier.
+///
+/// Ids are indices into the [`ModelTable`] that minted them; because
+/// the table is sorted, `ModelId` ordering equals lexicographic name
+/// ordering.  The inner index is public so tests and benches can
+/// construct ids directly against a table they built.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelId(pub u32);
+
+impl ModelId {
+    /// The id's index into its table's dense per-model vectors.
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// The immutable, sorted intern table for one run.
+#[derive(Debug, Clone, Default)]
+pub struct ModelTable {
+    names: Vec<String>,
+}
+
+impl ModelTable {
+    /// Build a table from any collection of names; duplicates collapse
+    /// and the result is sorted, so construction order cannot leak
+    /// into id assignment.
+    pub fn new<I, S>(names: I) -> ModelTable
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let mut names: Vec<String> =
+            names.into_iter().map(Into::into).collect();
+        names.sort_unstable();
+        names.dedup();
+        ModelTable { names }
+    }
+
+    /// Shared-table convenience for the common construction site.
+    pub fn shared<I, S>(names: I) -> Arc<ModelTable>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        Arc::new(ModelTable::new(names))
+    }
+
+    /// Intern lookup: `None` means the name was not in the run's model
+    /// set (callers treat that as "unknown model").
+    #[inline]
+    pub fn id(&self, name: &str) -> Option<ModelId> {
+        self.names.binary_search_by(|n| n.as_str().cmp(name)).ok()
+            .map(|i| ModelId(i as u32))
+    }
+
+    /// Like [`ModelTable::id`] but with a descriptive error.
+    pub fn require(&self, name: &str) -> anyhow::Result<ModelId> {
+        self.id(name).ok_or_else(|| anyhow::anyhow!(
+            "model {name:?} is not in the intern table {:?}", self.names))
+    }
+
+    /// Resolve an id back to its name (borrowed — the hot path never
+    /// clones).
+    #[inline]
+    pub fn name(&self, id: ModelId) -> &str {
+        &self.names[id.index()]
+    }
+
+    /// Number of interned models.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// All ids in name (== index) order.
+    pub fn ids(&self) -> impl Iterator<Item = ModelId> + '_ {
+        (0..self.names.len()).map(|i| ModelId(i as u32))
+    }
+
+    /// All names in table (== lexicographic) order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn round_trips_names() {
+        let t = ModelTable::new(["gemma-sim", "llama-sim", "granite-sim"]);
+        for name in ["llama-sim", "gemma-sim", "granite-sim"] {
+            let id = t.id(name).unwrap();
+            assert_eq!(t.name(id), name);
+        }
+        assert_eq!(t.len(), 3);
+        assert!(t.id("gpt-5").is_none());
+        assert!(t.require("gpt-5").is_err());
+    }
+
+    #[test]
+    fn table_order_matches_btreemap_iteration() {
+        // The queues used to be a BTreeMap<String, _>; goldens depend
+        // on visiting models in its iteration order.  The sorted table
+        // must reproduce it exactly, whatever order names arrive in.
+        let arrival_order = ["llama-sim", "gemma-sim", "zeta", "alpha",
+                            "granite-sim"];
+        let legacy: BTreeMap<String, ()> = arrival_order.iter()
+            .map(|n| (n.to_string(), ())).collect();
+        let t = ModelTable::new(arrival_order);
+        let table_order: Vec<&str> = t.ids().map(|id| t.name(id)).collect();
+        let legacy_order: Vec<&str> = legacy.keys()
+            .map(String::as_str).collect();
+        assert_eq!(table_order, legacy_order);
+    }
+
+    #[test]
+    fn id_order_equals_name_order() {
+        let t = ModelTable::new(["b", "c", "a"]);
+        let a = t.id("a").unwrap();
+        let b = t.id("b").unwrap();
+        let c = t.id("c").unwrap();
+        assert!(a < b && b < c);
+        assert_eq!(a.index(), 0);
+        assert_eq!(c.index(), 2);
+    }
+
+    #[test]
+    fn duplicates_collapse() {
+        let t = ModelTable::new(["m", "m", "m"]);
+        assert_eq!(t.len(), 1);
+        assert_eq!(t.id("m").unwrap(), ModelId(0));
+    }
+
+    #[test]
+    fn empty_table_is_valid() {
+        let t = ModelTable::new(Vec::<String>::new());
+        assert!(t.is_empty());
+        assert!(t.id("m").is_none());
+        assert_eq!(t.ids().count(), 0);
+    }
+}

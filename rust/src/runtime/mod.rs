@@ -7,9 +7,11 @@
 //! prompt tokens.  Python never runs here — this is the serve path.
 
 pub mod artifact;
+pub mod intern;
 pub mod manifest;
 pub mod model;
 pub mod registry;
 
+pub use intern::{ModelId, ModelTable};
 pub use manifest::{FamilySpec, Manifest};
 pub use registry::Registry;

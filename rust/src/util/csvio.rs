@@ -14,12 +14,24 @@ pub struct CsvWriter {
 impl CsvWriter {
     /// Create a file-backed writer, writing the header immediately.
     pub fn create(path: &Path, header: &[&str]) -> anyhow::Result<CsvWriter> {
+        Self::create_with_capacity(path, header, 8 * 1024)
+    }
+
+    /// [`create`] with an explicit buffer size — bulk dumps (the
+    /// recorder's per-request tables can run to hundreds of thousands
+    /// of rows) size the buffer once instead of flushing every 8 KiB.
+    ///
+    /// [`create`]: CsvWriter::create
+    pub fn create_with_capacity(path: &Path, header: &[&str],
+                                capacity: usize)
+                                -> anyhow::Result<CsvWriter> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
         }
         let f = std::fs::File::create(path)
             .map_err(|e| anyhow::anyhow!("creating {path:?}: {e}"))?;
-        Self::from_writer(Box::new(std::io::BufWriter::new(f)), header)
+        let buf = std::io::BufWriter::with_capacity(capacity, f);
+        Self::from_writer(Box::new(buf), header)
     }
 
     /// Writer over any sink (used by tests with `Vec<u8>` buffers).

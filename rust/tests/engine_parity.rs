@@ -403,9 +403,13 @@ fn real_backend_still_does_real_work_under_virtual_time() {
             .and_then(|b| b.run()))
         .unwrap();
     assert!(summary.completed > 0);
+    // resolve interned batch ids the way the backend interned them
+    let table = registry().with(|reg| {
+        sincere::runtime::ModelTable::new(reg.names())
+    });
     // batches carry the modeled (not wall-measured) costs
     for b in &recorder.batches {
-        let mc = cm.costs(&b.model).unwrap();
+        let mc = cm.costs(table.name(b.model)).unwrap();
         assert!((b.exec_s - mc.exec_s(b.artifact_batch)).abs() < 1e-12,
                 "batch exec_s {} not from the cost table", b.exec_s);
     }

@@ -59,6 +59,27 @@ fn thread_count_never_changes_output_bytes() {
     assert_eq!(serial, run(8), "8 threads changed the bytes");
 }
 
+/// Same property on the tenancy preset — the hot-path stressor (Zipf
+/// re-routing, admission gates, SLA classes, synthetic catalog cells
+/// that exercise the shared expansion cache).  This is the grid the
+/// interned-id/pooled-buffer refactor must not perturb by a byte at
+/// any worker count.
+#[test]
+fn tenancy_preset_bytes_identical_across_threads() {
+    let spec = lab::preset_by_name("tenancy").unwrap();
+    let grid = spec.expand(&RunConfig::default()).unwrap();
+    let jobs = grid.jobs(grid.seeds);
+    let cm = costs();
+    let run = |threads: usize| -> String {
+        let cells = LabRunner::new(manifest(), &cm)
+            .threads(threads).quiet(true).run(&jobs).unwrap();
+        lab::run_to_json(&cells).to_string()
+    };
+    let serial = run(1);
+    assert_eq!(serial, run(2), "2 threads changed the tenancy bytes");
+    assert_eq!(serial, run(8), "8 threads changed the tenancy bytes");
+}
+
 /// `sweep` is an alias for this preset, so the grid must reproduce
 /// the deleted hand-rolled loop exactly: same cell order, labels and
 /// summary JSON.

@@ -12,6 +12,7 @@ use sincere::gpu::CcMode;
 use sincere::gpu::hbm::HbmAllocator;
 use sincere::metrics::hist::Histogram;
 use sincere::prop_assert;
+use sincere::runtime::{ModelId, ModelTable};
 use sincere::util::json::Json;
 use sincere::util::prop::{forall, Gen};
 
@@ -22,7 +23,8 @@ use sincere::util::prop::{forall, Gen};
 fn prop_queues_fifo_per_model() {
     forall("queues fifo", 200, |g| {
         let models = ["a", "b", "c"];
-        let mut q = ModelQueues::new();
+        // sorted input: index i interns to ModelId(i)
+        let mut q = ModelQueues::new(ModelTable::shared(models));
         let mut popped: Vec<Vec<u64>> = vec![Vec::new(); models.len()];
         let mut pushed: Vec<Vec<u64>> = vec![Vec::new(); models.len()];
         let mut next_id = 0u64;
@@ -31,7 +33,7 @@ fn prop_queues_fifo_per_model() {
                 let mi = g.usize_in(0, models.len() - 1);
                 q.push(Request {
                     id: next_id,
-                    model: models[mi].into(),
+                    model: ModelId(mi as u32),
                     tokens: vec![],
                     arrival_s: next_id as f64,
                     class: 0,
@@ -41,14 +43,14 @@ fn prop_queues_fifo_per_model() {
             } else {
                 let mi = g.usize_in(0, models.len() - 1);
                 let n = g.usize_in(0, 5);
-                for r in q.pop_n(models[mi], n) {
+                for r in q.pop_n(ModelId(mi as u32), n) {
                     popped[mi].push(r.id);
                 }
             }
         }
         // drain the rest
-        for (mi, m) in models.iter().enumerate() {
-            for r in q.pop_n(m, usize::MAX) {
+        for mi in 0..models.len() {
+            for r in q.pop_n(ModelId(mi as u32), usize::MAX) {
                 popped[mi].push(r.id);
             }
         }
@@ -70,7 +72,7 @@ fn prop_strategy_decisions_valid() {
     forall("strategy decisions valid", 400, |g| {
         let n_queues = g.usize_in(1, 5);
         let queues: Vec<ModelView> = (0..n_queues).map(|i| ModelView {
-            model: format!("m{i}"),
+            model: ModelId(i as u32),
             len: g.usize_in(1, 64),
             oldest_wait_s: g.f64_in(0.0, 12.0),
             obs: g.usize_in(1, 32),
@@ -85,7 +87,7 @@ fn prop_strategy_decisions_valid() {
             id: d,
             mode: if g.bool() { CcMode::On } else { CcMode::Off },
             resident: if g.bool() {
-                Some(format!("m{}", g.usize_in(0, n_queues - 1)))
+                Some(ModelId(g.usize_in(0, n_queues - 1) as u32))
             } else {
                 None
             },
@@ -107,7 +109,7 @@ fn prop_strategy_decisions_valid() {
                 Decision::Process { model, take, device } => {
                     let v = queues.iter().find(|v| v.model == model);
                     prop_assert!(v.is_some(),
-                                 "{name} chose unknown model {model}");
+                                 "{name} chose unknown model {model:?}");
                     let v = v.unwrap();
                     prop_assert!(take >= 1, "{name} take=0");
                     prop_assert!(take <= v.len,
@@ -135,7 +137,7 @@ fn prop_timer_never_waits_when_overdue() {
         let overdue_wait = g.f64_in(2.0, 20.0);
         let timeout = g.f64_in(0.1, 2.0);
         let queues = vec![ModelView {
-            model: "m0".into(),
+            model: ModelId(0),
             len: g.usize_in(1, 32),
             oldest_wait_s: overdue_wait,
             obs: g.usize_in(1, 32),

@@ -7,21 +7,28 @@ use sincere::coordinator::strategy::{strategy_by_name, strategy_names,
                                      Decision, DeviceView, ModelView,
                                      SchedContext, SelectBatchTimer};
 use sincere::gpu::CcMode;
+use sincere::runtime::ModelId;
 
-fn device(id: usize, resident: Option<&str>) -> DeviceView {
+// Interned stand-ins for the old string models "a"/"b"/"c" (sorted
+// intern order, so the ids mirror the lexicographic names).
+const A: ModelId = ModelId(0);
+const B: ModelId = ModelId(1);
+const C: ModelId = ModelId(2);
+
+fn device(id: usize, resident: Option<ModelId>) -> DeviceView {
     DeviceView {
         id,
         mode: CcMode::Off,
-        resident: resident.map(|s| s.to_string()),
+        resident,
         busy: false,
         busy_s: 0.0,
         dispatched: 0,
     }
 }
 
-fn view(model: &str, len: usize, wait_s: f64) -> ModelView {
+fn view(model: ModelId, len: usize, wait_s: f64) -> ModelView {
     ModelView {
-        model: model.into(),
+        model,
         len,
         oldest_wait_s: wait_s,
         obs: 8,
@@ -31,7 +38,7 @@ fn view(model: &str, len: usize, wait_s: f64) -> ModelView {
     }
 }
 
-fn ctx(resident: Option<&str>, queues: Vec<ModelView>) -> SchedContext {
+fn ctx(resident: Option<ModelId>, queues: Vec<ModelView>) -> SchedContext {
     SchedContext {
         now_s: 100.0,
         devices: vec![device(0, resident)],
@@ -41,8 +48,8 @@ fn ctx(resident: Option<&str>, queues: Vec<ModelView>) -> SchedContext {
     }
 }
 
-fn process(model: &str, take: usize) -> Decision {
-    Decision::Process { model: model.into(), take, device: None }
+fn process(model: ModelId, take: usize) -> Decision {
+    Decision::Process { model, take, device: None }
 }
 
 // ------------------------------------------------------- empty queues
@@ -53,7 +60,7 @@ fn empty_queues_always_wait() {
         let s = strategy_by_name(name).unwrap();
         assert_eq!(s.decide(&ctx(None, vec![])), Decision::Wait,
                    "{name} with no queues");
-        assert_eq!(s.decide(&ctx(Some("a"), vec![])), Decision::Wait,
+        assert_eq!(s.decide(&ctx(Some(A), vec![])), Decision::Wait,
                    "{name} with a resident but no queues");
     }
 }
@@ -67,10 +74,10 @@ fn timer_expiry_forces_undersized_batch() {
     for name in ["best-batch+timer", "select-batch+timer",
                  "best-batch+partial+timer"] {
         let s = strategy_by_name(name).unwrap();
-        let c = ctx(None, vec![view("a", 3, 3.5)]);
+        let c = ctx(None, vec![view(A, 3, 3.5)]);
         match s.decide(&c) {
             Decision::Process { model, take, .. } => {
-                assert_eq!(model, "a", "{name}");
+                assert_eq!(model, A, "{name}");
                 assert!(take >= 1 && take <= 3, "{name} take {take}");
             }
             Decision::Wait => panic!("{name} waited past the timer"),
@@ -83,13 +90,13 @@ fn timer_expiry_is_longest_wait_first_not_resident_first() {
     // Both queues overdue; "b" has waited longer.  The resident
     // preference must NOT apply to the timer override (a saturated
     // resident queue would starve every other model forever).
-    let c = ctx(Some("a"),
-                vec![view("a", 8, 3.2), view("b", 2, 5.0)]);
+    let c = ctx(Some(A),
+                vec![view(A, 8, 3.2), view(B, 2, 5.0)]);
     for name in ["best-batch+timer", "select-batch+timer"] {
         let s = strategy_by_name(name).unwrap();
         match s.decide(&c) {
             Decision::Process { model, .. } => {
-                assert_eq!(model, "b", "{name} must honour the oldest \
+                assert_eq!(model, B, "{name} must honour the oldest \
                                         overdue head");
             }
             Decision::Wait => panic!("{name} waited"),
@@ -101,14 +108,14 @@ fn timer_expiry_is_longest_wait_first_not_resident_first() {
 fn exactly_at_timeout_fires() {
     // boundary: oldest_wait == timeout_s counts as overdue
     let s = strategy_by_name("best-batch+timer").unwrap();
-    let c = ctx(None, vec![view("a", 2, 3.0)]);
-    assert_eq!(s.decide(&c), process("a", 2));
+    let c = ctx(None, vec![view(A, 2, 3.0)]);
+    assert_eq!(s.decide(&c), process(A, 2));
 }
 
 #[test]
 fn below_timeout_below_obs_waits() {
     let s = strategy_by_name("best-batch+timer").unwrap();
-    let c = ctx(None, vec![view("a", 7, 2.9)]);
+    let c = ctx(None, vec![view(A, 7, 2.9)]);
     assert_eq!(s.decide(&c), Decision::Wait);
 }
 
@@ -120,9 +127,9 @@ fn partial_drains_resident_before_swapping_away() {
     // queued — the Partial Batch plan drains them first, pinned to the
     // resident's device.
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
-    let c = ctx(Some("a"), vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+    let c = ctx(Some(A), vec![view(A, 2, 0.5), view(B, 3, 4.0)]);
     assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 2,
+               Decision::Process { model: A, take: 2,
                                    device: Some(0) });
 }
 
@@ -133,20 +140,20 @@ fn partial_drain_happens_once_per_residency() {
     // unconditional drain rule would pin the resident forever under
     // open-loop arrivals).
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
-    let c = ctx(Some("a"), vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
+    let c = ctx(Some(A), vec![view(A, 2, 0.5), view(B, 3, 4.0)]);
     assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 2,
+               Decision::Process { model: A, take: 2,
                                    device: Some(0) });
     // resident queue refilled during the drain — swap must still win
-    let c2 = ctx(Some("a"), vec![view("a", 1, 0.1), view("b", 3, 4.2)]);
-    assert_eq!(s.decide(&c2), process("b", 3));
+    let c2 = ctx(Some(A), vec![view(A, 1, 0.1), view(B, 3, 4.2)]);
+    assert_eq!(s.decide(&c2), process(B, 3));
 }
 
 #[test]
 fn partial_without_resident_backlog_swaps_immediately() {
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
-    let c = ctx(Some("a"), vec![view("b", 3, 4.0)]);
-    assert_eq!(s.decide(&c), process("b", 3));
+    let c = ctx(Some(A), vec![view(B, 3, 4.0)]);
+    assert_eq!(s.decide(&c), process(B, 3));
 }
 
 #[test]
@@ -154,10 +161,10 @@ fn partial_drain_targets_resident_on_second_device() {
     // Fleet: resident "a" on device 1; the drain decision must pin
     // device 1 so the engine does not place the batch elsewhere.
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
-    let mut c = ctx(None, vec![view("a", 2, 0.5), view("b", 3, 4.0)]);
-    c.devices.push(device(1, Some("a")));
+    let mut c = ctx(None, vec![view(A, 2, 0.5), view(B, 3, 4.0)]);
+    c.devices.push(device(1, Some(A)));
     assert_eq!(s.decide(&c),
-               Decision::Process { model: "a".into(), take: 2,
+               Decision::Process { model: A, take: 2,
                                    device: Some(1) });
 }
 
@@ -169,21 +176,21 @@ fn partial_drain_is_bounded_on_multi_device_fleets() {
     // would let a and b ping-pong drains and starve "c" forever.
     let s = strategy_by_name("best-batch+partial+timer").unwrap();
     let fleet_ctx = |a_len: usize, b_len: usize| {
-        let mut c = ctx(Some("a"),
-                        vec![view("a", a_len, 0.5), view("b", b_len, 0.6),
-                             view("c", 3, 4.0)]);
-        c.devices.push(device(1, Some("b")));
+        let mut c = ctx(Some(A),
+                        vec![view(A, a_len, 0.5), view(B, b_len, 0.6),
+                             view(C, 3, 4.0)]);
+        c.devices.push(device(1, Some(B)));
         c
     };
     assert_eq!(s.decide(&fleet_ctx(2, 2)),
-               Decision::Process { model: "a".into(), take: 2,
+               Decision::Process { model: A, take: 2,
                                    device: Some(0) });
     // a's queue refilled during its drain — b drains next, not a again
     assert_eq!(s.decide(&fleet_ctx(2, 2)),
-               Decision::Process { model: "b".into(), take: 2,
+               Decision::Process { model: B, take: 2,
                                    device: Some(1) });
     // both drained: the swap to the overdue model proceeds
-    assert_eq!(s.decide(&fleet_ctx(1, 1)), process("c", 3));
+    assert_eq!(s.decide(&fleet_ctx(1, 1)), process(C, 3));
 }
 
 // ------------------------------------------- select-batch headroom
@@ -192,7 +199,7 @@ fn partial_drain_is_bounded_on_multi_device_fleets() {
 fn select_batch_sizes_from_rate_and_headroom() {
     // rate 2 rps, desired latency = 6 − 0.5 − 0.5 = 5 s → target 10,
     // clamped to OBS 8
-    let v = view("a", 12, 0.1);
+    let v = view(A, 12, 0.1);
     assert_eq!(SelectBatchTimer::target_batch(&v, 6.0), 8);
     // tighter SLA 2 s → desired 1 s → target 2
     assert_eq!(SelectBatchTimer::target_batch(&v, 2.0), 2);
@@ -203,7 +210,7 @@ fn select_batch_headroom_clamp_floors_infeasible_slas() {
     // est_load + est_exec exceed the SLA entirely: the naive formula
     // would go negative and degrade to batch-1 thrashing; the clamp
     // floors desired latency at 25% of the SLA.
-    let mut v = view("a", 12, 0.1);
+    let mut v = view(A, 12, 0.1);
     v.est_load_s = 5.0;
     v.est_exec_s = 3.0;
     v.rate_rps = 4.0;
@@ -213,7 +220,7 @@ fn select_batch_headroom_clamp_floors_infeasible_slas() {
 
 #[test]
 fn select_batch_unknown_rate_clamps_to_one() {
-    let mut v = view("a", 12, 0.1);
+    let mut v = view(A, 12, 0.1);
     v.rate_rps = 0.0;
     assert_eq!(SelectBatchTimer::target_batch(&v, 6.0), 1,
                "no rate estimate must still make progress");
@@ -224,9 +231,9 @@ fn select_batch_overdue_take_is_capped_by_queue_length() {
     let s = strategy_by_name("select-batch+timer").unwrap();
     // overdue head with only 3 queued while the target (rate 8 ×
     // desired 5 s → obs-clamped 8) is larger: take the whole queue
-    let mut c = ctx(None, vec![view("a", 3, 4.0)]);
+    let mut c = ctx(None, vec![view(A, 3, 4.0)]);
     c.queues[0].rate_rps = 8.0;
-    assert_eq!(s.decide(&c), process("a", 3));
+    assert_eq!(s.decide(&c), process(A, 3));
 }
 
 #[test]
@@ -234,6 +241,6 @@ fn select_batch_waits_below_target() {
     let s = strategy_by_name("select-batch+timer").unwrap();
     // rate 2, desired 5 → target 8 (obs clamp); queue of 7, not overdue
     // → wait for more arrivals... but only when below target:
-    let c = ctx(None, vec![view("a", 7, 0.1)]);
+    let c = ctx(None, vec![view(A, 7, 0.1)]);
     assert_eq!(s.decide(&c), Decision::Wait);
 }

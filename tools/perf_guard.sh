@@ -1,0 +1,72 @@
+#!/usr/bin/env sh
+# CI perf guard: time a serial lab smoke run, compute cells/second, and
+# compare against the newest *recorded* BENCH_*.json trajectory point.
+# The tolerance is deliberately loose — the run only fails when CI is
+# more than 2x slower than the recorded serial figure — because CI
+# boxes are noisy and the smoke grid is smaller than the paper-72 grid
+# the baseline pins.  While every trajectory point is still
+# `recorded: false` the guard is advisory: it prints and writes the
+# bench table but cannot fail.
+#
+#   tools/perf_guard.sh [results-dir] [table-out.md]
+#
+# Expects `cargo build --release` to have run (uses target/release).
+set -e
+cd "$(dirname "$0")/.."
+results="${1:-perf-guard-results}"
+table="${2:-bench_table.md}"
+
+start=$(date +%s%N)
+./target/release/sincere lab run --preset smoke --synthetic-costs on \
+    --threads 1 --results "$results"
+end=$(date +%s%N)
+wall=$(awk -v a="$start" -v b="$end" 'BEGIN { printf "%.3f", (b - a) / 1e9 }')
+
+cells=$(python3 -c 'import json, sys; print(len(json.load(open(sys.argv[1]))))' \
+        "$results/sweep_cells.json")
+cps=$(awk -v c="$cells" -v w="$wall" \
+      'BEGIN { printf "%.2f", c / (w > 0 ? w : 1e-9) }')
+
+# newest trajectory point with recorded=true and a non-null serial
+# cells/s figure; "none" when the whole trajectory is documented-unrecorded
+baseline=$(python3 - <<'EOF'
+import glob, json, re
+best = None
+for p in glob.glob("BENCH_*.json"):
+    m = re.match(r"BENCH_(\d+)\.json$", p)
+    if not m:
+        continue
+    d = json.load(open(p))
+    serial = (d.get("bench", {}).get("lab_grid") or {}).get("cells_per_s_serial")
+    if d.get("recorded") and isinstance(serial, (int, float)):
+        if best is None or int(m.group(1)) > best[0]:
+            best = (int(m.group(1)), serial)
+print("%d %s" % best if best else "none")
+EOF
+)
+
+{
+    echo "# Perf guard — lab smoke preset, serial run"
+    echo
+    echo "| preset | cells | wall (s) | cells/s | baseline cells/s | verdict |"
+    echo "|---|---|---|---|---|---|"
+} > "$table"
+
+if [ "$baseline" = "none" ]; then
+    echo "| smoke | $cells | $wall | $cps | unrecorded | advisory |" >> "$table"
+    cat "$table"
+    echo "perf-guard: no recorded BENCH_*.json baseline yet — advisory only"
+    exit 0
+fi
+
+point=$(printf '%s' "$baseline" | cut -d' ' -f1)
+ref=$(printf '%s' "$baseline" | cut -d' ' -f2)
+verdict=$(awk -v got="$cps" -v ref="$ref" \
+          'BEGIN { print (got * 2 >= ref) ? "ok" : "regression" }')
+echo "| smoke | $cells | $wall | $cps | ${ref} (BENCH_${point}) | $verdict |" >> "$table"
+cat "$table"
+if [ "$verdict" = "regression" ]; then
+    echo "perf-guard: ${cps} cells/s is more than 2x below the" \
+         "BENCH_${point} serial figure (${ref})"
+    exit 1
+fi

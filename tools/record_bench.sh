@@ -1,11 +1,12 @@
 #!/usr/bin/env sh
 # Record one point of the perf trajectory (ROADMAP item: tracked
 # simulator speed): run the lab_grid and hotpath benches and assemble
-# BENCH_<n>.json at the repo root with the two headline figures —
+# BENCH_<n>.json at the repo root with the headline figures —
 # cells/sec (grid throughput of the lab runner) and simulated
-# requests/sec (DES request volume per wall second).
+# requests/sec (DES request volume per wall second) for each bench
+# preset, plus the worst-case strategy-decide mean.
 #
-#   tools/record_bench.sh 6        # writes BENCH_6.json
+#   tools/record_bench.sh 7        # writes BENCH_7.json
 #
 # Requires a Rust toolchain and `make artifacts` (tools/gen_artifacts.py)
 # to have been run; the container CI image has neither, so trajectory
@@ -21,20 +22,32 @@ grid=$(./target/release/deps/lab_grid-* 2>/dev/null \
        || cargo bench --bench lab_grid 2>/dev/null)
 hot=$(cargo bench --bench hotpath 2>/dev/null)
 
-# lab_grid rows: | threads | wall (s) | cells/s | sim req/s | speedup |
-# take the best (max cells/s) row as the headline figure
-best=$(printf '%s\n' "$grid" | awk -F'|' '
-    /^\| [0-9]+ \|/ {
-        gsub(/ /, "", $4); gsub(/ /, "", $5)
-        if ($4 + 0 > c) { c = $4 + 0; r = $5 + 0; t = $2 + 0 }
-    }
-    END { printf "%s %s %s", c, r, t }')
-cells_s=$(printf '%s' "$best" | cut -d' ' -f1)
-reqs_s=$(printf '%s' "$best" | cut -d' ' -f2)
-threads=$(printf '%s' "$best" | cut -d' ' -f3)
+# lab_grid prints one section per preset:
+#   # Lab grid scaling [<preset>] — ...
+#   | threads | wall (s) | cells/s | sim req/s | speedup vs 1 |
+# Extract "<best cells/s> <its req/s> <its threads> <serial cells/s>"
+# for one preset's section.
+preset_stats() {
+    printf '%s\n' "$grid" | awk -F'|' -v preset="$1" '
+        /^# Lab grid scaling/ { in_sec = index($0, "[" preset "]") > 0 }
+        in_sec && /^\| [0-9]+ \|/ {
+            gsub(/ /, "", $2); gsub(/ /, "", $4); gsub(/ /, "", $5)
+            if ($2 + 0 == 1) s = $4 + 0
+            if ($4 + 0 > c) { c = $4 + 0; r = $5 + 0; t = $2 + 0 }
+        }
+        END { printf "%s %s %s %s", c, r, t, s }'
+}
 
-serial=$(printf '%s\n' "$grid" | awk -F'|' '
-    /^\| 1 \|/ { gsub(/ /, "", $4); print $4 + 0; exit }')
+p72=$(preset_stats "paper-72")
+ten=$(preset_stats "tenancy")
+p72_cells=$(printf '%s' "$p72" | cut -d' ' -f1)
+p72_reqs=$(printf '%s' "$p72" | cut -d' ' -f2)
+p72_threads=$(printf '%s' "$p72" | cut -d' ' -f3)
+p72_serial=$(printf '%s' "$p72" | cut -d' ' -f4)
+ten_cells=$(printf '%s' "$ten" | cut -d' ' -f1)
+ten_reqs=$(printf '%s' "$ten" | cut -d' ' -f2)
+ten_threads=$(printf '%s' "$ten" | cut -d' ' -f3)
+ten_serial=$(printf '%s' "$ten" | cut -d' ' -f4)
 
 # hotpath headline: the slowest strategy decide mean, in microseconds
 decide=$(printf '%s\n' "$hot" | awk -F'|' '
@@ -49,13 +62,21 @@ cat > "$out" <<EOF
   "trajectory_point": ${n},
   "date": "${date}",
   "host": "${host}",
+  "recorded": true,
   "bench": {
     "lab_grid": {
       "preset": "paper-72",
-      "cells_per_s_best": ${cells_s:-0},
-      "cells_per_s_serial": ${serial:-0},
-      "sim_requests_per_s_best": ${reqs_s:-0},
-      "best_threads": ${threads:-0}
+      "cells_per_s_best": ${p72_cells:-0},
+      "cells_per_s_serial": ${p72_serial:-0},
+      "sim_requests_per_s_best": ${p72_reqs:-0},
+      "best_threads": ${p72_threads:-0}
+    },
+    "lab_grid_tenancy": {
+      "preset": "tenancy",
+      "cells_per_s_best": ${ten_cells:-0},
+      "cells_per_s_serial": ${ten_serial:-0},
+      "sim_requests_per_s_best": ${ten_reqs:-0},
+      "best_threads": ${ten_threads:-0}
     },
     "hotpath": {
       "decide_mean_us_worst": ${decide:-0}
