@@ -63,6 +63,12 @@ pub struct RunConfig {
     /// Per-device PCIe rate scale, multiplying both plain and CC
     /// bandwidth (empty = 1.0 everywhere; otherwise one per device).
     pub device_bw_scale: Vec<f64>,
+    /// Named hardware-generation profiles, one per device (empty =
+    /// the base `gpu` knobs everywhere; see `gpu::profile::PROFILES`).
+    /// The first profile's bundled CC mode becomes the run default;
+    /// `--mode` and `--device-modes` still override it, and the
+    /// explicit per-device knob lists apply on top of the profile.
+    pub device_profiles: Vec<String>,
     /// Fleet placement policy, see `coordinator::placement_names`.
     pub placement: String,
 
@@ -156,6 +162,7 @@ impl Default for RunConfig {
             device_modes: Vec::new(),
             device_hbm_mb: Vec::new(),
             device_bw_scale: Vec::new(),
+            device_profiles: Vec::new(),
             placement: "affinity".into(),
             prefetch: false,
             data_path: false,
@@ -229,6 +236,27 @@ impl RunConfig {
             }
             "device-bw-scale" => {
                 self.device_bw_scale = parse_f64_list(key, value)?;
+            }
+            "device-profiles" => {
+                let mut names = Vec::new();
+                for part in value.split(',') {
+                    let part = part.trim();
+                    if part.is_empty() {
+                        continue;
+                    }
+                    let p = crate::gpu::profile::profile_by_name(part)?;
+                    // the first profile's bundled mode is the run
+                    // default; a later --mode or --device-modes
+                    // override still wins
+                    if names.is_empty() {
+                        if let Some(m) = p.mode {
+                            self.mode = m;
+                            self.gpu.mode = m;
+                        }
+                    }
+                    names.push(part.to_string());
+                }
+                self.device_profiles = names;
             }
             "placement" => self.placement = value.to_string(),
             "pipeline-depth" => {
@@ -312,14 +340,19 @@ impl RunConfig {
     }
 
     /// Grid-cell label, e.g. `cc_gamma_select-batch+timer_sla6`
-    /// (fleet runs append `_devN`; pipelined runs `_pipeN`; prefetch
-    /// runs `_pf`; data-path runs `_io` plus `_tinN`/`_toutN` when the
-    /// priced token counts are overridden).
+    /// (fleet runs append `_devN`; profile runs `_prof-<names>`;
+    /// pipelined runs `_pipeN`; prefetch runs `_pf`; data-path runs
+    /// `_io` plus `_tinN`/`_toutN` when the priced token counts are
+    /// overridden).
     pub fn cell_label(&self) -> String {
         let mut base = format!("{}_{}_{}_sla{}", self.mode.as_str(),
                                self.pattern, self.strategy, self.sla_s);
         if self.devices > 1 {
             base.push_str(&format!("_dev{}", self.devices));
+        }
+        if !self.device_profiles.is_empty() {
+            base.push_str(&format!("_prof-{}",
+                                   self.device_profiles.join("+")));
         }
         if self.gpu.pipeline_depth >= 2 {
             base.push_str(&format!("_pipe{}", self.gpu.pipeline_depth));
@@ -357,14 +390,23 @@ impl RunConfig {
         base
     }
 
-    /// One `GpuConfig` per fleet device: the base `gpu` config with the
-    /// per-device mode / HBM / PCIe overrides applied.
+    /// One `GpuConfig` per fleet device: the base `gpu` config with
+    /// the per-device profile, then the mode / HBM / PCIe overrides,
+    /// applied in that order.
     pub fn fleet_configs(&self) -> Vec<GpuConfig> {
         (0..self.devices.max(1)).map(|i| {
             let mut g = self.gpu.clone();
             // `mode` is the canonical experiment switch; per-device
             // overrides sit on top of it
             g.mode = self.mode;
+            // the named profile rewrites link/HBM/pricing knobs but
+            // never the mode (its bundled mode was folded into
+            // `self.mode` at parse time)
+            if let Some(name) = self.device_profiles.get(i) {
+                if let Ok(p) = crate::gpu::profile::profile_by_name(name) {
+                    g = p.apply(&g);
+                }
+            }
             if let Some(&m) = self.device_modes.get(i) {
                 g.mode = m;
             }
@@ -399,10 +441,15 @@ impl RunConfig {
         for (name, len) in [("device-modes", self.device_modes.len()),
                             ("device-hbm-mb", self.device_hbm_mb.len()),
                             ("device-bw-scale",
-                             self.device_bw_scale.len())] {
+                             self.device_bw_scale.len()),
+                            ("device-profiles",
+                             self.device_profiles.len())] {
             anyhow::ensure!(len == 0 || len == self.devices,
                             "--{name} must list one entry per device \
                              ({} given, {} devices)", len, self.devices);
+        }
+        for p in &self.device_profiles {
+            crate::gpu::profile::profile_by_name(p)?;
         }
         if let Some(s) = self.lab_seeds {
             anyhow::ensure!(s >= 1, "lab-seeds must be >= 1");
@@ -545,6 +592,70 @@ mod tests {
         let mut c = RunConfig::default();
         c.placement = "nope".into();
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn device_profiles_parse_label_and_fleet() {
+        let mut c = RunConfig::default();
+        c.set("devices", "2").unwrap();
+        c.set("device-profiles", "h100-cc,gh200-coherent").unwrap();
+        c.validate().unwrap();
+        // the first profile's bundled mode becomes the run default
+        assert_eq!(c.mode, CcMode::On);
+        assert_eq!(c.gpu.mode, CcMode::On);
+        assert_eq!(c.cell_label(),
+                   "cc_gamma_select-batch+timer_sla18_dev2\
+                    _prof-h100-cc+gh200-coherent");
+        let fleet = c.fleet_configs();
+        assert_eq!(fleet.len(), 2);
+        assert_eq!(fleet[0].mode, CcMode::On);
+        assert!(!fleet[0].uma, "h100-cc keeps the chunk recurrence");
+        assert_eq!(fleet[0].bridge_residual_s, 0.0);
+        assert!(fleet[1].uma, "gh200-coherent is coherent memory");
+        assert!((fleet[1].bridge_residual_s - 0.12).abs() < 1e-12);
+        assert!((fleet[1].bw_cc - 18.0e6).abs() < 1.0);
+        // an explicit --mode after the profile wins
+        c.set("mode", "no-cc").unwrap();
+        assert_eq!(c.fleet_modes(), vec![CcMode::Off, CcMode::Off]);
+    }
+
+    #[test]
+    fn device_profiles_errors_and_precedence() {
+        let mut c = RunConfig::default();
+        let err = c.set("device-profiles", "a100")
+            .unwrap_err().to_string();
+        assert!(err.contains("a100") && err.contains("h100-cc")
+                    && err.contains("gh200-coherent"),
+                "unknown profile must list the table: {err}");
+        // custom bundles no mode, so it leaves the run default alone
+        let mut c = RunConfig::default();
+        c.set("device-profiles", "custom").unwrap();
+        assert_eq!(c.mode, CcMode::Off, "custom bundles no mode");
+        // one profile per device, like the other fleet lists
+        let mut c = RunConfig::default();
+        c.devices = 2;
+        c.device_profiles = vec!["h100-cc".into()];
+        assert!(c.validate().is_err(), "1 profile for 2 devices");
+        let mut c = RunConfig::default();
+        c.device_profiles = vec!["a100".into()];
+        assert!(c.validate().is_err(), "validate re-checks the names");
+        // --device-modes still overrides the profile mode per device
+        let mut c = RunConfig::default();
+        c.set("devices", "2").unwrap();
+        c.set("device-profiles", "h100-cc,h100-cc").unwrap();
+        c.set("device-modes", "no-cc,cc").unwrap();
+        assert_eq!(c.fleet_modes(), vec![CcMode::Off, CcMode::On]);
+    }
+
+    #[test]
+    fn h100_profile_fleet_matches_legacy_knobs() {
+        let mut a = RunConfig::default();
+        a.set("mode", "cc").unwrap();
+        let mut b = RunConfig::default();
+        b.set("device-profiles", "h100-cc").unwrap();
+        assert_eq!(format!("{:?}", a.fleet_configs()),
+                   format!("{:?}", b.fleet_configs()),
+                   "h100-cc is a name for the legacy CC knobs");
     }
 
     #[test]

@@ -65,6 +65,9 @@ pub struct SwapStats {
     pub total_crypto_s: f64,
     /// Crypto time exposed on the swap path (never includes staging).
     pub total_crypto_exposed_s: f64,
+    /// Per-swap bridge/attestation residual seconds (profile devices
+    /// with `bridge_residual_s > 0` only; always 0 on legacy knobs).
+    pub total_bridge_s: f64,
     /// Staging uploads issued.
     pub prefetch_count: u64,
     /// Swaps satisfied by promoting a staged buffer (no second DMA).

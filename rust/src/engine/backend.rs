@@ -119,14 +119,74 @@ pub(crate) struct SwapEvent {
     pub dropped_staged: bool,
 }
 
+/// True when `gpu` carries no profile-only pricing term (UMA, bridge
+/// residual, non-unit CC excess scale) — every legacy knob
+/// combination.  Legacy devices must keep the exact original
+/// `load_s_for` arithmetic so their outputs stay byte-identical: the
+/// profile arithmetic below never runs for them (no
+/// `plain + 1.0·(cc − plain) + 0.0` float detours).
+fn legacy_pricing(gpu: &GpuConfig) -> bool {
+    !gpu.uma && gpu.bridge_residual_s == 0.0 && gpu.cc_excess_scale == 1.0
+}
+
+/// The per-swap bridge residual in force on `gpu` (0 in No-CC mode;
+/// legacy devices carry `bridge_residual_s = 0` anyway).
+fn bridge_s(gpu: &GpuConfig) -> f64 {
+    match gpu.mode {
+        CcMode::On => gpu.bridge_residual_s,
+        CcMode::Off => 0.0,
+    }
+}
+
+/// The modeled demand-load seconds for one swap on `gpu` — the single
+/// figure [`price_swap`], [`price_prefetch`] and both backends'
+/// `est_load_s` quote, so estimates and prices cannot disagree.
+///
+/// A UMA/coherent device (GH200-class) loads at the plain figure plus
+/// the per-swap bridge constant — there is no bounce path to
+/// serialize.  A scaled device (Blackwell-class) keeps
+/// `cc_excess_scale` of the CC excess over plain, plus the bridge
+/// constant.  Legacy devices take the untouched fast path.
+pub(crate) fn swap_load_s(mc: &ModelCosts, gpu: &GpuConfig) -> f64 {
+    let pipelined = gpu.pipeline_depth >= 2;
+    if gpu.mode == CcMode::Off || legacy_pricing(gpu) {
+        return mc.load_s_for(gpu.mode, pipelined);
+    }
+    let plain = mc.load_s_for(CcMode::Off, pipelined);
+    if gpu.uma {
+        plain + gpu.bridge_residual_s
+    } else {
+        let cc = mc.load_s_for(CcMode::On, pipelined);
+        plain + gpu.cc_excess_scale * (cc - plain)
+            + gpu.bridge_residual_s
+    }
+}
+
+/// The (total, exposed) load-crypto split matching [`swap_load_s`]:
+/// zero on a UMA device (nothing is sealed), scaled by
+/// `cc_excess_scale` otherwise.
+fn swap_load_crypto(mc: &ModelCosts, gpu: &GpuConfig) -> (f64, f64) {
+    let pipelined = gpu.pipeline_depth >= 2;
+    if gpu.mode == CcMode::Off || legacy_pricing(gpu) {
+        return mc.load_crypto_for(gpu.mode, pipelined);
+    }
+    if gpu.uma {
+        (0.0, 0.0)
+    } else {
+        let (ct, ce) = mc.load_crypto_for(CcMode::On, pipelined);
+        (gpu.cc_excess_scale * ct, gpu.cc_excess_scale * ce)
+    }
+}
+
 /// Price one residency change from the cost table and fold it into
 /// `stats`.  This is the single definition of virtual swap pricing:
 /// `DesBackend` and the virtual-costs `RealBackend` both call it, so
 /// the exact DES-vs-real parity the tests pin is structural rather
-/// than two hand-maintained copies.
-pub(crate) fn price_swap(mc: &ModelCosts, mode: CcMode, pipelined: bool,
-                         ev: SwapEvent, stats: &mut SwapStats)
-                         -> SwapOutcome {
+/// than two hand-maintained copies.  The device's own `GpuConfig`
+/// carries mode, pipeline capability and the profile pricing terms —
+/// all per-device in a mixed fleet.
+pub(crate) fn price_swap(mc: &ModelCosts, gpu: &GpuConfig, ev: SwapEvent,
+                         stats: &mut SwapStats) -> SwapOutcome {
     let mut out = SwapOutcome {
         swapped: true,
         promoted: ev.promoted,
@@ -139,21 +199,22 @@ pub(crate) fn price_swap(mc: &ModelCosts, mode: CcMode, pipelined: bool,
     stats.swap_count += 1;
     stats.total_unload_s += out.unload_s;
     if ev.promoted {
-        // promotion is DMA-free: the crypto was paid — and overlapped —
-        // at prefetch time
+        // promotion is DMA-free: the crypto (and any bridge crossing)
+        // was paid — and overlapped — at prefetch time
         stats.promoted_count += 1;
         stats.load_samples.push((ev.model, 0.0));
     } else {
         if ev.dropped_staged {
             stats.dropped_prefetches += 1;
         }
-        out.load_s = mc.load_s_for(mode, pipelined);
-        let (ct, ce) = mc.load_crypto_for(mode, pipelined);
+        out.load_s = swap_load_s(mc, gpu);
+        let (ct, ce) = swap_load_crypto(mc, gpu);
         out.crypto_total_s = ct;
         out.crypto_exposed_s = ce;
         stats.total_load_s += out.load_s;
         stats.total_crypto_s += ct;
         stats.total_crypto_exposed_s += ce;
+        stats.total_bridge_s += bridge_s(gpu);
         stats.load_samples.push((ev.model, out.load_s));
     }
     out
@@ -161,22 +222,25 @@ pub(crate) fn price_swap(mc: &ModelCosts, mode: CcMode, pipelined: bool,
 
 /// Price one staging upload (a load without an unload) — the prefetch
 /// counterpart of [`price_swap`], shared by both virtual-cost backends
-/// for the same reason.
-pub(crate) fn price_prefetch(mc: &ModelCosts, mode: CcMode,
-                             pipelined: bool, dropped_staged: bool,
+/// for the same reason.  A bridge-residual device pays its per-swap
+/// constant at staging time (the crossing happens then), which is
+/// what keeps a later promotion free.
+pub(crate) fn price_prefetch(mc: &ModelCosts, gpu: &GpuConfig,
+                             dropped_staged: bool,
                              stats: &mut SwapStats) -> PrefetchOutcome {
     let out = PrefetchOutcome {
         staged: true,
-        cost_s: mc.load_s_for(mode, pipelined),
+        cost_s: swap_load_s(mc, gpu),
         dropped_staged,
     };
     if dropped_staged {
         stats.dropped_prefetches += 1;
     }
-    let (ct, _) = mc.load_crypto_for(mode, pipelined);
+    let (ct, _) = swap_load_crypto(mc, gpu);
     stats.prefetch_count += 1;
     stats.total_prefetch_s += out.cost_s;
     stats.total_crypto_s += ct;
+    stats.total_bridge_s += bridge_s(gpu);
     out
 }
 
@@ -191,10 +255,13 @@ pub(crate) fn price_prefetch(mc: &ModelCosts, mode: CcMode,
 /// therefore summaries) are bit-identical whether the flag is on or
 /// off: a No-CC device contributes *no* data-path accounting at all
 /// (bytes included), which is what keeps the summary's conditional
-/// data-path block byte-identical too.  In CC mode each direction is
-/// priced from its byte count through the same chunk budget the swap
-/// path uses (`gpu::dma::cc_budget_s`), pipeline overlap included,
-/// with the total-vs-exposed crypto split accounted per batch.
+/// data-path block byte-identical too.  A UMA/coherent CC device
+/// (GH200-class profiles) has no bounce path to seal and prices like
+/// No-CC for the same reason.  In (discrete-memory) CC mode each
+/// direction is priced from its byte count through the same chunk
+/// budget the swap path uses (`gpu::dma::cc_budget_s`), pipeline
+/// overlap included, with the total-vs-exposed crypto split accounted
+/// per batch.
 pub(crate) fn price_data_path(costs: &CostModel, gpu: &GpuConfig,
                               rows: usize, tokens_in: usize,
                               tokens_out: usize) -> DataPathOutcome {
@@ -203,6 +270,12 @@ pub(crate) fn price_data_path(costs: &CostModel, gpu: &GpuConfig,
     let bytes = (bytes_in + bytes_out) as u64;
     match gpu.mode {
         CcMode::Off => DataPathOutcome {
+            io_s: costs.io_s_per_row(CcMode::Off) * rows as f64,
+            ..Default::default()
+        },
+        // coherent memory: payloads are never bounce-sealed either —
+        // a UMA CC device prices (and accounts) exactly like No-CC
+        CcMode::On if gpu.uma => DataPathOutcome {
             io_s: costs.io_s_per_row(CcMode::Off) * rows as f64,
             ..Default::default()
         },

@@ -45,7 +45,7 @@ use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
 use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
-                             BatchOutcome, DataPathOutcome,
+                             swap_load_s, BatchOutcome, DataPathOutcome,
                              DeviceSnapshot, ExecBackend, PrefetchOutcome,
                              SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
@@ -72,10 +72,9 @@ pub struct DesBackend<'a> {
     table: Arc<ModelTable>,
     /// One row per interned id, in table order.
     by_id: Vec<PerModel<'a>>,
-    /// Whether CC loads price the chunk pipeline (`--pipeline-depth`).
-    pipelined: bool,
-    /// Per-device GPU config (mode mix, bounce/pipeline/bandwidth) —
-    /// what the data path prices per-batch I/O from.
+    /// Per-device GPU config (mode mix, bounce/pipeline/bandwidth,
+    /// profile pricing terms) — what swap and per-batch I/O pricing
+    /// read, per device.
     fleet: Vec<GpuConfig>,
     /// CC-priced inference data path (`--data-path`).
     data_path: bool,
@@ -115,7 +114,6 @@ impl<'a> DesBackend<'a> {
             costs,
             table,
             by_id,
-            pipelined,
             fleet,
             data_path: cfg.data_path,
             data_tokens_in: cfg.data_tokens_in,
@@ -188,8 +186,7 @@ impl ExecBackend for DesBackend<'_> {
             return 0.0; // a staged model promotes for free
         }
         self.by_id.get(model.index()).and_then(|p| p.mc)
-            .map(|mc| mc.load_s_for(self.fleet[device].mode,
-                                    self.pipelined))
+            .map(|mc| swap_load_s(mc, &self.fleet[device]))
             .unwrap_or(0.0)
     }
 
@@ -217,7 +214,7 @@ impl ExecBackend for DesBackend<'_> {
             !promoted && self.staged[device].is_some();
         self.staged[device] = None;
         let out = price_swap(
-            mc, self.fleet[device].mode, self.pipelined,
+            mc, &self.fleet[device],
             SwapEvent { model, had_resident, promoted, dropped_staged },
             &mut self.stats[device]);
         self.resident[device] = Some(model);
@@ -233,8 +230,7 @@ impl ExecBackend for DesBackend<'_> {
         }
         let mc = self.mc(model)?;
         let dropped_staged = self.staged[device].is_some();
-        let out = price_prefetch(mc, self.fleet[device].mode,
-                                 self.pipelined, dropped_staged,
+        let out = price_prefetch(mc, &self.fleet[device], dropped_staged,
                                  &mut self.stats[device]);
         self.staged[device] = Some(model);
         Ok(out)

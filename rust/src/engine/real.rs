@@ -29,7 +29,7 @@ use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::{SwapManager, SwapStats};
 use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
-                             BatchOutcome, DataPathOutcome,
+                             swap_load_s, BatchOutcome, DataPathOutcome,
                              DeviceSnapshot, ExecBackend, PrefetchOutcome,
                              SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
@@ -166,8 +166,7 @@ impl ExecBackend for RealBackend<'_> {
         }
         match &self.virtual_costs {
             Some(costs) => costs.costs(model)
-                .map(|mc| mc.load_s_for(self.fleet.get(device).mode(),
-                                        self.pipelined))
+                .map(|mc| swap_load_s(mc, self.fleet.get(device).config()))
                 .unwrap_or(0.0),
             None => self.swaps[device].estimate_load_s(
                 self.fleet.get(device), self.registry, model),
@@ -216,9 +215,8 @@ impl ExecBackend for RealBackend<'_> {
             // domain.  `price_swap` is the same pricing the DesBackend
             // runs — that shared definition is the parity contract.
             let mc = costs.costs(name)?;
-            let mode = self.fleet.get(device).mode();
             out = price_swap(
-                mc, mode, self.pipelined,
+                mc, self.fleet.get(device).config(),
                 SwapEvent { model, had_resident,
                             promoted: rep.promoted,
                             dropped_staged: rep.dropped_staged },
@@ -244,8 +242,7 @@ impl ExecBackend for RealBackend<'_> {
         };
         if let Some(costs) = &self.virtual_costs {
             let mc = costs.costs(name)?;
-            let mode = self.fleet.get(device).mode();
-            out = price_prefetch(mc, mode, self.pipelined,
+            out = price_prefetch(mc, self.fleet.get(device).config(),
                                  rep.dropped_staged,
                                  &mut self.stats[device]);
         }

@@ -35,6 +35,10 @@ pub struct DeviceSummary {
     pub prefetches: u64,
     /// Swaps satisfied by promoting a staged buffer (no second DMA).
     pub promotions: u64,
+    /// Per-swap bridge/attestation residual seconds (hardware-profile
+    /// devices with a `bridge_residual_s`; 0 — and absent from the
+    /// JSON — on legacy knobs).
+    pub bridge_s: f64,
     /// Payload bytes this device shipped through the inference data
     /// path (`--data-path on`; 0 otherwise).
     pub data_bytes: u64,
@@ -61,6 +65,11 @@ impl DeviceSummary {
             ("prefetches", Json::num(self.prefetches as f64)),
             ("promotions", Json::num(self.promotions as f64)),
         ];
+        // the bridge residual only exists on hardware-profile devices
+        // — same byte-identity gate as the data-path block below
+        if self.bridge_s > 0.0 {
+            fields.push(("bridge_s", Json::num(self.bridge_s)));
+        }
         // data-path keys appear only when this device shipped CC batch
         // I/O — the same bytes-or-crypto gate as the fleet block (see
         // the byte-identity note on `RunSummary::to_json`), so the two
@@ -99,6 +108,7 @@ impl DeviceSummary {
             crypto_exposed_s: f("crypto_exposed_s"),
             prefetches: u("prefetches"),
             promotions: u("promotions"),
+            bridge_s: f("bridge_s"),
             data_bytes: u("data_bytes"),
             data_crypto_s: f("data_crypto_s"),
             data_crypto_exposed_s: f("data_crypto_exposed_s"),
@@ -276,6 +286,12 @@ pub struct RunSummary {
     pub promoted_count: u64,
     pub mean_load_s: f64,
 
+    /// Per-swap bridge/attestation residual seconds across the fleet
+    /// — the CC cost that survives GPU-local isolation on
+    /// bridge-residual hardware profiles (`gpu::profile`); 0, and
+    /// absent from the JSON, on legacy knobs.
+    pub total_bridge_s: f64,
+
     /// Total payload crypto across the fleet's batch I/O (the
     /// inference data path, `--data-path on`; all four fields zero —
     /// and absent from the JSON — otherwise).
@@ -341,6 +357,13 @@ impl RunSummary {
             ("promoted_count", Json::num(self.promoted_count as f64)),
             ("mean_load_s", Json::num(self.mean_load_s)),
         ];
+        // bridge residual: only hardware-profile devices accumulate
+        // one, so the key's presence follows the same byte-identity
+        // contract as the data-path block below
+        if self.total_bridge_s > 0.0 {
+            fields.push(("total_bridge_s",
+                         Json::num(self.total_bridge_s)));
+        }
         // Byte-identity contract (tests/golden_summary.rs): the
         // data-path block appears only when the run actually shipped
         // CC batch I/O.  With `--data-path off` — and in No-CC mode
@@ -432,6 +455,7 @@ impl RunSummary {
             prefetch_count: opt_u64("prefetch_count"),
             promoted_count: opt_u64("promoted_count"),
             mean_load_s: c.req("mean_load_s")?.as_f64().unwrap_or(0.0),
+            total_bridge_s: opt_f64("total_bridge_s", 0.0),
             total_data_crypto_s: opt_f64("total_data_crypto_s", 0.0),
             total_data_crypto_exposed_s:
                 opt_f64("total_data_crypto_exposed_s", 0.0),
@@ -459,6 +483,9 @@ impl RunSummary {
         if self.prefetch {
             pipe.push_str(&format!(" promo={}/{}", self.promoted_count,
                                    self.swap_count));
+        }
+        if self.total_bridge_s > 0.0 {
+            pipe.push_str(&format!(" bridge={:.2}s", self.total_bridge_s));
         }
         if self.total_data_crypto_s > 0.0 {
             pipe.push_str(&format!(" dio={:.2}s",
@@ -509,6 +536,8 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         dev_stats.iter().map(|s| s.prefetch_count).sum();
     let promoted_count: u64 =
         dev_stats.iter().map(|s| s.promoted_count).sum();
+    let total_bridge_s: f64 =
+        dev_stats.iter().map(|s| s.total_bridge_s).sum();
 
     // inference-data-path accounting, one pass over the per-batch
     // records (all zero with `--data-path off`): per-device
@@ -562,6 +591,7 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
             crypto_exposed_s: stats.total_crypto_exposed_s,
             prefetches: stats.prefetch_count,
             promotions: stats.promoted_count,
+            bridge_s: stats.total_bridge_s,
             data_bytes: dev_data[d].0,
             data_crypto_s: dev_data[d].1,
             data_crypto_exposed_s: dev_data[d].2,
@@ -622,6 +652,7 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         } else {
             0.0
         },
+        total_bridge_s,
         total_data_crypto_s,
         total_data_crypto_exposed_s,
         data_bytes,
@@ -764,6 +795,34 @@ mod tests {
         assert!(text.contains("\"data_crypto_s\""),
                 "per-device block must not drop out when crypto is \
                  zero but bytes moved: {text}");
+    }
+
+    /// Bridge mirror of the data-path contract: the residual keys
+    /// appear only when a hardware profile actually accumulated one,
+    /// and a populated figure round-trips losslessly.
+    #[test]
+    fn bridge_keys_absent_when_unused_and_roundtrip() {
+        let off = RunSummary {
+            per_device: vec![DeviceSummary::default()],
+            ..RunSummary::default()
+        };
+        let text = off.to_json().to_string();
+        assert!(!text.contains("bridge"), "leaked bridge key: {text}");
+
+        let on = RunSummary {
+            total_bridge_s: 1.4,
+            per_device: vec![DeviceSummary {
+                bridge_s: 1.4,
+                ..DeviceSummary::default()
+            }],
+            ..RunSummary::default()
+        };
+        let text = on.to_json().to_string();
+        assert!(text.contains("\"total_bridge_s\"")
+                && text.contains("\"bridge_s\""), "{text}");
+        let back = RunSummary::from_json(&on.to_json()).unwrap();
+        assert!((back.total_bridge_s - 1.4).abs() < 1e-12);
+        assert!((back.per_device[0].bridge_s - 1.4).abs() < 1e-12);
     }
 
     /// Tenancy mirror of the data-path contract: the key appears only

@@ -35,6 +35,20 @@ pub struct GpuConfig {
     /// Fraction of the serialized CC per-byte budget that is crypto
     /// (the rest is link time); serialized totals are insensitive to it.
     pub cc_crypto_frac: f64,
+    /// Unified/coherent memory (GH200-class, `gpu::profile`): model
+    /// and payload bytes are never bounce-sealed, so CC swap loads
+    /// price at the plain figure plus `bridge_residual_s` and the CC
+    /// data path prices like No-CC.
+    pub uma: bool,
+    /// Per-swap bridge/attestation-side constant, seconds, added to
+    /// every CC demand load and prefetch — the residual CC cost that
+    /// survives GPU-local isolation ("The Serialized Bridge").
+    pub bridge_residual_s: f64,
+    /// Scale on the CC *excess* of a swap load over the plain figure
+    /// (1.0 = the full Hopper-style bounce tax, 0.25 =
+    /// Blackwell-class GPU-local crypto); load-crypto totals scale
+    /// with it.
+    pub cc_excess_scale: f64,
     /// Device-side free latency (paper: unloads 4–10 ms in both modes).
     pub unload_latency: Duration,
     /// One-time attestation handshake latency (CC only).
@@ -59,6 +73,9 @@ impl Default for GpuConfig {
             bounce_bytes: 256 * 1024,
             pipeline_depth: 0,
             cc_crypto_frac: 0.5,
+            uma: false,
+            bridge_residual_s: 0.0,
+            cc_excess_scale: 1.0,
             unload_latency: Duration::from_millis(6),
             attest_latency: Duration::from_millis(50),
             host_secret: 0x51CE5E,
@@ -74,6 +91,11 @@ impl GpuConfig {
     /// it when on.  Load-time *estimates* (strategy headroom terms) use
     /// this; the DMA engine itself runs the exact chunk recurrence.
     pub fn cc_seconds_per_byte(&self) -> f64 {
+        if self.uma {
+            // coherent memory: the swap moves at the plain link rate
+            // (the bridge residual is per-swap, not per-byte)
+            return 1.0 / self.bw_plain;
+        }
         let per_byte = 1.0 / self.bw_cc;
         if self.pipeline_depth >= 2 {
             let frac = self.cc_crypto_frac.clamp(0.0, 1.0);
@@ -338,5 +360,9 @@ mod tests {
         c.cc_crypto_frac = 0.75;
         assert!((c.cc_seconds_per_byte() - 0.375e-6).abs() < 1e-15,
                 "crypto-heavy split is bounded by the crypto stage");
+        c.uma = true;
+        c.bw_plain = 4.0e6;
+        assert!((c.cc_seconds_per_byte() - 0.25e-6).abs() < 1e-15,
+                "coherent memory moves at the plain link rate");
     }
 }

@@ -18,12 +18,17 @@
 //!   occupancy accounting (the GPU-utilization metric of Fig 7).
 //! * [`fleet`] — `DeviceSet`, N independent `SimGpu`s (per-device
 //!   `CcMode`/HBM/PCIe) behind the engine's fleet scheduling.
+//! * [`profile`] — named hardware-generation device profiles
+//!   (`h100-cc`, `b300-cc`, `gh200-coherent`, …) bundling the
+//!   per-device knobs, including the UMA/bridge-residual pricing of
+//!   the newer generations.
 
 pub mod cc;
 pub mod device;
 pub mod dma;
 pub mod fleet;
 pub mod hbm;
+pub mod profile;
 
 /// Confidential-computing mode of the device (the paper's CC / No-CC).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]

@@ -1,0 +1,225 @@
+//! Named hardware-generation device profiles (`--device-profiles`).
+//!
+//! The source paper measures the CC tax on exactly one H100; the
+//! profile table encodes what the related work says about other
+//! generations so the fleet can answer "which part of the CC tax
+//! survives which hardware generation":
+//!
+//! * `h100-cc` / `h100-nocc` — the paper's device: serialized
+//!   bounce-buffer crypto dominates the CC swap path ("Confidential
+//!   Computing on NVIDIA Hopper GPUs", arxiv 2409.03992).  These are
+//!   *pure names* over the legacy knob defaults: applying them changes
+//!   no float, so profile runs stay byte-identical to legacy-knob runs
+//!   (pinned by `tests/golden_summary.rs`).
+//! * `b300-cc` — Blackwell GPU-CC: GPU-local performance is preserved
+//!   and the cost concentrates in the CPU↔GPU bridge ("The Serialized
+//!   Bridge", arxiv 2606.23969).  Encoded as a small `cc_excess_scale`
+//!   on the Hopper-style bounce tax plus a per-swap
+//!   `bridge_residual_s` constant.
+//! * `gh200-coherent` — Grace-Hopper-class coherent/unified memory:
+//!   no bounce-buffer sealing at all (swap crypto → 0, data path
+//!   prices like No-CC); the residual CC cost is the per-swap
+//!   bridge/attestation-side constant (`uma` pricing in
+//!   `engine::backend::swap_load_s`).
+//! * `custom` — the escape hatch: overrides nothing, so the legacy
+//!   per-device knobs (`--device-hbm-mb`, `--device-bw-scale`, …)
+//!   stay fully in charge.
+//!
+//! A profile's `mode` is a *parse-time default* only: `--device-profiles
+//! b300-cc` defaults the run to CC, but an explicit `--mode` (or a
+//! swept lab `mode` axis, which overrides the `profile` axis) still
+//! wins — (b300-cc, no-cc) means "B300 hardware with CC off".
+
+use crate::gpu::device::GpuConfig;
+use crate::gpu::CcMode;
+
+/// One named hardware generation: the `GpuConfig` overrides it
+/// bundles.  `None` fields keep whatever the base config (CLI knobs)
+/// says — which is how `h100-*` and `custom` stay pure names.
+pub struct DeviceProfile {
+    pub name: &'static str,
+    pub blurb: &'static str,
+    /// Parse-time default CC mode (`None` = leave the CLI mode alone).
+    pub mode: Option<CcMode>,
+    pub bw_plain: Option<f64>,
+    pub bw_cc: Option<f64>,
+    pub cc_crypto_frac: Option<f64>,
+    pub pipeline_depth: Option<usize>,
+    pub hbm_capacity: Option<u64>,
+    pub uma: bool,
+    pub bridge_residual_s: f64,
+    pub cc_excess_scale: f64,
+}
+
+/// The profile table, in display order — the single source of truth
+/// for `profile_by_name`, the CLI help, the lab `profile` axis and
+/// the unknown-name error, like `STRATEGIES` and `PLACEMENTS`.
+pub const PROFILES: &[DeviceProfile] = &[
+    DeviceProfile {
+        name: "h100-cc",
+        blurb: "the paper's H100 in CC mode: serialized bounce-buffer \
+                crypto (byte-identical to the legacy knob defaults)",
+        mode: Some(CcMode::On),
+        bw_plain: None,
+        bw_cc: None,
+        cc_crypto_frac: None,
+        pipeline_depth: None,
+        hbm_capacity: None,
+        uma: false,
+        bridge_residual_s: 0.0,
+        cc_excess_scale: 1.0,
+    },
+    DeviceProfile {
+        name: "h100-nocc",
+        blurb: "the same H100 with CC off: raw DMA, no crypto",
+        mode: Some(CcMode::Off),
+        bw_plain: None,
+        bw_cc: None,
+        cc_crypto_frac: None,
+        pipeline_depth: None,
+        hbm_capacity: None,
+        uma: false,
+        bridge_residual_s: 0.0,
+        cc_excess_scale: 1.0,
+    },
+    DeviceProfile {
+        name: "b300-cc",
+        blurb: "Blackwell GPU-CC: GPU-local crypto nearly free, the \
+                tax concentrated in a per-swap CPU<->GPU bridge \
+                residual",
+        mode: Some(CcMode::On),
+        bw_plain: Some(12.0e6),
+        bw_cc: Some(10.0e6),
+        cc_crypto_frac: Some(0.25),
+        pipeline_depth: Some(2),
+        hbm_capacity: Some(86 * 1024 * 1024),
+        uma: false,
+        bridge_residual_s: 0.35,
+        cc_excess_scale: 0.25,
+    },
+    DeviceProfile {
+        name: "gh200-coherent",
+        blurb: "Grace-Hopper coherent/unified memory: no bounce-buffer \
+                sealing (swap crypto -> 0), residual per-swap \
+                bridge/attestation constant",
+        mode: Some(CcMode::On),
+        bw_plain: Some(18.0e6),
+        bw_cc: Some(18.0e6),
+        cc_crypto_frac: Some(0.0),
+        pipeline_depth: Some(0),
+        hbm_capacity: Some(29 * 1024 * 1024),
+        uma: true,
+        bridge_residual_s: 0.12,
+        cc_excess_scale: 1.0,
+    },
+    DeviceProfile {
+        name: "custom",
+        blurb: "escape hatch: overrides nothing, the per-device knobs \
+                stay in charge",
+        mode: None,
+        bw_plain: None,
+        bw_cc: None,
+        cc_crypto_frac: None,
+        pipeline_depth: None,
+        hbm_capacity: None,
+        uma: false,
+        bridge_residual_s: 0.0,
+        cc_excess_scale: 1.0,
+    },
+];
+
+/// Valid profile names, in table order.
+pub fn profile_names() -> Vec<&'static str> {
+    PROFILES.iter().map(|p| p.name).collect()
+}
+
+/// Look up a profile by CLI name; unknown names error with the
+/// valid-name table.
+pub fn profile_by_name(name: &str)
+                       -> anyhow::Result<&'static DeviceProfile> {
+    PROFILES.iter().find(|p| p.name == name).ok_or_else(|| {
+        anyhow::anyhow!("unknown device profile {name:?} (have {:?})",
+                        profile_names())
+    })
+}
+
+impl DeviceProfile {
+    /// Overlay this profile on a base device config.  Never touches
+    /// `mode` — the run config owns mode precedence (CLI/axis override
+    /// the profile's parse-time default) — and `None` fields keep the
+    /// base value, so `h100-*`/`custom` return the base bit-for-bit.
+    pub fn apply(&self, base: &GpuConfig) -> GpuConfig {
+        let mut g = base.clone();
+        if let Some(v) = self.bw_plain {
+            g.bw_plain = v;
+        }
+        if let Some(v) = self.bw_cc {
+            g.bw_cc = v;
+        }
+        if let Some(v) = self.cc_crypto_frac {
+            g.cc_crypto_frac = v;
+        }
+        if let Some(v) = self.pipeline_depth {
+            g.pipeline_depth = v;
+        }
+        if let Some(v) = self.hbm_capacity {
+            g.hbm_capacity = v;
+        }
+        g.uma = self.uma;
+        g.bridge_residual_s = self.bridge_residual_s;
+        g.cc_excess_scale = self.cc_excess_scale;
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profile_names_unique_and_resolvable() {
+        let mut names = profile_names();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n);
+        for p in PROFILES {
+            assert!(std::ptr::eq(profile_by_name(p.name).unwrap(),
+                                 p as *const _));
+        }
+        let err = profile_by_name("a100").unwrap_err().to_string();
+        assert!(err.contains("a100") && err.contains("h100-cc")
+                && err.contains("gh200-coherent"), "{err}");
+    }
+
+    #[test]
+    fn h100_and_custom_apply_are_identity() {
+        let base = GpuConfig::default();
+        for name in ["h100-cc", "h100-nocc", "custom"] {
+            let out = profile_by_name(name).unwrap().apply(&base);
+            assert_eq!(format!("{base:?}"), format!("{out:?}"), "{name}");
+        }
+    }
+
+    #[test]
+    fn b300_concentrates_the_tax_in_the_bridge() {
+        let p = profile_by_name("b300-cc").unwrap();
+        let g = p.apply(&GpuConfig::default());
+        assert!(!g.uma);
+        assert!(g.bridge_residual_s > 0.0);
+        assert!(g.cc_excess_scale < 1.0);
+        assert_eq!(g.pipeline_depth, 2);
+        assert_eq!(g.hbm_capacity, 86 * 1024 * 1024);
+        assert_eq!(p.mode, Some(CcMode::On));
+    }
+
+    #[test]
+    fn gh200_is_uma_with_equal_link_rates() {
+        let g = profile_by_name("gh200-coherent").unwrap()
+            .apply(&GpuConfig::default());
+        assert!(g.uma);
+        assert_eq!(g.bw_plain, g.bw_cc);
+        assert_eq!(g.cc_crypto_frac, 0.0);
+        assert!(g.bridge_residual_s > 0.0);
+    }
+}

@@ -60,6 +60,13 @@ pub const PRESETS: &[PresetEntry] = &[
                 with plain-serving baselines",
         make: tenancy,
     },
+    PresetEntry {
+        name: "hw-gen",
+        blurb: "the CC tax across hardware generations: device profile \
+                (h100-cc, b300-cc, gh200-coherent) x mode x strategy \
+                at smoke scale",
+        make: hw_gen,
+    },
 ];
 
 /// Valid preset names, in table order.
@@ -238,6 +245,35 @@ fn tenancy() -> ScenarioSpec {
     }
 }
 
+fn hw_gen() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "hw-gen".into(),
+        description: "how the CC tax moves across hardware \
+                      generations: Hopper pays the full chunk-crypto \
+                      recurrence, Blackwell shrinks it to a 25% \
+                      residual plus a per-swap bridge constant, and \
+                      coherent Grace-Hopper replaces swap crypto with \
+                      the bridge constant alone; the swept mode gives \
+                      every profile its No-CC twin for the gap table"
+            .into(),
+        base: vec![
+            ("duration".into(), "20".into()),
+            ("drain".into(), "8".into()),
+            ("mean-rps".into(), "4".into()),
+            ("sla".into(), "6".into()),
+            ("models".into(), "llama-sim,gemma-sim".into()),
+        ],
+        axes: vec![
+            axis("profile", &["h100-cc", "b300-cc", "gh200-coherent"]),
+            axis("mode", &["no-cc", "cc"]),
+            axis("strategy", &["select-batch+timer",
+                               "best-batch+timer"]),
+        ],
+        exclude: Vec::new(),
+        seeds: 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -317,6 +353,32 @@ mod tests {
             |c| c.cfg.catalog == 6 && c.cfg.zipf_skew == Some(1.1)
                 && c.cfg.admission == "class-weighted"
                 && c.cfg.sla_classes));
+    }
+
+    #[test]
+    fn hw_gen_pairs_every_profile_with_a_no_cc_twin() {
+        let g = hw_gen().expand(&RunConfig::default()).unwrap();
+        // 3 profiles x 2 modes x 2 strategies
+        assert_eq!(g.cells.len(), 12);
+        assert_eq!(g.pruned, 0);
+        assert_eq!(g.seeds, 1);
+        // every cell carries exactly one profile and the _prof- tag
+        assert!(g.cells.iter().all(
+            |c| c.cfg.device_profiles.len() == 1
+                && c.label.contains("_prof-")));
+        // the swept mode overrides the profile's bundled CC default,
+        // so each profile gets a No-CC twin
+        for prof in ["h100-cc", "b300-cc", "gh200-coherent"] {
+            let modes: Vec<_> = g.cells.iter()
+                .filter(|c| c.cfg.device_profiles[0] == prof)
+                .map(|c| c.cfg.mode).collect();
+            assert!(modes.contains(&crate::gpu::CcMode::Off)
+                        && modes.contains(&crate::gpu::CcMode::On),
+                    "{prof} must appear in both modes");
+        }
+        // the coherent profile reaches the fleet config
+        assert!(g.cells.iter().any(
+            |c| c.cfg.fleet_configs()[0].uma));
     }
 
     #[test]

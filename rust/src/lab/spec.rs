@@ -1,8 +1,8 @@
 //! `ScenarioSpec` — a declarative experiment grid over the run
 //! configuration, parsed from JSON (or built in code by the presets).
 //!
-//! A spec names a set of *axes* (mode, pattern, strategy, SLA, rps,
-//! devices, placement, pipeline-depth, prefetch, data-path,
+//! A spec names a set of *axes* (profile, mode, pattern, strategy,
+//! SLA, rps, devices, placement, pipeline-depth, prefetch, data-path,
 //! tokens-in/out), each with a list of
 //! values; expansion takes the cross-product in the canonical
 //! [`AXES`] order (mode varies slowest, exactly the legacy sweep's
@@ -70,11 +70,26 @@ fn check_admission(v: &str) -> anyhow::Result<()> {
     crate::tenancy::admission::admission_by_name(v).map(|_| ())
 }
 
+fn check_profile(v: &str) -> anyhow::Result<()> {
+    for part in v.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        crate::gpu::profile::profile_by_name(part)?;
+    }
+    Ok(())
+}
+
 /// The axis table, in canonical cross-product order (first entry
-/// varies slowest).  The first four match the legacy hardcoded sweep's
-/// loop nesting, so the `paper-72` preset reproduces its cell order
-/// exactly.
+/// varies slowest).  `profile` sits before `mode` so a swept mode is
+/// applied after the profile and overrides its bundled default; the
+/// mode/pattern/strategy/sla block matches the legacy hardcoded
+/// sweep's loop nesting, so the `paper-72` preset reproduces its cell
+/// order exactly.
 pub const AXES: &[AxisEntry] = &[
+    AxisEntry { name: "profile", key: "device-profiles",
+                check: Some(check_profile) },
     AxisEntry { name: "mode", key: "mode", check: Some(check_mode) },
     AxisEntry { name: "pattern", key: "pattern",
                 check: Some(check_pattern) },
@@ -106,6 +121,7 @@ pub fn axis_names() -> Vec<&'static str> {
 /// Human hint for an axis's valid values (`lab list`).
 pub fn axis_hint(name: &str) -> String {
     match name {
+        "profile" => crate::gpu::profile::profile_names().join(" | "),
         "mode" => "no-cc | cc".to_string(),
         "pattern" => crate::traffic::PATTERN_NAMES.join(" | "),
         "strategy" => crate::coordinator::strategy_names().join(" | "),
@@ -157,6 +173,9 @@ pub fn fmt_num(x: f64) -> String {
 /// form (the inverse of applying `AxisEntry::key` via `set`).
 pub fn axis_value(cfg: &RunConfig, axis: &str) -> String {
     match axis {
+        // unswept profile reads back as "" (no profile in force), so
+        // profile-free grids keep their pre-profile labels and order
+        "profile" => cfg.device_profiles.join(","),
         "mode" => cfg.mode.as_str().to_string(),
         "pattern" => cfg.pattern.clone(),
         "strategy" => cfg.strategy.clone(),
@@ -635,6 +654,39 @@ mod tests {
         let err = s.expand(&RunConfig::default()).unwrap_err()
             .to_string();
         assert!(err.contains("vip-only") && err.contains("queue-cap"),
+                "{err}");
+    }
+
+    #[test]
+    fn profile_axis_reaches_config_and_label() {
+        let mut s = two_by_two();
+        s.axes = vec![axis("profile",
+                           &["h100-cc", "b300-cc", "gh200-coherent"]),
+                      axis("mode", &["no-cc", "cc"])];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 6);
+        // profile varies slowest; the swept mode is applied after the
+        // profile and wins over its bundled default
+        let first = &g.cells[0];
+        assert_eq!(first.cfg.device_profiles,
+                   vec!["h100-cc".to_string()]);
+        assert_eq!(first.cfg.mode, crate::gpu::CcMode::Off,
+                   "the swept mode wins over the profile's mode");
+        assert!(first.label.starts_with("no-cc_")
+                    && first.label.contains("_prof-h100-cc"),
+                "{}", first.label);
+        assert_eq!(first.assignment[0],
+                   ("profile".to_string(), "h100-cc".to_string()));
+        let last = &g.cells[5];
+        assert_eq!(last.cfg.mode, crate::gpu::CcMode::On);
+        assert!(last.cfg.fleet_configs()[0].uma);
+        assert!(last.label.contains("_prof-gh200-coherent"),
+                "{}", last.label);
+        // bad profile names fail expansion with the table
+        s.axes = vec![axis("profile", &["a100"])];
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("a100") && err.contains("b300-cc"),
                 "{err}");
     }
 

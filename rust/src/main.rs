@@ -381,6 +381,10 @@ fn lab_run(cfg: RunConfig) -> anyhow::Result<()> {
         println!("\n## Multi-tenant serving\n");
         println!("{tenancy}");
     }
+    if let Some(hw_gen) = &tables.hw_gen {
+        println!("\n## CC tax by hardware generation\n");
+        println!("{hw_gen}");
+    }
     if let Some(headline) = &tables.headline {
         println!("\n## Headline comparison (paper abstract)\n");
         println!("{headline}");
@@ -430,6 +434,8 @@ struct LabTables {
     /// Only when some cell ran with tenancy features (admission or
     /// SLA classes).
     tenancy: Option<String>,
+    /// Only when some cell ran under a named device profile.
+    hw_gen: Option<String>,
     /// Only when the grid has both CC and No-CC cells — a one-mode
     /// grid has nothing to ratio against (`lab check` guards the
     /// same way).
@@ -458,6 +464,8 @@ impl LabTables {
                 .then(|| report::data_path_table(cells)),
             tenancy: report::has_tenancy(cells)
                 .then(|| report::tenancy_table(cells)),
+            hw_gen: report::has_profiles(cells)
+                .then(|| report::hw_gen_table(cells)),
             headline: h.as_ref().map(report::headline_table),
             bands: h.as_ref().map(
                 |h| report::band_table(&report::paper_check(h))),
@@ -484,6 +492,10 @@ impl LabTables {
         if let Some(tenancy) = &self.tenancy {
             md.push_str(&format!(
                 "\n## Multi-tenant serving\n\n{tenancy}"));
+        }
+        if let Some(hw_gen) = &self.hw_gen {
+            md.push_str(&format!(
+                "\n## CC tax by hardware generation\n\n{hw_gen}"));
         }
         if let Some(headline) = &self.headline {
             md.push_str(&format!(
@@ -571,6 +583,10 @@ fn cmd_report(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
     if report::has_tenancy(&cells) {
         println!("\n## Multi-tenant serving\n");
         println!("{}", report::tenancy_table(&cells));
+    }
+    if report::has_profiles(&cells) {
+        println!("\n## CC tax by hardware generation\n");
+        println!("{}", report::hw_gen_table(&cells));
     }
     println!("{}", report::headline_table(&report::headline_ratios(&cells)));
     Ok(())
@@ -680,6 +696,13 @@ fn usage_string() -> String {
          \x20 --device-modes cc,no-cc,...   per-device CC mode mix\n\
          \x20 --device-hbm-mb a,b    per-device HBM capacity, MB\n\
          \x20 --device-bw-scale a,b  per-device PCIe rate scale\n\
+         \x20 --device-profiles a,b  named hardware-generation \
+         profiles, one per device:\n\
+         \x20                        {profiles}\n\
+         \x20                        (bundle link rates, HBM, crypto \
+         pricing; the first\n\
+         \x20                        profile's CC mode is the default, \
+         --mode overrides)\n\
          \x20 --placement {placements}\n\n\
          CC PIPELINE OPTIONS:\n\
          \x20 --pipeline-depth N     CC bounce-chunk staging buffers: \
@@ -738,6 +761,7 @@ fn usage_string() -> String {
         patterns = PATTERN_NAMES.join("|"),
         strategies = strategy_names().join("|"),
         placements = placement_names().join("|"),
+        profiles = sincere::gpu::profile::profile_names().join("|"),
         admissions =
             sincere::tenancy::admission::admission_names().join("|")));
     out
@@ -795,6 +819,18 @@ mod tests {
         for flag in ["--preset", "--spec", "--threads", "--lab-seeds",
                      "--out", "--synthetic-costs"] {
             assert!(usage.contains(flag), "usage missing {flag}");
+        }
+    }
+
+    /// The profile flag and its name table render into the help text
+    /// from the same `PROFILES` table that drives lookup.
+    #[test]
+    fn usage_lists_the_profile_flag_and_names() {
+        let usage = usage_string();
+        assert!(usage.contains("--device-profiles"));
+        for name in sincere::gpu::profile::profile_names() {
+            assert!(usage.contains(name),
+                    "usage missing profile {name}");
         }
     }
 

@@ -137,6 +137,76 @@ pub fn tenancy_table(cells: &[RunSummary]) -> String {
     out
 }
 
+/// Profile name parsed from a cell label's `_prof-` fragment
+/// (profile names never contain `_`, so the next `_` or the end of
+/// the label terminates it).
+fn profile_of(c: &RunSummary) -> Option<&str> {
+    let i = c.label.find("_prof-")?;
+    let rest = &c.label[i + "_prof-".len()..];
+    Some(rest.split('_').next().unwrap_or(rest))
+}
+
+/// True when any cell ran under a named device profile — gates the
+/// hardware-generation table the same way `has_data_path` gates the
+/// batch-I/O table.  Keyed on the label fragment, not a summary
+/// field, so profile-free runs keep their summaries byte-identical.
+pub fn has_profiles(cells: &[RunSummary]) -> bool {
+    cells.iter().any(|c| profile_of(c).is_some())
+}
+
+/// "CC tax by hardware generation": per profile, the CC-vs-No-CC
+/// latency and attainment gap, and how the CC swap tax splits between
+/// chunk crypto (`total_crypto_s`) and the per-swap bridge residual
+/// (`total_bridge_s`).  A Hopper profile concentrates the tax in
+/// crypto, a coherent one in the bridge.  Cells without a `_prof-`
+/// fragment contribute no rows.
+pub fn hw_gen_table(cells: &[RunSummary]) -> String {
+    let mut order: Vec<String> = Vec::new();
+    for c in cells {
+        if let Some(p) = profile_of(c) {
+            if !order.iter().any(|o| o == p) {
+                order.push(p.to_string());
+            }
+        }
+    }
+    let mut out = String::from(
+        "| profile | cells | lat no-cc (s) | lat cc (s) | gap % | \
+         attain gap (pts) | swap crypto (s) | bridge (s) | \
+         crypto share % | bridge share % |\n\
+         |---|---|---|---|---|---|---|---|---|---|\n");
+    for p in &order {
+        let in_prof =
+            |c: &RunSummary| profile_of(c) == Some(p.as_str());
+        let cc = |c: &RunSummary| in_prof(c) && c.mode == "cc";
+        let nocc = |c: &RunSummary| in_prof(c) && c.mode == "no-cc";
+        let n = cells.iter().filter(|c| in_prof(c)).count();
+        let lat_cc = mean_where(cells, cc, |c| c.latency_mean_s);
+        let lat_nocc = mean_where(cells, nocc, |c| c.latency_mean_s);
+        let gap = if lat_nocc > 0.0 {
+            (lat_cc - lat_nocc) / lat_nocc * 100.0
+        } else {
+            0.0
+        };
+        let att_gap = (mean_where(cells, nocc, |c| c.sla_attainment)
+                       - mean_where(cells, cc, |c| c.sla_attainment))
+            * 100.0;
+        let crypto = mean_where(cells, cc, |c| c.total_crypto_s);
+        let bridge = mean_where(cells, cc, |c| c.total_bridge_s);
+        let tax = crypto + bridge;
+        let (cs, bs) = if tax > 0.0 {
+            (crypto / tax * 100.0, bridge / tax * 100.0)
+        } else {
+            (0.0, 0.0)
+        };
+        out.push_str(&format!(
+            "| {} | {} | {:.2} | {:.2} | {:+.1} | {:+.1} | {:.2} | \
+             {:.2} | {:.1} | {:.1} |\n",
+            p, n, lat_nocc, lat_cc, gap, att_gap, crypto, bridge,
+            cs, bs));
+    }
+    out
+}
+
 /// Mean of the headline metrics grouped by one axis of a grid
 /// (`mode` | `pattern` | `strategy` | `sla`), one row per distinct
 /// value in first-appearance order.
@@ -525,6 +595,38 @@ mod tests {
              6.7 | 9.0 | cat-01 x7 |"), "{t}");
         assert_eq!(t.matches("no-cc").count(), 0,
                    "cells without a tenancy block contribute no rows");
+    }
+
+    #[test]
+    fn hw_gen_table_groups_profiles_and_splits_the_tax() {
+        let plain = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        assert!(!has_profiles(&[plain.clone()]),
+                "profile-free cells must not trigger the table");
+        let mk = |label: &str, mode: &str, lat: f64, att: f64,
+                  crypto: f64, bridge: f64| {
+            let mut c = cell(mode, lat, att, 2.0, 0.2);
+            c.label = label.into();
+            c.total_crypto_s = crypto;
+            c.total_bridge_s = bridge;
+            c
+        };
+        let cells = vec![
+            mk("no-cc_g_prof-h100-cc", "no-cc", 3.0, 0.7, 0.0, 0.0),
+            mk("cc_g_prof-h100-cc", "cc", 4.5, 0.5, 6.0, 0.0),
+            mk("no-cc_g_prof-gh200-coherent", "no-cc", 3.0, 0.7,
+               0.0, 0.0),
+            mk("cc_g_prof-gh200-coherent", "cc", 3.3, 0.68, 0.0, 1.5),
+        ];
+        assert!(has_profiles(&cells));
+        let t = hw_gen_table(&cells);
+        // Hopper: +50% latency gap, tax 100% chunk crypto
+        assert!(t.contains(
+            "| h100-cc | 2 | 3.00 | 4.50 | +50.0 | +20.0 | 6.00 | \
+             0.00 | 100.0 | 0.0 |"), "{t}");
+        // coherent: small gap, tax 100% bridge residual
+        assert!(t.contains(
+            "| gh200-coherent | 2 | 3.00 | 3.30 | +10.0 | +2.0 | \
+             0.00 | 1.50 | 0.0 | 100.0 |"), "{t}");
     }
 
     #[test]

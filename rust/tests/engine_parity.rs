@@ -308,6 +308,57 @@ fn fleet_parity_4_device_mixed_pipelined_prefetch() {
     }
 }
 
+/// The hardware-generation extension of the parity contract (ISSUE 8
+/// acceptance): a mixed Hopper + coherent fleet — device 0 priced by
+/// the `h100-cc` profile (legacy chunk-crypto recurrence), device 1 by
+/// `gh200-coherent` (UMA: plain-rate swaps plus a per-swap bridge
+/// residual, zero swap crypto) — must leave the DES and the real
+/// execution path in exact agreement, bridge accounting included.
+#[test]
+fn fleet_parity_mixed_hardware_generations() {
+    let mut cfg = parity_cfg("cc", "select-batch+timer");
+    cfg.devices = 2;
+    cfg.set("device-profiles", "h100-cc,gh200-coherent").unwrap();
+    cfg.mean_rps = 6.0; // keep both generations busy
+    let (des, real) = run_pair(&cfg);
+    assert_eq!(des.generated, real.generated);
+    assert_eq!(des.completed, real.completed);
+    assert_eq!(des.swap_count, real.swap_count);
+    assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+            "attainment {} vs {}", des.sla_attainment,
+            real.sla_attainment);
+    assert!((des.latency_mean_s - real.latency_mean_s).abs() < 1e-9,
+            "latency {} vs {}", des.latency_mean_s, real.latency_mean_s);
+    assert!((des.runtime_s - real.runtime_s).abs() < 1e-9,
+            "runtime {} vs {}", des.runtime_s, real.runtime_s);
+    assert!((des.total_load_s - real.total_load_s).abs() < 1e-9,
+            "load totals diverged");
+    assert!((des.total_bridge_s - real.total_bridge_s).abs() < 1e-9,
+            "bridge totals diverged: {} vs {}", des.total_bridge_s,
+            real.total_bridge_s);
+    // per-device breakdowns must agree too
+    assert_eq!(des.per_device.len(), 2);
+    for (a, b) in des.per_device.iter().zip(real.per_device.iter()) {
+        assert_eq!(a.mode, b.mode, "dev {}", a.device);
+        assert_eq!(a.batches, b.batches, "dev {}", a.device);
+        assert_eq!(a.swap_count, b.swap_count, "dev {}", a.device);
+        assert_eq!(a.completed, b.completed, "dev {}", a.device);
+        assert!((a.bridge_s - b.bridge_s).abs() < 1e-9,
+                "dev {}: bridge diverged", a.device);
+    }
+    assert!(des.completed > 0, "degenerate parity run");
+    assert!(des.swap_count > 0, "no swaps exercised");
+    // the profile split shows in the accounting: the Hopper device
+    // pays no bridge, the coherent device pays one per priced swap
+    assert_eq!(des.per_device[0].bridge_s, 0.0,
+               "h100-cc must not pay a bridge residual");
+    assert!(des.per_device[1].swap_count > 0,
+            "coherent device never swapped");
+    assert!(des.per_device[1].bridge_s > 0.0,
+            "coherent device must pay the bridge residual");
+    assert!(des.total_bridge_s > 0.0);
+}
+
 /// The tenancy extension of the parity contract (ISSUE 6 acceptance):
 /// admission gating + Zipf popularity + diurnal/flash traffic + SLA
 /// classes on a mixed 4-device fleet must leave the DES and the real

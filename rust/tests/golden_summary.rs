@@ -122,6 +122,16 @@ fn golden_summaries_match() {
         cfg.gpu.pipeline_depth = depth;
         cells.push(cfg);
     }
+    // the hardware-generation extension: the scaled-crypto + bridge
+    // profile (b300-cc) and the coherent UMA profile (gh200-coherent),
+    // so the goldens pin the profile pricing end to end (h100-cc needs
+    // no cell of its own — it is byte-identical to the legacy CC cells
+    // above, which a dedicated test asserts)
+    for profile in ["b300-cc", "gh200-coherent"] {
+        let mut cfg = golden_cfg("cc", "select-batch+timer");
+        cfg.set("device-profiles", profile).unwrap();
+        cells.push(cfg);
+    }
     // the tenancy extension: Zipf popularity + diurnal/flash traffic
     // + SLA classes behind each capped admission policy, so the
     // goldens pin the shed/goodput/fairness accounting end to end
@@ -200,6 +210,72 @@ fn data_path_off_and_nocc_are_byte_identical() {
     assert!(text.contains("total_data_crypto_s")
             && text.contains("data_wire_bytes"),
             "CC data-path summary missing the batch-I/O block: {text}");
+}
+
+/// Pull one numeric field out of a summary document (NaN if absent),
+/// matching on the public `Json` enum so the test does not depend on
+/// accessor helpers.
+fn num(j: &Json, key: &str) -> f64 {
+    match j.get(key) {
+        Some(Json::Num(n)) => *n,
+        _ => f64::NAN,
+    }
+}
+
+/// Byte-identity contract of the device profiles (ISSUE 8
+/// acceptance): `--device-profiles h100-cc` must be a pure naming
+/// layer over the legacy CC knobs — same RNG draws, same schedule,
+/// same summary bytes — and profile-free summaries must carry no
+/// bridge key at all.  The forward-looking profiles *do* change the
+/// pricing: b300-cc splits the CC tax between scaled swap crypto and
+/// a bridge residual, while gh200-coherent prices zero swap crypto
+/// and pays only the bridge.
+#[test]
+fn h100_cc_profile_is_byte_identical_to_legacy_knobs() {
+    // the named Hopper profiles vs the loose knobs they bundle,
+    // identical labels forced so the comparison covers every byte
+    for (profile, mode) in [("h100-cc", "cc"), ("h100-nocc", "no-cc")] {
+        let mut named = golden_cfg(mode, "select-batch+timer");
+        named.set("device-profiles", profile).unwrap();
+        named.label = "profile_probe".into();
+        let mut legacy = golden_cfg(mode, "select-batch+timer");
+        legacy.label = "profile_probe".into();
+        assert_eq!(golden_cell(&named), golden_cell(&legacy),
+                   "{profile} must be byte-identical to the legacy \
+                    {mode} knobs");
+    }
+
+    // profile-free runs: no bridge key may appear — this is what lets
+    // CI grep the profile-free lab cells
+    for mode in ["no-cc", "cc"] {
+        let mut cfg = golden_cfg(mode, "select-batch+timer");
+        cfg.label = cfg.cell_label();
+        let text = golden_cell(&cfg);
+        assert!(!text.contains("bridge") && !text.contains("_prof-"),
+                "{mode}: profile-free summary leaks profile keys: {text}");
+    }
+
+    // b300-cc: both tax terms present — scaled swap crypto plus the
+    // per-swap bridge residual
+    let mut b300 = golden_cfg("cc", "select-batch+timer");
+    b300.set("device-profiles", "b300-cc").unwrap();
+    b300.label = b300.cell_label();
+    let j = Json::parse(&golden_cell(&b300)).unwrap();
+    assert!(num(&j, "total_crypto_s") > 0.0,
+            "b300-cc must still price (scaled) swap crypto");
+    assert!(num(&j, "total_bridge_s") > 0.0,
+            "b300-cc must pay the bridge residual");
+
+    // gh200-coherent: UMA swaps price zero crypto, so the whole
+    // residual CC tax is the bridge constant
+    let mut gh = golden_cfg("cc", "select-batch+timer");
+    gh.set("device-profiles", "gh200-coherent").unwrap();
+    gh.label = gh.cell_label();
+    let j = Json::parse(&golden_cell(&gh)).unwrap();
+    assert_eq!(num(&j, "total_crypto_s"), 0.0,
+               "coherent memory must price no swap crypto");
+    assert!(num(&j, "total_bridge_s") > 0.0,
+            "the coherent bridge residual must be paid");
 }
 
 /// Byte-identity contract of the tenancy flags (ISSUE 6 acceptance):

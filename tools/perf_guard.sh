@@ -28,15 +28,22 @@ cps=$(awk -v c="$cells" -v w="$wall" \
       'BEGIN { printf "%.2f", c / (w > 0 ? w : 1e-9) }')
 
 # newest trajectory point with recorded=true and a non-null serial
-# cells/s figure; "none" when the whole trajectory is documented-unrecorded
+# cells/s figure; "none" when the whole trajectory is
+# documented-unrecorded.  A BENCH file that exists but does not parse
+# is a hard error — silently skipping it would quietly un-pin the
+# baseline the guard exists to enforce.
 baseline=$(python3 - <<'EOF'
-import glob, json, re
+import glob, json, re, sys
 best = None
 for p in glob.glob("BENCH_*.json"):
     m = re.match(r"BENCH_(\d+)\.json$", p)
     if not m:
         continue
-    d = json.load(open(p))
+    try:
+        d = json.load(open(p))
+    except ValueError as e:
+        print("perf-guard: malformed %s: %s" % (p, e), file=sys.stderr)
+        sys.exit(1)
     serial = (d.get("bench", {}).get("lab_grid") or {}).get("cells_per_s_serial")
     if d.get("recorded") and isinstance(serial, (int, float)):
         if best is None or int(m.group(1)) > best[0]:
