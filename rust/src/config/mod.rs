@@ -120,6 +120,12 @@ pub struct RunConfig {
     /// Flash-crowd window length, seconds (0 = off).
     pub flash_dur_s: f64,
 
+    // ---- observability (`obs` module) ----
+    /// Structured event-trace mode (`--trace off|events|full`).
+    /// Virtual-time runs only; `off` leaves every output byte
+    /// identical to pre-trace builds.
+    pub trace: crate::obs::TraceMode,
+
     // ---- scenario-lab configuration (`lab` command) ----
     /// Built-in preset for `lab run` (`lab list` names them).
     pub lab_preset: Option<String>,
@@ -177,6 +183,7 @@ impl Default for RunConfig {
             flash_mult: 1.0,
             flash_start_s: 0.0,
             flash_dur_s: 0.0,
+            trace: crate::obs::TraceMode::Off,
             lab_preset: None,
             lab_spec: None,
             lab_threads: 0,
@@ -295,6 +302,7 @@ impl RunConfig {
             "flash-mult" => self.flash_mult = parse_f64(key, value)?,
             "flash-start" => self.flash_start_s = parse_f64(key, value)?,
             "flash-dur" => self.flash_dur_s = parse_f64(key, value)?,
+            "trace" => self.trace = crate::obs::TraceMode::parse(value)?,
             "preset" => self.lab_preset = Some(value.to_string()),
             "spec" => self.lab_spec = Some(PathBuf::from(value)),
             "threads" => {
@@ -386,6 +394,9 @@ impl RunConfig {
         }
         if self.sla_classes {
             base.push_str("_cls");
+        }
+        if self.trace.is_on() {
+            base.push_str(&format!("_tr-{}", self.trace.as_str()));
         }
         base
     }
@@ -701,6 +712,25 @@ mod tests {
         assert!(c.set("data-path", "maybe").is_err());
         assert!(c.set("data-tokens-in", "-3").is_err());
         assert!(c.set("data-tokens-out", "lots").is_err());
+    }
+
+    #[test]
+    fn trace_flags() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.trace, crate::obs::TraceMode::Off,
+                   "trace must default off");
+        c.set("trace", "events").unwrap();
+        assert_eq!(c.trace, crate::obs::TraceMode::Events);
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_tr-events");
+        c.set("trace", "full").unwrap();
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_tr-full");
+        c.set("trace", "off").unwrap();
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18",
+                   "flag off leaves every pre-existing label untouched");
+        assert!(c.set("trace", "verbose").is_err());
     }
 
     #[test]

@@ -40,6 +40,11 @@ pub struct SwapReport {
     /// pipeline is off; see `gpu::dma`).
     pub crypto_exposed_s: f64,
 }
+// Note: the serialized-bridge residual of the hardware-generation
+// profiles has no field here — wall-mode swaps measure real transfers,
+// while the bridge is a virtual-pricing attribution that
+// `engine::backend::price_swap` folds into `SwapOutcome` (and the
+// `obs` trace splits out of the load column) on virtual runs only.
 
 /// Timing of one `prefetch` staging upload.
 #[derive(Debug, Clone, Copy, Default)]

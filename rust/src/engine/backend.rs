@@ -52,6 +52,11 @@ pub struct SwapOutcome {
     /// Crypto time not hidden behind the DMA pipeline (== total when
     /// the pipeline is off; see `gpu::dma`).
     pub crypto_exposed_s: f64,
+    /// Per-swap bridge/attestation residual slice of `load_s`
+    /// (hardware-profile devices in CC mode only; 0 elsewhere).  An
+    /// attribution term for the trace layer — already included in
+    /// `load_s`, never added on top.
+    pub bridge_s: f64,
 }
 
 /// Result of one decrypt-ahead staging attempt (predictive prefetch).
@@ -211,6 +216,7 @@ pub(crate) fn price_swap(mc: &ModelCosts, gpu: &GpuConfig, ev: SwapEvent,
         let (ct, ce) = swap_load_crypto(mc, gpu);
         out.crypto_total_s = ct;
         out.crypto_exposed_s = ce;
+        out.bridge_s = bridge_s(gpu);
         stats.total_load_s += out.load_s;
         stats.total_crypto_s += ct;
         stats.total_crypto_exposed_s += ce;

@@ -26,6 +26,12 @@
 //! keeps the DES-vs-real parity contract exact with the pipeline and
 //! prefetch enabled (`tests/engine_parity.rs`).
 //!
+//! Observability rides the same structure for free: `--trace` hooks
+//! live in the shared engine loop (gated on virtual time), not here,
+//! so this backend and the real-virtual one record identical span
+//! sequences from the identical priced outcomes — the span-parity
+//! test compares whole `obs::Trace` values across the two.
+//!
 //! Known abstraction boundary: the DES models no device *memory*, so
 //! it always dispatches `batch_size_at_least(rows)` where the real
 //! backend's batcher would halve a batch on workspace OOM, and its

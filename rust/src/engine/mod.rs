@@ -62,6 +62,7 @@ use crate::coordinator::swap::SwapStats;
 use crate::gpu::CcMode;
 use crate::metrics::recorder::{BatchRecord, MonitorRecord, Recorder};
 use crate::metrics::system::sample_proc;
+use crate::obs::{Trace, TraceMode};
 use crate::runtime::ModelId;
 use crate::tenancy::admission::{admission_by_name, queue_cap, AdmitCtx,
                                 AdmissionPolicy};
@@ -469,6 +470,19 @@ impl Engine<'_> {
         let mut rates = RateEstimator::default();
         let mut sla = SlaTracker::new(cfg.sla_s);
         let mut recorder = Recorder::new();
+        // Structured event trace (`--trace`): recorded only in virtual
+        // time, where the engine computes every phase boundary itself.
+        // The hooks below sit in the engine, not the backends, so both
+        // virtual backends emit identical span sequences for identical
+        // runs (the parity contract, tests/engine_parity.rs).
+        if cfg.trace.is_on() {
+            if self.virtual_time {
+                recorder.trace = Some(Trace::new());
+            } else {
+                eprintln!("warning: --trace records virtual-time runs \
+                           only (des / lab); wall-mode serve ignores it");
+            }
+        }
         // EWMA of observed exec time per model (SelectBatch headroom),
         // id-indexed; NaN = never executed (the old map's "absent")
         let mut exec_est: Vec<f64> = vec![f64::NAN; table.len()];
@@ -522,6 +536,10 @@ impl Engine<'_> {
                                 sla.on_unserved(1);
                                 tstats.shed[r.class as usize
                                             % N_CLASSES] += 1;
+                                if let Some(tr) = recorder.trace.as_mut() {
+                                    tr.on_shed(now, r.id, r.model,
+                                               r.class);
+                                }
                                 continue;
                             }
                         }
@@ -578,6 +596,11 @@ impl Engine<'_> {
                 if tenancy_on {
                     for r in &expired_buf {
                         tstats.expired[r.class as usize % N_CLASSES] += 1;
+                    }
+                }
+                if let Some(tr) = recorder.trace.as_mut() {
+                    for r in &expired_buf {
+                        tr.on_expired(t, r.id, r.model, r.class);
                     }
                 }
                 last_progress_s = t;
@@ -739,6 +762,15 @@ impl Engine<'_> {
                     *e = 0.3 * out.exec_s + 0.7 * prev;
 
                     let n_rows = batch_buf.len();
+                    // device-lane spans: swap (if any) then exec; the
+                    // gaps between spans on a lane are its idle time
+                    if let Some(tr) = recorder.trace.as_mut() {
+                        if swap.swapped {
+                            tr.on_swap(dev, t, model, &swap);
+                        }
+                        tr.on_exec(dev, exec_start_s, model, n_rows,
+                                   out.exec_s, out.io_s);
+                    }
                     for r in &batch_buf {
                         let c = CompletedRequest {
                             id: r.id,
@@ -758,6 +790,13 @@ impl Engine<'_> {
                             if met {
                                 tstats.met[cls] += 1;
                             }
+                        }
+                        // class-lane span + waterfall row; `t` is the
+                        // dispatch instant, so queue wait ends (and the
+                        // swap begins) there
+                        if let Some(tr) = recorder.trace.as_mut() {
+                            tr.on_request(&c, r.class, met, t, &swap,
+                                          out.exec_s, out.io_s);
                         }
                         recorder.on_complete(c, met);
                     }
@@ -870,10 +909,23 @@ impl Engine<'_> {
                     .collect(),
             }
         });
-        let summary = summarize(&cfg, generated, runtime_s, &recorder,
-                                &sla, &dev_stats, &dev_modes, tenancy);
+        let mut summary = summarize(&cfg, generated, runtime_s, &recorder,
+                                    &sla, &dev_stats, &dev_modes, tenancy);
+        // "where the seconds go": present only when tracing ran, so
+        // untraced summaries stay byte-identical
+        summary.phase_totals = recorder.trace.as_ref()
+            .map(|tr| tr.phase_totals());
         if let Some(dir) = &cfg.results_dir {
             recorder.write_csvs(dir, &cfg.label, &table)?;
+            if let Some(tr) = &recorder.trace {
+                std::fs::write(
+                    dir.join(format!("{}_trace.json", cfg.label)),
+                    tr.to_chrome_json(&cfg.label, &table, &dev_modes,
+                                      cfg.sla_classes).to_string())?;
+                if cfg.trace == TraceMode::Full {
+                    tr.write_waterfall_csv(dir, &cfg.label, &table)?;
+                }
+            }
             std::fs::write(
                 dir.join(format!("{}_summary.json", cfg.label)),
                 summary.to_json().to_string())?;

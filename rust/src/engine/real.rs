@@ -205,6 +205,10 @@ impl ExecBackend for RealBackend<'_> {
             unload_s: rep.unload_s,
             crypto_total_s: rep.crypto_total_s,
             crypto_exposed_s: rep.crypto_exposed_s,
+            // wall mode measures real swaps; the bridge residual is a
+            // virtual-pricing attribution term (and wall runs never
+            // trace), so it stays zero here
+            bridge_s: 0.0,
         };
         if !rep.swapped {
             return Ok(out);

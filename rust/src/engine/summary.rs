@@ -310,6 +310,12 @@ pub struct RunSummary {
     /// (admission gate, SLA classes) was active; absent from the JSON
     /// otherwise so pre-tenancy summaries stay byte-identical.
     pub tenancy: Option<TenancySummary>,
+
+    /// "Where the seconds go" — the trace layer's per-phase waterfall
+    /// aggregate (`obs::PhaseTotals`); Some only when the run traced
+    /// (`--trace events|full`), absent from the JSON otherwise so
+    /// untraced summaries stay byte-identical.
+    pub phase_totals: Option<crate::obs::PhaseTotals>,
 }
 
 impl RunSummary {
@@ -386,6 +392,11 @@ impl RunSummary {
         // when the engine ran with a tenancy feature on
         if let Some(t) = &self.tenancy {
             fields.push(("tenancy", t.to_json()));
+        }
+        // and for the trace layer's waterfall aggregate: present only
+        // when the run actually traced
+        if let Some(p) = &self.phase_totals {
+            fields.push(("phase_totals", p.to_json()));
         }
         fields.push(("per_device", Json::Arr(self.per_device.iter()
             .map(|d| d.to_json()).collect())));
@@ -466,6 +477,8 @@ impl RunSummary {
                      .collect())
                 .unwrap_or_default(),
             tenancy: c.get("tenancy").map(TenancySummary::from_json),
+            phase_totals: c.get("phase_totals")
+                .map(crate::obs::PhaseTotals::from_json),
         })
     }
 
@@ -659,6 +672,9 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         data_wire_bytes,
         per_device,
         tenancy,
+        // attached by the engine after summarize, only when a trace
+        // was recorded
+        phase_totals: None,
     }
 }
 
@@ -876,6 +892,49 @@ mod tests {
         assert_eq!(t.churn_by_model,
                    vec![("gemma-sim".to_string(), 3),
                         ("llama-sim".to_string(), 5)]);
+    }
+
+    /// Trace mirror of the data-path contract: the `phase_totals` key
+    /// appears only when the engine attached the trace aggregate, and
+    /// a populated block round-trips losslessly.
+    #[test]
+    fn phase_totals_keys_absent_when_unused_and_roundtrip() {
+        let off = RunSummary {
+            per_device: vec![DeviceSummary::default()],
+            ..RunSummary::default()
+        };
+        let text = off.to_json().to_string();
+        assert!(!text.contains("phase"), "leaked phase key: {text}");
+        assert!(!text.contains("queue_wait"),
+                "leaked phase sub-keys: {text}");
+
+        let on = RunSummary {
+            phase_totals: Some(crate::obs::PhaseTotals {
+                requests: 120,
+                queue_wait_s: 14.0,
+                swap_unload_s: 0.3,
+                swap_load_s: 21.5,
+                swap_bridge_s: 2.5,
+                swap_crypto_exposed_s: 4.0,
+                exec_s: 30.0,
+                io_s: 0.9,
+                latency_s: 66.7,
+                queue_wait_p95_s: 0.4,
+                swap_load_p95_s: 1.9,
+                exec_p95_s: 0.35,
+            }),
+            ..RunSummary::default()
+        };
+        let text = on.to_json().to_string();
+        assert!(text.contains("\"phase_totals\"")
+                && text.contains("\"queue_wait_s\"")
+                && text.contains("\"swap_bridge_s\""), "{text}");
+        let back = RunSummary::from_json(&on.to_json()).unwrap();
+        let p = back.phase_totals.expect("phase block must parse back");
+        assert_eq!(p, on.phase_totals.unwrap());
+        assert_eq!(p.requests, 120);
+        assert!((p.swap_load_s - 21.5).abs() < 1e-12);
+        assert!((p.queue_wait_p95_s - 0.4).abs() < 1e-12);
     }
 
     /// Seeds above 2^53 cannot ride an f64; the string fallback keeps

@@ -67,6 +67,13 @@ pub const PRESETS: &[PresetEntry] = &[
                 at smoke scale",
         make: hw_gen,
     },
+    PresetEntry {
+        name: "cc-attribution",
+        blurb: "where the seconds go: full event tracing over mode x \
+                profile x pipeline-depth at smoke scale, feeding the \
+                latency-waterfall table and Perfetto traces",
+        make: cc_attribution,
+    },
 ];
 
 /// Valid preset names, in table order.
@@ -274,6 +281,41 @@ fn hw_gen() -> ScenarioSpec {
     }
 }
 
+fn cc_attribution() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "cc-attribution".into(),
+        description: "per-phase attribution of the CC tax: every cell \
+                      runs with --trace full, so the report's latency \
+                      waterfall splits the gap into queue wait, swap \
+                      unload/load (with bridge and exposed-crypto \
+                      attribution inside the load), exec, and data-path \
+                      I/O; profiles move the tax between phases and the \
+                      DMA pipeline shows how much of the load column it \
+                      recovers; No-CC needs no pipeline cell and the \
+                      coherent profile has no chunk crypto to pipeline"
+            .into(),
+        base: vec![
+            ("duration".into(), "20".into()),
+            ("drain".into(), "8".into()),
+            ("mean-rps".into(), "4".into()),
+            ("sla".into(), "6".into()),
+            ("models".into(), "llama-sim,gemma-sim".into()),
+            ("trace".into(), "full".into()),
+        ],
+        axes: vec![
+            axis("profile", &["h100-cc", "b300-cc", "gh200-coherent"]),
+            axis("mode", &["no-cc", "cc"]),
+            axis("pipeline-depth", &["0", "2"]),
+        ],
+        exclude: vec![
+            rule(&[("mode", "no-cc"), ("pipeline-depth", "2")]),
+            rule(&[("profile", "gh200-coherent"),
+                   ("pipeline-depth", "2")]),
+        ],
+        seeds: 1,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,6 +421,34 @@ mod tests {
         // the coherent profile reaches the fleet config
         assert!(g.cells.iter().any(
             |c| c.cfg.fleet_configs()[0].uma));
+    }
+
+    #[test]
+    fn cc_attribution_traces_every_cell() {
+        let g = cc_attribution().expand(&RunConfig::default()).unwrap();
+        // 3 profiles x 2 modes x 2 depths, minus the no-cc pipeline
+        // column (3) and the coherent pipeline cells (2, one shared)
+        assert_eq!(g.cells.len(), 8);
+        assert_eq!(g.pruned, 4);
+        assert_eq!(g.seeds, 1);
+        assert!(g.cells.iter().all(
+            |c| c.cfg.trace == crate::obs::TraceMode::Full
+                && c.label.ends_with("_tr-full")),
+                "every cell records the full trace");
+        // each profile keeps its No-CC twin for the delta block
+        for prof in ["h100-cc", "b300-cc", "gh200-coherent"] {
+            let modes: Vec<_> = g.cells.iter()
+                .filter(|c| c.cfg.device_profiles[0] == prof)
+                .map(|c| c.cfg.mode).collect();
+            assert!(modes.contains(&crate::gpu::CcMode::Off)
+                        && modes.contains(&crate::gpu::CcMode::On),
+                    "{prof} must appear in both modes");
+        }
+        // the pipeline cells only exist where chunk crypto exists
+        assert!(g.cells.iter()
+            .filter(|c| c.cfg.gpu.pipeline_depth == 2)
+            .all(|c| c.cfg.mode == crate::gpu::CcMode::On
+                 && c.cfg.device_profiles[0] != "gh200-coherent"));
     }
 
     #[test]

@@ -70,6 +70,10 @@ fn check_admission(v: &str) -> anyhow::Result<()> {
     crate::tenancy::admission::admission_by_name(v).map(|_| ())
 }
 
+fn check_trace(v: &str) -> anyhow::Result<()> {
+    crate::obs::TraceMode::parse(v).map(|_| ())
+}
+
 fn check_profile(v: &str) -> anyhow::Result<()> {
     for part in v.split(',') {
         let part = part.trim();
@@ -111,6 +115,7 @@ pub const AXES: &[AxisEntry] = &[
     AxisEntry { name: "admission", key: "admission",
                 check: Some(check_admission) },
     AxisEntry { name: "sla-classes", key: "sla-classes", check: None },
+    AxisEntry { name: "trace", key: "trace", check: Some(check_trace) },
 ];
 
 /// Valid axis names, in table order.
@@ -159,6 +164,10 @@ pub fn axis_hint(name: &str) -> String {
         "sla-classes" => {
             "on | off — gold/silver/free SLA classes".to_string()
         }
+        "trace" => {
+            "off | events | full — structured event trace (obs)"
+                .to_string()
+        }
         other => format!("unknown axis {other:?}"),
     }
 }
@@ -204,6 +213,7 @@ pub fn axis_value(cfg: &RunConfig, axis: &str) -> String {
         "sla-classes" => {
             (if cfg.sla_classes { "on" } else { "off" }).to_string()
         }
+        "trace" => cfg.trace.as_str().to_string(),
         _ => String::new(),
     }
 }
@@ -274,6 +284,13 @@ impl Grid {
             for r in 0..seeds {
                 let mut cfg = cell.cfg.clone();
                 cfg.seed = replica_seed(cfg.seed, r);
+                // replicas share the cell label, so only replica 0
+                // writes the cell's on-disk artifacts (trace JSON,
+                // waterfall CSV) — concurrent replicas must not race
+                // on the same file names
+                if r > 0 {
+                    cfg.results_dir = None;
+                }
                 out.push(LabJob { cell: ci, replica: r, cfg });
             }
         }
@@ -468,8 +485,14 @@ impl ScenarioSpec {
                     }
                 }
                 // like the legacy sweep, cells never write per-run
-                // CSVs; the lab persists one aggregate artifact
-                cfg.results_dir = None;
+                // CSVs; the lab persists one aggregate artifact.
+                // Traced cells are the exception: their trace files
+                // (`<label>_trace.json`, `<label>_waterfall.csv`) only
+                // exist on disk, so they keep the inherited results
+                // dir — trace-off cells stay exactly as before
+                if !cfg.trace.is_on() {
+                    cfg.results_dir = None;
+                }
                 let mut label = cfg.cell_label();
                 if swept[rps_i] {
                     label.push_str(
@@ -687,6 +710,45 @@ mod tests {
         let err = s.expand(&RunConfig::default()).unwrap_err()
             .to_string();
         assert!(err.contains("a100") && err.contains("b300-cc"),
+                "{err}");
+    }
+
+    #[test]
+    fn trace_axis_reaches_config_and_label() {
+        let mut s = two_by_two();
+        s.axes = vec![axis("mode", &["no-cc", "cc"]),
+                      axis("trace", &["off", "full"])];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 4);
+        // trace-off cells stay the plain legacy cell: no label fragment
+        // and no results_dir, exactly like an untraced sweep
+        let off = &g.cells[0];
+        assert_eq!(off.cfg.trace, crate::obs::TraceMode::Off);
+        assert!(!off.label.contains("_tr-"), "{}", off.label);
+        assert!(off.cfg.results_dir.is_none());
+        // traced cells carry the fragment and keep the inherited
+        // results_dir — the trace artifacts only exist on disk
+        let mut base = RunConfig::default();
+        base.results_dir = Some(std::path::PathBuf::from("results-x"));
+        let g = s.expand(&base).unwrap();
+        let on = &g.cells[1];
+        assert_eq!(on.cfg.trace, crate::obs::TraceMode::Full);
+        assert!(on.label.ends_with("_tr-full"), "{}", on.label);
+        assert_eq!(on.cfg.results_dir,
+                   Some(std::path::PathBuf::from("results-x")));
+        assert_eq!(on.assignment[1],
+                   ("trace".to_string(), "full".to_string()));
+        // replicas share the cell label, so only replica 0 keeps the
+        // dir — no two jobs may race on the same artifact files
+        let jobs = g.jobs(2);
+        assert!(jobs[2].cfg.results_dir.is_some()
+                    && jobs[3].cfg.results_dir.is_none(),
+                "only replica 0 writes trace artifacts");
+        // bad trace values fail expansion with the mode table
+        s.axes = vec![axis("trace", &["verbose"])];
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("verbose") && err.contains("events"),
                 "{err}");
     }
 

@@ -34,6 +34,7 @@ pub mod engine;
 pub mod gpu;
 pub mod lab;
 pub mod metrics;
+pub mod obs;
 pub mod runtime;
 pub mod sim;
 pub mod tenancy;

@@ -385,6 +385,10 @@ fn lab_run(cfg: RunConfig) -> anyhow::Result<()> {
         println!("\n## CC tax by hardware generation\n");
         println!("{hw_gen}");
     }
+    if let Some(waterfall) = &tables.waterfall {
+        println!("\n## Where the seconds go (latency waterfall)\n");
+        println!("{waterfall}");
+    }
     if let Some(headline) = &tables.headline {
         println!("\n## Headline comparison (paper abstract)\n");
         println!("{headline}");
@@ -436,6 +440,9 @@ struct LabTables {
     tenancy: Option<String>,
     /// Only when some cell ran under a named device profile.
     hw_gen: Option<String>,
+    /// Only when some cell recorded an event trace (`--trace`): the
+    /// per-phase latency waterfall.
+    waterfall: Option<String>,
     /// Only when the grid has both CC and No-CC cells — a one-mode
     /// grid has nothing to ratio against (`lab check` guards the
     /// same way).
@@ -466,6 +473,8 @@ impl LabTables {
                 .then(|| report::tenancy_table(cells)),
             hw_gen: report::has_profiles(cells)
                 .then(|| report::hw_gen_table(cells)),
+            waterfall: report::has_waterfall(cells)
+                .then(|| report::waterfall_table(cells)),
             headline: h.as_ref().map(report::headline_table),
             bands: h.as_ref().map(
                 |h| report::band_table(&report::paper_check(h))),
@@ -496,6 +505,11 @@ impl LabTables {
         if let Some(hw_gen) = &self.hw_gen {
             md.push_str(&format!(
                 "\n## CC tax by hardware generation\n\n{hw_gen}"));
+        }
+        if let Some(waterfall) = &self.waterfall {
+            md.push_str(&format!(
+                "\n## Where the seconds go (latency waterfall)\n\n\
+                 {waterfall}"));
         }
         if let Some(headline) = &self.headline {
             md.push_str(&format!(
@@ -587,6 +601,10 @@ fn cmd_report(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
     if report::has_profiles(&cells) {
         println!("\n## CC tax by hardware generation\n");
         println!("{}", report::hw_gen_table(&cells));
+    }
+    if report::has_waterfall(&cells) {
+        println!("\n## Where the seconds go (latency waterfall)\n");
+        println!("{}", report::waterfall_table(&cells));
     }
     println!("{}", report::headline_table(&report::headline_ratios(&cells)));
     Ok(())
@@ -744,6 +762,18 @@ fn usage_string() -> String {
          period per run)\n\
          \x20 --flash-mult M --flash-start S --flash-dur S   flash-crowd \
          window\n\n\
+         TRACE OPTIONS (virtual-time runs only — des / lab; off is \
+         byte-identical to before):\n\
+         \x20 --trace {traces}   structured event trace (schema v{tsv})\n\
+         \x20                        events: per-request lifecycle \
+         spans + device lanes,\n\
+         \x20                        written as Perfetto-loadable \
+         <label>_trace.json, plus a\n\
+         \x20                        phase_totals summary block\n\
+         \x20                        full: events + per-request \
+         <label>_waterfall.csv whose\n\
+         \x20                        phase columns sum exactly to the \
+         recorded latency\n\n\
          LAB OPTIONS (lab run|list|compare|check):\n\
          \x20 --preset NAME          built-in scenario preset \
          (`lab list` names them)\n\
@@ -763,7 +793,9 @@ fn usage_string() -> String {
         placements = placement_names().join("|"),
         profiles = sincere::gpu::profile::profile_names().join("|"),
         admissions =
-            sincere::tenancy::admission::admission_names().join("|")));
+            sincere::tenancy::admission::admission_names().join("|"),
+        traces = sincere::obs::TRACE_MODE_NAMES.join("|"),
+        tsv = sincere::obs::TRACE_SCHEMA_VERSION));
     out
 }
 
@@ -841,6 +873,23 @@ mod tests {
                      "--data-tokens-out"] {
             assert!(usage.contains(flag), "usage missing {flag}");
         }
+    }
+
+    /// The trace flag, its mode table, and the artifact names render
+    /// into the help text from the same `obs` constants that drive
+    /// parsing and the writers.
+    #[test]
+    fn usage_lists_the_trace_flag_and_modes() {
+        let usage = usage_string();
+        assert!(usage.contains("--trace"));
+        for name in sincere::obs::TRACE_MODE_NAMES {
+            assert!(usage.contains(name),
+                    "usage missing trace mode {name}");
+        }
+        assert!(usage.contains("_trace.json")
+                && usage.contains("_waterfall.csv"));
+        assert!(usage.contains(&format!(
+            "schema v{}", sincere::obs::TRACE_SCHEMA_VERSION)));
     }
 
     /// Tenancy flags and the admission name table both render into

@@ -197,4 +197,104 @@ mod tests {
         assert_eq!(h.count(), 2);
         assert!(h.quantile(0.0) <= h.quantile(1.0));
     }
+
+    use crate::prop_assert;
+    use crate::util::prop::{forall, Gen};
+
+    fn sample(g: &mut Gen) -> Vec<f64> {
+        g.vec(64, |g| g.f64_in(0.0, 40.0))
+    }
+
+    /// Merging N split histograms is indistinguishable — count, sum,
+    /// min, max, mean — from recording every value into one histogram,
+    /// because `merge` adds the same bucket counts record() would
+    /// have placed (the trace layer leans on this when it aggregates
+    /// per-phase histograms across lab cells).
+    #[test]
+    fn prop_merge_matches_single_recording() {
+        forall("merge == single recording", 200, |g| {
+            let xs = sample(g);
+            let ys = sample(g);
+            let mut whole = Histogram::new();
+            for v in xs.iter().chain(&ys) {
+                whole.record(*v);
+            }
+            let mut a = Histogram::new();
+            let mut b = Histogram::new();
+            for v in &xs {
+                a.record(*v);
+            }
+            for v in &ys {
+                b.record(*v);
+            }
+            a.merge(&b);
+            prop_assert!(a.count() == whole.count(),
+                         "count {} != {}", a.count(), whole.count());
+            prop_assert!((a.sum - whole.sum).abs() <= 1e-9,
+                         "sum {} != {}", a.sum, whole.sum);
+            prop_assert!((a.mean() - whole.mean()).abs() <= 1e-9,
+                         "mean {} != {}", a.mean(), whole.mean());
+            prop_assert!(a.min() == whole.min() && a.max() == whole.max(),
+                         "extremes ({}, {}) != ({}, {})",
+                         a.min(), a.max(), whole.min(), whole.max());
+            // same buckets -> same quantiles, exactly
+            for q in [0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0] {
+                prop_assert!(a.quantile(q) == whole.quantile(q),
+                             "q{q}: {} != {}", a.quantile(q),
+                             whole.quantile(q));
+            }
+            Ok(())
+        });
+    }
+
+    /// Quantiles of a merged histogram stay monotone in q.
+    #[test]
+    fn prop_merged_quantiles_monotone() {
+        forall("merged quantiles monotone", 200, |g| {
+            let mut a = Histogram::new();
+            let mut b = Histogram::new();
+            for v in sample(g) {
+                a.record(v);
+            }
+            for v in sample(g) {
+                b.record(v);
+            }
+            a.merge(&b);
+            let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0];
+            for w in qs.windows(2) {
+                let (lo, hi) = (a.quantile(w[0]), a.quantile(w[1]));
+                prop_assert!(lo <= hi,
+                             "q{} = {lo} > q{} = {hi}", w[0], w[1]);
+            }
+            Ok(())
+        });
+    }
+
+    /// A value recorded exactly on a bucket edge lands in that edge's
+    /// own (lower) bucket — `bucket` floors — so `fraction_le(edge)`
+    /// counts it, and merging preserves the placement bit-for-bit.
+    #[test]
+    fn prop_bucket_edges_land_low() {
+        forall("edge values land in the lower bucket", 200, |g| {
+            let i = g.usize_in(1, NBUCKETS - 2);
+            let edge = Histogram::edge(i);
+            let b = Histogram::bucket(edge);
+            prop_assert!(b <= i,
+                         "edge({i}) = {edge} placed above its bucket \
+                          ({b} > {i})");
+            // floating-point log2 may land the edge one bucket early,
+            // never late: the edge is the bucket's *lower* boundary
+            prop_assert!(i - b <= 1, "edge({i}) fell to bucket {b}");
+            let mut h = Histogram::new();
+            h.record(edge);
+            prop_assert!(h.fraction_le(edge) == 1.0,
+                         "fraction_le(edge) = {} for bucket {i}",
+                         h.fraction_le(edge));
+            let mut m = Histogram::new();
+            m.merge(&h);
+            prop_assert!(m.counts == h.counts,
+                         "merge moved the edge sample (bucket {i})");
+            Ok(())
+        });
+    }
 }

@@ -74,6 +74,12 @@ pub struct Recorder {
     pub batches: Vec<BatchRecord>,
     pub monitor: Vec<MonitorRecord>,
     pub latency_hist: Histogram,
+    /// Structured event trace (`--trace events|full`); `None` — and
+    /// therefore zero bytes of output anywhere — when tracing is off.
+    /// The engine owns the recording (see `engine::run`); the trace
+    /// rides here so it reaches the write-out and the summary with the
+    /// rest of the run's records.
+    pub trace: Option<crate::obs::Trace>,
 }
 
 impl Recorder {
@@ -154,12 +160,13 @@ impl Recorder {
         }
         w.flush()?;
 
-        let mut w = CsvWriter::create(
+        let mut w = CsvWriter::create_with_capacity(
             &dir.join(format!("{label}_monitor.csv")),
             &["at_s", "device", "cpu_user_s", "cpu_sys_s", "rss_bytes",
               "vol_ctxt", "invol_ctxt", "gpu_util", "mem_in_use",
               "mem_peak", "fragmentation", "dma_h2d_bytes",
-              "dma_crypto_total_s", "dma_crypto_exposed_s", "swaps"])?;
+              "dma_crypto_total_s", "dma_crypto_exposed_s", "swaps"],
+            cap(self.monitor.len()))?;
         for m in &self.monitor {
             w.row(&[fmt(m.proc.at_s), m.device.to_string(),
                     fmt(m.proc.cpu_user_s),

@@ -207,6 +207,103 @@ pub fn hw_gen_table(cells: &[RunSummary]) -> String {
     out
 }
 
+/// True when any cell carries the trace layer's `phase_totals`
+/// aggregate — gates the waterfall table the same way `has_data_path`
+/// gates the batch-I/O table.  Untraced runs attach no block, so
+/// trace-off reports cannot change by a byte.
+pub fn has_waterfall(cells: &[RunSummary]) -> bool {
+    cells.iter().any(|c| c.phase_totals.is_some())
+}
+
+/// "Where the seconds go": per traced cell, the mean seconds each
+/// completed request spent in every lifecycle phase (queue wait, swap
+/// unload/load with the load's bridge and exposed-crypto attribution,
+/// exec, data-path I/O) plus the per-phase p95s — the per-request
+/// waterfall identity aggregated (`obs::Waterfall`).  A second block
+/// gives the CC-minus-No-CC per-phase delta for each hardware profile
+/// (and `-` for profile-free cells), naming the phase that pays the
+/// largest share of the CC tax.  Cells without a `phase_totals` block
+/// (trace off) contribute no rows.
+pub fn waterfall_table(cells: &[RunSummary]) -> String {
+    use crate::obs::PhaseTotals;
+    let mut out = String::from(
+        "| cell | mode | reqs | queue (s) | q p95 | unload (s) | \
+         load (s) | bridge (s) | crypto exp (s) | load p95 | \
+         exec (s) | exec p95 | io (s) | lat (s) |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|---|---|---|\n");
+    for c in cells {
+        let Some(p) = &c.phase_totals else { continue };
+        out.push_str(&format!(
+            "| {} | {} | {} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | \
+             {:.3} | {:.3} | {:.3} | {:.3} | {:.3} | {:.3} |\n",
+            c.label, c.mode, p.requests,
+            p.mean(p.queue_wait_s), p.queue_wait_p95_s,
+            p.mean(p.swap_unload_s), p.mean(p.swap_load_s),
+            p.mean(p.swap_bridge_s), p.mean(p.swap_crypto_exposed_s),
+            p.swap_load_p95_s,
+            p.mean(p.exec_s), p.exec_p95_s,
+            p.mean(p.io_s), p.mean(p.latency_s)));
+    }
+    // CC-minus-No-CC per-phase deltas, one row per profile group with
+    // traced cells on both sides of the mode axis
+    let group_of = |c: &RunSummary| -> String {
+        profile_of(c).unwrap_or("-").to_string()
+    };
+    let mut order: Vec<String> = Vec::new();
+    for c in cells.iter().filter(|c| c.phase_totals.is_some()) {
+        let g = group_of(c);
+        if !order.contains(&g) {
+            order.push(g);
+        }
+    }
+    let pmean = |pred: &dyn Fn(&RunSummary) -> bool,
+                 metric: &dyn Fn(&PhaseTotals) -> f64| -> f64 {
+        let vals: Vec<f64> = cells.iter()
+            .filter(|c| pred(c))
+            .filter_map(|c| c.phase_totals.as_ref().map(metric))
+            .collect();
+        crate::util::mean(&vals)
+    };
+    let mut deltas = String::new();
+    for g in &order {
+        let cc = |c: &RunSummary| group_of(c) == *g && c.mode == "cc";
+        let nocc =
+            |c: &RunSummary| group_of(c) == *g && c.mode == "no-cc";
+        let both = cells.iter().any(|c| c.phase_totals.is_some() && cc(c))
+            && cells.iter().any(|c| c.phase_totals.is_some() && nocc(c));
+        if !both {
+            continue;
+        }
+        let d = |metric: &dyn Fn(&PhaseTotals) -> f64| -> f64 {
+            pmean(&cc, metric) - pmean(&nocc, metric)
+        };
+        let dq = d(&|p| p.mean(p.queue_wait_s));
+        let dswap =
+            d(&|p| p.mean(p.swap_unload_s) + p.mean(p.swap_load_s));
+        let dexec = d(&|p| p.mean(p.exec_s));
+        let dio = d(&|p| p.mean(p.io_s));
+        let dlat = d(&|p| p.mean(p.latency_s));
+        let phases =
+            [("queue", dq), ("swap", dswap), ("exec", dexec),
+             ("io", dio)];
+        let driver = phases.iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .map(|(n, _)| *n).unwrap_or("-");
+        deltas.push_str(&format!(
+            "| {} | {:+.3} | {:+.3} | {:+.3} | {:+.3} | {:+.3} | \
+             {} |\n",
+            g, dq, dswap, dexec, dio, dlat, driver));
+    }
+    if !deltas.is_empty() {
+        out.push_str(
+            "\nCC tax by phase (CC minus No-CC, mean s/request):\n\n\
+             | profile | d queue | d swap | d exec | d io | d lat | \
+             tax driver |\n|---|---|---|---|---|---|---|\n");
+        out.push_str(&deltas);
+    }
+    out
+}
+
 /// Mean of the headline metrics grouped by one axis of a grid
 /// (`mode` | `pattern` | `strategy` | `sla`), one row per distinct
 /// value in first-appearance order.
@@ -627,6 +724,55 @@ mod tests {
         assert!(t.contains(
             "| gh200-coherent | 2 | 3.00 | 3.30 | +10.0 | +2.0 | \
              0.00 | 1.50 | 0.0 | 100.0 |"), "{t}");
+    }
+
+    #[test]
+    fn waterfall_table_renders_traced_cells_and_names_the_tax_driver() {
+        let plain = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        assert!(!has_waterfall(&[plain.clone()]),
+                "untraced cells must not trigger the table");
+        let mk = |label: &str, mode: &str, queue: f64, load: f64,
+                  bridge: f64, crypto: f64| {
+            let mut c = cell(mode, 2.0, 0.6, 2.0, 0.2);
+            c.label = label.into();
+            // totals over 100 requests; phases sum to the latency
+            c.phase_totals = Some(crate::obs::PhaseTotals {
+                requests: 100,
+                queue_wait_s: queue,
+                swap_unload_s: 1.0,
+                swap_load_s: load,
+                swap_bridge_s: bridge,
+                swap_crypto_exposed_s: crypto,
+                exec_s: 100.0,
+                io_s: 10.0,
+                latency_s: queue + 1.0 + load + 100.0 + 10.0,
+                queue_wait_p95_s: 0.9,
+                swap_load_p95_s: 1.8,
+                exec_p95_s: 1.1,
+            });
+            c
+        };
+        let cells = vec![
+            mk("no-cc_g_prof-h100-cc", "no-cc", 50.0, 40.0, 0.0, 0.0),
+            mk("cc_g_prof-h100-cc", "cc", 100.0, 140.0, 20.0, 60.0),
+            plain,
+        ];
+        assert!(has_waterfall(&cells));
+        let t = waterfall_table(&cells);
+        // per-cell rows: mean s/request per phase
+        assert!(t.contains(
+            "| cc_g_prof-h100-cc | cc | 100 | 1.000 | 0.900 | 0.010 | \
+             1.400 | 0.200 | 0.600 | 1.800 | 1.000 | 1.100 | 0.100 | \
+             3.510 |"), "{t}");
+        assert!(t.contains(
+            "| no-cc_g_prof-h100-cc | no-cc | 100 | 0.500 |"), "{t}");
+        // CC-minus-No-CC deltas: queue +0.5, swap +1.0, exec/io flat,
+        // latency +1.5 — the swap phase pays the tax
+        assert!(t.contains(
+            "| h100-cc | +0.500 | +1.000 | +0.000 | +0.000 | +1.500 | \
+             swap |"), "{t}");
+        // the untraced cell contributes no row
+        assert_eq!(t.matches("| t |").count(), 0, "{t}");
     }
 
     #[test]

@@ -1,0 +1,667 @@
+//! Structured event traces — the observability layer (`--trace`).
+//!
+//! The paper attributes the CC-vs-No-CC gap to model-load encryption,
+//! and the hardware-generation profiles (`gpu::profile`) further split
+//! that tax into chunk crypto vs a per-swap bridge residual.  The
+//! summaries prove the totals; this module proves *where each second
+//! of each request went*.  In virtual time the engine computes every
+//! phase boundary itself (see the time protocol in `engine::backend`),
+//! so both virtual backends — the DES and the real backend under
+//! virtual costs — are traced by the same engine-level hooks and emit
+//! identical span sequences for identical runs (the parity contract,
+//! `tests/engine_parity.rs`).
+//!
+//! Three artifacts per traced run:
+//!
+//! * an in-memory [`Trace`]: typed request-lifecycle events (shed,
+//!   expiry, swap, exec, completion) plus one [`Waterfall`] row per
+//!   completed request;
+//! * `<label>_trace.json` — Chrome trace-event JSON (Perfetto-loadable):
+//!   one lane per fleet device carrying swap/exec spans (gaps = idle),
+//!   plus one lane per SLA class (or a single `requests` lane) carrying
+//!   per-request arrival→completion spans and shed/expiry instants;
+//! * `<label>_waterfall.csv` (`--trace full` only) — the per-request
+//!   latency decomposition.
+//!
+//! The waterfall identity: for every completed request,
+//!
+//! ```text
+//! queue_wait + swap_unload + swap_load + exec + io == latency  (≤1e-9)
+//! ```
+//!
+//! holds by construction of the virtual-time protocol — the engine
+//! derives `complete_s` from exactly these terms — and is pinned as an
+//! invariant test (`tests/obs_trace.rs`), not a rendering convention.
+//! The bridge residual and exposed crypto are *attribution within*
+//! `swap_load` (they are already part of the priced load seconds), so
+//! they are carried as extra columns, never added to the sum.
+//!
+//! Flag-off contract: `--trace off` (the default) records nothing,
+//! writes nothing, and leaves every summary byte identical to
+//! pre-trace builds (`tests/golden_summary.rs`).
+
+use std::path::Path;
+
+use crate::coordinator::request::CompletedRequest;
+use crate::engine::SwapOutcome;
+use crate::gpu::CcMode;
+use crate::metrics::hist::Histogram;
+use crate::runtime::{ModelId, ModelTable};
+use crate::util::csvio::CsvWriter;
+use crate::util::json::Json;
+
+/// Version tag stamped into every `<label>_trace.json` so downstream
+/// tooling can detect schema drift.  Bump when event kinds, lane
+/// layout, or waterfall columns change.
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// Trace verbosity (`--trace off|events|full`).
+///
+/// * `off` — nothing recorded, byte-identical outputs (default);
+/// * `events` — spans recorded, Chrome trace JSON written, summary
+///   gains its `phase_totals` block;
+/// * `full` — `events` plus the per-request waterfall CSV.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceMode {
+    #[default]
+    Off,
+    Events,
+    Full,
+}
+
+/// Valid `--trace` values, in help order.
+pub const TRACE_MODE_NAMES: &[&str] = &["off", "events", "full"];
+
+impl TraceMode {
+    pub fn parse(s: &str) -> anyhow::Result<TraceMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "off" => Ok(TraceMode::Off),
+            "events" => Ok(TraceMode::Events),
+            "full" => Ok(TraceMode::Full),
+            other => anyhow::bail!(
+                "unknown --trace mode {other:?} (have {})",
+                TRACE_MODE_NAMES.join("|")),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TraceMode::Off => "off",
+            TraceMode::Events => "events",
+            TraceMode::Full => "full",
+        }
+    }
+
+    /// True for any recording mode.
+    pub fn is_on(&self) -> bool {
+        *self != TraceMode::Off
+    }
+}
+
+/// One typed lifecycle event.  Recorded in engine-loop order, which in
+/// virtual time is a pure function of (config, seed, cost table) — the
+/// parity test compares whole event sequences across backends.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TraceEvent {
+    /// Refused by the admission gate — never queued.
+    Shed { at_s: f64, id: u64, model: ModelId, class: u8 },
+    /// Dropped from a queue past its (class) deadline.
+    Expired { at_s: f64, id: u64, model: ModelId, class: u8 },
+    /// One residency change on a device lane, `start_s` to
+    /// `start_s + unload_s + load_s`.  The bridge residual and the
+    /// exposed crypto attribute slices *within* `load_s`.
+    Swap {
+        device: usize,
+        start_s: f64,
+        model: ModelId,
+        unload_s: f64,
+        load_s: f64,
+        bridge_s: f64,
+        crypto_exposed_s: f64,
+        promoted: bool,
+    },
+    /// One batch execution (exec + data-path I/O) on a device lane.
+    Exec {
+        device: usize,
+        start_s: f64,
+        model: ModelId,
+        rows: usize,
+        exec_s: f64,
+        io_s: f64,
+    },
+    /// One completed request on its SLA-class lane, arrival to
+    /// completion.
+    Request {
+        id: u64,
+        model: ModelId,
+        class: u8,
+        device: usize,
+        arrival_s: f64,
+        complete_s: f64,
+        sla_met: bool,
+    },
+}
+
+/// Per-request latency decomposition.  The phase columns
+/// (`queue_wait_s + swap_unload_s + swap_load_s + exec_s + io_s`) sum
+/// to `latency_s` within 1e-9 — the module-level identity.  Batched
+/// requests share their batch's swap/exec/io figures: the waterfall
+/// answers "what was this request waiting on", not "what marginal cost
+/// did it add".
+#[derive(Debug, Clone, PartialEq)]
+pub struct Waterfall {
+    pub id: u64,
+    pub model: ModelId,
+    pub device: usize,
+    pub class: u8,
+    pub arrival_s: f64,
+    /// Dispatch time minus arrival — time spent queued.
+    pub queue_wait_s: f64,
+    pub swap_unload_s: f64,
+    /// Full priced load seconds (bridge + crypto slices included).
+    pub swap_load_s: f64,
+    /// Bridge-residual slice of `swap_load_s` (hardware profiles).
+    pub swap_bridge_s: f64,
+    /// Exposed-crypto slice of `swap_load_s`.
+    pub swap_crypto_exposed_s: f64,
+    /// The swap promoted a prefetched buffer (load was free).
+    pub promoted: bool,
+    pub exec_s: f64,
+    pub io_s: f64,
+    pub latency_s: f64,
+}
+
+impl Waterfall {
+    /// Sum of the phase columns — equals `latency_s` within 1e-9.
+    pub fn phase_sum_s(&self) -> f64 {
+        self.queue_wait_s + self.swap_unload_s + self.swap_load_s
+            + self.exec_s + self.io_s
+    }
+}
+
+/// Aggregated "where the seconds go" block, attached to the summary
+/// only when tracing ran (`RunSummary::phase_totals`) — the same
+/// presence gate as every other optional block (byte-identity
+/// contract).  Totals are summed over completed requests; the p95s
+/// come from per-phase histograms over the same rows.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseTotals {
+    /// Completed (waterfall) requests aggregated here.
+    pub requests: u64,
+    pub queue_wait_s: f64,
+    pub swap_unload_s: f64,
+    pub swap_load_s: f64,
+    pub swap_bridge_s: f64,
+    pub swap_crypto_exposed_s: f64,
+    pub exec_s: f64,
+    pub io_s: f64,
+    /// Sum of recorded latencies (== sum of phase sums within 1e-9·n).
+    pub latency_s: f64,
+    pub queue_wait_p95_s: f64,
+    pub swap_load_p95_s: f64,
+    pub exec_p95_s: f64,
+}
+
+impl PhaseTotals {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("queue_wait_s", Json::num(self.queue_wait_s)),
+            ("swap_unload_s", Json::num(self.swap_unload_s)),
+            ("swap_load_s", Json::num(self.swap_load_s)),
+            ("swap_bridge_s", Json::num(self.swap_bridge_s)),
+            ("swap_crypto_exposed_s",
+             Json::num(self.swap_crypto_exposed_s)),
+            ("exec_s", Json::num(self.exec_s)),
+            ("io_s", Json::num(self.io_s)),
+            ("latency_s", Json::num(self.latency_s)),
+            ("queue_wait_p95_s", Json::num(self.queue_wait_p95_s)),
+            ("swap_load_p95_s", Json::num(self.swap_load_p95_s)),
+            ("exec_p95_s", Json::num(self.exec_p95_s)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> PhaseTotals {
+        let f = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+        PhaseTotals {
+            requests: j.get("requests").and_then(|v| v.as_u64())
+                .unwrap_or(0),
+            queue_wait_s: f("queue_wait_s"),
+            swap_unload_s: f("swap_unload_s"),
+            swap_load_s: f("swap_load_s"),
+            swap_bridge_s: f("swap_bridge_s"),
+            swap_crypto_exposed_s: f("swap_crypto_exposed_s"),
+            exec_s: f("exec_s"),
+            io_s: f("io_s"),
+            latency_s: f("latency_s"),
+            queue_wait_p95_s: f("queue_wait_p95_s"),
+            swap_load_p95_s: f("swap_load_p95_s"),
+            exec_p95_s: f("exec_p95_s"),
+        }
+    }
+
+    /// Mean seconds per request for one phase total.
+    pub fn mean(&self, total: f64) -> f64 {
+        if self.requests > 0 {
+            total / self.requests as f64
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Everything one traced run records: the typed event sequence plus
+/// the per-request waterfalls.  `PartialEq` so the DES-vs-real parity
+/// test can compare whole traces structurally.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub waterfalls: Vec<Waterfall>,
+}
+
+impl Trace {
+    pub fn new() -> Trace {
+        Trace::default()
+    }
+
+    pub fn on_shed(&mut self, at_s: f64, id: u64, model: ModelId,
+                   class: u8) {
+        self.events.push(TraceEvent::Shed { at_s, id, model, class });
+    }
+
+    pub fn on_expired(&mut self, at_s: f64, id: u64, model: ModelId,
+                      class: u8) {
+        self.events.push(TraceEvent::Expired { at_s, id, model, class });
+    }
+
+    /// One residency change beginning at dispatch time `start_s`.
+    pub fn on_swap(&mut self, device: usize, start_s: f64, model: ModelId,
+                   swap: &SwapOutcome) {
+        self.events.push(TraceEvent::Swap {
+            device,
+            start_s,
+            model,
+            unload_s: swap.unload_s,
+            load_s: swap.load_s,
+            bridge_s: swap.bridge_s,
+            crypto_exposed_s: swap.crypto_exposed_s,
+            promoted: swap.promoted,
+        });
+    }
+
+    pub fn on_exec(&mut self, device: usize, start_s: f64, model: ModelId,
+                   rows: usize, exec_s: f64, io_s: f64) {
+        self.events.push(TraceEvent::Exec {
+            device, start_s, model, rows, exec_s, io_s,
+        });
+    }
+
+    /// One completed request: the class-lane span plus its waterfall
+    /// row.  `dispatch_s` is the decision instant `t` (queue wait ends
+    /// there; the swap begins there).
+    pub fn on_request(&mut self, c: &CompletedRequest, class: u8,
+                      sla_met: bool, dispatch_s: f64, swap: &SwapOutcome,
+                      exec_s: f64, io_s: f64) {
+        self.events.push(TraceEvent::Request {
+            id: c.id,
+            model: c.model,
+            class,
+            device: c.device,
+            arrival_s: c.arrival_s,
+            complete_s: c.complete_s,
+            sla_met,
+        });
+        self.waterfalls.push(Waterfall {
+            id: c.id,
+            model: c.model,
+            device: c.device,
+            class,
+            arrival_s: c.arrival_s,
+            queue_wait_s: (dispatch_s - c.arrival_s).max(0.0),
+            swap_unload_s: swap.unload_s,
+            swap_load_s: swap.load_s,
+            swap_bridge_s: swap.bridge_s,
+            swap_crypto_exposed_s: swap.crypto_exposed_s,
+            promoted: swap.promoted,
+            exec_s,
+            io_s,
+            latency_s: c.latency_s(),
+        });
+    }
+
+    /// Aggregate the waterfalls into the summary's `phase_totals`
+    /// block.
+    pub fn phase_totals(&self) -> PhaseTotals {
+        let mut t = PhaseTotals {
+            requests: self.waterfalls.len() as u64,
+            ..PhaseTotals::default()
+        };
+        let mut qh = Histogram::new();
+        let mut lh = Histogram::new();
+        let mut eh = Histogram::new();
+        for w in &self.waterfalls {
+            t.queue_wait_s += w.queue_wait_s;
+            t.swap_unload_s += w.swap_unload_s;
+            t.swap_load_s += w.swap_load_s;
+            t.swap_bridge_s += w.swap_bridge_s;
+            t.swap_crypto_exposed_s += w.swap_crypto_exposed_s;
+            t.exec_s += w.exec_s;
+            t.io_s += w.io_s;
+            t.latency_s += w.latency_s;
+            qh.record(w.queue_wait_s.max(0.0));
+            lh.record(w.swap_load_s.max(0.0));
+            eh.record(w.exec_s.max(0.0));
+        }
+        t.queue_wait_p95_s = qh.quantile(0.95);
+        t.swap_load_p95_s = lh.quantile(0.95);
+        t.exec_p95_s = eh.quantile(0.95);
+        t
+    }
+
+    /// Render the event sequence as Chrome trace-event JSON
+    /// (Perfetto-loadable).  Lane layout: pid 0 throughout; device
+    /// lanes at tid 0..D-1 (swap + exec spans; the gaps are idle
+    /// time), SLA-class lanes at tid [`CLASS_TID_BASE`]+class — or a
+    /// single `requests` lane when classes are off — carrying
+    /// per-request spans plus shed/expiry instants.  Timestamps are
+    /// virtual seconds scaled to microseconds (the format's unit).
+    pub fn to_chrome_json(&self, label: &str, table: &ModelTable,
+                          dev_modes: &[CcMode], classes_on: bool)
+                          -> Json {
+        let us = |s: f64| Json::num(s * 1e6);
+        let mut events: Vec<Json> = Vec::new();
+        for (d, mode) in dev_modes.iter().enumerate() {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(d as f64)),
+                ("name", Json::str("thread_name")),
+                ("args", Json::obj(vec![("name", Json::str(format!(
+                    "device {d} ({})", mode.as_str())))])),
+            ]));
+        }
+        let class_lanes: &[&str] = if classes_on {
+            &crate::tenancy::CLASS_NAMES
+        } else {
+            &["requests"]
+        };
+        for (c, name) in class_lanes.iter().enumerate() {
+            events.push(Json::obj(vec![
+                ("ph", Json::str("M")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num((CLASS_TID_BASE + c) as f64)),
+                ("name", Json::str("thread_name")),
+                ("args", Json::obj(vec![("name",
+                                         Json::str(name.to_string()))])),
+            ]));
+        }
+        let class_tid = |class: u8| -> f64 {
+            if classes_on {
+                (CLASS_TID_BASE + class as usize) as f64
+            } else {
+                CLASS_TID_BASE as f64
+            }
+        };
+        for ev in &self.events {
+            events.push(match ev {
+                TraceEvent::Shed { at_s, id, model, class } => {
+                    instant("shed", table.name(*model), *at_s,
+                            class_tid(*class), *id)
+                }
+                TraceEvent::Expired { at_s, id, model, class } => {
+                    instant("expired", table.name(*model), *at_s,
+                            class_tid(*class), *id)
+                }
+                TraceEvent::Swap { device, start_s, model, unload_s,
+                                   load_s, bridge_s, crypto_exposed_s,
+                                   promoted } => Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(*device as f64)),
+                    ("cat", Json::str("swap")),
+                    ("name", Json::str(format!(
+                        "swap:{}", table.name(*model)))),
+                    ("ts", us(*start_s)),
+                    ("dur", us(unload_s + load_s)),
+                    ("args", Json::obj(vec![
+                        ("unload_s", Json::num(*unload_s)),
+                        ("load_s", Json::num(*load_s)),
+                        ("bridge_s", Json::num(*bridge_s)),
+                        ("crypto_exposed_s",
+                         Json::num(*crypto_exposed_s)),
+                        ("promoted", Json::Bool(*promoted)),
+                    ])),
+                ]),
+                TraceEvent::Exec { device, start_s, model, rows, exec_s,
+                                   io_s } => Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(*device as f64)),
+                    ("cat", Json::str("exec")),
+                    ("name", Json::str(format!(
+                        "exec:{}", table.name(*model)))),
+                    ("ts", us(*start_s)),
+                    ("dur", us(exec_s + io_s)),
+                    ("args", Json::obj(vec![
+                        ("rows", Json::num(*rows as f64)),
+                        ("exec_s", Json::num(*exec_s)),
+                        ("io_s", Json::num(*io_s)),
+                    ])),
+                ]),
+                TraceEvent::Request { id, model, class, device,
+                                      arrival_s, complete_s,
+                                      sla_met } => Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(class_tid(*class))),
+                    ("cat", Json::str("request")),
+                    ("name", Json::str(table.name(*model).to_string())),
+                    ("ts", us(*arrival_s)),
+                    ("dur", us(complete_s - arrival_s)),
+                    ("args", Json::obj(vec![
+                        ("id", Json::num(*id as f64)),
+                        ("device", Json::num(*device as f64)),
+                        ("sla_met", Json::Bool(*sla_met)),
+                    ])),
+                ]),
+            });
+        }
+        Json::obj(vec![
+            ("label", Json::str(label.to_string())),
+            ("schemaVersion",
+             Json::num(TRACE_SCHEMA_VERSION as f64)),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// Write `<label>_waterfall.csv` (`--trace full`): one row per
+    /// completed request, phase columns summing to `latency_s` within
+    /// 1e-9.  Nine decimal places so the identity stays checkable from
+    /// the file itself.
+    pub fn write_waterfall_csv(&self, dir: &Path, label: &str,
+                               table: &ModelTable) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let cap = (self.waterfalls.len().max(64) * 160).min(1 << 22);
+        let mut w = CsvWriter::create_with_capacity(
+            &dir.join(format!("{label}_waterfall.csv")),
+            &["id", "model", "device", "class", "arrival_s",
+              "queue_wait_s", "swap_unload_s", "swap_load_s",
+              "swap_bridge_s", "swap_crypto_exposed_s", "promoted",
+              "exec_s", "io_s", "latency_s"],
+            cap)?;
+        let f = |v: f64| format!("{v:.9}");
+        for r in &self.waterfalls {
+            w.row(&[r.id.to_string(), table.name(r.model).to_string(),
+                    r.device.to_string(), r.class.to_string(),
+                    f(r.arrival_s), f(r.queue_wait_s),
+                    f(r.swap_unload_s), f(r.swap_load_s),
+                    f(r.swap_bridge_s), f(r.swap_crypto_exposed_s),
+                    r.promoted.to_string(), f(r.exec_s), f(r.io_s),
+                    f(r.latency_s)])?;
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+/// First SLA-class lane id — device lanes occupy 0..D-1, and no fleet
+/// approaches 100 devices.
+pub const CLASS_TID_BASE: usize = 100;
+
+fn instant(kind: &str, model: &str, at_s: f64, tid: f64, id: u64)
+           -> Json {
+    Json::obj(vec![
+        ("ph", Json::str("i")),
+        ("s", Json::str("t")),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(tid)),
+        ("cat", Json::str(kind.to_string())),
+        ("name", Json::str(format!("{kind}:{model}"))),
+        ("ts", Json::num(at_s * 1e6)),
+        ("args", Json::obj(vec![("id", Json::num(id as f64))])),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn swap(unload: f64, load: f64) -> SwapOutcome {
+        SwapOutcome {
+            swapped: true,
+            load_s: load,
+            unload_s: unload,
+            ..SwapOutcome::default()
+        }
+    }
+
+    fn completed(id: u64, arrival: f64, dispatch: f64, swap_cost: f64,
+                 exec: f64, io: f64) -> CompletedRequest {
+        let start = dispatch + swap_cost;
+        CompletedRequest {
+            id,
+            model: ModelId(0),
+            arrival_s: arrival,
+            exec_start_s: start,
+            complete_s: start + exec + io,
+            batch: 4,
+            batch_rows: 1,
+            caused_swap: swap_cost > 0.0,
+            device: 0,
+        }
+    }
+
+    #[test]
+    fn trace_mode_parses_and_round_trips() {
+        for name in TRACE_MODE_NAMES {
+            assert_eq!(TraceMode::parse(name).unwrap().as_str(), *name);
+        }
+        assert_eq!(TraceMode::default(), TraceMode::Off);
+        assert!(!TraceMode::Off.is_on());
+        assert!(TraceMode::Events.is_on() && TraceMode::Full.is_on());
+        let err = TraceMode::parse("verbose").unwrap_err().to_string();
+        assert!(err.contains("verbose") && err.contains("events"),
+                "{err}");
+    }
+
+    #[test]
+    fn waterfall_identity_holds_by_construction() {
+        let mut tr = Trace::new();
+        let sw = swap(0.01, 1.7);
+        let c = completed(7, 2.0, 3.5, 1.71, 0.2, 0.005);
+        tr.on_request(&c, 0, true, 3.5, &sw, 0.2, 0.005);
+        assert_eq!(tr.waterfalls.len(), 1);
+        let w = &tr.waterfalls[0];
+        assert!((w.phase_sum_s() - w.latency_s).abs() <= 1e-9,
+                "phases {} vs latency {}", w.phase_sum_s(), w.latency_s);
+        assert!((w.queue_wait_s - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn phase_totals_sum_and_roundtrip() {
+        let mut tr = Trace::new();
+        let sw = swap(0.01, 1.0);
+        for i in 0..4 {
+            let c = completed(i, i as f64, i as f64 + 0.5, 1.01,
+                              0.2, 0.01);
+            tr.on_request(&c, 0, true, i as f64 + 0.5, &sw, 0.2, 0.01);
+        }
+        let t = tr.phase_totals();
+        assert_eq!(t.requests, 4);
+        assert!((t.queue_wait_s - 2.0).abs() < 1e-9);
+        assert!((t.swap_load_s - 4.0).abs() < 1e-9);
+        assert!((t.exec_s - 0.8).abs() < 1e-9);
+        let phase_sum = t.queue_wait_s + t.swap_unload_s + t.swap_load_s
+            + t.exec_s + t.io_s;
+        assert!((phase_sum - t.latency_s).abs() <= 4.0 * 1e-9);
+        assert!(t.swap_load_p95_s > 0.9);
+        let back = PhaseTotals::from_json(&t.to_json());
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn chrome_json_carries_lanes_and_spans() {
+        let mut tr = Trace::new();
+        let sw = swap(0.0, 2.0);
+        tr.on_swap(0, 1.0, ModelId(0), &sw);
+        tr.on_exec(0, 3.0, ModelId(0), 2, 0.4, 0.01);
+        let c = completed(1, 0.5, 1.0, 2.0, 0.4, 0.01);
+        tr.on_request(&c, 0, true, 1.0, &sw, 0.4, 0.01);
+        tr.on_shed(4.0, 9, ModelId(0), 0);
+        let table = ModelTable::new(["llama-sim"]);
+        let j = tr.to_chrome_json("probe", &table,
+                                  &[CcMode::On], false);
+        let text = j.to_string();
+        assert!(text.contains("\"traceEvents\""), "{text}");
+        assert!(text.contains("\"schemaVersion\":1"), "{text}");
+        assert!(text.contains("device 0 (cc)"), "{text}");
+        assert!(text.contains("\"requests\""), "{text}");
+        assert!(text.contains("swap:llama-sim"), "{text}");
+        assert!(text.contains("exec:llama-sim"), "{text}");
+        assert!(text.contains("shed:llama-sim"), "{text}");
+        // swap span: ts 1s -> 1e6 µs, dur 2s -> 2e6 µs
+        assert!(text.contains("\"ts\":1000000"), "{text}");
+        assert!(text.contains("\"dur\":2000000"), "{text}");
+        let n = j.get("traceEvents").and_then(|v| v.as_arr())
+            .map(|a| a.len()).unwrap_or(0);
+        // 2 metadata lanes + 4 recorded events
+        assert_eq!(n, 6);
+    }
+
+    #[test]
+    fn class_lanes_split_by_class_when_on() {
+        let mut tr = Trace::new();
+        let sw = swap(0.0, 0.0);
+        let c = completed(1, 0.5, 1.0, 0.0, 0.4, 0.01);
+        tr.on_request(&c, 2, true, 1.0, &sw, 0.4, 0.01);
+        let table = ModelTable::new(["llama-sim"]);
+        let text = tr.to_chrome_json("probe", &table, &[CcMode::Off],
+                                     true).to_string();
+        assert!(text.contains("\"gold\"") && text.contains("\"free\""),
+                "{text}");
+        // class 2 rides lane CLASS_TID_BASE + 2
+        assert!(text.contains(&format!("\"tid\":{}",
+                                       CLASS_TID_BASE + 2)), "{text}");
+    }
+
+    #[test]
+    fn waterfall_csv_writes_and_sums() {
+        let mut tr = Trace::new();
+        let sw = swap(0.01, 1.0);
+        let c = completed(3, 1.0, 2.0, 1.01, 0.3, 0.02);
+        tr.on_request(&c, 1, false, 2.0, &sw, 0.3, 0.02);
+        let dir = std::env::temp_dir().join("sincere_obs_test");
+        let table = ModelTable::new(["llama-sim"]);
+        tr.write_waterfall_csv(&dir, "t", &table).unwrap();
+        let tab = crate::util::csvio::CsvTable::read(
+            &dir.join("t_waterfall.csv")).unwrap();
+        assert_eq!(tab.rows.len(), 1);
+        let col = |name: &str| tab.f64_col(name).unwrap()[0];
+        let sum = col("queue_wait_s") + col("swap_unload_s")
+            + col("swap_load_s") + col("exec_s") + col("io_s");
+        assert!((sum - col("latency_s")).abs() <= 1e-8,
+                "file identity: {sum} vs {}", col("latency_s"));
+        assert_eq!(tab.rows[0][tab.col("model").unwrap()], "llama-sim");
+        assert_eq!(tab.rows[0][tab.col("class").unwrap()], "1");
+    }
+}

@@ -443,6 +443,53 @@ fn fleet_parity_4_device_tenancy() {
     }
 }
 
+/// The observability extension of the parity contract (ISSUE 9
+/// acceptance): with tracing on, the two virtual backends must record
+/// *identical* span sequences on a mixed 4-device fleet — every shed,
+/// swap, exec, and request event, in order, with identical timings —
+/// because the spans are recorded by the shared engine loop from the
+/// shared cost pricing.  The aggregated `phase_totals` block must then
+/// agree too, and every waterfall row must satisfy the phase-sum
+/// identity in both time domains.
+#[test]
+fn fleet_trace_span_sequences_match() {
+    let mut cfg = parity_cfg("cc", "select-batch+timer");
+    cfg.devices = 4;
+    cfg.set("device-modes", "cc,no-cc,cc,no-cc").unwrap();
+    cfg.mean_rps = 6.0; // keep all four devices busy
+    cfg.set("trace", "full").unwrap();
+    let cm = toy_costs();
+    let (des_sum, des_rec) = EngineBuilder::new(&cfg)
+        .des(manifest(), &cm).unwrap().run().unwrap();
+    let (real_sum, real_rec) = registry()
+        .with(|reg| EngineBuilder::new(&cfg).real_virtual(reg, &cm)
+            .and_then(|b| b.run()))
+        .unwrap();
+    let dt = des_rec.trace.as_ref().expect("DES trace missing");
+    let rt = real_rec.trace.as_ref().expect("real trace missing");
+    assert!(!dt.events.is_empty(), "degenerate traced run");
+    assert_eq!(dt.events.len(), rt.events.len(),
+               "span counts diverged: {} vs {}", dt.events.len(),
+               rt.events.len());
+    for (i, (a, b)) in dt.events.iter().zip(rt.events.iter())
+        .enumerate() {
+        assert_eq!(a, b, "span {i} diverged");
+    }
+    assert_eq!(dt.waterfalls, rt.waterfalls, "waterfall rows diverged");
+    assert_eq!(des_sum.phase_totals, real_sum.phase_totals,
+               "phase_totals diverged");
+    assert!(des_sum.phase_totals.is_some(),
+            "traced run must attach phase_totals");
+    // the waterfall identity holds request by request in both domains
+    assert_eq!(dt.waterfalls.len() as u64, des_sum.completed,
+               "every completed request must have a waterfall row");
+    for w in &dt.waterfalls {
+        assert!((w.phase_sum_s() - w.latency_s).abs() <= 1e-9,
+                "request {}: phases {} != latency {}", w.id,
+                w.phase_sum_s(), w.latency_s);
+    }
+}
+
 #[test]
 fn real_backend_still_does_real_work_under_virtual_time() {
     // The parity mode is not a second simulator: PJRT output tokens and

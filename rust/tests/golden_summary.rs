@@ -132,6 +132,14 @@ fn golden_summaries_match() {
         cfg.set("device-profiles", profile).unwrap();
         cells.push(cfg);
     }
+    // the observability extension: one traced CC cell pins the
+    // summary's phase_totals block (trace files land on disk only
+    // when a results dir is set, so the golden pins the aggregate)
+    {
+        let mut cfg = golden_cfg("cc", "select-batch+timer");
+        cfg.set("trace", "events").unwrap();
+        cells.push(cfg);
+    }
     // the tenancy extension: Zipf popularity + diurnal/flash traffic
     // + SLA classes behind each capped admission policy, so the
     // goldens pin the shed/goodput/fairness accounting end to end
@@ -276,6 +284,61 @@ fn h100_cc_profile_is_byte_identical_to_legacy_knobs() {
                "coherent memory must price no swap crypto");
     assert!(num(&j, "total_bridge_s") > 0.0,
             "the coherent bridge residual must be paid");
+}
+
+/// Byte-identity contract of `--trace` (ISSUE 9 acceptance): with
+/// tracing off the summary JSON must be byte-identical to what
+/// pre-trace builds emitted — spelling `--trace off` out must match
+/// the untouched default byte for byte, and the off-path document must
+/// carry no trace key at all.  With tracing on, the `phase_totals`
+/// block appears and its phases account for the recorded latency.
+#[test]
+fn trace_off_is_byte_identical() {
+    // explicit `--trace off` vs the untouched default, identical
+    // labels forced so the comparison covers every byte
+    let mut explicit = golden_cfg("cc", "select-batch+timer");
+    explicit.set("trace", "off").unwrap();
+    explicit.label = "trace_probe".into();
+    let mut default = golden_cfg("cc", "select-batch+timer");
+    default.label = "trace_probe".into();
+    assert_eq!(golden_cell(&explicit), golden_cell(&default),
+               "spelling --trace off out must not change a single byte");
+
+    // trace off: no trace key (nor any phase key) may appear — this
+    // is what lets CI grep the trace-off lab cells
+    for mode in ["no-cc", "cc"] {
+        let mut cfg = golden_cfg(mode, "select-batch+timer");
+        cfg.label = cfg.cell_label();
+        let text = golden_cell(&cfg);
+        for key in ["phase_totals", "queue_wait", "_tr-"] {
+            assert!(!text.contains(key),
+                    "{mode}: trace-off summary leaks {key}: {text}");
+        }
+    }
+
+    // trace on: the phase_totals block appears in both modes and its
+    // per-request phase means sum to the mean recorded latency (the
+    // waterfall identity, aggregated)
+    for mode in ["no-cc", "cc"] {
+        let mut cfg = golden_cfg(mode, "select-batch+timer");
+        cfg.set("trace", "events").unwrap();
+        cfg.label = cfg.cell_label();
+        let j = Json::parse(&golden_cell(&cfg)).unwrap();
+        let p = j.get("phase_totals").unwrap_or_else(
+            || panic!("{mode}: traced summary missing phase_totals"));
+        let f = |k: &str| num(p, k);
+        let requests = f("requests");
+        assert!(requests > 0.0, "{mode}: no traced requests");
+        let phases = f("queue_wait_s") + f("swap_unload_s")
+            + f("swap_load_s") + f("exec_s") + f("io_s");
+        assert!((phases - f("latency_s")).abs() <= 1e-6 * requests,
+                "{mode}: phase totals {phases} != latency {}",
+                f("latency_s"));
+        // the attribution slices live inside the load, never on top
+        assert!(f("swap_bridge_s") + f("swap_crypto_exposed_s")
+                    <= f("swap_load_s") + 1e-9,
+                "{mode}: attribution exceeds the load it annotates");
+    }
 }
 
 /// Byte-identity contract of the tenancy flags (ISSUE 6 acceptance):

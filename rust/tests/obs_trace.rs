@@ -1,0 +1,197 @@
+//! The waterfall identity (ISSUE 9 acceptance): with `--trace full`,
+//! every completed request's phase columns — queue wait + swap unload
+//! + swap load + exec + I/O — must sum to its recorded latency within
+//! 1e-9, across CC/No-CC, pipeline depths, and hardware-generation
+//! profiles.  The identity is structural (the virtual-time protocol
+//! derives `complete_s` from exactly these terms), so any drift means
+//! a phase was dropped or double-counted.
+//!
+//! The suite also pins the artifacts end to end: the Chrome trace JSON
+//! parses, carries the schema version and a span per lane, and the
+//! waterfall CSV re-checks the identity from the file itself.
+
+mod common;
+
+use std::path::PathBuf;
+use std::sync::OnceLock;
+
+use sincere::config::RunConfig;
+use sincere::engine::EngineBuilder;
+use sincere::runtime::Manifest;
+use sincere::sim::calib::CostModel;
+use sincere::util::csvio::CsvTable;
+use sincere::util::json::Json;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn manifest() -> &'static Manifest {
+    static M: OnceLock<Manifest> = OnceLock::new();
+    M.get_or_init(|| Manifest::load(&artifacts_dir()).expect(
+        "artifacts missing: run tools/gen_artifacts.py"))
+}
+
+fn toy_costs() -> CostModel {
+    common::toy_costs(manifest())
+}
+
+/// One traced DES cell at golden scale.  The profile is applied before
+/// the mode so the swept mode wins over the profile's bundled default,
+/// exactly like the lab's `profile` axis.
+fn traced_cfg(mode: &str, profile: Option<&str>, depth: usize)
+              -> RunConfig {
+    let mut cfg = RunConfig {
+        duration_s: 20.0,
+        drain_s: 8.0,
+        mean_rps: 4.0,
+        sla_s: 6.0,
+        strategy: "select-batch+timer".to_string(),
+        models: vec!["llama-sim".into(), "gemma-sim".into()],
+        ..RunConfig::default()
+    };
+    if let Some(p) = profile {
+        cfg.set("device-profiles", p).unwrap();
+    }
+    cfg.set("mode", mode).unwrap();
+    cfg.gpu.pipeline_depth = depth;
+    cfg.set("trace", "full").unwrap();
+    cfg.gpu.no_throttle = true;
+    cfg.label = cfg.cell_label();
+    cfg
+}
+
+fn run_des(cfg: &RunConfig) -> (sincere::engine::RunSummary,
+                                sincere::metrics::recorder::Recorder) {
+    let cm = toy_costs();
+    EngineBuilder::new(cfg).des(manifest(), &cm).unwrap().run().unwrap()
+}
+
+/// The acceptance matrix: every completed request's waterfall phases
+/// sum to its recorded latency within 1e-9 in every cell, and the
+/// aggregated `phase_totals` block re-tells the same totals.
+#[test]
+fn waterfall_phases_sum_to_latency_across_the_matrix() {
+    for mode in ["no-cc", "cc"] {
+        for depth in [0usize, 2] {
+            for profile in [None, Some("b300-cc"),
+                            Some("gh200-coherent")] {
+                let cfg = traced_cfg(mode, profile, depth);
+                let tag = &cfg.label;
+                let (summary, rec) = run_des(&cfg);
+                let tr = rec.trace.as_ref()
+                    .unwrap_or_else(|| panic!("{tag}: trace missing"));
+                assert!(!tr.waterfalls.is_empty(),
+                        "{tag}: degenerate traced run");
+                assert_eq!(tr.waterfalls.len() as u64, summary.completed,
+                           "{tag}: a completed request has no row");
+                let mut totals = (0.0, 0.0);
+                for w in &tr.waterfalls {
+                    assert!((w.phase_sum_s() - w.latency_s).abs()
+                                <= 1e-9,
+                            "{tag}: request {} phases {} != latency {}",
+                            w.id, w.phase_sum_s(), w.latency_s);
+                    // attribution stays inside the load it annotates
+                    assert!(w.swap_bridge_s + w.swap_crypto_exposed_s
+                                <= w.swap_load_s + 1e-9,
+                            "{tag}: request {} attribution exceeds \
+                             load", w.id);
+                    totals.0 += w.phase_sum_s();
+                    totals.1 += w.latency_s;
+                }
+                let p = summary.phase_totals.as_ref()
+                    .unwrap_or_else(|| panic!(
+                        "{tag}: phase_totals missing"));
+                assert_eq!(p.requests, summary.completed, "{tag}");
+                assert!((p.latency_s - totals.1).abs() <= 1e-6,
+                        "{tag}: phase_totals latency diverged");
+                assert!((totals.0 - totals.1).abs()
+                            <= 1e-9 * tr.waterfalls.len() as f64,
+                        "{tag}: aggregate identity broke");
+            }
+        }
+    }
+}
+
+/// No-CC pays no swap crypto and no bridge; CC cells put seconds in
+/// the load column that their No-CC twins do not — the attribution the
+/// report's waterfall table turns into the CC-tax delta block.
+#[test]
+fn cc_tax_shows_up_in_the_load_phase() {
+    let (_, nocc) = run_des(&traced_cfg("no-cc", None, 0));
+    let (_, cc) = run_des(&traced_cfg("cc", None, 0));
+    let load = |r: &sincere::metrics::recorder::Recorder| {
+        r.trace.as_ref().unwrap().waterfalls.iter()
+            .map(|w| w.swap_load_s).sum::<f64>()
+    };
+    assert!(load(&cc) > load(&nocc),
+            "CC must pay more load seconds than No-CC ({} vs {})",
+            load(&cc), load(&nocc));
+    let nocc_tr = nocc.trace.as_ref().unwrap();
+    assert!(nocc_tr.waterfalls.iter()
+            .all(|w| w.swap_crypto_exposed_s == 0.0
+                 && w.swap_bridge_s == 0.0),
+            "No-CC rows must carry no CC attribution");
+    // the coherent profile moves the whole tax into the bridge slice
+    let (_, gh) = run_des(&traced_cfg("cc", Some("gh200-coherent"), 0));
+    let gh_tr = gh.trace.as_ref().unwrap();
+    assert!(gh_tr.waterfalls.iter().any(|w| w.swap_bridge_s > 0.0),
+            "coherent cells must attribute bridge seconds");
+    assert!(gh_tr.waterfalls.iter()
+            .all(|w| w.swap_crypto_exposed_s == 0.0),
+            "coherent memory prices no chunk crypto");
+}
+
+/// The on-disk artifacts: the Chrome trace JSON parses, carries the
+/// schema version, label, and device + class lanes; the waterfall CSV
+/// satisfies the identity when re-read from the file.
+#[test]
+fn trace_artifacts_land_on_disk_and_validate() {
+    let dir = std::env::temp_dir().join("sincere_obs_trace_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = traced_cfg("cc", None, 0);
+    cfg.results_dir = Some(dir.clone());
+    let (summary, _) = run_des(&cfg);
+    assert!(summary.completed > 0);
+
+    let label = &cfg.label;
+    let text = std::fs::read_to_string(
+        dir.join(format!("{label}_trace.json"))).unwrap();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("label").and_then(|v| v.as_str()),
+               Some(label.as_str()));
+    assert_eq!(j.get("schemaVersion").and_then(|v| v.as_u64()),
+               Some(sincere::obs::TRACE_SCHEMA_VERSION as u64));
+    let events = j.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+    assert!(!events.is_empty(), "empty trace");
+    let tids: Vec<f64> = events.iter()
+        .filter_map(|e| e.get("tid").and_then(|v| v.as_f64()))
+        .collect();
+    assert!(tids.contains(&0.0), "no device lane");
+    assert!(tids.contains(&(sincere::obs::CLASS_TID_BASE as f64)),
+            "no request lane");
+
+    let t = CsvTable::read(
+        &dir.join(format!("{label}_waterfall.csv"))).unwrap();
+    assert_eq!(t.rows.len() as u64, summary.completed);
+    let cols: Vec<Vec<f64>> = ["queue_wait_s", "swap_unload_s",
+                               "swap_load_s", "exec_s", "io_s",
+                               "latency_s"].iter()
+        .map(|c| t.f64_col(c).unwrap()).collect();
+    for i in 0..t.rows.len() {
+        let phases: f64 = cols[..5].iter().map(|c| c[i]).sum();
+        // 9-decimal CSV rounding: 5 columns x 5e-10 each, plus slack
+        assert!((phases - cols[5][i]).abs() <= 5e-9,
+                "row {i}: phases {phases} != latency {}", cols[5][i]);
+    }
+
+    // trace off writes nothing: same cell, tracing disabled
+    let mut off = traced_cfg("cc", None, 0);
+    off.set("trace", "off").unwrap();
+    off.label = "off_probe".into();
+    off.results_dir = Some(dir.clone());
+    run_des(&off);
+    assert!(!dir.join("off_probe_trace.json").exists()
+            && !dir.join("off_probe_waterfall.csv").exists(),
+            "trace-off run wrote trace artifacts");
+}
