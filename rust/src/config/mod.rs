@@ -71,6 +71,12 @@ pub struct RunConfig {
     pub device_profiles: Vec<String>,
     /// Fleet placement policy, see `coordinator::placement_names`.
     pub placement: String,
+    /// Pipeline-parallel stage count: shard every model's layers over
+    /// groups of N consecutive fleet devices, with per-microbatch
+    /// activation tensors priced per inter-stage link (sealed framing
+    /// on CC links, plain on No-CC/coherent ones).  1 = off — the
+    /// single-stage path is byte-identical to pre-pp builds.
+    pub pp_stages: usize,
 
     /// Predictive model prefetch: while a batch executes, decrypt-ahead
     /// the strategy's next-model hint into a staging buffer so the
@@ -170,6 +176,7 @@ impl Default for RunConfig {
             device_bw_scale: Vec::new(),
             device_profiles: Vec::new(),
             placement: "affinity".into(),
+            pp_stages: 1,
             prefetch: false,
             data_path: false,
             data_tokens_in: None,
@@ -266,6 +273,10 @@ impl RunConfig {
                 self.device_profiles = names;
             }
             "placement" => self.placement = value.to_string(),
+            "pp-stages" => {
+                self.pp_stages = value.parse().map_err(
+                    |_| anyhow::anyhow!("bad --pp-stages {value:?}"))?;
+            }
             "pipeline-depth" => {
                 self.gpu.pipeline_depth = value.parse().map_err(
                     |_| anyhow::anyhow!("bad --pipeline-depth {value:?}"))?;
@@ -362,6 +373,9 @@ impl RunConfig {
             base.push_str(&format!("_prof-{}",
                                    self.device_profiles.join("+")));
         }
+        if self.pp_stages > 1 {
+            base.push_str(&format!("_pp{}", self.pp_stages));
+        }
         if self.gpu.pipeline_depth >= 2 {
             base.push_str(&format!("_pipe{}", self.gpu.pipeline_depth));
         }
@@ -412,8 +426,14 @@ impl RunConfig {
             g.mode = self.mode;
             // the named profile rewrites link/HBM/pricing knobs but
             // never the mode (its bundled mode was folded into
-            // `self.mode` at parse time)
-            if let Some(name) = self.device_profiles.get(i) {
+            // `self.mode` at parse time); a single name broadcasts
+            // to the whole fleet (homogeneous-generation shorthand)
+            let prof = if self.device_profiles.len() == 1 {
+                self.device_profiles.first()
+            } else {
+                self.device_profiles.get(i)
+            };
+            if let Some(name) = prof {
                 if let Ok(p) = crate::gpu::profile::profile_by_name(name) {
                     g = p.apply(&g);
                 }
@@ -452,15 +472,36 @@ impl RunConfig {
         for (name, len) in [("device-modes", self.device_modes.len()),
                             ("device-hbm-mb", self.device_hbm_mb.len()),
                             ("device-bw-scale",
-                             self.device_bw_scale.len()),
-                            ("device-profiles",
-                             self.device_profiles.len())] {
+                             self.device_bw_scale.len())] {
             anyhow::ensure!(len == 0 || len == self.devices,
                             "--{name} must list one entry per device \
                              ({} given, {} devices)", len, self.devices);
         }
+        // profiles additionally allow a single name, broadcast to the
+        // whole fleet (fleet_configs applies it to every device)
+        let np = self.device_profiles.len();
+        anyhow::ensure!(np <= 1 || np == self.devices,
+                        "--device-profiles must list one profile per \
+                         device, or a single fleet-wide name ({np} \
+                         given, {} devices)", self.devices);
         for p in &self.device_profiles {
             crate::gpu::profile::profile_by_name(p)?;
+        }
+        anyhow::ensure!(self.pp_stages >= 1, "pp-stages must be >= 1");
+        if self.pp_stages > 1 {
+            anyhow::ensure!(
+                self.devices % self.pp_stages == 0,
+                "--pp-stages {} must evenly divide --devices {} (each \
+                 stage group is a contiguous run of devices)",
+                self.pp_stages, self.devices);
+            anyhow::ensure!(
+                self.placement == "pipeline-parallel",
+                "--pp-stages > 1 requires --placement \
+                 pipeline-parallel (shard groups stage atomically)");
+            anyhow::ensure!(
+                !self.prefetch,
+                "--prefetch is not shard-aware; it cannot be combined \
+                 with --pp-stages > 1");
         }
         if let Some(s) = self.lab_seeds {
             anyhow::ensure!(s >= 1, "lab-seeds must be >= 1");
@@ -642,11 +683,19 @@ mod tests {
         let mut c = RunConfig::default();
         c.set("device-profiles", "custom").unwrap();
         assert_eq!(c.mode, CcMode::Off, "custom bundles no mode");
-        // one profile per device, like the other fleet lists
+        // a single profile broadcasts fleet-wide; partial lists error
         let mut c = RunConfig::default();
         c.devices = 2;
-        c.device_profiles = vec!["h100-cc".into()];
-        assert!(c.validate().is_err(), "1 profile for 2 devices");
+        c.device_profiles = vec!["gh200-coherent".into()];
+        c.validate().unwrap();
+        let fleet = c.fleet_configs();
+        assert_eq!(fleet.len(), 2);
+        assert!(fleet.iter().all(|g| g.uma),
+                "one profile name applies to every device");
+        let mut c = RunConfig::default();
+        c.devices = 3;
+        c.device_profiles = vec!["h100-cc".into(), "h100-cc".into()];
+        assert!(c.validate().is_err(), "2 profiles for 3 devices");
         let mut c = RunConfig::default();
         c.device_profiles = vec!["a100".into()];
         assert!(c.validate().is_err(), "validate re-checks the names");
@@ -797,6 +846,38 @@ mod tests {
         assert!(c.set("lab-seeds", "-1").is_err());
         c.lab_seeds = Some(0);
         assert!(c.validate().is_err(), "0 seed replicas is meaningless");
+    }
+
+    #[test]
+    fn pp_stage_flags() {
+        let mut c = RunConfig::default();
+        assert_eq!(c.pp_stages, 1, "pp must default off");
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18");
+        c.set("pp-stages", "1").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18",
+                   "pp-stages 1 leaves every pre-existing label \
+                    untouched");
+        c.set("devices", "4").unwrap();
+        c.set("pp-stages", "2").unwrap();
+        assert!(c.validate().is_err(),
+                "pp > 1 needs the pipeline-parallel placement");
+        c.set("placement", "pipeline-parallel").unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.cell_label(),
+                   "no-cc_gamma_select-batch+timer_sla18_dev4_pp2");
+        c.set("pp-stages", "3").unwrap();
+        assert!(c.validate().is_err(), "3 stages cannot tile 4 devices");
+        c.set("pp-stages", "4").unwrap();
+        c.set("prefetch", "on").unwrap();
+        assert!(c.validate().is_err(), "prefetch is not shard-aware");
+        c.set("prefetch", "off").unwrap();
+        c.validate().unwrap();
+        assert!(c.set("pp-stages", "two").is_err());
+        c.pp_stages = 0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

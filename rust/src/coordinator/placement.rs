@@ -58,6 +58,10 @@ fn make_cc_aware() -> Box<dyn Placement> {
     Box::new(CcAware)
 }
 
+fn make_pipeline_parallel() -> Box<dyn Placement> {
+    Box::new(PipelineParallel)
+}
+
 /// The policy table — drives `placement_by_name`, `--help`, and the
 /// unknown-name error, so the three cannot drift.
 pub const PLACEMENTS: &[PlacementEntry] = &[
@@ -82,6 +86,13 @@ pub const PLACEMENTS: &[PlacementEntry] = &[
         blurb: "prefer No-CC devices when the head request's SLA \
                 headroom is tight",
         make: make_cc_aware,
+    },
+    PlacementEntry {
+        name: "pipeline-parallel",
+        blurb: "route to stage-group leads; the model's layer shards \
+                stage atomically across the lead's group \
+                (--pp-stages)",
+        make: make_pipeline_parallel,
     },
 ];
 
@@ -212,6 +223,26 @@ impl Placement for CcAware {
     }
 }
 
+/// Pipeline-parallel routing: the engine pre-filters `free` to stage
+/// *leads* whose whole group is idle (`StageTopology::leads`), so the
+/// policy itself is the affinity step over that reduced set — sticky
+/// to the lead whose group already holds the model's shards, else the
+/// least-loaded lead.  With `--pp-stages 1` every device is its own
+/// lead and this is exactly `affinity`, which is what keeps stage-1
+/// runs byte-identical to pp-free ones.
+pub struct PipelineParallel;
+
+impl Placement for PipelineParallel {
+    fn name(&self) -> &'static str {
+        "pipeline-parallel"
+    }
+
+    fn place(&self, ctx: &SchedContext, view: &ModelView, free: &[usize])
+             -> usize {
+        sticky_or_least_loaded(ctx, view.model, free)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -315,6 +346,21 @@ mod tests {
         let c = ctx(vec![device(0, CcMode::On, None, 1.0),
                          device(1, CcMode::On, None, 0.0)]);
         assert_eq!(CcAware.place(&c, &view(A, 5.0), &[0, 1]), 1);
+    }
+
+    #[test]
+    fn pipeline_parallel_is_sticky_to_the_group_lead() {
+        // 2-stage x 4-device fleet: the engine passes only leads 0
+        // and 2 in `free`, and residency mirrors across each group
+        let c = ctx(vec![device(0, CcMode::On, None, 5.0),
+                         device(1, CcMode::On, None, 5.0),
+                         device(2, CcMode::On, Some(A), 9.0),
+                         device(3, CcMode::On, Some(A), 9.0)]);
+        let p = PipelineParallel;
+        assert_eq!(p.place(&c, &view(A, 0.1), &[0, 2]), 2,
+                   "sticky to the lead whose group holds the shards");
+        assert_eq!(p.place(&c, &view(B, 0.1), &[0, 2]), 0,
+                   "unsharded model goes to the least-loaded lead");
     }
 
     #[test]

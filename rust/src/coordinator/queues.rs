@@ -20,6 +20,19 @@ use std::sync::Arc;
 use crate::coordinator::request::Request;
 use crate::runtime::{ModelId, ModelTable};
 
+/// The one expiry comparison: a request is expired iff `now` is
+/// strictly past its absolute deadline.  Both the uniform-SLA path
+/// (`expire`, deadline = arrival + sla) and the per-class path
+/// (`expire_by`, caller-supplied deadline) route through this, so a
+/// class deadline of exactly 1.0× the SLA is bit-for-bit identical to
+/// the uniform path even at FP boundary values — the two used to
+/// disagree (`now - arrival > sla` vs `now > deadline`) whenever
+/// `arrival + sla` rounds differently from the subtraction.
+#[inline]
+pub fn past_deadline(now_s: f64, deadline_s: f64) -> bool {
+    now_s > deadline_s
+}
+
 /// One FIFO per interned model, arrival order preserved within each
 /// queue.
 #[derive(Debug)]
@@ -123,7 +136,8 @@ impl ModelQueues {
                        out: &mut Vec<Request>) {
         for q in self.queues.iter_mut() {
             // FIFO per queue: expired requests are a prefix
-            while q.front().map(|r| now_s - r.arrival_s > sla_s)
+            while q.front()
+                .map(|r| past_deadline(now_s, r.arrival_s + sla_s))
                 .unwrap_or(false)
             {
                 out.push(q.pop_front().unwrap());
@@ -161,7 +175,7 @@ impl ModelQueues {
         for q in self.queues.iter_mut() {
             for _ in 0..q.len() {
                 let r = q.pop_front().unwrap();
-                if now_s > deadline_at(&r) {
+                if past_deadline(now_s, deadline_at(&r)) {
                     out.push(r);
                 } else {
                     q.push_back(r);
@@ -173,11 +187,22 @@ impl ModelQueues {
     /// Queued requests per tenant class (admission's `class-weighted`
     /// policy input).  Scans every queue — cheap at sim queue depths
     /// and identical in DES and real-virtual runs.
+    /// A class byte outside `0..N_CLASSES` is corrupted state, never a
+    /// value this crate mints — fail loudly in debug/test builds
+    /// instead of silently wrapping it onto some other tenant's count;
+    /// release builds drop the row rather than miscount.
     pub fn class_counts(&self) -> [u64; crate::tenancy::N_CLASSES] {
         let mut counts = [0u64; crate::tenancy::N_CLASSES];
         for q in &self.queues {
             for r in q {
-                counts[r.class as usize % crate::tenancy::N_CLASSES] += 1;
+                debug_assert!(
+                    (r.class as usize) < crate::tenancy::N_CLASSES,
+                    "corrupted tenant class {} on request {}",
+                    r.class, r.id);
+                match r.class as usize {
+                    c if c < crate::tenancy::N_CLASSES => counts[c] += 1,
+                    _ => {}
+                }
             }
         }
         counts
@@ -365,6 +390,51 @@ mod tests {
         assert_eq!(q.class_counts(), [1, 1, 2]);
         q.pop_n(B, 2);
         assert_eq!(q.class_counts(), [1, 1, 0]);
+    }
+
+    #[test]
+    fn expire_by_at_uniform_deadline_matches_expire_exactly() {
+        // The unification contract: a per-class deadline of exactly
+        // 1.0× the SLA must agree with the uniform path at FP
+        // boundary values where `now - arrival > sla` and
+        // `now > arrival + sla` round differently.  0.1 + 0.2 is the
+        // canonical case: it evaluates to 0.30000000000000004, while
+        // 0.3 - 0.1 is 0.19999999999999998 — under the old relative
+        // comparison the two paths disagreed at now == arrival + sla.
+        let cases = [
+            (0.1, 0.2),            // arrival 0.1, sla 0.2
+            (0.3, 0.6),            // 0.3 + 0.6 != 0.9 in binary
+            (1e16, 1.0),           // sla below arrival's ulp
+            (5.0, 6.0),            // exact in binary (sanity)
+        ];
+        for &(arrival, sla) in &cases {
+            let boundary = arrival + sla;
+            for &now in &[boundary, boundary * (1.0 + 1e-15),
+                          boundary - sla * 1e-9] {
+                let mut qa = ModelQueues::new(table());
+                qa.push(req(1, A, arrival));
+                let mut qb = ModelQueues::new(table());
+                qb.push(req(1, A, arrival));
+                let uniform = qa.expire(now, sla).len();
+                let by = qb.expire_by(now, |r: &Request| {
+                    r.arrival_s + sla
+                }).len();
+                assert_eq!(uniform, by,
+                           "paths disagree at arrival={arrival} \
+                            sla={sla} now={now}");
+            }
+        }
+    }
+
+    #[test]
+    #[cfg_attr(not(debug_assertions), ignore)]
+    #[should_panic(expected = "corrupted tenant class")]
+    fn class_counts_panics_on_corrupted_class_in_debug() {
+        let mut q = ModelQueues::new(table());
+        let mut r = req(1, A, 0.0);
+        r.class = crate::tenancy::N_CLASSES as u8; // out of range
+        q.push(r);
+        q.class_counts();
     }
 
     #[test]

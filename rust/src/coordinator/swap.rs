@@ -168,6 +168,49 @@ impl SwapManager {
         Ok(report)
     }
 
+    /// Make a `share`-sized layer shard of `model` resident (pipeline-
+    /// parallel stages).  Identical residency state machine to
+    /// [`SwapManager::ensure_resident`], but the DMA moves only the
+    /// shard's slice of the weight blob.  A staged buffer is dropped as
+    /// a wrong prediction (prefetch is validated off under pp, so this
+    /// is defensive).
+    pub fn ensure_resident_shard(&mut self, gpu: &mut SimGpu,
+                                 registry: &Registry, model: &str,
+                                 share: f64) -> anyhow::Result<SwapReport> {
+        if let Some((cur, _)) = &self.resident {
+            if cur == model {
+                return Ok(SwapReport::default());
+            }
+        }
+        let mut report = SwapReport { swapped: true, ..Default::default() };
+        if let Some((_, buf)) = self.resident.take() {
+            report.unload_s = gpu.unload(buf).as_secs_f64();
+            self.stats.total_unload_s += report.unload_s;
+        }
+        if let Some((_, buf)) = self.staged.take() {
+            gpu.free(buf);
+            report.dropped_staged = true;
+            self.stats.dropped_prefetches += 1;
+        }
+        let entry = registry.entry(model)?;
+        let raw = &entry.weights.raw;
+        let take = ((raw.len() as f64 * share).ceil() as usize)
+            .clamp(1, raw.len());
+        let (buf, rep) = gpu.upload(&raw[..take])
+            .map_err(|e| anyhow::anyhow!("loading {model} shard: {e}"))?;
+        report.load_s = rep.elapsed.as_secs_f64();
+        report.crypto_total_s = rep.crypto_total.as_secs_f64();
+        report.crypto_exposed_s = rep.crypto_exposed.as_secs_f64();
+        self.resident = Some((model.to_string(), buf));
+        self.stats.swap_count += 1;
+        self.stats.total_load_s += report.load_s;
+        self.stats.total_crypto_s += report.crypto_total_s;
+        self.stats.total_crypto_exposed_s += report.crypto_exposed_s;
+        self.stats.load_samples.push((self.table.require(model)?,
+                                      report.load_s));
+        Ok(report)
+    }
+
     /// Decrypt-ahead: stage `model` in a second device buffer so a
     /// later swap can promote it without a DMA.  Returns `Ok(None)`
     /// when staging is pointless (already resident/staged) or the

@@ -92,6 +92,53 @@ pub struct DataPathOutcome {
     pub wire_bytes: u64,
 }
 
+/// Inter-stage activation accounting of one pipeline-parallel batch,
+/// aggregated over every link crossing of every microbatch.  Zeroes at
+/// stage count 1 (no links).  `io_s` is already folded into
+/// `BatchOutcome::io_s`; the crypto terms are attribution slices
+/// *within* it, never added on top — same contract as
+/// [`DataPathOutcome`].
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ActivationOutcome {
+    pub io_s: f64,
+    /// Total seal/open work on CC links (0 on plain/coherent links).
+    pub crypto_total_s: f64,
+    /// Crypto time not hidden behind the link pipeline.
+    pub crypto_exposed_s: f64,
+    /// Raw activation bytes moved between stages.
+    pub bytes: u64,
+    /// Bytes on the wire including per-chunk `nonce‖ct‖tag` framing
+    /// on sealed links (== `bytes` on plain/coherent links).
+    pub wire_bytes: u64,
+}
+
+/// Pipeline-parallel pricing of one batch (`--pp-stages` > 1 only;
+/// `None` in `BatchOutcome` otherwise — the single-stage path carries
+/// no trace of this struct).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PipelineBatch {
+    /// Stage count the batch was priced at.
+    pub stages: usize,
+    /// Compute makespan of the microbatched pipeline — what the batch
+    /// `exec_s` becomes (`Σ τ_i + (M−1) × max τ_i`; == the plain
+    /// `exec_s` at one stage).
+    pub makespan_s: f64,
+    /// Pipeline-fill latency of the first microbatch: one traversal
+    /// of every stage's compute slice plus every link — the exec-side
+    /// component of TTFT.
+    pub first_out_s: f64,
+    /// Device-seconds the stage group idled due to stage imbalance:
+    /// `stages × makespan − exec_total` (0 at one stage).
+    pub bubble_s: f64,
+    /// Compute seconds per stage over the whole batch
+    /// (`exec_total × share_i`), in stage order — the per-stage spans.
+    pub per_stage_exec_s: Vec<f64>,
+    /// Inter-stage activation accounting.
+    pub activation: ActivationOutcome,
+    /// Decode tokens the batch represents (throughput numerator).
+    pub tokens: u64,
+}
+
 /// One executed batch, in the run's time domain.
 ///
 /// The batch's requests are not carried here: `execute_batch` drains
@@ -113,6 +160,8 @@ pub struct BatchOutcome {
     pub io_s: f64,
     /// Data-path accounting for this batch (zeroes when off).
     pub data: DataPathOutcome,
+    /// Pipeline-parallel pricing (`None` = single-stage batch).
+    pub pp: Option<PipelineBatch>,
 }
 
 /// One modeled residency change, as a virtual-cost backend observed it
@@ -224,6 +273,186 @@ pub(crate) fn price_swap(mc: &ModelCosts, gpu: &GpuConfig, ev: SwapEvent,
         stats.load_samples.push((ev.model, out.load_s));
     }
     out
+}
+
+/// Footprint share of pipeline stage `stage` under a contiguous layer
+/// split: over `L = max(n_layers, stages)` layers, the first
+/// `L % stages` stages hold one extra layer.  Shares sum to exactly
+/// 1.0 in rational terms and `stage_share(_, 1, 0) == 1.0` exactly.
+pub(crate) fn stage_share(n_layers: usize, stages: usize,
+                          stage: usize) -> f64 {
+    let l = n_layers.max(stages).max(1);
+    let base = l / stages;
+    let extra = l % stages;
+    let slice = base + usize::from(stage < extra);
+    slice as f64 / l as f64
+}
+
+/// All stage shares for a model, in stage order.
+pub(crate) fn stage_shares(n_layers: usize, stages: usize) -> Vec<f64> {
+    (0..stages).map(|i| stage_share(n_layers, stages, i)).collect()
+}
+
+/// [`swap_load_s`] for one layer shard holding `share` of the model:
+/// the DMA part scales with the shard's bytes, while the per-swap
+/// bridge/attestation residual is a per-*device* constant every stage
+/// pays in full.  `share == 1.0` takes the untouched full-model path,
+/// so single-stage pricing stays bit-identical.
+pub(crate) fn swap_load_s_shard(mc: &ModelCosts, gpu: &GpuConfig,
+                                share: f64) -> f64 {
+    if share == 1.0 {
+        return swap_load_s(mc, gpu);
+    }
+    let dma = swap_load_s(mc, gpu) - bridge_s(gpu);
+    share * dma + bridge_s(gpu)
+}
+
+/// The (total, exposed) load-crypto split for one shard — crypto work
+/// is proportional to the sealed bytes, i.e. to `share`.
+fn swap_load_crypto_shard(mc: &ModelCosts, gpu: &GpuConfig,
+                          share: f64) -> (f64, f64) {
+    let (ct, ce) = swap_load_crypto(mc, gpu);
+    if share == 1.0 {
+        (ct, ce)
+    } else {
+        (share * ct, share * ce)
+    }
+}
+
+/// Price one stage's shard swap — [`price_swap`] scaled to the
+/// shard's footprint share.  Unload scales with the shard too; the
+/// bridge residual stays per-stage-constant (each device attests its
+/// own crossing).
+pub(crate) fn price_swap_shard(mc: &ModelCosts, gpu: &GpuConfig,
+                               share: f64, ev: SwapEvent,
+                               stats: &mut SwapStats) -> SwapOutcome {
+    let mut out = SwapOutcome {
+        swapped: true,
+        promoted: ev.promoted,
+        dropped_staged: ev.dropped_staged,
+        ..Default::default()
+    };
+    if ev.had_resident {
+        out.unload_s = if share == 1.0 { mc.unload_s }
+                       else { share * mc.unload_s };
+    }
+    stats.swap_count += 1;
+    stats.total_unload_s += out.unload_s;
+    if ev.promoted {
+        stats.promoted_count += 1;
+        stats.load_samples.push((ev.model, 0.0));
+    } else {
+        if ev.dropped_staged {
+            stats.dropped_prefetches += 1;
+        }
+        out.load_s = swap_load_s_shard(mc, gpu, share);
+        let (ct, ce) = swap_load_crypto_shard(mc, gpu, share);
+        out.crypto_total_s = ct;
+        out.crypto_exposed_s = ce;
+        out.bridge_s = bridge_s(gpu);
+        stats.total_load_s += out.load_s;
+        stats.total_crypto_s += ct;
+        stats.total_crypto_exposed_s += ce;
+        stats.total_bridge_s += bridge_s(gpu);
+        stats.load_samples.push((ev.model, out.load_s));
+    }
+    out
+}
+
+/// Price a whole shard group's swap: every stage is priced (and its
+/// device's stats charged) unconditionally — all shards stage
+/// atomically or the error propagates before any residency changes —
+/// and the returned outcome is the *critical* stage's (stages swap on
+/// their own devices in parallel, so the group is ready when the
+/// slowest `unload + load` finishes; ties keep the first stage).
+/// `stats` holds the group's per-device stats in stage order.
+pub(crate) fn price_swap_group(mc: &ModelCosts, gpus: &[GpuConfig],
+                               shares: &[f64], ev: SwapEvent,
+                               stats: &mut [SwapStats]) -> SwapOutcome {
+    debug_assert!(gpus.len() == shares.len()
+                  && gpus.len() == stats.len());
+    let mut crit: Option<SwapOutcome> = None;
+    for (i, gpu) in gpus.iter().enumerate() {
+        let out = price_swap_shard(
+            mc, gpu, shares[i],
+            SwapEvent { model: ev.model,
+                        had_resident: ev.had_resident,
+                        promoted: ev.promoted,
+                        dropped_staged: ev.dropped_staged },
+            &mut stats[i]);
+        let worse = crit.map_or(true, |c| {
+            out.unload_s + out.load_s > c.unload_s + c.load_s
+        });
+        if worse {
+            crit = Some(out);
+        }
+    }
+    crit.unwrap_or_default()
+}
+
+/// The group-level load estimate matching [`price_swap_group`]: the
+/// slowest stage's shard load.
+pub(crate) fn est_load_s_group(mc: &ModelCosts, gpus: &[GpuConfig],
+                               shares: &[f64]) -> f64 {
+    gpus.iter().zip(shares)
+        .map(|(g, &s)| swap_load_s_shard(mc, g, s))
+        .fold(0.0, f64::max)
+}
+
+/// Price one pipeline-parallel batch: `rows` microbatches of one row
+/// each flow through `shares.len()` stages whose compute slices are
+/// `exec_total × share_i`, with each microbatch's activation tensor
+/// (`d_model × 4` bytes — one row's hidden state) priced per link
+/// into the downstream stage's device (`gpus[1..]`; sealed on CC
+/// links, plain on No-CC/coherent — see
+/// `gpu::profile::price_activation_link`).
+///
+/// The compute makespan of the microbatched pipeline is
+/// `Σ τ_i + (M−1) × max τ_i` with `τ_i = exec_total × share_i / M` —
+/// fill the pipe once, then the slowest stage paces every remaining
+/// microbatch.  At one stage this collapses to `exec_total` exactly
+/// and the bubble is zero.
+pub(crate) fn price_pipeline(exec_total: f64, d_model: usize,
+                             rows: usize, decode_len: usize,
+                             shares: &[f64], gpus: &[GpuConfig])
+                             -> PipelineBatch {
+    let stages = shares.len().max(1);
+    let m = rows.max(1);
+    let taus: Vec<f64> =
+        shares.iter().map(|s| exec_total * s / m as f64).collect();
+    let tau_sum: f64 = taus.iter().sum();
+    let tau_max = taus.iter().fold(0.0, |a: f64, &b| a.max(b));
+    // one stage has no pipeline: the makespan IS the exec time,
+    // bit-for-bit (M × (exec/M) would round)
+    let makespan = if stages == 1 { exec_total }
+                   else { tau_sum + (m - 1) as f64 * tau_max };
+    let bubble = (stages as f64 * makespan - exec_total).max(0.0);
+
+    // per-microbatch activation over each inter-stage link
+    let act_bytes = d_model * 4;
+    let mut act = ActivationOutcome::default();
+    let mut link_s_sum = 0.0;
+    for gpu in &gpus[1..] {
+        let (io_s, ct, ce, wire) =
+            crate::gpu::profile::price_activation_link(gpu, act_bytes);
+        link_s_sum += io_s;
+        act.io_s += io_s * m as f64;
+        act.crypto_total_s += ct * m as f64;
+        act.crypto_exposed_s += ce * m as f64;
+        act.bytes += act_bytes as u64 * m as u64;
+        act.wire_bytes += wire * m as u64;
+    }
+
+    PipelineBatch {
+        stages,
+        makespan_s: makespan,
+        first_out_s: tau_sum + link_s_sum,
+        bubble_s: bubble,
+        per_stage_exec_s:
+            shares.iter().map(|s| exec_total * s).collect(),
+        activation: act,
+        tokens: rows as u64 * decode_len as u64,
+    }
 }
 
 /// Price one staging upload (a load without an unload) — the prefetch
@@ -400,4 +629,78 @@ pub trait ExecBackend {
 
     /// End of run: release residency and device state.
     fn teardown(&mut self);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_shares_cover_the_model() {
+        // 32 layers over 4 stages: even split
+        assert_eq!(stage_shares(32, 4), vec![0.25; 4]);
+        // 10 layers over 4 stages: first two stages take the extras
+        let s = stage_shares(10, 4);
+        assert_eq!(s, vec![0.3, 0.3, 0.2, 0.2]);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // fewer layers than stages: pad to one layer per stage
+        let s = stage_shares(2, 4);
+        assert!((s.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(s.iter().all(|&x| x > 0.0));
+        // single stage is exactly the whole model
+        assert_eq!(stage_share(32, 1, 0), 1.0);
+    }
+
+    #[test]
+    fn single_stage_pipeline_collapses_exactly() {
+        let gpu = GpuConfig::default();
+        let pp = price_pipeline(0.42, 4096, 7, 128, &[1.0],
+                                std::slice::from_ref(&gpu));
+        assert_eq!(pp.makespan_s, 0.42,
+                   "one stage must reproduce exec_s bit-for-bit");
+        assert_eq!(pp.bubble_s, 0.0);
+        assert_eq!(pp.activation, ActivationOutcome::default(),
+                   "no links, no activation accounting");
+        assert_eq!(pp.per_stage_exec_s, vec![0.42]);
+    }
+
+    #[test]
+    fn pipeline_makespan_and_bubble() {
+        let gpus = vec![GpuConfig::default(), GpuConfig::default()];
+        // 2 even stages, 4 microbatches: tau = 1.0*0.5/4 = 0.125;
+        // makespan = 0.25 + 3*0.125 = 0.625; bubble = 2*0.625 - 1.0
+        let pp = price_pipeline(1.0, 4096, 4, 128, &[0.5, 0.5], &gpus);
+        assert!((pp.makespan_s - 0.625).abs() < 1e-12);
+        assert!((pp.bubble_s - 0.25).abs() < 1e-12);
+        assert!(pp.activation.io_s > 0.0, "one link priced 4 times");
+        assert_eq!(pp.activation.bytes, 4096 * 4 * 4);
+        assert_eq!(pp.tokens, 4 * 128);
+        // imbalance costs more: the slow stage paces the pipe
+        let skew = price_pipeline(1.0, 4096, 4, 128, &[0.75, 0.25],
+                                  &gpus);
+        assert!(skew.makespan_s > pp.makespan_s);
+        assert!(skew.bubble_s > pp.bubble_s);
+        // first-out beats the full makespan once M > 1
+        assert!(pp.first_out_s < pp.makespan_s + pp.activation.io_s);
+    }
+
+    #[test]
+    fn sealed_links_tax_the_activation_path() {
+        let plain = GpuConfig::default();
+        let cc = GpuConfig { mode: CcMode::On, ..GpuConfig::default() };
+        let shares = [0.5, 0.5];
+        let a = price_pipeline(1.0, 4096, 4, 128, &shares,
+                               &[plain.clone(), plain.clone()]);
+        let b = price_pipeline(1.0, 4096, 4, 128, &shares,
+                               &[cc.clone(), cc.clone()]);
+        assert!(b.activation.io_s > a.activation.io_s,
+                "sealed link must cost more than plain");
+        assert!(b.activation.crypto_total_s > 0.0);
+        assert_eq!(a.activation.crypto_total_s, 0.0);
+        assert!(b.activation.wire_bytes > b.activation.bytes,
+                "AEAD framing inflates sealed wire bytes");
+        assert_eq!(a.activation.wire_bytes, a.activation.bytes);
+        assert_eq!(a.makespan_s, b.makespan_s,
+                   "links never change the compute makespan");
+    }
 }

@@ -50,8 +50,10 @@ use crate::config::RunConfig;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::SwapStats;
-use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
-                             swap_load_s, BatchOutcome, DataPathOutcome,
+use crate::engine::backend::{est_load_s_group, price_data_path,
+                             price_pipeline, price_prefetch, price_swap,
+                             price_swap_group, stage_shares, swap_load_s,
+                             BatchOutcome, DataPathOutcome,
                              DeviceSnapshot, ExecBackend, PrefetchOutcome,
                              SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
@@ -82,6 +84,10 @@ pub struct DesBackend<'a> {
     /// profile pricing terms) — what swap and per-batch I/O pricing
     /// read, per device.
     fleet: Vec<GpuConfig>,
+    /// Pipeline-parallel stage count (1 = off; devices are tiled into
+    /// groups of this many consecutive ids, each group serving one
+    /// sharded model — see `gpu::fleet::StageTopology`).
+    pp_stages: usize,
     /// CC-priced inference data path (`--data-path`).
     data_path: bool,
     /// Priced input tokens per request (None = model `prompt_len`).
@@ -121,6 +127,7 @@ impl<'a> DesBackend<'a> {
             table,
             by_id,
             fleet,
+            pp_stages: cfg.pp_stages.max(1),
             data_path: cfg.data_path,
             data_tokens_in: cfg.data_tokens_in,
             data_tokens_out: cfg.data_tokens_out,
@@ -191,6 +198,20 @@ impl ExecBackend for DesBackend<'_> {
         if self.staged[device] == Some(model) {
             return 0.0; // a staged model promotes for free
         }
+        if self.pp_stages > 1 {
+            // estimate for `device`'s stage group (callers may name a
+            // non-lead member): ready when the slowest shard load
+            // finishes
+            let device = device - device % self.pp_stages;
+            let per = self.by_id.get(model.index());
+            let (Some(mc), Some(spec)) =
+                (per.and_then(|p| p.mc), per.and_then(|p| p.spec))
+            else { return 0.0 };
+            let shares = stage_shares(spec.n_layers, self.pp_stages);
+            return est_load_s_group(
+                mc, &self.fleet[device..device + self.pp_stages],
+                &shares);
+        }
         self.by_id.get(model.index()).and_then(|p| p.mc)
             .map(|mc| swap_load_s(mc, &self.fleet[device]))
             .unwrap_or(0.0)
@@ -213,6 +234,26 @@ impl ExecBackend for DesBackend<'_> {
         }
         let mc = self.mc(model)?;
         let had_resident = self.resident[device].is_some();
+        if self.pp_stages > 1 {
+            // shard-group swap: every stage of the lead's group is
+            // priced (and charged to its own device) before residency
+            // flips — all shards stage atomically or none, so a
+            // partially-resident group can never exist to deadlock
+            // the admission gate.  Prefetch is validated off under
+            // pp, so there is no staged slot to promote or drop.
+            let spec = self.spec(model)?;
+            let shares = stage_shares(spec.n_layers, self.pp_stages);
+            let group = device..device + self.pp_stages;
+            let out = price_swap_group(
+                mc, &self.fleet[group.clone()], &shares,
+                SwapEvent { model, had_resident, promoted: false,
+                            dropped_staged: false },
+                &mut self.stats[group.clone()]);
+            for d in group {
+                self.resident[d] = Some(model);
+            }
+            return Ok(out);
+        }
         // staged hit promotes; anything else staged is a wrong
         // prediction and is dropped
         let promoted = self.staged[device] == Some(model);
@@ -271,6 +312,23 @@ impl ExecBackend for DesBackend<'_> {
                  * rows as f64,
              DataPathOutcome::default())
         };
+        if self.pp_stages > 1 {
+            // microbatch the rows through the lead's stage group;
+            // activation tensors cross each inter-stage link
+            let shares = stage_shares(spec.n_layers, self.pp_stages);
+            let pp = price_pipeline(
+                exec_s, spec.d_model, rows, spec.decode_len, &shares,
+                &self.fleet[device..device + self.pp_stages]);
+            return Ok(Some(BatchOutcome {
+                tokens: Vec::new(),
+                artifact_batch,
+                exec_start_s: 0.0,
+                exec_s: pp.makespan_s,
+                io_s: io_s + pp.activation.io_s,
+                data,
+                pp: Some(pp),
+            }));
+        }
         Ok(Some(BatchOutcome {
             tokens: Vec::new(),
             artifact_batch,
@@ -279,6 +337,7 @@ impl ExecBackend for DesBackend<'_> {
             exec_s,
             io_s,
             data,
+            pp: None,
         }))
     }
 

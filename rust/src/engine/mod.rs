@@ -103,6 +103,10 @@ impl<'a> EngineBuilder<'a> {
     /// managers (the paper's measured system).
     pub fn real(mut self, registry: &'a crate::runtime::Registry)
                 -> anyhow::Result<EngineBuilder<'a>> {
+        anyhow::ensure!(self.cfg.pp_stages <= 1,
+                        "--pp-stages shards are priced in virtual time \
+                         only (des / lab / real_virtual); wall-clock \
+                         serve cannot pipeline-parallel");
         if self.cfg.data_path
             && (self.cfg.data_tokens_in.is_some()
                 || self.cfg.data_tokens_out.is_some())
@@ -512,6 +516,25 @@ impl Engine<'_> {
         // system drains its backlog; drain_s is a safety cap, and the
         // reported runtime extends to the last dispatched response.
         let hard_stop_s = cfg.duration_s + cfg.drain_s;
+        // Pipeline-parallel topology: group leads are the only
+        // dispatch targets, and a lead is free only while its whole
+        // group is (shards stage atomically or not at all, so a busy
+        // member means the group is mid-batch).  With stages == 1
+        // every device is its own lead and the free list below is
+        // exactly the legacy one — the byte-identity contract.
+        let topo = crate::gpu::fleet::StageTopology::new(
+            cfg.pp_stages.max(1), n_dev);
+        // pipeline aggregates: stay zero — and keep their summary keys
+        // absent — on single-stage runs
+        let mut pp_ttft_sum = 0.0f64;
+        let mut pp_ttft_n = 0u64;
+        let mut pp_bubble_s = 0.0f64;
+        let mut pp_tokens = 0u64;
+        let mut pp_act_bytes = 0u64;
+        let mut pp_act_wire = 0u64;
+        let mut pp_act_io_s = 0.0f64;
+        let mut pp_act_crypto_s = 0.0f64;
+        let mut pp_act_exposed_s = 0.0f64;
 
         loop {
             // ingest everything due by now; the admission gate sees
@@ -627,7 +650,8 @@ impl Engine<'_> {
             // `Decision` (Copy) plus the resolved device/hint are all
             // that outlive it — no per-tick allocation.
             free.clear();
-            free.extend((0..n_dev).filter(|&d| busy_until[d] <= t));
+            free.extend(topo.leads().filter(|&l| topo.members(l)
+                .all(|d| busy_until[d] <= t)));
             let mut decision = Decision::Wait;
             let mut dev = 0usize;
             let mut hint: Option<ModelId> = None;
@@ -746,12 +770,18 @@ impl Engine<'_> {
                     } else {
                         batch_tail + prefetch_s
                     };
-                    busy_until[dev] = if self.virtual_time {
+                    let free_at = if self.virtual_time {
                         complete_s.max(exec_start_s + prefetch_s)
                     } else {
                         clock.now_s()
                     };
-                    busy_s[dev] += swap_cost + busy_tail;
+                    // the whole stage group worked this batch: every
+                    // member frees when the pipeline drains (a 1-stage
+                    // group is just the device itself)
+                    for d in topo.members(dev) {
+                        busy_until[d] = free_at;
+                        busy_s[d] += swap_cost + busy_tail;
+                    }
                     dispatched[dev] += 1;
                     last_complete_s = last_complete_s.max(complete_s);
                     last_progress_s = clock.now_s();
@@ -770,6 +800,43 @@ impl Engine<'_> {
                         }
                         tr.on_exec(dev, exec_start_s, model, n_rows,
                                    out.exec_s, out.io_s);
+                        // pipeline runs also get one span per non-lead
+                        // stage on the member lanes (the lead lane
+                        // keeps the whole-batch span above); a stage's
+                        // first work begins one microbatch latency
+                        // after its upstream neighbour's
+                        if let Some(pp) = &out.pp {
+                            let m = n_rows.max(1) as f64;
+                            let mut off = 0.0;
+                            for (i, &es) in
+                                pp.per_stage_exec_s.iter().enumerate()
+                            {
+                                if i > 0 {
+                                    tr.on_stage_exec(
+                                        dev + i, exec_start_s + off,
+                                        model, n_rows, es);
+                                }
+                                off += es / m;
+                            }
+                        }
+                    }
+                    // pipeline aggregates: TTFT counts the queue wait,
+                    // the shard swap, and the first microbatch's trip
+                    // through every stage and sealed link
+                    if let Some(pp) = &out.pp {
+                        pp_bubble_s += pp.bubble_s;
+                        pp_tokens += pp.tokens;
+                        pp_act_bytes += pp.activation.bytes;
+                        pp_act_wire += pp.activation.wire_bytes;
+                        pp_act_io_s += pp.activation.io_s;
+                        pp_act_crypto_s += pp.activation.crypto_total_s;
+                        pp_act_exposed_s +=
+                            pp.activation.crypto_exposed_s;
+                        for r in &batch_buf {
+                            pp_ttft_sum += (t - r.arrival_s).max(0.0)
+                                + swap_cost + pp.first_out_s;
+                        }
+                        pp_ttft_n += n_rows as u64;
                     }
                     for r in &batch_buf {
                         let c = CompletedRequest {
@@ -796,7 +863,10 @@ impl Engine<'_> {
                         // swap begins) there
                         if let Some(tr) = recorder.trace.as_mut() {
                             tr.on_request(&c, r.class, met, t, &swap,
-                                          out.exec_s, out.io_s);
+                                          out.exec_s, out.io_s,
+                                          out.pp.as_ref()
+                                              .map(|p| p.activation.io_s)
+                                              .unwrap_or(0.0));
                         }
                         recorder.on_complete(c, met);
                     }
@@ -915,6 +985,27 @@ impl Engine<'_> {
         // untraced summaries stay byte-identical
         summary.phase_totals = recorder.trace.as_ref()
             .map(|tr| tr.phase_totals());
+        // pipeline-parallel block: attached only when the run actually
+        // sharded, so single-stage summaries carry no pp key at all
+        if topo.is_pipelined() {
+            summary.pp_stages = topo.stages();
+            summary.ttft_mean_s = if pp_ttft_n > 0 {
+                pp_ttft_sum / pp_ttft_n as f64
+            } else {
+                0.0
+            };
+            summary.token_throughput_tps = if runtime_s > 0.0 {
+                pp_tokens as f64 / runtime_s
+            } else {
+                0.0
+            };
+            summary.total_bubble_s = pp_bubble_s;
+            summary.activation_bytes = pp_act_bytes;
+            summary.activation_wire_bytes = pp_act_wire;
+            summary.total_activation_io_s = pp_act_io_s;
+            summary.total_activation_crypto_s = pp_act_crypto_s;
+            summary.total_activation_crypto_exposed_s = pp_act_exposed_s;
+        }
         if let Some(dir) = &cfg.results_dir {
             recorder.write_csvs(dir, &cfg.label, &table)?;
             if let Some(tr) = &recorder.trace {

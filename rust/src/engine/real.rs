@@ -28,8 +28,10 @@ use crate::coordinator::batcher;
 use crate::coordinator::queues::ModelQueues;
 use crate::coordinator::request::Request;
 use crate::coordinator::swap::{SwapManager, SwapStats};
-use crate::engine::backend::{price_data_path, price_prefetch, price_swap,
-                             swap_load_s, BatchOutcome, DataPathOutcome,
+use crate::engine::backend::{est_load_s_group, price_data_path,
+                             price_pipeline, price_prefetch, price_swap,
+                             price_swap_group, stage_shares, swap_load_s,
+                             BatchOutcome, DataPathOutcome,
                              DeviceSnapshot, ExecBackend, PrefetchOutcome,
                              SwapEvent, SwapOutcome};
 use crate::engine::clock::Clock;
@@ -50,6 +52,12 @@ pub struct RealBackend<'a> {
     /// Whether CC loads are priced pipelined in virtual-costs mode
     /// (the real DMA engine reads the same `GpuConfig` directly).
     pipelined: bool,
+    /// Pipeline-parallel stage count (1 = off).  Virtual-costs mode
+    /// only — the engine builder refuses wall-clock pp runs.
+    pp_stages: usize,
+    /// Per-device configs, cloned once so group pricing can slice
+    /// them like the DES does (`&fleet_cfgs[lead..lead+stages]`).
+    fleet_cfgs: Vec<crate::gpu::device::GpuConfig>,
     /// CC-priced inference data path (`--data-path`): wall mode
     /// surfaces the measured bounce-crypto of the payload transfers it
     /// already performs; virtual mode prices them via the shared
@@ -70,6 +78,7 @@ impl<'a> RealBackend<'a> {
     /// Wall-clock backend (the real experiment path).
     pub fn new(cfg: &RunConfig, registry: &'a Registry)
                -> anyhow::Result<RealBackend<'a>> {
+        let fleet_cfgs = cfg.fleet_configs();
         let fleet = DeviceSet::new(cfg.fleet_configs())?;
         let n = fleet.len();
         let table = ModelTable::shared(registry.names());
@@ -80,6 +89,8 @@ impl<'a> RealBackend<'a> {
                 .collect(),
             table,
             pipelined: cfg.gpu.pipeline_depth >= 2,
+            pp_stages: cfg.pp_stages.max(1),
+            fleet_cfgs,
             data_path: cfg.data_path,
             data_tokens_in: cfg.data_tokens_in,
             data_tokens_out: cfg.data_tokens_out,
@@ -105,6 +116,53 @@ impl<'a> RealBackend<'a> {
         }
         backend.virtual_costs = Some(costs.clone());
         Ok(backend)
+    }
+
+    /// Shard-group swap: make `name`'s layer shards resident on every
+    /// device of the lead's stage group — atomically.  The real DMA
+    /// moves each stage's proportional slice of the weight blob; if
+    /// any stage fails, the shards staged so far are evicted before
+    /// the error propagates, so a partially-resident group can never
+    /// exist (the invariant that keeps the admission gate live).
+    /// Virtual-costs mode then re-prices the group through the shared
+    /// `price_swap_group` — the same pricing the DES runs, which is
+    /// the pp parity contract.
+    fn ensure_resident_group(&mut self, lead: usize, model: ModelId,
+                             name: &str, had_resident: bool)
+                             -> anyhow::Result<SwapOutcome> {
+        let n_layers = self.registry.entry(name)?.spec.n_layers;
+        let shares = stage_shares(n_layers, self.pp_stages);
+        let group = lead..lead + self.pp_stages;
+        let mut swapped = false;
+        for (i, d) in group.clone().enumerate() {
+            let r = self.swaps[d].ensure_resident_shard(
+                self.fleet.get_mut(d), self.registry, name, shares[i]);
+            match r {
+                Ok(rep) => swapped |= rep.swapped,
+                Err(e) => {
+                    // unwind: evict the shards this round staged
+                    for u in lead..d {
+                        let sm = &mut self.swaps[u];
+                        sm.evict(self.fleet.get_mut(u));
+                    }
+                    return Err(e.context(format!(
+                        "staging pp shard {i} of {name}")));
+                }
+            }
+        }
+        if !swapped {
+            return Ok(SwapOutcome::default());
+        }
+        let mut out = SwapOutcome { swapped: true, ..Default::default() };
+        if let Some(costs) = &self.virtual_costs {
+            let mc = costs.costs(name)?;
+            out = price_swap_group(
+                mc, &self.fleet_cfgs[group.clone()], &shares,
+                SwapEvent { model, had_resident, promoted: false,
+                            dropped_staged: false },
+                &mut self.stats[group]);
+        }
+        Ok(out)
     }
 }
 
@@ -164,6 +222,22 @@ impl ExecBackend for RealBackend<'_> {
         if self.swaps[device].staged() == Some(model) {
             return 0.0;
         }
+        if self.pp_stages > 1 {
+            // estimate for `device`'s stage group (callers may name a
+            // non-lead member): ready when the slowest shard load
+            // finishes (pp runs are always virtual-costs)
+            let device = device - device % self.pp_stages;
+            let (Some(costs), Ok(entry)) =
+                (&self.virtual_costs, self.registry.entry(model))
+            else { return 0.0 };
+            let Ok(mc) = costs.costs(model) else { return 0.0 };
+            let shares = stage_shares(entry.spec.n_layers,
+                                      self.pp_stages);
+            return est_load_s_group(
+                mc,
+                &self.fleet_cfgs[device..device + self.pp_stages],
+                &shares);
+        }
         match &self.virtual_costs {
             Some(costs) => costs.costs(model)
                 .map(|mc| swap_load_s(mc, self.fleet.get(device).config()))
@@ -195,6 +269,10 @@ impl ExecBackend for RealBackend<'_> {
         let table = self.table.clone();
         let name = table.name(model);
         let had_resident = self.swaps[device].resident().is_some();
+        if self.pp_stages > 1 {
+            return self.ensure_resident_group(device, model, name,
+                                              had_resident);
+        }
         let rep = self.swaps[device].ensure_resident(
             self.fleet.get_mut(device), self.registry, name)?;
         let mut out = SwapOutcome {
@@ -340,6 +418,25 @@ impl ExecBackend for RealBackend<'_> {
             };
         }
 
+        // 6. pipeline-parallel: split the modeled exec across the
+        //    stage group and price the sealed activation links through
+        //    the shared helper — the same numbers the DES computes,
+        //    which is the pp parity contract (pp runs are always
+        //    virtual-costs; the builder refuses wall-clock pp).
+        let mut pp = None;
+        if self.pp_stages > 1 {
+            let spec = &self.registry.entry(name)?.spec;
+            let (d_model, decode_len, n_layers) =
+                (spec.d_model, spec.decode_len, spec.n_layers);
+            let shares = stage_shares(n_layers, self.pp_stages);
+            let batch = price_pipeline(
+                exec_s, d_model, n_rows, decode_len, &shares,
+                &self.fleet_cfgs[device..device + self.pp_stages]);
+            exec_s = batch.makespan_s;
+            io_s += batch.activation.io_s;
+            pp = Some(batch);
+        }
+
         Ok(Some(BatchOutcome {
             tokens: rep.tokens,
             artifact_batch: rep.batch,
@@ -347,6 +444,7 @@ impl ExecBackend for RealBackend<'_> {
             exec_s,
             io_s,
             data,
+            pp,
         }))
     }
 

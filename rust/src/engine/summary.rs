@@ -303,6 +303,30 @@ pub struct RunSummary {
     /// Data-path bytes on the link, per-chunk AEAD framing included.
     pub data_wire_bytes: u64,
 
+    /// Pipeline-parallel stage count (1 = off; every pp field below is
+    /// then zero and the whole block is absent from the JSON, so
+    /// single-stage summaries stay byte-identical).
+    pub pp_stages: usize,
+    /// Mean time-to-first-token: queue wait + shard swap + the first
+    /// microbatch's trip through every stage and sealed link.
+    pub ttft_mean_s: f64,
+    /// Decoded tokens per second of runtime (per-token throughput —
+    /// the figure pipelining is supposed to protect while TTFT pays).
+    pub token_throughput_tps: f64,
+    /// Pipeline bubble seconds across the fleet: stage-imbalance idle
+    /// time, the price of uneven layer splits.
+    pub total_bubble_s: f64,
+    /// Raw activation bytes that crossed inter-stage links.
+    pub activation_bytes: u64,
+    /// Activation bytes on the wire, sealed-chunk framing included.
+    pub activation_wire_bytes: u64,
+    /// Seconds spent moving activations between stages.
+    pub total_activation_io_s: f64,
+    /// Total activation sealing work (CC links only).
+    pub total_activation_crypto_s: f64,
+    /// Activation crypto not hidden behind the link.
+    pub total_activation_crypto_exposed_s: f64,
+
     /// Per-device breakdown, in device-id order.
     pub per_device: Vec<DeviceSummary>,
 
@@ -369,6 +393,27 @@ impl RunSummary {
         if self.total_bridge_s > 0.0 {
             fields.push(("total_bridge_s",
                          Json::num(self.total_bridge_s)));
+        }
+        // pipeline-parallel block: present only when the run sharded
+        // (stage count > 1) — single-stage runs stay byte-identical
+        if self.pp_stages > 1 {
+            fields.push(("pp_stages", Json::num(self.pp_stages as f64)));
+            fields.push(("ttft_mean_s", Json::num(self.ttft_mean_s)));
+            fields.push(("token_throughput_tps",
+                         Json::num(self.token_throughput_tps)));
+            fields.push(("total_bubble_s",
+                         Json::num(self.total_bubble_s)));
+            fields.push(("activation_bytes",
+                         Json::num(self.activation_bytes as f64)));
+            fields.push(("activation_wire_bytes",
+                         Json::num(self.activation_wire_bytes as f64)));
+            fields.push(("total_activation_io_s",
+                         Json::num(self.total_activation_io_s)));
+            fields.push(("total_activation_crypto_s",
+                         Json::num(self.total_activation_crypto_s)));
+            fields.push(("total_activation_crypto_exposed_s",
+                         Json::num(
+                             self.total_activation_crypto_exposed_s)));
         }
         // Byte-identity contract (tests/golden_summary.rs): the
         // data-path block appears only when the run actually shipped
@@ -472,6 +517,18 @@ impl RunSummary {
                 opt_f64("total_data_crypto_exposed_s", 0.0),
             data_bytes: opt_u64("data_bytes"),
             data_wire_bytes: opt_u64("data_wire_bytes"),
+            pp_stages: c.get("pp_stages").and_then(|v| v.as_usize())
+                .unwrap_or(1),
+            ttft_mean_s: opt_f64("ttft_mean_s", 0.0),
+            token_throughput_tps: opt_f64("token_throughput_tps", 0.0),
+            total_bubble_s: opt_f64("total_bubble_s", 0.0),
+            activation_bytes: opt_u64("activation_bytes"),
+            activation_wire_bytes: opt_u64("activation_wire_bytes"),
+            total_activation_io_s: opt_f64("total_activation_io_s", 0.0),
+            total_activation_crypto_s:
+                opt_f64("total_activation_crypto_s", 0.0),
+            total_activation_crypto_exposed_s:
+                opt_f64("total_activation_crypto_exposed_s", 0.0),
             per_device: c.get("per_device").and_then(|v| v.as_arr())
                 .map(|arr| arr.iter().map(DeviceSummary::from_json)
                      .collect())
@@ -499,6 +556,12 @@ impl RunSummary {
         }
         if self.total_bridge_s > 0.0 {
             pipe.push_str(&format!(" bridge={:.2}s", self.total_bridge_s));
+        }
+        if self.pp_stages > 1 {
+            pipe.push_str(&format!(
+                " pp={} ttft={:.2}s tok={:.1}tps bub={:.2}s",
+                self.pp_stages, self.ttft_mean_s,
+                self.token_throughput_tps, self.total_bubble_s));
         }
         if self.total_data_crypto_s > 0.0 {
             pipe.push_str(&format!(" dio={:.2}s",
@@ -670,6 +733,17 @@ pub(crate) fn summarize(cfg: &RunConfig, generated: u64, runtime_s: f64,
         total_data_crypto_exposed_s,
         data_bytes,
         data_wire_bytes,
+        // pipeline-parallel aggregates: attached by the engine after
+        // summarize, only on sharded runs
+        pp_stages: 1,
+        ttft_mean_s: 0.0,
+        token_throughput_tps: 0.0,
+        total_bubble_s: 0.0,
+        activation_bytes: 0,
+        activation_wire_bytes: 0,
+        total_activation_io_s: 0.0,
+        total_activation_crypto_s: 0.0,
+        total_activation_crypto_exposed_s: 0.0,
         per_device,
         tenancy,
         // attached by the engine after summarize, only when a trace
@@ -841,6 +915,55 @@ mod tests {
         assert!((back.per_device[0].bridge_s - 1.4).abs() < 1e-12);
     }
 
+    /// Pipeline-parallel mirror of the data-path contract: the whole
+    /// block appears only when the run sharded (stage count > 1), and
+    /// a populated block round-trips losslessly.
+    #[test]
+    fn pp_keys_absent_when_unused_and_roundtrip() {
+        let off = RunSummary {
+            pp_stages: 1,
+            per_device: vec![DeviceSummary::default()],
+            ..RunSummary::default()
+        };
+        let text = off.to_json().to_string();
+        assert!(!text.contains("pp_stages") && !text.contains("ttft")
+                && !text.contains("activation")
+                && !text.contains("bubble"),
+                "leaked pp keys: {text}");
+
+        let on = RunSummary {
+            pp_stages: 4,
+            ttft_mean_s: 1.5,
+            token_throughput_tps: 220.0,
+            total_bubble_s: 3.75,
+            activation_bytes: 65_536,
+            activation_wire_bytes: 66_200,
+            total_activation_io_s: 0.8,
+            total_activation_crypto_s: 0.4,
+            total_activation_crypto_exposed_s: 0.1,
+            ..RunSummary::default()
+        };
+        let text = on.to_json().to_string();
+        assert!(text.contains("\"pp_stages\"")
+                && text.contains("\"ttft_mean_s\"")
+                && text.contains("\"total_bubble_s\"")
+                && text.contains("\"activation_wire_bytes\""), "{text}");
+        let back = RunSummary::from_json(&on.to_json()).unwrap();
+        assert_eq!(back.pp_stages, 4);
+        assert!((back.ttft_mean_s - 1.5).abs() < 1e-12);
+        assert!((back.token_throughput_tps - 220.0).abs() < 1e-12);
+        assert!((back.total_bubble_s - 3.75).abs() < 1e-12);
+        assert_eq!(back.activation_bytes, 65_536);
+        assert_eq!(back.activation_wire_bytes, 66_200);
+        assert!((back.total_activation_io_s - 0.8).abs() < 1e-12);
+        assert!((back.total_activation_crypto_s - 0.4).abs() < 1e-12);
+        assert!((back.total_activation_crypto_exposed_s - 0.1).abs()
+                < 1e-12);
+        // a legacy file with no pp key parses back to "off"
+        let legacy = RunSummary::from_json(&off.to_json()).unwrap();
+        assert_eq!(legacy.pp_stages, 1);
+    }
+
     /// Tenancy mirror of the data-path contract: the key appears only
     /// when the engine attached a block, and a populated block
     /// round-trips losslessly.
@@ -918,6 +1041,7 @@ mod tests {
                 swap_crypto_exposed_s: 4.0,
                 exec_s: 30.0,
                 io_s: 0.9,
+                activation_io_s: 0.0,
                 latency_s: 66.7,
                 queue_wait_p95_s: 0.4,
                 swap_load_p95_s: 1.9,

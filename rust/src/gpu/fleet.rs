@@ -59,6 +59,60 @@ impl DeviceSet {
     }
 }
 
+/// Pipeline-parallel stage topology over a fleet: devices are tiled
+/// into groups of `stages` *consecutive* ids, each group serving one
+/// sharded model instance.  Device `g*stages` is the group's *lead* —
+/// the id the scheduler dispatches to; members `lead..lead+stages`
+/// hold the layer slices, and activations flow lead → lead+1 → … over
+/// per-link (optionally sealed) transfers.  With `stages == 1` every
+/// device is its own lead and the topology is invisible — the
+/// single-stage byte-identity contract.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageTopology {
+    stages: usize,
+    n_devices: usize,
+}
+
+impl StageTopology {
+    /// `stages` must tile `n_devices` exactly (validated at config
+    /// parse time; asserted here for internal callers).
+    pub fn new(stages: usize, n_devices: usize) -> StageTopology {
+        let stages = stages.max(1);
+        assert!(n_devices >= 1 && n_devices % stages == 0,
+                "{stages} stages cannot tile {n_devices} devices");
+        StageTopology { stages, n_devices }
+    }
+
+    pub fn stages(&self) -> usize {
+        self.stages
+    }
+
+    /// True when the topology is more than one stage per group.
+    pub fn is_pipelined(&self) -> bool {
+        self.stages > 1
+    }
+
+    /// Lead device of the group containing `device`.
+    pub fn lead_of(&self, device: usize) -> usize {
+        device - device % self.stages
+    }
+
+    pub fn is_lead(&self, device: usize) -> bool {
+        device % self.stages == 0
+    }
+
+    /// Group member ids for the group led by `lead`, in stage order.
+    pub fn members(&self, lead: usize) -> std::ops::Range<usize> {
+        debug_assert!(self.is_lead(lead));
+        lead..lead + self.stages
+    }
+
+    /// All group leads, in id order.
+    pub fn leads(&self) -> impl Iterator<Item = usize> {
+        (0..self.n_devices).step_by(self.stages)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +147,29 @@ mod tests {
     #[test]
     fn empty_fleet_rejected() {
         assert!(DeviceSet::new(Vec::new()).is_err());
+    }
+
+    #[test]
+    fn stage_topology_tiles_the_fleet() {
+        let t = StageTopology::new(2, 4);
+        assert!(t.is_pipelined());
+        assert_eq!(t.leads().collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(t.lead_of(0), 0);
+        assert_eq!(t.lead_of(1), 0);
+        assert_eq!(t.lead_of(3), 2);
+        assert!(t.is_lead(2) && !t.is_lead(3));
+        assert_eq!(t.members(2).collect::<Vec<_>>(), vec![2, 3]);
+        // single-stage topology is invisible: every device is a lead
+        let t1 = StageTopology::new(1, 3);
+        assert!(!t1.is_pipelined());
+        assert_eq!(t1.leads().collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(t1.members(1).collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot tile")]
+    fn stage_topology_rejects_ragged_groups() {
+        StageTopology::new(3, 4);
     }
 
     #[test]

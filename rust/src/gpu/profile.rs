@@ -172,6 +172,31 @@ impl DeviceProfile {
     }
 }
 
+/// Price one inter-stage activation transfer into the *downstream*
+/// device of a pipeline-parallel link.  Confidential links (downstream
+/// device in CC mode, bounce-buffer style — not coherent/UMA) seal
+/// each activation tensor with the same `nonce‖ct‖tag` chunk framing
+/// and budget as the weight-swap and data paths
+/// (`gpu::dma::cc_budget_s`); No-CC and coherent links move the raw
+/// bytes at the plain link rate with no crypto and no framing
+/// overhead.  Returns `(io_s, crypto_total_s, crypto_exposed_s,
+/// wire_bytes)`.
+pub fn price_activation_link(downstream: &GpuConfig, bytes: usize)
+                             -> (f64, f64, f64, u64) {
+    if downstream.mode == CcMode::On && !downstream.uma {
+        let (io_s, crypto_total, crypto_exposed) =
+            crate::gpu::dma::cc_budget_s(
+                bytes, downstream.bw_cc, downstream.bounce_bytes,
+                downstream.pipeline_depth, downstream.cc_crypto_frac);
+        let wire = crate::gpu::cc::wire_bytes(
+            bytes, downstream.bounce_bytes) as u64;
+        (io_s, crypto_total, crypto_exposed, wire)
+    } else {
+        (crate::gpu::dma::plain_budget_s(bytes, downstream.bw_plain),
+         0.0, 0.0, bytes as u64)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -211,6 +236,35 @@ mod tests {
         assert_eq!(g.pipeline_depth, 2);
         assert_eq!(g.hbm_capacity, 86 * 1024 * 1024);
         assert_eq!(p.mode, Some(CcMode::On));
+    }
+
+    #[test]
+    fn activation_links_seal_only_bounce_buffered_cc() {
+        let bytes = 1 << 20;
+        let plain = GpuConfig { no_throttle: true,
+                                ..GpuConfig::default() };
+        let (io_p, ct_p, ce_p, w_p) =
+            price_activation_link(&plain, bytes);
+        assert!((io_p - bytes as f64 / plain.bw_plain).abs() < 1e-12);
+        assert_eq!((ct_p, ce_p), (0.0, 0.0));
+        assert_eq!(w_p, bytes as u64, "plain link carries raw bytes");
+
+        let cc = GpuConfig { mode: CcMode::On, no_throttle: true,
+                             ..GpuConfig::default() };
+        let (io_c, ct_c, ce_c, w_c) = price_activation_link(&cc, bytes);
+        assert!(io_c > io_p, "sealed link must cost more than plain");
+        assert!(ct_c > 0.0 && ce_c > 0.0 && ce_c <= ct_c + 1e-12);
+        assert!(w_c > bytes as u64,
+                "nonce||ct||tag framing inflates the wire bytes");
+
+        // a coherent CC device has no bounce buffer to seal
+        let uma = profile_by_name("gh200-coherent").unwrap()
+            .apply(&GpuConfig { mode: CcMode::On, no_throttle: true,
+                                ..GpuConfig::default() });
+        let (io_u, ct_u, _, w_u) = price_activation_link(&uma, bytes);
+        assert_eq!(ct_u, 0.0, "coherent link pays no activation crypto");
+        assert_eq!(w_u, bytes as u64);
+        assert!((io_u - bytes as f64 / uma.bw_plain).abs() < 1e-12);
     }
 
     #[test]

@@ -68,6 +68,13 @@ pub const PRESETS: &[PresetEntry] = &[
         make: hw_gen,
     },
     PresetEntry {
+        name: "pp-scaling",
+        blurb: "pipeline-parallel stage scaling: stage count x mode x \
+                hardware generation on a 4-device fleet, feeding the \
+                CC-tax-by-stage-count table",
+        make: pp_scaling,
+    },
+    PresetEntry {
         name: "cc-attribution",
         blurb: "where the seconds go: full event tracing over mode x \
                 profile x pipeline-depth at smoke scale, feeding the \
@@ -281,6 +288,40 @@ fn hw_gen() -> ScenarioSpec {
     }
 }
 
+fn pp_scaling() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "pp-scaling".into(),
+        description: "how the CC tax grows with pipeline-parallel \
+                      stage count, and which hardware generation \
+                      flattens it: every cell runs the smoke workload \
+                      on a 4-device fleet under the pipeline-parallel \
+                      placement; stages=1 is the unsharded baseline \
+                      (byte-identical to a pp-free run), 2 and 4 shard \
+                      each model's layers across stage groups and \
+                      price the per-microbatch activation handoffs — \
+                      sealed nonce|ct|tag frames on CC links, plain on \
+                      No-CC, free on the coherent profile; the swept \
+                      mode gives every (profile, stages) point its \
+                      No-CC twin for the stage-count tax table".into(),
+        base: vec![
+            ("duration".into(), "20".into()),
+            ("drain".into(), "8".into()),
+            ("mean-rps".into(), "4".into()),
+            ("sla".into(), "6".into()),
+            ("models".into(), "llama-sim,gemma-sim".into()),
+            ("devices".into(), "4".into()),
+            ("placement".into(), "pipeline-parallel".into()),
+        ],
+        axes: vec![
+            axis("profile", &["h100-cc", "b300-cc", "gh200-coherent"]),
+            axis("mode", &["no-cc", "cc"]),
+            axis("stages", &["1", "2", "4"]),
+        ],
+        exclude: Vec::new(),
+        seeds: 1,
+    }
+}
+
 fn cc_attribution() -> ScenarioSpec {
     ScenarioSpec {
         name: "cc-attribution".into(),
@@ -421,6 +462,38 @@ mod tests {
         // the coherent profile reaches the fleet config
         assert!(g.cells.iter().any(
             |c| c.cfg.fleet_configs()[0].uma));
+    }
+
+    #[test]
+    fn pp_scaling_anchors_every_profile_at_one_stage() {
+        let g = pp_scaling().expand(&RunConfig::default()).unwrap();
+        // 3 profiles x 2 modes x 3 stage counts
+        assert_eq!(g.cells.len(), 18);
+        assert_eq!(g.pruned, 0);
+        assert_eq!(g.seeds, 1);
+        assert!(g.cells.iter().all(
+            |c| c.cfg.devices == 4
+                && c.cfg.placement == "pipeline-parallel"),
+                "every cell runs the 4-device pp fleet");
+        // stages=1 baselines carry no _pp fragment; sharded cells do
+        let ones: Vec<_> = g.cells.iter()
+            .filter(|c| c.cfg.pp_stages == 1).collect();
+        assert_eq!(ones.len(), 6, "one baseline per profile x mode");
+        assert!(ones.iter().all(|c| !c.label.contains("_pp1")));
+        assert!(g.cells.iter().filter(|c| c.cfg.pp_stages == 4)
+                .all(|c| c.label.contains("_pp4")));
+        // each (profile, stages) point keeps its No-CC twin
+        for prof in ["h100-cc", "b300-cc", "gh200-coherent"] {
+            for st in [1usize, 2, 4] {
+                let modes: Vec<_> = g.cells.iter()
+                    .filter(|c| c.cfg.device_profiles[0] == prof
+                            && c.cfg.pp_stages == st)
+                    .map(|c| c.cfg.mode).collect();
+                assert!(modes.contains(&crate::gpu::CcMode::Off)
+                            && modes.contains(&crate::gpu::CcMode::On),
+                        "{prof} x {st} must appear in both modes");
+            }
+        }
     }
 
     #[test]

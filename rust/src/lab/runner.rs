@@ -46,18 +46,39 @@ pub fn effective_threads(requested: usize, jobs: usize) -> usize {
     t.min(jobs.max(1)).max(1)
 }
 
+/// Remaining-time estimate after `done` of `total` cells in
+/// `elapsed_s` seconds, with `workers` threads draining the queue.
+/// The naive extrapolation (`mean × remaining`) assumes cells finish
+/// serially; once the work-stealing cursor has handed the last cells
+/// to idle workers they drain *in parallel*, so the estimate is
+/// clamped by the number of parallel waves actually left:
+/// `mean × ceil(remaining / workers)`.
+fn eta_s(elapsed_s: f64, done: usize, total: usize,
+         workers: usize) -> f64 {
+    if done == 0 {
+        return 0.0;
+    }
+    let mean = elapsed_s / done as f64;
+    let remaining = total.saturating_sub(done);
+    let serial = mean * remaining as f64;
+    let waves = remaining.div_ceil(workers.max(1));
+    serial.min(mean * waves as f64)
+}
+
 /// Per-cell progress lines on stderr:
 /// `[lab k/N label ... done in Xs, ETA Ys]`.
 struct Progress {
     total: usize,
     done: usize,
+    workers: usize,
     started: Instant,
     enabled: bool,
 }
 
 impl Progress {
-    fn new(total: usize, enabled: bool) -> Progress {
-        Progress { total, done: 0, started: Instant::now(), enabled }
+    fn new(total: usize, workers: usize, enabled: bool) -> Progress {
+        Progress { total, done: 0, workers, started: Instant::now(),
+                   enabled }
     }
 
     fn cell_done(&mut self, label: &str, cell_s: f64) {
@@ -66,8 +87,7 @@ impl Progress {
             return;
         }
         let elapsed = self.started.elapsed().as_secs_f64();
-        let eta = elapsed / self.done as f64
-            * (self.total - self.done) as f64;
+        let eta = eta_s(elapsed, self.done, self.total, self.workers);
         eprintln!("[lab {}/{} {} ... done in {:.2}s, ETA {:.1}s]",
                   self.done, self.total, label, cell_s, eta);
     }
@@ -110,7 +130,7 @@ impl<'a> LabRunner<'a> {
         let cursor = AtomicUsize::new(0);
         let slots: Vec<Mutex<Option<anyhow::Result<RunSummary>>>> =
             (0..n).map(|_| Mutex::new(None)).collect();
-        let progress = Mutex::new(Progress::new(n, !self.quiet));
+        let progress = Mutex::new(Progress::new(n, threads, !self.quiet));
         let catalogs: CatalogCache = Mutex::new(HashMap::new());
 
         std::thread::scope(|scope| {
@@ -189,5 +209,27 @@ mod tests {
         assert_eq!(effective_threads(16, 3), 3);
         assert_eq!(effective_threads(2, 0), 1);
         assert!(effective_threads(0, 100) >= 1);
+    }
+
+    #[test]
+    fn eta_clamps_to_parallel_waves() {
+        // serial regime: 1 worker, 2 of 4 done in 10s -> 2 more at
+        // 5s each
+        assert!((eta_s(10.0, 2, 4, 1) - 10.0).abs() < 1e-12);
+        // parallel tail: 4 workers and 2 cells left drain in ONE wave
+        // (~one mean), not two means — the old estimate overshot here
+        assert!((eta_s(10.0, 2, 4, 4) - 5.0).abs() < 1e-12);
+        // 8 remaining over 4 workers = 2 waves
+        assert!((eta_s(20.0, 4, 12, 4) - 10.0).abs() < 1e-12);
+        // the clamp never raises the estimate above the serial one
+        for &(el, d, t, w) in &[(7.0, 3, 9, 2), (1.0, 1, 10, 3),
+                                (30.0, 5, 6, 8)] {
+            let mean = el / d as f64;
+            assert!(eta_s(el, d, t, w)
+                    <= mean * (t - d) as f64 + 1e-12);
+        }
+        // degenerate inputs stay finite
+        assert_eq!(eta_s(5.0, 0, 4, 2), 0.0);
+        assert_eq!(eta_s(5.0, 4, 4, 0), 0.0);
     }
 }

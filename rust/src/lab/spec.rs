@@ -104,6 +104,7 @@ pub const AXES: &[AxisEntry] = &[
     AxisEntry { name: "devices", key: "devices", check: None },
     AxisEntry { name: "placement", key: "placement",
                 check: Some(check_placement) },
+    AxisEntry { name: "stages", key: "pp-stages", check: None },
     AxisEntry { name: "pipeline-depth", key: "pipeline-depth",
                 check: None },
     AxisEntry { name: "prefetch", key: "prefetch", check: None },
@@ -134,6 +135,11 @@ pub fn axis_hint(name: &str) -> String {
         "rps" => "mean requests/second > 0".to_string(),
         "devices" => "fleet size >= 1".to_string(),
         "placement" => crate::coordinator::placement_names().join(" | "),
+        "stages" => {
+            "pipeline-parallel stages per model (1 = off; needs \
+             placement pipeline-parallel, devices % stages == 0)"
+                .to_string()
+        }
         "pipeline-depth" => {
             "0|1 = serialized, >= 2 = pipelined".to_string()
         }
@@ -192,6 +198,7 @@ pub fn axis_value(cfg: &RunConfig, axis: &str) -> String {
         "rps" => fmt_num(cfg.mean_rps),
         "devices" => cfg.devices.to_string(),
         "placement" => cfg.placement.clone(),
+        "stages" => cfg.pp_stages.to_string(),
         "pipeline-depth" => cfg.gpu.pipeline_depth.to_string(),
         "prefetch" => {
             (if cfg.prefetch { "on" } else { "off" }).to_string()
@@ -711,6 +718,34 @@ mod tests {
             .to_string();
         assert!(err.contains("a100") && err.contains("b300-cc"),
                 "{err}");
+    }
+
+    #[test]
+    fn stages_axis_reaches_config_and_label() {
+        let mut s = two_by_two();
+        s.axes = vec![axis("mode", &["no-cc", "cc"]),
+                      axis("devices", &["4"]),
+                      axis("placement", &["pipeline-parallel"]),
+                      axis("stages", &["1", "2", "4"])];
+        let g = s.expand(&RunConfig::default()).unwrap();
+        assert_eq!(g.cells.len(), 6);
+        // stage 1 is off: no label fragment, exactly the legacy cell
+        let off = &g.cells[0];
+        assert_eq!(off.cfg.pp_stages, 1);
+        assert!(!off.label.contains("_pp"), "{}", off.label);
+        // swept stages reach the config and the label fragment
+        let on = &g.cells[2];
+        assert_eq!(on.cfg.pp_stages, 4);
+        assert!(on.label.contains("_pp4"), "{}", on.label);
+        assert_eq!(on.assignment[3],
+                   ("stages".to_string(), "4".to_string()));
+        // cells that violate the pp constraints fail expansion with
+        // the cell label, not at run time
+        s.axes = vec![axis("devices", &["4"]),
+                      axis("stages", &["2"])];
+        let err = s.expand(&RunConfig::default()).unwrap_err()
+            .to_string();
+        assert!(err.contains("pipeline-parallel"), "{err}");
     }
 
     #[test]

@@ -389,6 +389,10 @@ fn lab_run(cfg: RunConfig) -> anyhow::Result<()> {
         println!("\n## Where the seconds go (latency waterfall)\n");
         println!("{waterfall}");
     }
+    if let Some(pipeline) = &tables.pipeline {
+        println!("\n## CC tax by stage count (pipeline parallel)\n");
+        println!("{pipeline}");
+    }
     if let Some(headline) = &tables.headline {
         println!("\n## Headline comparison (paper abstract)\n");
         println!("{headline}");
@@ -443,6 +447,9 @@ struct LabTables {
     /// Only when some cell recorded an event trace (`--trace`): the
     /// per-phase latency waterfall.
     waterfall: Option<String>,
+    /// Only when some cell ran pipeline-parallel (`--pp-stages` > 1):
+    /// the stage-count scaling table.
+    pipeline: Option<String>,
     /// Only when the grid has both CC and No-CC cells — a one-mode
     /// grid has nothing to ratio against (`lab check` guards the
     /// same way).
@@ -475,6 +482,8 @@ impl LabTables {
                 .then(|| report::hw_gen_table(cells)),
             waterfall: report::has_waterfall(cells)
                 .then(|| report::waterfall_table(cells)),
+            pipeline: report::has_pipeline(cells)
+                .then(|| report::pipeline_table(cells)),
             headline: h.as_ref().map(report::headline_table),
             bands: h.as_ref().map(
                 |h| report::band_table(&report::paper_check(h))),
@@ -510,6 +519,11 @@ impl LabTables {
             md.push_str(&format!(
                 "\n## Where the seconds go (latency waterfall)\n\n\
                  {waterfall}"));
+        }
+        if let Some(pipeline) = &self.pipeline {
+            md.push_str(&format!(
+                "\n## CC tax by stage count (pipeline parallel)\n\n\
+                 {pipeline}"));
         }
         if let Some(headline) = &self.headline {
             md.push_str(&format!(
@@ -605,6 +619,10 @@ fn cmd_report(cfg: RunConfig, rest: Vec<String>) -> anyhow::Result<()> {
     if report::has_waterfall(&cells) {
         println!("\n## Where the seconds go (latency waterfall)\n");
         println!("{}", report::waterfall_table(&cells));
+    }
+    if report::has_pipeline(&cells) {
+        println!("\n## CC tax by stage count (pipeline parallel)\n");
+        println!("{}", report::pipeline_table(&cells));
     }
     println!("{}", report::headline_table(&report::headline_ratios(&cells)));
     Ok(())
@@ -715,13 +733,26 @@ fn usage_string() -> String {
          \x20 --device-hbm-mb a,b    per-device HBM capacity, MB\n\
          \x20 --device-bw-scale a,b  per-device PCIe rate scale\n\
          \x20 --device-profiles a,b  named hardware-generation \
-         profiles, one per device:\n\
+         profiles, one per device\n\
+         \x20                        (a single name broadcasts \
+         fleet-wide):\n\
          \x20                        {profiles}\n\
          \x20                        (bundle link rates, HBM, crypto \
          pricing; the first\n\
          \x20                        profile's CC mode is the default, \
          --mode overrides)\n\
-         \x20 --placement {placements}\n\n\
+         \x20 --placement {placements}\n\
+         \x20 --pp-stages N          pipeline-parallel stages per model \
+         (default 1 = off;\n\
+         \x20                        N>1 shards each model's layers \
+         over N-device groups,\n\
+         \x20                        prices sealed inter-stage \
+         activations on CC links,\n\
+         \x20                        and reports TTFT / token \
+         throughput / bubble time;\n\
+         \x20                        needs --placement \
+         pipeline-parallel, devices % N == 0,\n\
+         \x20                        virtual time only)\n\n\
          CC PIPELINE OPTIONS:\n\
          \x20 --pipeline-depth N     CC bounce-chunk staging buffers: \
          0|1 = serialized\n\
@@ -863,6 +894,20 @@ mod tests {
         for name in sincere::gpu::profile::profile_names() {
             assert!(usage.contains(name),
                     "usage missing profile {name}");
+        }
+    }
+
+    /// The pipeline-parallel flag and its constraints render into the
+    /// help text; the placement it requires is named in the same
+    /// block, so the two cannot drift apart.
+    #[test]
+    fn usage_lists_the_pp_flag_and_its_constraints() {
+        let usage = usage_string();
+        assert!(usage.contains("--pp-stages"));
+        assert!(usage.contains("pipeline-parallel"));
+        for word in ["sealed", "TTFT", "bubble", "virtual time only"] {
+            assert!(usage.contains(word),
+                    "usage missing pp detail {word:?}");
         }
     }
 

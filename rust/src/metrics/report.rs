@@ -304,6 +304,68 @@ pub fn waterfall_table(cells: &[RunSummary]) -> String {
     out
 }
 
+/// True when any cell ran pipeline-parallel (`pp_stages` > 1) — gates
+/// the stage-scaling table the same way `has_data_path` gates the
+/// batch-I/O table.  Stage-free grids keep their reports
+/// byte-identical.
+pub fn has_pipeline(cells: &[RunSummary]) -> bool {
+    cells.iter().any(|c| c.pp_stages > 1)
+}
+
+/// "CC tax by stage count": per (profile, stage-count) group, the
+/// CC-vs-No-CC latency gap plus the CC side's pipeline signature —
+/// TTFT, per-token throughput, bubble time from stage imbalance, and
+/// the sealed inter-stage activation traffic (wire volume, total vs
+/// exposed crypto).  Profile-major with stages ascending, so each
+/// profile's column reads top-to-bottom as "how the CC tax grows with
+/// stage count" and comparing blocks answers "which hardware
+/// generation flattens it".  Stage-1 cells anchor each profile's
+/// baseline row.
+pub fn pipeline_table(cells: &[RunSummary]) -> String {
+    let mut order: Vec<(String, usize)> = Vec::new();
+    for c in cells {
+        let key = (profile_of(c).unwrap_or("-").to_string(),
+                   c.pp_stages.max(1));
+        if !order.contains(&key) {
+            order.push(key);
+        }
+    }
+    order.sort();
+    let mut out = String::from(
+        "| profile | stages | lat no-cc (s) | lat cc (s) | CC tax % | \
+         ttft cc (s) | tok (tps) | bubble (s) | act wire (MB) | \
+         act crypto (s) | exposed (s) |\n\
+         |---|---|---|---|---|---|---|---|---|---|---|\n");
+    for (p, st) in &order {
+        let in_group = |c: &RunSummary| {
+            profile_of(c).unwrap_or("-") == p.as_str()
+                && c.pp_stages.max(1) == *st
+        };
+        let cc = |c: &RunSummary| in_group(c) && c.mode == "cc";
+        let nocc = |c: &RunSummary| in_group(c) && c.mode == "no-cc";
+        let lat_cc = mean_where(cells, cc, |c| c.latency_mean_s);
+        let lat_nocc = mean_where(cells, nocc, |c| c.latency_mean_s);
+        let tax = if lat_nocc > 0.0 {
+            (lat_cc - lat_nocc) / lat_nocc * 100.0
+        } else {
+            0.0
+        };
+        out.push_str(&format!(
+            "| {} | {} | {:.2} | {:.2} | {:+.1} | {:.2} | {:.1} | \
+             {:.2} | {:.3} | {:.3} | {:.3} |\n",
+            p, st, lat_nocc, lat_cc, tax,
+            mean_where(cells, cc, |c| c.ttft_mean_s),
+            mean_where(cells, cc, |c| c.token_throughput_tps),
+            mean_where(cells, cc, |c| c.total_bubble_s),
+            mean_where(cells, cc,
+                       |c| c.activation_wire_bytes as f64 / 1e6),
+            mean_where(cells, cc, |c| c.total_activation_crypto_s),
+            mean_where(cells, cc,
+                       |c| c.total_activation_crypto_exposed_s)));
+    }
+    out
+}
+
 /// Mean of the headline metrics grouped by one axis of a grid
 /// (`mode` | `pattern` | `strategy` | `sla`), one row per distinct
 /// value in first-appearance order.
@@ -745,6 +807,7 @@ mod tests {
                 swap_crypto_exposed_s: crypto,
                 exec_s: 100.0,
                 io_s: 10.0,
+                activation_io_s: 0.0,
                 latency_s: queue + 1.0 + load + 100.0 + 10.0,
                 queue_wait_p95_s: 0.9,
                 swap_load_p95_s: 1.8,
@@ -773,6 +836,43 @@ mod tests {
              swap |"), "{t}");
         // the untraced cell contributes no row
         assert_eq!(t.matches("| t |").count(), 0, "{t}");
+    }
+
+    #[test]
+    fn pipeline_table_scales_the_tax_with_stage_count() {
+        let plain = cell("cc", 4.0, 0.5, 2.0, 0.2);
+        assert!(!has_pipeline(&[plain.clone()]),
+                "stage-free grids must not trigger the table");
+        let mk = |label: &str, mode: &str, stages: usize, lat: f64| {
+            let mut c = cell(mode, lat, 0.5, 2.0, 0.2);
+            c.label = label.into();
+            c.pp_stages = stages;
+            if stages > 1 && mode == "cc" {
+                c.ttft_mean_s = 0.8;
+                c.token_throughput_tps = 128.0;
+                c.total_bubble_s = 3.0;
+                c.activation_wire_bytes = 2_000_000;
+                c.total_activation_crypto_s = 1.5;
+                c.total_activation_crypto_exposed_s = 0.25;
+            }
+            c
+        };
+        let cells = vec![
+            mk("no-cc_g_prof-h100-cc", "no-cc", 1, 3.0),
+            mk("cc_g_prof-h100-cc", "cc", 1, 4.5),
+            mk("no-cc_g_prof-h100-cc_pp2", "no-cc", 2, 3.0),
+            mk("cc_g_prof-h100-cc_pp2", "cc", 2, 6.0),
+        ];
+        assert!(has_pipeline(&cells));
+        let t = pipeline_table(&cells);
+        // stage 1 baseline: +50% tax, no pipeline signature
+        assert!(t.contains(
+            "| h100-cc | 1 | 3.00 | 4.50 | +50.0 | 0.00 | 0.0 | \
+             0.00 | 0.000 | 0.000 | 0.000 |"), "{t}");
+        // stage 2: tax doubles; sealed activation traffic shows up
+        assert!(t.contains(
+            "| h100-cc | 2 | 3.00 | 6.00 | +100.0 | 0.80 | 128.0 | \
+             3.00 | 2.000 | 1.500 | 0.250 |"), "{t}");
     }
 
     #[test]

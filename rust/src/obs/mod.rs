@@ -34,7 +34,11 @@
 //! invariant test (`tests/obs_trace.rs`), not a rendering convention.
 //! The bridge residual and exposed crypto are *attribution within*
 //! `swap_load` (they are already part of the priced load seconds), so
-//! they are carried as extra columns, never added to the sum.
+//! they are carried as extra columns, never added to the sum.  The
+//! pipeline-parallel activation phase follows the same rule: the
+//! inter-stage transfer seconds are already inside `io`, and
+//! `activation_io` attributes them (column present only when a run
+//! actually sharded).
 //!
 //! Flag-off contract: `--trace off` (the default) records nothing,
 //! writes nothing, and leaves every summary byte identical to
@@ -129,6 +133,16 @@ pub enum TraceEvent {
         exec_s: f64,
         io_s: f64,
     },
+    /// One pipeline stage's share of a batch on a member-device lane
+    /// (pp runs only; the group lead keeps the whole-batch `Exec`
+    /// span).
+    StageExec {
+        device: usize,
+        start_s: f64,
+        model: ModelId,
+        rows: usize,
+        exec_s: f64,
+    },
     /// One completed request on its SLA-class lane, arrival to
     /// completion.
     Request {
@@ -168,6 +182,9 @@ pub struct Waterfall {
     pub promoted: bool,
     pub exec_s: f64,
     pub io_s: f64,
+    /// Inter-stage activation slice of `io_s` (pipeline-parallel runs
+    /// only; an attribution column, never added to the phase sum).
+    pub activation_io_s: f64,
     pub latency_s: f64,
 }
 
@@ -195,6 +212,9 @@ pub struct PhaseTotals {
     pub swap_crypto_exposed_s: f64,
     pub exec_s: f64,
     pub io_s: f64,
+    /// Inter-stage activation slice of `io_s` (pipeline-parallel runs
+    /// only; 0 — and absent from the JSON — otherwise).
+    pub activation_io_s: f64,
     /// Sum of recorded latencies (== sum of phase sums within 1e-9·n).
     pub latency_s: f64,
     pub queue_wait_p95_s: f64,
@@ -204,7 +224,7 @@ pub struct PhaseTotals {
 
 impl PhaseTotals {
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("requests", Json::num(self.requests as f64)),
             ("queue_wait_s", Json::num(self.queue_wait_s)),
             ("swap_unload_s", Json::num(self.swap_unload_s)),
@@ -214,11 +234,20 @@ impl PhaseTotals {
              Json::num(self.swap_crypto_exposed_s)),
             ("exec_s", Json::num(self.exec_s)),
             ("io_s", Json::num(self.io_s)),
+        ];
+        // only pipeline-parallel runs accumulate an activation phase —
+        // the key's presence follows the byte-identity contract
+        if self.activation_io_s > 0.0 {
+            fields.push(("activation_io_s",
+                         Json::num(self.activation_io_s)));
+        }
+        fields.extend([
             ("latency_s", Json::num(self.latency_s)),
             ("queue_wait_p95_s", Json::num(self.queue_wait_p95_s)),
             ("swap_load_p95_s", Json::num(self.swap_load_p95_s)),
             ("exec_p95_s", Json::num(self.exec_p95_s)),
-        ])
+        ]);
+        Json::obj(fields)
     }
 
     pub fn from_json(j: &Json) -> PhaseTotals {
@@ -233,6 +262,7 @@ impl PhaseTotals {
             swap_crypto_exposed_s: f("swap_crypto_exposed_s"),
             exec_s: f("exec_s"),
             io_s: f("io_s"),
+            activation_io_s: f("activation_io_s"),
             latency_s: f("latency_s"),
             queue_wait_p95_s: f("queue_wait_p95_s"),
             swap_load_p95_s: f("swap_load_p95_s"),
@@ -296,12 +326,23 @@ impl Trace {
         });
     }
 
+    /// One pipeline stage's slice of a batch on a member-device lane
+    /// (pipeline-parallel runs only).
+    pub fn on_stage_exec(&mut self, device: usize, start_s: f64,
+                         model: ModelId, rows: usize, exec_s: f64) {
+        self.events.push(TraceEvent::StageExec {
+            device, start_s, model, rows, exec_s,
+        });
+    }
+
     /// One completed request: the class-lane span plus its waterfall
     /// row.  `dispatch_s` is the decision instant `t` (queue wait ends
-    /// there; the swap begins there).
+    /// there; the swap begins there).  `activation_io_s` is the
+    /// inter-stage slice already inside `io_s` (0 off pp).
+    #[allow(clippy::too_many_arguments)]
     pub fn on_request(&mut self, c: &CompletedRequest, class: u8,
                       sla_met: bool, dispatch_s: f64, swap: &SwapOutcome,
-                      exec_s: f64, io_s: f64) {
+                      exec_s: f64, io_s: f64, activation_io_s: f64) {
         self.events.push(TraceEvent::Request {
             id: c.id,
             model: c.model,
@@ -325,6 +366,7 @@ impl Trace {
             promoted: swap.promoted,
             exec_s,
             io_s,
+            activation_io_s,
             latency_s: c.latency_s(),
         });
     }
@@ -347,6 +389,7 @@ impl Trace {
             t.swap_crypto_exposed_s += w.swap_crypto_exposed_s;
             t.exec_s += w.exec_s;
             t.io_s += w.io_s;
+            t.activation_io_s += w.activation_io_s;
             t.latency_s += w.latency_s;
             qh.record(w.queue_wait_s.max(0.0));
             lh.record(w.swap_load_s.max(0.0));
@@ -448,6 +491,21 @@ impl Trace {
                         ("io_s", Json::num(*io_s)),
                     ])),
                 ]),
+                TraceEvent::StageExec { device, start_s, model, rows,
+                                        exec_s } => Json::obj(vec![
+                    ("ph", Json::str("X")),
+                    ("pid", Json::num(0.0)),
+                    ("tid", Json::num(*device as f64)),
+                    ("cat", Json::str("exec")),
+                    ("name", Json::str(format!(
+                        "stage:{}", table.name(*model)))),
+                    ("ts", us(*start_s)),
+                    ("dur", us(*exec_s)),
+                    ("args", Json::obj(vec![
+                        ("rows", Json::num(*rows as f64)),
+                        ("exec_s", Json::num(*exec_s)),
+                    ])),
+                ]),
                 TraceEvent::Request { id, model, class, device,
                                       arrival_s, complete_s,
                                       sla_met } => Json::obj(vec![
@@ -482,22 +540,36 @@ impl Trace {
                                table: &ModelTable) -> anyhow::Result<()> {
         std::fs::create_dir_all(dir)?;
         let cap = (self.waterfalls.len().max(64) * 160).min(1 << 22);
+        // the activation column exists only when a run actually moved
+        // inter-stage tensors (pipeline-parallel) — stage-free files
+        // keep the exact legacy header
+        let has_act =
+            self.waterfalls.iter().any(|r| r.activation_io_s > 0.0);
+        let mut header = vec![
+            "id", "model", "device", "class", "arrival_s",
+            "queue_wait_s", "swap_unload_s", "swap_load_s",
+            "swap_bridge_s", "swap_crypto_exposed_s", "promoted",
+            "exec_s", "io_s"];
+        if has_act {
+            header.push("activation_io_s");
+        }
+        header.push("latency_s");
         let mut w = CsvWriter::create_with_capacity(
-            &dir.join(format!("{label}_waterfall.csv")),
-            &["id", "model", "device", "class", "arrival_s",
-              "queue_wait_s", "swap_unload_s", "swap_load_s",
-              "swap_bridge_s", "swap_crypto_exposed_s", "promoted",
-              "exec_s", "io_s", "latency_s"],
-            cap)?;
+            &dir.join(format!("{label}_waterfall.csv")), &header, cap)?;
         let f = |v: f64| format!("{v:.9}");
         for r in &self.waterfalls {
-            w.row(&[r.id.to_string(), table.name(r.model).to_string(),
-                    r.device.to_string(), r.class.to_string(),
-                    f(r.arrival_s), f(r.queue_wait_s),
-                    f(r.swap_unload_s), f(r.swap_load_s),
-                    f(r.swap_bridge_s), f(r.swap_crypto_exposed_s),
-                    r.promoted.to_string(), f(r.exec_s), f(r.io_s),
-                    f(r.latency_s)])?;
+            let mut row = vec![
+                r.id.to_string(), table.name(r.model).to_string(),
+                r.device.to_string(), r.class.to_string(),
+                f(r.arrival_s), f(r.queue_wait_s),
+                f(r.swap_unload_s), f(r.swap_load_s),
+                f(r.swap_bridge_s), f(r.swap_crypto_exposed_s),
+                r.promoted.to_string(), f(r.exec_s), f(r.io_s)];
+            if has_act {
+                row.push(f(r.activation_io_s));
+            }
+            row.push(f(r.latency_s));
+            w.row(&row)?;
         }
         w.flush()?;
         Ok(())
@@ -569,7 +641,7 @@ mod tests {
         let mut tr = Trace::new();
         let sw = swap(0.01, 1.7);
         let c = completed(7, 2.0, 3.5, 1.71, 0.2, 0.005);
-        tr.on_request(&c, 0, true, 3.5, &sw, 0.2, 0.005);
+        tr.on_request(&c, 0, true, 3.5, &sw, 0.2, 0.005, 0.0);
         assert_eq!(tr.waterfalls.len(), 1);
         let w = &tr.waterfalls[0];
         assert!((w.phase_sum_s() - w.latency_s).abs() <= 1e-9,
@@ -584,7 +656,8 @@ mod tests {
         for i in 0..4 {
             let c = completed(i, i as f64, i as f64 + 0.5, 1.01,
                               0.2, 0.01);
-            tr.on_request(&c, 0, true, i as f64 + 0.5, &sw, 0.2, 0.01);
+            tr.on_request(&c, 0, true, i as f64 + 0.5, &sw, 0.2, 0.01,
+                          0.0);
         }
         let t = tr.phase_totals();
         assert_eq!(t.requests, 4);
@@ -606,7 +679,7 @@ mod tests {
         tr.on_swap(0, 1.0, ModelId(0), &sw);
         tr.on_exec(0, 3.0, ModelId(0), 2, 0.4, 0.01);
         let c = completed(1, 0.5, 1.0, 2.0, 0.4, 0.01);
-        tr.on_request(&c, 0, true, 1.0, &sw, 0.4, 0.01);
+        tr.on_request(&c, 0, true, 1.0, &sw, 0.4, 0.01, 0.0);
         tr.on_shed(4.0, 9, ModelId(0), 0);
         let table = ModelTable::new(["llama-sim"]);
         let j = tr.to_chrome_json("probe", &table,
@@ -633,7 +706,7 @@ mod tests {
         let mut tr = Trace::new();
         let sw = swap(0.0, 0.0);
         let c = completed(1, 0.5, 1.0, 0.0, 0.4, 0.01);
-        tr.on_request(&c, 2, true, 1.0, &sw, 0.4, 0.01);
+        tr.on_request(&c, 2, true, 1.0, &sw, 0.4, 0.01, 0.0);
         let table = ModelTable::new(["llama-sim"]);
         let text = tr.to_chrome_json("probe", &table, &[CcMode::Off],
                                      true).to_string();
@@ -645,11 +718,82 @@ mod tests {
     }
 
     #[test]
+    fn stage_spans_ride_member_lanes() {
+        let mut tr = Trace::new();
+        tr.on_exec(0, 1.0, ModelId(0), 4, 0.8, 0.05);
+        tr.on_stage_exec(1, 1.1, ModelId(0), 4, 0.4);
+        let table = ModelTable::new(["llama-sim"]);
+        let text = tr.to_chrome_json("probe", &table,
+                                     &[CcMode::On, CcMode::On], false)
+            .to_string();
+        assert!(text.contains("stage:llama-sim"), "{text}");
+        assert!(text.contains("exec:llama-sim"), "{text}");
+        // the stage span sits on device lane 1
+        assert!(text.contains("\"tid\":1"), "{text}");
+    }
+
+    #[test]
+    fn activation_io_attributes_within_io() {
+        let mut tr = Trace::new();
+        let sw = swap(0.01, 1.0);
+        // io 0.05 of which 0.02 is inter-stage activation transfer
+        let c = completed(5, 0.0, 1.0, 1.01, 0.3, 0.05);
+        tr.on_request(&c, 0, true, 1.0, &sw, 0.3, 0.05, 0.02);
+        let w = &tr.waterfalls[0];
+        assert!((w.activation_io_s - 0.02).abs() < 1e-12);
+        assert!(w.activation_io_s < w.io_s);
+        // attribution, not a new phase: the identity is unchanged
+        assert!((w.phase_sum_s() - w.latency_s).abs() <= 1e-9);
+        let t = tr.phase_totals();
+        assert!((t.activation_io_s - 0.02).abs() < 1e-12);
+        let text = t.to_json().to_string();
+        assert!(text.contains("\"activation_io_s\""), "{text}");
+        let back = PhaseTotals::from_json(&t.to_json());
+        assert_eq!(back, t);
+        // stage-free totals keep the key out entirely
+        let mut plain = Trace::new();
+        plain.on_request(&c, 0, true, 1.0, &sw, 0.3, 0.05, 0.0);
+        let text = plain.phase_totals().to_json().to_string();
+        assert!(!text.contains("activation"),
+                "leaked activation key: {text}");
+    }
+
+    #[test]
+    fn waterfall_csv_grows_activation_column_only_under_pp() {
+        let table = ModelTable::new(["llama-sim"]);
+        let dir = std::env::temp_dir().join("sincere_obs_pp_csv");
+        let sw = swap(0.0, 0.5);
+        let c = completed(1, 0.0, 1.0, 0.5, 0.2, 0.04);
+        let mut plain = Trace::new();
+        plain.on_request(&c, 0, true, 1.0, &sw, 0.2, 0.04, 0.0);
+        plain.write_waterfall_csv(&dir, "plain", &table).unwrap();
+        let tab = crate::util::csvio::CsvTable::read(
+            &dir.join("plain_waterfall.csv")).unwrap();
+        assert!(tab.col("activation_io_s").is_err(),
+                "stage-free files must keep the legacy header");
+
+        let mut pp = Trace::new();
+        pp.on_request(&c, 0, true, 1.0, &sw, 0.2, 0.04, 0.015);
+        pp.write_waterfall_csv(&dir, "pp", &table).unwrap();
+        let tab = crate::util::csvio::CsvTable::read(
+            &dir.join("pp_waterfall.csv")).unwrap();
+        let col = tab.col("activation_io_s")
+            .expect("pp files carry the activation column");
+        assert!((tab.rows[0][col].parse::<f64>().unwrap() - 0.015).abs()
+                < 1e-9);
+        // attribution stays inside io_s: the file identity is unchanged
+        let v = |name: &str| tab.f64_col(name).unwrap()[0];
+        let sum = v("queue_wait_s") + v("swap_unload_s")
+            + v("swap_load_s") + v("exec_s") + v("io_s");
+        assert!((sum - v("latency_s")).abs() <= 1e-8);
+    }
+
+    #[test]
     fn waterfall_csv_writes_and_sums() {
         let mut tr = Trace::new();
         let sw = swap(0.01, 1.0);
         let c = completed(3, 1.0, 2.0, 1.01, 0.3, 0.02);
-        tr.on_request(&c, 1, false, 2.0, &sw, 0.3, 0.02);
+        tr.on_request(&c, 1, false, 2.0, &sw, 0.3, 0.02, 0.0);
         let dir = std::env::temp_dir().join("sincere_obs_test");
         let table = ModelTable::new(["llama-sim"]);
         tr.write_waterfall_csv(&dir, "t", &table).unwrap();

@@ -359,6 +359,127 @@ fn fleet_parity_mixed_hardware_generations() {
     assert!(des.total_bridge_s > 0.0);
 }
 
+/// The pipeline-parallel extension of the parity contract: a
+/// mixed-generation 4-device fleet — one 2-stage Hopper group paying
+/// sealed `nonce|ct|tag` activation frames on its inter-stage link,
+/// one coherent Grace-Hopper group moving activations at plain rate —
+/// must leave the DES and the real execution path (which really
+/// stages each layer shard through its device's DMA engine, atomically
+/// per group) in exact agreement: shard-swap accounting, per-stage
+/// activation bytes, exposed activation crypto, TTFT, bubble time and
+/// per-device breakdowns included.
+#[test]
+fn fleet_parity_pipeline_parallel_sharded() {
+    let mut cfg = parity_cfg("cc", "select-batch+timer");
+    cfg.devices = 4;
+    cfg.set("device-profiles",
+            "h100-cc,h100-cc,gh200-coherent,gh200-coherent").unwrap();
+    cfg.set("placement", "pipeline-parallel").unwrap();
+    cfg.set("pp-stages", "2").unwrap();
+    cfg.mean_rps = 6.0; // keep both stage groups busy
+    cfg.validate().unwrap();
+    let (des, real) = run_pair(&cfg);
+    assert_eq!(des.generated, real.generated);
+    assert_eq!(des.completed, real.completed);
+    assert_eq!(des.swap_count, real.swap_count);
+    assert!((des.sla_attainment - real.sla_attainment).abs() < 1e-9,
+            "attainment {} vs {}", des.sla_attainment,
+            real.sla_attainment);
+    assert!((des.latency_mean_s - real.latency_mean_s).abs() < 1e-9,
+            "latency {} vs {}", des.latency_mean_s, real.latency_mean_s);
+    assert!((des.runtime_s - real.runtime_s).abs() < 1e-9,
+            "runtime {} vs {}", des.runtime_s, real.runtime_s);
+    assert!((des.total_load_s - real.total_load_s).abs() < 1e-9,
+            "shard load totals diverged");
+    assert!((des.total_crypto_exposed_s
+             - real.total_crypto_exposed_s).abs() < 1e-9,
+            "exposed swap crypto diverged");
+    // the pipeline block agrees field by field
+    assert_eq!(des.pp_stages, 2);
+    assert_eq!(real.pp_stages, 2);
+    assert_eq!(des.activation_bytes, real.activation_bytes,
+               "per-stage activation bytes diverged");
+    assert_eq!(des.activation_wire_bytes, real.activation_wire_bytes,
+               "sealed activation framing diverged");
+    assert!((des.ttft_mean_s - real.ttft_mean_s).abs() < 1e-9,
+            "ttft {} vs {}", des.ttft_mean_s, real.ttft_mean_s);
+    assert!((des.token_throughput_tps
+             - real.token_throughput_tps).abs() < 1e-9,
+            "token throughput diverged");
+    assert!((des.total_bubble_s - real.total_bubble_s).abs() < 1e-9,
+            "bubble time diverged");
+    assert!((des.total_activation_io_s
+             - real.total_activation_io_s).abs() < 1e-9,
+            "activation io diverged");
+    assert!((des.total_activation_crypto_s
+             - real.total_activation_crypto_s).abs() < 1e-9,
+            "activation crypto diverged");
+    assert!((des.total_activation_crypto_exposed_s
+             - real.total_activation_crypto_exposed_s).abs() < 1e-9,
+            "exposed activation crypto diverged");
+    // per-device breakdowns must agree too
+    assert_eq!(des.per_device.len(), 4);
+    for (a, b) in des.per_device.iter().zip(real.per_device.iter()) {
+        assert_eq!(a.batches, b.batches, "dev {}", a.device);
+        assert_eq!(a.swap_count, b.swap_count, "dev {}", a.device);
+        assert_eq!(a.completed, b.completed, "dev {}", a.device);
+        assert!((a.load_s - b.load_s).abs() < 1e-9,
+                "dev {}: shard loads diverged", a.device);
+    }
+    // the run exercised what it claims: both groups ran work, the
+    // Hopper link sealed its activations, the wire grew past the
+    // payload, and the coherent link added no activation crypto
+    assert!(des.completed > 0 && des.swap_count > 0,
+            "degenerate sharded run");
+    assert!(des.per_device[0].batches > 0,
+            "lead 0 (Hopper group) never dispatched");
+    assert!(des.activation_bytes > 0, "no activations priced");
+    assert!(des.activation_wire_bytes > des.activation_bytes,
+            "sealed frames must amplify the activation wire");
+    assert!(des.total_activation_crypto_s > 0.0,
+            "the CC inter-stage link must pay activation crypto");
+    assert!(des.total_bubble_s > 0.0,
+            "unequal layer shares must leave bubble time");
+}
+
+/// Stage-count 1 is the off position: under the pipeline-parallel
+/// placement, `--pp-stages 1` (and the flag left absent) must produce
+/// byte-identical output to today's affinity run — same timeline, no
+/// pp keys — because every device is its own stage group lead.
+#[test]
+fn pp_stage_1_is_byte_identical_to_no_pp() {
+    let run = |placement: &str, set_pp: bool| {
+        let mut cfg = parity_cfg("cc", "select-batch+timer");
+        cfg.devices = 4;
+        cfg.set("device-modes", "cc,no-cc,cc,no-cc").unwrap();
+        cfg.set("placement", placement).unwrap();
+        if set_pp {
+            cfg.set("pp-stages", "1").unwrap();
+        }
+        cfg.mean_rps = 6.0;
+        cfg.label = "pin".into();
+        let cm = toy_costs();
+        EngineBuilder::new(&cfg).des(manifest(), &cm).unwrap()
+            .run().unwrap().0.to_json().to_string()
+    };
+    let explicit = run("pipeline-parallel", true);
+    assert_eq!(run("pipeline-parallel", false), explicit,
+               "--pp-stages 1 must equal the flag left absent, byte \
+                for byte");
+    // modulo the recorded placement name, the stage-1 pp run is the
+    // affinity run: the placement degenerates to sticky/least-loaded
+    // and the engine's group accounting reduces to per-device
+    let affinity = run("affinity", false).replace(
+        "\"placement\":\"affinity\"",
+        "\"placement\":\"pipeline-parallel\"");
+    assert_eq!(explicit, affinity,
+               "stage-1 output must be byte-identical to affinity");
+    for key in ["pp_stages", "ttft", "activation", "bubble"] {
+        assert!(!explicit.contains(key),
+                "stage-1 summary leaked pp key {key:?}");
+    }
+}
+
 /// The tenancy extension of the parity contract (ISSUE 6 acceptance):
 /// admission gating + Zipf popularity + diurnal/flash traffic + SLA
 /// classes on a mixed 4-device fleet must leave the DES and the real

@@ -156,6 +156,24 @@ fn golden_summaries_match() {
         cells.push(cfg);
     }
 
+    // the pipeline-parallel extension: a 4-device fleet sharding both
+    // models across 2-stage groups — once over sealed CC links, once
+    // over the coherent UMA profile — so the goldens pin the shard
+    // swap pricing, TTFT/bubble accounting and the sealed activation
+    // framing end to end (stage-count 1 needs no cell of its own — it
+    // is byte-identical to the legacy cells, which a dedicated test
+    // asserts)
+    for profile in [None, Some("gh200-coherent")] {
+        let mut cfg = golden_cfg("cc", "select-batch+timer");
+        cfg.devices = 4;
+        cfg.set("placement", "pipeline-parallel").unwrap();
+        cfg.set("pp-stages", "2").unwrap();
+        if let Some(p) = profile {
+            cfg.set("device-profiles", p).unwrap();
+        }
+        cells.push(cfg);
+    }
+
     for mut cfg in cells {
         cfg.label = cfg.cell_label();
         let got = golden_cell(&cfg);
@@ -339,6 +357,85 @@ fn trace_off_is_byte_identical() {
                     <= f("swap_load_s") + 1e-9,
                 "{mode}: attribution exceeds the load it annotates");
     }
+}
+
+/// Byte-identity contract of `--pp-stages` (tentpole acceptance):
+/// stage count 1 — and the flag left absent — must reduce the engine
+/// to exactly the pre-pipeline code path: same RNG draws, same
+/// schedule, same summary bytes, and no pipeline key anywhere in the
+/// document.  With 2 stages the pipeline block appears: shard swaps,
+/// sealed activation framing that amplifies the wire, bubble time
+/// from stage imbalance, and a TTFT below the mean latency.
+#[test]
+fn pp_stage_1_is_byte_identical() {
+    // explicit `--pp-stages 1` vs the untouched default under the
+    // same placement, identical labels forced so the comparison
+    // covers every byte
+    let mut explicit = golden_cfg("cc", "select-batch+timer");
+    explicit.devices = 4;
+    explicit.set("placement", "pipeline-parallel").unwrap();
+    explicit.set("pp-stages", "1").unwrap();
+    explicit.label = "pp_probe".into();
+    let mut default = golden_cfg("cc", "select-batch+timer");
+    default.devices = 4;
+    default.set("placement", "pipeline-parallel").unwrap();
+    default.label = "pp_probe".into();
+    assert_eq!(golden_cell(&explicit), golden_cell(&default),
+               "spelling --pp-stages 1 out must not change a single \
+                byte");
+
+    // flag off: no pipeline key may appear — this is what lets CI
+    // grep the stage-free lab cells
+    for mode in ["no-cc", "cc"] {
+        let mut cfg = golden_cfg(mode, "select-batch+timer");
+        cfg.label = cfg.cell_label();
+        let text = golden_cell(&cfg);
+        for key in ["pp_stages", "ttft", "activation", "bubble", "_pp"] {
+            assert!(!text.contains(key),
+                    "{mode}: stage-free summary leaks {key}: {text}");
+        }
+    }
+
+    // stages 2: the pipeline block appears, the sealed inter-stage
+    // frames amplify the activation wire, imbalance leaves bubble
+    // time, and the first token lands before the full latency
+    let mut pp = golden_cfg("cc", "select-batch+timer");
+    pp.devices = 4;
+    pp.set("placement", "pipeline-parallel").unwrap();
+    pp.set("pp-stages", "2").unwrap();
+    pp.label = pp.cell_label();
+    let j = Json::parse(&golden_cell(&pp)).unwrap();
+    assert_eq!(num(&j, "pp_stages"), 2.0,
+               "sharded summary missing the pipeline block");
+    assert!(num(&j, "activation_bytes") > 0.0,
+            "no activations priced");
+    assert!(num(&j, "activation_wire_bytes")
+                > num(&j, "activation_bytes"),
+            "sealed nonce|ct|tag framing must amplify the wire");
+    assert!(num(&j, "total_activation_crypto_s") > 0.0,
+            "CC inter-stage links must pay activation crypto");
+    assert!(num(&j, "total_bubble_s") > 0.0,
+            "unequal layer shares must leave bubble time");
+    assert!(num(&j, "ttft_mean_s") > 0.0
+            && num(&j, "ttft_mean_s") < num(&j, "latency_mean_s"),
+            "TTFT must land strictly inside the request latency");
+
+    // the coherent profile moves activations in the clear: same
+    // payload pricing, no sealing tax on the wire
+    let mut gh = golden_cfg("cc", "select-batch+timer");
+    gh.devices = 4;
+    gh.set("placement", "pipeline-parallel").unwrap();
+    gh.set("pp-stages", "2").unwrap();
+    gh.set("device-profiles", "gh200-coherent").unwrap();
+    gh.label = gh.cell_label();
+    let j = Json::parse(&golden_cell(&gh)).unwrap();
+    assert!(num(&j, "activation_bytes") > 0.0,
+            "coherent run priced no activations");
+    assert_eq!(num(&j, "activation_wire_bytes"),
+               num(&j, "activation_bytes"),
+               "coherent links must move activations unframed");
+    assert_eq!(num(&j, "total_activation_crypto_s"), 0.0,
+               "coherent links must price no activation crypto");
 }
 
 /// Byte-identity contract of the tenancy flags (ISSUE 6 acceptance):

@@ -3,7 +3,9 @@
 #
 # The golden-summary test self-seeds missing files and CI fails until
 # they are committed; this script is the one-command way to pin them
-# on a machine with a Rust toolchain:
+# on a machine with a Rust toolchain.  The matrix includes the
+# pipeline-parallel cells (4-device fleet, --pp-stages 2, sealed and
+# coherent inter-stage links) — new cells are staged automatically:
 #
 #   tools/seed_goldens.sh           # seed missing goldens
 #   UPDATE_GOLDENS=1 tools/seed_goldens.sh   # rewrite after an
